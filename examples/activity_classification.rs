@@ -1,0 +1,75 @@
+//! Application C showcase — human activity classification (Sec. VI-C).
+//!
+//! The tiniest network (7-6-5): runtimes sit in the microsecond range and
+//! the paper compares against the FPGA implementation of [46]
+//! (270 ns @ 241 mW): the IBEX core is slower but 400x+ more
+//! energy-efficient.
+//!
+//! ```text
+//! cargo run --release --example activity_classification
+//! ```
+
+use anyhow::Result;
+use fann_on_mcu::apps::{self, ACTIVITY};
+use fann_on_mcu::targets::Target;
+use fann_on_mcu::util::table::{fmt_energy, fmt_time, Table};
+
+/// The FPGA baseline of Gaikwad et al. [46].
+const FPGA_TIME_S: f64 = 270e-9;
+const FPGA_POWER_MW: f64 = 241.0;
+
+fn main() -> Result<()> {
+    println!("=== {} ===", ACTIVITY.title);
+    let app = apps::train_app(&ACTIVITY, 22)?;
+    println!(
+        "trained {} epochs | test acc {:.2}% (paper 94.6%)\n",
+        app.mse_curve.len(),
+        app.test_accuracy * 100.0
+    );
+
+    let data = ACTIVITY.dataset(22);
+    let x = data.input(0);
+
+    let fpga_energy = FPGA_TIME_S * FPGA_POWER_MW * 1e3; // µJ
+    let mut table = Table::new(vec![
+        "implementation",
+        "runtime",
+        "power",
+        "energy",
+        "energy vs FPGA",
+    ]);
+    table.row(vec![
+        "FPGA (Gaikwad et al. [46])".to_string(),
+        fmt_time(FPGA_TIME_S),
+        format!("{FPGA_POWER_MW:.0} mW"),
+        fmt_energy(fpga_energy * 1e-6),
+        "1x".to_string(),
+    ]);
+    for target in Target::table2_targets() {
+        let (_, r) = apps::run_on_target(&app, target, x)?;
+        table.row(vec![
+            target.label(),
+            fmt_time(r.seconds),
+            format!("{:.2} mW", r.active_mw),
+            fmt_energy(r.energy_uj * 1e-6),
+            format!("{:.0}x better", fpga_energy / r.energy_uj),
+        ]);
+    }
+    table.print();
+
+    // Per-sample classification demo on the deployed fixed-point net.
+    println!("\nsample classifications (fixed-point deployment on IBEX):");
+    let mut correct = 0;
+    let n = 10;
+    for i in 0..n {
+        let (_, r) = apps::run_on_target(&app, Target::WolfFc, data.input(i))?;
+        let pred = fann_on_mcu::util::argmax(&r.outputs);
+        let truth = data.label(i);
+        if pred == truth {
+            correct += 1;
+        }
+        println!("  sample {i}: predicted class {pred}, true class {truth}");
+    }
+    println!("  {correct}/{n} correct");
+    Ok(())
+}

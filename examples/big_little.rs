@@ -1,0 +1,123 @@
+//! The Sec. IV-B big-little scenario end to end: a tiny always-on onset
+//! detector on the FC screens sensor windows; the 8-core cluster wakes
+//! only on onsets to run the full gesture classifier.
+//!
+//! ```text
+//! cargo run --release --example big_little
+//! ```
+
+use anyhow::Result;
+use fann_on_mcu::apps::biglittle::BigLittle;
+use fann_on_mcu::apps::energy::{autonomy, platform_sleep_mw, HARVEST_J_PER_DAY};
+use fann_on_mcu::apps::{self, GESTURE};
+use fann_on_mcu::datasets;
+use fann_on_mcu::fann::cascade::{cascade_train, CascadeConfig};
+use fann_on_mcu::fann::FixedNetwork;
+use fann_on_mcu::simulator::{self, CostOptions, Executable};
+use fann_on_mcu::targets::Target;
+use fann_on_mcu::util::rng::Rng;
+use fann_on_mcu::util::table::{fmt_energy, Table};
+
+fn main() -> Result<()> {
+    println!("=== Big-little deployment (Sec. IV-B) ===\n");
+
+    // --- little: cascade-grown onset detector -----------------------------
+    // Binary task: "is there any gesture activity in this window?"
+    // Built with cascade training (FANN's automatic topology growth) on a
+    // 2-class version of the activity data, then quantized for the FC.
+    println!("growing the little onset detector with cascade training...");
+    let mut onset_data = datasets::generate(
+        datasets::SyntheticSpec {
+            num_features: 7,
+            num_classes: 2,
+            samples_per_class: 300,
+            separation: 2.5,
+            spread: 1.0,
+            seed: 91,
+        },
+        true,
+    );
+    onset_data.normalize_inputs();
+    let mut rng = Rng::new(91);
+    let (little_float, report) = cascade_train(
+        &onset_data,
+        CascadeConfig {
+            max_neurons: 8,
+            desired_error: 0.02,
+            ..CascadeConfig::default()
+        },
+        &mut rng,
+    )?;
+    println!(
+        "  grew {} hidden neurons (MSE curve: {:.4} -> {:.4})",
+        report.neurons_installed,
+        report.mse_curve[0],
+        report.mse_curve.last().unwrap()
+    );
+    let little = FixedNetwork::from_float(&little_float, 1.0)?;
+
+    // --- big: the app-A gesture classifier --------------------------------
+    println!("\ntraining the big gesture classifier (app A)...");
+    let big_app = apps::train_app(&GESTURE, 23)?;
+    println!("  test accuracy {:.2}%", big_app.test_accuracy * 100.0);
+
+    // --- deploy the pair ---------------------------------------------------
+    let bl = BigLittle::deploy(&little, &big_app.net)?;
+    println!("\ndeployment:");
+    println!(
+        "  little: {} ({} bytes est.)",
+        bl.little_plan.region.name(),
+        bl.little_plan.est_memory_bytes
+    );
+    println!(
+        "  big:    {} via {:?} DMA",
+        bl.big_plan.region.name(),
+        bl.big_plan.dma.unwrap()
+    );
+
+    // --- duty-cycle energy analysis ---------------------------------------
+    println!("\nduty-cycle energy (10,000 windows):");
+    let probe = vec![0.1f32; 7];
+    let mut t = Table::new(vec![
+        "onset rate",
+        "big-little energy",
+        "always-big energy",
+        "saving",
+    ]);
+    for rate in [0.001, 0.01, 0.05, 0.2, 1.0] {
+        let r = bl.duty_cycle(10_000, rate, &probe)?;
+        t.row(vec![
+            format!("{:.1}%", rate * 100.0),
+            fmt_energy(r.total_energy_uj * 1e-6),
+            fmt_energy(r.always_big_energy_uj * 1e-6),
+            format!("{:.1}%", r.saving() * 100.0),
+        ]);
+    }
+    t.print();
+
+    // --- energy autonomy (Sec. III-C) --------------------------------------
+    let x = vec![0.1f32; 76];
+    let big_report = simulator::simulate(
+        &bl.big_plan,
+        &Executable::Float(&big_app.net),
+        &x,
+        CostOptions::default(),
+    )?;
+    let a = autonomy(
+        &big_report,
+        Target::WolfCluster { cores: 8 },
+        10,
+        platform_sleep_mw(Target::WolfCluster { cores: 8 }),
+        HARVEST_J_PER_DAY,
+    );
+    println!(
+        "\nenergy autonomy (InfiniWolf harvest budget {HARVEST_J_PER_DAY} J/day):"
+    );
+    println!(
+        "  sustainable big classifications: {:.0}/day ({:.2} Hz continuous)",
+        a.classifications_per_day, a.rate_hz
+    );
+    println!("  sleep budget: {:.2} J/day", a.sleep_j);
+    println!("\nbig-little OK: low power (FC screening) + low latency (cluster on demand).");
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//! 1. **L1/L2 (build time)**: `make artifacts` lowered the Pallas-kernel
+//!    MLP and its SGD training step to HLO text.
+//! 2. **L3 (this binary)**: loads the artifacts via PJRT, trains the
+//!    gesture network (76-300-200-100-10, ~104k parameters) for several
+//!    hundred steps on the synthetic EMG/IMU dataset, logging the loss
+//!    curve.
+//! 3. Exports the trained parameters into the FANN toolkit, quantizes,
+//!    deploys to all Table II targets, and reports latency/energy —
+//!    training (JAX/PJRT) and deployment (toolkit) composing end to end.
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example e2e_train
+//! ```
+
+use anyhow::Result;
+use fann_on_mcu::apps::{self, GESTURE};
+use fann_on_mcu::fann::train::accuracy;
+use fann_on_mcu::fann::FixedNetwork;
+use fann_on_mcu::runtime::{ArtifactDir, PjrtTrainer, Runtime};
+use fann_on_mcu::targets::Target;
+use fann_on_mcu::util::rng::Rng;
+use fann_on_mcu::util::table::{fmt_energy, fmt_time, Table};
+
+const STEPS: usize = 800;
+
+fn main() -> Result<()> {
+    // --- L3 loads the AOT artifacts -------------------------------------
+    let art = ArtifactDir::locate(None)?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut trainer = PjrtTrainer::new(&rt, &art, "gesture", 23)?;
+    println!(
+        "loaded gesture artifacts: {} params, train batch {}",
+        trainer.manifest.num_params, trainer.manifest.train_batch
+    );
+
+    // --- dataset ---------------------------------------------------------
+    let mut data = GESTURE.dataset(23);
+    data.normalize_inputs();
+    let (train, test) = data.split(0.8);
+    println!("dataset: {} train / {} test samples\n", train.len(), test.len());
+
+    // --- training loop (L3 drives the L2/L1 program) ---------------------
+    let mut rng = Rng::new(77);
+    let t0 = std::time::Instant::now();
+    println!("training {STEPS} steps of SGD (lr baked into the artifact):");
+    let curve = trainer.train(&train, STEPS, &mut rng)?;
+    let wall = t0.elapsed().as_secs_f64();
+    for (i, loss) in curve.iter().enumerate() {
+        if i % 40 == 0 || i + 1 == curve.len() {
+            println!("  step {i:>4}: loss {loss:.5}");
+        }
+    }
+    println!(
+        "\nloss {:.5} -> {:.5} in {:.1}s ({:.1} steps/s)",
+        curve[0],
+        curve.last().unwrap(),
+        wall,
+        STEPS as f64 / wall
+    );
+    let acc_train = trainer.accuracy(&train)?;
+    let acc_test = trainer.accuracy(&test)?;
+    println!("accuracy: train {:.2}% / test {:.2}% (paper: 85.58%)", acc_train * 100.0, acc_test * 100.0);
+
+    // --- export to the toolkit and deploy --------------------------------
+    let net = trainer.to_network()?;
+    let native_acc = accuracy(&net, &test);
+    println!(
+        "\nexported to FANN toolkit; native forward test accuracy {:.2}% (must match PJRT)",
+        native_acc * 100.0
+    );
+    let fixed = FixedNetwork::from_float(&net, 1.0)?;
+    println!("quantized to Q{}", fixed.decimal_point);
+
+    let trained = apps::TrainedApp {
+        spec: &GESTURE,
+        net,
+        fixed,
+        train_accuracy: acc_train,
+        test_accuracy: acc_test,
+        mse_curve: curve,
+    };
+    let x = test.input(0);
+    let mut table = Table::new(vec!["target", "placement", "runtime", "energy"]);
+    for target in Target::table2_targets() {
+        let (plan, r) = apps::run_on_target(&trained, target, x)?;
+        table.row(vec![
+            target.label(),
+            plan.region.name().to_string(),
+            fmt_time(r.seconds),
+            fmt_energy(r.energy_uj * 1e-6),
+        ]);
+    }
+    println!();
+    table.print();
+    println!("\nend-to-end OK: JAX/Pallas-trained network deployed through the toolkit.");
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Application B showcase — fall detection for elderly people (Sec. VI-B).
+//!
+//! A small 117-20-2 MLP where the paper's break-even analysis matters:
+//! the cluster's 13 µJ activation overhead only pays off after ~6
+//! classifications; for single classifications the FC (IBEX) wins.
+//!
+//! ```text
+//! cargo run --release --example fall_detection
+//! ```
+
+use anyhow::Result;
+use fann_on_mcu::apps::{self, FALL};
+use fann_on_mcu::codegen::{self, NetSource};
+use fann_on_mcu::deploy;
+use fann_on_mcu::targets::{DataType, Target};
+use fann_on_mcu::util::table::{fmt_energy, fmt_time, Table};
+
+fn main() -> Result<()> {
+    println!("=== {} ===", FALL.title);
+    let app = apps::train_app(&FALL, 21)?;
+    println!(
+        "trained {} epochs | test acc {:.2}% (paper 84%)\n",
+        app.mse_curve.len(),
+        app.test_accuracy * 100.0
+    );
+
+    let data = FALL.dataset(21);
+    let x = data.input(1);
+
+    // Table II row for app B.
+    let mut table = Table::new(vec!["target", "runtime", "power", "energy"]);
+    for target in Target::table2_targets() {
+        let (_, r) = apps::run_on_target(&app, target, x)?;
+        table.row(vec![
+            target.label(),
+            fmt_time(r.seconds),
+            format!("{:.2} mW", r.active_mw),
+            fmt_energy(r.energy_uj * 1e-6),
+        ]);
+    }
+    table.print();
+
+    // The paper's break-even: IBEX 2.86 µJ/classification vs cluster
+    // 0.67 µJ + 13 µJ one-time -> parallel pays off beyond ~6.
+    let (_, ibex) = apps::run_on_target(&app, Target::WolfFc, x)?;
+    let (plan, multi) = apps::run_on_target(&app, Target::WolfCluster { cores: 8 }, x)?;
+    println!("\nbreak-even analysis (paper: parallel pays off after ~6 classifications):");
+    let mut n = 1u64;
+    let break_even = loop {
+        let cluster_total = multi.amortized_energy_uj(plan.target, n) * n as f64;
+        let ibex_total = ibex.energy_uj * n as f64;
+        if cluster_total < ibex_total {
+            break n;
+        }
+        n += 1;
+        if n > 1000 {
+            break 0;
+        }
+    };
+    println!("  modeled break-even: {break_even} classifications");
+    println!(
+        "  continuous operation: cluster is {:.1}x more energy-efficient than IBEX",
+        ibex.energy_uj / multi.energy_uj
+    );
+
+    // Generated C for the wearable's FC deployment.
+    let plan_fc = deploy::plan(&app.spec.shape(), Target::WolfFc, DataType::Fixed)?;
+    let code = codegen::generate(&plan_fc, NetSource::Fixed(&app.fixed));
+    println!(
+        "\ngenerated C bundle for the FC deployment: {} files, {} bytes",
+        code.files.len(),
+        code.total_bytes()
+    );
+    for (name, _) in &code.files {
+        println!("  {name}");
+    }
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Application A showcase — hand-gesture recognition (Sec. VI-A).
+//!
+//! Reproduces the paper's largest showcase: a 76-300-200-100-10 MLP
+//! (103 800 MACs) trained on synthetic EMG+IMU-like features, deployed to
+//! all four Table II targets, with the amortization analysis that yields
+//! the paper's headline 22× / −73 % numbers.
+//!
+//! ```text
+//! cargo run --release --example hand_gesture
+//! ```
+
+use anyhow::Result;
+use fann_on_mcu::apps::{self, GESTURE};
+use fann_on_mcu::simulator::PowerTrace;
+use fann_on_mcu::targets::Target;
+use fann_on_mcu::util::table::{fmt_energy, fmt_time, Table};
+
+fn main() -> Result<()> {
+    println!("=== {} ===", GESTURE.title);
+    println!(
+        "topology {:?} = {} MACs (paper: 103800)\n",
+        GESTURE.sizes,
+        GESTURE.macs()
+    );
+
+    let app = apps::train_app(&GESTURE, 23)?;
+    println!(
+        "trained {} epochs | train acc {:.2}% | test acc {:.2}% (paper 85.58%)",
+        app.mse_curve.len(),
+        app.train_accuracy * 100.0,
+        app.test_accuracy * 100.0
+    );
+
+    // Table II row.
+    let data = GESTURE.dataset(23);
+    let x = data.input(0);
+    let mut table = Table::new(vec![
+        "target", "placement", "runtime", "power", "energy", "vs M4",
+    ]);
+    let mut m4_time = 0.0;
+    for target in Target::table2_targets() {
+        let (plan, r) = apps::run_on_target(&app, target, x)?;
+        if m4_time == 0.0 {
+            m4_time = r.seconds;
+        }
+        table.row(vec![
+            target.label(),
+            plan.region.name().to_string(),
+            fmt_time(r.seconds),
+            format!("{:.2} mW", r.active_mw),
+            fmt_energy(r.energy_uj * 1e-6),
+            format!("{:.1}x", m4_time / r.seconds),
+        ]);
+    }
+    println!();
+    table.print();
+
+    // Amortization: the asymptotic numbers (paper: 22x, −73%).
+    let (plan, r) = apps::run_on_target(&app, Target::WolfCluster { cores: 8 }, x)?;
+    let (_, m4) = apps::run_on_target(&app, Target::CortexM4(fann_on_mcu::targets::Chip::Nrf52832), x)?;
+    println!("\ncluster amortization (classifications per activation):");
+    let mut amort = Table::new(vec!["N", "time/classification", "energy/classification", "speedup vs M4", "energy saving"]);
+    for n in [1u64, 2, 5, 10, 100, 1000] {
+        let t = r.amortized_seconds(plan.target, n);
+        let e = r.amortized_energy_uj(plan.target, n);
+        amort.row(vec![
+            n.to_string(),
+            fmt_time(t),
+            fmt_energy(e * 1e-6),
+            format!("{:.1}x", m4.seconds / t),
+            format!("{:.0}%", (1.0 - e / m4.energy_uj) * 100.0),
+        ]);
+    }
+    amort.print();
+
+    // Continuous real-time classification: sustainable window rates and
+    // the duty-cycled vs always-on cluster policy crossover.
+    println!("\ncontinuous classification (simulator::stream):");
+    let mut st = Table::new(vec![
+        "window rate",
+        "M4 feasible",
+        "cluster policy",
+        "cluster energy/window",
+        "M4 energy/window",
+    ]);
+    use fann_on_mcu::simulator::stream;
+    let m4_sleep = 0.0057;
+    let wolf_sleep = 0.0072;
+    for rate in [1.0, 20.0, 50.0, 200.0, 1000.0] {
+        let s_m4 = stream::analyze(&m4, Target::CortexM4(fann_on_mcu::targets::Chip::Nrf52832),
+                                   m4_sleep, rate, stream::ClusterPolicy::DutyCycled);
+        let (pol, s_w) = stream::best_cluster_policy(&r, plan.target, wolf_sleep, rate);
+        st.row(vec![
+            format!("{rate} Hz"),
+            if s_m4.feasible { "yes".into() } else { format!("no (max {:.0} Hz)", s_m4.max_rate_hz) },
+            format!("{pol:?}"),
+            fmt_energy(s_w.energy_per_window_uj * 1e-6),
+            fmt_energy(s_m4.energy_per_window_uj * 1e-6),
+        ]);
+    }
+    st.print();
+
+    // Fig. 13: the power trace of one end-to-end classification.
+    println!("\npower trace of one classification (Fig. 13):");
+    let trace = PowerTrace::for_cluster_run(&r, plan.target);
+    for p in &trace.phases {
+        println!(
+            "  {:<28} {:>10}  {:>8.2} mW",
+            p.name,
+            fmt_time(p.seconds),
+            p.milliwatts
+        );
+    }
+    println!(
+        "  total: {} / {}",
+        fmt_time(trace.total_seconds()),
+        fmt_energy(trace.total_energy_uj() * 1e-6)
+    );
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: the FANN classic — train XOR, quantize it, deploy it to
+//! every supported target, and compare the simulated runtime/energy.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use fann_on_mcu::datasets;
+use fann_on_mcu::deploy::{self, NetShape};
+use fann_on_mcu::fann::train::rprop::{Rprop, RpropConfig};
+use fann_on_mcu::fann::train::mse;
+use fann_on_mcu::fann::{Activation, FixedNetwork, Network};
+use fann_on_mcu::simulator::{self, CostOptions, Executable};
+use fann_on_mcu::targets::{Chip, DataType, Target};
+use fann_on_mcu::util::rng::Rng;
+use fann_on_mcu::util::table::{fmt_energy, fmt_time, Table};
+
+fn main() -> Result<()> {
+    // 1. Train a 2-4-1 MLP on XOR with iRPROP− (FANN's default trainer).
+    let data = datasets::xor();
+    let mut rng = Rng::new(42);
+    let mut net = Network::new(&[2, 4, 1], Activation::Tanh, Activation::Sigmoid)?;
+    net.randomize(&mut rng, None);
+    let mut trainer = Rprop::new(&net, RpropConfig::default());
+    let curve = trainer.train_until(&mut net, &data, 500, 0.001);
+    println!(
+        "trained XOR in {} epochs (final MSE {:.5})",
+        curve.len(),
+        mse(&net, &data)
+    );
+    for x in [[0.0f32, 0.0], [0.0, 1.0], [1.0, 0.0], [1.0, 1.0]] {
+        println!("  {:?} -> {:.3}", x, net.run(&x)[0]);
+    }
+
+    // 2. Convert to fixed point (fann_save_to_fixed).
+    let fixed = FixedNetwork::from_float(&net, 1.0)?;
+    println!("\nfixed-point conversion: Q{} decimal point", fixed.decimal_point);
+
+    // 3. Deploy everywhere and compare (Table II, in miniature).
+    let shape = NetShape::from(&net);
+    let mut table = Table::new(vec!["target", "placement", "dtype", "time", "energy"]);
+    let targets = [
+        Target::CortexM4(Chip::Nrf52832),
+        Target::CortexM7(Chip::Stm32f769),
+        Target::CortexM0(Chip::Nrf52832),
+        Target::WolfFc,
+        Target::WolfCluster { cores: 1 },
+        Target::WolfCluster { cores: 8 },
+    ];
+    for target in targets {
+        let dtype = if target.supports_float() {
+            DataType::Float32
+        } else {
+            DataType::Fixed
+        };
+        let plan = deploy::plan(&shape, target, dtype)?;
+        let exe = match dtype {
+            DataType::Float32 => Executable::Float(&net),
+            DataType::Fixed => Executable::Fixed(&fixed),
+        };
+        let r = simulator::simulate(&plan, &exe, &[1.0, 0.0], CostOptions::default())?;
+        table.row(vec![
+            target.label(),
+            plan.region.name().to_string(),
+            format!("{dtype:?}"),
+            fmt_time(r.seconds),
+            fmt_energy(r.energy_uj * 1e-6),
+        ]);
+    }
+    println!();
+    table.print();
+    println!("\n(microsecond latencies at milliwatt power — the paper's point)");
+    Ok(())
+}

@@ -1,0 +1,174 @@
+"""AOT pipeline: lower every L2 program to HLO *text* + emit parity vectors.
+
+HLO text (not ``lowered.compile().serialize()`` / serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version the Rust
+``xla`` crate links) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Per topology in ``topologies.TOPOLOGIES`` this writes:
+
+* ``<name>_fwd_b{1,32}.hlo.txt``  — forward pass, flat arg convention
+* ``<name>_train_b32.hlo.txt``    — one SGD step (lr baked in)
+* ``<name>_manifest.txt``         — arg shapes for the Rust runtime
+
+plus parity vectors that pin the Rust-native inference paths to the Pallas
+kernels:
+
+* ``parity_float.tsv`` — per-topology random params/inputs + Pallas outputs
+* ``parity_fixed.tsv`` — Q-format params/inputs + Pallas dense_q outputs
+
+Usage: ``python -m compile.aot --out ../artifacts`` (from ``python/``).
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # i64 accumulation in dense_q
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import fixedpoint
+from .topologies import FWD_BATCHES, TOPOLOGIES, TRAIN_BATCH, Topology
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forward(topo: Topology, batch: int) -> str:
+    specs = model.arg_specs(topo, batch, with_labels=False)
+
+    def fn(*args):
+        return model.forward_flat(topo, *args)
+
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_train(topo: Topology, batch: int) -> str:
+    specs = model.arg_specs(topo, batch, with_labels=True)
+
+    def fn(*args):
+        return model.train_step_flat(topo, *args)
+
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def write_manifest(topo: Topology, out_dir: str) -> None:
+    """Plain-text arg manifest consumed by rust/src/runtime/artifacts.rs."""
+    lines = [
+        f"name {topo.name}",
+        f"inputs {topo.inputs}",
+        f"outputs {topo.outputs}",
+        f"hidden {' '.join(str(h) for h in topo.hidden)}",
+        f"hidden_activation {topo.hidden_activation}",
+        f"output_activation {topo.output_activation}",
+        f"learning_rate {topo.learning_rate}",
+        f"fwd_batches {' '.join(str(b) for b in FWD_BATCHES)}",
+        f"train_batch {TRAIN_BATCH}",
+        f"macs {topo.macs}",
+        f"num_params {topo.num_params}",
+    ]
+    with open(os.path.join(out_dir, f"{topo.name}_manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# Parity vectors (TSV: no serde on the Rust side, keep the format trivial)
+# ---------------------------------------------------------------------------
+
+def _emit_array(f, tag: str, arr: np.ndarray) -> None:
+    flat = np.asarray(arr).reshape(-1)
+    shape = "x".join(str(d) for d in arr.shape)
+    f.write(f"{tag}\t{shape}\t" + " ".join(repr(float(v)) if flat.dtype.kind == "f"
+                                           else str(int(v)) for v in flat) + "\n")
+
+
+def emit_parity_float(out_dir: str, seed: int = 1234) -> None:
+    rng = np.random.default_rng(seed)
+    path = os.path.join(out_dir, "parity_float.tsv")
+    with open(path, "w") as f:
+        for topo in TOPOLOGIES.values():
+            params = model.init_params(seed, topo.layer_sizes)
+            x = rng.standard_normal((4, topo.inputs)).astype(np.float32)
+            y = np.asarray(model.forward(params, jnp.asarray(x),
+                                         topo.hidden_activation,
+                                         topo.output_activation))
+            f.write(f"case\t{topo.name}\n")
+            f.write(f"acts\t{topo.hidden_activation}\t{topo.output_activation}\n")
+            for i, (w, b) in enumerate(params):
+                _emit_array(f, f"w{i}", np.asarray(w))
+                _emit_array(f, f"b{i}", np.asarray(b))
+            _emit_array(f, "x", x)
+            _emit_array(f, "out", y)
+
+
+def emit_parity_fixed(out_dir: str, seed: int = 4321, dec: int = 12) -> None:
+    rng = np.random.default_rng(seed)
+    path = os.path.join(out_dir, "parity_fixed.tsv")
+    one = 1 << dec
+    with open(path, "w") as f:
+        for topo in TOPOLOGIES.values():
+            sizes = topo.layer_sizes
+            params_q = []
+            for n_in, n_out in zip(sizes, sizes[1:]):
+                w = (rng.uniform(-2.0, 2.0, (n_in, n_out)) * one).astype(np.int64)
+                b = (rng.uniform(-1.0, 1.0, n_out) * one).astype(np.int64)
+                params_q.append((w.astype(np.int32), b.astype(np.int32)))
+            x = (rng.uniform(-1.0, 1.0, (4, topo.inputs)) * one).astype(np.int32)
+            h = jnp.asarray(x)
+            out = np.asarray(fixedpoint.mlp_forward_q(
+                [(jnp.asarray(w), jnp.asarray(b)) for w, b in params_q],
+                h, dec, topo.hidden_activation, topo.output_activation))
+            f.write(f"case\t{topo.name}\n")
+            f.write(f"dec\t{dec}\n")
+            f.write(f"acts\t{topo.hidden_activation}\t{topo.output_activation}\n")
+            for i, (w, b) in enumerate(params_q):
+                _emit_array(f, f"w{i}", w)
+                _emit_array(f, f"b{i}", b)
+            _emit_array(f, "x", x)
+            _emit_array(f, "out", out.astype(np.int64))
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument("--only", default=None,
+                        help="lower a single topology (debugging)")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    topos = TOPOLOGIES
+    if args.only:
+        topos = {args.only: TOPOLOGIES[args.only]}
+
+    for topo in topos.values():
+        for batch in FWD_BATCHES:
+            text = lower_forward(topo, batch)
+            path = os.path.join(args.out, f"{topo.name}_fwd_b{batch}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+        text = lower_train(topo, TRAIN_BATCH)
+        path = os.path.join(args.out, f"{topo.name}_train_b{TRAIN_BATCH}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        write_manifest(topo, args.out)
+
+    emit_parity_float(args.out)
+    emit_parity_fixed(args.out)
+    print("parity vectors written")
+
+
+if __name__ == "__main__":
+    main()

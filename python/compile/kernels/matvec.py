@@ -1,0 +1,269 @@
+"""L1 Pallas kernels: the paper's compute hot-spot (Eq. 1 dense layer).
+
+The paper's inner loop is a dot product streamed through an MCU memory
+hierarchy (L2 -> L1 via DMA double-buffering, either *layer-wise* — whole
+weight matrix resident in L1 — or *neuron-wise* — one output neuron's
+weights at a time). The TPU adaptation (DESIGN.md §Hardware-Adaptation)
+maps L1 SRAM to VMEM and the cluster DMA to the BlockSpec-scheduled
+HBM->VMEM pipeline: when the weight matrix fits the VMEM budget we run a
+single-block kernel (layer-wise); when it does not, the grid tiles the
+output dimension and Pallas double-buffers consecutive weight column-blocks
+exactly like the paper's neuron-wise DMA.
+
+Forward *and* backward are hand-written Pallas kernels wired through
+``jax.custom_vjp`` (autodiff cannot see through ``pallas_call``). The
+activation derivative is taken from the activation *output*, mirroring
+FANN's backprop.
+
+All kernels run with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls. Real-TPU efficiency is estimated analytically in
+EXPERIMENTS.md §Perf from the VMEM footprint / MXU tile occupancy of the
+chosen block shapes.
+"""
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget for a weight block, in bytes. Half of a typical 16 MiB TPU
+# VMEM, leaving room for x/out blocks and double-buffering (Pallas keeps
+# two in-flight copies of each streamed block).
+VMEM_WEIGHT_BUDGET = 4 * 1024 * 1024
+
+# MXU lane geometry used for tile-shape selection and utilization estimates.
+MXU_LANES = 128
+SUBLANES = 8
+
+ACTIVATIONS = ("linear", "sigmoid", "tanh", "relu")
+
+
+def _apply_activation(act: str, x):
+    if act == "linear":
+        return x
+    if act == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-x))
+    if act == "tanh":
+        return jnp.tanh(x)
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _grad_from_output(act: str, y):
+    if act == "linear":
+        return jnp.ones_like(y)
+    if act == "sigmoid":
+        return y * (1.0 - y)
+    if act == "tanh":
+        return 1.0 - y * y
+    if act == "relu":
+        return (y > 0.0).astype(y.dtype)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def choose_out_block(n_in: int, n_out: int,
+                     budget: int = VMEM_WEIGHT_BUDGET) -> int:
+    """Pick the output-dimension block size for streaming the weights.
+
+    Mirrors ``deploy::placement``'s L1-fit decision on the Rust side:
+    *layer-wise* (whole W resident -> block = n_out) when the matrix fits
+    the budget, else the largest MXU-lane-aligned column block that does
+    (*neuron-wise* streaming).
+    """
+    if n_in * n_out * 4 <= budget:
+        return n_out
+    blk = max(budget // (n_in * 4), 1)
+    # Align down to the MXU lane count when possible.
+    if blk >= MXU_LANES:
+        blk = (blk // MXU_LANES) * MXU_LANES
+    return max(blk, 1)
+
+
+def vmem_footprint_bytes(batch: int, n_in: int, n_out: int,
+                         out_block: int) -> int:
+    """Estimated peak VMEM use of the forward kernel: double-buffered
+    weight block + resident x block + out block (f32)."""
+    w_blk = n_in * out_block * 4 * 2       # 2x: pipeline double-buffering
+    x_blk = batch * n_in * 4
+    o_blk = batch * out_block * 4
+    b_blk = out_block * 4 * 2
+    return w_blk + x_blk + o_blk + b_blk
+
+
+def mxu_utilization_estimate(batch: int, n_in: int, n_out: int) -> float:
+    """Fraction of MXU tile slots doing useful work for this layer shape
+    (pad-to-tile model). Analytical only — interpret mode gives no HW
+    counters."""
+    eff_b = batch / _round_up(batch, SUBLANES)
+    eff_i = n_in / _round_up(n_in, MXU_LANES)
+    eff_o = n_out / _round_up(n_out, MXU_LANES)
+    return eff_b * eff_i * eff_o
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+def _dense_fwd_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    """One grid step: o[:, j*blk:(j+1)*blk] = act(x @ w_blk + b_blk)."""
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    o_ref[...] = _apply_activation(act, acc)
+
+
+def dense(x, w, b, act: str = "linear", *,
+          out_block: int | None = None,
+          interpret: bool = True):
+    """Pallas forward dense layer: ``act(x @ w + b)``.
+
+    x: (B, In) f32, w: (In, Out) f32, b: (Out,) f32 -> (B, Out) f32.
+    ``out_block`` overrides the VMEM-driven block selection (used by tests
+    to force the neuron-wise streaming path on small shapes).
+    """
+    batch, n_in = x.shape
+    n_in_w, n_out = w.shape
+    assert n_in == n_in_w, (x.shape, w.shape)
+    assert b.shape == (n_out,)
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+
+    blk = out_block or choose_out_block(n_in, n_out)
+    blk = min(blk, n_out)
+    padded = _round_up(n_out, blk)
+    if padded != n_out:
+        w = jnp.pad(w, ((0, 0), (0, padded - n_out)))
+        b = jnp.pad(b, (0, padded - n_out))
+
+    grid = (padded // blk,)
+    out = pl.pallas_call(
+        functools.partial(_dense_fwd_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, n_in), lambda j: (0, 0)),
+            pl.BlockSpec((n_in, blk), lambda j: (0, j)),
+            pl.BlockSpec((blk,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((batch, blk), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, padded), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)
+    return out[:, :n_out]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+def _dense_bwd_dx_kernel(dz_ref, w_ref, dx_ref):
+    """One grid step over input tiles: dx[:, i_blk] = dz @ w[i_blk, :].T"""
+    dz = dz_ref[...]
+    w = w_ref[...]
+    dx_ref[...] = jnp.dot(dz, w.T, preferred_element_type=jnp.float32)
+
+
+def _dense_bwd_dw_kernel(x_ref, dz_ref, dw_ref):
+    """One grid step over output tiles: dw[:, j_blk] = x.T @ dz[:, j_blk]"""
+    x = x_ref[...]
+    dz = dz_ref[...]
+    dw_ref[...] = jnp.dot(x.T, dz, preferred_element_type=jnp.float32)
+
+
+def _dense_bwd_db_kernel(dz_ref, db_ref):
+    db_ref[...] = jnp.sum(dz_ref[...], axis=0)
+
+
+def dense_bwd_dx(dz, w, *, in_block: int | None = None, interpret=True):
+    """dx = dz @ w.T as a Pallas kernel, streaming weight *row* blocks."""
+    batch, n_out = dz.shape
+    n_in, n_out_w = w.shape
+    assert n_out == n_out_w
+
+    blk = in_block or choose_out_block(n_out, n_in)
+    blk = min(blk, n_in)
+    padded = _round_up(n_in, blk)
+    if padded != n_in:
+        w = jnp.pad(w, ((0, padded - n_in), (0, 0)))
+
+    out = pl.pallas_call(
+        _dense_bwd_dx_kernel,
+        grid=(padded // blk,),
+        in_specs=[
+            pl.BlockSpec((batch, n_out), lambda i: (0, 0)),
+            pl.BlockSpec((blk, n_out), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, padded), jnp.float32),
+        interpret=interpret,
+    )(dz, w)
+    return out[:, :n_in]
+
+
+def dense_bwd_dw(x, dz, *, out_block: int | None = None, interpret=True):
+    """dw = x.T @ dz as a Pallas kernel, tiling the output dimension."""
+    batch, n_in = x.shape
+    batch_dz, n_out = dz.shape
+    assert batch == batch_dz
+
+    blk = out_block or choose_out_block(n_in, n_out)
+    blk = min(blk, n_out)
+    padded = _round_up(n_out, blk)
+    if padded != n_out:
+        dz = jnp.pad(dz, ((0, 0), (0, padded - n_out)))
+
+    out = pl.pallas_call(
+        _dense_bwd_dw_kernel,
+        grid=(padded // blk,),
+        in_specs=[
+            pl.BlockSpec((batch, n_in), lambda j: (0, 0)),
+            pl.BlockSpec((batch, blk), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n_in, blk), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n_in, padded), jnp.float32),
+        interpret=interpret,
+    )(x, dz)
+    return out[:, :n_out]
+
+
+def dense_bwd_db(dz, *, interpret=True):
+    """db = sum(dz, axis=0) as a (single-block) Pallas kernel."""
+    batch, n_out = dz.shape
+    return pl.pallas_call(
+        _dense_bwd_db_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_out,), jnp.float32),
+        interpret=interpret,
+    )(dz)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wiring: the differentiable layer primitive used by the L2 model
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense_layer(x, w, b, act: str = "linear"):
+    return dense(x, w, b, act)
+
+
+def _dense_layer_fwd(x, w, b, act):
+    y = dense(x, w, b, act)
+    return y, (x, w, y)
+
+
+def _dense_layer_bwd(act, res, dy):
+    x, w, y = res
+    dz = dy * _grad_from_output(act, y)
+    dx = dense_bwd_dx(dz, w)
+    dw = dense_bwd_dw(x, dz)
+    db = dense_bwd_db(dz)
+    return dx, dw, db
+
+
+dense_layer.defvjp(_dense_layer_fwd, _dense_layer_bwd)

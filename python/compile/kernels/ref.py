@@ -1,0 +1,166 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything in here is deliberately written with plain ``jnp`` ops and no
+Pallas so that a disagreement between ``matvec.py`` / ``fixedpoint.py`` and
+this module localizes the bug to the kernel.
+
+The fixed-point reference mirrors FANN's semantics (``fann_mult``): each
+product is computed at double width and arithmetic-shifted right by the
+network-wide decimal point before accumulation; the final sum saturates to
+i32. The identical semantics are implemented in Rust
+(``rust/src/quantize/mod.rs``) — the three implementations are pinned
+together by parity tests.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+I32_MIN = -(2**31)
+I32_MAX = 2**31 - 1
+
+
+# ---------------------------------------------------------------------------
+# Float reference
+# ---------------------------------------------------------------------------
+
+def activation(name: str, x):
+    """FANN activation functions (float reference, exact math)."""
+    if name == "linear":
+        return x
+    if name == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-x))
+    if name == "tanh":
+        # FANN_SIGMOID_SYMMETRIC.
+        return jnp.tanh(x)
+    if name == "relu":
+        return jnp.maximum(x, 0.0)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def activation_grad_from_output(name: str, y):
+    """Derivative expressed in terms of the activation *output*, as FANN
+    does during backprop (it only keeps neuron outputs, not pre-acts)."""
+    if name == "linear":
+        return jnp.ones_like(y)
+    if name == "sigmoid":
+        return y * (1.0 - y)
+    if name == "tanh":
+        return 1.0 - y * y
+    if name == "relu":
+        return (y > 0.0).astype(y.dtype)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def dense(x, w, b, act: str = "linear"):
+    """Reference for the L1 forward kernel: ``act(x @ w + b)``.
+
+    x: (B, In) f32, w: (In, Out) f32, b: (Out,) f32 -> (B, Out) f32.
+    """
+    return activation(act, jnp.dot(x, w) + b[None, :])
+
+
+def dense_bwd(x, w, y, dy, act: str = "linear"):
+    """Reference for the L1 backward kernels.
+
+    Given the forward residuals (x, w, y) and the cotangent dy, returns
+    (dx, dw, db) with the activation derivative taken from the output y.
+    """
+    dz = dy * activation_grad_from_output(act, y)
+    dx = jnp.dot(dz, w.T)
+    dw = jnp.dot(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+def mlp_forward(params, x, hidden_act="tanh", output_act="sigmoid"):
+    """Reference MLP forward over a list of (w, b) pairs."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        act = output_act if i == len(params) - 1 else hidden_act
+        h = dense(h, w, b, act)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point reference (FANN fann_mult semantics)
+# ---------------------------------------------------------------------------
+
+def sat_i32(x):
+    return np.clip(x, I32_MIN, I32_MAX).astype(np.int64)
+
+
+def _interp_table_q(x: np.ndarray, xs: np.ndarray, vs: np.ndarray,
+                    lo: np.int64, hi: np.int64) -> np.ndarray:
+    """Integer piecewise-linear interpolation over breakpoint table
+    (xs, vs), clamped to [lo, hi] outside the table. Floor division —
+    matches the Rust implementation exactly."""
+    out = np.empty_like(x)
+    out[x <= xs[0]] = lo
+    out[x >= xs[-1]] = hi
+    for i in range(len(xs) - 1):
+        m = (x > xs[i]) & (x < xs[i + 1])
+        if not m.any():
+            continue
+        dxs = xs[i + 1] - xs[i]
+        out[m] = vs[i] + (x[m] - xs[i]) * (vs[i + 1] - vs[i]) // dxs
+    for i in range(1, len(xs) - 1):
+        out[x == xs[i]] = vs[i]
+    return out
+
+
+def step_linear_sigmoid_q(x_q: np.ndarray, dec: int) -> np.ndarray:
+    """FANN's piecewise step-linear approximation of the sigmoid, in
+    Q(dec) fixed point. Mirrors ``quantize::step_linear_sigmoid_q`` in Rust
+    bit-for-bit. Input/output are int64 arrays holding Q(dec) values."""
+    one = np.int64(1) << dec
+    pts = np.array([-6, -4, -2, -1, 0, 1, 2, 4, 6], dtype=np.int64)
+    xs = pts * one
+    vs_real = 1.0 / (1.0 + np.exp(-pts.astype(np.float64)))
+    vs = np.round(vs_real * float(one)).astype(np.int64)
+    return _interp_table_q(x_q.astype(np.int64), xs, vs, np.int64(0), one)
+
+
+def step_linear_tanh_q(x_q: np.ndarray, dec: int) -> np.ndarray:
+    """Symmetric step-linear sigmoid (tanh) in Q(dec) (matches Rust)."""
+    one = np.int64(1) << dec
+    pts = np.array([-3, -2, -1, 0, 1, 2, 3], dtype=np.int64)
+    xs = pts * one
+    vs = np.round(np.tanh(pts.astype(np.float64)) * float(one)).astype(np.int64)
+    return _interp_table_q(x_q.astype(np.int64), xs, vs, -one, one)
+
+
+def activation_q(name: str, x_q: np.ndarray, dec: int) -> np.ndarray:
+    if name == "linear":
+        return x_q.astype(np.int64)
+    if name == "sigmoid":
+        return step_linear_sigmoid_q(x_q, dec)
+    if name == "tanh":
+        return step_linear_tanh_q(x_q, dec)
+    if name == "relu":
+        return np.maximum(x_q.astype(np.int64), 0)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def dense_q(x_q: np.ndarray, w_q: np.ndarray, b_q: np.ndarray, dec: int,
+            act: str = "linear") -> np.ndarray:
+    """Fixed-point dense layer reference.
+
+    x_q: (B, In) i32-valued, w_q: (In, Out), b_q: (Out,), all Q(dec).
+    Per-product shift (FANN fann_mult), i64 accumulation, i32 saturation
+    before the activation.
+    """
+    x = x_q.astype(np.int64)
+    w = w_q.astype(np.int64)
+    prods = (x[:, :, None] * w[None, :, :]) >> dec  # (B, In, Out)
+    acc = prods.sum(axis=1) + b_q.astype(np.int64)[None, :]
+    acc = sat_i32(acc)
+    return sat_i32(activation_q(act, acc, dec))
+
+
+def mlp_forward_q(params_q, x_q, dec: int, hidden_act="tanh",
+                  output_act="sigmoid") -> np.ndarray:
+    h = x_q
+    for i, (w, b) in enumerate(params_q):
+        act = output_act if i == len(params_q) - 1 else hidden_act
+        h = dense_q(h, w, b, dec, act)
+    return h

@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: int8 packed-SIMD dense layer.
+
+The Fig. 3 ladder ends at packed 8-bit SIMD (`pv.sdotsp`: four 8x8->32
+MACs per instruction, ~10x over the RV32IMC baseline). The MCU-side cycle
+model lives in ``rust/src/targets/isa.rs`` (``IsaExtensions::XPULP_SIMD4``);
+this kernel is the numeric counterpart: the int8 quantization scheme such
+a deployment would execute, expressed for the TPU the same way the
+32-bit kernel is.
+
+Scheme (symmetric, power-of-two scales — MCU-friendly):
+
+* activations ``x``: int8 holding Q(dx),
+* weights ``w``: int8 holding Q(dw),
+* accumulator: int32 holding Q(dx+dw) — 8x8 products need no per-product
+  shift (|prod| <= 2^14, and <= 2^21 after a 128-deep accumulation),
+  exactly why the MCU SIMD path is cheap;
+* bias: int32 pre-scaled to Q(dx+dw);
+* requantization: arithmetic shift by ``dw`` back to Q(dx), saturate to
+  int8 — ReLU/linear only (the saturating int8 range cannot hold the
+  step-linear sigmoid tables; MCU int8 deployments use ReLU for the same
+  reason).
+
+``dense_q8`` (Pallas) is pinned to ``dense_q8_ref`` (numpy) by
+``python/tests/test_simd8.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+I8_MIN, I8_MAX = -128, 127
+
+
+# ---------------------------------------------------------------------------
+# numpy reference
+# ---------------------------------------------------------------------------
+
+def quantize8(v: np.ndarray, dec: int) -> np.ndarray:
+    """Round-to-nearest symmetric int8 quantization to Q(dec)."""
+    q = np.round(np.asarray(v, dtype=np.float64) * (1 << dec))
+    return np.clip(q, I8_MIN, I8_MAX).astype(np.int8)
+
+
+def dense_q8_ref(x_q8: np.ndarray, w_q8: np.ndarray, b_q32: np.ndarray,
+                 dw: int, act: str = "linear") -> np.ndarray:
+    """Reference int8 dense layer.
+
+    x_q8: (B, In) i8 Q(dx); w_q8: (In, Out) i8 Q(dw);
+    b_q32: (Out,) i32 Q(dx+dw). Returns (B, Out) i8 Q(dx).
+    """
+    acc = x_q8.astype(np.int32) @ w_q8.astype(np.int32)  # Q(dx+dw)
+    acc = acc + b_q32.astype(np.int32)[None, :]
+    if act == "relu":
+        acc = np.maximum(acc, 0)
+    elif act != "linear":
+        raise ValueError(f"int8 path supports linear/relu, not {act!r}")
+    out = acc >> dw  # back to Q(dx)
+    return np.clip(out, I8_MIN, I8_MAX).astype(np.int8)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _dense_q8_kernel(x_ref, w_ref, b_ref, o_ref, *, dw: int, act: str):
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    b = b_ref[...]
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    ) + b[None, :]
+    if act == "relu":
+        acc = jnp.maximum(acc, 0)
+    out = jnp.clip(acc >> dw, I8_MIN, I8_MAX)
+    o_ref[...] = out.astype(jnp.int8)
+
+
+def dense_q8(x_q8, w_q8, b_q32, dw: int, act: str = "linear", *,
+             out_block: int | None = None, interpret: bool = True):
+    """Pallas int8 dense layer; same streaming structure as ``dense``/
+    ``dense_q`` (grid over output blocks, the neuron-wise DMA analogue).
+    """
+    if act not in ("linear", "relu"):
+        raise ValueError(f"int8 path supports linear/relu, not {act!r}")
+    batch, n_in = x_q8.shape
+    _, n_out = w_q8.shape
+    blk = min(out_block or n_out, n_out)
+    padded = ((n_out + blk - 1) // blk) * blk
+    if padded != n_out:
+        w_q8 = jnp.pad(w_q8, ((0, 0), (0, padded - n_out)))
+        b_q32 = jnp.pad(b_q32, (0, padded - n_out))
+
+    out = pl.pallas_call(
+        functools.partial(_dense_q8_kernel, dw=dw, act=act),
+        grid=(padded // blk,),
+        in_specs=[
+            pl.BlockSpec((batch, n_in), lambda j: (0, 0)),
+            pl.BlockSpec((n_in, blk), lambda j: (0, j)),
+            pl.BlockSpec((blk,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((batch, blk), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, padded), jnp.int8),
+        interpret=interpret,
+    )(x_q8, w_q8, b_q32)
+    return out[:, :n_out]
+
+
+def quantize_layer8(w: np.ndarray, b: np.ndarray, dx: int, dw: int):
+    """Quantize a float layer for the int8 path: weights to Q(dw) i8,
+    bias to Q(dx+dw) i32."""
+    w_q8 = quantize8(w, dw)
+    b_q32 = np.clip(
+        np.round(np.asarray(b, dtype=np.float64) * (1 << (dx + dw))),
+        -(2**31), 2**31 - 1,
+    ).astype(np.int32)
+    return w_q8, b_q32

@@ -1,0 +1,113 @@
+"""L2: the JAX MLP (Eq. 1 of the paper) built on the L1 Pallas kernels.
+
+This is the *training/compile-time* half of the stack. FANN's inference
+semantics (layer chain of dense + activation, MSE loss) are expressed as a
+JAX program whose per-layer primitive is ``kernels.matvec.dense_layer`` — a
+Pallas forward kernel with hand-written Pallas backward kernels under
+``jax.custom_vjp``. ``aot.py`` lowers ``forward`` and ``train_step`` per
+topology to HLO text for the Rust runtime; Python never runs at inference
+time.
+"""
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matvec
+from .topologies import Topology
+
+Params = List[Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def init_params(seed: int, layer_sizes: Sequence[int]) -> Params:
+    """FANN-style init: weights uniform in [-0.1, 0.1] by default; we use
+    Glorot-uniform scaling which FANNTool's init option also offers and
+    which trains far more reliably at these widths."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for n_in, n_out in zip(layer_sizes, layer_sizes[1:]):
+        key, kw = jax.random.split(key)
+        limit = jnp.sqrt(6.0 / (n_in + n_out))
+        w = jax.random.uniform(kw, (n_in, n_out), jnp.float32, -limit, limit)
+        b = jnp.zeros((n_out,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def forward(params: Params, x: jnp.ndarray, hidden_act: str = "tanh",
+            output_act: str = "sigmoid") -> jnp.ndarray:
+    """MLP forward pass over Pallas dense layers. x: (B, In) -> (B, Out)."""
+    h = x
+    last = len(params) - 1
+    for i, (w, b) in enumerate(params):
+        act = output_act if i == last else hidden_act
+        h = matvec.dense_layer(h, w, b, act)
+    return h
+
+
+def mse_loss(params: Params, x: jnp.ndarray, y: jnp.ndarray,
+             hidden_act: str = "tanh", output_act: str = "sigmoid"):
+    """FANN's error measure: mean squared error over outputs."""
+    out = forward(params, x, hidden_act, output_act)
+    return jnp.mean((out - y) ** 2)
+
+
+def train_step(params: Params, x: jnp.ndarray, y: jnp.ndarray,
+               lr: float, hidden_act: str = "tanh",
+               output_act: str = "sigmoid"):
+    """One full-batch gradient-descent step.
+
+    FANN's default trainer is iRPROP− (implemented natively on the Rust
+    side, `fann::train`); the AOT path uses plain SGD because it is
+    stateless and lowers to a single pure function — DESIGN.md §1 records
+    this substitution. Returns (new_params, loss).
+    """
+    loss, grads = jax.value_and_grad(mse_loss)(params, x, y,
+                                               hidden_act, output_act)
+    new_params = [
+        (w - lr * gw, b - lr * gb)
+        for (w, b), (gw, gb) in zip(params, grads)
+    ]
+    return new_params, loss
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument wrappers for AOT lowering (PJRT executables take positional
+# buffers; the Rust runtime passes [w0, b0, w1, b1, ..., x(, y)]).
+# ---------------------------------------------------------------------------
+
+def unflatten(flat: Sequence[jnp.ndarray]) -> Params:
+    assert len(flat) % 2 == 0
+    return [(flat[i], flat[i + 1]) for i in range(0, len(flat), 2)]
+
+
+def forward_flat(topo: Topology, *args):
+    *flat, x = args
+    return (forward(unflatten(flat), x, topo.hidden_activation,
+                    topo.output_activation),)
+
+
+def train_step_flat(topo: Topology, *args):
+    *flat, x, y = args
+    new_params, loss = train_step(unflatten(flat), x, y, topo.learning_rate,
+                                  topo.hidden_activation,
+                                  topo.output_activation)
+    out = []
+    for w, b in new_params:
+        out.extend((w, b))
+    out.append(loss)
+    return tuple(out)
+
+
+def arg_specs(topo: Topology, batch: int, with_labels: bool):
+    """ShapeDtypeStructs for the flat calling convention."""
+    specs = []
+    sizes = topo.layer_sizes
+    for n_in, n_out in zip(sizes, sizes[1:]):
+        specs.append(jax.ShapeDtypeStruct((n_in, n_out), jnp.float32))
+        specs.append(jax.ShapeDtypeStruct((n_out,), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((batch, topo.inputs), jnp.float32))
+    if with_labels:
+        specs.append(jax.ShapeDtypeStruct((batch, topo.outputs), jnp.float32))
+    return specs

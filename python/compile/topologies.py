@@ -1,0 +1,59 @@
+"""Network topology registry shared by the L2 model, the AOT pipeline, and
+the Rust coordinator (mirrored in ``rust/src/apps/mod.rs``).
+
+Topologies come straight from the paper:
+
+* ``example``  — the profiling network of Sec. V-A (5-100-100-3, tanh).
+* ``gesture``  — application A, hand-gesture recognition [47]:
+                 76-300-200-100-10, 103 800 MACs.
+* ``fall``     — application B, fall detection [48]: 117-20-2.
+* ``activity`` — application C, human activity classification [46]: 7-6-5.
+* ``xor``      — the canonical FANN quickstart network.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class Topology:
+    name: str
+    inputs: int
+    hidden: Tuple[int, ...]
+    outputs: int
+    hidden_activation: str = "tanh"
+    output_activation: str = "sigmoid"
+    # Learning rate baked into the AOT-lowered training step.
+    learning_rate: float = 0.7
+
+    @property
+    def layer_sizes(self) -> List[int]:
+        return [self.inputs, *self.hidden, self.outputs]
+
+    @property
+    def macs(self) -> int:
+        sizes = self.layer_sizes
+        return sum(a * b for a, b in zip(sizes, sizes[1:]))
+
+    @property
+    def num_params(self) -> int:
+        sizes = self.layer_sizes
+        return sum(a * b + b for a, b in zip(sizes, sizes[1:]))
+
+
+TOPOLOGIES = {
+    t.name: t
+    for t in [
+        Topology("xor", 2, (4,), 1, learning_rate=0.9),
+        Topology("example", 5, (100, 100), 3),
+        Topology("gesture", 76, (300, 200, 100), 10, learning_rate=0.4),
+        Topology("fall", 117, (20,), 2, learning_rate=0.1),
+        Topology("activity", 7, (6,), 5, learning_rate=0.3),
+    ]
+}
+
+# Batch sizes we AOT-lower forward passes for. Batch 1 is the wearable
+# request path (one classification per sensor window); batch 32 serves
+# dataset-level evaluation and the training step.
+FWD_BATCHES = (1, 32)
+TRAIN_BATCH = 32

@@ -1,0 +1,78 @@
+"""AOT pipeline tests: HLO text validity and manifest/parity emission."""
+
+import os
+import tempfile
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import pytest
+
+from compile import aot
+from compile.topologies import TOPOLOGIES
+
+
+def test_lower_forward_emits_hlo_text():
+    text = aot.lower_forward(TOPOLOGIES["xor"], batch=1)
+    assert text.startswith("HloModule")
+    # return_tuple=True -> root is a tuple
+    assert "ROOT" in text
+    # parameters: 2 layers * (w, b) + x = 5
+    assert text.count("parameter(") >= 5
+
+
+def test_lower_train_emits_hlo_text():
+    text = aot.lower_train(TOPOLOGIES["xor"], batch=32)
+    assert text.startswith("HloModule")
+    # The training step must not leak python callbacks into HLO.
+    assert "CustomCall" not in text or "Mosaic" not in text
+
+
+def test_manifest_roundtrip():
+    topo = TOPOLOGIES["fall"]
+    with tempfile.TemporaryDirectory() as d:
+        aot.write_manifest(topo, d)
+        path = os.path.join(d, "fall_manifest.txt")
+        fields = {}
+        with open(path) as f:
+            for line in f:
+                k, _, v = line.strip().partition(" ")
+                fields[k] = v
+    assert fields["inputs"] == "117"
+    assert fields["outputs"] == "2"
+    assert fields["hidden"] == "20"
+    assert fields["macs"] == str(topo.macs)
+
+
+def test_parity_files_parse():
+    with tempfile.TemporaryDirectory() as d:
+        aot.emit_parity_float(d)
+        aot.emit_parity_fixed(d)
+        for fname, n_cases in [("parity_float.tsv", len(TOPOLOGIES)),
+                               ("parity_fixed.tsv", len(TOPOLOGIES))]:
+            cases = 0
+            with open(os.path.join(d, fname)) as f:
+                for line in f:
+                    parts = line.rstrip("\n").split("\t")
+                    if parts[0] == "case":
+                        cases += 1
+                    elif parts[0] not in ("acts", "dec"):
+                        tag, shape, data = parts
+                        dims = [int(x) for x in shape.split("x")]
+                        vals = data.split(" ")
+                        assert len(vals) == int.__mul__(
+                            *dims) if len(dims) == 2 else len(vals) == dims[0]
+            assert cases == n_cases
+
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+def test_artifacts_exist_after_make(name):
+    """If `make artifacts` ran (CI flow), the files must all be present.
+    Skipped when artifacts/ has not been built yet."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    if not os.path.isdir(art):
+        pytest.skip("artifacts/ not built")
+    for suffix in ("_fwd_b1.hlo.txt", "_fwd_b32.hlo.txt",
+                   "_train_b32.hlo.txt", "_manifest.txt"):
+        assert os.path.exists(os.path.join(art, name + suffix))

@@ -1,0 +1,126 @@
+"""Fixed-point Pallas kernel vs the numpy oracle — bit-exact.
+
+The fixed-point path is what actually runs on FPU-less MCUs (M0, IBEX);
+FANN's fann_mult semantics (per-product shift, saturating accumulate,
+step-linear activations) must match across Pallas / numpy / Rust. Rust is
+pinned via artifacts/parity_fixed.tsv; these tests pin Pallas to numpy.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fixedpoint, ref
+
+ACTS = ["linear", "sigmoid", "tanh", "relu"]
+
+
+def randq(rng, one, lo, hi, *shape):
+    return (rng.uniform(lo, hi, shape) * one).astype(np.int32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    batch=st.integers(1, 5),
+    n_in=st.integers(1, 40),
+    n_out=st.integers(1, 40),
+    dec=st.integers(4, 20),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_q_bit_exact(batch, n_in, n_out, dec, act, seed):
+    rng = np.random.default_rng(seed)
+    one = 1 << dec
+    x = randq(rng, one, -2, 2, batch, n_in)
+    w = randq(rng, one, -2, 2, n_in, n_out)
+    b = randq(rng, one, -1, 1, n_out)
+    got = np.asarray(fixedpoint.dense_q(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), dec, act))
+    want = ref.dense_q(x, w, b, dec, act)
+    np.testing.assert_array_equal(got.astype(np.int64), want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blk=st.integers(1, 32),
+    dec=st.integers(6, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_q_streaming_block_invariant(blk, dec, seed):
+    rng = np.random.default_rng(seed)
+    one = 1 << dec
+    x = randq(rng, one, -1, 1, 2, 19)
+    w = randq(rng, one, -2, 2, 19, 27)
+    b = randq(rng, one, -1, 1, 27)
+    a = np.asarray(fixedpoint.dense_q(jnp.asarray(x), jnp.asarray(w),
+                                      jnp.asarray(b), dec, "tanh"))
+    c = np.asarray(fixedpoint.dense_q(jnp.asarray(x), jnp.asarray(w),
+                                      jnp.asarray(b), dec, "tanh",
+                                      out_block=blk))
+    np.testing.assert_array_equal(a, c)
+
+
+@pytest.mark.parametrize("dec", [6, 12, 13])
+def test_activation_tables_match_oracle_at_breakpoints(dec):
+    one = np.int64(1) << dec
+    # Exactly at / around every breakpoint, both directions.
+    pts = np.concatenate([
+        np.array([-6, -4, -3, -2, -1, 0, 1, 2, 3, 4, 6], dtype=np.int64) * one,
+        np.array([-6, -4, -3, -2, -1, 0, 1, 2, 3, 4, 6], dtype=np.int64) * one + 1,
+        np.array([-6, -4, -3, -2, -1, 0, 1, 2, 3, 4, 6], dtype=np.int64) * one - 1,
+        np.array([-100 * one, 100 * one], dtype=np.int64),
+    ])
+    pts = np.clip(pts, ref.I32_MIN, ref.I32_MAX).astype(np.int32)
+    x = pts.reshape(1, -1)
+    eye_w = np.zeros((x.shape[1], x.shape[1]), dtype=np.int32)
+    np.fill_diagonal(eye_w, int(one))  # identity in Q(dec): w=1.0
+    zero_b = np.zeros(x.shape[1], dtype=np.int32)
+    for act in ("sigmoid", "tanh"):
+        got = np.asarray(fixedpoint.dense_q(
+            jnp.asarray(x), jnp.asarray(eye_w), jnp.asarray(zero_b), dec, act))
+        want = ref.dense_q(x, eye_w, zero_b, dec, act)
+        np.testing.assert_array_equal(got.astype(np.int64), want)
+
+
+def test_sigmoid_q_range_and_monotonicity():
+    dec = 12
+    one = 1 << dec
+    xs = np.arange(-8 * one, 8 * one, 97, dtype=np.int64)
+    ys = ref.step_linear_sigmoid_q(xs, dec)
+    assert ys.min() >= 0 and ys.max() <= one
+    assert (np.diff(ys) >= 0).all()
+    # Odd symmetry around the midpoint: sigmoid(x) + sigmoid(-x) ~= one.
+    s = ref.step_linear_sigmoid_q(xs, dec) + ref.step_linear_sigmoid_q(-xs, dec)
+    assert np.abs(s - one).max() <= 2
+
+
+def test_tanh_q_range_and_symmetry():
+    dec = 12
+    one = 1 << dec
+    xs = np.arange(-5 * one, 5 * one, 113, dtype=np.int64)
+    ys = ref.step_linear_tanh_q(xs, dec)
+    assert ys.min() >= -one and ys.max() <= one
+    assert (np.diff(ys) >= 0).all()
+    # anti-symmetry within one LSB (integer floor-div asymmetry)
+    s = ref.step_linear_tanh_q(xs, dec) + ref.step_linear_tanh_q(-xs, dec)
+    assert np.abs(s).max() <= 1
+
+
+def test_accumulator_saturation():
+    """Large products must saturate to i32, not wrap."""
+    dec = 4
+    one = 1 << dec
+    n = 64
+    x = np.full((1, n), 100_000 * one, dtype=np.int32)
+    w = np.full((n, 1), 100_000 * one, dtype=np.int32)
+    b = np.zeros(1, dtype=np.int32)
+    got = np.asarray(fixedpoint.dense_q(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), dec, "linear"))
+    want = ref.dense_q(x, w, b, dec, "linear")
+    np.testing.assert_array_equal(got.astype(np.int64), want)
+    assert want[0, 0] == ref.I32_MAX  # saturated, not wrapped

@@ -1,0 +1,86 @@
+"""L2 model tests: shapes, loss descent, flat-arg calling convention."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.topologies import TOPOLOGIES
+
+
+@pytest.mark.parametrize("name", sorted(TOPOLOGIES))
+def test_forward_shapes(name):
+    topo = TOPOLOGIES[name]
+    params = model.init_params(0, topo.layer_sizes)
+    x = jnp.zeros((3, topo.inputs))
+    out = model.forward(params, x, topo.hidden_activation,
+                        topo.output_activation)
+    assert out.shape == (3, topo.outputs)
+
+
+def test_forward_matches_ref_oracle():
+    topo = TOPOLOGIES["example"]
+    params = model.init_params(3, topo.layer_sizes)
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((8, topo.inputs)).astype(np.float32)
+    got = model.forward(params, jnp.asarray(x))
+    want = ref.mlp_forward(params, jnp.asarray(x))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_train_step_descends_on_xor():
+    topo = TOPOLOGIES["xor"]
+    params = model.init_params(42, topo.layer_sizes)
+    x = jnp.array([[0., 0.], [0., 1.], [1., 0.], [1., 1.]])
+    y = jnp.array([[0.], [1.], [1.], [0.]])
+    losses = []
+    for _ in range(300):
+        params, loss = model.train_step(params, x, y, topo.learning_rate)
+        losses.append(float(loss))
+    assert losses[-1] < 0.05, losses[-1]
+    assert losses[-1] < losses[0]
+
+
+def test_train_step_flat_roundtrip():
+    """The flat calling convention used by the AOT artifacts must agree
+    with the pytree API."""
+    topo = TOPOLOGIES["activity"]
+    params = model.init_params(1, topo.layer_sizes)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((32, topo.inputs)).astype(np.float32))
+    y = jnp.asarray(rng.uniform(0, 1, (32, topo.outputs)).astype(np.float32))
+
+    flat = []
+    for w, b in params:
+        flat.extend((w, b))
+    out = model.train_step_flat(topo, *flat, x, y)
+    new_params, loss = model.train_step(params, x, y, topo.learning_rate)
+
+    assert len(out) == 2 * len(params) + 1
+    for i, (w, b) in enumerate(new_params):
+        np.testing.assert_allclose(out[2 * i], w, rtol=1e-6)
+        np.testing.assert_allclose(out[2 * i + 1], b, rtol=1e-6)
+    np.testing.assert_allclose(out[-1], loss, rtol=1e-6)
+
+
+def test_arg_specs_counts():
+    topo = TOPOLOGIES["gesture"]
+    fwd = model.arg_specs(topo, 1, with_labels=False)
+    tr = model.arg_specs(topo, 32, with_labels=True)
+    n_layers = len(topo.layer_sizes) - 1
+    assert len(fwd) == 2 * n_layers + 1
+    assert len(tr) == 2 * n_layers + 2
+    assert fwd[-1].shape == (1, topo.inputs)
+    assert tr[-1].shape == (32, topo.outputs)
+
+
+def test_macs_and_params_registry():
+    # Paper: application A (gesture) = 103800 MACs.
+    assert TOPOLOGIES["gesture"].macs == 103800
+    assert TOPOLOGIES["fall"].macs == 117 * 20 + 20 * 2
+    assert TOPOLOGIES["activity"].macs == 7 * 6 + 6 * 5

@@ -1,0 +1,84 @@
+"""int8 packed-SIMD kernel vs its numpy reference — bit-exact."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import simd8
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    batch=st.integers(1, 5),
+    n_in=st.integers(1, 48),
+    n_out=st.integers(1, 48),
+    dw=st.integers(2, 6),
+    act=st.sampled_from(["linear", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_q8_bit_exact(batch, n_in, n_out, dw, act, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (batch, n_in), dtype=np.int8)
+    w = rng.integers(-128, 128, (n_in, n_out), dtype=np.int8)
+    b = rng.integers(-(1 << 12), 1 << 12, n_out, dtype=np.int32)
+    got = np.asarray(simd8.dense_q8(jnp.asarray(x), jnp.asarray(w),
+                                    jnp.asarray(b), dw, act))
+    want = simd8.dense_q8_ref(x, w, b, dw, act)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=12, deadline=None)
+@given(blk=st.integers(1, 24), seed=st.integers(0, 2**31 - 1))
+def test_dense_q8_streaming_block_invariant(blk, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (2, 19), dtype=np.int8)
+    w = rng.integers(-128, 128, (19, 23), dtype=np.int8)
+    b = rng.integers(-1000, 1000, 23, dtype=np.int32)
+    a = np.asarray(simd8.dense_q8(jnp.asarray(x), jnp.asarray(w),
+                                  jnp.asarray(b), 4, "relu"))
+    c = np.asarray(simd8.dense_q8(jnp.asarray(x), jnp.asarray(w),
+                                  jnp.asarray(b), 4, "relu", out_block=blk))
+    np.testing.assert_array_equal(a, c)
+
+
+def test_int8_tracks_float_within_quantization_noise():
+    rng = np.random.default_rng(3)
+    dx, dw = 4, 5
+    x = rng.uniform(-1, 1, (4, 32)).astype(np.float32)
+    w = rng.uniform(-1, 1, (32, 8)).astype(np.float32)
+    b = rng.uniform(-0.5, 0.5, 8).astype(np.float32)
+
+    x_q8 = simd8.quantize8(x, dx)
+    w_q8, b_q32 = simd8.quantize_layer8(w, b, dx, dw)
+    out_q = simd8.dense_q8_ref(x_q8, w_q8, b_q32, dw, "relu")
+    out_f = np.maximum(x @ w + b, 0.0)
+    # Dequantized int8 output within coarse-quantization noise of float.
+    got = out_q.astype(np.float64) / (1 << dx)
+    # int8 at Q(4) has LSB 1/16 and inputs carry Q(4) error through a
+    # 32-deep accumulation.
+    assert np.abs(got - out_f).max() < 0.35, np.abs(got - out_f).max()
+
+
+def test_output_saturates_to_int8():
+    x = np.full((1, 16), 127, dtype=np.int8)
+    w = np.full((16, 1), 127, dtype=np.int8)
+    b = np.zeros(1, dtype=np.int32)
+    out = simd8.dense_q8_ref(x, w, b, 2, "linear")
+    assert out[0, 0] == 127  # saturated, not wrapped
+    out = simd8.dense_q8_ref(-x, w, b, 2, "linear")
+    assert out[0, 0] == -128
+
+
+def test_sigmoid_rejected_on_int8_path():
+    x = np.zeros((1, 4), dtype=np.int8)
+    w = np.zeros((4, 2), dtype=np.int8)
+    b = np.zeros(2, dtype=np.int32)
+    with pytest.raises(ValueError):
+        simd8.dense_q8_ref(x, w, b, 4, "sigmoid")
+    with pytest.raises(ValueError):
+        simd8.dense_q8(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), 4, "tanh")

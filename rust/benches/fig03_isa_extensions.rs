@@ -1,0 +1,44 @@
+//! Fig. 3 — cycle reduction of the XPULP ISA extensions on the
+//! dot-product inner loop (RV32IMC baseline → hardware loop →
+//! post-increment loads → packed SIMD).
+//!
+//! Paper: hw-loop + post-increment ≈ 2×; with packed SIMD up to ≈ 10×.
+
+use fann_on_mcu::targets::IsaExtensions;
+use fann_on_mcu::util::table::Table;
+
+fn main() {
+    println!("=== Fig. 3: RISC-V ISA extension speedups (dot-product kernel) ===\n");
+    let configs: [(&str, IsaExtensions); 5] = [
+        ("RV32IMC baseline", IsaExtensions::BASELINE_RV32IMC),
+        (
+            "+ hardware loop",
+            IsaExtensions {
+                hardware_loop: true,
+                post_increment: false,
+                simd_lanes: 1,
+            },
+        ),
+        ("+ post-incr load/store (XPULP)", IsaExtensions::XPULP_NO_SIMD),
+        ("+ SIMD 2x16-bit", IsaExtensions::XPULP_SIMD2),
+        ("+ SIMD 4x8-bit", IsaExtensions::XPULP_SIMD4),
+    ];
+
+    let mut t = Table::new(vec!["configuration", "cycles/MAC", "speedup vs RV32IMC"]);
+    for (name, ext) in configs {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", ext.mac_cycles()),
+            format!("{:.1}x", ext.speedup_vs_baseline()),
+        ]);
+    }
+    t.print();
+
+    let xpulp = IsaExtensions::XPULP_NO_SIMD.speedup_vs_baseline();
+    let simd = IsaExtensions::XPULP_SIMD4.speedup_vs_baseline();
+    println!("\npaper: ~2x (hw-loop + post-incr), ~10x (packed SIMD)");
+    println!("model: {xpulp:.1}x, {simd:.1}x");
+    assert!((1.9..=2.3).contains(&xpulp));
+    assert!((8.0..=10.5).contains(&simd));
+    println!("shape check OK");
+}

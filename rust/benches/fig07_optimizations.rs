@@ -1,0 +1,102 @@
+//! Fig. 7 — runtime of the Sec. V-A example network (5-100-100-3) before
+//! and after the FANN-on-MCU optimizations, float vs fixed, plus the
+//! Mr. Wolf comparison.
+//!
+//! Paper claims reproduced here:
+//! * eliminating the redundant bias-buffer init: −3.1 % (float),
+//!   −7.7 % (fixed) on the Cortex-M4;
+//! * fixed ≈ 15 % faster than float on the M4;
+//! * weight-matrix compute ≈ 88 % of total;
+//! * single RI5CY ≈ 1.3×/1.4× faster than M4 (float/fixed);
+//! * parallelization ≈ 6× over single RI5CY.
+
+use fann_on_mcu::bench::bench_acts;
+use fann_on_mcu::deploy::{self, NetShape};
+use fann_on_mcu::simulator::cost::{network_cycles, CostOptions};
+use fann_on_mcu::targets::{Chip, DataType, Target};
+use fann_on_mcu::util::table::{fmt_cycles, Table};
+
+fn main() {
+    println!("=== Fig. 7: example network 5-100-100-3 optimization steps ===\n");
+    let shape = NetShape::new(&[5, 100, 100, 3]);
+    let acts = bench_acts(3);
+    let legacy = CostOptions { legacy_init: true };
+    let optimized = CostOptions::default();
+
+    let mut t = Table::new(vec![
+        "configuration",
+        "cycles (FANNCortexM)",
+        "cycles (FANN-on-MCU)",
+        "gain",
+    ]);
+    let mut cells = Vec::new();
+    for (label, target, dtype) in [
+        (
+            "Cortex-M4 float",
+            Target::CortexM4(Chip::Stm32l475vg),
+            DataType::Float32,
+        ),
+        (
+            "Cortex-M4 fixed",
+            Target::CortexM4(Chip::Stm32l475vg),
+            DataType::Fixed,
+        ),
+        (
+            "1x RI5CY float",
+            Target::WolfCluster { cores: 1 },
+            DataType::Float32,
+        ),
+        (
+            "1x RI5CY fixed",
+            Target::WolfCluster { cores: 1 },
+            DataType::Fixed,
+        ),
+        (
+            "8x RI5CY float",
+            Target::WolfCluster { cores: 8 },
+            DataType::Float32,
+        ),
+        (
+            "8x RI5CY fixed",
+            Target::WolfCluster { cores: 8 },
+            DataType::Fixed,
+        ),
+    ] {
+        let plan = deploy::plan(&shape, target, dtype).unwrap();
+        let before = network_cycles(&plan, &acts, legacy).total();
+        let after = network_cycles(&plan, &acts, optimized).total();
+        t.row(vec![
+            label.to_string(),
+            fmt_cycles(before as u64),
+            fmt_cycles(after as u64),
+            format!("{:.1}%", (before - after) / before * 100.0),
+        ]);
+        cells.push((label, after));
+    }
+    t.print();
+
+    // Claim checks.
+    let m4f = cells[0].1;
+    let m4q = cells[1].1;
+    let w1f = cells[2].1;
+    let w1q = cells[3].1;
+    let w8f = cells[4].1;
+    println!("\nclaim checks (paper -> model):");
+    println!(
+        "  fixed vs float on M4:  15% -> {:.1}%",
+        (m4f - m4q) / m4f * 100.0
+    );
+    println!("  1xRI5CY vs M4 float:  1.3x -> {:.2}x", m4f / w1f);
+    println!("  1xRI5CY vs M4 fixed:  1.4x -> {:.2}x", m4q / w1q);
+    println!("  8x vs 1x RI5CY float: ~6x -> {:.2}x", w1f / w8f);
+
+    // Profiling split (Fig. 7's stacked bars).
+    let plan = deploy::plan(&shape, Target::CortexM4(Chip::Stm32l475vg), DataType::Float32).unwrap();
+    let b = network_cycles(&plan, &acts, optimized);
+    println!(
+        "\nM4 float profile: weight-matrix {:.1}% | activation {:.1}% | overhead {:.1}% (paper: ~88% weight-matrix)",
+        b.compute / b.total() * 100.0,
+        b.activation / b.total() * 100.0,
+        (b.overhead + b.dma + b.barrier) / b.total() * 100.0
+    );
+}

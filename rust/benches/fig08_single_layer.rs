@@ -1,0 +1,60 @@
+//! Fig. 8 — runtime (cycles) of a single layer over the (inputs, outputs)
+//! grid, fixed-point.
+//!
+//! (a) ARM Cortex-M4 (STM32L475VG): the `*` marks cells where the layer
+//!     no longer fits RAM and runs from flash (the paper's blue grid);
+//! (b) IBEX (Mr. Wolf FC): `+` marks private-L2 → shared-L2 spill
+//!     (purple dotted grid). `0.0` = does not fit at all.
+
+use fann_on_mcu::bench::{fig8_grid, single_layer_cycles};
+use fann_on_mcu::deploy::{self, NetShape};
+use fann_on_mcu::targets::{Chip, DataType, Region, Target};
+use fann_on_mcu::util::table::Table;
+
+fn grid_for(target: Target, spill_region: Region, marker: char) {
+    let grid = fig8_grid();
+    let mut header: Vec<String> = vec!["in \\ out".to_string()];
+    header.extend(grid.iter().map(|o| o.to_string()));
+    let mut t = Table::new(header);
+    for &n_in in &grid {
+        let mut row = vec![n_in.to_string()];
+        for &n_out in &grid {
+            let cell = match single_layer_cycles(n_in, n_out, target, DataType::Fixed) {
+                None => "0.0".to_string(),
+                Some(cycles) => {
+                    let plan =
+                        deploy::plan(&NetShape::new(&[n_in, n_out]), target, DataType::Fixed)
+                            .unwrap();
+                    let mark = if plan.region == spill_region { marker } else { ' ' };
+                    format!("{:.0}{}", cycles, mark)
+                }
+            };
+            row.push(cell);
+        }
+        t.row(row);
+    }
+    t.print();
+}
+
+fn main() {
+    println!("=== Fig. 8a: single-layer cycles, Cortex-M4 (STM32L475VG), fixed ===");
+    println!("    (* = layer in flash — the paper's blue-grid region)\n");
+    grid_for(
+        Target::CortexM4(Chip::Stm32l475vg),
+        Region::Flash,
+        '*',
+    );
+
+    println!("\n=== Fig. 8b: single-layer cycles, IBEX (Mr. Wolf FC), fixed ===");
+    println!("    (+ = layer in shared L2 — the paper's purple-dotted region)\n");
+    grid_for(Target::WolfFc, Region::SharedL2, '+');
+
+    // Shape checks: cycles grow ~linearly in in*out; flash cells slower
+    // than same-size RAM cells would be.
+    let small = single_layer_cycles(64, 64, Target::CortexM4(Chip::Stm32l475vg), DataType::Fixed)
+        .unwrap();
+    let big = single_layer_cycles(128, 128, Target::CortexM4(Chip::Stm32l475vg), DataType::Fixed)
+        .unwrap();
+    assert!(big / small > 3.5 && big / small < 4.5, "{}", big / small);
+    println!("\nshape check OK (4x MACs -> ~4x cycles)");
+}

@@ -1,0 +1,78 @@
+//! Fig. 9 — single-layer speedups on PULP Mr. Wolf:
+//!
+//! (a) one RI5CY core vs the IBEX FC (XPULP extensions; ≤ 2.2×, higher
+//!     for large inputs where DMA setup amortizes);
+//! (b) 8 RI5CY cores vs 1 (parallel speedup; ≤ 7.7×, lower for small
+//!     layers where fork/barrier overhead dominates).
+//!
+//! `0.0` = does not fit; `~` marks neuron-wise-DMA cells (gray grid).
+
+use fann_on_mcu::bench::{fig8_grid, single_layer_cycles, speedup_cell};
+use fann_on_mcu::deploy::{self, DmaStrategy, NetShape};
+use fann_on_mcu::targets::{DataType, Target};
+use fann_on_mcu::util::table::Table;
+
+fn dma_marker(n_in: usize, n_out: usize, target: Target) -> char {
+    match deploy::plan(&NetShape::new(&[n_in, n_out]), target, DataType::Fixed) {
+        Ok(p) if p.dma == Some(DmaStrategy::NeuronWise) => '~',
+        Ok(p) if p.dma == Some(DmaStrategy::LayerWise) => '-',
+        _ => ' ',
+    }
+}
+
+fn main() {
+    let grid = fig8_grid();
+    let single = Target::WolfCluster { cores: 1 };
+    let multi = Target::WolfCluster { cores: 8 };
+
+    println!("=== Fig. 9a: 1x RI5CY speedup over IBEX (fixed point) ===");
+    println!("    (~ = neuron-wise DMA, - = layer-wise DMA)\n");
+    let mut header: Vec<String> = vec!["in \\ out".to_string()];
+    header.extend(grid.iter().map(|o| o.to_string()));
+    let mut t = Table::new(header.clone());
+    let mut max_a = 0.0f64;
+    for &n_in in &grid {
+        let mut row = vec![n_in.to_string()];
+        for &n_out in &grid {
+            let ibex = single_layer_cycles(n_in, n_out, Target::WolfFc, DataType::Fixed);
+            let riscy = single_layer_cycles(n_in, n_out, single, DataType::Fixed);
+            if let (Some(a), Some(b)) = (ibex, riscy) {
+                max_a = max_a.max(a / b);
+            }
+            row.push(format!(
+                "{}{}",
+                speedup_cell(ibex, riscy),
+                dma_marker(n_in, n_out, single)
+            ));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("\nmax speedup: {max_a:.2}x (paper: up to 2.2x)\n");
+
+    println!("=== Fig. 9b: 8x RI5CY parallel speedup over 1x ===\n");
+    let mut t = Table::new(header);
+    let mut max_b = 0.0f64;
+    for &n_in in &grid {
+        let mut row = vec![n_in.to_string()];
+        for &n_out in &grid {
+            let one = single_layer_cycles(n_in, n_out, single, DataType::Fixed);
+            let eight = single_layer_cycles(n_in, n_out, multi, DataType::Fixed);
+            if let (Some(a), Some(b)) = (one, eight) {
+                max_b = max_b.max(a / b);
+            }
+            row.push(format!(
+                "{}{}",
+                speedup_cell(one, eight),
+                dma_marker(n_in, n_out, multi)
+            ));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("\nmax parallel speedup: {max_b:.2}x (paper: up to 7.7x)");
+
+    assert!((1.8..=2.5).contains(&max_a), "fig9a max {max_a}");
+    assert!((6.5..=8.0).contains(&max_b), "fig9b max {max_b}");
+    println!("shape check OK");
+}

@@ -1,0 +1,71 @@
+//! Fig. 10 — single-layer speedups of Mr. Wolf over the ARM Cortex-M4
+//! (STM32L475VG), fixed point:
+//!
+//! (a) one RI5CY core vs M4 (≈ 2× thanks to XPULP; more when the M4
+//!     falls into flash);
+//! (b) 8 RI5CY cores vs M4 (≤ 13.5×).
+//!
+//! `0.0` = does not fit, `*` = M4 cell in flash, `~` = neuron-wise DMA.
+
+use fann_on_mcu::bench::{fig8_grid, single_layer_cycles, speedup_cell};
+use fann_on_mcu::deploy::{self, DmaStrategy, NetShape};
+use fann_on_mcu::targets::{Chip, DataType, Region, Target};
+use fann_on_mcu::util::table::Table;
+
+fn main() {
+    let grid = fig8_grid();
+    let m4 = Target::CortexM4(Chip::Stm32l475vg);
+    let single = Target::WolfCluster { cores: 1 };
+    let multi = Target::WolfCluster { cores: 8 };
+
+    let cell_mark = |n_in: usize, n_out: usize, wolf: Target| -> String {
+        let shape = NetShape::new(&[n_in, n_out]);
+        let mut marks = String::new();
+        if let Ok(p) = deploy::plan(&shape, m4, DataType::Fixed) {
+            if p.region == Region::Flash {
+                marks.push('*');
+            }
+        }
+        if let Ok(p) = deploy::plan(&shape, wolf, DataType::Fixed) {
+            if p.dma == Some(DmaStrategy::NeuronWise) {
+                marks.push('~');
+            }
+        }
+        marks
+    };
+
+    for (title, wolf, paper_max, band) in [
+        ("Fig. 10a: 1x RI5CY vs Cortex-M4", single, "2x", (1.2f64, 3.2f64)),
+        ("Fig. 10b: 8x RI5CY vs Cortex-M4", multi, "13.5x", (9.0, 16.0)),
+    ] {
+        println!("=== {title} (fixed point) ===");
+        println!("    (* = M4 in flash, ~ = cluster neuron-wise DMA)\n");
+        let mut header: Vec<String> = vec!["in \\ out".to_string()];
+        header.extend(grid.iter().map(|o| o.to_string()));
+        let mut t = Table::new(header);
+        let mut max_s = 0.0f64;
+        for &n_in in &grid {
+            let mut row = vec![n_in.to_string()];
+            for &n_out in &grid {
+                let base = single_layer_cycles(n_in, n_out, m4, DataType::Fixed);
+                let new = single_layer_cycles(n_in, n_out, wolf, DataType::Fixed);
+                if let (Some(a), Some(b)) = (base, new) {
+                    max_s = max_s.max(a / b);
+                }
+                row.push(format!(
+                    "{}{}",
+                    speedup_cell(base, new),
+                    cell_mark(n_in, n_out, wolf)
+                ));
+            }
+            t.row(row);
+        }
+        t.print();
+        println!("\nmax speedup: {max_s:.2}x (paper: up to {paper_max})\n");
+        assert!(
+            (band.0..=band.1).contains(&max_s),
+            "{title}: modeled {max_s:.2}"
+        );
+    }
+    println!("shape check OK");
+}

@@ -1,0 +1,64 @@
+//! Fig. 11 — whole-network runtime (cycles) while growing the number of
+//! hidden layers per Eq. (3)/(4) with d = 8: 100 inputs, 8 outputs,
+//! L = 1..24 hidden layers (8 to 1248 total hidden units).
+
+use fann_on_mcu::bench::{eq4_total_hidden, fig11_shape, whole_network_cycles};
+use fann_on_mcu::deploy::{self, DmaStrategy};
+use fann_on_mcu::targets::{Chip, DataType, Region, Target};
+use fann_on_mcu::util::table::Table;
+
+fn main() {
+    println!("=== Fig. 11: whole-network cycles vs number of hidden layers (d=8) ===\n");
+    let targets: [(&str, Target, DataType); 4] = [
+        ("M4 fixed", Target::CortexM4(Chip::Stm32l475vg), DataType::Fixed),
+        ("IBEX fixed", Target::WolfFc, DataType::Fixed),
+        ("1xRI5CY fixed", Target::WolfCluster { cores: 1 }, DataType::Fixed),
+        ("8xRI5CY fixed", Target::WolfCluster { cores: 8 }, DataType::Fixed),
+    ];
+
+    let mut header = vec!["L".to_string(), "hidden units".to_string()];
+    header.extend(targets.iter().map(|(n, _, _)| n.to_string()));
+    header.push("wolf regime".to_string());
+    let mut t = Table::new(header);
+
+    for l in 1..=24 {
+        let shape = fig11_shape(l, 8);
+        let mut row = vec![l.to_string(), eq4_total_hidden(l, 8).to_string()];
+        for (_, target, dtype) in targets {
+            row.push(match whole_network_cycles(&shape, target, dtype) {
+                Some(c) => format!("{c:.0}"),
+                None => "0.0".to_string(),
+            });
+        }
+        // Paper's annotations: L1 to 12 layers, layer-wise to 21,
+        // neuron-wise beyond.
+        let regime = match deploy::plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Fixed)
+        {
+            Ok(p) => match (p.region, p.dma) {
+                (Region::L1, _) => "L1",
+                (_, Some(DmaStrategy::LayerWise)) => "L2 layer-wise",
+                (_, Some(DmaStrategy::NeuronWise)) => "L2 neuron-wise",
+                (Region::NoFit, _) => "no fit",
+                _ => "?",
+            },
+            Err(_) => "?",
+        };
+        row.push(regime.to_string());
+        t.row(row);
+    }
+    t.print();
+
+    // Paper: the net fits L1 up to 12 hidden layers (336 units).
+    let p12 = deploy::plan(&fig11_shape(12, 8), Target::WolfCluster { cores: 8 }, DataType::Fixed)
+        .unwrap();
+    let p13 = deploy::plan(&fig11_shape(13, 8), Target::WolfCluster { cores: 8 }, DataType::Fixed)
+        .unwrap();
+    println!(
+        "\nL1 boundary: L=12 -> {}, L=13 -> {} (paper: fits L1 up to 12 hidden layers)",
+        p12.region.name(),
+        p13.region.name()
+    );
+    assert_eq!(p12.region, Region::L1);
+    assert_ne!(p13.region, Region::L1);
+    println!("shape check OK");
+}

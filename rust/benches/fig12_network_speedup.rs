@@ -1,0 +1,88 @@
+//! Fig. 12 — whole-network speedups for the Eq. (3)/(4) family (d = 8):
+//!
+//! (a) on Mr. Wolf: 1×RI5CY vs IBEX, and 8× vs 1× (parallel speedup
+//!     grows with network size, ~4.5× for the tiniest net, drop at the
+//!     L1→L2 boundary);
+//! (b) vs the Cortex-M4: IBEX ≈ M4, 1×RI5CY ≈ 2×, 8×RI5CY up to 11.1×
+//!     once the M4 falls into flash.
+
+use fann_on_mcu::bench::{eq4_total_hidden, fig11_shape, whole_network_cycles};
+use fann_on_mcu::deploy::{self, DmaStrategy};
+use fann_on_mcu::targets::{Chip, DataType, Region, Target};
+use fann_on_mcu::util::table::Table;
+
+fn ratio(a: Option<f64>, b: Option<f64>) -> Option<f64> {
+    match (a, b) {
+        (Some(x), Some(y)) if y > 0.0 => Some(x / y),
+        _ => None,
+    }
+}
+
+fn fmt(r: Option<f64>) -> String {
+    r.map(|v| format!("{v:.2}")).unwrap_or_else(|| "0.0".into())
+}
+
+fn main() {
+    let m4 = Target::CortexM4(Chip::Stm32l475vg);
+    let fc = Target::WolfFc;
+    let one = Target::WolfCluster { cores: 1 };
+    let eight = Target::WolfCluster { cores: 8 };
+    let dt = DataType::Fixed;
+
+    println!("=== Fig. 12: whole-network speedups (d=8 family) ===\n");
+    let mut t = Table::new(vec![
+        "L",
+        "hidden",
+        "1xRI5CY/IBEX",
+        "8x/1x RI5CY",
+        "IBEX/M4",
+        "1xRI5CY/M4",
+        "8xRI5CY/M4",
+        "regime",
+    ]);
+
+    let mut tiny_parallel = 0.0;
+    let mut max_vs_m4: f64 = 0.0;
+    for l in 1..=24 {
+        let shape = fig11_shape(l, 8);
+        let c_m4 = whole_network_cycles(&shape, m4, dt);
+        let c_fc = whole_network_cycles(&shape, fc, dt);
+        let c_1 = whole_network_cycles(&shape, one, dt);
+        let c_8 = whole_network_cycles(&shape, eight, dt);
+
+        let par = ratio(c_1, c_8);
+        if l == 1 {
+            tiny_parallel = par.unwrap();
+        }
+        if let Some(v) = ratio(c_m4, c_8) {
+            max_vs_m4 = max_vs_m4.max(v);
+        }
+        let regime = match deploy::plan(&shape, eight, dt) {
+            Ok(p) => match (p.region, p.dma) {
+                (Region::L1, _) => "L1",
+                (_, Some(DmaStrategy::LayerWise)) => "layer-wise",
+                (_, Some(DmaStrategy::NeuronWise)) => "neuron-wise",
+                _ => "-",
+            },
+            Err(_) => "-",
+        };
+        t.row(vec![
+            l.to_string(),
+            eq4_total_hidden(l, 8).to_string(),
+            fmt(ratio(c_fc, c_1)),
+            fmt(par),
+            fmt(ratio(c_m4, c_fc)),
+            fmt(ratio(c_m4, c_1)),
+            fmt(ratio(c_m4, c_8)),
+            regime.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\nclaim checks (paper -> model):");
+    println!("  tiny-net parallel speedup  ~4.5x -> {tiny_parallel:.2}x");
+    println!("  max 8xRI5CY vs M4          11.1x -> {max_vs_m4:.2}x");
+    assert!((3.5..=5.5).contains(&tiny_parallel), "{tiny_parallel}");
+    assert!((8.0..=14.0).contains(&max_vs_m4), "{max_vs_m4}");
+    println!("shape check OK");
+}

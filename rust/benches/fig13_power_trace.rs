@@ -1,0 +1,67 @@
+//! Fig. 13 — end-to-end power trace of one application-A classification
+//! on Mr. Wolf with 8 RI5CY cores: idle → cluster activation/init →
+//! input DMA → parallel compute plateau → deactivation → idle.
+
+use fann_on_mcu::deploy::{self, NetShape};
+use fann_on_mcu::fann::{Activation, Network};
+use fann_on_mcu::simulator::{self, CostOptions, Executable, PowerTrace};
+use fann_on_mcu::targets::{power, DataType, Target};
+use fann_on_mcu::util::rng::Rng;
+use fann_on_mcu::util::table::fmt_time;
+
+fn main() {
+    println!("=== Fig. 13: power trace, one app-A classification on 8x RI5CY ===\n");
+    // Timing/power depend only on topology — random weights suffice.
+    let mut rng = Rng::new(13);
+    let mut net = Network::new(
+        &[76, 300, 200, 100, 10],
+        Activation::Tanh,
+        Activation::Sigmoid,
+    )
+    .unwrap();
+    net.randomize(&mut rng, None);
+    let target = Target::WolfCluster { cores: 8 };
+    let plan = deploy::plan(&NetShape::from(&net), target, DataType::Float32).unwrap();
+    let x = vec![0.25f32; 76];
+    let report =
+        simulator::simulate(&plan, &Executable::Float(&net), &x, CostOptions::default()).unwrap();
+    let trace = PowerTrace::for_cluster_run(&report, target);
+
+    println!("phases:");
+    for p in &trace.phases {
+        println!(
+            "  {:<28} {:>10}   {:>7.2} mW",
+            p.name,
+            fmt_time(p.seconds),
+            p.milliwatts
+        );
+    }
+
+    println!("\nsampled trace (60 points, ASCII):");
+    let samples = trace.sample(60);
+    let peak = samples.iter().map(|s| s.1).fold(0.0, f64::max);
+    for (t, mw) in &samples {
+        let bar = "#".repeat((mw / peak * 50.0).round() as usize);
+        println!("  {:>9} | {:>6.2} mW | {}", fmt_time(*t), mw, bar);
+    }
+
+    let overhead_uj: f64 = trace
+        .phases
+        .iter()
+        .filter(|p| p.name.starts_with("cluster"))
+        .map(|p| power::energy_uj(p.seconds, p.milliwatts))
+        .sum();
+    let compute_uj: f64 = trace
+        .phases
+        .iter()
+        .filter(|p| p.name == "parallel compute")
+        .map(|p| power::energy_uj(p.seconds, p.milliwatts))
+        .sum();
+    println!("\nconstant overhead: {overhead_uj:.1} µJ (paper: ~13 µJ)");
+    println!("compute energy:    {compute_uj:.1} µJ (paper: ~54 µJ incl. input DMA)");
+    println!("total:             {:.1} µJ", trace.total_energy_uj());
+
+    assert!((11.0..=16.0).contains(&overhead_uj));
+    assert!((35.0..=60.0).contains(&compute_uj));
+    println!("shape check OK");
+}

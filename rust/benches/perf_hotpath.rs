@@ -1,0 +1,115 @@
+//! §Perf — wall-clock benchmarks of this library's own hot paths (the
+//! things that must be fast on the *host*, as opposed to the modeled MCU
+//! cycles): native float/fixed inference, the analytical sweep used by
+//! the figure benches, and the PJRT forward/training step.
+//!
+//! Used by the EXPERIMENTS.md §Perf iteration log (before/after numbers).
+
+use fann_on_mcu::bench::{fig11_shape, time_median, whole_network_cycles};
+use fann_on_mcu::fann::{Activation, FixedNetwork, Network, Scratch};
+use fann_on_mcu::runtime::{ArtifactDir, PjrtTrainer, Runtime};
+use fann_on_mcu::targets::{DataType, Target};
+use fann_on_mcu::util::rng::Rng;
+use fann_on_mcu::util::table::Table;
+
+fn main() {
+    let mut rng = Rng::new(99);
+    let mut net = Network::new(
+        &[76, 300, 200, 100, 10],
+        Activation::Tanh,
+        Activation::Sigmoid,
+    )
+    .unwrap();
+    net.randomize(&mut rng, None);
+    let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+    let x: Vec<f32> = (0..76).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let xq = fixed.quantize_input(&x);
+
+    let mut t = Table::new(vec!["hot path", "median", "throughput"]);
+
+    // Native float inference (app-A topology, 103 800 MACs).
+    let mut scratch = Scratch::for_network(&net);
+    let tf = time_median(20, 200, || {
+        std::hint::black_box(net.run_with(&mut scratch, &x));
+    });
+    t.row(vec![
+        "native float forward (app A)".to_string(),
+        format!("{:.1} µs", tf * 1e6),
+        format!("{:.0} inf/s", 1.0 / tf),
+    ]);
+
+    // Native fixed inference.
+    let tq = time_median(20, 200, || {
+        std::hint::black_box(fixed.run_q(&xq));
+    });
+    t.row(vec![
+        "native fixed forward (app A)".to_string(),
+        format!("{:.1} µs", tq * 1e6),
+        format!("{:.0} inf/s", 1.0 / tq),
+    ]);
+
+    // Analytical model sweep (the figure benches' workload):
+    // 24 networks x 4 targets.
+    let ts = time_median(3, 20, || {
+        for l in 1..=24 {
+            let shape = fig11_shape(l, 8);
+            for target in [
+                Target::CortexM4(fann_on_mcu::targets::Chip::Stm32l475vg),
+                Target::WolfFc,
+                Target::WolfCluster { cores: 1 },
+                Target::WolfCluster { cores: 8 },
+            ] {
+                std::hint::black_box(whole_network_cycles(&shape, target, DataType::Fixed));
+            }
+        }
+    });
+    t.row(vec![
+        "fig11/12 sweep (96 plans)".to_string(),
+        format!("{:.1} µs", ts * 1e6),
+        format!("{:.0} plans/s", 96.0 / ts),
+    ]);
+
+    // PJRT paths (need artifacts).
+    if let Ok(art) = ArtifactDir::locate(None) {
+        let rt = Runtime::cpu().unwrap();
+        let mut trainer = PjrtTrainer::new(&rt, &art, "gesture", 7).unwrap();
+        let tp = time_median(5, 50, || {
+            std::hint::black_box(trainer.forward1(&x).unwrap());
+        });
+        t.row(vec![
+            "PJRT forward b=1 (app A)".to_string(),
+            format!("{:.1} µs", tp * 1e6),
+            format!("{:.0} inf/s", 1.0 / tp),
+        ]);
+
+        let data = fann_on_mcu::datasets::gesture(7);
+        let b = trainer.manifest.train_batch;
+        let mut xb = vec![0.0f32; b * 76];
+        let mut yb = vec![0.0f32; b * 10];
+        for j in 0..b {
+            xb[j * 76..(j + 1) * 76].copy_from_slice(data.input(j));
+            yb[j * 10..(j + 1) * 10].copy_from_slice(data.target(j));
+        }
+        let tt = time_median(3, 30, || {
+            std::hint::black_box(trainer.step(&xb, &yb).unwrap());
+        });
+        t.row(vec![
+            "PJRT train step b=32 (app A)".to_string(),
+            format!("{:.1} µs", tt * 1e6),
+            format!("{:.0} steps/s", 1.0 / tt),
+        ]);
+    } else {
+        eprintln!("(artifacts not built: skipping PJRT rows)");
+    }
+
+    println!("=== §Perf: host hot-path benchmarks ===\n");
+    t.print();
+
+    // Roofline context for the native paths.
+    let macs = 103_800.0;
+    println!(
+        "\nnative float: {:.2} GMAC/s | native fixed: {:.2} GMAC/s",
+        macs / tf / 1e9,
+        macs / tq / 1e9
+    );
+}

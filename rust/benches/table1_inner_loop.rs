@@ -1,0 +1,64 @@
+//! Table I — the inner-loop dot-product assembly and its cycle cost per
+//! MAC on each core, plus the generated-C inner loops that encode them.
+
+use fann_on_mcu::codegen::{self, NetSource};
+use fann_on_mcu::deploy::{self, NetShape};
+use fann_on_mcu::fann::{Activation, FixedNetwork, Network};
+use fann_on_mcu::targets::{Chip, Core, DataType, Target};
+use fann_on_mcu::util::rng::Rng;
+use fann_on_mcu::util::table::Table;
+
+fn main() {
+    println!("=== Table I: inner-loop cycles per MAC ===\n");
+    let mut t = Table::new(vec!["core", "float", "fixed", "notes"]);
+    for (core, notes) in [
+        (Core::CortexM4, "vldmia/vfma (float), 4x-unrolled ldr/mul/add (fixed)"),
+        (Core::CortexM0, "no DSP/FPU; soft-float"),
+        (Core::Ibex, "RV32IMC, 2-cycle loads, no FPU (soft-float)"),
+        (Core::Riscy, "XPULP: p.lw post-incr + hw loop + fmadd.s"),
+    ] {
+        t.row(vec![
+            core.name().to_string(),
+            format!("{:.1}", core.mac_cycles(DataType::Float32)),
+            format!("{:.1}", core.mac_cycles(DataType::Fixed)),
+            notes.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\npaper ratios: M4/RI5CY = 8/5 (float), 7/5 (fixed)");
+    println!(
+        "model ratios: {:.2}, {:.2}",
+        Core::CortexM4.mac_cycles(DataType::Float32) / Core::Riscy.mac_cycles(DataType::Float32),
+        Core::CortexM4.mac_cycles(DataType::Fixed) / Core::Riscy.mac_cycles(DataType::Fixed)
+    );
+
+    // Show the generated inner loops Table I describes.
+    let mut rng = Rng::new(1);
+    let mut net = Network::new(&[8, 4, 2], Activation::Tanh, Activation::Sigmoid).unwrap();
+    net.randomize(&mut rng, None);
+    let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+    let shape = NetShape::from(&net);
+
+    for (title, target, float) in [
+        ("ARM Cortex-M4 float", Target::CortexM4(Chip::Stm32l475vg), true),
+        ("ARM Cortex-M4 fixed", Target::CortexM4(Chip::Stm32l475vg), false),
+        ("RI5CY float", Target::WolfCluster { cores: 1 }, true),
+        ("RI5CY fixed", Target::WolfCluster { cores: 1 }, false),
+    ] {
+        println!("\n--- generated inner loop: {title} ---");
+        let (plan, src) = if float {
+            (
+                deploy::plan(&shape, target, DataType::Float32).unwrap(),
+                NetSource::Float(&net),
+            )
+        } else {
+            (
+                deploy::plan(&shape, target, DataType::Fixed).unwrap(),
+                NetSource::Fixed(&fixed),
+            )
+        };
+        let code = codegen::generate(&plan, src);
+        print!("{}", code.file("fann_inner_loop.c").unwrap());
+    }
+}

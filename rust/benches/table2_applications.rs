@@ -1,0 +1,75 @@
+//! Table II — the three application showcases on the four InfiniWolf
+//! targets: runtime, average power, energy per classification, with the
+//! relative improvements vs the Cortex-M4 in parentheses (the paper's
+//! format), plus the amortized asymptotics (22×, −73 % etc.).
+
+use fann_on_mcu::apps::{self, ACTIVITY, FALL, GESTURE};
+use fann_on_mcu::targets::Target;
+use fann_on_mcu::util::table::{fmt_energy, fmt_time, Table};
+
+fn main() {
+    println!("=== Table II: application showcases (runtime / power / energy) ===");
+    println!("    (relative improvements vs Cortex-M4 in parentheses)\n");
+
+    let paper: [(&str, [f64; 4]); 3] = [
+        // paper runtimes in ms per target for reference rows
+        ("A", [17.6, 11.4, 5.7, 0.8]),
+        ("B", [0.4, 0.3, 0.14, 0.03]),
+        ("C", [0.03, 0.02, 0.01, 0.004]),
+    ];
+
+    let mut headline_speedup = 0.0;
+    let mut headline_energy = 0.0;
+
+    for (spec, seed, tag) in [(&GESTURE, 23u64, "A"), (&FALL, 21, "B"), (&ACTIVITY, 22, "C")] {
+        let app = apps::train_app(spec, seed).unwrap();
+        let data = spec.dataset(seed);
+        let x = data.input(0);
+        println!(
+            "--- App {tag}: {} | topology {:?} | {} MACs | test acc {:.2}% (paper {:.2}%) ---",
+            spec.title,
+            spec.sizes,
+            spec.macs(),
+            app.test_accuracy * 100.0,
+            spec.paper_accuracy * 100.0
+        );
+
+        let mut t = Table::new(vec!["target", "runtime", "power", "energy", "paper runtime"]);
+        let mut m4: Option<(f64, f64)> = None;
+        let paper_row = paper.iter().find(|(p, _)| *p == tag).unwrap().1;
+        for (i, target) in Target::table2_targets().into_iter().enumerate() {
+            let (_, r) = apps::run_on_target(&app, target, x).unwrap();
+            let (speed_note, energy_note) = match m4 {
+                None => {
+                    m4 = Some((r.seconds, r.energy_uj));
+                    ("".to_string(), "".to_string())
+                }
+                Some((t0, e0)) => (
+                    format!(" ({:.2}x)", t0 / r.seconds),
+                    format!(" ({:+.2}%)", (r.energy_uj - e0) / e0 * 100.0),
+                ),
+            };
+            t.row(vec![
+                target.label(),
+                format!("{}{}", fmt_time(r.seconds), speed_note),
+                format!("{:.2} mW", r.active_mw),
+                format!("{}{}", fmt_energy(r.energy_uj * 1e-6), energy_note),
+                format!("{} ms", paper_row[i]),
+            ]);
+            if tag == "A" && target == (Target::WolfCluster { cores: 8 }) {
+                let (t0, e0) = m4.unwrap();
+                headline_speedup = t0 / r.seconds;
+                headline_energy = (1.0 - r.energy_uj / e0) * 100.0;
+            }
+        }
+        t.print();
+        println!();
+    }
+
+    println!("headline (app A, continuous classification):");
+    println!("  speedup 8xRI5CY vs Cortex-M4: {headline_speedup:.1}x (paper: 22x)");
+    println!("  energy reduction:             {headline_energy:.1}% (paper: 73.1%)");
+    assert!((17.0..=27.0).contains(&headline_speedup));
+    assert!((60.0..=85.0).contains(&headline_energy));
+    println!("shape check OK");
+}

@@ -1,0 +1,222 @@
+//! The big-little deployment scenario of Sec. IV-B: "a small network is
+//! used to detect the onset and, once the onset is detected, a deeper
+//! network is used for classification [44]. The FC continuously reads
+//! the sensory data and executes the onset detection algorithm, while
+//! the cluster domain is activated once the onset is detected."
+//!
+//! The framework stores the little network in the FC's private L2 and
+//! streams the big network into cluster L1 on demand — this module
+//! models the full duty cycle and its energy, the configuration the
+//! paper argues meets "the two main requirements in the IoT domain:
+//! low power and low latency".
+
+use anyhow::{ensure, Result};
+
+use crate::deploy::{self, NetShape};
+use crate::fann::{FixedNetwork, Network};
+use crate::simulator::{self, CostOptions, Executable};
+use crate::targets::{power, DataType, Region, Target};
+
+/// A deployed big-little pair.
+pub struct BigLittle<'a> {
+    /// Little onset detector (fixed point, runs on the FC).
+    pub little: &'a FixedNetwork,
+    /// Big classifier (float, runs on the cluster).
+    pub big: &'a Network,
+    pub little_plan: deploy::DeploymentPlan,
+    pub big_plan: deploy::DeploymentPlan,
+}
+
+/// Energy/latency report of one duty cycle window.
+#[derive(Debug, Clone)]
+pub struct DutyCycleReport {
+    /// Windows screened by the little network.
+    pub windows: u64,
+    /// Windows that triggered the big classifier.
+    pub onsets: u64,
+    pub little_energy_uj: f64,
+    pub big_energy_uj: f64,
+    /// Cluster activation overhead energy (paid once per onset burst).
+    pub overhead_energy_uj: f64,
+    pub total_energy_uj: f64,
+    /// Energy had every window gone straight to the big classifier.
+    pub always_big_energy_uj: f64,
+}
+
+impl DutyCycleReport {
+    /// Energy saving of the big-little split vs always-on classification.
+    pub fn saving(&self) -> f64 {
+        1.0 - self.total_energy_uj / self.always_big_energy_uj
+    }
+}
+
+impl<'a> BigLittle<'a> {
+    /// Plan both deployments: little on the FC (must fit private L2 for
+    /// the always-on path), big on the 8-core cluster.
+    pub fn deploy(little: &'a FixedNetwork, big: &'a Network) -> Result<Self> {
+        let little_plan = deploy::plan(&NetShape::from(little), Target::WolfFc, DataType::Fixed)?;
+        ensure!(
+            little_plan.region == Region::PrivateL2,
+            "little network must fit the FC private L2 for always-on screening \
+             (got {})",
+            little_plan.region.name()
+        );
+        let big_plan = deploy::plan(
+            &NetShape::from(big),
+            Target::WolfCluster { cores: 8 },
+            DataType::Float32,
+        )?;
+        ensure!(big_plan.fits(), "big network does not fit the cluster path");
+        Ok(Self {
+            little,
+            big,
+            little_plan,
+            big_plan,
+        })
+    }
+
+    /// Screen one window on the little network; returns (onset?, outputs).
+    /// Onset = output 0 above `threshold`.
+    pub fn screen(&self, window: &[f32], threshold: f32) -> Result<(bool, Vec<f32>)> {
+        let r = simulator::simulate(
+            &self.little_plan,
+            &Executable::Fixed(self.little),
+            window,
+            CostOptions::default(),
+        )?;
+        Ok((r.outputs[0] >= threshold, r.outputs))
+    }
+
+    /// Classify one window on the big network (cluster).
+    pub fn classify(&self, window: &[f32]) -> Result<Vec<f32>> {
+        let r = simulator::simulate(
+            &self.big_plan,
+            &Executable::Float(self.big),
+            window,
+            CostOptions::default(),
+        )?;
+        Ok(r.outputs)
+    }
+
+    /// Model a monitoring period of `windows` sensor windows with an
+    /// onset rate of `onset_rate` (fraction of windows that trigger the
+    /// big classifier). Onsets are assumed isolated (one cluster
+    /// activation each — worst case for the split).
+    pub fn duty_cycle(&self, windows: u64, onset_rate: f64, probe: &[f32]) -> Result<DutyCycleReport> {
+        let little = simulator::simulate(
+            &self.little_plan,
+            &Executable::Fixed(self.little),
+            probe,
+            CostOptions::default(),
+        )?;
+        // Any valid big-network input works for timing (numerics are
+        // input-independent); reuse or pad the probe.
+        let big_input = vec![0.1f32; self.big.num_inputs()];
+        let big = simulator::simulate(
+            &self.big_plan,
+            &Executable::Float(self.big),
+            &big_input,
+            CostOptions::default(),
+        )?;
+
+        let onsets = (windows as f64 * onset_rate).round() as u64;
+        let little_energy = little.energy_uj * windows as f64;
+        let big_energy = big.energy_uj * onsets as f64;
+        let overhead = power::energy_uj(
+            self.big_plan.target.fixed_overhead_seconds(),
+            self.big_plan.target.fixed_overhead_mw(),
+        ) * onsets as f64;
+        let always_big = (big.energy_uj + power::energy_uj(
+            self.big_plan.target.fixed_overhead_seconds(),
+            self.big_plan.target.fixed_overhead_mw(),
+        )) * windows as f64;
+
+        Ok(DutyCycleReport {
+            windows,
+            onsets,
+            little_energy_uj: little_energy,
+            big_energy_uj: big_energy,
+            overhead_energy_uj: overhead,
+            total_energy_uj: little_energy + big_energy + overhead,
+            always_big_energy_uj: always_big,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fann::Activation;
+    use crate::util::rng::Rng;
+
+    fn nets() -> (FixedNetwork, Network) {
+        let mut rng = Rng::new(31);
+        // Little: 7-6-1 onset detector.
+        let mut little_f =
+            Network::new(&[7, 6, 1], Activation::Tanh, Activation::Sigmoid).unwrap();
+        little_f.randomize(&mut rng, None);
+        let little = FixedNetwork::from_float(&little_f, 1.0).unwrap();
+        // Big: application-A-sized classifier.
+        let mut big = Network::new(
+            &[76, 300, 200, 100, 10],
+            Activation::Tanh,
+            Activation::Sigmoid,
+        )
+        .unwrap();
+        big.randomize(&mut rng, None);
+        (little, big)
+    }
+
+    #[test]
+    fn deploys_little_on_fc_big_on_cluster() {
+        let (little, big) = nets();
+        let bl = BigLittle::deploy(&little, &big).unwrap();
+        assert_eq!(bl.little_plan.region, Region::PrivateL2);
+        assert_eq!(bl.big_plan.target, Target::WolfCluster { cores: 8 });
+    }
+
+    #[test]
+    fn rare_onsets_save_energy() {
+        let (little, big) = nets();
+        let bl = BigLittle::deploy(&little, &big).unwrap();
+        let probe = vec![0.1f32; 7];
+        // 1% onset rate over 10k windows: big-little must win big.
+        let r = bl.duty_cycle(10_000, 0.01, &probe).unwrap();
+        assert!(r.saving() > 0.8, "saving {}", r.saving());
+        assert_eq!(r.onsets, 100);
+    }
+
+    #[test]
+    fn onset_rate_one_is_worse_than_always_big() {
+        // At 100% onset rate the split pays the little net on top of
+        // every big classification: no saving (slightly negative).
+        let (little, big) = nets();
+        let bl = BigLittle::deploy(&little, &big).unwrap();
+        let probe = vec![0.1f32; 7];
+        let r = bl.duty_cycle(100, 1.0, &probe).unwrap();
+        assert!(r.saving() <= 0.0);
+    }
+
+    #[test]
+    fn screening_and_classification_run() {
+        let (little, big) = nets();
+        let bl = BigLittle::deploy(&little, &big).unwrap();
+        let (onset, outs) = bl.screen(&[0.2; 7], 0.5).unwrap();
+        assert_eq!(outs.len(), 1);
+        let _ = onset;
+        let c = bl.classify(&vec![0.1; 76]).unwrap();
+        assert_eq!(c.len(), 10);
+    }
+
+    #[test]
+    fn oversized_little_net_rejected() {
+        let mut rng = Rng::new(32);
+        // 200x300 fixed net exceeds 64 kB private L2.
+        let mut big_little_f =
+            Network::new(&[200, 300, 1], Activation::Tanh, Activation::Sigmoid).unwrap();
+        big_little_f.randomize(&mut rng, None);
+        let too_big = FixedNetwork::from_float(&big_little_f, 1.0).unwrap();
+        let (_, big) = nets();
+        assert!(BigLittle::deploy(&too_big, &big).is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Application showcases (Sec. VI): topology registry mirroring
+//! `python/compile/topologies.py` plus the end-to-end pipeline
+//! train → (quantize) → plan → simulate used by Table II and the
+//! examples. [`biglittle`] models the Sec. IV-B dual-domain scenario,
+//! [`energy`] the InfiniWolf energy-autonomy budget (Sec. III-C).
+
+pub mod biglittle;
+pub mod energy;
+
+use anyhow::Result;
+
+use crate::datasets;
+use crate::deploy::{self, DeploymentPlan, NetShape};
+use crate::fann::train::{accuracy, rprop::Rprop, rprop::RpropConfig};
+use crate::fann::{Activation, FixedNetwork, Network, TrainData};
+use crate::simulator::{self, CostOptions, Executable, SimReport};
+use crate::targets::{DataType, Target};
+use crate::util::rng::Rng;
+
+/// Topology + training metadata of one registered application
+/// (mirrors `python/compile/topologies.py`; parity pinned by tests).
+#[derive(Debug, Clone)]
+pub struct AppSpec {
+    pub name: &'static str,
+    pub title: &'static str,
+    pub sizes: &'static [usize],
+    /// Paper-reported accuracy for the showcase (fraction).
+    pub paper_accuracy: f32,
+    pub max_epochs: usize,
+    pub desired_error: f32,
+}
+
+/// Application A — hand-gesture recognition (Colli-Alfaro et al. [47]).
+pub const GESTURE: AppSpec = AppSpec {
+    name: "gesture",
+    title: "Hand gesture recognition (app A)",
+    sizes: &[76, 300, 200, 100, 10],
+    paper_accuracy: 0.8558,
+    max_epochs: 80,
+    desired_error: 0.005,
+};
+
+/// Application B — fall detection for elderly people (Howcroft et al. [48]).
+pub const FALL: AppSpec = AppSpec {
+    name: "fall",
+    title: "Fall detection (app B)",
+    sizes: &[117, 20, 2],
+    paper_accuracy: 0.84,
+    max_epochs: 200,
+    desired_error: 0.01,
+};
+
+/// Application C — human activity classification (Gaikwad et al. [46]).
+pub const ACTIVITY: AppSpec = AppSpec {
+    name: "activity",
+    title: "Human activity classification (app C)",
+    sizes: &[7, 6, 5],
+    paper_accuracy: 0.946,
+    max_epochs: 300,
+    desired_error: 0.01,
+};
+
+/// The example profiling network of Sec. V-A.
+pub const EXAMPLE: AppSpec = AppSpec {
+    name: "example",
+    title: "Sec. V-A profiling network",
+    sizes: &[5, 100, 100, 3],
+    paper_accuracy: 0.0,
+    max_epochs: 0,
+    desired_error: 0.0,
+};
+
+pub const ALL_APPS: [&AppSpec; 3] = [&GESTURE, &FALL, &ACTIVITY];
+
+impl AppSpec {
+    pub fn dataset(&self, seed: u64) -> TrainData {
+        match self.name {
+            "gesture" => datasets::gesture(seed),
+            "fall" => datasets::fall(seed),
+            "activity" => datasets::activity(seed),
+            other => panic!("no dataset for app {other:?}"),
+        }
+    }
+
+    pub fn shape(&self) -> NetShape {
+        NetShape::new(self.sizes)
+    }
+
+    pub fn macs(&self) -> usize {
+        self.shape().macs()
+    }
+}
+
+/// A trained, quantized, deployable application.
+pub struct TrainedApp {
+    pub spec: &'static AppSpec,
+    pub net: Network,
+    pub fixed: FixedNetwork,
+    pub train_accuracy: f32,
+    pub test_accuracy: f32,
+    pub mse_curve: Vec<f32>,
+}
+
+/// Train an application showcase with iRPROP− on its synthetic dataset
+/// (80/20 split), then quantize. Deterministic per seed.
+pub fn train_app(spec: &'static AppSpec, seed: u64) -> Result<TrainedApp> {
+    let mut data = spec.dataset(seed);
+    data.normalize_inputs();
+    let (train, test) = data.split(0.8);
+
+    let mut rng = Rng::new(seed ^ 0xAB);
+    let mut net = Network::new(spec.sizes, Activation::Tanh, Activation::Sigmoid)?;
+    net.randomize(&mut rng, None);
+
+    let mut trainer = Rprop::new(&net, RpropConfig::default());
+    let mse_curve = trainer.train_until(&mut net, &train, spec.max_epochs, spec.desired_error);
+
+    let train_accuracy = accuracy(&net, &train);
+    let test_accuracy = accuracy(&net, &test);
+    let fixed = FixedNetwork::from_float(&net, 1.0)?;
+
+    Ok(TrainedApp {
+        spec,
+        net,
+        fixed,
+        train_accuracy,
+        test_accuracy,
+        mse_curve,
+    })
+}
+
+/// One Table II cell: deploy `app` on `target` and simulate one
+/// classification. Float path on FPU targets, fixed elsewhere (the
+/// paper's convention).
+pub fn run_on_target(app: &TrainedApp, target: Target, input: &[f32]) -> Result<(DeploymentPlan, SimReport)> {
+    let dtype = if target.supports_float() {
+        DataType::Float32
+    } else {
+        DataType::Fixed
+    };
+    let plan = deploy::plan(&app.spec.shape(), target, dtype)?;
+    let exe = match dtype {
+        DataType::Float32 => Executable::Float(&app.net),
+        DataType::Fixed => Executable::Fixed(&app.fixed),
+    };
+    let report = simulator::simulate(&plan, &exe, input, CostOptions::default())?;
+    Ok((plan, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_python_topologies() {
+        // Mirrors python/compile/topologies.py (pinned by the manifest
+        // parity integration test as well).
+        assert_eq!(GESTURE.macs(), 103_800);
+        assert_eq!(FALL.sizes, &[117, 20, 2]);
+        assert_eq!(ACTIVITY.sizes, &[7, 6, 5]);
+        assert_eq!(EXAMPLE.sizes, &[5, 100, 100, 3]);
+    }
+
+    #[test]
+    fn activity_trains_to_paper_accuracy_band() {
+        let app = train_app(&ACTIVITY, 7).unwrap();
+        assert!(
+            app.test_accuracy > 0.88,
+            "test accuracy {} (paper: 94.6%)",
+            app.test_accuracy
+        );
+        // MSE decreased over training.
+        assert!(app.mse_curve.last().unwrap() < app.mse_curve.first().unwrap());
+    }
+
+    #[test]
+    fn fall_trains_to_paper_accuracy_band() {
+        let app = train_app(&FALL, 7).unwrap();
+        assert!(
+            (0.70..=1.0).contains(&app.test_accuracy),
+            "test accuracy {} (paper: 84%)",
+            app.test_accuracy
+        );
+    }
+
+    #[test]
+    fn run_on_target_uses_fixed_on_fpu_less() {
+        let app = train_app(&ACTIVITY, 3).unwrap();
+        let x = vec![0.1f32; 7];
+        let (plan, _) = run_on_target(&app, Target::WolfFc, &x).unwrap();
+        assert_eq!(plan.dtype, DataType::Fixed);
+        let (plan, _) = run_on_target(&app, Target::WolfCluster { cores: 8 }, &x).unwrap();
+        assert_eq!(plan.dtype, DataType::Float32);
+    }
+}

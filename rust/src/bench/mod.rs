@@ -1,0 +1,164 @@
+//! Shared benchmark harness for the figure/table reproduction binaries in
+//! `rust/benches/` (declared `harness = false`; the offline crate set has
+//! no criterion — wall-clock timing where needed is hand-rolled here).
+
+use std::time::Instant;
+
+use crate::deploy::{self, NetShape};
+use crate::fann::activation::Activation;
+use crate::simulator::{cost, CostOptions};
+use crate::targets::{DataType, Target};
+
+/// The in/out grid swept by Figs. 8–10 (powers of two, 2..=2048).
+pub fn fig8_grid() -> Vec<usize> {
+    (1..=11).map(|p| 1usize << p).collect()
+}
+
+/// Eq. (3): number of neurons in hidden layer `l` (1-based) for growth
+/// parameter `d`.
+pub fn eq3_hidden_units(l: usize, d: usize) -> usize {
+    (l % 2 + l / 2) * d
+}
+
+/// The Fig. 11/12 network family: 100 inputs, `l_total` hidden layers by
+/// Eq. (3) with d = 8, 8 output classes.
+pub fn fig11_shape(l_total: usize, d: usize) -> NetShape {
+    let mut sizes = vec![100];
+    for l in 1..=l_total {
+        sizes.push(eq3_hidden_units(l, d));
+    }
+    sizes.push(8);
+    NetShape::new(&sizes)
+}
+
+/// Total hidden units of the Fig. 11 family (Eq. (4)).
+pub fn eq4_total_hidden(l_total: usize, d: usize) -> usize {
+    (1..=l_total).map(|l| eq3_hidden_units(l, d)).sum()
+}
+
+/// Activations used across all benches: tanh hidden, sigmoid output
+/// (the paper's showcase configuration).
+pub fn bench_acts(n_layers: usize) -> Vec<Activation> {
+    let mut v = vec![Activation::Tanh; n_layers - 1];
+    v.push(Activation::Sigmoid);
+    v
+}
+
+/// Model the cycles of a single `n_in -> n_out` layer on `target`
+/// (Figs. 8–10). Returns `None` when the layer does not fit (the paper's
+/// "0.0" cells).
+pub fn single_layer_cycles(n_in: usize, n_out: usize, target: Target, dtype: DataType) -> Option<f64> {
+    let shape = NetShape::new(&[n_in, n_out]);
+    let plan = deploy::plan(&shape, target, dtype).ok()?;
+    if !plan.fits() {
+        return None;
+    }
+    let b = cost::layer_cycles(
+        &plan,
+        n_in,
+        n_out,
+        Activation::Tanh,
+        0.0,
+        true,
+        CostOptions::default(),
+    );
+    Some(b.total())
+}
+
+/// Whole-network cycles on `target` (Figs. 11–12); `None` on no-fit.
+pub fn whole_network_cycles(shape: &NetShape, target: Target, dtype: DataType) -> Option<f64> {
+    let plan = deploy::plan(shape, target, dtype).ok()?;
+    if !plan.fits() {
+        return None;
+    }
+    let acts = bench_acts(shape.sizes.len() - 1);
+    Some(cost::network_cycles(&plan, &acts, CostOptions::default()).total())
+}
+
+/// Wall-clock timing helper for the perf bench: median of `reps` runs
+/// after `warmup` runs; returns seconds per call.
+pub fn time_median<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Format a speedup cell, using the paper's 0.0 marker for no-fit.
+pub fn speedup_cell(base: Option<f64>, new: Option<f64>) -> String {
+    match (base, new) {
+        (Some(b), Some(n)) if n > 0.0 => format!("{:.2}", b / n),
+        _ => "0.0".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::targets::Chip;
+
+    #[test]
+    fn eq3_matches_paper_growth() {
+        // d=8: layers grow 8, 8, 16, 16, 24, 24, ...
+        let d = 8;
+        let units: Vec<usize> = (1..=6).map(|l| eq3_hidden_units(l, d)).collect();
+        assert_eq!(units, vec![8, 8, 16, 16, 24, 24]);
+    }
+
+    #[test]
+    fn eq4_paper_calibration_points() {
+        // Paper: 12 hidden layers = 336 hidden units; 24 layers = 1248.
+        assert_eq!(eq4_total_hidden(12, 8), 336);
+        assert_eq!(eq4_total_hidden(24, 8), 1248);
+    }
+
+    #[test]
+    fn fig11_shape_structure() {
+        let s = fig11_shape(3, 8);
+        assert_eq!(s.sizes, vec![100, 8, 8, 16, 8]);
+    }
+
+    #[test]
+    fn single_layer_nofit_is_none() {
+        // 2048x2048 f32 = 16 MB: no fit anywhere.
+        assert!(single_layer_cycles(
+            2048,
+            2048,
+            Target::CortexM4(Chip::Stm32l475vg),
+            DataType::Float32
+        )
+        .is_none());
+        assert!(single_layer_cycles(
+            16,
+            16,
+            Target::CortexM4(Chip::Stm32l475vg),
+            DataType::Float32
+        )
+        .is_some());
+    }
+
+    #[test]
+    fn speedup_cell_formats() {
+        assert_eq!(speedup_cell(Some(10.0), Some(5.0)), "2.00");
+        assert_eq!(speedup_cell(None, Some(5.0)), "0.0");
+        assert_eq!(speedup_cell(Some(10.0), None), "0.0");
+    }
+
+    #[test]
+    fn time_median_positive() {
+        let mut x = 0u64;
+        let t = time_median(1, 5, || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline crate set).
+//!
+//! Grammar: `fann-on-mcu <command> [--flag value]...`. Flags are
+//! order-insensitive; unknown flags are errors.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: the subcommand and its `--key value` flags.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        while let Some(arg) = it.next() {
+            let key = arg
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, found {arg:?}"))?;
+            let val = it
+                .next()
+                .with_context(|| format!("flag --{key} needs a value"))?;
+            if flags.insert(key.to_string(), val).is_some() {
+                bail!("duplicate flag --{key}");
+            }
+        }
+        Ok(Self { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad --{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("bad --{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    /// Error on any flag not in `known` (typo guard).
+    pub fn expect_only(&self, known: &[&str]) -> Result<()> {
+        for key in self.flags.keys() {
+            if !known.contains(&key.as_str()) {
+                bail!(
+                    "unknown flag --{key} for `{}` (known: {})",
+                    self.command,
+                    known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a `--target` value into a [`crate::targets::Target`].
+pub fn parse_target(s: &str) -> Result<crate::targets::Target> {
+    use crate::targets::{Chip, Target};
+    Ok(match s {
+        "m4" | "cortex-m4" | "nrf52832" => Target::CortexM4(Chip::Nrf52832),
+        "m4-stm32" | "stm32l475vg" => Target::CortexM4(Chip::Stm32l475vg),
+        "m7" | "cortex-m7" | "stm32f769" => Target::CortexM7(Chip::Stm32f769),
+        "m0" | "cortex-m0" => Target::CortexM0(Chip::Nrf52832),
+        "ibex" | "fc" | "wolf-fc" => Target::WolfFc,
+        "riscy" | "cluster1" => Target::WolfCluster { cores: 1 },
+        "cluster" | "cluster8" | "multi" => Target::WolfCluster { cores: 8 },
+        other => {
+            if let Some(n) = other.strip_prefix("cluster") {
+                Target::WolfCluster {
+                    cores: n.parse().with_context(|| format!("bad target {other:?}"))?,
+                }
+            } else {
+                bail!(
+                    "unknown target {other:?} (try: m4, m4-stm32, m7, m0, ibex, cluster1..cluster8)"
+                )
+            }
+        }
+    })
+}
+
+/// Parse a comma-separated float vector (`--input "0.1,0.2,..."`).
+pub fn parse_csv_f32(s: &str) -> Result<Vec<f32>> {
+    s.split(',')
+        .map(|v| v.trim().parse::<f32>().with_context(|| format!("bad value {v:?}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::targets::{Chip, Target};
+
+    fn args(v: &[&str]) -> Result<Args> {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = args(&["train", "--app", "fall", "--seed", "7"]).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("app"), Some("fall"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(a.get_usize("epochs", 100).unwrap(), 100);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(args(&["run", "positional"]).is_err());
+        assert!(args(&["run", "--flag"]).is_err());
+        assert!(args(&["run", "--a", "1", "--a", "2"]).is_err());
+    }
+
+    #[test]
+    fn expect_only_catches_typos() {
+        let a = args(&["train", "--sed", "7"]).unwrap();
+        assert!(a.expect_only(&["seed"]).is_err());
+        let a = args(&["train", "--seed", "7"]).unwrap();
+        assert!(a.expect_only(&["seed"]).is_ok());
+    }
+
+    #[test]
+    fn target_aliases() {
+        assert_eq!(
+            parse_target("m4").unwrap(),
+            Target::CortexM4(Chip::Nrf52832)
+        );
+        assert_eq!(parse_target("ibex").unwrap(), Target::WolfFc);
+        assert_eq!(
+            parse_target("cluster4").unwrap(),
+            Target::WolfCluster { cores: 4 }
+        );
+        assert!(parse_target("gpu").is_err());
+    }
+
+    #[test]
+    fn csv_parse() {
+        assert_eq!(parse_csv_f32("1, 2.5,-3").unwrap(), vec![1.0, 2.5, -3.0]);
+        assert!(parse_csv_f32("a,b").is_err());
+    }
+}

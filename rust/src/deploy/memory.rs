@@ -1,0 +1,162 @@
+//! Eq. (2) of the paper: the memory estimator that drives placement.
+//!
+//! ```text
+//! E_m = (2·L_data_buffer + 5·N_neurons + N_weights + 2·N_fann_layers)
+//!       · sizeof(dtype)
+//! ```
+//!
+//! * `L_data_buffer` — widest layer, doubled for the ping-pong activation
+//!   buffers used for continuous sensor processing;
+//! * `N_neurons` — all neurons incl. one bias pseudo-neuron per layer,
+//!   ×5 for {first-connection idx, last-connection idx, steepness,
+//!   activation type, neuron output};
+//! * `N_weights` — all connection weights;
+//! * `N_fann_layers` — layers incl. input, ×2 for {first, last} neuron
+//!   indexes.
+
+use crate::targets::DataType;
+
+/// Shape-only view of a network: the layer sizes `[in, h1, .., out]`.
+/// Both the float and the fixed network convert into this, so the
+/// deployment planner is representation-agnostic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetShape {
+    pub sizes: Vec<usize>,
+}
+
+impl NetShape {
+    pub fn new(sizes: &[usize]) -> Self {
+        assert!(sizes.len() >= 2, "need at least input and output layers");
+        Self {
+            sizes: sizes.to_vec(),
+        }
+    }
+
+    pub fn num_weights(&self) -> usize {
+        self.sizes.windows(2).map(|w| w[0] * w[1]).sum()
+    }
+
+    pub fn num_neurons_with_bias(&self) -> usize {
+        self.sizes.iter().map(|s| s + 1).sum()
+    }
+
+    pub fn num_fann_layers(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn max_layer_width(&self) -> usize {
+        *self.sizes.iter().max().unwrap()
+    }
+
+    pub fn macs(&self) -> usize {
+        self.num_weights()
+    }
+
+    /// Weight+bias bytes of the largest single layer (drives the
+    /// layer-wise vs neuron-wise DMA decision).
+    pub fn max_layer_param_bytes(&self, dtype: DataType) -> usize {
+        self.sizes
+            .windows(2)
+            .map(|w| (w[0] * w[1] + w[1]) * dtype_size(dtype))
+            .max()
+            .unwrap()
+    }
+
+    /// Weight bytes of the largest single neuron (one weight row).
+    pub fn max_neuron_row_bytes(&self, dtype: DataType) -> usize {
+        self.sizes
+            .windows(2)
+            .map(|w| w[0] * dtype_size(dtype))
+            .max()
+            .unwrap()
+    }
+
+    /// Total parameter bytes (weights + biases).
+    pub fn param_bytes(&self, dtype: DataType) -> usize {
+        let biases: usize = self.sizes[1..].iter().sum();
+        (self.num_weights() + biases) * dtype_size(dtype)
+    }
+}
+
+impl From<&crate::fann::Network> for NetShape {
+    fn from(net: &crate::fann::Network) -> Self {
+        NetShape::new(&net.layer_sizes())
+    }
+}
+
+impl From<&crate::fann::FixedNetwork> for NetShape {
+    fn from(net: &crate::fann::FixedNetwork) -> Self {
+        NetShape::new(&net.layer_sizes())
+    }
+}
+
+/// Element size: both f32 and Q-format i32 are 4 bytes on these MCUs.
+pub fn dtype_size(dtype: DataType) -> usize {
+    match dtype {
+        DataType::Float32 => 4,
+        DataType::Fixed => 4,
+    }
+}
+
+/// Eq. (2): estimated bytes needed to host the network + runtime buffers.
+pub fn estimate_memory(shape: &NetShape, dtype: DataType) -> usize {
+    let l_data_buffer = shape.max_layer_width();
+    let words = 2 * l_data_buffer
+        + 5 * shape.num_neurons_with_bias()
+        + shape.num_weights()
+        + 2 * shape.num_fann_layers();
+    words * dtype_size(dtype)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq2_hand_computed_example() {
+        // 2-4-1 xor net: buffer 4, neurons (2+1)+(4+1)+(1+1)=10,
+        // weights 2·4+4·1=12, layers 3.
+        let shape = NetShape::new(&[2, 4, 1]);
+        let words = 2 * 4 + 5 * 10 + 12 + 2 * 3;
+        assert_eq!(estimate_memory(&shape, DataType::Float32), words * 4);
+    }
+
+    #[test]
+    fn eq2_application_a() {
+        // 76-300-200-100-10: weights 103800, neurons 691, buffer 300,
+        // layers 5 -> dominated by the weights as the paper notes.
+        let shape = NetShape::new(&[76, 300, 200, 100, 10]);
+        let e = estimate_memory(&shape, DataType::Float32);
+        let weights_bytes = 103_800 * 4;
+        assert!(e > weights_bytes);
+        assert!(e < weights_bytes + 20_000, "estimate {e}");
+    }
+
+    #[test]
+    fn estimate_monotone_in_layer_width() {
+        let small = estimate_memory(&NetShape::new(&[10, 20, 5]), DataType::Fixed);
+        let big = estimate_memory(&NetShape::new(&[10, 40, 5]), DataType::Fixed);
+        assert!(big > small);
+    }
+
+    #[test]
+    fn layer_and_neuron_byte_helpers() {
+        let shape = NetShape::new(&[76, 300, 200, 100, 10]);
+        // largest layer by params: 300x200 + 200 biases.
+        assert_eq!(
+            shape.max_layer_param_bytes(DataType::Float32),
+            (300 * 200 + 200) * 4
+        );
+        // largest neuron row: 300 inputs.
+        assert_eq!(shape.max_neuron_row_bytes(DataType::Float32), 300 * 4);
+    }
+
+    #[test]
+    fn shape_from_network() {
+        use crate::fann::{Activation, Network};
+        let net = Network::new(&[5, 7, 2], Activation::Tanh, Activation::Sigmoid).unwrap();
+        let shape = NetShape::from(&net);
+        assert_eq!(shape.sizes, vec![5, 7, 2]);
+        assert_eq!(shape.num_weights(), 5 * 7 + 7 * 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! The deployment planner — the toolkit half of the paper's contribution.
+//!
+//! [`memory`] implements the Eq. (2) estimator; [`placement`] implements
+//! the Sec. IV-B policy that picks the memory level closest to the
+//! processing unit that still holds the network, plus the DMA
+//! double-buffering strategy for L2-resident cluster deployments.
+
+pub mod memory;
+pub mod placement;
+
+pub use memory::{estimate_memory, NetShape};
+pub use placement::{plan, DeploymentPlan, DmaStrategy};

@@ -1,0 +1,229 @@
+//! The placement policy of Sec. IV-B: given the Eq. (2) estimate and the
+//! selected processor, choose the memory level closest to the core that
+//! still fits the network, and — for the cluster — the DMA strategy.
+//!
+//! * Cortex-M: RAM if `E_m` fits, else network constants in flash
+//!   (buffers stay in RAM), else no-fit.
+//! * Wolf FC: private L2, else shared L2, else no-fit.
+//! * Wolf cluster: L1, else shared-L2-resident with DMA double-buffering —
+//!   layer-wise while the two largest adjacent layers fit L1, neuron-wise
+//!   while two neuron rows fit, else no-fit.
+
+use anyhow::{bail, Result};
+
+use super::memory::{dtype_size, estimate_memory, NetShape};
+use crate::targets::{memspec, Chip, DataType, Region, Target};
+
+/// DMA double-buffering granularity for L2-resident cluster networks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DmaStrategy {
+    /// Whole-layer transfers (largest layer fits L1 with double buffer).
+    LayerWise,
+    /// One weight row (neuron) at a time.
+    NeuronWise,
+}
+
+/// The result of planning a deployment.
+#[derive(Debug, Clone)]
+pub struct DeploymentPlan {
+    pub target: Target,
+    pub dtype: DataType,
+    /// Where the network parameters live.
+    pub region: Region,
+    /// DMA streaming strategy (cluster targets with L2-resident nets).
+    pub dma: Option<DmaStrategy>,
+    /// Eq. (2) estimate in bytes.
+    pub est_memory_bytes: usize,
+    pub shape: NetShape,
+}
+
+impl DeploymentPlan {
+    pub fn fits(&self) -> bool {
+        self.region != Region::NoFit
+    }
+}
+
+/// L1 bytes available for network data on the cluster; the balance is
+/// reserved for stacks + activation buffers of the eight cores.
+fn l1_budget() -> usize {
+    memspec::WOLF_MEMORY.l1 - 8 * 1024
+}
+
+/// Plan a deployment; fails only on unsupported dtype/target combinations
+/// (no-fit is reported via `region == NoFit` so sweeps can show the
+/// paper's "0.0" cells rather than erroring).
+pub fn plan(shape: &NetShape, target: Target, dtype: DataType) -> Result<DeploymentPlan> {
+    if dtype == DataType::Float32 && !target.supports_float() {
+        bail!(
+            "{} has no FPU: convert the network to fixed point first \
+             (fann_save_to_fixed)",
+            target.label()
+        );
+    }
+    let est = estimate_memory(shape, dtype);
+    let (region, dma) = match target {
+        Target::CortexM4(chip) | Target::CortexM7(chip) | Target::CortexM0(chip) => {
+            place_cortex_m(shape, chip, dtype, est)
+        }
+        Target::WolfFc => place_wolf_fc(est),
+        Target::WolfCluster { .. } => place_wolf_cluster(shape, dtype, est),
+    };
+    Ok(DeploymentPlan {
+        target,
+        dtype,
+        region,
+        dma,
+        est_memory_bytes: est,
+        shape: shape.clone(),
+    })
+}
+
+fn place_cortex_m(
+    shape: &NetShape,
+    chip: Chip,
+    dtype: DataType,
+    est: usize,
+) -> (Region, Option<DmaStrategy>) {
+    let mem = chip.memory();
+    if est <= mem.ram {
+        (Region::Ram, None)
+    } else {
+        // Parameters go to flash; the RAM must still hold the runtime
+        // buffers + bookkeeping (Eq. 2 minus the weights).
+        let params = shape.param_bytes(dtype);
+        let runtime = est - shape.num_weights() * dtype_size(dtype);
+        if params <= mem.flash && runtime <= mem.ram {
+            (Region::Flash, None)
+        } else {
+            (Region::NoFit, None)
+        }
+    }
+}
+
+fn place_wolf_fc(est: usize) -> (Region, Option<DmaStrategy>) {
+    let mem = memspec::WOLF_MEMORY;
+    if est <= mem.private_l2 {
+        (Region::PrivateL2, None)
+    } else if est <= mem.shared_l2 {
+        (Region::SharedL2, None)
+    } else {
+        (Region::NoFit, None)
+    }
+}
+
+fn place_wolf_cluster(shape: &NetShape, dtype: DataType, est: usize) -> (Region, Option<DmaStrategy>) {
+    let mem = memspec::WOLF_MEMORY;
+    let budget = l1_budget();
+    if est <= budget {
+        return (Region::L1, None);
+    }
+    // L2-resident, streamed. The network itself must fit shared L2.
+    if shape.param_bytes(dtype) > mem.shared_l2 {
+        return (Region::NoFit, None);
+    }
+    // Layer-wise double buffering: current + next layer resident.
+    let largest_layer = shape.max_layer_param_bytes(dtype);
+    if 2 * largest_layer <= budget {
+        return (Region::SharedL2, Some(DmaStrategy::LayerWise));
+    }
+    // Neuron-wise double buffering: two weight rows resident.
+    let row = shape.max_neuron_row_bytes(dtype);
+    if 2 * row <= budget {
+        return (Region::SharedL2, Some(DmaStrategy::NeuronWise));
+    }
+    (Region::NoFit, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape(sizes: &[usize]) -> NetShape {
+        NetShape::new(sizes)
+    }
+
+    #[test]
+    fn small_net_lands_in_fastest_memory_everywhere() {
+        let s = shape(&[7, 6, 5]); // application C
+        for (t, want) in [
+            (Target::CortexM4(Chip::Nrf52832), Region::Ram),
+            (Target::WolfFc, Region::PrivateL2),
+            (Target::WolfCluster { cores: 8 }, Region::L1),
+        ] {
+            let p = plan(&s, t, DataType::Fixed).unwrap();
+            assert_eq!(p.region, want, "{t:?}");
+            assert!(p.dma.is_none());
+        }
+    }
+
+    #[test]
+    fn application_a_placements_match_paper() {
+        // 76-300-200-100-10: 415 kB of f32 parameters.
+        let s = shape(&[76, 300, 200, 100, 10]);
+        // nRF52832: > 64 kB RAM -> flash.
+        let p = plan(&s, Target::CortexM4(Chip::Nrf52832), DataType::Float32).unwrap();
+        assert_eq!(p.region, Region::Flash);
+        // FC: > 64 kB private -> shared L2.
+        let p = plan(&s, Target::WolfFc, DataType::Fixed).unwrap();
+        assert_eq!(p.region, Region::SharedL2);
+        // Cluster: largest layer 300x200 = 240 kB > L1 -> neuron-wise DMA.
+        let p = plan(&s, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+        assert_eq!(p.region, Region::SharedL2);
+        assert_eq!(p.dma, Some(DmaStrategy::NeuronWise));
+    }
+
+    #[test]
+    fn layerwise_dma_when_layers_fit_individually() {
+        // ~96 kB of parameters (> L1 budget) but the largest layer is
+        // ~24 kB: two layers double-buffer within L1 -> layer-wise.
+        let s = shape(&[50, 100, 60, 100, 60, 8]);
+        let p = plan(&s, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+        assert_eq!(p.region, Region::SharedL2);
+        assert_eq!(p.dma, Some(DmaStrategy::LayerWise));
+    }
+
+    #[test]
+    fn float_on_fpu_less_targets_rejected() {
+        let s = shape(&[4, 3, 2]);
+        assert!(plan(&s, Target::WolfFc, DataType::Float32).is_err());
+        assert!(plan(&s, Target::CortexM0(Chip::Nrf52832), DataType::Float32).is_err());
+    }
+
+    #[test]
+    fn giant_net_reports_nofit_not_error() {
+        // ~4 M weights float: over every memory.
+        let s = shape(&[2048, 2048, 8]);
+        let p = plan(&s, Target::CortexM4(Chip::Nrf52832), DataType::Float32).unwrap();
+        assert_eq!(p.region, Region::NoFit);
+        assert!(!p.fits());
+        let p = plan(&s, Target::WolfFc, DataType::Fixed).unwrap();
+        assert_eq!(p.region, Region::NoFit);
+    }
+
+    #[test]
+    fn neuron_wise_when_single_row_is_huge() {
+        // 3000-input rows = 12 kB: the largest layer (~360 kB) exceeds
+        // L1 but two rows double-buffer -> neuron-wise; the total
+        // (~362 kB) still fits shared L2.
+        let s = shape(&[3000, 30, 8]);
+        let p = plan(&s, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+        assert_eq!(p.dma, Some(DmaStrategy::NeuronWise));
+        // 12000-input rows = 48 kB: two rows exceed the L1 budget (and
+        // the 1.9 MB of parameters exceed shared L2) -> no fit.
+        let s = shape(&[12_000, 40, 8]);
+        let p = plan(&s, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+        assert_eq!(p.region, Region::NoFit);
+    }
+
+    #[test]
+    fn stm32_ram_larger_than_nrf_changes_boundary() {
+        // ~80 kB net: fits STM32 (96 kB) RAM, not nRF52832 (64 kB).
+        let s = shape(&[100, 190, 8]);
+        let est = estimate_memory(&s, DataType::Float32);
+        assert!(est > 64 * 1024 && est < 96 * 1024, "est {est}");
+        let p = plan(&s, Target::CortexM4(Chip::Stm32l475vg), DataType::Float32).unwrap();
+        assert_eq!(p.region, Region::Ram);
+        let p = plan(&s, Target::CortexM4(Chip::Nrf52832), DataType::Float32).unwrap();
+        assert_eq!(p.region, Region::Flash);
+    }
+}

@@ -1,0 +1,163 @@
+//! FANN activation functions (float path) and their derivatives.
+//!
+//! Matches `python/compile/kernels/ref.py::activation` exactly:
+//! `sigmoid(x) = 1/(1+e^-x)`, `tanh`, `relu`, `linear`. FANN's original
+//! convention folds an activation *steepness* into the argument
+//! (`sigmoid(2·s·x)` with default s = 0.5); we normalize to steepness 1.0
+//! applied uniformly (`act(s·x)`) so the Rust, JAX and Pallas paths share
+//! one convention — `Network::steepness` stores s and defaults to 1.0.
+//!
+//! Derivatives are expressed in terms of the activation *output*, as FANN's
+//! backprop does (it only retains neuron outputs).
+
+use anyhow::{bail, Result};
+
+/// Activation function selector (FANN enum subset used by the toolkit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    Linear,
+    Sigmoid,
+    /// FANN_SIGMOID_SYMMETRIC.
+    Tanh,
+    Relu,
+}
+
+impl Activation {
+    /// Apply the activation.
+    #[inline]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            Activation::Linear => x,
+            Activation::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Activation::Tanh => x.tanh(),
+            Activation::Relu => x.max(0.0),
+        }
+    }
+
+    /// Derivative as a function of the activation output `y`.
+    #[inline]
+    pub fn grad_from_output(self, y: f32) -> f32 {
+        match self {
+            Activation::Linear => 1.0,
+            Activation::Sigmoid => y * (1.0 - y),
+            Activation::Tanh => 1.0 - y * y,
+            Activation::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Output range of the activation, used by fixed-point conversion to
+    /// bound intermediate magnitudes.
+    pub fn output_range(self) -> (f32, f32) {
+        match self {
+            Activation::Linear => (f32::NEG_INFINITY, f32::INFINITY),
+            Activation::Sigmoid => (0.0, 1.0),
+            Activation::Tanh => (-1.0, 1.0),
+            Activation::Relu => (0.0, f32::INFINITY),
+        }
+    }
+
+    /// Canonical lowercase name (matches the Python topology registry).
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Linear => "linear",
+            Activation::Sigmoid => "sigmoid",
+            Activation::Tanh => "tanh",
+            Activation::Relu => "relu",
+        }
+    }
+
+    /// Parse from the canonical name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "linear" => Activation::Linear,
+            "sigmoid" => Activation::Sigmoid,
+            "tanh" | "sigmoid_symmetric" => Activation::Tanh,
+            "relu" => Activation::Relu,
+            other => bail!("unknown activation {other:?}"),
+        })
+    }
+
+    /// Approximate cycle cost of one activation evaluation on an MCU using
+    /// FANN's step-linear approximation (used by `targets::isa`).
+    pub fn mcu_cycle_cost(self) -> u64 {
+        match self {
+            Activation::Linear => 1,
+            // Step-linear table: compare + branch chain + interpolation.
+            Activation::Sigmoid | Activation::Tanh => 16,
+            Activation::Relu => 2,
+        }
+    }
+}
+
+/// All activations the toolkit supports (iteration helper for tests).
+pub const ALL: [Activation; 4] = [
+    Activation::Linear,
+    Activation::Sigmoid,
+    Activation::Tanh,
+    Activation::Relu,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_midpoint_and_limits() {
+        assert!((Activation::Sigmoid.apply(0.0) - 0.5).abs() < 1e-7);
+        assert!(Activation::Sigmoid.apply(20.0) > 0.999);
+        assert!(Activation::Sigmoid.apply(-20.0) < 0.001);
+    }
+
+    #[test]
+    fn tanh_is_odd() {
+        for x in [-3.0f32, -0.5, 0.0, 1.25] {
+            let a = Activation::Tanh.apply(x);
+            let b = Activation::Tanh.apply(-x);
+            assert!((a + b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gradients_match_numeric_derivative() {
+        let eps = 1e-3f32;
+        for act in ALL {
+            for x in [-2.0f32, -0.7, 0.3, 1.9] {
+                if act == Activation::Relu && x.abs() < 2.0 * eps {
+                    continue; // kink
+                }
+                let y = act.apply(x);
+                let dydx = (act.apply(x + eps) - act.apply(x - eps)) / (2.0 * eps);
+                let got = act.grad_from_output(y);
+                assert!(
+                    (got - dydx).abs() < 5e-3,
+                    "{act:?} x={x}: {got} vs {dydx}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for act in ALL {
+            assert_eq!(Activation::parse(act.name()).unwrap(), act);
+        }
+        assert!(Activation::parse("softmax").is_err());
+    }
+
+    #[test]
+    fn output_ranges_contain_samples() {
+        for act in ALL {
+            let (lo, hi) = act.output_range();
+            for x in [-5.0f32, 0.0, 5.0] {
+                let y = act.apply(x);
+                assert!(y >= lo && y <= hi);
+            }
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Training data container + the FANN `.data` text format.
+//!
+//! FANN's format (one header line, then alternating input/output lines):
+//!
+//! ```text
+//! <num_samples> <num_inputs> <num_outputs>
+//! <in_0> <in_1> ... <in_{I-1}>
+//! <out_0> ... <out_{O-1}>
+//! ...
+//! ```
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::rng::Rng;
+
+/// A supervised dataset: `inputs` is row-major `[n][num_inputs]`,
+/// `targets` is `[n][num_outputs]`.
+#[derive(Debug, Clone)]
+pub struct TrainData {
+    pub num_inputs: usize,
+    pub num_outputs: usize,
+    pub inputs: Vec<f32>,
+    pub targets: Vec<f32>,
+}
+
+impl TrainData {
+    pub fn new(num_inputs: usize, num_outputs: usize) -> Self {
+        Self {
+            num_inputs,
+            num_outputs,
+            inputs: Vec::new(),
+            targets: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        if self.num_inputs == 0 {
+            0
+        } else {
+            self.inputs.len() / self.num_inputs
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn push(&mut self, input: &[f32], target: &[f32]) {
+        assert_eq!(input.len(), self.num_inputs);
+        assert_eq!(target.len(), self.num_outputs);
+        self.inputs.extend_from_slice(input);
+        self.targets.extend_from_slice(target);
+    }
+
+    pub fn input(&self, i: usize) -> &[f32] {
+        &self.inputs[i * self.num_inputs..(i + 1) * self.num_inputs]
+    }
+
+    pub fn target(&self, i: usize) -> &[f32] {
+        &self.targets[i * self.num_outputs..(i + 1) * self.num_outputs]
+    }
+
+    /// Class label of sample `i` (argmax of the one-hot target; for a
+    /// single sigmoid output, thresholds at 0.5).
+    pub fn label(&self, i: usize) -> usize {
+        let t = self.target(i);
+        if self.num_outputs == 1 {
+            usize::from(t[0] >= 0.5)
+        } else {
+            crate::util::argmax(t)
+        }
+    }
+
+    /// Shuffle samples in place (paired input/target rows).
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        let n = self.len();
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            if i != j {
+                for k in 0..self.num_inputs {
+                    self.inputs.swap(i * self.num_inputs + k, j * self.num_inputs + k);
+                }
+                for k in 0..self.num_outputs {
+                    self.targets
+                        .swap(i * self.num_outputs + k, j * self.num_outputs + k);
+                }
+            }
+        }
+    }
+
+    /// Split into (train, test) with the first `frac` fraction as train.
+    pub fn split(&self, frac: f64) -> (TrainData, TrainData) {
+        let n_train = ((self.len() as f64) * frac).round() as usize;
+        let mut train = TrainData::new(self.num_inputs, self.num_outputs);
+        let mut test = TrainData::new(self.num_inputs, self.num_outputs);
+        for i in 0..self.len() {
+            let dst = if i < n_train { &mut train } else { &mut test };
+            dst.push(self.input(i), self.target(i));
+        }
+        (train, test)
+    }
+
+    /// Per-feature min/max scaling to [-1, 1] (the paper rescales inputs
+    /// before fixed-point conversion). Returns the (min, max) per feature
+    /// so the deployment target can apply the same scaling.
+    pub fn normalize_inputs(&mut self) -> Vec<(f32, f32)> {
+        let n = self.len();
+        let mut ranges = vec![(f32::INFINITY, f32::NEG_INFINITY); self.num_inputs];
+        for i in 0..n {
+            for (k, &v) in self.input(i).iter().enumerate() {
+                ranges[k].0 = ranges[k].0.min(v);
+                ranges[k].1 = ranges[k].1.max(v);
+            }
+        }
+        for i in 0..n {
+            for k in 0..self.num_inputs {
+                let (lo, hi) = ranges[k];
+                let v = &mut self.inputs[i * self.num_inputs + k];
+                *v = if hi > lo { 2.0 * (*v - lo) / (hi - lo) - 1.0 } else { 0.0 };
+            }
+        }
+        ranges
+    }
+
+    /// Serialize to the FANN `.data` text format.
+    pub fn to_fann_format(&self) -> String {
+        let mut out = format!("{} {} {}\n", self.len(), self.num_inputs, self.num_outputs);
+        for i in 0..self.len() {
+            let line = |xs: &[f32]| {
+                xs.iter()
+                    .map(|v| format!("{v}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            };
+            out.push_str(&line(self.input(i)));
+            out.push('\n');
+            out.push_str(&line(self.target(i)));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse the FANN `.data` text format.
+    pub fn from_fann_format(text: &str) -> Result<Self> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().context("empty .data file")?;
+        let mut it = header.split_whitespace();
+        let n: usize = it.next().context("missing count")?.parse()?;
+        let ni: usize = it.next().context("missing num_inputs")?.parse()?;
+        let no: usize = it.next().context("missing num_outputs")?.parse()?;
+        let mut data = TrainData::new(ni, no);
+        for s in 0..n {
+            let parse_line = |line: &str, want: usize| -> Result<Vec<f32>> {
+                let vals: Vec<f32> = line
+                    .split_whitespace()
+                    .map(|v| v.parse::<f32>().context("bad number"))
+                    .collect::<Result<_>>()?;
+                ensure!(vals.len() == want, "expected {want} values, got {}", vals.len());
+                Ok(vals)
+            };
+            let Some(in_line) = lines.next() else {
+                bail!("truncated .data file at sample {s}");
+            };
+            let Some(out_line) = lines.next() else {
+                bail!("truncated .data file at sample {s}");
+            };
+            data.push(&parse_line(in_line, ni)?, &parse_line(out_line, no)?);
+        }
+        Ok(data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrainData {
+        let mut d = TrainData::new(2, 1);
+        d.push(&[0.0, 0.0], &[0.0]);
+        d.push(&[0.0, 1.0], &[1.0]);
+        d.push(&[1.0, 0.0], &[1.0]);
+        d.push(&[1.0, 1.0], &[0.0]);
+        d
+    }
+
+    #[test]
+    fn fann_format_roundtrip() {
+        let d = sample();
+        let text = d.to_fann_format();
+        let back = TrainData::from_fann_format(&text).unwrap();
+        assert_eq!(back.len(), 4);
+        assert_eq!(back.input(2), d.input(2));
+        assert_eq!(back.target(3), d.target(3));
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        assert!(TrainData::from_fann_format("2 2 1\n0 0\n0\n1 1\n").is_err());
+        assert!(TrainData::from_fann_format("1 2 1\n0\n0\n").is_err());
+    }
+
+    #[test]
+    fn shuffle_preserves_pairs() {
+        let mut d = TrainData::new(1, 1);
+        for i in 0..32 {
+            d.push(&[i as f32], &[i as f32 * 10.0]);
+        }
+        let mut rng = Rng::new(11);
+        d.shuffle(&mut rng);
+        for i in 0..32 {
+            assert_eq!(d.target(i)[0], d.input(i)[0] * 10.0);
+        }
+    }
+
+    #[test]
+    fn split_sizes() {
+        let d = sample();
+        let (tr, te) = d.split(0.75);
+        assert_eq!(tr.len(), 3);
+        assert_eq!(te.len(), 1);
+    }
+
+    #[test]
+    fn normalize_bounds() {
+        let mut d = TrainData::new(2, 1);
+        d.push(&[0.0, 10.0], &[0.0]);
+        d.push(&[5.0, 20.0], &[1.0]);
+        d.push(&[10.0, 30.0], &[1.0]);
+        let ranges = d.normalize_inputs();
+        assert_eq!(ranges[0], (0.0, 10.0));
+        for i in 0..d.len() {
+            for &v in d.input(i) {
+                assert!((-1.0..=1.0).contains(&v));
+            }
+        }
+        assert_eq!(d.input(1)[0], 0.0); // midpoint maps to 0
+    }
+
+    #[test]
+    fn label_argmax_and_threshold() {
+        let mut d = TrainData::new(1, 3);
+        d.push(&[0.0], &[0.0, 1.0, 0.0]);
+        assert_eq!(d.label(0), 1);
+        let s = sample();
+        assert_eq!(s.label(0), 0);
+        assert_eq!(s.label(1), 1);
+    }
+}

@@ -1,0 +1,247 @@
+//! Fixed-point network conversion — `fann_save_to_fixed` semantics.
+//!
+//! Converts a trained float [`Network`] to a [`FixedNetwork`]: a single
+//! network-wide decimal point is chosen from the largest parameter
+//! magnitude and worst-case layer accumulation (see
+//! [`crate::quantize::choose_decimal_point`]); all weights/biases are
+//! quantized to Q(dec) i32. Inference then runs entirely in integer
+//! arithmetic with FANN's step-linear activation approximations —
+//! the path FPU-less MCUs (Cortex-M0, IBEX) execute.
+
+use anyhow::Result;
+
+use super::activation::Activation;
+use super::net::Network;
+use crate::quantize;
+
+/// One quantized layer (row-major weights like the float layer).
+#[derive(Debug, Clone)]
+pub struct FixedLayer {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub weights: Vec<i32>,
+    pub biases: Vec<i32>,
+    pub activation: Activation,
+}
+
+/// A fully quantized network.
+#[derive(Debug, Clone)]
+pub struct FixedNetwork {
+    pub layers: Vec<FixedLayer>,
+    /// Network-wide decimal point (Q(dec)).
+    pub decimal_point: u32,
+}
+
+impl FixedNetwork {
+    /// Quantize a float network. `max_abs_input` bounds the inputs the
+    /// deployed net will see (1.0 for normalized data); it participates in
+    /// the overflow analysis exactly like FANN's input-rescaling step.
+    pub fn from_float(net: &Network, max_abs_input: f32) -> Result<Self> {
+        let mut max_abs_w = 0f32;
+        for layer in &net.layers {
+            for w in layer.weights.iter().chain(layer.biases.iter()) {
+                max_abs_w = max_abs_w.max(w.abs());
+            }
+        }
+        // Bound on any layer input: the raw input bound or an activation
+        // output bound (sigmoid/tanh are within [-1, 1]).
+        let mut max_abs_x = max_abs_input;
+        for layer in &net.layers {
+            let (lo, hi) = layer.activation.output_range();
+            if lo.is_finite() && hi.is_finite() {
+                max_abs_x = max_abs_x.max(lo.abs().max(hi.abs()));
+            } else {
+                // Unbounded activation (linear/relu): fall back to a
+                // conservative bound used by FANN's analysis.
+                max_abs_x = max_abs_x.max(8.0);
+            }
+        }
+        let max_fan_in = net.layers.iter().map(|l| l.n_in).max().unwrap();
+        let dec = quantize::choose_decimal_point(max_abs_w, max_fan_in, max_abs_x);
+        Ok(Self::from_float_with_dec(net, dec))
+    }
+
+    /// Quantize with an explicit decimal point (parity tests use this).
+    pub fn from_float_with_dec(net: &Network, dec: u32) -> Self {
+        let layers = net
+            .layers
+            .iter()
+            .map(|l| FixedLayer {
+                n_in: l.n_in,
+                n_out: l.n_out,
+                // Steepness is folded into the weights at conversion time
+                // (w·s), matching how FANN bakes steepness into the
+                // fixed-point export.
+                weights: l
+                    .weights
+                    .iter()
+                    .map(|&w| quantize::quantize(w * l.steepness, dec))
+                    .collect(),
+                biases: l
+                    .biases
+                    .iter()
+                    .map(|&b| quantize::quantize(b * l.steepness, dec))
+                    .collect(),
+                activation: l.activation,
+            })
+            .collect();
+        Self {
+            layers,
+            decimal_point: dec,
+        }
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.layers[0].n_in
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.layers.last().unwrap().n_out
+    }
+
+    pub fn layer_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![self.layers[0].n_in];
+        sizes.extend(self.layers.iter().map(|l| l.n_out));
+        sizes
+    }
+
+    pub fn max_layer_width(&self) -> usize {
+        self.layer_sizes().into_iter().max().unwrap()
+    }
+
+    /// Quantize a float input vector to the network's Q format.
+    pub fn quantize_input(&self, input: &[f32]) -> Vec<i32> {
+        input
+            .iter()
+            .map(|&v| quantize::quantize(v, self.decimal_point))
+            .collect()
+    }
+
+    /// Run one (already quantized) sample; returns Q(dec) outputs.
+    pub fn run_q(&self, input_q: &[i32]) -> Vec<i32> {
+        assert_eq!(input_q.len(), self.num_inputs());
+        let width = self.max_layer_width();
+        let mut a = vec![0i32; width];
+        let mut b = vec![0i32; width];
+        a[..input_q.len()].copy_from_slice(input_q);
+        let mut cur = input_q.len();
+        let mut flip = false;
+        for layer in &self.layers {
+            let (src, dst) = if flip { (&b, &mut a) } else { (&a, &mut b) };
+            quantize::dense_q_into(
+                &src[..cur],
+                &layer.weights,
+                &layer.biases,
+                self.decimal_point,
+                layer.activation,
+                &mut dst[..layer.n_out],
+            );
+            cur = layer.n_out;
+            flip = !flip;
+        }
+        let buf = if flip { &b } else { &a };
+        buf[..cur].to_vec()
+    }
+
+    /// Run a float sample end to end: quantize, infer, dequantize.
+    pub fn run(&self, input: &[f32]) -> Vec<f32> {
+        self.run_q(&self.quantize_input(input))
+            .into_iter()
+            .map(|q| quantize::dequantize(q as i64, self.decimal_point))
+            .collect()
+    }
+
+    /// Total weights (for Eq. (2) memory estimation of the fixed net).
+    pub fn num_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.weights.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fann::data::TrainData;
+    use crate::fann::train::{accuracy, rprop::Rprop, rprop::RpropConfig};
+    use crate::util::rng::Rng;
+
+    fn trained_xor() -> Network {
+        let mut rng = Rng::new(42);
+        let mut net = Network::new(&[2, 4, 1], Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, None);
+        let mut d = TrainData::new(2, 1);
+        d.push(&[0.0, 0.0], &[0.0]);
+        d.push(&[0.0, 1.0], &[1.0]);
+        d.push(&[1.0, 0.0], &[1.0]);
+        d.push(&[1.0, 1.0], &[0.0]);
+        let mut tr = Rprop::new(&net, RpropConfig::default());
+        tr.train_until(&mut net, &d, 500, 0.001);
+        net
+    }
+
+    #[test]
+    fn fixed_xor_matches_float_decisions() {
+        let net = trained_xor();
+        let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+        for (x, want) in [
+            ([0.0f32, 0.0], 0.0f32),
+            ([0.0, 1.0], 1.0),
+            ([1.0, 0.0], 1.0),
+            ([1.0, 1.0], 0.0),
+        ] {
+            let y = fixed.run(&x)[0];
+            assert_eq!(y >= 0.5, want >= 0.5, "x={x:?} y={y}");
+        }
+    }
+
+    #[test]
+    fn fixed_outputs_close_to_float() {
+        let net = trained_xor();
+        let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+        for x in [[0.0f32, 0.0], [0.0, 1.0], [1.0, 0.0], [1.0, 1.0]] {
+            let yf = net.run(&x)[0];
+            let yq = fixed.run(&x)[0];
+            assert!((yf - yq).abs() < 0.06, "x={x:?} float {yf} fixed {yq}");
+        }
+    }
+
+    #[test]
+    fn decimal_point_in_valid_range() {
+        let net = trained_xor();
+        let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+        assert!((1..=20).contains(&fixed.decimal_point));
+    }
+
+    #[test]
+    fn accuracy_preserved_on_random_classifier() {
+        // Train a small classifier on separable blobs; quantization must
+        // not change accuracy by more than a few percent.
+        let mut rng = Rng::new(77);
+        let mut data = TrainData::new(4, 2);
+        for i in 0..200 {
+            let c = i % 2;
+            let mu = if c == 0 { -0.5 } else { 0.5 };
+            let x: Vec<f32> = (0..4).map(|_| rng.normal_f32(mu, 0.3)).collect();
+            let t = if c == 0 { [1.0, 0.0] } else { [0.0, 1.0] };
+            data.push(&x, &t);
+        }
+        let mut net = Network::new(&[4, 8, 2], Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, None);
+        let mut tr = Rprop::new(&net, RpropConfig::default());
+        tr.train_until(&mut net, &data, 100, 0.01);
+        let acc_f = accuracy(&net, &data);
+        let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+        let mut correct = 0;
+        for i in 0..data.len() {
+            let out = fixed.run(data.input(i));
+            let pred = crate::util::argmax(&out);
+            if pred == data.label(i) {
+                correct += 1;
+            }
+        }
+        let acc_q = correct as f32 / data.len() as f32;
+        assert!(
+            (acc_f - acc_q).abs() < 0.05,
+            "float acc {acc_f} vs fixed acc {acc_q}"
+        );
+    }
+}

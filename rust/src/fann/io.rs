@@ -1,0 +1,219 @@
+//! FANN `.net` file formats: float (`FANN_FLO_2.1`-style) and fixed
+//! (`FANN_FIX_2.1`-style).
+//!
+//! We keep FANN's shape — a versioned header followed by `key=value`
+//! lines and a flat connection list — but serialize only the fields the
+//! toolkit consumes (layer sizes, per-layer activation + steepness,
+//! weights). FANN's full per-neuron connection table is redundant for the
+//! dense MLPs the toolkit supports; DESIGN.md §1 records the
+//! simplification.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::activation::Activation;
+use super::fixed::{FixedLayer, FixedNetwork};
+use super::net::{Layer, Network};
+
+const FLOAT_MAGIC: &str = "FANN_FLO_2.1";
+const FIXED_MAGIC: &str = "FANN_FIX_2.1";
+
+fn join<T: ToString>(xs: impl IntoIterator<Item = T>) -> String {
+    xs.into_iter()
+        .map(|v| v.to_string())
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Serialize a float network.
+pub fn save_float(net: &Network) -> String {
+    let mut out = String::new();
+    out.push_str(FLOAT_MAGIC);
+    out.push('\n');
+    out.push_str(&format!("num_layers={}\n", net.num_fann_layers()));
+    out.push_str(&format!("layer_sizes={}\n", join(net.layer_sizes())));
+    out.push_str(&format!(
+        "activations={}\n",
+        join(net.layers.iter().map(|l| l.activation.name()))
+    ));
+    out.push_str(&format!(
+        "steepness={}\n",
+        join(net.layers.iter().map(|l| l.steepness))
+    ));
+    for layer in &net.layers {
+        out.push_str(&format!("weights={}\n", join(layer.weights.iter())));
+        out.push_str(&format!("biases={}\n", join(layer.biases.iter())));
+    }
+    out
+}
+
+/// Serialize a fixed-point network.
+pub fn save_fixed(net: &FixedNetwork) -> String {
+    let mut out = String::new();
+    out.push_str(FIXED_MAGIC);
+    out.push('\n');
+    out.push_str(&format!("decimal_point={}\n", net.decimal_point));
+    out.push_str(&format!("num_layers={}\n", net.layers.len() + 1));
+    out.push_str(&format!("layer_sizes={}\n", join(net.layer_sizes())));
+    out.push_str(&format!(
+        "activations={}\n",
+        join(net.layers.iter().map(|l| l.activation.name()))
+    ));
+    for layer in &net.layers {
+        out.push_str(&format!("weights={}\n", join(layer.weights.iter())));
+        out.push_str(&format!("biases={}\n", join(layer.biases.iter())));
+    }
+    out
+}
+
+struct KvReader<'a> {
+    lines: std::str::Lines<'a>,
+}
+
+impl<'a> KvReader<'a> {
+    fn expect(&mut self, key: &str) -> Result<&'a str> {
+        let line = self
+            .lines
+            .next()
+            .with_context(|| format!("missing {key}"))?;
+        let (k, v) = line.split_once('=').with_context(|| format!("bad line {line:?}"))?;
+        ensure!(k == key, "expected key {key}, found {k}");
+        Ok(v)
+    }
+}
+
+fn parse_vec<T: std::str::FromStr>(s: &str) -> Result<Vec<T>>
+where
+    T::Err: std::error::Error + Send + Sync + 'static,
+{
+    s.split_whitespace()
+        .map(|v| v.parse::<T>().context("bad value"))
+        .collect()
+}
+
+/// Parse a float `.net` file.
+pub fn load_float(text: &str) -> Result<Network> {
+    let mut lines = text.lines();
+    let magic = lines.next().context("empty file")?;
+    if magic != FLOAT_MAGIC {
+        bail!("not a float FANN net (magic {magic:?})");
+    }
+    let mut r = KvReader { lines };
+    let num_layers: usize = r.expect("num_layers")?.parse()?;
+    let sizes: Vec<usize> = parse_vec(r.expect("layer_sizes")?)?;
+    ensure!(sizes.len() == num_layers, "layer_sizes length mismatch");
+    let acts: Vec<Activation> = r
+        .expect("activations")?
+        .split_whitespace()
+        .map(Activation::parse)
+        .collect::<Result<_>>()?;
+    ensure!(acts.len() == num_layers - 1, "activations length mismatch");
+    let steep: Vec<f32> = parse_vec(r.expect("steepness")?)?;
+    ensure!(steep.len() == num_layers - 1, "steepness length mismatch");
+
+    let mut layers = Vec::with_capacity(num_layers - 1);
+    for (i, w) in sizes.windows(2).enumerate() {
+        let weights: Vec<f32> = parse_vec(r.expect("weights")?)?;
+        let biases: Vec<f32> = parse_vec(r.expect("biases")?)?;
+        ensure!(weights.len() == w[0] * w[1], "weights size mismatch layer {i}");
+        ensure!(biases.len() == w[1], "biases size mismatch layer {i}");
+        layers.push(Layer {
+            n_in: w[0],
+            n_out: w[1],
+            weights,
+            biases,
+            activation: acts[i],
+            steepness: steep[i],
+        });
+    }
+    Ok(Network { layers })
+}
+
+/// Parse a fixed `.net` file.
+pub fn load_fixed(text: &str) -> Result<FixedNetwork> {
+    let mut lines = text.lines();
+    let magic = lines.next().context("empty file")?;
+    if magic != FIXED_MAGIC {
+        bail!("not a fixed FANN net (magic {magic:?})");
+    }
+    let mut r = KvReader { lines };
+    let decimal_point: u32 = r.expect("decimal_point")?.parse()?;
+    let num_layers: usize = r.expect("num_layers")?.parse()?;
+    let sizes: Vec<usize> = parse_vec(r.expect("layer_sizes")?)?;
+    ensure!(sizes.len() == num_layers, "layer_sizes length mismatch");
+    let acts: Vec<Activation> = r
+        .expect("activations")?
+        .split_whitespace()
+        .map(Activation::parse)
+        .collect::<Result<_>>()?;
+
+    let mut layers = Vec::with_capacity(num_layers - 1);
+    for (i, w) in sizes.windows(2).enumerate() {
+        let weights: Vec<i32> = parse_vec(r.expect("weights")?)?;
+        let biases: Vec<i32> = parse_vec(r.expect("biases")?)?;
+        ensure!(weights.len() == w[0] * w[1], "weights size mismatch layer {i}");
+        ensure!(biases.len() == w[1], "biases size mismatch layer {i}");
+        layers.push(FixedLayer {
+            n_in: w[0],
+            n_out: w[1],
+            weights,
+            biases,
+            activation: acts[i],
+        });
+    }
+    Ok(FixedNetwork {
+        layers,
+        decimal_point,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_net() -> Network {
+        let mut rng = Rng::new(31);
+        let mut net =
+            Network::new(&[5, 9, 4], Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, None);
+        net.layers[0].steepness = 0.5;
+        net
+    }
+
+    #[test]
+    fn float_roundtrip_preserves_outputs() {
+        let net = random_net();
+        let text = save_float(&net);
+        let back = load_float(&text).unwrap();
+        let x = [0.1f32, -0.3, 0.7, 0.0, -0.9];
+        assert_eq!(net.run(&x), back.run(&x));
+        assert_eq!(back.layers[0].steepness, 0.5);
+    }
+
+    #[test]
+    fn fixed_roundtrip_bit_exact() {
+        let net = random_net();
+        let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+        let text = save_fixed(&fixed);
+        let back = load_fixed(&text).unwrap();
+        assert_eq!(back.decimal_point, fixed.decimal_point);
+        let xq = fixed.quantize_input(&[0.1, -0.3, 0.7, 0.0, -0.9]);
+        assert_eq!(fixed.run_q(&xq), back.run_q(&xq));
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        assert!(load_float("FANN_FIX_2.1\n").is_err());
+        assert!(load_fixed("FANN_FLO_2.1\n").is_err());
+        assert!(load_float("").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_weights() {
+        let net = random_net();
+        let mut text = save_float(&net);
+        // chop the last line
+        text.truncate(text.rfind("biases=").unwrap());
+        assert!(load_float(&text).is_err());
+    }
+}

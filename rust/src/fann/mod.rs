@@ -1,0 +1,29 @@
+//! FANN substrate: a Rust reimplementation of the parts of the Fast
+//! Artificial Neural Network library the toolkit builds on.
+//!
+//! * [`net`] — the MLP representation and the reference float inference
+//!   path (Eq. 1 of the paper).
+//! * [`activation`] — FANN's activation functions and output-derivative
+//!   forms.
+//! * [`data`] — training data + the FANN `.data` text format.
+//! * [`train`] — incremental/batch backprop and iRPROP− (FANN's default).
+//! * [`cascade`] — cascade training: automatic topology growth
+//!   (`fann_cascadetrain_on_data`).
+//! * [`tune`] — FANNTool-style automatic hyper-parameter search.
+//! * [`fixed`] — `fann_save_to_fixed`: conversion to Q-format integer
+//!   networks for FPU-less targets.
+//! * [`io`] — `.net` file formats (float and fixed).
+
+pub mod activation;
+pub mod cascade;
+pub mod data;
+pub mod fixed;
+pub mod io;
+pub mod net;
+pub mod train;
+pub mod tune;
+
+pub use activation::Activation;
+pub use data::TrainData;
+pub use fixed::FixedNetwork;
+pub use net::{Layer, Network, Scratch};

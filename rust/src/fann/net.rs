@@ -1,0 +1,312 @@
+//! The MLP network representation (FANN's `struct fann`, idiomatically).
+//!
+//! A network is a chain of fully-connected layers; layer `l` maps
+//! `sizes[l]` inputs to `sizes[l+1]` outputs through a row-major weight
+//! matrix (`w[out][in]`, matching the MCU memory layout the paper streams
+//! neuron-by-neuron) plus a bias per output neuron, followed by an
+//! activation. This mirrors Eq. (1) of the paper.
+//!
+//! The forward path here is the *reference float implementation* — the
+//! deployment simulator executes the same math through the target's cycle
+//! model, and `runtime::` executes the AOT-compiled JAX version; parity
+//! tests pin all three together.
+
+use anyhow::{ensure, Result};
+
+use super::activation::Activation;
+use crate::util::rng::Rng;
+
+/// Four-lane dot product: independent accumulators expose instruction-
+/// level parallelism / SIMD to the compiler. Reassociates float adds
+/// (cross-implementation parity tests allow for it: tolerance 3e-5).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 4..a.len() {
+        tail += a[i] * b[i];
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// One fully-connected layer.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Row-major `[n_out][n_in]`: `weights[o * n_in + i]`. Row-major per
+    /// output neuron is exactly the order the paper's neuron-wise DMA
+    /// streams weights in.
+    pub weights: Vec<f32>,
+    pub biases: Vec<f32>,
+    pub activation: Activation,
+    /// Uniform activation steepness `s` (output = act(s · sum)).
+    pub steepness: f32,
+}
+
+impl Layer {
+    pub fn zeros(n_in: usize, n_out: usize, activation: Activation) -> Self {
+        Self {
+            n_in,
+            n_out,
+            weights: vec![0.0; n_in * n_out],
+            biases: vec![0.0; n_out],
+            activation,
+            steepness: 1.0,
+        }
+    }
+
+    /// Forward one sample. `input.len() == n_in`, writes `n_out` outputs.
+    pub fn forward_into(&self, input: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(input.len(), self.n_in);
+        debug_assert_eq!(out.len(), self.n_out);
+        for o in 0..self.n_out {
+            let row = &self.weights[o * self.n_in..(o + 1) * self.n_in];
+            // The dot product — the paper's Table I inner loop. Four
+            // accumulator lanes break the FMA dependency chain so LLVM
+            // can vectorize (§Perf: 1.6 -> ~4 GMAC/s host-side).
+            let acc = self.biases[o] + dot_f32(row, input);
+            out[o] = self.activation.apply(self.steepness * acc);
+        }
+    }
+
+    /// Number of weights (excluding biases).
+    pub fn num_weights(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Multiply-accumulate count of this layer.
+    pub fn macs(&self) -> usize {
+        self.n_in * self.n_out
+    }
+}
+
+/// A multi-layer perceptron.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Build a network from layer sizes `[in, h1, ..., out]` with zeroed
+    /// parameters.
+    pub fn new(sizes: &[usize], hidden_act: Activation, output_act: Activation) -> Result<Self> {
+        ensure!(sizes.len() >= 2, "need at least input and output layers");
+        ensure!(sizes.iter().all(|&s| s > 0), "zero-width layer");
+        let last = sizes.len() - 2;
+        let layers = sizes
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| {
+                Layer::zeros(w[0], w[1], if i == last { output_act } else { hidden_act })
+            })
+            .collect();
+        Ok(Self { layers })
+    }
+
+    /// FANN-style random init: weights uniform in `[-limit, +limit]`
+    /// (FANN's `fann_randomize_weights`); biases zero. The default limit
+    /// mirrors Glorot scaling per layer when `limit` is `None` (what
+    /// FANNTool's "smart" init does and what the JAX path uses).
+    pub fn randomize(&mut self, rng: &mut Rng, limit: Option<f32>) {
+        for layer in &mut self.layers {
+            let lim = limit
+                .unwrap_or_else(|| (6.0 / (layer.n_in + layer.n_out) as f32).sqrt());
+            for w in &mut layer.weights {
+                *w = rng.range_f32(-lim, lim);
+            }
+            for b in &mut layer.biases {
+                *b = 0.0;
+            }
+        }
+    }
+
+    /// Layer sizes `[in, h1, ..., out]`.
+    pub fn layer_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![self.layers[0].n_in];
+        sizes.extend(self.layers.iter().map(|l| l.n_out));
+        sizes
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.layers[0].n_in
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.layers.last().unwrap().n_out
+    }
+
+    /// Total weights (excluding biases) — `N_weights` in Eq. (2).
+    pub fn num_weights(&self) -> usize {
+        self.layers.iter().map(Layer::num_weights).sum()
+    }
+
+    /// Total neurons including the per-layer bias pseudo-neuron — the
+    /// paper's `N_neurons` convention for Eq. (2).
+    pub fn num_neurons_with_bias(&self) -> usize {
+        // input layer + its bias, then every layer's outputs + bias.
+        let sizes = self.layer_sizes();
+        sizes.iter().map(|s| s + 1).sum()
+    }
+
+    /// Total number of FANN layers (input + hidden + output) — Eq. (2)'s
+    /// `N_fann_layers`.
+    pub fn num_fann_layers(&self) -> usize {
+        self.layers.len() + 1
+    }
+
+    /// Total multiply-accumulates for one inference.
+    pub fn macs(&self) -> usize {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    /// Widest layer input length (drives the scratch buffer in Eq. (2)).
+    pub fn max_layer_width(&self) -> usize {
+        self.layer_sizes().into_iter().max().unwrap()
+    }
+
+    /// Run one sample through the network.
+    pub fn run(&self, input: &[f32]) -> Vec<f32> {
+        let mut scratch = Scratch::for_network(self);
+        self.run_with(&mut scratch, input).to_vec()
+    }
+
+    /// Run with caller-provided scratch (allocation-free hot path).
+    pub fn run_with<'s>(&self, scratch: &'s mut Scratch, input: &[f32]) -> &'s [f32] {
+        assert_eq!(input.len(), self.num_inputs());
+        scratch.a[..input.len()].copy_from_slice(input);
+        let mut cur_len = input.len();
+        let mut flip = false;
+        for layer in &self.layers {
+            let (src, dst) = if flip {
+                (&scratch.b, &mut scratch.a)
+            } else {
+                (&scratch.a, &mut scratch.b)
+            };
+            layer.forward_into(&src[..cur_len], &mut dst[..layer.n_out]);
+            cur_len = layer.n_out;
+            flip = !flip;
+        }
+        let buf = if flip { &scratch.b } else { &scratch.a };
+        &buf[..cur_len]
+    }
+
+    /// Forward pass retaining every layer's output (for backprop). Returns
+    /// `outputs[l]` = activations of layer l (l = 0 is the input itself).
+    pub fn forward_trace(&self, input: &[f32]) -> Vec<Vec<f32>> {
+        let mut outs = Vec::with_capacity(self.layers.len() + 1);
+        outs.push(input.to_vec());
+        for layer in &self.layers {
+            let mut next = vec![0.0; layer.n_out];
+            layer.forward_into(outs.last().unwrap(), &mut next);
+            outs.push(next);
+        }
+        outs
+    }
+}
+
+/// Double buffer sized for the widest layer — the software analogue of the
+/// paper's ping-pong activation buffers (`2 · L_data_buffer` in Eq. (2)).
+#[derive(Debug, Clone)]
+pub struct Scratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn for_network(net: &Network) -> Self {
+        let w = net.max_layer_width();
+        Self {
+            a: vec![0.0; w],
+            b: vec![0.0; w],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network {
+        // 2-2-1, hand-set weights: first layer identity-ish, linear acts.
+        let mut net = Network::new(&[2, 2, 1], Activation::Linear, Activation::Linear).unwrap();
+        net.layers[0].weights = vec![1.0, 0.0, 0.0, 1.0];
+        net.layers[0].biases = vec![0.5, -0.5];
+        net.layers[1].weights = vec![2.0, 3.0];
+        net.layers[1].biases = vec![1.0];
+        net
+    }
+
+    #[test]
+    fn forward_linear_math() {
+        let net = tiny();
+        // h = [x0+0.5, x1-0.5]; y = 2h0 + 3h1 + 1
+        let y = net.run(&[1.0, 2.0]);
+        assert_eq!(y, vec![2.0 * 1.5 + 3.0 * 1.5 + 1.0]);
+    }
+
+    #[test]
+    fn run_with_matches_run() {
+        let mut rng = Rng::new(5);
+        let mut net =
+            Network::new(&[5, 7, 3], Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, None);
+        let x: Vec<f32> = (0..5).map(|i| i as f32 * 0.3 - 0.7).collect();
+        let mut scratch = Scratch::for_network(&net);
+        let a = net.run(&x);
+        let b = net.run_with(&mut scratch, &x).to_vec();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn counts_match_paper_conventions() {
+        // Application A topology: 76-300-200-100-10 => 103800 MACs.
+        let net = Network::new(
+            &[76, 300, 200, 100, 10],
+            Activation::Tanh,
+            Activation::Sigmoid,
+        )
+        .unwrap();
+        assert_eq!(net.macs(), 103_800);
+        assert_eq!(net.num_weights(), 103_800);
+        assert_eq!(net.num_fann_layers(), 5);
+        assert_eq!(net.num_neurons_with_bias(), 76 + 300 + 200 + 100 + 10 + 5);
+        assert_eq!(net.max_layer_width(), 300);
+    }
+
+    #[test]
+    fn forward_trace_layers() {
+        let net = tiny();
+        let trace = net.forward_trace(&[1.0, 2.0]);
+        assert_eq!(trace.len(), 3);
+        assert_eq!(trace[0], vec![1.0, 2.0]);
+        assert_eq!(trace[1], vec![1.5, 1.5]);
+        assert_eq!(trace[2], net.run(&[1.0, 2.0]));
+    }
+
+    #[test]
+    fn rejects_degenerate_shapes() {
+        assert!(Network::new(&[3], Activation::Tanh, Activation::Sigmoid).is_err());
+        assert!(Network::new(&[3, 0, 2], Activation::Tanh, Activation::Sigmoid).is_err());
+    }
+
+    #[test]
+    fn randomize_within_limit() {
+        let mut rng = Rng::new(9);
+        let mut net = Network::new(&[4, 4, 2], Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, Some(0.1));
+        for l in &net.layers {
+            assert!(l.weights.iter().all(|w| w.abs() <= 0.1));
+            assert!(l.biases.iter().all(|&b| b == 0.0));
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Training algorithms for the FANN substrate.
+//!
+//! FANN ships four trainers; we implement the two the toolkit's users
+//! actually rely on (and that the paper's showcases were trained with):
+//!
+//! * [`backprop`] — `FANN_TRAIN_INCREMENTAL` (per-sample SGD + momentum)
+//!   and `FANN_TRAIN_BATCH` (full-batch gradient descent).
+//! * [`rprop`] — `FANN_TRAIN_RPROP`, FANN's default: iRPROP− with
+//!   per-weight adaptive step sizes.
+//!
+//! The shared gradient machinery lives here: MSE loss (FANN's error
+//! measure) and a backward pass that mirrors the L1 Pallas backward
+//! kernels (activation derivative from the *output*).
+
+pub mod backprop;
+pub mod rprop;
+
+use super::data::TrainData;
+use super::net::Network;
+
+/// Per-layer gradients, same shapes as the layer parameters.
+#[derive(Debug, Clone)]
+pub struct Gradients {
+    pub d_weights: Vec<Vec<f32>>,
+    pub d_biases: Vec<Vec<f32>>,
+}
+
+impl Gradients {
+    pub fn zeros_like(net: &Network) -> Self {
+        Self {
+            d_weights: net.layers.iter().map(|l| vec![0.0; l.weights.len()]).collect(),
+            d_biases: net.layers.iter().map(|l| vec![0.0; l.biases.len()]).collect(),
+        }
+    }
+
+    pub fn clear(&mut self) {
+        for g in &mut self.d_weights {
+            g.iter_mut().for_each(|v| *v = 0.0);
+        }
+        for g in &mut self.d_biases {
+            g.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for g in &mut self.d_weights {
+            g.iter_mut().for_each(|v| *v *= s);
+        }
+        for g in &mut self.d_biases {
+            g.iter_mut().for_each(|v| *v *= s);
+        }
+    }
+}
+
+/// Mean squared error of the network over a dataset (FANN's `fann_get_MSE`
+/// convention: mean over samples *and* output units).
+pub fn mse(net: &Network, data: &TrainData) -> f32 {
+    let mut acc = 0.0f64;
+    let mut scratch = super::net::Scratch::for_network(net);
+    for i in 0..data.len() {
+        let out = net.run_with(&mut scratch, data.input(i));
+        for (o, t) in out.iter().zip(data.target(i)) {
+            let e = (o - t) as f64;
+            acc += e * e;
+        }
+    }
+    (acc / (data.len() * net.num_outputs()) as f64) as f32
+}
+
+/// Classification accuracy (argmax for multi-output, 0.5 threshold for
+/// single-output nets).
+pub fn accuracy(net: &Network, data: &TrainData) -> f32 {
+    let mut correct = 0usize;
+    let mut scratch = super::net::Scratch::for_network(net);
+    for i in 0..data.len() {
+        let out = net.run_with(&mut scratch, data.input(i));
+        let pred = if net.num_outputs() == 1 {
+            usize::from(out[0] >= 0.5)
+        } else {
+            crate::util::argmax(out)
+        };
+        if pred == data.label(i) {
+            correct += 1;
+        }
+    }
+    correct as f32 / data.len() as f32
+}
+
+/// Accumulate the gradient of the per-sample MSE
+/// `sum_o (out_o - target_o)^2 / num_outputs` into `grads`; returns the
+/// sample's squared error. The backward recurrence matches
+/// `kernels/matvec.py::_dense_layer_bwd`.
+pub fn accumulate_gradient(
+    net: &Network,
+    input: &[f32],
+    target: &[f32],
+    grads: &mut Gradients,
+) -> f32 {
+    let trace = net.forward_trace(input);
+    let out = trace.last().unwrap();
+    let n_out = net.num_outputs();
+
+    // dL/dy at the output (L = mean over outputs of squared error).
+    let mut delta: Vec<f32> = out
+        .iter()
+        .zip(target)
+        .map(|(o, t)| 2.0 * (o - t) / n_out as f32)
+        .collect();
+    let sq_err: f32 = out
+        .iter()
+        .zip(target)
+        .map(|(o, t)| (o - t) * (o - t))
+        .sum();
+
+    for (l, layer) in net.layers.iter().enumerate().rev() {
+        let y = &trace[l + 1];
+        let x = &trace[l];
+        // dz = dy ⊙ act'(y), scaled by steepness (y = act(s·z)).
+        let dz: Vec<f32> = delta
+            .iter()
+            .zip(y)
+            .map(|(d, &yy)| d * layer.activation.grad_from_output(yy) * layer.steepness)
+            .collect();
+        let dw = &mut grads.d_weights[l];
+        for o in 0..layer.n_out {
+            let g = dz[o];
+            let row = &mut dw[o * layer.n_in..(o + 1) * layer.n_in];
+            for (wi, xi) in row.iter_mut().zip(x) {
+                *wi += g * xi;
+            }
+            grads.d_biases[l][o] += g;
+        }
+        if l > 0 {
+            // dx = W^T dz.
+            let mut dx = vec![0.0f32; layer.n_in];
+            for o in 0..layer.n_out {
+                let g = dz[o];
+                let row = &layer.weights[o * layer.n_in..(o + 1) * layer.n_in];
+                for (dxi, wi) in dx.iter_mut().zip(row) {
+                    *dxi += g * wi;
+                }
+            }
+            delta = dx;
+        }
+    }
+    sq_err
+}
+
+/// Numerical-vs-analytic gradient check used by the test suite.
+#[cfg(test)]
+pub(crate) fn numeric_gradient(
+    net: &Network,
+    input: &[f32],
+    target: &[f32],
+    layer: usize,
+    idx: usize,
+    bias: bool,
+    eps: f32,
+) -> f32 {
+    let loss = |net: &Network| -> f32 {
+        let out = net.run(input);
+        out.iter()
+            .zip(target)
+            .map(|(o, t)| (o - t) * (o - t))
+            .sum::<f32>()
+            / net.num_outputs() as f32
+    };
+    let mut plus = net.clone();
+    let mut minus = net.clone();
+    if bias {
+        plus.layers[layer].biases[idx] += eps;
+        minus.layers[layer].biases[idx] -= eps;
+    } else {
+        plus.layers[layer].weights[idx] += eps;
+        minus.layers[layer].weights[idx] -= eps;
+    }
+    (loss(&plus) - loss(&minus)) / (2.0 * eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fann::activation::Activation;
+    use crate::util::rng::Rng;
+
+    fn xor_data() -> TrainData {
+        let mut d = TrainData::new(2, 1);
+        d.push(&[0.0, 0.0], &[0.0]);
+        d.push(&[0.0, 1.0], &[1.0]);
+        d.push(&[1.0, 0.0], &[1.0]);
+        d.push(&[1.0, 1.0], &[0.0]);
+        d
+    }
+
+    #[test]
+    fn gradient_matches_numeric() {
+        let mut rng = Rng::new(17);
+        let mut net =
+            Network::new(&[3, 5, 2], Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, None);
+        let input = [0.3, -0.8, 0.5];
+        let target = [1.0, 0.0];
+
+        let mut grads = Gradients::zeros_like(&net);
+        accumulate_gradient(&net, &input, &target, &mut grads);
+
+        for (l, layer) in net.layers.iter().enumerate() {
+            for idx in [0, layer.weights.len() / 2, layer.weights.len() - 1] {
+                let num = numeric_gradient(&net, &input, &target, l, idx, false, 1e-3);
+                let ana = grads.d_weights[l][idx];
+                assert!(
+                    (num - ana).abs() < 2e-3,
+                    "layer {l} w[{idx}]: numeric {num} vs analytic {ana}"
+                );
+            }
+            let num = numeric_gradient(&net, &input, &target, l, 0, true, 1e-3);
+            let ana = grads.d_biases[l][0];
+            assert!((num - ana).abs() < 2e-3, "layer {l} bias: {num} vs {ana}");
+        }
+    }
+
+    #[test]
+    fn mse_zero_for_perfect_net() {
+        let mut net = Network::new(&[1, 1], Activation::Linear, Activation::Linear).unwrap();
+        net.layers[0].weights = vec![1.0];
+        let mut d = TrainData::new(1, 1);
+        d.push(&[0.25], &[0.25]);
+        assert_eq!(mse(&net, &d), 0.0);
+    }
+
+    #[test]
+    fn accuracy_on_trivial_classifier() {
+        // Single output, w = 1, b = 0, sigmoid: predicts 1 iff x > 0.
+        let mut net = Network::new(&[1, 1], Activation::Linear, Activation::Sigmoid).unwrap();
+        net.layers[0].weights = vec![10.0];
+        let mut d = TrainData::new(1, 1);
+        d.push(&[1.0], &[1.0]);
+        d.push(&[-1.0], &[0.0]);
+        d.push(&[2.0], &[0.0]); // deliberately mislabeled
+        let acc = accuracy(&net, &d);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn xor_mse_starts_high() {
+        let mut rng = Rng::new(3);
+        let mut net = Network::new(&[2, 4, 1], Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, None);
+        assert!(mse(&net, &xor_data()) > 0.05);
+    }
+}

@@ -1,0 +1,194 @@
+//! iRPROP− — FANN's default trainer (`FANN_TRAIN_RPROP`).
+//!
+//! Resilient backpropagation with per-weight adaptive step sizes
+//! (Igel & Hüsken's iRPROP− variant, which FANN implements): only the
+//! *sign* of the batch gradient is used; on a sign change the step is
+//! shrunk and the gradient zeroed (no weight revert). Constants follow
+//! FANN's defaults.
+
+use super::{accumulate_gradient, Gradients};
+use crate::fann::data::TrainData;
+use crate::fann::net::Network;
+
+/// iRPROP− hyper-parameters (FANN defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct RpropConfig {
+    pub increase_factor: f32,
+    pub decrease_factor: f32,
+    pub delta_min: f32,
+    pub delta_max: f32,
+    pub delta_zero: f32,
+}
+
+impl Default for RpropConfig {
+    fn default() -> Self {
+        Self {
+            increase_factor: 1.2,
+            decrease_factor: 0.5,
+            delta_min: 0.0,
+            delta_max: 50.0,
+            delta_zero: 0.1,
+        }
+    }
+}
+
+/// iRPROP− trainer state: previous gradients + per-parameter step sizes.
+#[derive(Debug)]
+pub struct Rprop {
+    pub config: RpropConfig,
+    grads: Gradients,
+    prev_grads: Gradients,
+    steps: Gradients,
+}
+
+impl Rprop {
+    pub fn new(net: &Network, config: RpropConfig) -> Self {
+        let mut steps = Gradients::zeros_like(net);
+        for g in steps.d_weights.iter_mut().chain(steps.d_biases.iter_mut()) {
+            g.iter_mut().for_each(|v| *v = config.delta_zero);
+        }
+        Self {
+            config,
+            grads: Gradients::zeros_like(net),
+            prev_grads: Gradients::zeros_like(net),
+            steps,
+        }
+    }
+
+    /// One full-batch iRPROP− epoch; returns the epoch MSE.
+    pub fn train_epoch(&mut self, net: &mut Network, data: &TrainData) -> f32 {
+        self.grads.clear();
+        let mut sq_sum = 0.0f64;
+        for i in 0..data.len() {
+            sq_sum +=
+                accumulate_gradient(net, data.input(i), data.target(i), &mut self.grads) as f64;
+        }
+
+        let cfg = self.config;
+        let update = |w: &mut f32, g: &mut f32, pg: &mut f32, step: &mut f32| {
+            let sign = *g * *pg;
+            if sign > 0.0 {
+                *step = (*step * cfg.increase_factor).min(cfg.delta_max);
+            } else if sign < 0.0 {
+                *step = (*step * cfg.decrease_factor).max(cfg.delta_min);
+                // iRPROP−: forget the gradient, skip the update this epoch.
+                *g = 0.0;
+            }
+            if *g > 0.0 {
+                *w -= *step;
+            } else if *g < 0.0 {
+                *w += *step;
+            }
+            *pg = *g;
+        };
+
+        for (l, layer) in net.layers.iter_mut().enumerate() {
+            for (j, w) in layer.weights.iter_mut().enumerate() {
+                update(
+                    w,
+                    &mut self.grads.d_weights[l][j],
+                    &mut self.prev_grads.d_weights[l][j],
+                    &mut self.steps.d_weights[l][j],
+                );
+            }
+            for (j, b) in layer.biases.iter_mut().enumerate() {
+                update(
+                    b,
+                    &mut self.grads.d_biases[l][j],
+                    &mut self.prev_grads.d_biases[l][j],
+                    &mut self.steps.d_biases[l][j],
+                );
+            }
+        }
+        (sq_sum / (data.len() * net.num_outputs()) as f64) as f32
+    }
+
+    /// Train until MSE <= `desired_error` or `max_epochs`, returning the
+    /// per-epoch MSE curve (mirrors `fann_train_on_data`).
+    pub fn train_until(
+        &mut self,
+        net: &mut Network,
+        data: &TrainData,
+        max_epochs: usize,
+        desired_error: f32,
+    ) -> Vec<f32> {
+        let mut curve = Vec::with_capacity(max_epochs);
+        for _ in 0..max_epochs {
+            let e = self.train_epoch(net, data);
+            curve.push(e);
+            if e <= desired_error {
+                break;
+            }
+        }
+        curve
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fann::activation::Activation;
+    use crate::fann::train::mse;
+    use crate::util::rng::Rng;
+
+    fn xor_data() -> TrainData {
+        let mut d = TrainData::new(2, 1);
+        d.push(&[0.0, 0.0], &[0.0]);
+        d.push(&[0.0, 1.0], &[1.0]);
+        d.push(&[1.0, 0.0], &[1.0]);
+        d.push(&[1.0, 1.0], &[0.0]);
+        d
+    }
+
+    #[test]
+    fn rprop_learns_xor_fast() {
+        let mut rng = Rng::new(7);
+        let mut net = Network::new(&[2, 4, 1], Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, None);
+        let data = xor_data();
+        let mut trainer = Rprop::new(&net, RpropConfig::default());
+        let curve = trainer.train_until(&mut net, &data, 300, 0.001);
+        assert!(
+            *curve.last().unwrap() <= 0.001,
+            "rprop failed to converge: {:?}",
+            &curve[curve.len().saturating_sub(5)..]
+        );
+        assert!(curve.len() < 300);
+    }
+
+    #[test]
+    fn steps_stay_within_bounds() {
+        let mut rng = Rng::new(8);
+        let mut net = Network::new(&[2, 3, 1], Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, None);
+        let data = xor_data();
+        let cfg = RpropConfig::default();
+        let mut trainer = Rprop::new(&net, cfg);
+        for _ in 0..100 {
+            trainer.train_epoch(&mut net, &data);
+        }
+        for s in trainer
+            .steps
+            .d_weights
+            .iter()
+            .chain(trainer.steps.d_biases.iter())
+            .flatten()
+        {
+            assert!(*s >= cfg.delta_min && *s <= cfg.delta_max);
+        }
+    }
+
+    #[test]
+    fn rprop_beats_initial_mse() {
+        let mut rng = Rng::new(9);
+        let mut net = Network::new(&[2, 6, 1], Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, None);
+        let data = xor_data();
+        let before = mse(&net, &data);
+        let mut trainer = Rprop::new(&net, RpropConfig::default());
+        for _ in 0..50 {
+            trainer.train_epoch(&mut net, &data);
+        }
+        assert!(mse(&net, &data) < before);
+    }
+}

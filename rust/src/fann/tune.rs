@@ -1,0 +1,237 @@
+//! FANNTool-style automatic hyper-parameter selection (paper Sec. II-B:
+//! "fully-automated selection of the network's hyperparameters by
+//! iteratively testing all the available options present in FANN").
+//!
+//! Grid search over hidden width, activation, and trainer with a
+//! train/validation split; optionally constrained by a deployment
+//! memory budget so the winner is guaranteed to fit the target MCU —
+//! the toolkit-specific twist on FANNTool.
+
+use anyhow::Result;
+
+use super::activation::Activation;
+use super::data::TrainData;
+use super::net::Network;
+use super::train::backprop::{Batch, BackpropConfig, Incremental};
+use super::train::rprop::{Rprop, RpropConfig};
+use super::train::{accuracy, mse};
+use crate::deploy::{estimate_memory, NetShape};
+use crate::util::rng::Rng;
+
+/// Trainer choices the search iterates over (FANN's training algorithms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainerKind {
+    Rprop,
+    Batch,
+    Incremental,
+}
+
+impl TrainerKind {
+    pub const ALL: [TrainerKind; 3] =
+        [TrainerKind::Rprop, TrainerKind::Batch, TrainerKind::Incremental];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TrainerKind::Rprop => "rprop",
+            TrainerKind::Batch => "batch",
+            TrainerKind::Incremental => "incremental",
+        }
+    }
+}
+
+/// Search space definition.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Candidate hidden-layer widths (single hidden layer, FANNTool's
+    /// default exploration shape).
+    pub hidden_widths: Vec<usize>,
+    pub hidden_activations: Vec<Activation>,
+    pub trainers: Vec<TrainerKind>,
+    pub epochs: usize,
+    /// Optional Eq. (2) memory cap in bytes (configurations whose
+    /// estimate exceeds it are skipped).
+    pub memory_budget: Option<usize>,
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        Self {
+            hidden_widths: vec![4, 8, 16, 32],
+            hidden_activations: vec![Activation::Tanh, Activation::Sigmoid],
+            trainers: vec![TrainerKind::Rprop, TrainerKind::Batch],
+            epochs: 60,
+            memory_budget: None,
+        }
+    }
+}
+
+/// One evaluated configuration.
+#[derive(Debug, Clone)]
+pub struct TrialResult {
+    pub hidden: usize,
+    pub activation: Activation,
+    pub trainer: TrainerKind,
+    pub val_mse: f32,
+    pub val_accuracy: f32,
+    pub est_memory: usize,
+}
+
+/// Search outcome: best network + the full trial table.
+pub struct TuneResult {
+    pub best: Network,
+    pub best_trial: TrialResult,
+    pub trials: Vec<TrialResult>,
+}
+
+fn train_one(
+    kind: TrainerKind,
+    net: &mut Network,
+    data: &TrainData,
+    epochs: usize,
+) {
+    match kind {
+        TrainerKind::Rprop => {
+            let mut t = Rprop::new(net, RpropConfig::default());
+            for _ in 0..epochs {
+                t.train_epoch(net, data);
+            }
+        }
+        TrainerKind::Batch => {
+            let mut t = Batch::new(net, BackpropConfig { learning_rate: 0.3, momentum: 0.0 });
+            for _ in 0..epochs {
+                t.train_epoch(net, data);
+            }
+        }
+        TrainerKind::Incremental => {
+            let mut t = Incremental::new(
+                net,
+                BackpropConfig { learning_rate: 0.1, momentum: 0.1 },
+            );
+            for _ in 0..epochs {
+                t.train_epoch(net, data);
+            }
+        }
+    }
+}
+
+/// Run the grid search. `data` is split 80/20 into train/validation;
+/// selection is by validation MSE (FANNTool's criterion).
+pub fn tune(data: &TrainData, space: &SearchSpace, seed: u64) -> Result<TuneResult> {
+    let (train, val) = data.split(0.8);
+    let mut trials = Vec::new();
+    let mut best: Option<(Network, TrialResult)> = None;
+
+    for &hidden in &space.hidden_widths {
+        for &act in &space.hidden_activations {
+            let shape = NetShape::new(&[data.num_inputs, hidden, data.num_outputs]);
+            let est = estimate_memory(&shape, crate::targets::DataType::Fixed);
+            if let Some(budget) = space.memory_budget {
+                if est > budget {
+                    continue;
+                }
+            }
+            for &trainer in &space.trainers {
+                let mut rng = Rng::new(seed ^ (hidden as u64) << 8 ^ trainer as u64);
+                let mut net = Network::new(
+                    &[data.num_inputs, hidden, data.num_outputs],
+                    act,
+                    Activation::Sigmoid,
+                )?;
+                net.randomize(&mut rng, None);
+                train_one(trainer, &mut net, &train, space.epochs);
+                let trial = TrialResult {
+                    hidden,
+                    activation: act,
+                    trainer,
+                    val_mse: mse(&net, &val),
+                    val_accuracy: accuracy(&net, &val),
+                    est_memory: est,
+                };
+                let better = match &best {
+                    None => true,
+                    Some((_, b)) => trial.val_mse < b.val_mse,
+                };
+                if better {
+                    best = Some((net, trial.clone()));
+                }
+                trials.push(trial);
+            }
+        }
+    }
+
+    let (best, best_trial) =
+        best.ok_or_else(|| anyhow::anyhow!("no configuration fits the memory budget"))?;
+    Ok(TuneResult {
+        best,
+        best_trial,
+        trials,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets;
+
+    #[test]
+    fn tune_finds_working_activity_config() {
+        let mut data = datasets::activity(3);
+        data.normalize_inputs();
+        let space = SearchSpace {
+            hidden_widths: vec![4, 6],
+            hidden_activations: vec![Activation::Tanh],
+            trainers: vec![TrainerKind::Rprop],
+            epochs: 60,
+            memory_budget: None,
+        };
+        let result = tune(&data, &space, 1).unwrap();
+        assert_eq!(result.trials.len(), 2);
+        assert!(result.best_trial.val_accuracy > 0.8, "{:?}", result.best_trial);
+    }
+
+    #[test]
+    fn memory_budget_filters_configs() {
+        let data = datasets::xor();
+        let space = SearchSpace {
+            hidden_widths: vec![2, 4, 4096],
+            hidden_activations: vec![Activation::Tanh],
+            trainers: vec![TrainerKind::Batch],
+            epochs: 5,
+            memory_budget: Some(8 * 1024),
+        };
+        let result = tune(&data, &space, 2).unwrap();
+        // 4096-wide config exceeds 8 kB and is skipped.
+        assert_eq!(result.trials.len(), 2);
+        assert!(result.trials.iter().all(|t| t.est_memory <= 8 * 1024));
+    }
+
+    #[test]
+    fn impossible_budget_errors() {
+        let data = datasets::xor();
+        let space = SearchSpace {
+            hidden_widths: vec![64],
+            memory_budget: Some(16),
+            ..SearchSpace::default()
+        };
+        assert!(tune(&data, &space, 3).is_err());
+    }
+
+    #[test]
+    fn best_trial_is_min_mse() {
+        let data = datasets::xor();
+        let space = SearchSpace {
+            hidden_widths: vec![2, 4, 8],
+            hidden_activations: vec![Activation::Tanh],
+            trainers: vec![TrainerKind::Rprop],
+            epochs: 100,
+            memory_budget: None,
+        };
+        let result = tune(&data, &space, 4).unwrap();
+        let min = result
+            .trials
+            .iter()
+            .map(|t| t.val_mse)
+            .fold(f32::INFINITY, f32::min);
+        assert_eq!(result.best_trial.val_mse, min);
+    }
+}

@@ -1,0 +1,38 @@
+//! # fann-on-mcu — reproduction of "FANN-on-MCU" (Wang et al., 2019)
+//!
+//! A deployment toolkit that takes multi-layer perceptrons trained with a
+//! FANN-compatible library and deploys them, with memory-hierarchy-aware
+//! placement and parallelization, onto modeled ARM Cortex-M and RISC-V
+//! PULP (Mr. Wolf) targets.
+//!
+//! The crate is the L3 (Rust) layer of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the per-layer
+//!   dense hot-spot, forward + backward, float and Q-format fixed point.
+//! * **L2** — JAX model (`python/compile/model.py`): MLP forward / SGD
+//!   training step, AOT-lowered to HLO text in `artifacts/`.
+//! * **L3** — this crate: the FANN substrate ([`fann`]), the deployment
+//!   planner ([`deploy`]), cycle/energy MCU models ([`targets`]), the
+//!   execution simulator ([`simulator`]), C code generation ([`codegen`]),
+//!   the PJRT runtime that loads the AOT artifacts ([`runtime`]), dataset
+//!   generators ([`datasets`]), the paper's application showcases
+//!   ([`apps`]), and the benchmark harness ([`bench`]).
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `fann-on-mcu` binary is self-contained.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every figure/table of the paper to a bench target.
+
+pub mod apps;
+pub mod bench;
+pub mod cli;
+pub mod codegen;
+pub mod datasets;
+pub mod deploy;
+pub mod fann;
+pub mod quantize;
+pub mod runtime;
+pub mod simulator;
+pub mod targets;
+pub mod util;

@@ -1,0 +1,273 @@
+//! `fann-on-mcu` — the toolkit CLI.
+//!
+//! Commands:
+//!
+//! * `train`       — train an application showcase natively (iRPROP−),
+//!                   save float + fixed `.net` files, report accuracy.
+//! * `train-pjrt`  — train via the AOT-compiled JAX step (PJRT runtime).
+//! * `deploy`      — plan placement + generate C code for a target.
+//! * `run`         — simulate one classification on a target.
+//! * `info`        — list applications, targets, artifact status.
+//! * `help`        — this text.
+//!
+//! Examples:
+//!
+//! ```text
+//! fann-on-mcu train --app fall --seed 7 --out /tmp/fall
+//! fann-on-mcu deploy --net /tmp/fall.net --target cluster8 --out /tmp/gen
+//! fann-on-mcu run --net /tmp/fall.net --target m4 --input "0.1,0.2,..."
+//! fann-on-mcu train-pjrt --topo xor --steps 400
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use fann_on_mcu::apps::{self, AppSpec};
+use fann_on_mcu::cli::{parse_csv_f32, parse_target, Args};
+use fann_on_mcu::codegen::{self, NetSource};
+use fann_on_mcu::deploy::{self, NetShape};
+use fann_on_mcu::fann::{io, FixedNetwork};
+use fann_on_mcu::runtime::{ArtifactDir, PjrtTrainer, Runtime};
+use fann_on_mcu::simulator::{self, CostOptions, Executable};
+use fann_on_mcu::targets::DataType;
+use fann_on_mcu::util::rng::Rng;
+use fann_on_mcu::util::table::{fmt_energy, fmt_time, Table};
+
+fn app_by_name(name: &str) -> Result<&'static AppSpec> {
+    for app in apps::ALL_APPS {
+        if app.name == name {
+            return Ok(app);
+        }
+    }
+    bail!("unknown app {name:?} (known: gesture, fall, activity)")
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.expect_only(&["app", "seed", "out"])?;
+    let spec = app_by_name(args.get("app").context("--app required")?)?;
+    let seed = args.get_u64("seed", 7)?;
+    println!("training {} (topology {:?}, seed {seed})", spec.title, spec.sizes);
+    let trained = apps::train_app(spec, seed)?;
+    println!(
+        "  epochs: {}   final MSE: {:.5}",
+        trained.mse_curve.len(),
+        trained.mse_curve.last().unwrap()
+    );
+    println!(
+        "  train accuracy: {:.2}%   test accuracy: {:.2}% (paper: {:.2}%)",
+        trained.train_accuracy * 100.0,
+        trained.test_accuracy * 100.0,
+        spec.paper_accuracy * 100.0
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(format!("{out}.net"), io::save_float(&trained.net))?;
+        std::fs::write(format!("{out}_fixed.net"), io::save_fixed(&trained.fixed))?;
+        println!("  wrote {out}.net and {out}_fixed.net");
+    }
+    Ok(())
+}
+
+fn cmd_train_pjrt(args: &Args) -> Result<()> {
+    args.expect_only(&["topo", "steps", "seed", "artifacts"])?;
+    let name = args.get("topo").context("--topo required")?;
+    let steps = args.get_usize("steps", 300)?;
+    let seed = args.get_u64("seed", 7)?;
+    let art = ArtifactDir::locate(args.get("artifacts").map(Path::new))?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut trainer = PjrtTrainer::new(&rt, &art, name, seed)?;
+
+    let mut data = match name {
+        "xor" => fann_on_mcu::datasets::xor(),
+        "gesture" | "fall" | "activity" => {
+            let mut d = app_by_name(name)?.dataset(seed);
+            d.normalize_inputs();
+            d
+        }
+        other => bail!("no dataset for topology {other:?}"),
+    };
+    if data.len() < trainer.manifest.train_batch {
+        // tiny datasets (xor): oversample to one batch
+        let orig = data.len();
+        let mut i = 0;
+        while data.len() < trainer.manifest.train_batch {
+            let x = data.input(i % orig).to_vec();
+            let y = data.target(i % orig).to_vec();
+            data.push(&x, &y);
+            i += 1;
+        }
+    }
+
+    let mut rng = Rng::new(seed ^ 0x51);
+    let curve = trainer.train(&data, steps, &mut rng)?;
+    for (i, loss) in curve.iter().enumerate() {
+        if i % (steps / 10).max(1) == 0 || i + 1 == curve.len() {
+            println!("  step {i:>5}: loss {loss:.6}");
+        }
+    }
+    println!("  accuracy: {:.2}%", trainer.accuracy(&data)? * 100.0);
+    Ok(())
+}
+
+fn load_any_net(path: &str) -> Result<(Option<fann_on_mcu::fann::Network>, Option<FixedNetwork>)> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    if text.starts_with("FANN_FLO") {
+        Ok((Some(io::load_float(&text)?), None))
+    } else if text.starts_with("FANN_FIX") {
+        Ok((None, Some(io::load_fixed(&text)?)))
+    } else {
+        bail!("{path}: not a FANN .net file")
+    }
+}
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    args.expect_only(&["net", "target", "out", "dtype"])?;
+    let target = parse_target(args.get("target").context("--target required")?)?;
+    let (fnet, qnet) = load_any_net(args.get("net").context("--net required")?)?;
+
+    let want_fixed = args.get("dtype") == Some("fixed") || !target.supports_float();
+    let (shape, dtype, source): (NetShape, DataType, NetSource) = match (&fnet, &qnet, want_fixed) {
+        (Some(n), _, false) => (NetShape::from(n), DataType::Float32, NetSource::Float(n)),
+        (_, Some(q), _) => (NetShape::from(q), DataType::Fixed, NetSource::Fixed(q)),
+        (Some(_), None, true) => {
+            bail!("target needs fixed point: pass the *_fixed.net produced by `train --out`")
+        }
+        _ => unreachable!(),
+    };
+
+    let plan = deploy::plan(&shape, target, dtype)?;
+    println!("deployment plan for {}:", target.label());
+    println!("  estimated memory (Eq. 2): {} bytes", plan.est_memory_bytes);
+    println!("  placement: {}", plan.region.name());
+    if let Some(dma) = plan.dma {
+        println!("  DMA strategy: {dma:?}");
+    }
+    if !plan.fits() {
+        bail!("network does not fit this target");
+    }
+    let code = codegen::generate(&plan, source);
+    match args.get("out") {
+        Some(dir) => {
+            std::fs::create_dir_all(dir)?;
+            for (name, contents) in &code.files {
+                std::fs::write(Path::new(dir).join(name), contents)?;
+                println!("  wrote {dir}/{name}");
+            }
+        }
+        None => {
+            println!(
+                "  generated {} files ({} bytes); pass --out DIR to write them",
+                code.files.len(),
+                code.total_bytes()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    args.expect_only(&["net", "target", "input", "classifications"])?;
+    let target = parse_target(args.get("target").context("--target required")?)?;
+    let (fnet, qnet) = load_any_net(args.get("net").context("--net required")?)?;
+    let input = parse_csv_f32(args.get("input").context("--input required")?)?;
+    let n_class = args.get_u64("classifications", 1)?;
+
+    let (plan, report) = match (&fnet, &qnet, target.supports_float()) {
+        (Some(n), _, true) => {
+            let plan = deploy::plan(&NetShape::from(n), target, DataType::Float32)?;
+            let r =
+                simulator::simulate(&plan, &Executable::Float(n), &input, CostOptions::default())?;
+            (plan, r)
+        }
+        (_, Some(q), _) => {
+            let plan = deploy::plan(&NetShape::from(q), target, DataType::Fixed)?;
+            let r =
+                simulator::simulate(&plan, &Executable::Fixed(q), &input, CostOptions::default())?;
+            (plan, r)
+        }
+        (Some(_), None, false) => bail!("{} needs a fixed-point net", target.label()),
+        _ => unreachable!(),
+    };
+
+    println!("outputs: {:?}", report.outputs);
+    println!("predicted class: {}", fann_on_mcu::util::argmax(&report.outputs));
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["placement".to_string(), plan.region.name().to_string()])
+        .row(vec![
+            "cycles".to_string(),
+            format!("{:.0}", report.breakdown.total()),
+        ])
+        .row(vec!["compute time".to_string(), fmt_time(report.seconds)])
+        .row(vec![
+            "active power".to_string(),
+            format!("{:.2} mW", report.active_mw),
+        ])
+        .row(vec![
+            "energy/classification".to_string(),
+            fmt_energy(report.energy_uj * 1e-6),
+        ])
+        .row(vec![
+            format!("amortized time ({n_class} classifications/activation)"),
+            fmt_time(report.amortized_seconds(plan.target, n_class)),
+        ])
+        .row(vec![
+            "amortized energy".to_string(),
+            fmt_energy(report.amortized_energy_uj(plan.target, n_class) * 1e-6),
+        ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.expect_only(&["artifacts"])?;
+    println!("applications:");
+    for app in apps::ALL_APPS {
+        println!(
+            "  {:<10} {:<38} topology {:?} ({} MACs)",
+            app.name,
+            app.title,
+            app.sizes,
+            app.macs()
+        );
+    }
+    println!("\ntargets: m4 (nRF52832), m4-stm32 (STM32L475VG), m0, ibex, cluster1..cluster8");
+    match ArtifactDir::locate(args.get("artifacts").map(Path::new)) {
+        Ok(a) => println!("\nartifacts: {}", a.root.display()),
+        Err(_) => println!("\nartifacts: NOT BUILT (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+fann-on-mcu — FANN-on-MCU reproduction toolkit
+
+USAGE: fann-on-mcu <command> [--flag value]...
+
+COMMANDS:
+  train       --app <gesture|fall|activity> [--seed N] [--out PREFIX]
+  train-pjrt  --topo <xor|gesture|fall|activity> [--steps N] [--seed N]
+  deploy      --net FILE.net --target T [--out DIR] [--dtype fixed]
+  run         --net FILE.net --target T --input \"v1,v2,...\" [--classifications N]
+  info        show applications, targets, artifact status
+  help        this text
+
+TARGETS: m4, m4-stm32, m0, ibex, cluster1..cluster8
+BENCHES: cargo bench (one binary per paper figure/table; see DESIGN.md)
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "train-pjrt" => cmd_train_pjrt(&args),
+        "deploy" => cmd_deploy(&args),
+        "run" => cmd_run(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}

@@ -1,0 +1,283 @@
+//! Q-format fixed-point arithmetic — the FPU-less inference path.
+//!
+//! Semantics are FANN's (`fann_mult` et al.) and are implemented
+//! identically in three places, pinned together by parity tests:
+//!
+//! * `python/compile/kernels/ref.py` (numpy oracle),
+//! * `python/compile/kernels/fixedpoint.py` (Pallas kernel),
+//! * this module (what the deployment simulator executes).
+//!
+//! A value `v` is stored as `round(v * 2^dec)` in an `i32`; `dec` (the
+//! *decimal point*) is network-wide, chosen by [`choose_decimal_point`].
+//! Multiplications widen to `i64`, shift right arithmetically by `dec`
+//! per product, accumulate in `i64`, and saturate to `i32` before the
+//! step-linear activation (Table I right column: `mul / sra / add`).
+
+use crate::fann::activation::Activation;
+
+pub const I32_MIN: i64 = i32::MIN as i64;
+pub const I32_MAX: i64 = i32::MAX as i64;
+
+/// Saturate an `i64` accumulator to the `i32` range.
+#[inline]
+pub fn sat_i32(x: i64) -> i64 {
+    x.clamp(I32_MIN, I32_MAX)
+}
+
+/// FANN's `fann_mult`: widen, multiply, arithmetic shift right by `dec`.
+#[inline]
+pub fn qmul(a: i32, b: i32, dec: u32) -> i64 {
+    ((a as i64) * (b as i64)) >> dec
+}
+
+/// Quantize a float to Q(dec) with round-to-nearest, saturating.
+#[inline]
+pub fn quantize(v: f32, dec: u32) -> i32 {
+    let scaled = (v as f64) * (1i64 << dec) as f64;
+    sat_i32(scaled.round() as i64) as i32
+}
+
+/// Dequantize Q(dec) back to float.
+#[inline]
+pub fn dequantize(q: i64, dec: u32) -> f32 {
+    (q as f64 / (1i64 << dec) as f64) as f32
+}
+
+/// Integer piecewise-linear interpolation over a breakpoint table,
+/// mirroring `ref.py::_interp_table_q` (floor semantics; numerators are
+/// non-negative inside segments so trunc == floor).
+fn interp_table_q(x: i64, xs: &[i64], vs: &[i64], lo: i64, hi: i64) -> i64 {
+    if x <= xs[0] {
+        return lo;
+    }
+    if x >= xs[xs.len() - 1] {
+        return hi;
+    }
+    // Find the segment: xs is small (<= 9 entries), linear scan is fine
+    // and matches the MCU's compare-chain implementation.
+    for i in 0..xs.len() - 1 {
+        if x == xs[i] {
+            // Interior breakpoint hit exactly.
+            return vs[i];
+        }
+        if x > xs[i] && x < xs[i + 1] {
+            let dxs = xs[i + 1] - xs[i];
+            let dvs = vs[i + 1] - vs[i];
+            return vs[i] + (x - xs[i]) * dvs / dxs;
+        }
+    }
+    // x == last interior breakpoint.
+    vs[xs.len() - 2]
+}
+
+/// Sigmoid breakpoint table in Q(dec) (matches ref.py `_sigmoid_table`).
+fn sigmoid_table(dec: u32) -> ([i64; 9], [i64; 9]) {
+    let one = 1i64 << dec;
+    let pts: [i64; 9] = [-6, -4, -2, -1, 0, 1, 2, 4, 6];
+    let mut xs = [0i64; 9];
+    let mut vs = [0i64; 9];
+    for i in 0..9 {
+        xs[i] = pts[i] * one;
+        let v = 1.0 / (1.0 + (-(pts[i] as f64)).exp());
+        vs[i] = (v * one as f64).round() as i64;
+    }
+    (xs, vs)
+}
+
+/// Tanh breakpoint table in Q(dec) (matches ref.py `_tanh_table`).
+fn tanh_table(dec: u32) -> ([i64; 7], [i64; 7]) {
+    let one = 1i64 << dec;
+    let pts: [i64; 7] = [-3, -2, -1, 0, 1, 2, 3];
+    let mut xs = [0i64; 7];
+    let mut vs = [0i64; 7];
+    for i in 0..7 {
+        xs[i] = pts[i] * one;
+        vs[i] = ((pts[i] as f64).tanh() * one as f64).round() as i64;
+    }
+    (xs, vs)
+}
+
+/// FANN's step-linear sigmoid approximation in Q(dec).
+pub fn step_linear_sigmoid_q(x: i64, dec: u32) -> i64 {
+    let one = 1i64 << dec;
+    let (xs, vs) = sigmoid_table(dec);
+    interp_table_q(x, &xs, &vs, 0, one)
+}
+
+/// Symmetric step-linear sigmoid (tanh) in Q(dec).
+pub fn step_linear_tanh_q(x: i64, dec: u32) -> i64 {
+    let one = 1i64 << dec;
+    let (xs, vs) = tanh_table(dec);
+    interp_table_q(x, &xs, &vs, -one, one)
+}
+
+/// Fixed-point activation dispatch (saturating to i32 on return).
+pub fn activation_q(act: Activation, x: i64, dec: u32) -> i64 {
+    let y = match act {
+        Activation::Linear => x,
+        Activation::Relu => x.max(0),
+        Activation::Sigmoid => step_linear_sigmoid_q(x, dec),
+        Activation::Tanh => step_linear_tanh_q(x, dec),
+    };
+    sat_i32(y)
+}
+
+/// Fixed-point dense layer: `x_q` (n_in), row-major `w_q` ([n_out][n_in]),
+/// `b_q` (n_out) -> writes n_out outputs. The exact math of
+/// `ref.py::dense_q` (which uses column-major (In, Out); transposed here
+/// to the MCU's neuron-row layout).
+pub fn dense_q_into(
+    x_q: &[i32],
+    w_q: &[i32],
+    b_q: &[i32],
+    dec: u32,
+    act: Activation,
+    out: &mut [i32],
+) {
+    let n_in = x_q.len();
+    let n_out = b_q.len();
+    debug_assert_eq!(w_q.len(), n_in * n_out);
+    debug_assert_eq!(out.len(), n_out);
+    for o in 0..n_out {
+        let row = &w_q[o * n_in..(o + 1) * n_in];
+        let mut acc: i64 = b_q[o] as i64;
+        for (&w, &x) in row.iter().zip(x_q) {
+            acc += qmul(w, x, dec);
+        }
+        acc = sat_i32(acc);
+        out[o] = activation_q(act, acc, dec) as i32;
+    }
+}
+
+/// Decimal-point selection, following `fann_save_to_fixed`'s reasoning:
+/// the decimal point must be small enough that (a) the largest weight is
+/// representable in i32 and (b) a worst-case layer accumulation
+/// (`max|w| · max|x| · fan_in` products plus bias) cannot overflow the
+/// saturating i64->i32 clamp *in normal operation*.
+///
+/// `max_abs_w` — largest |weight| or |bias| in the net; `max_fan_in` —
+/// widest layer input; `max_abs_x` — bound on layer inputs/activations
+/// (1.0 for sigmoid/tanh nets with normalized inputs).
+pub fn choose_decimal_point(max_abs_w: f32, max_fan_in: usize, max_abs_x: f32) -> u32 {
+    // bits needed for the integer part of the worst-case accumulator:
+    // fan_in * max|w| * max|x| (products are Q(dec) after the shift).
+    let worst = (max_fan_in as f64) * (max_abs_w.max(1e-9) as f64) * (max_abs_x.max(1e-9) as f64);
+    let int_bits = worst.log2().ceil().max(0.0) as u32;
+    // 31 magnitude bits total; keep one guard bit.
+    let avail = 31u32.saturating_sub(int_bits + 1);
+    avail.clamp(1, 20)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip_small_values() {
+        let dec = 12;
+        for v in [-1.5f32, -0.013, 0.0, 0.5, 1.9999] {
+            let q = quantize(v, dec);
+            let back = dequantize(q as i64, dec);
+            assert!((v - back).abs() <= 1.0 / (1 << dec) as f32);
+        }
+    }
+
+    #[test]
+    fn qmul_matches_float_within_lsb() {
+        let dec = 12;
+        let a = quantize(1.25, dec);
+        let b = quantize(-0.75, dec);
+        let p = dequantize(qmul(a, b, dec), dec);
+        assert!((p - (1.25 * -0.75)).abs() < 2.0 / (1 << dec) as f32);
+    }
+
+    #[test]
+    fn sigmoid_q_fixed_points() {
+        let dec = 12;
+        let one = 1i64 << dec;
+        assert_eq!(step_linear_sigmoid_q(0, dec), one / 2);
+        assert_eq!(step_linear_sigmoid_q(-100 * one, dec), 0);
+        assert_eq!(step_linear_sigmoid_q(100 * one, dec), one);
+    }
+
+    #[test]
+    fn tanh_q_odd_within_lsb() {
+        let dec = 10;
+        let one = 1i64 << dec;
+        for x in (-4 * one..4 * one).step_by(97) {
+            let s = step_linear_tanh_q(x, dec) + step_linear_tanh_q(-x, dec);
+            assert!(s.abs() <= 1, "x={x} s={s}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_q_monotone() {
+        let dec = 8;
+        let one = 1i64 << dec;
+        let mut prev = i64::MIN;
+        for x in (-8 * one..8 * one).step_by(13) {
+            let y = step_linear_sigmoid_q(x, dec);
+            assert!(y >= prev);
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn dense_q_saturates_not_wraps() {
+        let dec = 4;
+        let one = 1i32 << dec;
+        let n = 64;
+        let x = vec![100_000 * one; n];
+        let w = vec![100_000 * one; n];
+        let b = vec![0i32];
+        let mut out = vec![0i32; 1];
+        dense_q_into(&x, &w, &b, dec, Activation::Linear, &mut out);
+        assert_eq!(out[0] as i64, I32_MAX);
+    }
+
+    #[test]
+    fn decimal_point_reasonable_for_typical_net() {
+        // |w| <= 2, fan-in 300, |x| <= 1 -> worst ~ 600 -> 10 int bits.
+        let dec = choose_decimal_point(2.0, 300, 1.0);
+        assert!((10..=20).contains(&dec), "dec={dec}");
+        // Huge weights squeeze the decimal point down.
+        assert!(choose_decimal_point(1000.0, 1000, 1.0) < dec);
+        // Bounds respected.
+        assert!(choose_decimal_point(1e9, 10_000, 1.0) >= 1);
+        assert!(choose_decimal_point(1e-9, 1, 1e-9) <= 20);
+    }
+
+    #[test]
+    fn quantized_dense_tracks_float_dense() {
+        use crate::util::rng::Rng;
+        let dec = 12;
+        let mut rng = Rng::new(21);
+        let n_in = 20;
+        let n_out = 7;
+        let x: Vec<f32> = (0..n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let w: Vec<f32> = (0..n_in * n_out).map(|_| rng.range_f32(-1.5, 1.5)).collect();
+        let b: Vec<f32> = (0..n_out).map(|_| rng.range_f32(-0.5, 0.5)).collect();
+
+        let xq: Vec<i32> = x.iter().map(|&v| quantize(v, dec)).collect();
+        let wq: Vec<i32> = w.iter().map(|&v| quantize(v, dec)).collect();
+        let bq: Vec<i32> = b.iter().map(|&v| quantize(v, dec)).collect();
+        let mut outq = vec![0i32; n_out];
+        dense_q_into(&xq, &wq, &bq, dec, Activation::Tanh, &mut outq);
+
+        for o in 0..n_out {
+            let mut acc = b[o];
+            for i in 0..n_in {
+                acc += w[o * n_in + i] * x[i];
+            }
+            let want = acc.tanh();
+            let got = dequantize(outq[o] as i64, dec);
+            // step-linear tanh approximation error dominates (the coarse
+            // integer breakpoint table is off by up to ~4% mid-segment);
+            // the paper tolerates it on MCUs, we tolerate 6% here.
+            assert!(
+                (want - got).abs() < 0.06,
+                "o={o} want {want} got {got}"
+            );
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Artifact registry: locates and describes the AOT outputs of
+//! `python/compile/aot.py` (`make artifacts`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed `<name>_manifest.txt` — the arg-shape contract between the
+//  L2 lowering and the Rust runtime.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub inputs: usize,
+    pub outputs: usize,
+    pub hidden: Vec<usize>,
+    pub hidden_activation: String,
+    pub output_activation: String,
+    pub learning_rate: f32,
+    pub fwd_batches: Vec<usize>,
+    pub train_batch: usize,
+    pub macs: usize,
+    pub num_params: usize,
+}
+
+impl Manifest {
+    pub fn layer_sizes(&self) -> Vec<usize> {
+        let mut v = vec![self.inputs];
+        v.extend(&self.hidden);
+        v.push(self.outputs);
+        v
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut m = Manifest {
+            name: String::new(),
+            inputs: 0,
+            outputs: 0,
+            hidden: Vec::new(),
+            hidden_activation: String::new(),
+            output_activation: String::new(),
+            learning_rate: 0.0,
+            fwd_batches: Vec::new(),
+            train_batch: 0,
+            macs: 0,
+            num_params: 0,
+        };
+        for line in text.lines() {
+            let (key, val) = match line.split_once(' ') {
+                Some(kv) => kv,
+                None => (line, ""),
+            };
+            match key {
+                "name" => m.name = val.to_string(),
+                "inputs" => m.inputs = val.parse()?,
+                "outputs" => m.outputs = val.parse()?,
+                "hidden" => {
+                    m.hidden = val
+                        .split_whitespace()
+                        .map(|v| v.parse().context("bad hidden size"))
+                        .collect::<Result<_>>()?
+                }
+                "hidden_activation" => m.hidden_activation = val.to_string(),
+                "output_activation" => m.output_activation = val.to_string(),
+                "learning_rate" => m.learning_rate = val.parse()?,
+                "fwd_batches" => {
+                    m.fwd_batches = val
+                        .split_whitespace()
+                        .map(|v| v.parse().context("bad batch"))
+                        .collect::<Result<_>>()?
+                }
+                "train_batch" => m.train_batch = val.parse()?,
+                "macs" => m.macs = val.parse()?,
+                "num_params" => m.num_params = val.parse()?,
+                _ => bail!("unknown manifest key {key:?}"),
+            }
+        }
+        if m.name.is_empty() || m.inputs == 0 {
+            bail!("incomplete manifest");
+        }
+        Ok(m)
+    }
+}
+
+/// Handle to an artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    pub root: PathBuf,
+}
+
+impl ArtifactDir {
+    /// Locate `artifacts/` relative to the crate root (or a caller-
+    /// supplied override, e.g. the CLI's `--artifacts` flag).
+    pub fn locate(override_path: Option<&Path>) -> Result<Self> {
+        let root = match override_path {
+            Some(p) => p.to_path_buf(),
+            None => {
+                let candidates = [
+                    PathBuf::from("artifacts"),
+                    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+                ];
+                candidates
+                    .into_iter()
+                    .find(|p| p.is_dir())
+                    .context("artifacts/ not found: run `make artifacts` first")?
+            }
+        };
+        if !root.is_dir() {
+            bail!("artifact directory {} does not exist", root.display());
+        }
+        Ok(Self { root })
+    }
+
+    pub fn manifest(&self, name: &str) -> Result<Manifest> {
+        let path = self.root.join(format!("{name}_manifest.txt"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn forward_hlo(&self, name: &str, batch: usize) -> PathBuf {
+        self.root.join(format!("{name}_fwd_b{batch}.hlo.txt"))
+    }
+
+    pub fn train_hlo(&self, name: &str, batch: usize) -> PathBuf {
+        self.root.join(format!("{name}_train_b{batch}.hlo.txt"))
+    }
+
+    pub fn parity_file(&self, which: &str) -> PathBuf {
+        self.root.join(format!("parity_{which}.tsv"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name fall\ninputs 117\noutputs 2\nhidden 20\nhidden_activation tanh\noutput_activation sigmoid\nlearning_rate 0.1\nfwd_batches 1 32\ntrain_batch 32\nmacs 2380\nnum_params 2402\n";
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "fall");
+        assert_eq!(m.layer_sizes(), vec![117, 20, 2]);
+        assert_eq!(m.fwd_batches, vec![1, 32]);
+        assert_eq!(m.macs, 2380);
+    }
+
+    #[test]
+    fn manifest_rejects_unknown_keys() {
+        assert!(Manifest::parse("bogus 1\n").is_err());
+        assert!(Manifest::parse("").is_err());
+    }
+
+    #[test]
+    fn artifact_paths() {
+        let dir = ArtifactDir {
+            root: PathBuf::from("/tmp/a"),
+        };
+        assert_eq!(
+            dir.forward_hlo("xor", 1),
+            PathBuf::from("/tmp/a/xor_fwd_b1.hlo.txt")
+        );
+        assert_eq!(
+            dir.train_hlo("xor", 32),
+            PathBuf::from("/tmp/a/xor_train_b32.hlo.txt")
+        );
+    }
+}

@@ -1,0 +1,103 @@
+//! PJRT client wrapper: loads AOT-lowered HLO text and executes it.
+//!
+//! This is the only place the process touches XLA. HLO *text* is the
+//! interchange format (xla_extension 0.5.1 rejects jax ≥ 0.5 serialized
+//! protos with 64-bit instruction ids; the text parser reassigns ids —
+//! see /opt/xla-example/README.md and python/compile/aot.py).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled HLO program ready to execute on the CPU PJRT client.
+pub struct CompiledModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// Process-wide PJRT CPU client + compilation cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text file and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<CompiledModel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledModel {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl CompiledModel {
+    /// Execute with f32 tensor arguments given as `(shape, data)` pairs;
+    /// returns the flat f32 contents of every tuple element (the AOT
+    /// pipeline lowers with `return_tuple=True`).
+    pub fn run_f32(&self, args: &[(&[i64], &[f32])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|(shape, data)| {
+                let lit = xla::Literal::vec1(data);
+                if shape.len() == 1 {
+                    Ok(lit)
+                } else {
+                    lit.reshape(shape).context("reshaping argument")
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing PJRT program")?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let elems = root.to_tuple().context("untupling result")?;
+        elems
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need artifacts live in rust/tests/
+    // integration_runtime.rs (they require `make artifacts` to have run).
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load_hlo_text(Path::new("/nonexistent.hlo.txt")).is_err());
+    }
+}

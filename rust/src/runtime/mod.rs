@@ -1,0 +1,13 @@
+//! PJRT runtime: the bridge to the AOT-compiled L2/L1 programs.
+//!
+//! [`client`] wraps the `xla` crate (PJRT CPU); [`artifacts`] locates and
+//! describes `artifacts/*.hlo.txt`; [`trainer`] drives the AOT training
+//! step from Rust (the end-to-end example's training loop).
+
+pub mod artifacts;
+pub mod client;
+pub mod trainer;
+
+pub use artifacts::{ArtifactDir, Manifest};
+pub use client::{CompiledModel, Runtime};
+pub use trainer::PjrtTrainer;

@@ -1,0 +1,208 @@
+//! PJRT training driver: runs the AOT-lowered SGD step (`*_train_b32`)
+//! from Rust — the L3 coordinator training loop. Python authored the
+//! program once at `make artifacts`; it never runs here.
+
+use anyhow::{ensure, Context, Result};
+
+use super::artifacts::{ArtifactDir, Manifest};
+use super::client::{CompiledModel, Runtime};
+use crate::fann::{Activation, Network, TrainData};
+use crate::util::rng::Rng;
+
+/// Flat parameter buffers in the AOT calling convention
+/// `[w0, b0, w1, b1, ..., x(, y)]`; `w_l` is `(n_in, n_out)` row-major
+/// over `n_in` (JAX layout).
+pub struct PjrtTrainer {
+    pub manifest: Manifest,
+    train_step: CompiledModel,
+    fwd1: CompiledModel,
+    fwd_batch: CompiledModel,
+    /// `(shape, data)` per parameter tensor.
+    params: Vec<(Vec<i64>, Vec<f32>)>,
+}
+
+impl PjrtTrainer {
+    /// Load the artifacts for `name` and initialize parameters
+    /// (Glorot-uniform, seeded — mirrors `model.init_params`).
+    pub fn new(rt: &Runtime, art: &ArtifactDir, name: &str, seed: u64) -> Result<Self> {
+        let manifest = art.manifest(name)?;
+        let train_step = rt
+            .load_hlo_text(&art.train_hlo(name, manifest.train_batch))
+            .context("loading train step")?;
+        let fwd1 = rt
+            .load_hlo_text(&art.forward_hlo(name, 1))
+            .context("loading fwd_b1")?;
+        let batch = *manifest
+            .fwd_batches
+            .iter()
+            .max()
+            .context("no fwd batches")?;
+        let fwd_batch = rt
+            .load_hlo_text(&art.forward_hlo(name, batch))
+            .context("loading batched fwd")?;
+
+        let mut rng = Rng::new(seed);
+        let sizes = manifest.layer_sizes();
+        let mut params = Vec::new();
+        for w in sizes.windows(2) {
+            let (n_in, n_out) = (w[0], w[1]);
+            let limit = (6.0 / (n_in + n_out) as f32).sqrt();
+            let weights: Vec<f32> = (0..n_in * n_out)
+                .map(|_| rng.range_f32(-limit, limit))
+                .collect();
+            params.push((vec![n_in as i64, n_out as i64], weights));
+            params.push((vec![n_out as i64], vec![0.0; n_out]));
+        }
+        Ok(Self {
+            manifest,
+            train_step,
+            fwd1,
+            fwd_batch,
+            params,
+        })
+    }
+
+    /// Batch size of the batched forward executable.
+    pub fn eval_batch(&self) -> usize {
+        *self.manifest.fwd_batches.iter().max().unwrap()
+    }
+
+    /// One SGD step on a `(train_batch, inputs)` / `(train_batch,
+    /// outputs)` minibatch; updates the parameters in place and returns
+    /// the loss.
+    pub fn step(&mut self, x: &[f32], y: &[f32]) -> Result<f32> {
+        let b = self.manifest.train_batch;
+        ensure!(x.len() == b * self.manifest.inputs, "bad x length");
+        ensure!(y.len() == b * self.manifest.outputs, "bad y length");
+
+        let x_shape = [b as i64, self.manifest.inputs as i64];
+        let y_shape = [b as i64, self.manifest.outputs as i64];
+        let mut args: Vec<(&[i64], &[f32])> = self
+            .params
+            .iter()
+            .map(|(s, d)| (s.as_slice(), d.as_slice()))
+            .collect();
+        args.push((&x_shape, x));
+        args.push((&y_shape, y));
+
+        let mut out = self.train_step.run_f32(&args)?;
+        ensure!(
+            out.len() == self.params.len() + 1,
+            "train step returned {} tensors, want {}",
+            out.len(),
+            self.params.len() + 1
+        );
+        let loss = out.pop().unwrap();
+        for (slot, new) in self.params.iter_mut().zip(out) {
+            slot.1 = new;
+        }
+        Ok(loss[0])
+    }
+
+    /// Train for `steps` minibatches cycling through `data`; returns the
+    /// per-step loss curve.
+    pub fn train(&mut self, data: &TrainData, steps: usize, rng: &mut Rng) -> Result<Vec<f32>> {
+        let b = self.manifest.train_batch;
+        ensure!(data.num_inputs == self.manifest.inputs, "input dim mismatch");
+        ensure!(data.num_outputs == self.manifest.outputs, "output dim mismatch");
+        ensure!(data.len() >= 1, "empty dataset");
+
+        let mut curve = Vec::with_capacity(steps);
+        let mut x = vec![0.0f32; b * data.num_inputs];
+        let mut y = vec![0.0f32; b * data.num_outputs];
+        for _ in 0..steps {
+            for j in 0..b {
+                let i = rng.below(data.len());
+                x[j * data.num_inputs..(j + 1) * data.num_inputs]
+                    .copy_from_slice(data.input(i));
+                y[j * data.num_outputs..(j + 1) * data.num_outputs]
+                    .copy_from_slice(data.target(i));
+            }
+            curve.push(self.step(&x, &y)?);
+        }
+        Ok(curve)
+    }
+
+    /// Single-sample forward through the `fwd_b1` executable.
+    pub fn forward1(&self, input: &[f32]) -> Result<Vec<f32>> {
+        ensure!(input.len() == self.manifest.inputs, "bad input length");
+        let x_shape = [1i64, self.manifest.inputs as i64];
+        let mut args: Vec<(&[i64], &[f32])> = self
+            .params
+            .iter()
+            .map(|(s, d)| (s.as_slice(), d.as_slice()))
+            .collect();
+        args.push((&x_shape, input));
+        let out = self.fwd1.run_f32(&args)?;
+        Ok(out.into_iter().next().context("empty forward output")?)
+    }
+
+    /// Classification accuracy over `data`, evaluated in PJRT batches.
+    pub fn accuracy(&self, data: &TrainData) -> Result<f32> {
+        let b = self.eval_batch();
+        let mut correct = 0usize;
+        let mut x = vec![0.0f32; b * data.num_inputs];
+        let mut i = 0;
+        while i < data.len() {
+            for j in 0..b {
+                // pad the tail batch by repeating the last sample (padded
+                // rows are skipped when counting below)
+                let k = (i + j).min(data.len() - 1);
+                x[j * data.num_inputs..(j + 1) * data.num_inputs]
+                    .copy_from_slice(data.input(k));
+            }
+            let x_shape = [b as i64, self.manifest.inputs as i64];
+            let mut args: Vec<(&[i64], &[f32])> = self
+                .params
+                .iter()
+                .map(|(s, d)| (s.as_slice(), d.as_slice()))
+                .collect();
+            args.push((&x_shape, &x));
+            let out = &self.fwd_batch.run_f32(&args)?[0];
+            let no = self.manifest.outputs;
+            for j in 0..b {
+                let k = i + j;
+                if k >= data.len() {
+                    break;
+                }
+                let row = &out[j * no..(j + 1) * no];
+                let pred = if no == 1 {
+                    usize::from(row[0] >= 0.5)
+                } else {
+                    crate::util::argmax(row)
+                };
+                if pred == data.label(k) {
+                    correct += 1;
+                }
+            }
+            i += b;
+        }
+        Ok(correct as f32 / data.len() as f32)
+    }
+
+    /// Export the trained parameters as a [`Network`] so the deployment
+    /// toolkit can quantize/place/simulate it. Transposes the JAX
+    /// `(in, out)` weight layout to FANN's per-neuron rows.
+    pub fn to_network(&self) -> Result<Network> {
+        let sizes = self.manifest.layer_sizes();
+        let hidden = Activation::parse(&self.manifest.hidden_activation)?;
+        let output = Activation::parse(&self.manifest.output_activation)?;
+        let mut net = Network::new(&sizes, hidden, output)?;
+        for (l, w) in sizes.windows(2).enumerate() {
+            let (n_in, n_out) = (w[0], w[1]);
+            let jax_w = &self.params[2 * l].1;
+            let jax_b = &self.params[2 * l + 1].1;
+            let layer = &mut net.layers[l];
+            for o in 0..n_out {
+                for i in 0..n_in {
+                    layer.weights[o * n_in + i] = jax_w[i * n_out + o];
+                }
+            }
+            layer.biases.copy_from_slice(jax_b);
+        }
+        Ok(net)
+    }
+}
+
+// Integration tests for the trainer (which need `make artifacts`) live in
+// rust/tests/integration_runtime.rs.

@@ -1,0 +1,345 @@
+//! Pure cycle-cost model: maps a [`DeploymentPlan`] to per-layer and
+//! whole-network cycle counts. This is the analytical heart of every
+//! figure reproduction (Figs. 7–12); the numeric execution engine
+//! ([`super::engine`]) reuses it for timing while computing real outputs.
+//!
+//! Cost of one layer on `p` cores:
+//!
+//! ```text
+//! rows_pc  = ceil(n_out / p)
+//! row      = n_in · mac_eff + neuron_ovh + act + dma_row_setup?
+//! layer    = layer_ovh + rows_pc · row · contention + barrier? + dma_layer?
+//! ```
+//!
+//! where `mac_eff` folds the per-word memory penalty of the placement
+//! region (flash wait states, shared-L2 arbitration) on top of the
+//! Table I inner-loop cycles.
+
+use crate::deploy::{DeploymentPlan, DmaStrategy};
+use crate::fann::activation::Activation;
+use crate::targets::{dma, memspec, Region, Target};
+
+/// Synchronization cost per layer for a parallel cluster section
+/// (fork + barrier through the event unit).
+pub const BARRIER_CYCLES: f64 = 200.0;
+
+/// Extra multiplicative compute cost per additional streaming core
+/// (TCDM banking + DMA arbitration contention).
+pub const STREAM_CONTENTION_PER_CORE: f64 = 0.008;
+
+/// Per-neuron extra cycles of the *unoptimized* FANNCortexM baseline
+/// (redundant bias-buffer initialization, Sec. V-B / Fig. 7), float and
+/// fixed variants. Eliminated by FANN-on-MCU.
+pub const LEGACY_INIT_FLOAT: f64 = 14.0;
+pub const LEGACY_INIT_FIXED: f64 = 31.0;
+
+/// Cycle breakdown of a simulated inference.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CycleBreakdown {
+    pub compute: f64,
+    pub dma: f64,
+    pub barrier: f64,
+    pub overhead: f64,
+    /// Cycles spent in activation functions (Fig. 7 separates weight
+    /// matrix vs activation time).
+    pub activation: f64,
+}
+
+impl CycleBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute + self.dma + self.barrier + self.overhead + self.activation
+    }
+
+    fn add(&mut self, other: &CycleBreakdown) {
+        self.compute += other.compute;
+        self.dma += other.dma;
+        self.barrier += other.barrier;
+        self.overhead += other.overhead;
+        self.activation += other.activation;
+    }
+}
+
+/// Extra cycles per 32-bit weight load for the plan's placement region.
+pub fn region_penalty_per_word(plan: &DeploymentPlan) -> f64 {
+    match (plan.target, plan.region) {
+        (
+            Target::CortexM4(chip) | Target::CortexM7(chip) | Target::CortexM0(chip),
+            Region::Flash,
+        ) => {
+            chip.memory().flash_penalty_per_word
+        }
+        (Target::WolfFc, Region::SharedL2) => memspec::WOLF_MEMORY.shared_l2_penalty_per_word,
+        // Cluster L2-resident nets stream through the DMA: the per-word
+        // cost is hidden, the DMA terms below carry the overhead.
+        _ => 0.0,
+    }
+}
+
+/// Simulation knobs (Fig. 7 legacy-baseline toggle).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CostOptions {
+    /// Model the FANNCortexM redundant bias-init (the "before" bars).
+    pub legacy_init: bool,
+}
+
+/// Cycles of one layer (`n_in -> n_out`, activation `act`) under `plan`.
+/// `prev_compute` is the previous layer's compute time (layer-wise DMA
+/// hides the next layer's transfer behind it); `first_layer` marks the
+/// cold-start transfer.
+pub fn layer_cycles(
+    plan: &DeploymentPlan,
+    n_in: usize,
+    n_out: usize,
+    act: Activation,
+    prev_compute: f64,
+    first_layer: bool,
+    opts: CostOptions,
+) -> CycleBreakdown {
+    let core = plan.target.core();
+    let cores = plan.target.num_cores() as usize;
+    let mac = core.mac_cycles(dtype_of(plan)) + region_penalty_per_word(plan);
+    let word = crate::deploy::memory::dtype_size(plan.dtype);
+
+    let rows_pc = n_out.div_ceil(cores);
+    let neuron_ovh = core.per_neuron_overhead()
+        + if opts.legacy_init {
+            match plan.dtype {
+                crate::targets::DataType::Float32 => LEGACY_INIT_FLOAT,
+                crate::targets::DataType::Fixed => LEGACY_INIT_FIXED,
+            }
+        } else {
+            0.0
+        };
+    let act_cycles = core.activation_cycles(act);
+
+    let mut b = CycleBreakdown::default();
+    b.overhead = core.per_layer_overhead() + rows_pc as f64 * neuron_ovh;
+    b.activation = rows_pc as f64 * act_cycles;
+    b.compute = rows_pc as f64 * n_in as f64 * mac;
+
+    // DMA streaming terms (cluster, L2-resident network).
+    match plan.dma {
+        Some(DmaStrategy::NeuronWise) => {
+            let d = dma::WOLF_DMA;
+            let row_bytes = n_in * word;
+            let row_compute = n_in as f64 * mac;
+            // Every layer's first row is cold (nothing to hide behind
+            // after the barrier), then per-row programming with the
+            // payload hidden behind the previous row's compute.
+            let cold = d.transfer_cycles(row_bytes);
+            b.dma = cold + (rows_pc.saturating_sub(1)) as f64 * d.overlapped_cost(row_bytes, row_compute);
+        }
+        Some(DmaStrategy::LayerWise) => {
+            let d = dma::WOLF_DMA;
+            let layer_bytes = (n_in * n_out + n_out) * word;
+            b.dma = if first_layer {
+                d.transfer_cycles(layer_bytes)
+            } else {
+                d.overlapped_cost(layer_bytes, prev_compute)
+            };
+        }
+        None => {}
+    }
+
+    // Parallel-section costs.
+    if cores > 1 {
+        b.barrier = BARRIER_CYCLES;
+        if plan.dma.is_some() {
+            let contention = 1.0 + STREAM_CONTENTION_PER_CORE * (cores - 1) as f64;
+            b.compute *= contention;
+        }
+    }
+    b
+}
+
+/// Whole-network cycles under `plan`. `acts[l]` is the activation of
+/// layer `l` (hidden/output mix resolved by the caller).
+pub fn network_cycles(plan: &DeploymentPlan, acts: &[Activation], opts: CostOptions) -> CycleBreakdown {
+    let sizes = &plan.shape.sizes;
+    assert_eq!(acts.len(), sizes.len() - 1);
+    let mut total = CycleBreakdown::default();
+    let mut prev_compute = 0.0;
+    for (l, w) in sizes.windows(2).enumerate() {
+        let b = layer_cycles(plan, w[0], w[1], acts[l], prev_compute, l == 0, opts);
+        prev_compute = b.compute;
+        total.add(&b);
+    }
+    // Cluster runs additionally pay the input DMA into L1.
+    if matches!(plan.target, Target::WolfCluster { .. }) {
+        let word = crate::deploy::memory::dtype_size(plan.dtype);
+        total.dma += dma::WOLF_DMA.transfer_cycles(sizes[0] * word);
+    }
+    total
+}
+
+/// Core-busy fraction of a parallel run (ceil losses at each layer):
+/// used by the power model for idle-at-barrier clock gating.
+pub fn utilization(plan: &DeploymentPlan, acts: &[Activation]) -> f64 {
+    let cores = plan.target.num_cores() as usize;
+    if cores == 1 {
+        return 1.0;
+    }
+    let sizes = &plan.shape.sizes;
+    let core = plan.target.core();
+    let mac = core.mac_cycles(dtype_of(plan));
+    let mut busy = 0.0;
+    let mut wall = 0.0;
+    for (l, w) in sizes.windows(2).enumerate() {
+        let row = w[0] as f64 * mac
+            + core.per_neuron_overhead()
+            + core.activation_cycles(acts[l]);
+        let rows_pc = w[1].div_ceil(cores) as f64;
+        busy += w[1] as f64 * row;
+        wall += rows_pc * row * cores as f64;
+    }
+    (busy / wall).clamp(0.0, 1.0)
+}
+
+fn dtype_of(plan: &DeploymentPlan) -> crate::targets::DataType {
+    plan.dtype
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deploy::{plan, NetShape};
+    use crate::targets::{Chip, DataType};
+
+    const TANH: Activation = Activation::Tanh;
+    const SIG: Activation = Activation::Sigmoid;
+
+    fn acts_for(n_layers: usize) -> Vec<Activation> {
+        let mut v = vec![TANH; n_layers - 1];
+        v.push(SIG);
+        v
+    }
+
+    fn app_a() -> NetShape {
+        NetShape::new(&[76, 300, 200, 100, 10])
+    }
+
+    #[test]
+    fn app_a_m4_runtime_near_paper() {
+        // Paper Table II: 17.6 ms on nRF52832 @64 MHz (float, flash).
+        let p = plan(&app_a(), Target::CortexM4(Chip::Nrf52832), DataType::Float32).unwrap();
+        let cycles = network_cycles(&p, &acts_for(4), CostOptions::default()).total();
+        let ms = cycles / 64.0e3;
+        assert!(
+            (15.0..=20.0).contains(&ms),
+            "modeled {ms:.2} ms, paper 17.6 ms"
+        );
+    }
+
+    #[test]
+    fn app_a_ibex_runtime_near_paper() {
+        // Paper: 11.4 ms on the FC @100 MHz (fixed, shared L2).
+        let p = plan(&app_a(), Target::WolfFc, DataType::Fixed).unwrap();
+        let cycles = network_cycles(&p, &acts_for(4), CostOptions::default()).total();
+        let ms = cycles / 100.0e3;
+        assert!(
+            (10.0..=13.0).contains(&ms),
+            "modeled {ms:.2} ms, paper 11.4 ms"
+        );
+    }
+
+    #[test]
+    fn app_a_single_riscy_near_paper() {
+        // Paper: 5.7 ms single RI5CY @100 MHz (neuron-wise DMA).
+        let p = plan(&app_a(), Target::WolfCluster { cores: 1 }, DataType::Float32).unwrap();
+        let cycles = network_cycles(&p, &acts_for(4), CostOptions::default()).total();
+        let ms = cycles / 100.0e3;
+        assert!(
+            (5.0..=6.5).contains(&ms),
+            "modeled {ms:.2} ms, paper 5.7 ms"
+        );
+    }
+
+    #[test]
+    fn app_a_parallel_speedup_near_paper() {
+        // Paper: 7.1x multi- vs single-RI5CY on app A.
+        let acts = acts_for(4);
+        let single = plan(&app_a(), Target::WolfCluster { cores: 1 }, DataType::Float32).unwrap();
+        let multi = plan(&app_a(), Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+        let s = network_cycles(&single, &acts, CostOptions::default()).total();
+        let m = network_cycles(&multi, &acts, CostOptions::default()).total();
+        let speedup = s / m;
+        assert!(
+            (6.3..=8.0).contains(&speedup),
+            "modeled {speedup:.2}x, paper 7.1x"
+        );
+    }
+
+    #[test]
+    fn tiny_net_parallel_speedup_lower() {
+        // Fig. 12a: ~4.5x for a single 8-unit hidden layer (100 inputs,
+        // 8 outputs) — parallelization overhead dominates small nets.
+        let shape = NetShape::new(&[100, 8, 8]);
+        let acts = acts_for(2);
+        let single = plan(&shape, Target::WolfCluster { cores: 1 }, DataType::Fixed).unwrap();
+        let multi = plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Fixed).unwrap();
+        let speedup = network_cycles(&single, &acts, CostOptions::default()).total()
+            / network_cycles(&multi, &acts, CostOptions::default()).total();
+        assert!(
+            (3.5..=5.5).contains(&speedup),
+            "modeled {speedup:.2}x, paper ~4.5x"
+        );
+    }
+
+    #[test]
+    fn legacy_init_slowdown_matches_fig7() {
+        // Fig. 7: eliminating the redundant init gains 3.1% (float) and
+        // 7.7% (fixed) on the 5-100-100-3 example network on the M4.
+        let shape = NetShape::new(&[5, 100, 100, 3]);
+        let acts = acts_for(3);
+        for (dt, want) in [(DataType::Float32, 0.031), (DataType::Fixed, 0.077)] {
+            let p = plan(&shape, Target::CortexM4(Chip::Stm32l475vg), dt).unwrap();
+            let new = network_cycles(&p, &acts, CostOptions::default()).total();
+            let old = network_cycles(&p, &acts, CostOptions { legacy_init: true }).total();
+            let gain = (old - new) / old;
+            assert!(
+                (gain - want).abs() < 0.02,
+                "{dt:?}: modeled gain {gain:.3}, paper {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn weight_matrix_dominates_example_net() {
+        // Fig. 7: weight-matrix compute is ~88% of total on the example
+        // network.
+        let shape = NetShape::new(&[5, 100, 100, 3]);
+        let p = plan(&shape, Target::CortexM4(Chip::Stm32l475vg), DataType::Float32).unwrap();
+        let b = network_cycles(&p, &acts_for(3), CostOptions::default());
+        let frac = b.compute / b.total();
+        assert!((0.80..=0.95).contains(&frac), "compute fraction {frac:.3}");
+    }
+
+    #[test]
+    fn utilization_drops_for_tiny_layers() {
+        let big = plan(&app_a(), Target::WolfCluster { cores: 8 }, DataType::Fixed).unwrap();
+        let small = plan(
+            &NetShape::new(&[100, 2, 2]),
+            Target::WolfCluster { cores: 8 },
+            DataType::Fixed,
+        )
+        .unwrap();
+        let acts = acts_for(4);
+        let u_big = utilization(&big, &acts);
+        let u_small = utilization(&small, &acts_for(2));
+        assert!(u_big > 0.85, "{u_big}");
+        assert!(u_small < 0.5, "{u_small}");
+    }
+
+    #[test]
+    fn fixed_faster_than_float_on_m4() {
+        // Fig. 7: fixed ~15% faster than float on the M4.
+        let shape = NetShape::new(&[5, 100, 100, 3]);
+        let acts = acts_for(3);
+        let pf = plan(&shape, Target::CortexM4(Chip::Stm32l475vg), DataType::Float32).unwrap();
+        let pq = plan(&shape, Target::CortexM4(Chip::Stm32l475vg), DataType::Fixed).unwrap();
+        let f = network_cycles(&pf, &acts, CostOptions::default()).total();
+        let q = network_cycles(&pq, &acts, CostOptions::default()).total();
+        let gain = (f - q) / f;
+        assert!((0.08..=0.2).contains(&gain), "fixed gain {gain:.3}");
+    }
+}

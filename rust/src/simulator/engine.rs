@@ -1,0 +1,253 @@
+//! Deployment execution engine: runs a network *numerically* (float or
+//! fixed path — bit-exact with the Pallas kernels) while accounting
+//! cycles, time and energy from the [`super::cost`] model.
+//!
+//! Numeric outputs are target-independent (the same arithmetic runs on
+//! every MCU); only the cycle/energy report varies with the plan — which
+//! is exactly the paper's premise.
+
+use anyhow::{ensure, Result};
+
+use super::cost::{self, CostOptions, CycleBreakdown};
+use crate::deploy::DeploymentPlan;
+use crate::fann::activation::Activation;
+use crate::fann::{FixedNetwork, Network};
+use crate::targets::{power, DataType, Target};
+
+/// The executable forms a deployment can carry.
+#[derive(Debug)]
+pub enum Executable<'a> {
+    Float(&'a Network),
+    Fixed(&'a FixedNetwork),
+}
+
+impl<'a> Executable<'a> {
+    pub fn num_inputs(&self) -> usize {
+        match self {
+            Executable::Float(n) => n.num_inputs(),
+            Executable::Fixed(n) => n.num_inputs(),
+        }
+    }
+
+    pub fn activations(&self) -> Vec<Activation> {
+        match self {
+            Executable::Float(n) => n.layers.iter().map(|l| l.activation).collect(),
+            Executable::Fixed(n) => n.layers.iter().map(|l| l.activation).collect(),
+        }
+    }
+
+    pub fn layer_sizes(&self) -> Vec<usize> {
+        match self {
+            Executable::Float(n) => n.layer_sizes(),
+            Executable::Fixed(n) => n.layer_sizes(),
+        }
+    }
+}
+
+/// Result of one simulated classification.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Network outputs (dequantized for fixed-point deployments).
+    pub outputs: Vec<f32>,
+    /// Cycle breakdown of the compute phase.
+    pub breakdown: CycleBreakdown,
+    /// Compute-phase wall time at the target's clock.
+    pub seconds: f64,
+    /// Average power during compute (utilization-aware for the cluster).
+    pub active_mw: f64,
+    /// Compute-phase energy.
+    pub energy_uj: f64,
+    /// Core-busy fraction (1.0 for single-core targets).
+    pub utilization: f64,
+    /// End-to-end time for ONE classification including the one-time
+    /// cluster activation/deactivation overhead (Table II footnote).
+    pub e2e_seconds: f64,
+    /// End-to-end energy for one classification.
+    pub e2e_energy_uj: f64,
+}
+
+impl SimReport {
+    /// Amortized per-classification time when `n` classifications run per
+    /// cluster activation (the paper's asymptotic 22× / 14.3× numbers).
+    pub fn amortized_seconds(&self, plan_target: Target, n: u64) -> f64 {
+        self.seconds + plan_target.fixed_overhead_seconds() / n as f64
+    }
+
+    /// Amortized per-classification energy for `n` classifications per
+    /// activation.
+    pub fn amortized_energy_uj(&self, plan_target: Target, n: u64) -> f64 {
+        self.energy_uj
+            + power::energy_uj(
+                plan_target.fixed_overhead_seconds(),
+                plan_target.fixed_overhead_mw(),
+            ) / n as f64
+    }
+}
+
+/// Simulate one classification of `input` under `plan`.
+pub fn simulate(
+    plan: &DeploymentPlan,
+    exe: &Executable,
+    input: &[f32],
+    opts: CostOptions,
+) -> Result<SimReport> {
+    ensure!(plan.fits(), "network does not fit {}", plan.target.label());
+    ensure!(
+        input.len() == exe.num_inputs(),
+        "input length {} != network inputs {}",
+        input.len(),
+        exe.num_inputs()
+    );
+    ensure!(
+        exe.layer_sizes() == plan.shape.sizes,
+        "plan shape does not match executable"
+    );
+    match (&exe, plan.dtype) {
+        (Executable::Float(_), DataType::Float32) | (Executable::Fixed(_), DataType::Fixed) => {}
+        _ => anyhow::bail!("plan dtype does not match executable representation"),
+    }
+
+    let outputs = match exe {
+        Executable::Float(net) => net.run(input),
+        Executable::Fixed(net) => net.run(input),
+    };
+
+    let acts = exe.activations();
+    let breakdown = cost::network_cycles(plan, &acts, opts);
+    let cycles = breakdown.total();
+    let seconds = cycles / plan.target.freq_hz();
+    let utilization = cost::utilization(plan, &acts);
+
+    let active_mw = match plan.target {
+        Target::WolfCluster { cores } => {
+            power::WOLF_CLUSTER.active_mw(cores.clamp(1, 8), utilization)
+        }
+        t => t.active_mw(),
+    };
+    let energy_uj = power::energy_uj(seconds, active_mw);
+    let e2e_seconds = seconds + plan.target.fixed_overhead_seconds();
+    let e2e_energy_uj = energy_uj
+        + power::energy_uj(
+            plan.target.fixed_overhead_seconds(),
+            plan.target.fixed_overhead_mw(),
+        );
+
+    Ok(SimReport {
+        outputs,
+        breakdown,
+        seconds,
+        active_mw,
+        energy_uj,
+        utilization,
+        e2e_seconds,
+        e2e_energy_uj,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deploy::{plan, NetShape};
+    use crate::fann::Activation;
+    use crate::targets::Chip;
+    use crate::util::rng::Rng;
+
+    fn float_net(sizes: &[usize]) -> Network {
+        let mut rng = Rng::new(55);
+        let mut net = Network::new(sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, None);
+        net
+    }
+
+    #[test]
+    fn outputs_identical_across_targets() {
+        let net = float_net(&[7, 6, 5]);
+        let shape = NetShape::from(&net);
+        let x = [0.1f32, -0.5, 0.9, 0.0, 0.3, -0.2, 0.7];
+        let mut outs = Vec::new();
+        for t in [
+            Target::CortexM4(Chip::Nrf52832),
+            Target::WolfCluster { cores: 1 },
+            Target::WolfCluster { cores: 8 },
+        ] {
+            let p = plan(&shape, t, DataType::Float32).unwrap();
+            let r = simulate(&p, &Executable::Float(&net), &x, CostOptions::default()).unwrap();
+            outs.push(r.outputs);
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[1], outs[2]);
+    }
+
+    #[test]
+    fn fixed_deployment_runs_quantized_path() {
+        let net = float_net(&[7, 6, 5]);
+        let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+        let shape = NetShape::from(&fixed);
+        let p = plan(&shape, Target::WolfFc, DataType::Fixed).unwrap();
+        let x = [0.1f32, -0.5, 0.9, 0.0, 0.3, -0.2, 0.7];
+        let r = simulate(&p, &Executable::Fixed(&fixed), &x, CostOptions::default()).unwrap();
+        // Outputs close to the float net's (quantization noise only).
+        let rf = net.run(&x);
+        for (a, b) in r.outputs.iter().zip(&rf) {
+            assert!((a - b).abs() < 0.08, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let net = float_net(&[4, 3, 2]);
+        let shape = NetShape::from(&net);
+        let p = plan(&shape, Target::WolfFc, DataType::Fixed).unwrap();
+        let x = [0.0f32; 4];
+        assert!(simulate(&p, &Executable::Float(&net), &x, CostOptions::default()).is_err());
+    }
+
+    #[test]
+    fn cluster_pays_e2e_overhead_once() {
+        let net = float_net(&[76, 300, 200, 100, 10]);
+        let shape = NetShape::from(&net);
+        let p = plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+        let x = vec![0.1f32; 76];
+        let r = simulate(&p, &Executable::Float(&net), &x, CostOptions::default()).unwrap();
+        assert!(r.e2e_seconds > r.seconds + 1.0e-3);
+        // Amortization: at 1000 classifications the overhead vanishes.
+        let amortized = r.amortized_seconds(p.target, 1000);
+        assert!((amortized - r.seconds) < 2e-6);
+    }
+
+    #[test]
+    fn table2_app_a_energy_shape() {
+        // The headline: multi-RI5CY beats M4 by ~22x in time and ~73% in
+        // energy for continuous classification (overhead amortized).
+        let net = float_net(&[76, 300, 200, 100, 10]);
+        let shape = NetShape::from(&net);
+        let x = vec![0.1f32; 76];
+
+        let p_m4 = plan(&shape, Target::CortexM4(Chip::Nrf52832), DataType::Float32).unwrap();
+        let r_m4 = simulate(&p_m4, &Executable::Float(&net), &x, CostOptions::default()).unwrap();
+
+        let p_w = plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+        let r_w = simulate(&p_w, &Executable::Float(&net), &x, CostOptions::default()).unwrap();
+
+        let speedup = r_m4.seconds / r_w.seconds;
+        assert!(
+            (17.0..=27.0).contains(&speedup),
+            "modeled {speedup:.1}x, paper 22x"
+        );
+        let energy_red = 1.0 - r_w.energy_uj / r_m4.energy_uj;
+        assert!(
+            (0.60..=0.85).contains(&energy_red),
+            "modeled {:.1}%, paper 73.1%",
+            energy_red * 100.0
+        );
+    }
+
+    #[test]
+    fn nofit_plan_rejected() {
+        let shape = NetShape::new(&[2048, 2048, 8]);
+        let net = float_net(&[2048, 2048, 8]);
+        let p = plan(&shape, Target::CortexM4(Chip::Nrf52832), DataType::Float32).unwrap();
+        let x = vec![0.0f32; 2048];
+        assert!(simulate(&p, &Executable::Float(&net), &x, CostOptions::default()).is_err());
+    }
+}

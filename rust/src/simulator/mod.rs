@@ -1,0 +1,17 @@
+//! Deployment execution simulator.
+//!
+//! [`cost`] is the analytical cycle model (Table I inner loops + memory
+//! penalties + DMA overlap + parallel overheads); [`engine`] executes a
+//! deployed network numerically while accounting cycles/time/energy;
+//! [`trace`] renders Fig.-13-style power traces of end-to-end cluster
+//! classifications.
+
+pub mod cost;
+pub mod engine;
+pub mod stream;
+pub mod trace;
+
+pub use cost::{network_cycles, CostOptions, CycleBreakdown};
+pub use engine::{simulate, Executable, SimReport};
+pub use stream::{analyze as analyze_stream, ClusterPolicy, StreamReport};
+pub use trace::PowerTrace;

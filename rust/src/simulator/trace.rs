@@ -1,0 +1,189 @@
+//! Power-trace generation — the Fig. 13 reproduction.
+//!
+//! An end-to-end cluster classification decomposes into phases:
+//! FC idle → cluster activation/init → input DMA → parallel compute →
+//! cluster deactivation → FC idle. Each phase holds a constant average
+//! power; the trace is the step function the Keysight N6705C saw.
+
+use crate::simulator::engine::SimReport;
+use crate::targets::{power, Target};
+
+/// One constant-power phase.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub name: &'static str,
+    pub seconds: f64,
+    pub milliwatts: f64,
+}
+
+/// A full classification trace.
+#[derive(Debug, Clone)]
+pub struct PowerTrace {
+    pub phases: Vec<Phase>,
+}
+
+impl PowerTrace {
+    /// Build the Fig. 13 trace from a simulated cluster run. The
+    /// activation/deactivation split of the 1.2 ms bring-up overhead is
+    /// 60/40 (activation + init is the longer leg).
+    pub fn for_cluster_run(report: &SimReport, target: Target) -> Self {
+        let overhead = target.fixed_overhead_seconds();
+        let oh_mw = target.fixed_overhead_mw();
+        let fc_idle = power::WOLF_FC.sleep_mw;
+        let phases = vec![
+            Phase {
+                name: "idle",
+                seconds: 0.2e-3,
+                milliwatts: fc_idle,
+            },
+            Phase {
+                name: "cluster activation + init",
+                seconds: overhead * 0.6,
+                milliwatts: oh_mw,
+            },
+            Phase {
+                name: "input DMA",
+                seconds: 5.0e-6,
+                milliwatts: oh_mw,
+            },
+            Phase {
+                name: "parallel compute",
+                seconds: report.seconds,
+                milliwatts: report.active_mw,
+            },
+            Phase {
+                name: "cluster deactivation",
+                seconds: overhead * 0.4,
+                milliwatts: oh_mw,
+            },
+            Phase {
+                name: "idle",
+                seconds: 0.2e-3,
+                milliwatts: fc_idle,
+            },
+        ];
+        Self { phases }
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.phases.iter().map(|p| p.seconds).sum()
+    }
+
+    /// Total energy in µJ.
+    pub fn total_energy_uj(&self) -> f64 {
+        self.phases
+            .iter()
+            .map(|p| power::energy_uj(p.seconds, p.milliwatts))
+            .sum()
+    }
+
+    /// Sample the step function at `n` evenly spaced points — the series
+    /// a plotting tool (or the Fig. 13 bench output) consumes.
+    pub fn sample(&self, n: usize) -> Vec<(f64, f64)> {
+        let total = self.total_seconds();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let t = total * i as f64 / (n - 1).max(1) as f64;
+            out.push((t, self.power_at(t)));
+        }
+        out
+    }
+
+    /// Power at absolute time `t` within the trace.
+    pub fn power_at(&self, t: f64) -> f64 {
+        let mut acc = 0.0;
+        for p in &self.phases {
+            acc += p.seconds;
+            if t < acc {
+                return p.milliwatts;
+            }
+        }
+        self.phases.last().map(|p| p.milliwatts).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deploy::{plan, NetShape};
+    use crate::fann::{Activation, Network};
+    use crate::simulator::cost::CostOptions;
+    use crate::simulator::engine::{simulate, Executable};
+    use crate::targets::DataType;
+    use crate::util::rng::Rng;
+
+    fn app_a_trace() -> PowerTrace {
+        let mut rng = Rng::new(1);
+        let mut net = Network::new(
+            &[76, 300, 200, 100, 10],
+            Activation::Tanh,
+            Activation::Sigmoid,
+        )
+        .unwrap();
+        net.randomize(&mut rng, None);
+        let shape = NetShape::from(&net);
+        let target = Target::WolfCluster { cores: 8 };
+        let p = plan(&shape, target, DataType::Float32).unwrap();
+        let x = vec![0.2f32; 76];
+        let r = simulate(&p, &Executable::Float(&net), &x, CostOptions::default()).unwrap();
+        PowerTrace::for_cluster_run(&r, target)
+    }
+
+    #[test]
+    fn fig13_phase_structure() {
+        let trace = app_a_trace();
+        let names: Vec<&str> = trace.phases.iter().map(|p| p.name).collect();
+        assert_eq!(names[0], "idle");
+        assert!(names.contains(&"cluster activation + init"));
+        assert!(names.contains(&"parallel compute"));
+        // Compute is the power peak (Fig. 13's tall plateau).
+        let peak = trace
+            .phases
+            .iter()
+            .max_by(|a, b| a.milliwatts.partial_cmp(&b.milliwatts).unwrap())
+            .unwrap();
+        assert_eq!(peak.name, "parallel compute");
+        assert!(peak.milliwatts > 50.0, "{}", peak.milliwatts);
+    }
+
+    #[test]
+    fn fig13_overhead_energy_near_13uj() {
+        // Paper: constant overhead ≈ 13 µJ.
+        let trace = app_a_trace();
+        let oh: f64 = trace
+            .phases
+            .iter()
+            .filter(|p| p.name.starts_with("cluster"))
+            .map(|p| crate::targets::power::energy_uj(p.seconds, p.milliwatts))
+            .sum();
+        assert!((11.0..=16.0).contains(&oh), "{oh}");
+    }
+
+    #[test]
+    fn sample_is_monotone_in_time() {
+        let trace = app_a_trace();
+        let samples = trace.sample(256);
+        assert_eq!(samples.len(), 256);
+        for w in samples.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+        }
+        // Starts and ends idle (sub-mW).
+        assert!(samples.first().unwrap().1 < 1.0);
+        assert!(samples.last().unwrap().1 < 1.0);
+    }
+
+    #[test]
+    fn total_energy_consistent_with_phases() {
+        let trace = app_a_trace();
+        let total = trace.total_energy_uj();
+        assert!(total > 0.0);
+        // Dominated by compute + overhead; idle contributes ~nothing.
+        let compute: f64 = trace
+            .phases
+            .iter()
+            .filter(|p| p.name == "parallel compute")
+            .map(|p| crate::targets::power::energy_uj(p.seconds, p.milliwatts))
+            .sum();
+        assert!(compute / total > 0.5, "compute {compute} total {total}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Cluster DMA engine model: L2 → L1 weight streaming with
+//! double-buffering (Sec. IV-B of the paper).
+//!
+//! When a network (or a single layer) does not fit the 64 kB L1 TCDM, the
+//! toolkit streams weights from L2 with the cluster's autonomous DMA,
+//! overlapping the transfer of chunk *k+1* with the computation of chunk
+//! *k* (ping-pong buffers). Two granularities exist:
+//!
+//! * **layer-wise** — the whole next layer's parameters in one transfer
+//!   (possible while the largest layer fits half of L1);
+//! * **neuron-wise** — one output neuron's weight row at a time (the
+//!   fallback when even a single layer overflows L1).
+//!
+//! The model: a transfer of `n` bytes completes in
+//! `setup + n / bytes_per_cycle` cycles; with double buffering the
+//! *visible* cost per chunk is `setup + max(0, transfer - compute)` —
+//! compute hides the bulk transfer but not the programming overhead.
+
+/// DMA timing parameters (Mr. Wolf cluster DMA, 64-bit transfers).
+#[derive(Debug, Clone, Copy)]
+pub struct DmaModel {
+    /// Cycles to program + trigger one transfer descriptor.
+    pub setup_cycles: f64,
+    /// Payload bandwidth in bytes per cycle.
+    pub bytes_per_cycle: f64,
+}
+
+pub const WOLF_DMA: DmaModel = DmaModel {
+    setup_cycles: 30.0,
+    bytes_per_cycle: 8.0,
+};
+
+impl DmaModel {
+    /// Raw (un-overlapped) duration of one transfer.
+    pub fn transfer_cycles(&self, bytes: usize) -> f64 {
+        self.setup_cycles + bytes as f64 / self.bytes_per_cycle
+    }
+
+    /// Visible cost of one double-buffered chunk: the DMA programming is
+    /// on the critical path; the payload is hidden behind `compute_cycles`
+    /// of work on the previous chunk.
+    pub fn overlapped_cost(&self, bytes: usize, compute_cycles: f64) -> f64 {
+        let payload = bytes as f64 / self.bytes_per_cycle;
+        self.setup_cycles + (payload - compute_cycles).max(0.0)
+    }
+
+    /// Stall produced by streaming `chunks` chunks of `chunk_bytes` each,
+    /// where each chunk's payload can hide behind `compute_per_chunk`
+    /// cycles of computation. The first chunk cannot be hidden (cold
+    /// start).
+    pub fn streaming_overhead(
+        &self,
+        chunks: usize,
+        chunk_bytes: usize,
+        compute_per_chunk: f64,
+    ) -> f64 {
+        if chunks == 0 {
+            return 0.0;
+        }
+        let cold = self.transfer_cycles(chunk_bytes);
+        let steady: f64 = (chunks - 1) as f64 * self.overlapped_cost(chunk_bytes, compute_per_chunk);
+        cold + steady
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_with_bytes() {
+        let d = WOLF_DMA;
+        let t1 = d.transfer_cycles(800);
+        let t2 = d.transfer_cycles(1600);
+        assert!((t2 - t1 - 100.0).abs() < 1e-9); // +800 bytes @ 8 B/cyc
+    }
+
+    #[test]
+    fn fully_hidden_when_compute_dominates() {
+        let d = WOLF_DMA;
+        // 304-byte neuron row (76 weights), 380 cycles of compute: only
+        // the setup shows.
+        assert_eq!(d.overlapped_cost(304, 380.0), d.setup_cycles);
+    }
+
+    #[test]
+    fn stall_when_transfer_dominates() {
+        let d = WOLF_DMA;
+        let c = d.overlapped_cost(8000, 100.0); // 1000-cycle payload
+        assert!((c - (30.0 + 900.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn streaming_cold_start_counts_once() {
+        let d = WOLF_DMA;
+        let one = d.streaming_overhead(1, 400, 1000.0);
+        assert_eq!(one, d.transfer_cycles(400));
+        let many = d.streaming_overhead(10, 400, 1000.0);
+        assert_eq!(many, one + 9.0 * d.setup_cycles);
+    }
+
+    #[test]
+    fn zero_chunks_zero_cost() {
+        assert_eq!(WOLF_DMA.streaming_overhead(0, 100, 10.0), 0.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Memory geometry of the modeled chips and the per-region access
+//! penalties that produce the paper's placement boundaries (blue grid =
+//! RAM→flash on Cortex-M, purple = private→shared L2 on the FC, gray =
+//! L1→L2-with-DMA on the cluster).
+
+/// A memory region a network (or one streaming buffer) can live in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Region {
+    /// Cortex-M on-chip SRAM.
+    Ram,
+    /// Cortex-M non-volatile flash (wait states on random reads).
+    Flash,
+    /// Mr. Wolf FC private L2 (64 kB, zero-conflict).
+    PrivateL2,
+    /// Mr. Wolf shared L2 (448 kB, 4 banks, arbitration).
+    SharedL2,
+    /// Mr. Wolf cluster L1 TCDM (64 kB, 16 banks, single-cycle).
+    L1,
+    /// Network does not fit anywhere — deployment fails (the paper's
+    /// "0.0" cells in Figs. 8–10).
+    NoFit,
+}
+
+impl Region {
+    pub fn name(self) -> &'static str {
+        match self {
+            Region::Ram => "RAM",
+            Region::Flash => "flash",
+            Region::PrivateL2 => "private L2",
+            Region::SharedL2 => "shared L2",
+            Region::L1 => "L1",
+            Region::NoFit => "NO FIT",
+        }
+    }
+}
+
+/// Chip-level memory spec (sizes in bytes).
+#[derive(Debug, Clone, Copy)]
+pub struct ChipMemory {
+    /// SRAM usable for network + buffers (Cortex-M chips).
+    pub ram: usize,
+    /// Flash usable for constant network data (Cortex-M chips).
+    pub flash: usize,
+    /// Extra cycles per 32-bit weight load when running from flash.
+    pub flash_penalty_per_word: f64,
+}
+
+/// The evaluation chips.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Chip {
+    /// STM32L475VG (Fig. 7/8/10/11/12 measurements): 96 kB usable RAM
+    /// (paper Sec. IV-B example), 1 MB flash, ART cache keeps the flash
+    /// penalty mild ("degrades slightly").
+    Stm32l475vg,
+    /// nRF52832 on InfiniWolf (Table II): 64 kB RAM, 512 kB flash, no
+    /// flash cache comparable to ART — larger effective penalty.
+    Nrf52832,
+    /// STM32F769 (Cortex-M7 @216 MHz): 512 kB SRAM, 2 MB flash behind
+    /// the ART accelerator + L1 cache.
+    Stm32f769,
+}
+
+impl Chip {
+    pub fn memory(self) -> ChipMemory {
+        match self {
+            Chip::Stm32l475vg => ChipMemory {
+                ram: 96 * 1024,
+                flash: 1024 * 1024,
+                flash_penalty_per_word: 1.0,
+            },
+            Chip::Nrf52832 => ChipMemory {
+                ram: 64 * 1024,
+                flash: 512 * 1024,
+                flash_penalty_per_word: 2.5,
+            },
+            Chip::Stm32f769 => ChipMemory {
+                ram: 512 * 1024,
+                flash: 2 * 1024 * 1024,
+                flash_penalty_per_word: 0.5,
+            },
+        }
+    }
+
+    /// Core clock used in the paper's measurements.
+    pub fn freq_hz(self) -> f64 {
+        match self {
+            Chip::Stm32l475vg => 80.0e6,
+            Chip::Nrf52832 => 64.0e6,
+            Chip::Stm32f769 => 216.0e6,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Chip::Stm32l475vg => "STM32L475VG",
+            Chip::Nrf52832 => "nRF52832",
+            Chip::Stm32f769 => "STM32F769",
+        }
+    }
+}
+
+/// Mr. Wolf memory geometry (Sec. III-B): 512 kB L2 split into 448 kB
+/// shared + 64 kB FC-private; 64 kB cluster L1 (16 × 4 kB banks).
+#[derive(Debug, Clone, Copy)]
+pub struct WolfMemory {
+    pub private_l2: usize,
+    pub shared_l2: usize,
+    pub l1: usize,
+    /// Extra cycles per word for FC accesses to *shared* L2 (bank
+    /// arbitration) relative to private L2.
+    pub shared_l2_penalty_per_word: f64,
+    /// Extra cycles per word for cluster cores reading directly from L2
+    /// instead of L1 (only relevant without DMA staging).
+    pub cluster_l2_penalty_per_word: f64,
+}
+
+pub const WOLF_MEMORY: WolfMemory = WolfMemory {
+    private_l2: 64 * 1024,
+    shared_l2: 448 * 1024,
+    l1: 64 * 1024,
+    shared_l2_penalty_per_word: 0.5,
+    cluster_l2_penalty_per_word: 4.0,
+};
+
+/// Mr. Wolf SoC/cluster clock used in the paper's measurements (100 MHz:
+/// "at this frequency the energy efficiency is maximized").
+pub const WOLF_FREQ_HZ: f64 = 100.0e6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_sizes_match_datasheets() {
+        assert_eq!(Chip::Stm32l475vg.memory().ram, 98_304);
+        assert_eq!(Chip::Nrf52832.memory().ram, 65_536);
+        assert_eq!(Chip::Nrf52832.memory().flash, 524_288);
+    }
+
+    #[test]
+    fn wolf_l2_split_matches_paper() {
+        // 448 kB shared + 64 kB private = 512 kB total L2.
+        assert_eq!(WOLF_MEMORY.shared_l2 + WOLF_MEMORY.private_l2, 512 * 1024);
+        assert_eq!(WOLF_MEMORY.l1, 16 * 4 * 1024);
+    }
+
+    #[test]
+    fn flash_penalty_ordering() {
+        // ART-cached STM32 flash must be cheaper than nRF52 flash.
+        assert!(
+            Chip::Stm32l475vg.memory().flash_penalty_per_word
+                < Chip::Nrf52832.memory().flash_penalty_per_word
+        );
+    }
+
+    #[test]
+    fn region_names_unique() {
+        use std::collections::HashSet;
+        let names: HashSet<&str> = [
+            Region::Ram,
+            Region::Flash,
+            Region::PrivateL2,
+            Region::SharedL2,
+            Region::L1,
+            Region::NoFit,
+        ]
+        .iter()
+        .map(|r| r.name())
+        .collect();
+        assert_eq!(names.len(), 6);
+    }
+}

@@ -1,0 +1,172 @@
+//! MCU target models: instruction costs ([`isa`]), memory geometry
+//! ([`memspec`]), DMA streaming ([`dma`]) and power ([`power`]).
+//!
+//! A [`Target`] bundles one deployable execution configuration — the
+//! paper's four Table II columns plus the Cortex-M0 and the STM32 chip
+//! used in the microbenchmark figures.
+
+pub mod dma;
+pub mod isa;
+pub mod memspec;
+pub mod power;
+
+pub use isa::{Core, DataType, IsaExtensions};
+pub use memspec::{Chip, Region};
+
+/// One deployable execution target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// ARM Cortex-M4F on the given chip.
+    CortexM4(Chip),
+    /// ARM Cortex-M7F on the given chip.
+    CortexM7(Chip),
+    /// ARM Cortex-M0+ on the given chip (no FPU: fixed-point only in
+    /// practice).
+    CortexM0(Chip),
+    /// Mr. Wolf fabric controller (IBEX, RV32IMC).
+    WolfFc,
+    /// Mr. Wolf cluster with `1..=8` active RI5CY cores.
+    WolfCluster { cores: u32 },
+}
+
+impl Target {
+    /// The core microarchitecture this target executes on.
+    pub fn core(self) -> Core {
+        match self {
+            Target::CortexM4(_) => Core::CortexM4,
+            Target::CortexM7(_) => Core::CortexM7,
+            Target::CortexM0(_) => Core::CortexM0,
+            Target::WolfFc => Core::Ibex,
+            Target::WolfCluster { .. } => Core::Riscy,
+        }
+    }
+
+    /// Number of cores computing in parallel.
+    pub fn num_cores(self) -> u32 {
+        match self {
+            Target::WolfCluster { cores } => cores.clamp(1, 8),
+            _ => 1,
+        }
+    }
+
+    /// Core clock frequency (the paper's measurement operating points).
+    pub fn freq_hz(self) -> f64 {
+        match self {
+            Target::CortexM4(chip) | Target::CortexM7(chip) | Target::CortexM0(chip) => {
+                chip.freq_hz()
+            }
+            Target::WolfFc | Target::WolfCluster { .. } => memspec::WOLF_FREQ_HZ,
+        }
+    }
+
+    /// Active power in mW while computing (utilization 1.0; the
+    /// simulator refines cluster power with the measured utilization).
+    pub fn active_mw(self) -> f64 {
+        match self {
+            Target::CortexM7(_) => power::STM32F769_M7.active_mw,
+            Target::CortexM4(Chip::Nrf52832) | Target::CortexM0(Chip::Nrf52832) => {
+                power::NRF52832_M4.active_mw
+            }
+            Target::CortexM4(_) | Target::CortexM0(_) => power::STM32L475.active_mw,
+            Target::WolfFc => power::WOLF_FC.active_mw,
+            Target::WolfCluster { cores } => power::WOLF_CLUSTER.active_mw(cores.clamp(1, 8), 1.0),
+        }
+    }
+
+    /// Does this target support hardware floats?
+    pub fn supports_float(self) -> bool {
+        self.core().has_fpu()
+    }
+
+    /// One-time cluster bring-up cost in seconds (activation + init +
+    /// deactivation, Table II footnote: "around 1~1.3 ms"); zero for
+    /// non-cluster targets.
+    pub fn fixed_overhead_seconds(self) -> f64 {
+        match self {
+            Target::WolfCluster { .. } => 1.2e-3,
+            _ => 0.0,
+        }
+    }
+
+    /// Average power during the fixed-overhead phase.
+    pub fn fixed_overhead_mw(self) -> f64 {
+        match self {
+            Target::WolfCluster { .. } => power::WOLF_CLUSTER.overhead_phase_mw,
+            _ => 0.0,
+        }
+    }
+
+    /// Human-readable name (Table II column headings).
+    pub fn label(self) -> String {
+        match self {
+            Target::CortexM4(chip) => format!("Cortex-M4 ({})", chip.name()),
+            Target::CortexM7(chip) => format!("Cortex-M7 ({})", chip.name()),
+            Target::CortexM0(chip) => format!("Cortex-M0 ({})", chip.name()),
+            Target::WolfFc => "IBEX (Wolf FC)".to_string(),
+            Target::WolfCluster { cores: 1 } => "Single-RI5CY".to_string(),
+            Target::WolfCluster { cores } => format!("Multi-RI5CY ({cores})"),
+        }
+    }
+
+    /// The four Table II columns.
+    pub fn table2_targets() -> [Target; 4] {
+        [
+            Target::CortexM4(Chip::Nrf52832),
+            Target::WolfFc,
+            Target::WolfCluster { cores: 1 },
+            Target::WolfCluster { cores: 8 },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_targets_have_expected_cores() {
+        let [m4, fc, s, m] = Target::table2_targets();
+        assert_eq!(m4.core(), Core::CortexM4);
+        assert_eq!(fc.core(), Core::Ibex);
+        assert_eq!(s.core(), Core::Riscy);
+        assert_eq!(m.num_cores(), 8);
+    }
+
+    #[test]
+    fn cluster_cores_clamped() {
+        assert_eq!(Target::WolfCluster { cores: 0 }.num_cores(), 1);
+        assert_eq!(Target::WolfCluster { cores: 12 }.num_cores(), 8);
+    }
+
+    #[test]
+    fn only_cluster_pays_activation() {
+        assert_eq!(Target::WolfFc.fixed_overhead_seconds(), 0.0);
+        assert!(Target::WolfCluster { cores: 8 }.fixed_overhead_seconds() > 0.0);
+    }
+
+    #[test]
+    fn float_support_follows_fpu() {
+        assert!(Target::CortexM4(Chip::Nrf52832).supports_float());
+        assert!(!Target::WolfFc.supports_float());
+        assert!(Target::WolfCluster { cores: 1 }.supports_float());
+    }
+
+    #[test]
+    fn frequencies_match_paper_operating_points() {
+        assert_eq!(Target::CortexM4(Chip::Nrf52832).freq_hz(), 64.0e6);
+        assert_eq!(Target::WolfFc.freq_hz(), 100.0e6);
+    }
+
+    #[test]
+    fn m7_is_faster_per_mac_than_m4_but_hungrier() {
+        use crate::targets::isa::DataType;
+        let m7 = Target::CortexM7(Chip::Stm32f769);
+        let m4 = Target::CortexM4(Chip::Stm32l475vg);
+        assert!(
+            m7.core().mac_cycles(DataType::Float32) < m4.core().mac_cycles(DataType::Float32)
+        );
+        assert!(m7.freq_hz() > m4.freq_hz());
+        assert!(m7.active_mw() > m4.active_mw());
+        assert!(m7.supports_float());
+    }
+}

@@ -1,0 +1,118 @@
+//! Power and energy model, fitted to the paper's Table II operating
+//! points (Keysight N6705C measurements on InfiniWolf).
+//!
+//! | configuration                  | paper (app A) | model |
+//! |--------------------------------|---------------|-------|
+//! | nRF52832 Cortex-M4 @64 MHz     | 10.44 mW      | 10.5  |
+//! | Mr. Wolf IBEX (FC) @100 MHz    | 10.75 mW      | 10.75 |
+//! | Mr. Wolf 1× RI5CY @100 MHz     | 20.35 mW      | 20.3  |
+//! | Mr. Wolf 8× RI5CY @100 MHz     | 61.79 mW      | 61.6  |
+//! | cluster activation phase       | 11.88 mW      | 11.88 |
+//!
+//! Cluster power decomposes as `base + n_cores · per_core`; the base
+//! covers the SoC domain + cluster infrastructure (interconnect, event
+//! unit, shared FPUs, DMA). Table II's sub-sample-interval measurements
+//! for apps B/C smear active power with idle time (the paper footnotes
+//! the 0.1024 ms instrument resolution); our model reports true active
+//! power, so B/C *power* columns differ from the paper while runtime and
+//! energy *ratios* reproduce — EXPERIMENTS.md discusses this.
+
+/// Power states of a single-core MCU (Cortex-M or FC).
+#[derive(Debug, Clone, Copy)]
+pub struct McuPower {
+    pub active_mw: f64,
+    pub sleep_mw: f64,
+}
+
+/// nRF52832 @64 MHz, DC/DC enabled.
+pub const NRF52832_M4: McuPower = McuPower {
+    active_mw: 10.5,
+    sleep_mw: 0.0057, // 1.9 µA × 3 V system-on sleep
+};
+
+/// STM32L475VG @80 MHz.
+pub const STM32L475: McuPower = McuPower {
+    active_mw: 8.8,
+    sleep_mw: 0.0042,
+};
+
+/// STM32F769 Cortex-M7 @216 MHz (datasheet run-mode typ.).
+pub const STM32F769_M7: McuPower = McuPower {
+    active_mw: 95.0,
+    sleep_mw: 0.0090,
+};
+
+/// Mr. Wolf fabric controller @100 MHz.
+pub const WOLF_FC: McuPower = McuPower {
+    active_mw: 10.75,
+    sleep_mw: 0.0072,
+};
+
+/// Mr. Wolf cluster power decomposition @100 MHz.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterPower {
+    /// SoC domain + cluster infrastructure while the cluster is active.
+    pub base_mw: f64,
+    /// Incremental power per busy RI5CY core.
+    pub per_core_mw: f64,
+    /// Average power during cluster activation/init/deactivation.
+    pub overhead_phase_mw: f64,
+}
+
+pub const WOLF_CLUSTER: ClusterPower = ClusterPower {
+    base_mw: 14.4,
+    per_core_mw: 5.9,
+    overhead_phase_mw: 11.88,
+};
+
+impl ClusterPower {
+    /// Active power with `cores` busy cores at average utilization
+    /// `util` ∈ [0, 1] (idle cores clock-gate at the barrier).
+    pub fn active_mw(&self, cores: u32, util: f64) -> f64 {
+        self.base_mw + self.per_core_mw * cores as f64 * util.clamp(0.0, 1.0)
+    }
+}
+
+/// Energy of a phase: `seconds × milliwatts` in microjoules.
+pub fn energy_uj(seconds: f64, milliwatts: f64) -> f64 {
+    seconds * milliwatts * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_fit_matches_table2_app_a() {
+        // 1 core: 20.35 mW, 8 cores: 61.79 mW (paper, app A).
+        let single = WOLF_CLUSTER.active_mw(1, 1.0);
+        let multi = WOLF_CLUSTER.active_mw(8, 1.0);
+        assert!((single - 20.35).abs() < 0.1, "{single}");
+        assert!((multi - 61.79).abs() < 0.6, "{multi}");
+    }
+
+    #[test]
+    fn utilization_reduces_power() {
+        let full = WOLF_CLUSTER.active_mw(8, 1.0);
+        let half = WOLF_CLUSTER.active_mw(8, 0.5);
+        assert!(half < full);
+        assert!(half > WOLF_CLUSTER.base_mw);
+    }
+
+    #[test]
+    fn table2_energy_reproduction_app_a() {
+        // M4: 17.6 ms × 10.44 mW = 183.74 µJ (paper).
+        let e = energy_uj(17.6e-3, 10.44);
+        assert!((e - 183.74).abs() < 0.1);
+        // Multi-RI5CY: 0.8 ms × 61.79 mW = 49.43 µJ (paper).
+        let e = energy_uj(0.8e-3, 61.79);
+        assert!((e - 49.43).abs() < 0.1);
+    }
+
+    #[test]
+    fn sleep_far_below_active() {
+        for p in [NRF52832_M4, STM32L475, WOLF_FC] {
+            assert!(p.sleep_mw < p.active_mw / 100.0);
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Small shared utilities: PRNG, property-test driver, TSV parsing, table
+//! printing. Hand-rolled because the offline crate set has no `rand`,
+//! `proptest` or `criterion`.
+
+pub mod proptest;
+pub mod rng;
+pub mod table;
+pub mod tsv;
+
+/// Relative/absolute closeness check used across numeric tests.
+pub fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(&x, &y)| (x - y).abs() <= atol + rtol * y.abs().max(x.abs()))
+}
+
+/// Maximum absolute difference between two slices (∞-norm distance).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Index of the maximum element (classification argmax).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allclose_basic() {
+        assert!(allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6));
+        assert!(!allclose(&[1.0], &[1.1], 1e-5, 1e-6));
+        assert!(!allclose(&[1.0], &[1.0, 2.0], 1e-5, 1e-6));
+    }
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0, 2.0]), 0);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+    }
+}

@@ -1,0 +1,66 @@
+//! Minimal property-based testing driver (the offline crate set has no
+//! `proptest`/`quickcheck`).
+//!
+//! A property is a closure from a seeded [`Rng`] to `Result<(), String>`.
+//! The driver runs it for `cases` derived seeds; on failure it reports the
+//! failing seed so the case can be replayed deterministically:
+//!
+//! ```
+//! use fann_on_mcu::util::proptest::check;
+//! check("addition commutes", 256, |rng| {
+//!     let a = rng.range_f32(-1e3, 1e3);
+//!     let b = rng.range_f32(-1e3, 1e3);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Base seed for derived case seeds; changing it reshuffles all property
+/// test inputs (it is deliberately fixed for reproducibility).
+pub const BASE_SEED: u64 = 0xFA99_05EC_0DE5_16ED;
+
+/// Run `prop` for `cases` deterministic cases; panic with the failing seed
+/// and message on the first failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = BASE_SEED ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 32, |rng| {
+            let x = rng.uniform();
+            ensure((0.0..1.0).contains(&x), "out of range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn check_reports_failures() {
+        check("failing", 8, |rng| {
+            ensure(rng.uniform() < 0.0, "always fails")
+        });
+    }
+}

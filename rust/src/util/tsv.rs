@@ -1,0 +1,167 @@
+//! Parser for the parity-vector TSV files emitted by `python/compile/aot.py`.
+//!
+//! Format (one record per line, tab-separated):
+//!
+//! ```text
+//! case<TAB><topology-name>
+//! dec<TAB><decimal-point>              (fixed-point file only)
+//! acts<TAB><hidden-act><TAB><output-act>
+//! w0<TAB><rows>x<cols><TAB><v v v ...>
+//! b0<TAB><len><TAB><v v v ...>
+//! ...
+//! x<TAB><batch>x<in><TAB>...
+//! out<TAB><batch>x<out><TAB>...
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+/// One named tensor: shape (1-D or 2-D) + flat values.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        self.values.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        self.values.iter().map(|&v| v as i32).collect()
+    }
+
+    pub fn as_i64(&self) -> Vec<i64> {
+        self.values.iter().map(|&v| v as i64).collect()
+    }
+}
+
+/// One parity case: a topology's tensors keyed by tag.
+#[derive(Debug, Clone, Default)]
+pub struct ParityCase {
+    pub name: String,
+    pub dec: Option<u32>,
+    pub hidden_act: String,
+    pub output_act: String,
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl ParityCase {
+    pub fn tensor(&self, tag: &str) -> Option<&Tensor> {
+        self.tensors
+            .iter()
+            .find(|(t, _)| t == tag)
+            .map(|(_, v)| v)
+    }
+
+    /// Number of (w_i, b_i) layer pairs present.
+    pub fn num_layers(&self) -> usize {
+        self.tensors
+            .iter()
+            .filter(|(t, _)| t.starts_with('w'))
+            .count()
+    }
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    s.split('x')
+        .map(|d| d.parse::<usize>().context("bad shape dim"))
+        .collect()
+}
+
+/// Parse a full parity TSV file into its cases.
+pub fn parse_parity(text: &str) -> Result<Vec<ParityCase>> {
+    let mut cases: Vec<ParityCase> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('\t').collect();
+        match parts[0] {
+            "case" => {
+                if parts.len() != 2 {
+                    bail!("line {}: malformed case record", lineno + 1);
+                }
+                cases.push(ParityCase {
+                    name: parts[1].to_string(),
+                    ..Default::default()
+                });
+            }
+            "dec" => {
+                let case = cases.last_mut().context("dec before case")?;
+                case.dec = Some(parts[1].parse()?);
+            }
+            "acts" => {
+                let case = cases.last_mut().context("acts before case")?;
+                if parts.len() != 3 {
+                    bail!("line {}: malformed acts record", lineno + 1);
+                }
+                case.hidden_act = parts[1].to_string();
+                case.output_act = parts[2].to_string();
+            }
+            tag => {
+                let case = cases.last_mut().context("tensor before case")?;
+                if parts.len() != 3 {
+                    bail!("line {}: malformed tensor record", lineno + 1);
+                }
+                let shape = parse_shape(parts[1])?;
+                let values: Vec<f64> = parts[2]
+                    .split(' ')
+                    .map(|v| v.parse::<f64>().context("bad value"))
+                    .collect::<Result<_>>()?;
+                let n: usize = shape.iter().product();
+                if values.len() != n {
+                    bail!(
+                        "line {}: tensor {tag} shape {:?} wants {n} values, got {}",
+                        lineno + 1,
+                        shape,
+                        values.len()
+                    );
+                }
+                case.tensors.push((tag.to_string(), Tensor { shape, values }));
+            }
+        }
+    }
+    Ok(cases)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "case\txor\nacts\ttanh\tsigmoid\nw0\t2x3\t1 2 3 4 5 6\nb0\t3\t0.5 0.5 0.5\nx\t1x2\t1 0\nout\t1x3\t0.1 0.2 0.3\n";
+
+    #[test]
+    fn parses_sample() {
+        let cases = parse_parity(SAMPLE).unwrap();
+        assert_eq!(cases.len(), 1);
+        let c = &cases[0];
+        assert_eq!(c.name, "xor");
+        assert_eq!(c.hidden_act, "tanh");
+        assert_eq!(c.num_layers(), 1);
+        let w = c.tensor("w0").unwrap();
+        assert_eq!(w.shape, vec![2, 3]);
+        assert_eq!(w.values[5], 6.0);
+    }
+
+    #[test]
+    fn rejects_bad_count() {
+        let bad = "case\tt\nw0\t2x2\t1 2 3\n";
+        assert!(parse_parity(bad).is_err());
+    }
+
+    #[test]
+    fn dec_record_parsed() {
+        let s = "case\tt\ndec\t12\nacts\ttanh\tsigmoid\n";
+        let cases = parse_parity(s).unwrap();
+        assert_eq!(cases[0].dec, Some(12));
+    }
+}

@@ -1,0 +1,104 @@
+//! End-to-end application showcase tests (Sec. VI): train each app,
+//! verify accuracy bands, deploy to all Table II targets, check the
+//! paper's runtime/energy ordering.
+
+use fann_on_mcu::apps::{self, ACTIVITY, FALL, GESTURE};
+use fann_on_mcu::targets::{Chip, Target};
+
+#[test]
+fn fall_detection_full_showcase() {
+    let app = apps::train_app(&FALL, 21).unwrap();
+    assert!(
+        (0.72..=1.0).contains(&app.test_accuracy),
+        "app B accuracy {} (paper 84%)",
+        app.test_accuracy
+    );
+    let x = vec![0.1f32; 117];
+    let mut times = Vec::new();
+    for t in Target::table2_targets() {
+        let (_, r) = apps::run_on_target(&app, t, &x).unwrap();
+        times.push((t.label(), r.seconds, r.energy_uj));
+    }
+    // Paper ordering: M4 slowest, multi-RI5CY fastest.
+    assert!(times[0].1 > times[1].1, "M4 should be slower than IBEX");
+    assert!(times[2].1 > times[3].1, "single > multi RI5CY");
+    // Sub-millisecond on all Wolf configurations (paper: 0.3/0.14/0.03 ms).
+    for (label, secs, _) in &times[1..] {
+        assert!(*secs < 1.0e-3, "{label}: {secs}");
+    }
+}
+
+#[test]
+fn activity_showcase_microsecond_range() {
+    let app = apps::train_app(&ACTIVITY, 22).unwrap();
+    let x = vec![0.1f32; 7];
+    let (_, r) = apps::run_on_target(&app, Target::WolfCluster { cores: 8 }, &x).unwrap();
+    // Paper: 0.004 ms (4 µs) compute for app C on 8 cores.
+    assert!(
+        r.seconds < 30.0e-6,
+        "app C multi-core compute {} s",
+        r.seconds
+    );
+    // vs the FPGA of [46]: 270 ns at 241 mW. The paper's point is energy:
+    // even the slower MCU beats the FPGA's energy by orders of magnitude.
+    let fpga_energy_uj = 270e-9 * 241.0 * 1e3;
+    let (_, r_fc) = apps::run_on_target(&app, Target::WolfFc, &x).unwrap();
+    assert!(r_fc.energy_uj < fpga_energy_uj * 0.1 * 1e3);
+}
+
+#[test]
+fn gesture_runtime_ordering_matches_table2() {
+    let app = apps::train_app(&GESTURE, 23).unwrap();
+    assert!(
+        app.test_accuracy > 0.70,
+        "app A accuracy {} (paper 85.58%)",
+        app.test_accuracy
+    );
+    let x = vec![0.1f32; 76];
+
+    let (_, m4) = apps::run_on_target(&app, Target::CortexM4(Chip::Nrf52832), &x).unwrap();
+    let (_, ibex) = apps::run_on_target(&app, Target::WolfFc, &x).unwrap();
+    let (_, single) = apps::run_on_target(&app, Target::WolfCluster { cores: 1 }, &x).unwrap();
+    let (_, multi) = apps::run_on_target(&app, Target::WolfCluster { cores: 8 }, &x).unwrap();
+
+    // Table II shape: 17.6 / 11.4 / 5.7 / 0.8 ms.
+    assert!((10e-3..25e-3).contains(&m4.seconds), "M4 {}", m4.seconds);
+    assert!((8e-3..15e-3).contains(&ibex.seconds), "IBEX {}", ibex.seconds);
+    assert!(
+        (4e-3..8e-3).contains(&single.seconds),
+        "1xRI5CY {}",
+        single.seconds
+    );
+    assert!(
+        (0.5e-3..1.2e-3).contains(&multi.seconds),
+        "8xRI5CY {}",
+        multi.seconds
+    );
+
+    // Energy: paper 183.7 / 122.6 / 116.0 / 49.4 µJ (compute phase).
+    assert!(multi.energy_uj < single.energy_uj);
+    assert!(single.energy_uj < ibex.energy_uj);
+    assert!(ibex.energy_uj < m4.energy_uj);
+
+    // Headline: 22x speedup, −73% energy for continuous classification.
+    let speedup = m4.seconds / multi.seconds;
+    assert!((17.0..27.0).contains(&speedup), "headline speedup {speedup}");
+}
+
+#[test]
+fn fixed_and_float_agree_on_deployed_decisions() {
+    let app = apps::train_app(&FALL, 24).unwrap();
+    let data = FALL.dataset(24);
+    let mut agree = 0;
+    let n = 50;
+    for i in 0..n {
+        let x = data.input(i);
+        let f = fann_on_mcu::util::argmax(&app.net.run(x));
+        let (_, r) = apps::run_on_target(&app, Target::WolfFc, x).unwrap();
+        let q = fann_on_mcu::util::argmax(&r.outputs);
+        if f == q {
+            agree += 1;
+        }
+    }
+    assert!(agree >= 45, "{agree}/{n} agreement between float and fixed");
+}

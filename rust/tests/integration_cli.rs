@@ -1,0 +1,142 @@
+//! CLI integration tests: run the built `fann-on-mcu` binary end to end
+//! (train → deploy → run) through a temp directory.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_fann-on-mcu"))
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fann_on_mcu_cli_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["train", "deploy", "run", "info", "train-pjrt"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn info_lists_apps() {
+    let out = bin().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("gesture") && text.contains("fall") && text.contains("activity"));
+}
+
+#[test]
+fn unknown_command_fails_with_help() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn unknown_flag_rejected() {
+    let out = bin().args(["train", "--ap", "fall"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown flag"));
+}
+
+#[test]
+fn train_deploy_run_roundtrip() {
+    let dir = tmpdir("roundtrip");
+    let prefix = dir.join("activity");
+    let prefix_s = prefix.to_str().unwrap();
+
+    // train + save
+    let out = bin()
+        .args(["train", "--app", "activity", "--seed", "7", "--out", prefix_s])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "train failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(prefix.with_extension("net").exists());
+    let fixed_net = dir.join("activity_fixed.net");
+    assert!(fixed_net.exists());
+
+    // deploy the fixed net to the FC, writing generated C
+    let gen_dir = dir.join("gen");
+    let out = bin()
+        .args([
+            "deploy",
+            "--net",
+            fixed_net.to_str().unwrap(),
+            "--target",
+            "ibex",
+            "--out",
+            gen_dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "deploy failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(gen_dir.join("fann_conf.h").exists());
+    assert!(gen_dir.join("fann_inner_loop.c").exists());
+
+    // run one classification on the cluster
+    let input = vec!["0.1"; 7].join(",");
+    let out = bin()
+        .args([
+            "run",
+            "--net",
+            prefix.with_extension("net").to_str().unwrap(),
+            "--target",
+            "cluster8",
+            "--input",
+            &input,
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "run failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("predicted class"));
+    assert!(text.contains("energy/classification"));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_rejects_float_net_on_fpu_less_target() {
+    let dir = tmpdir("fpu");
+    let prefix = dir.join("fall");
+    let out = bin()
+        .args(["train", "--app", "fall", "--seed", "3", "--out", prefix.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let input = vec!["0.0"; 117].join(",");
+    let out = bin()
+        .args([
+            "run",
+            "--net",
+            prefix.with_extension("net").to_str().unwrap(),
+            "--target",
+            "ibex",
+            "--input",
+            &input,
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("fixed-point"));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,124 @@
+//! Integration tests over the deployment pipeline: train → quantize →
+//! plan → codegen → simulate, across targets.
+
+use fann_on_mcu::codegen::{self, NetSource};
+use fann_on_mcu::deploy::{self, DmaStrategy, NetShape};
+use fann_on_mcu::fann::{Activation, FixedNetwork, Network};
+use fann_on_mcu::simulator::{self, CostOptions, Executable};
+use fann_on_mcu::targets::{Chip, DataType, Region, Target};
+use fann_on_mcu::util::rng::Rng;
+
+fn trained_like(sizes: &[usize], seed: u64) -> Network {
+    let mut rng = Rng::new(seed);
+    let mut net = Network::new(sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+    net.randomize(&mut rng, None);
+    net
+}
+
+#[test]
+fn full_pipeline_float_m4() {
+    let net = trained_like(&[5, 100, 100, 3], 1);
+    let shape = NetShape::from(&net);
+    let plan = deploy::plan(&shape, Target::CortexM4(Chip::Stm32l475vg), DataType::Float32).unwrap();
+    assert_eq!(plan.region, Region::Ram);
+
+    // codegen emits a complete bundle
+    let code = codegen::generate(&plan, NetSource::Float(&net));
+    assert!(code.file("fann_conf.h").is_some());
+    assert!(code.file("fann_net.h").unwrap().contains("fann_weights_2"));
+
+    // simulate produces outputs + timing
+    let x = [0.1f32, 0.2, -0.3, 0.4, -0.5];
+    let r = simulator::simulate(&plan, &Executable::Float(&net), &x, CostOptions::default()).unwrap();
+    assert_eq!(r.outputs.len(), 3);
+    assert!(r.seconds > 0.0 && r.energy_uj > 0.0);
+    assert_eq!(r.outputs, net.run(&x));
+}
+
+#[test]
+fn full_pipeline_fixed_wolf_fc() {
+    let net = trained_like(&[10, 16, 4], 2);
+    let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+    let shape = NetShape::from(&fixed);
+    let plan = deploy::plan(&shape, Target::WolfFc, DataType::Fixed).unwrap();
+    assert_eq!(plan.region, Region::PrivateL2);
+
+    let code = codegen::generate(&plan, NetSource::Fixed(&fixed));
+    assert!(code
+        .file("fann_conf.h")
+        .unwrap()
+        .contains(&format!("FANN_FIXED_DECIMAL_POINT {}", fixed.decimal_point)));
+
+    let x = vec![0.05f32; 10];
+    let r = simulator::simulate(&plan, &Executable::Fixed(&fixed), &x, CostOptions::default()).unwrap();
+    assert_eq!(r.outputs.len(), 4);
+}
+
+#[test]
+fn dma_strategies_change_with_network_scale() {
+    // Growing the Fig. 11 family crosses L1 -> layer-wise -> neuron-wise,
+    // matching the paper's 12 / 21 hidden-layer boundaries.
+    let mut regimes = Vec::new();
+    for l in [4, 16, 23] {
+        let shape = fann_on_mcu::bench::fig11_shape(l, 8);
+        let plan = deploy::plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Fixed).unwrap();
+        regimes.push((plan.region, plan.dma));
+    }
+    assert_eq!(regimes[0], (Region::L1, None));
+    assert_eq!(regimes[1], (Region::SharedL2, Some(DmaStrategy::LayerWise)));
+    assert_eq!(regimes[2], (Region::SharedL2, Some(DmaStrategy::NeuronWise)));
+}
+
+#[test]
+fn more_cores_never_slower_for_big_nets() {
+    let net = trained_like(&[76, 300, 200, 100, 10], 3);
+    let shape = NetShape::from(&net);
+    let x = vec![0.1f32; 76];
+    let mut prev = f64::INFINITY;
+    for cores in [1u32, 2, 4, 8] {
+        let plan = deploy::plan(&shape, Target::WolfCluster { cores }, DataType::Float32).unwrap();
+        let r = simulator::simulate(&plan, &Executable::Float(&net), &x, CostOptions::default())
+            .unwrap();
+        assert!(
+            r.seconds < prev,
+            "{cores} cores: {} not faster than {prev}",
+            r.seconds
+        );
+        prev = r.seconds;
+    }
+}
+
+#[test]
+fn quantization_plus_deployment_preserves_decisions() {
+    // Train a real classifier, quantize, deploy to every Table II
+    // target: argmax decisions agree with float on >90% of samples.
+    let app = fann_on_mcu::apps::train_app(&fann_on_mcu::apps::ACTIVITY, 11).unwrap();
+    let data = fann_on_mcu::apps::ACTIVITY.dataset(11);
+    let mut agree = 0;
+    let n = 100.min(data.len());
+    for i in 0..n {
+        let x = data.input(i);
+        let f = fann_on_mcu::util::argmax(&app.net.run(x));
+        let q = fann_on_mcu::util::argmax(&app.fixed.run(x));
+        if f == q {
+            agree += 1;
+        }
+    }
+    assert!(agree >= 90, "only {agree}/{n} decisions agree after quantization");
+}
+
+#[test]
+fn generated_code_reflects_placement() {
+    // App A on the cluster must emit the neuron-wise DMA loop; the same
+    // net on the M4 must emit flash placement.
+    let net = trained_like(&[76, 300, 200, 100, 10], 4);
+    let shape = NetShape::from(&net);
+
+    let p = deploy::plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+    let g = codegen::generate(&p, NetSource::Float(&net));
+    assert!(g.file("fann_dma.c").unwrap().contains("fann_prefetch_row"));
+
+    let p = deploy::plan(&shape, Target::CortexM4(Chip::Nrf52832), DataType::Float32).unwrap();
+    let g = codegen::generate(&p, NetSource::Float(&net));
+    assert!(g.file("fann_conf.h").unwrap().contains("flash"));
+}

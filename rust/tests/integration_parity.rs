@@ -1,0 +1,156 @@
+//! Cross-layer numeric parity: the Rust-native inference paths must match
+//! the Pallas kernels bit-for-bit (fixed) / within float tolerance,
+//! via the parity vectors `aot.py` emits into `artifacts/`.
+//!
+//! Requires `make artifacts` (skipped otherwise).
+
+use fann_on_mcu::fann::{Activation, FixedNetwork, Network};
+use fann_on_mcu::fann::fixed::FixedLayer;
+use fann_on_mcu::fann::net::Layer;
+use fann_on_mcu::runtime::ArtifactDir;
+use fann_on_mcu::util::tsv::{parse_parity, ParityCase};
+
+fn artifacts() -> Option<ArtifactDir> {
+    match ArtifactDir::locate(None) {
+        Ok(a) => Some(a),
+        Err(_) => {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn load_cases(art: &ArtifactDir, which: &str) -> Vec<ParityCase> {
+    let text = std::fs::read_to_string(art.parity_file(which)).unwrap();
+    let cases = parse_parity(&text).unwrap();
+    assert_eq!(cases.len(), 5, "expected one case per topology");
+    cases
+}
+
+/// Build a float Network from a parity case. JAX weights are (in, out);
+/// FANN rows are per output neuron.
+fn network_from_case(case: &ParityCase) -> Network {
+    let mut layers = Vec::new();
+    let n_layers = case.num_layers();
+    for l in 0..n_layers {
+        let w = case.tensor(&format!("w{l}")).unwrap();
+        let b = case.tensor(&format!("b{l}")).unwrap();
+        let (n_in, n_out) = (w.shape[0], w.shape[1]);
+        let wf = w.as_f32();
+        let mut weights = vec![0.0f32; n_in * n_out];
+        for i in 0..n_in {
+            for o in 0..n_out {
+                weights[o * n_in + i] = wf[i * n_out + o];
+            }
+        }
+        let act = if l == n_layers - 1 {
+            &case.output_act
+        } else {
+            &case.hidden_act
+        };
+        layers.push(Layer {
+            n_in,
+            n_out,
+            weights,
+            biases: b.as_f32(),
+            activation: Activation::parse(act).unwrap(),
+            steepness: 1.0,
+        });
+    }
+    Network { layers }
+}
+
+fn fixed_network_from_case(case: &ParityCase) -> FixedNetwork {
+    let mut layers = Vec::new();
+    let n_layers = case.num_layers();
+    for l in 0..n_layers {
+        let w = case.tensor(&format!("w{l}")).unwrap();
+        let b = case.tensor(&format!("b{l}")).unwrap();
+        let (n_in, n_out) = (w.shape[0], w.shape[1]);
+        let wi = w.as_i32();
+        let mut weights = vec![0i32; n_in * n_out];
+        for i in 0..n_in {
+            for o in 0..n_out {
+                weights[o * n_in + i] = wi[i * n_out + o];
+            }
+        }
+        let act = if l == n_layers - 1 {
+            &case.output_act
+        } else {
+            &case.hidden_act
+        };
+        layers.push(FixedLayer {
+            n_in,
+            n_out,
+            weights,
+            biases: b.as_i32(),
+            activation: Activation::parse(act).unwrap(),
+        });
+    }
+    FixedNetwork {
+        layers,
+        decimal_point: case.dec.unwrap(),
+    }
+}
+
+#[test]
+fn float_forward_matches_pallas() {
+    let Some(art) = artifacts() else { return };
+    for case in load_cases(&art, "float") {
+        let net = network_from_case(&case);
+        let x = case.tensor("x").unwrap();
+        let want = case.tensor("out").unwrap();
+        let (batch, n_in) = (x.shape[0], x.shape[1]);
+        let n_out = want.shape[1];
+        let xf = x.as_f32();
+        let wf = want.as_f32();
+        for s in 0..batch {
+            let got = net.run(&xf[s * n_in..(s + 1) * n_in]);
+            for (o, g) in got.iter().enumerate() {
+                let w = wf[s * n_out + o];
+                assert!(
+                    (g - w).abs() < 3e-5,
+                    "{}: sample {s} out {o}: rust {g} pallas {w}",
+                    case.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fixed_forward_bit_exact_with_pallas() {
+    let Some(art) = artifacts() else { return };
+    for case in load_cases(&art, "fixed") {
+        let net = fixed_network_from_case(&case);
+        let x = case.tensor("x").unwrap();
+        let want = case.tensor("out").unwrap();
+        let (batch, n_in) = (x.shape[0], x.shape[1]);
+        let n_out = want.shape[1];
+        let xi = x.as_i32();
+        let wi = want.as_i64();
+        for s in 0..batch {
+            let got = net.run_q(&xi[s * n_in..(s + 1) * n_in]);
+            for (o, g) in got.iter().enumerate() {
+                let w = wi[s * n_out + o];
+                assert_eq!(
+                    *g as i64, w,
+                    "{}: sample {s} out {o}: rust {g} pallas {w}",
+                    case.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parity_covers_all_topologies() {
+    let Some(art) = artifacts() else { return };
+    let float_names: Vec<String> = load_cases(&art, "float")
+        .into_iter()
+        .map(|c| c.name)
+        .collect();
+    for name in ["xor", "example", "gesture", "fall", "activity"] {
+        assert!(float_names.iter().any(|n| n == name), "missing {name}");
+    }
+}

@@ -1,0 +1,123 @@
+//! Integration tests for the PJRT runtime: load the AOT artifacts, run
+//! forward passes and the training step, verify the Rust↔JAX contract.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use fann_on_mcu::fann::TrainData;
+use fann_on_mcu::runtime::{ArtifactDir, PjrtTrainer, Runtime};
+use fann_on_mcu::util::rng::Rng;
+
+fn artifacts() -> Option<ArtifactDir> {
+    match ArtifactDir::locate(None) {
+        Ok(a) => Some(a),
+        Err(_) => {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifests_match_app_registry() {
+    let Some(art) = artifacts() else { return };
+    for (name, sizes) in [
+        ("gesture", fann_on_mcu::apps::GESTURE.sizes),
+        ("fall", fann_on_mcu::apps::FALL.sizes),
+        ("activity", fann_on_mcu::apps::ACTIVITY.sizes),
+        ("example", fann_on_mcu::apps::EXAMPLE.sizes),
+    ] {
+        let m = art.manifest(name).unwrap();
+        assert_eq!(m.layer_sizes(), sizes, "{name}");
+    }
+}
+
+#[test]
+fn forward_executable_runs_and_is_bounded() {
+    let Some(art) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let trainer = PjrtTrainer::new(&rt, &art, "xor", 11).unwrap();
+    let out = trainer.forward1(&[1.0, 0.0]).unwrap();
+    assert_eq!(out.len(), 1);
+    // sigmoid output
+    assert!((0.0..=1.0).contains(&out[0]));
+}
+
+#[test]
+fn training_step_reduces_loss_on_xor() {
+    let Some(art) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut trainer = PjrtTrainer::new(&rt, &art, "xor", 42).unwrap();
+    let data = fann_on_mcu::datasets::xor();
+    let mut rng = Rng::new(7);
+    let curve = trainer.train(&data, 400, &mut rng).unwrap();
+    let first = curve[0];
+    let last = *curve.last().unwrap();
+    assert!(
+        last < first * 0.5 && last < 0.1,
+        "loss did not drop: {first} -> {last}"
+    );
+    // The trained net must actually solve xor.
+    for (x, want) in [
+        ([0.0f32, 0.0], false),
+        ([0.0, 1.0], true),
+        ([1.0, 0.0], true),
+        ([1.0, 1.0], false),
+    ] {
+        let y = trainer.forward1(&x).unwrap()[0];
+        assert_eq!(y >= 0.5, want, "x={x:?} y={y}");
+    }
+}
+
+#[test]
+fn exported_network_matches_pjrt_forward() {
+    // The to_network() export (JAX (in,out) -> FANN row-major) must
+    // produce identical outputs through the native Rust path.
+    let Some(art) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut trainer = PjrtTrainer::new(&rt, &art, "activity", 5).unwrap();
+    let data = fann_on_mcu::datasets::activity(5);
+    let mut rng = Rng::new(8);
+    trainer.train(&data, 30, &mut rng).unwrap();
+
+    let net = trainer.to_network().unwrap();
+    let mut max_diff = 0.0f32;
+    for i in 0..20 {
+        let x = data.input(i);
+        let pjrt = trainer.forward1(x).unwrap();
+        let native = net.run(x);
+        for (a, b) in pjrt.iter().zip(&native) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+    }
+    assert!(max_diff < 2e-5, "PJRT vs native forward diff {max_diff}");
+}
+
+#[test]
+fn pjrt_accuracy_matches_native_accuracy() {
+    let Some(art) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut trainer = PjrtTrainer::new(&rt, &art, "activity", 9).unwrap();
+    let mut data = fann_on_mcu::datasets::activity(9);
+    data.normalize_inputs();
+    let mut rng = Rng::new(10);
+    trainer.train(&data, 600, &mut rng).unwrap();
+
+    let acc_pjrt = trainer.accuracy(&data).unwrap();
+    let net = trainer.to_network().unwrap();
+    let acc_native = fann_on_mcu::fann::train::accuracy(&net, &data);
+    assert!(
+        (acc_pjrt - acc_native).abs() < 0.01,
+        "pjrt {acc_pjrt} vs native {acc_native}"
+    );
+    assert!(acc_pjrt > 0.5, "training made no progress: {acc_pjrt}");
+}
+
+#[test]
+fn trainer_rejects_mismatched_data() {
+    let Some(art) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut trainer = PjrtTrainer::new(&rt, &art, "xor", 1).unwrap();
+    let bad = TrainData::new(3, 1);
+    let mut rng = Rng::new(1);
+    assert!(trainer.train(&bad, 1, &mut rng).is_err());
+}

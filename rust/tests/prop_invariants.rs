@@ -1,0 +1,263 @@
+//! Property-based tests over the coordinator invariants: placement,
+//! memory estimation, quantization, simulation cost model, file formats.
+//! Driven by the hand-rolled `util::proptest` driver (deterministic
+//! seeds, replayable failures).
+
+use fann_on_mcu::deploy::{self, estimate_memory, NetShape};
+use fann_on_mcu::fann::{io, Activation, FixedNetwork, Network, TrainData};
+use fann_on_mcu::quantize;
+use fann_on_mcu::simulator::cost::{self, CostOptions};
+use fann_on_mcu::targets::{memspec, Chip, DataType, Region, Target};
+use fann_on_mcu::util::proptest::{check, ensure};
+use fann_on_mcu::util::rng::Rng;
+
+fn random_shape(rng: &mut Rng) -> NetShape {
+    let n_hidden = rng.range_usize(1, 4);
+    let mut sizes = vec![rng.range_usize(1, 256)];
+    for _ in 0..n_hidden {
+        sizes.push(rng.range_usize(1, 256));
+    }
+    sizes.push(rng.range_usize(1, 32));
+    NetShape::new(&sizes)
+}
+
+fn random_net(rng: &mut Rng, max_width: usize) -> Network {
+    let n_hidden = rng.range_usize(1, 3);
+    let mut sizes = vec![rng.range_usize(1, max_width)];
+    for _ in 0..n_hidden {
+        sizes.push(rng.range_usize(1, max_width));
+    }
+    sizes.push(rng.range_usize(1, 8));
+    let mut net = Network::new(&sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+    net.randomize(rng, None);
+    net
+}
+
+fn acts(n: usize) -> Vec<Activation> {
+    let mut v = vec![Activation::Tanh; n - 1];
+    v.push(Activation::Sigmoid);
+    v
+}
+
+#[test]
+fn placement_always_fits_or_nofit() {
+    // Whatever the shape, a plan that claims a region must actually fit
+    // in that region's capacity.
+    check("placement fits", 300, |rng| {
+        let shape = random_shape(rng);
+        let target = match rng.below(4) {
+            0 => Target::CortexM4(Chip::Stm32l475vg),
+            1 => Target::CortexM4(Chip::Nrf52832),
+            2 => Target::WolfFc,
+            _ => Target::WolfCluster {
+                cores: rng.range_usize(1, 8) as u32,
+            },
+        };
+        let dtype = if target.supports_float() && rng.below(2) == 0 {
+            DataType::Float32
+        } else {
+            DataType::Fixed
+        };
+        let plan = deploy::plan(&shape, target, dtype).map_err(|e| e.to_string())?;
+        let est = plan.est_memory_bytes;
+        let wolf = memspec::WOLF_MEMORY;
+        match plan.region {
+            Region::Ram => {
+                let chip = match target {
+                    Target::CortexM4(c) | Target::CortexM0(c) => c,
+                    _ => return Err("RAM region on non-cortex target".into()),
+                };
+                ensure(est <= chip.memory().ram, "RAM overflow")
+            }
+            Region::Flash => {
+                let chip = match target {
+                    Target::CortexM4(c) | Target::CortexM0(c) => c,
+                    _ => return Err("flash region on non-cortex target".into()),
+                };
+                ensure(
+                    shape.param_bytes(dtype) <= chip.memory().flash,
+                    "flash overflow",
+                )
+            }
+            Region::PrivateL2 => ensure(est <= wolf.private_l2, "private L2 overflow"),
+            Region::SharedL2 => match target {
+                Target::WolfFc => ensure(est <= wolf.shared_l2, "shared L2 overflow"),
+                Target::WolfCluster { .. } => {
+                    ensure(shape.param_bytes(dtype) <= wolf.shared_l2, "shared L2 overflow")
+                }
+                _ => Err("shared L2 on non-wolf target".into()),
+            },
+            Region::L1 => ensure(est <= wolf.l1, "L1 overflow"),
+            Region::NoFit => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn dma_only_when_l2_resident_on_cluster() {
+    check("dma iff streaming", 200, |rng| {
+        let shape = random_shape(rng);
+        let plan = deploy::plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Fixed)
+            .map_err(|e| e.to_string())?;
+        match plan.region {
+            Region::L1 | Region::NoFit => ensure(plan.dma.is_none(), "unexpected DMA"),
+            Region::SharedL2 => ensure(plan.dma.is_some(), "missing DMA strategy"),
+            r => Err(format!("unexpected region {r:?}")),
+        }
+    });
+}
+
+#[test]
+fn eq2_estimate_dominates_raw_parameters() {
+    // The Eq. 2 estimate must upper-bound the raw parameter bytes
+    // (it adds buffers + bookkeeping) and grow monotonically with width.
+    check("eq2 bounds", 300, |rng| {
+        let shape = random_shape(rng);
+        let dtype = if rng.below(2) == 0 {
+            DataType::Float32
+        } else {
+            DataType::Fixed
+        };
+        let est = estimate_memory(&shape, dtype);
+        ensure(est >= shape.param_bytes(dtype), "estimate below raw params")?;
+        // widening any single hidden layer cannot shrink the estimate
+        let mut wider = shape.sizes.clone();
+        let l = rng.range_usize(1, wider.len() - 1);
+        wider[l] += rng.range_usize(1, 64);
+        let est2 = estimate_memory(&NetShape::new(&wider), dtype);
+        ensure(est2 >= est, "estimate not monotone")
+    });
+}
+
+#[test]
+fn parallel_cycles_bounded_by_core_count() {
+    // p cores can never speed a network up by more than p; and multi-core
+    // can only be *slower* than single-core by the explicit parallel
+    // overheads (per-layer barrier + streaming contention) — the same
+    // "parallelization overhead" effect the paper reports for tiny nets.
+    check("parallel bounds", 200, |rng| {
+        let shape = random_shape(rng);
+        let a = acts(shape.sizes.len() - 1);
+        let single = deploy::plan(&shape, Target::WolfCluster { cores: 1 }, DataType::Fixed)
+            .map_err(|e| e.to_string())?;
+        let cores = rng.range_usize(2, 8) as u32;
+        let multi = deploy::plan(&shape, Target::WolfCluster { cores }, DataType::Fixed)
+            .map_err(|e| e.to_string())?;
+        if !single.fits() || !multi.fits() {
+            return Ok(());
+        }
+        let s = cost::network_cycles(&single, &a, CostOptions::default()).total();
+        let m = cost::network_cycles(&multi, &a, CostOptions::default()).total();
+        let overhead_allowance =
+            a.len() as f64 * cost::BARRIER_CYCLES + s * cost::STREAM_CONTENTION_PER_CORE * 7.0;
+        ensure(
+            m <= s + overhead_allowance,
+            format!("multi slower beyond overheads: {m} vs {s}"),
+        )?;
+        ensure(
+            s / m <= cores as f64 + 1e-9,
+            format!("superlinear speedup {}x on {cores} cores", s / m),
+        )
+    });
+}
+
+#[test]
+fn legacy_init_never_faster() {
+    check("legacy slower", 150, |rng| {
+        let shape = random_shape(rng);
+        let a = acts(shape.sizes.len() - 1);
+        let plan = deploy::plan(&shape, Target::CortexM4(Chip::Stm32l475vg), DataType::Fixed)
+            .map_err(|e| e.to_string())?;
+        if !plan.fits() {
+            return Ok(());
+        }
+        let new = cost::network_cycles(&plan, &a, CostOptions::default()).total();
+        let old = cost::network_cycles(&plan, &a, CostOptions { legacy_init: true }).total();
+        ensure(old >= new, "legacy init faster than optimized")
+    });
+}
+
+#[test]
+fn quantize_dequantize_error_bounded() {
+    check("quantize error", 400, |rng| {
+        let dec = rng.range_usize(4, 20) as u32;
+        let v = rng.range_f32(-100.0, 100.0);
+        let q = quantize::quantize(v, dec);
+        let back = quantize::dequantize(q as i64, dec);
+        let lsb = 1.0 / (1i64 << dec) as f32;
+        ensure(
+            (v - back).abs() <= lsb,
+            format!("dec={dec} v={v} back={back}"),
+        )
+    });
+}
+
+#[test]
+fn fixed_net_tracks_float_net() {
+    // Random small nets: quantized outputs stay within the step-linear
+    // approximation band of the float outputs.
+    check("fixed tracks float", 60, |rng| {
+        let net = random_net(rng, 24);
+        let fixed = FixedNetwork::from_float(&net, 1.0).map_err(|e| e.to_string())?;
+        let x: Vec<f32> = (0..net.num_inputs())
+            .map(|_| rng.range_f32(-1.0, 1.0))
+            .collect();
+        let yf = net.run(&x);
+        let yq = fixed.run(&x);
+        for (a, b) in yf.iter().zip(&yq) {
+            ensure(
+                (a - b).abs() < 0.15,
+                format!("float {a} vs fixed {b} (dec={})", fixed.decimal_point),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn net_file_roundtrip_preserves_inference() {
+    check("net io roundtrip", 40, |rng| {
+        let net = random_net(rng, 16);
+        let back = io::load_float(&io::save_float(&net)).map_err(|e| e.to_string())?;
+        let x: Vec<f32> = (0..net.num_inputs())
+            .map(|_| rng.range_f32(-1.0, 1.0))
+            .collect();
+        ensure(net.run(&x) == back.run(&x), "roundtrip changed outputs")
+    });
+}
+
+#[test]
+fn data_file_roundtrip() {
+    check("data io roundtrip", 40, |rng| {
+        let n_in = rng.range_usize(1, 8);
+        let n_out = rng.range_usize(1, 4);
+        let mut d = TrainData::new(n_in, n_out);
+        for _ in 0..rng.range_usize(1, 12) {
+            let x: Vec<f32> = (0..n_in).map(|_| rng.range_f32(-5.0, 5.0)).collect();
+            let y: Vec<f32> = (0..n_out).map(|_| rng.range_f32(0.0, 1.0)).collect();
+            d.push(&x, &y);
+        }
+        let back = TrainData::from_fann_format(&d.to_fann_format()).map_err(|e| e.to_string())?;
+        ensure(back.inputs == d.inputs && back.targets == d.targets, "roundtrip mismatch")
+    });
+}
+
+#[test]
+fn step_linear_tables_bounded_and_monotone() {
+    check("q tables", 200, |rng| {
+        let dec = rng.range_usize(4, 16) as u32;
+        let one = 1i64 << dec;
+        let a = rng.range_f32(-10.0, 10.0) as f64;
+        let b = a + rng.uniform() * 4.0;
+        let xa = (a * one as f64) as i64;
+        let xb = (b * one as f64) as i64;
+        let sa = quantize::step_linear_sigmoid_q(xa, dec);
+        let sb = quantize::step_linear_sigmoid_q(xb, dec);
+        ensure(sa <= sb, "sigmoid not monotone")?;
+        ensure((0..=one).contains(&sa), "sigmoid out of range")?;
+        let ta = quantize::step_linear_tanh_q(xa, dec);
+        let tb = quantize::step_linear_tanh_q(xb, dec);
+        ensure(ta <= tb, "tanh not monotone")?;
+        ensure((-one..=one).contains(&ta), "tanh out of range")
+    });
+}
