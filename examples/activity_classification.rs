@@ -71,5 +71,29 @@ fn main() -> Result<()> {
         println!("  sample {i}: predicted class {pred}, true class {truth}");
     }
     println!("  {correct}/{n} correct");
+
+    // Continuous stream, batched: ONE deployment classifies every window
+    // (batched kernel dispatch on the host) and the cluster's 1.2 ms
+    // bring-up is paid once for the stream instead of once per window —
+    // the amortization the paper's Table II footnote describes.
+    let n_windows = 64;
+    let mut xs = Vec::with_capacity(n_windows * 7);
+    for i in 0..n_windows {
+        xs.extend_from_slice(data.input(i % data.len()));
+    }
+    let target = Target::WolfCluster { cores: 8 };
+    let (preds, report) = apps::classify_stream(&app, target, &xs, n_windows)?;
+    let correct = (0..n_windows)
+        .filter(|&i| preds[i] == data.label(i % data.len()))
+        .count();
+    println!(
+        "\nbatched stream on the 8-core cluster: {n_windows} windows in {} (modeled, {:.0} windows/s), {correct}/{n_windows} correct",
+        fmt_time(report.total_seconds),
+        report.throughput_hz
+    );
+    println!(
+        "  vs {n_windows} independent end-to-end classifications: {} (bring-up paid once, not {n_windows}x)",
+        fmt_time(n_windows as f64 * report.per_sample.e2e_seconds)
+    );
     Ok(())
 }

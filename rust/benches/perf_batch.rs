@@ -1,0 +1,69 @@
+//! §Perf — batched kernel-dispatch throughput: the acceptance bench for
+//! the batch execution engine. Compares, on the host, for the same
+//! 64-64-64-8 MLP (the ISSUE's reference topology):
+//!
+//! 1. looped single-sample `run_with` (the seed's only mode),
+//! 2. single-thread `run_batch` (4×4 register-blocked matmul tiles),
+//! 3. the `bench::batch` parallel driver (scoped threads × batched
+//!    kernels),
+//!
+//! for the float path, plus the fixed-point (`run_q`) counterparts.
+//! The shared `bench::batch::measure_throughput` driver asserts all
+//! modes produce bit-identical outputs before timing them. Run with:
+//! `cargo bench --bench perf_batch` (`BATCH=… THREADS=… REPS=…` env
+//! overrides).
+
+use fann_on_mcu::bench::batch;
+use fann_on_mcu::fann::{Activation, FixedNetwork, Network};
+use fann_on_mcu::util::rng::Rng;
+use fann_on_mcu::util::table::Table;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let n = env_usize("BATCH", 256).max(1);
+    let threads = env_usize("THREADS", 0);
+    let reps = env_usize("REPS", 15).max(1);
+
+    let sizes = [64usize, 64, 64, 8];
+    let mut rng = Rng::new(1234);
+    let mut net = Network::new(&sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+    net.randomize(&mut rng, None);
+    let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+    let n_in = net.num_inputs();
+    let xs: Vec<f32> = (0..n * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let workers = batch::resolve_threads(threads);
+
+    println!(
+        "=== §Perf: batched kernel dispatch ({}-{}-{}-{} MLP, {} MACs, batch {n}, {workers} worker(s)) ===\n",
+        sizes[0], sizes[1], sizes[2], sizes[3],
+        net.macs()
+    );
+
+    let rows = batch::measure_throughput(&net, &fixed, &xs, n, threads, 3, reps);
+    println!("bit-exactness: all {} modes agree on {n} samples\n", rows.len());
+
+    let mut t = Table::new(vec!["path", "batch time (µs)", "samples/s", "vs loop"]);
+    for row in &rows {
+        t.row(vec![
+            row.name.to_string(),
+            format!("{:.1}", row.seconds * 1e6),
+            format!("{:.0}", n as f64 / row.seconds),
+            format!("{:.2}x", row.baseline_seconds / row.seconds),
+        ]);
+    }
+    t.print();
+
+    // rows[0] is the looped float baseline; rows[1]/rows[2] the batched
+    // float modes (see measure_throughput's fixed ordering).
+    let best = rows[1].seconds.min(rows[2].seconds);
+    println!(
+        "\nheadline: batched dispatch {:.2}x vs looped single-sample (target: >= 2x at batch >= 64)",
+        rows[0].seconds / best
+    );
+}

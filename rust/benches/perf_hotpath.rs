@@ -7,6 +7,7 @@
 
 use fann_on_mcu::bench::{fig11_shape, time_median, whole_network_cycles};
 use fann_on_mcu::fann::{Activation, FixedNetwork, Network, Scratch};
+#[cfg(feature = "pjrt")]
 use fann_on_mcu::runtime::{ArtifactDir, PjrtTrainer, Runtime};
 use fann_on_mcu::targets::{DataType, Target};
 use fann_on_mcu::util::rng::Rng;
@@ -69,7 +70,8 @@ fn main() {
         format!("{:.0} plans/s", 96.0 / ts),
     ]);
 
-    // PJRT paths (need artifacts).
+    // PJRT paths (need artifacts + the pjrt feature).
+    #[cfg(feature = "pjrt")]
     if let Ok(art) = ArtifactDir::locate(None) {
         let rt = Runtime::cpu().unwrap();
         let mut trainer = PjrtTrainer::new(&rt, &art, "gesture", 7).unwrap();
@@ -101,6 +103,8 @@ fn main() {
     } else {
         eprintln!("(artifacts not built: skipping PJRT rows)");
     }
+    #[cfg(not(feature = "pjrt"))]
+    eprintln!("(pjrt feature off: skipping PJRT rows)");
 
     println!("=== §Perf: host hot-path benchmarks ===\n");
     t.print();

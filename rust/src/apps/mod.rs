@@ -129,10 +129,14 @@ pub fn train_app(spec: &'static AppSpec, seed: u64) -> Result<TrainedApp> {
     })
 }
 
-/// One Table II cell: deploy `app` on `target` and simulate one
-/// classification. Float path on FPU targets, fixed elsewhere (the
-/// paper's convention).
-pub fn run_on_target(app: &TrainedApp, target: Target, input: &[f32]) -> Result<(DeploymentPlan, SimReport)> {
+/// Deployment plan + executable for `app` on `target`, following the
+/// paper's convention: float path on FPU targets, fixed elsewhere.
+/// Shared by [`run_on_target`] and [`classify_stream`] so the dtype
+/// selection can never diverge between the two.
+pub fn plan_for_target<'a>(
+    app: &'a TrainedApp,
+    target: Target,
+) -> Result<(DeploymentPlan, Executable<'a>)> {
     let dtype = if target.supports_float() {
         DataType::Float32
     } else {
@@ -143,8 +147,34 @@ pub fn run_on_target(app: &TrainedApp, target: Target, input: &[f32]) -> Result<
         DataType::Float32 => Executable::Float(&app.net),
         DataType::Fixed => Executable::Fixed(&app.fixed),
     };
+    Ok((plan, exe))
+}
+
+/// One Table II cell: deploy `app` on `target` and simulate one
+/// classification.
+pub fn run_on_target(app: &TrainedApp, target: Target, input: &[f32]) -> Result<(DeploymentPlan, SimReport)> {
+    let (plan, exe) = plan_for_target(app, target)?;
     let report = simulator::simulate(&plan, &exe, input, CostOptions::default())?;
     Ok((plan, report))
+}
+
+/// Classify a stream of `n_samples` packed sensor windows on `target`
+/// under ONE deployment: one plan, one (modeled) cluster activation paid
+/// for the whole stream, batched kernel execution for the numerics —
+/// the paper's continuous-classification operating mode, as opposed to
+/// looping [`run_on_target`] per window. Returns per-window argmax
+/// predictions plus the batch report.
+pub fn classify_stream(
+    app: &TrainedApp,
+    target: Target,
+    inputs: &[f32],
+    n_samples: usize,
+) -> Result<(Vec<usize>, simulator::BatchSimReport)> {
+    let (plan, exe) = plan_for_target(app, target)?;
+    let n_out = exe.num_outputs();
+    let report = simulator::simulate_batch(&plan, &exe, inputs, n_samples, CostOptions::default())?;
+    let preds = report.outputs.chunks(n_out).map(crate::util::argmax).collect();
+    Ok((preds, report))
 }
 
 #[cfg(test)]
@@ -181,6 +211,32 @@ mod tests {
             "test accuracy {} (paper: 84%)",
             app.test_accuracy
         );
+    }
+
+    #[test]
+    fn classify_stream_matches_per_window_runs() {
+        let app = train_app(&ACTIVITY, 3).unwrap();
+        let data = ACTIVITY.dataset(3);
+        let n = 12;
+        let mut xs = Vec::with_capacity(n * 7);
+        for i in 0..n {
+            xs.extend_from_slice(data.input(i));
+        }
+        for target in [Target::WolfFc, Target::WolfCluster { cores: 8 }] {
+            let (preds, report) = classify_stream(&app, target, &xs, n).unwrap();
+            assert_eq!(preds.len(), n);
+            for i in 0..n {
+                let (_, r) = run_on_target(&app, target, data.input(i)).unwrap();
+                assert_eq!(
+                    preds[i],
+                    crate::util::argmax(&r.outputs),
+                    "target {:?} window {i}",
+                    target
+                );
+            }
+            // One activation for the stream beats n single end-to-end runs.
+            assert!(report.total_seconds < n as f64 * report.per_sample.e2e_seconds + 1e-12);
+        }
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! Parallel batch inference driver — the host-side throughput harness
+//! for continuous-classification workloads (the `apps/` showcases and
+//! the `throughput` CLI command).
+//!
+//! Work splitting is deliberately simple: the sample axis is chopped
+//! into one contiguous chunk per worker and each worker runs the batched
+//! kernel path ([`crate::fann::Network::run_batch`]) on its chunk with
+//! `std::thread::scope` (the offline crate set has no `rayon`; scoped
+//! threads give the same fork-join shape without a dependency). Because
+//! the batched kernels are bit-identical to single-sample inference per
+//! sample, neither chunking nor thread count changes any output —
+//! `rust/tests/batch_consistency.rs` pins this.
+
+use std::num::NonZeroUsize;
+
+use crate::fann::{FixedNetwork, Network};
+use crate::kernels::DenseKernel;
+
+/// Resolve a requested worker count: 0 means "all available cores".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    std::thread::available_parallelism()
+        .map(NonZeroUsize::get)
+        .unwrap_or(1)
+}
+
+/// Split `n` items into at most `workers` contiguous `(start, len)`
+/// chunks of near-equal size (first `n % workers` chunks get one extra).
+pub fn chunks(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let workers = workers.max(1).min(n.max(1));
+    let base = n / workers;
+    let extra = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
+        if len == 0 {
+            break;
+        }
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// The shared fork-join skeleton: split the sample axis into one
+/// contiguous chunk per worker, run `run(chunk_inputs, chunk_len)` on
+/// each under `std::thread::scope`, and reassemble the outputs in
+/// order. Element-type generic so the float and fixed drivers share
+/// one copy of the splitting logic.
+fn parallel_chunks<E, F>(
+    inputs: &[E],
+    n_samples: usize,
+    n_in: usize,
+    n_out: usize,
+    workers: usize,
+    run: F,
+) -> Vec<E>
+where
+    E: Copy + Default + Send + Sync,
+    F: Fn(&[E], usize) -> Vec<E> + Sync,
+{
+    let mut out = vec![E::default(); n_samples * n_out];
+    let plan = chunks(n_samples, workers);
+    // Hand each worker a disjoint slice of the output buffer.
+    let mut out_slices: Vec<&mut [E]> = Vec::with_capacity(plan.len());
+    let mut rest = out.as_mut_slice();
+    for &(_, len) in &plan {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(len * n_out);
+        out_slices.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|scope| {
+        for (&(start, len), out_chunk) in plan.iter().zip(out_slices) {
+            let in_chunk = &inputs[start * n_in..(start + len) * n_in];
+            let run = &run;
+            scope.spawn(move || {
+                out_chunk.copy_from_slice(&run(in_chunk, len));
+            });
+        }
+    });
+    out
+}
+
+/// Run `n_samples` packed float rows through `net` on `threads` workers
+/// (0 = auto). Output is bit-identical to `net.run_batch(inputs,
+/// n_samples)` and therefore to `n_samples` single `run` calls.
+pub fn run_batch_parallel(
+    net: &Network,
+    inputs: &[f32],
+    n_samples: usize,
+    threads: usize,
+) -> Vec<f32> {
+    run_batch_parallel_with_kernel(net, crate::kernels::default_f32(), inputs, n_samples, threads)
+}
+
+/// [`run_batch_parallel`] through an explicit kernel.
+pub fn run_batch_parallel_with_kernel(
+    net: &Network,
+    kernel: &dyn DenseKernel<f32>,
+    inputs: &[f32],
+    n_samples: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let n_in = net.num_inputs();
+    assert_eq!(inputs.len(), n_samples * n_in);
+    let workers = resolve_threads(threads);
+    if workers <= 1 || n_samples <= 1 {
+        return net.run_batch_with_kernel(kernel, inputs, n_samples);
+    }
+    parallel_chunks(inputs, n_samples, n_in, net.num_outputs(), workers, |chunk, len| {
+        net.run_batch_with_kernel(kernel, chunk, len)
+    })
+}
+
+/// Fixed-point counterpart: run `n_samples` packed Q(dec) rows on
+/// `threads` workers. Bit-exact vs [`FixedNetwork::run_batch_q`].
+pub fn run_batch_q_parallel(
+    net: &FixedNetwork,
+    inputs_q: &[i32],
+    n_samples: usize,
+    threads: usize,
+) -> Vec<i32> {
+    let n_in = net.num_inputs();
+    assert_eq!(inputs_q.len(), n_samples * n_in);
+    let workers = resolve_threads(threads);
+    if workers <= 1 || n_samples <= 1 {
+        return net.run_batch_q(inputs_q, n_samples);
+    }
+    parallel_chunks(inputs_q, n_samples, n_in, net.num_outputs(), workers, |chunk, len| {
+        net.run_batch_q(chunk, len)
+    })
+}
+
+/// One measured execution mode of the standard throughput comparison.
+#[derive(Debug, Clone)]
+pub struct ThroughputRow {
+    pub name: &'static str,
+    /// Median wall time for the whole batch.
+    pub seconds: f64,
+    /// The looped single-sample baseline this row is compared against
+    /// (the float loop for float rows, the fixed loop for fixed rows).
+    pub baseline_seconds: f64,
+}
+
+/// Measure the six standard modes — float/fixed × {looped single-sample,
+/// batched kernels, parallel driver} — on the same network and inputs.
+/// Shared by `benches/perf_batch.rs` and the `throughput` CLI command so
+/// the two can't drift. Asserts first that every mode produces
+/// bit-identical outputs; panics otherwise (a wrong-answer mode must
+/// never be timed as if it were an optimization).
+pub fn measure_throughput(
+    net: &Network,
+    fixed: &FixedNetwork,
+    xs: &[f32],
+    n_samples: usize,
+    threads: usize,
+    warmup: usize,
+    reps: usize,
+) -> Vec<ThroughputRow> {
+    let n_in = net.num_inputs();
+    assert_eq!(xs.len(), n_samples * n_in);
+    let xq = fixed.quantize_input(xs);
+
+    let mut looped = Vec::with_capacity(n_samples * net.num_outputs());
+    for s in 0..n_samples {
+        looped.extend_from_slice(&net.run(&xs[s * n_in..(s + 1) * n_in]));
+    }
+    assert_eq!(looped, net.run_batch(xs, n_samples), "run_batch diverged from looped run");
+    assert_eq!(
+        looped,
+        run_batch_parallel(net, xs, n_samples, threads),
+        "parallel driver diverged from looped run"
+    );
+    let mut looped_q = Vec::with_capacity(n_samples * fixed.num_outputs());
+    for s in 0..n_samples {
+        looped_q.extend_from_slice(&fixed.run_q(&xq[s * n_in..(s + 1) * n_in]));
+    }
+    assert_eq!(looped_q, fixed.run_batch_q(&xq, n_samples), "fixed run_batch_q diverged");
+    assert_eq!(
+        looped_q,
+        run_batch_q_parallel(fixed, &xq, n_samples, threads),
+        "fixed parallel driver diverged"
+    );
+
+    let mut scratch = crate::fann::Scratch::for_network(net);
+    let t_loop = super::time_median(warmup, reps, || {
+        for s in 0..n_samples {
+            std::hint::black_box(net.run_with(&mut scratch, &xs[s * n_in..(s + 1) * n_in]));
+        }
+    });
+    let t_batch = super::time_median(warmup, reps, || {
+        std::hint::black_box(net.run_batch(xs, n_samples));
+    });
+    let t_par = super::time_median(warmup, reps, || {
+        std::hint::black_box(run_batch_parallel(net, xs, n_samples, threads));
+    });
+    let t_loop_q = super::time_median(warmup, reps, || {
+        for s in 0..n_samples {
+            std::hint::black_box(fixed.run_q(&xq[s * n_in..(s + 1) * n_in]));
+        }
+    });
+    let t_batch_q = super::time_median(warmup, reps, || {
+        std::hint::black_box(fixed.run_batch_q(&xq, n_samples));
+    });
+    let t_par_q = super::time_median(warmup, reps, || {
+        std::hint::black_box(run_batch_q_parallel(fixed, &xq, n_samples, threads));
+    });
+
+    vec![
+        ThroughputRow { name: "float: looped run()", seconds: t_loop, baseline_seconds: t_loop },
+        ThroughputRow { name: "float: run_batch()", seconds: t_batch, baseline_seconds: t_loop },
+        ThroughputRow { name: "float: parallel driver", seconds: t_par, baseline_seconds: t_loop },
+        ThroughputRow { name: "fixed: looped run_q()", seconds: t_loop_q, baseline_seconds: t_loop_q },
+        ThroughputRow { name: "fixed: run_batch_q()", seconds: t_batch_q, baseline_seconds: t_loop_q },
+        ThroughputRow { name: "fixed: parallel driver", seconds: t_par_q, baseline_seconds: t_loop_q },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fann::{Activation, FixedNetwork, Network};
+    use crate::util::rng::Rng;
+
+    fn net(sizes: &[usize], seed: u64) -> Network {
+        let mut rng = Rng::new(seed);
+        let mut n = Network::new(sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+        n.randomize(&mut rng, None);
+        n
+    }
+
+    #[test]
+    fn chunks_cover_exactly_once() {
+        for n in [0usize, 1, 2, 7, 64, 100] {
+            for w in [1usize, 2, 3, 8, 200] {
+                let cs = chunks(n, w);
+                let mut next = 0;
+                for (start, len) in cs {
+                    assert_eq!(start, next);
+                    assert!(len > 0);
+                    next += len;
+                }
+                assert_eq!(next, n);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_float_is_bit_identical_to_serial() {
+        let net = net(&[6, 11, 4], 77);
+        let mut rng = Rng::new(5);
+        let n = 23; // deliberately not a multiple of the worker count
+        let xs: Vec<f32> = (0..n * 6).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let serial = net.run_batch(&xs, n);
+        for threads in [1, 2, 3, 8] {
+            let par = run_batch_parallel(&net, &xs, n, threads);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+        // Per-sample equality too.
+        for s in 0..n {
+            assert_eq!(&serial[s * 4..(s + 1) * 4], &net.run(&xs[s * 6..(s + 1) * 6])[..]);
+        }
+    }
+
+    #[test]
+    fn parallel_fixed_is_bit_exact() {
+        let fnet = net(&[4, 8, 3], 31);
+        let fixed = FixedNetwork::from_float(&fnet, 1.0).unwrap();
+        let mut rng = Rng::new(9);
+        let n = 17;
+        let xs: Vec<f32> = (0..n * 4).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let q: Vec<i32> = xs
+            .iter()
+            .map(|&v| crate::quantize::quantize(v, fixed.decimal_point))
+            .collect();
+        let serial = fixed.run_batch_q(&q, n);
+        for threads in [1, 2, 5] {
+            assert_eq!(run_batch_q_parallel(&fixed, &q, n, threads), serial);
+        }
+    }
+
+    #[test]
+    fn measure_throughput_reports_all_six_modes() {
+        let fnet = net(&[4, 6, 2], 3);
+        let fixed = FixedNetwork::from_float(&fnet, 1.0).unwrap();
+        let mut rng = Rng::new(2);
+        let n = 8;
+        let xs: Vec<f32> = (0..n * 4).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let rows = measure_throughput(&fnet, &fixed, &xs, n, 2, 0, 1);
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().all(|r| r.seconds >= 0.0 && r.baseline_seconds >= 0.0));
+        assert_eq!(rows[0].seconds, rows[0].baseline_seconds);
+    }
+
+    #[test]
+    fn empty_batch_and_auto_threads() {
+        let net = net(&[3, 2], 1);
+        assert!(run_batch_parallel(&net, &[], 0, 0).is_empty());
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(5), 5);
+    }
+}

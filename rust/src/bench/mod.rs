@@ -1,6 +1,12 @@
 //! Shared benchmark harness for the figure/table reproduction binaries in
 //! `rust/benches/` (declared `harness = false`; the offline crate set has
 //! no criterion — wall-clock timing where needed is hand-rolled here).
+//!
+//! [`batch`] is the parallel batch-inference driver used by the
+//! throughput bench (`benches/perf_batch.rs`), the `throughput` CLI
+//! command and the continuous-classification app helpers.
+
+pub mod batch;
 
 use std::time::Instant;
 

@@ -103,6 +103,22 @@ pub fn parse_csv_f32(s: &str) -> Result<Vec<f32>> {
         .collect()
 }
 
+/// Parse a comma-separated layer-size list (`--topo "64,64,64,8"`) into
+/// network sizes `[in, h1, ..., out]`.
+pub fn parse_sizes(s: &str) -> Result<Vec<usize>> {
+    let sizes: Vec<usize> = s
+        .split(',')
+        .map(|v| v.trim().parse::<usize>().with_context(|| format!("bad layer size {v:?}")))
+        .collect::<Result<_>>()?;
+    if sizes.len() < 2 {
+        bail!("topology needs at least input and output layers (got {s:?})");
+    }
+    if sizes.iter().any(|&v| v == 0) {
+        bail!("zero-width layer in topology {s:?}");
+    }
+    Ok(sizes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,5 +170,13 @@ mod tests {
     fn csv_parse() {
         assert_eq!(parse_csv_f32("1, 2.5,-3").unwrap(), vec![1.0, 2.5, -3.0]);
         assert!(parse_csv_f32("a,b").is_err());
+    }
+
+    #[test]
+    fn sizes_parse() {
+        assert_eq!(parse_sizes("64, 64,64,8").unwrap(), vec![64, 64, 64, 8]);
+        assert!(parse_sizes("64").is_err());
+        assert!(parse_sizes("64,0,8").is_err());
+        assert!(parse_sizes("64,x,8").is_err());
     }
 }

@@ -12,6 +12,7 @@ use anyhow::Result;
 
 use super::activation::Activation;
 use super::net::Network;
+use crate::kernels::{DenseKernel, DenseLayerRef, FixedQ};
 use crate::quantize;
 
 /// One quantized layer (row-major weights like the float layer).
@@ -22,6 +23,33 @@ pub struct FixedLayer {
     pub weights: Vec<i32>,
     pub biases: Vec<i32>,
     pub activation: Activation,
+}
+
+impl FixedLayer {
+    /// Borrowed kernel view of this layer's parameters.
+    #[inline]
+    pub fn as_kernel_ref(&self) -> DenseLayerRef<'_, i32> {
+        DenseLayerRef::new(self.n_in, self.n_out, &self.weights, &self.biases)
+    }
+
+    /// Forward one quantized sample: kernel affine part, then the
+    /// step-linear activation. The decimal point comes from the kernel
+    /// itself — the shift amount defines the arithmetic, so affine and
+    /// activation can never disagree on it.
+    pub fn forward_into_with(&self, kernel: &FixedQ, x_q: &[i32], out: &mut [i32]) {
+        kernel.matvec(&self.as_kernel_ref(), x_q, out);
+        for v in out.iter_mut() {
+            *v = quantize::activation_q(self.activation, *v as i64, kernel.dec) as i32;
+        }
+    }
+
+    /// Batched forward over `n_samples` packed rows.
+    pub fn forward_batch_with(&self, kernel: &FixedQ, xs_q: &[i32], n_samples: usize, out: &mut [i32]) {
+        kernel.matmul(&self.as_kernel_ref(), xs_q, n_samples, out);
+        for v in out.iter_mut() {
+            *v = quantize::activation_q(self.activation, *v as i64, kernel.dec) as i32;
+        }
+    }
 }
 
 /// A fully quantized network.
@@ -118,29 +146,42 @@ impl FixedNetwork {
     }
 
     /// Run one (already quantized) sample; returns Q(dec) outputs.
+    /// Dispatches through the [`FixedQ`] kernel — a batch of one
+    /// (integer accumulation makes batching bit-invisible).
     pub fn run_q(&self, input_q: &[i32]) -> Vec<i32> {
-        assert_eq!(input_q.len(), self.num_inputs());
+        self.run_batch_q(input_q, 1)
+    }
+
+    /// Batched quantized inference: `inputs_q` packs `n_samples` rows of
+    /// `n_in` Q(dec) values; returns `n_samples × n_out` Q(dec) outputs,
+    /// bit-exact with `n_samples` independent [`run_q`](Self::run_q)
+    /// calls (integer accumulation commutes; the batched kernel only
+    /// reorders weight reuse).
+    pub fn run_batch_q(&self, inputs_q: &[i32], n_samples: usize) -> Vec<i32> {
+        assert_eq!(inputs_q.len(), n_samples * self.num_inputs());
+        if n_samples == 0 {
+            return Vec::new();
+        }
+        let kernel = FixedQ::new(self.decimal_point);
         let width = self.max_layer_width();
-        let mut a = vec![0i32; width];
-        let mut b = vec![0i32; width];
-        a[..input_q.len()].copy_from_slice(input_q);
-        let mut cur = input_q.len();
+        let mut a = vec![0i32; width * n_samples];
+        let mut b = vec![0i32; width * n_samples];
+        a[..inputs_q.len()].copy_from_slice(inputs_q);
+        let mut cur = self.num_inputs();
         let mut flip = false;
         for layer in &self.layers {
             let (src, dst) = if flip { (&b, &mut a) } else { (&a, &mut b) };
-            quantize::dense_q_into(
-                &src[..cur],
-                &layer.weights,
-                &layer.biases,
-                self.decimal_point,
-                layer.activation,
-                &mut dst[..layer.n_out],
+            layer.forward_batch_with(
+                &kernel,
+                &src[..cur * n_samples],
+                n_samples,
+                &mut dst[..layer.n_out * n_samples],
             );
             cur = layer.n_out;
             flip = !flip;
         }
         let buf = if flip { &b } else { &a };
-        buf[..cur].to_vec()
+        buf[..cur * n_samples].to_vec()
     }
 
     /// Run a float sample end to end: quantize, infer, dequantize.
@@ -148,6 +189,15 @@ impl FixedNetwork {
         self.run_q(&self.quantize_input(input))
             .into_iter()
             .map(|q| quantize::dequantize(q as i64, self.decimal_point))
+            .collect()
+    }
+
+    /// Batched float-in/float-out inference: quantize `n_samples` packed
+    /// rows, run the batched Q path, dequantize.
+    pub fn run_batch(&self, inputs: &[f32], n_samples: usize) -> Vec<f32> {
+        self.run_batch_q(&self.quantize_input(inputs), n_samples)
+            .into_iter()
+            .map(|v| quantize::dequantize(v as i64, self.decimal_point))
             .collect()
     }
 
@@ -201,6 +251,29 @@ mod tests {
             let yf = net.run(&x)[0];
             let yq = fixed.run(&x)[0];
             assert!((yf - yq).abs() < 0.06, "x={x:?} float {yf} fixed {yq}");
+        }
+    }
+
+    #[test]
+    fn batched_fixed_inference_bit_exact() {
+        let net = trained_xor();
+        let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+        let xs = [0.0f32, 0.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0];
+        let q: Vec<i32> = xs
+            .iter()
+            .map(|&v| quantize::quantize(v, fixed.decimal_point))
+            .collect();
+        let batched = fixed.run_batch_q(&q, 4);
+        assert_eq!(batched.len(), 4);
+        for s in 0..4 {
+            let single = fixed.run_q(&q[s * 2..(s + 1) * 2]);
+            assert_eq!(batched[s], single[0], "sample {s}");
+        }
+        // Float-in/float-out wrapper agrees with per-sample run().
+        let fbatch = fixed.run_batch(&xs, 4);
+        for s in 0..4 {
+            let single = fixed.run(&xs[s * 2..(s + 1) * 2]);
+            assert_eq!(fbatch[s], single[0]);
         }
     }
 

@@ -6,37 +6,22 @@
 //! neuron-by-neuron) plus a bias per output neuron, followed by an
 //! activation. This mirrors Eq. (1) of the paper.
 //!
-//! The forward path here is the *reference float implementation* — the
-//! deployment simulator executes the same math through the target's cycle
-//! model, and `runtime::` executes the AOT-compiled JAX version; parity
-//! tests pin all three together.
+//! The forward path dispatches through the crate-wide kernel layer
+//! ([`crate::kernels`]): the dense inner loop lives in exactly one place
+//! per implementation strategy ([`crate::kernels::BlockedF32`] is the
+//! default here), shared with the fixed-point network and the deployment
+//! simulator. `runtime::` executes the AOT-compiled JAX version of the
+//! same math; parity tests pin all paths together.
 
 use anyhow::{ensure, Result};
 
 use super::activation::Activation;
+use crate::kernels::{self, DenseKernel, DenseLayerRef};
 use crate::util::rng::Rng;
 
-/// Four-lane dot product: independent accumulators expose instruction-
-/// level parallelism / SIMD to the compiler. Reassociates float adds
-/// (cross-implementation parity tests allow for it: tolerance 3e-5).
-#[inline]
-pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * 4..a.len() {
-        tail += a[i] * b[i];
-    }
-    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
-}
+// The 4-lane dot product used by the default kernel; re-exported from
+// its new home so existing `fann::net::dot_f32` callers keep working.
+pub use crate::kernels::dot_f32;
 
 /// One fully-connected layer.
 #[derive(Debug, Clone)]
@@ -65,17 +50,45 @@ impl Layer {
         }
     }
 
-    /// Forward one sample. `input.len() == n_in`, writes `n_out` outputs.
+    /// Borrowed kernel view of this layer's parameters.
+    #[inline]
+    pub fn as_kernel_ref(&self) -> DenseLayerRef<'_, f32> {
+        DenseLayerRef::new(self.n_in, self.n_out, &self.weights, &self.biases)
+    }
+
+    /// Forward one sample through the default kernel. `input.len() ==
+    /// n_in`, writes `n_out` outputs.
     pub fn forward_into(&self, input: &[f32], out: &mut [f32]) {
+        self.forward_into_with(kernels::default_f32(), input, out);
+    }
+
+    /// Forward one sample through an explicit [`DenseKernel`]: the
+    /// kernel computes the affine part, the activation (with steepness)
+    /// is applied here — the split that lets float and fixed paths share
+    /// the dispatch layer.
+    pub fn forward_into_with(&self, kernel: &dyn DenseKernel<f32>, input: &[f32], out: &mut [f32]) {
         debug_assert_eq!(input.len(), self.n_in);
         debug_assert_eq!(out.len(), self.n_out);
-        for o in 0..self.n_out {
-            let row = &self.weights[o * self.n_in..(o + 1) * self.n_in];
-            // The dot product — the paper's Table I inner loop. Four
-            // accumulator lanes break the FMA dependency chain so LLVM
-            // can vectorize (§Perf: 1.6 -> ~4 GMAC/s host-side).
-            let acc = self.biases[o] + dot_f32(row, input);
-            out[o] = self.activation.apply(self.steepness * acc);
+        kernel.matvec(&self.as_kernel_ref(), input, out);
+        for v in out.iter_mut() {
+            *v = self.activation.apply(self.steepness * *v);
+        }
+    }
+
+    /// Batched forward: `xs` packs `n_samples` rows of `n_in` values,
+    /// `out` receives `n_samples` rows of `n_out` values.
+    pub fn forward_batch_with(
+        &self,
+        kernel: &dyn DenseKernel<f32>,
+        xs: &[f32],
+        n_samples: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(xs.len(), self.n_in * n_samples);
+        debug_assert_eq!(out.len(), self.n_out * n_samples);
+        kernel.matmul(&self.as_kernel_ref(), xs, n_samples, out);
+        for v in out.iter_mut() {
+            *v = self.activation.apply(self.steepness * *v);
         }
     }
 
@@ -200,6 +213,59 @@ impl Network {
         &buf[..cur_len]
     }
 
+    /// Run one sample through an explicit kernel (parity tests and bench
+    /// sweeps; `run` itself uses the crate default). A batch of one:
+    /// kernels keep per-sample results bit-identical across batch sizes,
+    /// so this IS the single-sample semantics.
+    pub fn run_with_kernel(&self, kernel: &dyn DenseKernel<f32>, input: &[f32]) -> Vec<f32> {
+        self.run_batch_with_kernel(kernel, input, 1)
+    }
+
+    /// Run `n_samples` inputs (packed row-major: `n_samples × n_in`)
+    /// through the network in one batched pass; returns `n_samples ×
+    /// n_out` outputs, bit-identical to `n_samples` independent [`run`]
+    /// calls (`Self::run`). This is the throughput entry point: the
+    /// batched kernels reuse each weight row across samples instead of
+    /// re-streaming the whole matrix per sample.
+    pub fn run_batch(&self, inputs: &[f32], n_samples: usize) -> Vec<f32> {
+        self.run_batch_with_kernel(kernels::default_f32(), inputs, n_samples)
+    }
+
+    /// [`run_batch`](Self::run_batch) through an explicit kernel.
+    pub fn run_batch_with_kernel(
+        &self,
+        kernel: &dyn DenseKernel<f32>,
+        inputs: &[f32],
+        n_samples: usize,
+    ) -> Vec<f32> {
+        assert_eq!(inputs.len(), n_samples * self.num_inputs());
+        if n_samples == 0 {
+            return Vec::new();
+        }
+        // Batched ping-pong buffers: rows stay packed at the current
+        // layer's width (stride = cur), so every matmul sees contiguous
+        // samples.
+        let width = self.max_layer_width();
+        let mut a = vec![0.0f32; width * n_samples];
+        let mut b = vec![0.0f32; width * n_samples];
+        a[..inputs.len()].copy_from_slice(inputs);
+        let mut cur = self.num_inputs();
+        let mut flip = false;
+        for layer in &self.layers {
+            let (src, dst) = if flip { (&b, &mut a) } else { (&a, &mut b) };
+            layer.forward_batch_with(
+                kernel,
+                &src[..cur * n_samples],
+                n_samples,
+                &mut dst[..layer.n_out * n_samples],
+            );
+            cur = layer.n_out;
+            flip = !flip;
+        }
+        let buf = if flip { &b } else { &a };
+        buf[..cur * n_samples].to_vec()
+    }
+
     /// Forward pass retaining every layer's output (for backprop). Returns
     /// `outputs[l]` = activations of layer l (l = 0 is the input itself).
     pub fn forward_trace(&self, input: &[f32]) -> Vec<Vec<f32>> {
@@ -265,6 +331,22 @@ mod tests {
         let a = net.run(&x);
         let b = net.run_with(&mut scratch, &x).to_vec();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn run_batch_matches_single_runs_bitwise() {
+        let mut rng = Rng::new(13);
+        let mut net = Network::new(&[5, 9, 3], Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, None);
+        let n = 6;
+        let xs: Vec<f32> = (0..n * 5).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let batched = net.run_batch(&xs, n);
+        assert_eq!(batched.len(), n * 3);
+        for s in 0..n {
+            let single = net.run(&xs[s * 5..(s + 1) * 5]);
+            assert_eq!(&batched[s * 3..(s + 1) * 3], &single[..], "sample {s}");
+        }
+        assert!(net.run_batch(&[], 0).is_empty());
     }
 
     #[test]

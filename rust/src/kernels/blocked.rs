@@ -1,0 +1,156 @@
+//! The ILP-blocked float kernel — the host-side analogue of the paper's
+//! reorganized inner loop (Table I: unrolled MACs feeding independent
+//! accumulators), generalized to 4×4 sample×neuron register tiles for
+//! the batched entry point.
+//!
+//! Numerics: `matvec` keeps the seed implementation's exact reduction
+//! order (`(acc0+acc2)+(acc1+acc3)+tail`, bias added last), and `matmul`
+//! keeps the *same per-(sample, neuron) accumulation order* inside its
+//! tiles, so batched results are bit-identical to single-sample results
+//! — `rust/tests/batch_consistency.rs` pins this. Cross-kernel float
+//! parity vs [`super::ScalarF32`] is within 3e-5 (add reassociation
+//! only), pinned by `rust/tests/parity_kernels.rs`.
+
+use super::{DenseKernel, DenseLayerRef};
+
+/// Four-lane dot product: independent accumulators expose instruction-
+/// level parallelism / SIMD to the compiler. Reassociates float adds
+/// relative to the scalar kernel (parity tolerance 3e-5).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 4..a.len() {
+        tail += a[i] * b[i];
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// 4-lane blocked dense kernel with 4×4 batch tiling.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BlockedF32;
+
+impl DenseKernel<f32> for BlockedF32 {
+    fn name(&self) -> &'static str {
+        "blocked_f32"
+    }
+
+    fn matvec(&self, layer: &DenseLayerRef<f32>, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), layer.n_in);
+        debug_assert_eq!(out.len(), layer.n_out);
+        for o in 0..layer.n_out {
+            let row = &layer.weights[o * layer.n_in..(o + 1) * layer.n_in];
+            out[o] = layer.biases[o] + dot_f32(row, x);
+        }
+    }
+
+    /// 4×4 register-blocked batch tiles: each weight chunk is loaded
+    /// once and reused across 4 samples; each input chunk is reused
+    /// across 4 output neurons. Per-(sample, neuron) accumulation order
+    /// is identical to `matvec`, so tiling is invisible to numerics.
+    fn matmul(&self, layer: &DenseLayerRef<f32>, xs: &[f32], n_samples: usize, out: &mut [f32]) {
+        let n_in = layer.n_in;
+        let n_out = layer.n_out;
+        debug_assert_eq!(xs.len(), n_in * n_samples);
+        debug_assert_eq!(out.len(), n_out * n_samples);
+        let chunks = n_in / 4;
+        let mut s0 = 0;
+        while s0 < n_samples {
+            let sb = (n_samples - s0).min(4);
+            let mut o0 = 0;
+            while o0 < n_out {
+                let ob = (n_out - o0).min(4);
+                // acc[si][oi] holds the 4 ILP lanes of sample s0+si,
+                // neuron o0+oi — the same lanes matvec's dot_f32 keeps.
+                let mut acc = [[[0.0f32; 4]; 4]; 4];
+                for c in 0..chunks {
+                    let i = c * 4;
+                    for oi in 0..ob {
+                        let wbase = (o0 + oi) * n_in + i;
+                        let w = &layer.weights[wbase..wbase + 4];
+                        for si in 0..sb {
+                            let xbase = (s0 + si) * n_in + i;
+                            let x = &xs[xbase..xbase + 4];
+                            let a = &mut acc[si][oi];
+                            a[0] += w[0] * x[0];
+                            a[1] += w[1] * x[1];
+                            a[2] += w[2] * x[2];
+                            a[3] += w[3] * x[3];
+                        }
+                    }
+                }
+                for si in 0..sb {
+                    for oi in 0..ob {
+                        let mut tail = 0.0f32;
+                        for i in chunks * 4..n_in {
+                            tail += layer.weights[(o0 + oi) * n_in + i]
+                                * xs[(s0 + si) * n_in + i];
+                        }
+                        let a = &acc[si][oi];
+                        out[(s0 + si) * n_out + o0 + oi] =
+                            layer.biases[o0 + oi] + ((a[0] + a[2]) + (a[1] + a[3]) + tail);
+                    }
+                }
+                o0 += ob;
+            }
+            s0 += sb;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dot_handles_all_tail_lengths() {
+        for len in 0..=9 {
+            let a: Vec<f32> = (0..len).map(|i| i as f32 + 1.0).collect();
+            let b: Vec<f32> = (0..len).map(|i| 2.0 - i as f32).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot_f32(&a, &b);
+            assert!((want - got).abs() < 1e-4, "len={len}: {want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn matmul_tile_boundaries_match_matvec_bitwise() {
+        // Shapes straddling every tile boundary: 1..=9 covers partial
+        // and full 4-tiles in samples, outputs and the input tail.
+        let mut rng = Rng::new(0xB10C);
+        for &n_in in &[1usize, 3, 4, 5, 8, 11] {
+            for &n_out in &[1usize, 2, 4, 5, 9] {
+                for &n_samples in &[1usize, 3, 4, 5, 7] {
+                    let w: Vec<f32> =
+                        (0..n_in * n_out).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                    let b: Vec<f32> = (0..n_out).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                    let xs: Vec<f32> = (0..n_in * n_samples)
+                        .map(|_| rng.range_f32(-1.0, 1.0))
+                        .collect();
+                    let layer = DenseLayerRef::new(n_in, n_out, &w, &b);
+                    let mut batched = vec![0.0f32; n_out * n_samples];
+                    BlockedF32.matmul(&layer, &xs, n_samples, &mut batched);
+                    for s in 0..n_samples {
+                        let mut single = vec![0.0f32; n_out];
+                        BlockedF32.matvec(&layer, &xs[s * n_in..(s + 1) * n_in], &mut single);
+                        assert_eq!(
+                            &batched[s * n_out..(s + 1) * n_out],
+                            &single[..],
+                            "n_in={n_in} n_out={n_out} n_samples={n_samples} s={s}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

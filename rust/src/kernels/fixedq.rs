@@ -1,0 +1,140 @@
+//! The Q-format fixed-point kernel — the FPU-less inference inner loop
+//! (Table I right column: `mul / sra / add`), with FANN `fann_mult`
+//! semantics shared with [`crate::quantize`]: widen to i64, arithmetic
+//! shift right by `dec` per product, accumulate in i64, saturate to the
+//! i32 range on write-back.
+//!
+//! Integer accumulation is order-independent (two's-complement adds
+//! commute), so the batched entry point's 4-sample blocking is bit-exact
+//! against per-sample `matvec` *and* against the scalar Q-format oracle
+//! in `rust/tests/parity_kernels.rs` — which in turn is pinned to the
+//! Pallas fixed-point kernel by the TSV parity vectors.
+
+use super::{DenseKernel, DenseLayerRef};
+use crate::quantize::{qmul, sat_i32};
+
+/// Q(dec) dense kernel. The decimal point is part of the kernel value,
+/// because the shift amount is what defines the arithmetic.
+#[derive(Debug, Clone, Copy)]
+pub struct FixedQ {
+    pub dec: u32,
+}
+
+impl FixedQ {
+    pub fn new(dec: u32) -> Self {
+        Self { dec }
+    }
+}
+
+impl DenseKernel<i32> for FixedQ {
+    fn name(&self) -> &'static str {
+        "fixed_q"
+    }
+
+    fn matvec(&self, layer: &DenseLayerRef<i32>, x: &[i32], out: &mut [i32]) {
+        debug_assert_eq!(x.len(), layer.n_in);
+        debug_assert_eq!(out.len(), layer.n_out);
+        for o in 0..layer.n_out {
+            let row = &layer.weights[o * layer.n_in..(o + 1) * layer.n_in];
+            let mut acc: i64 = layer.biases[o] as i64;
+            for (&w, &xv) in row.iter().zip(x) {
+                acc += qmul(w, xv, self.dec);
+            }
+            out[o] = sat_i32(acc) as i32;
+        }
+    }
+
+    /// 4-sample blocked batch: each weight is loaded once and multiplied
+    /// against 4 samples' inputs — the same weight-reuse the paper's DMA
+    /// double-buffering banks on. Bit-exact vs `matvec` (integer adds
+    /// commute; saturation happens once per output, after the sum).
+    fn matmul(&self, layer: &DenseLayerRef<i32>, xs: &[i32], n_samples: usize, out: &mut [i32]) {
+        let n_in = layer.n_in;
+        let n_out = layer.n_out;
+        debug_assert_eq!(xs.len(), n_in * n_samples);
+        debug_assert_eq!(out.len(), n_out * n_samples);
+        let mut s0 = 0;
+        while s0 < n_samples {
+            let sb = (n_samples - s0).min(4);
+            for o in 0..n_out {
+                let row = &layer.weights[o * n_in..(o + 1) * n_in];
+                let mut acc = [layer.biases[o] as i64; 4];
+                for (i, &w) in row.iter().enumerate() {
+                    for si in 0..sb {
+                        acc[si] += qmul(w, xs[(s0 + si) * n_in + i], self.dec);
+                    }
+                }
+                for si in 0..sb {
+                    out[(s0 + si) * n_out + o] = sat_i32(acc[si]) as i32;
+                }
+            }
+            s0 += sb;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quantize::{dequantize, quantize};
+
+    #[test]
+    fn matches_float_affine_within_lsb_noise() {
+        let dec = 12;
+        let k = FixedQ::new(dec);
+        let wf = [0.5f32, -0.25, 1.0, 0.125, -0.5, 0.75];
+        let bf = [0.1f32, -0.1];
+        let xf = [0.3f32, -0.6, 0.9];
+        let w: Vec<i32> = wf.iter().map(|&v| quantize(v, dec)).collect();
+        let b: Vec<i32> = bf.iter().map(|&v| quantize(v, dec)).collect();
+        let x: Vec<i32> = xf.iter().map(|&v| quantize(v, dec)).collect();
+        let layer = DenseLayerRef::new(3, 2, &w, &b);
+        let mut out = [0i32; 2];
+        k.matvec(&layer, &x, &mut out);
+        for o in 0..2 {
+            let want: f32 =
+                bf[o] + (0..3).map(|i| wf[o * 3 + i] * xf[i]).sum::<f32>();
+            let got = dequantize(out[o] as i64, dec);
+            assert!((want - got).abs() < 4.0 / (1 << dec) as f32, "{want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn saturates_on_overflow() {
+        let dec = 4;
+        let k = FixedQ::new(dec);
+        let w = vec![i32::MAX / 2; 8];
+        let b = vec![0i32];
+        let x = vec![i32::MAX / 2; 8];
+        let layer = DenseLayerRef::new(8, 1, &w, &b);
+        let mut out = [0i32];
+        k.matvec(&layer, &x, &mut out);
+        assert_eq!(out[0], i32::MAX);
+    }
+
+    #[test]
+    fn batched_bit_exact_vs_single() {
+        use crate::util::rng::Rng;
+        let dec = 10;
+        let k = FixedQ::new(dec);
+        let mut rng = Rng::new(0xF1);
+        let (n_in, n_out, n_samples) = (7, 5, 6);
+        let w: Vec<i32> = (0..n_in * n_out)
+            .map(|_| quantize(rng.range_f32(-1.0, 1.0), dec))
+            .collect();
+        let b: Vec<i32> = (0..n_out)
+            .map(|_| quantize(rng.range_f32(-1.0, 1.0), dec))
+            .collect();
+        let xs: Vec<i32> = (0..n_in * n_samples)
+            .map(|_| quantize(rng.range_f32(-1.0, 1.0), dec))
+            .collect();
+        let layer = DenseLayerRef::new(n_in, n_out, &w, &b);
+        let mut batched = vec![0i32; n_out * n_samples];
+        k.matmul(&layer, &xs, n_samples, &mut batched);
+        for s in 0..n_samples {
+            let mut single = vec![0i32; n_out];
+            k.matvec(&layer, &xs[s * n_in..(s + 1) * n_in], &mut single);
+            assert_eq!(&batched[s * n_out..(s + 1) * n_out], &single[..]);
+        }
+    }
+}

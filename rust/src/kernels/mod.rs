@@ -1,0 +1,127 @@
+//! The kernel-dispatch layer: every dense forward path in the crate —
+//! [`crate::fann::Network`] (float), [`crate::fann::FixedNetwork`]
+//! (Q-format) and the deployment simulator's
+//! [`crate::simulator::Executable`] — funnels its inner loop through one
+//! [`DenseKernel`] implementation instead of carrying a private copy.
+//!
+//! This is the software analogue of the paper's central optimization
+//! story: the *math* of a fully-connected layer is fixed (Eq. 1), but
+//! the *loop structure* is what throughput is won from (Table I —
+//! reorganized matvec inner loops; CMSIS-NN makes the same point). The
+//! implementations here are the host-side counterparts of those MCU
+//! variants:
+//!
+//! * [`ScalarF32`] — textbook one-accumulator loop; the float reference.
+//! * [`BlockedF32`] — 4-lane ILP accumulators (the paper's unrolled
+//!   MAC loop), extended to 4×4 sample×neuron register tiles for the
+//!   batched entry point. Per-sample results are **bit-identical** to
+//!   its own `matvec`, so batching never changes numerics.
+//! * [`FixedQ`] — i32/i64 Q-format with FANN `fann_mult` semantics,
+//!   bit-exact with [`crate::quantize`] (and therefore with the Pallas
+//!   fixed-point kernel pinned by the parity tests).
+//!
+//! Kernels compute the *pre-activation* affine part (`W·x + b`, Q-format
+//! saturated); activations stay with the caller, which is what lets the
+//! float and fixed networks share one dispatch layer.
+
+pub mod blocked;
+pub mod fixedq;
+pub mod scalar;
+
+pub use blocked::{dot_f32, BlockedF32};
+pub use fixedq::FixedQ;
+pub use scalar::ScalarF32;
+
+/// Borrowed view of one dense layer's parameters, element type `E`
+/// (`f32` for the float path, `i32` for Q-format). Weights are row-major
+/// per output neuron (`weights[o * n_in + i]`), the MCU streaming order.
+#[derive(Debug, Clone, Copy)]
+pub struct DenseLayerRef<'a, E> {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub weights: &'a [E],
+    pub biases: &'a [E],
+}
+
+impl<'a, E> DenseLayerRef<'a, E> {
+    pub fn new(n_in: usize, n_out: usize, weights: &'a [E], biases: &'a [E]) -> Self {
+        debug_assert_eq!(weights.len(), n_in * n_out);
+        debug_assert_eq!(biases.len(), n_out);
+        Self {
+            n_in,
+            n_out,
+            weights,
+            biases,
+        }
+    }
+}
+
+/// A dense (fully-connected) compute kernel over element type `E`.
+///
+/// `matvec` is the single-sample hot loop; `matmul` is the batched entry
+/// point (`n_samples` inputs packed row-major). The default `matmul`
+/// just loops `matvec`, so per-sample/batched parity holds by
+/// construction for kernels that don't specialize it; kernels that do
+/// specialize (e.g. [`BlockedF32`]) must preserve per-sample results
+/// bit-for-bit — `rust/tests/batch_consistency.rs` enforces this.
+pub trait DenseKernel<E>: Send + Sync {
+    /// Kernel name for reports and bench tables.
+    fn name(&self) -> &'static str;
+
+    /// `out[o] = b[o] + Σ_i w[o][i]·x[i]` (pre-activation). `x` has
+    /// `n_in` elements, `out` has `n_out`.
+    fn matvec(&self, layer: &DenseLayerRef<E>, x: &[E], out: &mut [E]);
+
+    /// Batched forward: `xs` packs `n_samples` rows of `n_in` elements;
+    /// `out` receives `n_samples` rows of `n_out` elements.
+    fn matmul(&self, layer: &DenseLayerRef<E>, xs: &[E], n_samples: usize, out: &mut [E]) {
+        debug_assert_eq!(xs.len(), layer.n_in * n_samples);
+        debug_assert_eq!(out.len(), layer.n_out * n_samples);
+        for s in 0..n_samples {
+            self.matvec(
+                layer,
+                &xs[s * layer.n_in..(s + 1) * layer.n_in],
+                &mut out[s * layer.n_out..(s + 1) * layer.n_out],
+            );
+        }
+    }
+}
+
+/// The crate-wide default float kernel: what `Network::run` dispatches
+/// to. [`BlockedF32`] reproduces the seed implementation's 4-lane
+/// reduction order, so default-path numerics are unchanged.
+pub fn default_f32() -> &'static dyn DenseKernel<f32> {
+    &BlockedF32
+}
+
+/// All float kernels, for parity tests and bench sweeps.
+pub fn f32_kernels() -> [&'static dyn DenseKernel<f32>; 2] {
+    [&ScalarF32, &BlockedF32]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_kernel_is_blocked() {
+        assert_eq!(default_f32().name(), "blocked_f32");
+    }
+
+    #[test]
+    fn default_matmul_loops_matvec() {
+        // ScalarF32 has no custom matmul: the trait default must equal
+        // per-sample matvec exactly.
+        let w = [0.5f32, -1.0, 2.0, 0.25, 1.5, -0.5];
+        let b = [0.1f32, -0.2];
+        let layer = DenseLayerRef::new(3, 2, &w, &b);
+        let xs = [1.0f32, 2.0, 3.0, -1.0, 0.5, 0.0];
+        let mut batched = [0.0f32; 4];
+        ScalarF32.matmul(&layer, &xs, 2, &mut batched);
+        for s in 0..2 {
+            let mut single = [0.0f32; 2];
+            ScalarF32.matvec(&layer, &xs[s * 3..(s + 1) * 3], &mut single);
+            assert_eq!(&batched[s * 2..(s + 1) * 2], &single[..]);
+        }
+    }
+}

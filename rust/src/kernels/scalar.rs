@@ -1,0 +1,61 @@
+//! The reference float kernel: one accumulator, strictly sequential
+//! adds. This is the left column of the paper's Table I (the naive MAC
+//! loop) and the numeric baseline the blocked kernel is compared against
+//! in `rust/tests/parity_kernels.rs` (tolerance 3e-5 for the float-add
+//! reassociation the 4-lane kernel performs).
+
+use super::{DenseKernel, DenseLayerRef};
+
+/// Textbook dense layer: `acc = b[o]; acc += w·x` in index order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalarF32;
+
+impl DenseKernel<f32> for ScalarF32 {
+    fn name(&self) -> &'static str {
+        "scalar_f32"
+    }
+
+    fn matvec(&self, layer: &DenseLayerRef<f32>, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), layer.n_in);
+        debug_assert_eq!(out.len(), layer.n_out);
+        for o in 0..layer.n_out {
+            let row = &layer.weights[o * layer.n_in..(o + 1) * layer.n_in];
+            let mut acc = layer.biases[o];
+            for (&w, &xv) in row.iter().zip(x) {
+                acc += w * xv;
+            }
+            out[o] = acc;
+        }
+    }
+
+    // No matmul override: the trait default (loop of matvec) IS the
+    // scalar batched semantics.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_affine_values() {
+        // 2 outputs, 3 inputs: y = W x + b with hand computable numbers.
+        let w = [1.0f32, 0.0, -1.0, 2.0, 0.5, 0.0];
+        let b = [0.5f32, -1.0];
+        let layer = DenseLayerRef::new(3, 2, &w, &b);
+        let x = [2.0f32, 4.0, 6.0];
+        let mut out = [0.0f32; 2];
+        ScalarF32.matvec(&layer, &x, &mut out);
+        assert_eq!(out[0], 0.5 + 2.0 - 6.0);
+        assert_eq!(out[1], -1.0 + 4.0 + 2.0);
+    }
+
+    #[test]
+    fn single_input_single_output() {
+        let w = [3.0f32];
+        let b = [1.0f32];
+        let layer = DenseLayerRef::new(1, 1, &w, &b);
+        let mut out = [0.0f32];
+        ScalarF32.matvec(&layer, &[2.0], &mut out);
+        assert_eq!(out[0], 7.0);
+    }
+}

@@ -14,9 +14,24 @@
 //! * **L3** — this crate: the FANN substrate ([`fann`]), the deployment
 //!   planner ([`deploy`]), cycle/energy MCU models ([`targets`]), the
 //!   execution simulator ([`simulator`]), C code generation ([`codegen`]),
-//!   the PJRT runtime that loads the AOT artifacts ([`runtime`]), dataset
-//!   generators ([`datasets`]), the paper's application showcases
-//!   ([`apps`]), and the benchmark harness ([`bench`]).
+//!   the PJRT runtime that loads the AOT artifacts ([`runtime`],
+//!   `--features pjrt`), dataset generators ([`datasets`]), the paper's
+//!   application showcases ([`apps`]), and the benchmark harness
+//!   ([`bench`]).
+//!
+//! # Kernel dispatch
+//!
+//! Every dense forward path — the float [`fann::Network`], the Q-format
+//! [`fann::FixedNetwork`], and the simulator's
+//! [`simulator::Executable`] — executes its inner loop through the
+//! [`kernels`] layer: one [`kernels::DenseKernel`] trait with a
+//! single-sample `matvec` and a batched `matmul` entry point, and three
+//! implementations ([`kernels::ScalarF32`], [`kernels::BlockedF32`],
+//! [`kernels::FixedQ`]). Throughput workloads run many samples per
+//! deployment plan via `run_batch` (and the [`bench::batch`] parallel
+//! driver) instead of looping single-sample inference; per-sample
+//! numerics are bit-identical either way, pinned by
+//! `rust/tests/batch_consistency.rs` and `rust/tests/parity_kernels.rs`.
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! `fann-on-mcu` binary is self-contained.
@@ -31,6 +46,7 @@ pub mod codegen;
 pub mod datasets;
 pub mod deploy;
 pub mod fann;
+pub mod kernels;
 pub mod quantize;
 pub mod runtime;
 pub mod simulator;

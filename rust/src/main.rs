@@ -4,9 +4,13 @@
 //!
 //! * `train`       — train an application showcase natively (iRPROP−),
 //!                   save float + fixed `.net` files, report accuracy.
-//! * `train-pjrt`  — train via the AOT-compiled JAX step (PJRT runtime).
+//! * `train-pjrt`  — train via the AOT-compiled JAX step (PJRT runtime;
+//!                   needs `--features pjrt`).
 //! * `deploy`      — plan placement + generate C code for a target.
 //! * `run`         — simulate one classification on a target.
+//! * `throughput`  — host-side batched-inference throughput: looped
+//!                   single-sample vs batched kernels vs the parallel
+//!                   batch driver, float and fixed.
 //! * `info`        — list applications, targets, artifact status.
 //! * `help`        — this text.
 //!
@@ -24,11 +28,14 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use fann_on_mcu::apps::{self, AppSpec};
-use fann_on_mcu::cli::{parse_csv_f32, parse_target, Args};
+use fann_on_mcu::bench::batch;
+use fann_on_mcu::cli::{parse_csv_f32, parse_sizes, parse_target, Args};
 use fann_on_mcu::codegen::{self, NetSource};
 use fann_on_mcu::deploy::{self, NetShape};
-use fann_on_mcu::fann::{io, FixedNetwork};
-use fann_on_mcu::runtime::{ArtifactDir, PjrtTrainer, Runtime};
+use fann_on_mcu::fann::{io, Activation, FixedNetwork, Network};
+use fann_on_mcu::runtime::ArtifactDir;
+#[cfg(feature = "pjrt")]
+use fann_on_mcu::runtime::{PjrtTrainer, Runtime};
 use fann_on_mcu::simulator::{self, CostOptions, Executable};
 use fann_on_mcu::targets::DataType;
 use fann_on_mcu::util::rng::Rng;
@@ -68,6 +75,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_pjrt(_args: &Args) -> Result<()> {
+    bail!("train-pjrt needs the PJRT runtime: rebuild with `cargo build --features pjrt` (and a real `xla` crate; see rust/Cargo.toml)")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train_pjrt(args: &Args) -> Result<()> {
     args.expect_only(&["topo", "steps", "seed", "artifacts"])?;
     let name = args.get("topo").context("--topo required")?;
@@ -219,6 +232,48 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Host-side throughput comparison: the same randomized MLP executed as
+/// (a) a loop of single-sample `run` calls, (b) one batched
+/// kernel-dispatch `run_batch`, (c) the multi-threaded batch driver —
+/// float and fixed paths. `bench::batch::measure_throughput` (shared
+/// with `benches/perf_batch.rs`) asserts all modes are bit-identical,
+/// then times them; only the loop structure differs, which is the
+/// paper's Table I point transplanted to the host.
+fn cmd_throughput(args: &Args) -> Result<()> {
+    args.expect_only(&["topo", "samples", "threads", "reps", "seed"])?;
+    let sizes = parse_sizes(args.get_or("topo", "64,64,64,8"))?;
+    let n = args.get_usize("samples", 1024)?.max(1);
+    let threads = args.get_usize("threads", 0)?;
+    let reps = args.get_usize("reps", 7)?.max(1);
+    let seed = args.get_u64("seed", 7)?;
+
+    let mut rng = Rng::new(seed);
+    let mut net = Network::new(&sizes, Activation::Tanh, Activation::Sigmoid)?;
+    net.randomize(&mut rng, None);
+    let fixed = FixedNetwork::from_float(&net, 1.0)?;
+    let n_in = net.num_inputs();
+    let xs: Vec<f32> = (0..n * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let workers = batch::resolve_threads(threads);
+    println!(
+        "throughput: topology {:?} ({} MACs/inference), batch {n}, {workers} worker thread(s)\n",
+        sizes,
+        net.macs()
+    );
+
+    let rows = batch::measure_throughput(&net, &fixed, &xs, n, threads, 1, reps);
+    let mut t = Table::new(vec!["path", "batch time", "samples/s", "vs loop"]);
+    for row in &rows {
+        t.row(vec![
+            row.name.to_string(),
+            fmt_time(row.seconds),
+            format!("{:.0}", n as f64 / row.seconds),
+            format!("{:.2}x", row.baseline_seconds / row.seconds),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     args.expect_only(&["artifacts"])?;
     println!("applications:");
@@ -246,9 +301,10 @@ USAGE: fann-on-mcu <command> [--flag value]...
 
 COMMANDS:
   train       --app <gesture|fall|activity> [--seed N] [--out PREFIX]
-  train-pjrt  --topo <xor|gesture|fall|activity> [--steps N] [--seed N]
+  train-pjrt  --topo <xor|gesture|fall|activity> [--steps N] [--seed N]  (needs --features pjrt)
   deploy      --net FILE.net --target T [--out DIR] [--dtype fixed]
   run         --net FILE.net --target T --input \"v1,v2,...\" [--classifications N]
+  throughput  [--topo \"64,64,64,8\"] [--samples N] [--threads T] [--reps R] [--seed N]
   info        show applications, targets, artifact status
   help        this text
 
@@ -263,6 +319,7 @@ fn main() -> Result<()> {
         "train-pjrt" => cmd_train_pjrt(&args),
         "deploy" => cmd_deploy(&args),
         "run" => cmd_run(&args),
+        "throughput" => cmd_throughput(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");

@@ -1,11 +1,14 @@
 //! Q-format fixed-point arithmetic — the FPU-less inference path.
 //!
-//! Semantics are FANN's (`fann_mult` et al.) and are implemented
-//! identically in three places, pinned together by parity tests:
+//! Semantics are FANN's (`fann_mult` et al.), shared across languages
+//! and pinned together by parity tests:
 //!
 //! * `python/compile/kernels/ref.py` (numpy oracle),
 //! * `python/compile/kernels/fixedpoint.py` (Pallas kernel),
-//! * this module (what the deployment simulator executes).
+//! * this crate — where the *primitives* (`quantize`/`qmul`/`sat_i32`
+//!   and the step-linear activation tables) live here, and the dense
+//!   inner loop lives once, in [`crate::kernels::FixedQ`], which every
+//!   Rust fixed-point forward path dispatches through.
 //!
 //! A value `v` is stored as `round(v * 2^dec)` in an `i32`; `dec` (the
 //! *decimal point*) is network-wide, chosen by [`choose_decimal_point`].
@@ -125,7 +128,9 @@ pub fn activation_q(act: Activation, x: i64, dec: u32) -> i64 {
 /// Fixed-point dense layer: `x_q` (n_in), row-major `w_q` ([n_out][n_in]),
 /// `b_q` (n_out) -> writes n_out outputs. The exact math of
 /// `ref.py::dense_q` (which uses column-major (In, Out); transposed here
-/// to the MCU's neuron-row layout).
+/// to the MCU's neuron-row layout). The inner loop lives in
+/// [`crate::kernels::FixedQ`]; this wrapper adds the step-linear
+/// activation on top of the kernel's saturated pre-activation.
 pub fn dense_q_into(
     x_q: &[i32],
     w_q: &[i32],
@@ -134,18 +139,15 @@ pub fn dense_q_into(
     act: Activation,
     out: &mut [i32],
 ) {
+    use crate::kernels::{DenseKernel, DenseLayerRef, FixedQ};
     let n_in = x_q.len();
     let n_out = b_q.len();
     debug_assert_eq!(w_q.len(), n_in * n_out);
     debug_assert_eq!(out.len(), n_out);
-    for o in 0..n_out {
-        let row = &w_q[o * n_in..(o + 1) * n_in];
-        let mut acc: i64 = b_q[o] as i64;
-        for (&w, &x) in row.iter().zip(x_q) {
-            acc += qmul(w, x, dec);
-        }
-        acc = sat_i32(acc);
-        out[o] = activation_q(act, acc, dec) as i32;
+    let layer = DenseLayerRef::new(n_in, n_out, w_q, b_q);
+    FixedQ::new(dec).matvec(&layer, x_q, out);
+    for v in out.iter_mut() {
+        *v = activation_q(act, *v as i64, dec) as i32;
     }
 }
 

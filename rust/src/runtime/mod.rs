@@ -1,13 +1,23 @@
 //! PJRT runtime: the bridge to the AOT-compiled L2/L1 programs.
 //!
-//! [`client`] wraps the `xla` crate (PJRT CPU); [`artifacts`] locates and
-//! describes `artifacts/*.hlo.txt`; [`trainer`] drives the AOT training
-//! step from Rust (the end-to-end example's training loop).
+//! [`artifacts`] locates and describes `artifacts/*.hlo.txt` and is
+//! always compiled (it is plain file parsing, used by the parity tests
+//! and the CLI's `info` command). The executing half — [`client`]
+//! wrapping the `xla` crate (PJRT CPU) and [`trainer`] driving the AOT
+//! training step — is gated behind the off-by-default `pjrt` feature so
+//! the tier-1 build needs neither an XLA install nor network access.
+//! The offline build wires `--features pjrt` to a stub `xla` crate that
+//! compiles everywhere and errors at runtime; point `rust/Cargo.toml`
+//! at the real `xla` crate to actually execute artifacts.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
 pub use artifacts::{ArtifactDir, Manifest};
+#[cfg(feature = "pjrt")]
 pub use client::{CompiledModel, Runtime};
+#[cfg(feature = "pjrt")]
 pub use trainer::PjrtTrainer;

@@ -29,6 +29,32 @@ impl<'a> Executable<'a> {
         }
     }
 
+    pub fn num_outputs(&self) -> usize {
+        match self {
+            Executable::Float(n) => n.num_outputs(),
+            Executable::Fixed(n) => n.num_outputs(),
+        }
+    }
+
+    /// Execute one sample numerically (float outputs; dequantized for
+    /// fixed executables). Both arms dispatch through the crate's
+    /// [`crate::kernels::DenseKernel`] layer.
+    pub fn forward(&self, input: &[f32]) -> Vec<f32> {
+        match self {
+            Executable::Float(n) => n.run(input),
+            Executable::Fixed(n) => n.run(input),
+        }
+    }
+
+    /// Execute `n_samples` packed rows through the batched kernels.
+    /// Per-sample results are bit-identical to [`forward`](Self::forward).
+    pub fn forward_batch(&self, inputs: &[f32], n_samples: usize) -> Vec<f32> {
+        match self {
+            Executable::Float(n) => n.run_batch(inputs, n_samples),
+            Executable::Fixed(n) => n.run_batch(inputs, n_samples),
+        }
+    }
+
     pub fn activations(&self) -> Vec<Activation> {
         match self {
             Executable::Float(n) => n.layers.iter().map(|l| l.activation).collect(),
@@ -84,20 +110,10 @@ impl SimReport {
     }
 }
 
-/// Simulate one classification of `input` under `plan`.
-pub fn simulate(
-    plan: &DeploymentPlan,
-    exe: &Executable,
-    input: &[f32],
-    opts: CostOptions,
-) -> Result<SimReport> {
+/// Plan/executable compatibility checks shared by [`simulate`] and
+/// [`simulate_batch`].
+fn validate(plan: &DeploymentPlan, exe: &Executable) -> Result<()> {
     ensure!(plan.fits(), "network does not fit {}", plan.target.label());
-    ensure!(
-        input.len() == exe.num_inputs(),
-        "input length {} != network inputs {}",
-        input.len(),
-        exe.num_inputs()
-    );
     ensure!(
         exe.layer_sizes() == plan.shape.sizes,
         "plan shape does not match executable"
@@ -106,12 +122,18 @@ pub fn simulate(
         (Executable::Float(_), DataType::Float32) | (Executable::Fixed(_), DataType::Fixed) => {}
         _ => anyhow::bail!("plan dtype does not match executable representation"),
     }
+    Ok(())
+}
 
-    let outputs = match exe {
-        Executable::Float(net) => net.run(input),
-        Executable::Fixed(net) => net.run(input),
-    };
-
+/// Build the cycle/time/energy report for one classification under
+/// `plan`, attaching already-computed `outputs` (the cost model is
+/// independent of the numerics — the paper's premise).
+fn cost_report(
+    plan: &DeploymentPlan,
+    exe: &Executable,
+    outputs: Vec<f32>,
+    opts: CostOptions,
+) -> SimReport {
     let acts = exe.activations();
     let breakdown = cost::network_cycles(plan, &acts, opts);
     let cycles = breakdown.total();
@@ -132,7 +154,7 @@ pub fn simulate(
             plan.target.fixed_overhead_mw(),
         );
 
-    Ok(SimReport {
+    SimReport {
         outputs,
         breakdown,
         seconds,
@@ -141,6 +163,85 @@ pub fn simulate(
         utilization,
         e2e_seconds,
         e2e_energy_uj,
+    }
+}
+
+/// Simulate one classification of `input` under `plan`.
+pub fn simulate(
+    plan: &DeploymentPlan,
+    exe: &Executable,
+    input: &[f32],
+    opts: CostOptions,
+) -> Result<SimReport> {
+    validate(plan, exe)?;
+    ensure!(
+        input.len() == exe.num_inputs(),
+        "input length {} != network inputs {}",
+        input.len(),
+        exe.num_inputs()
+    );
+    let outputs = exe.forward(input);
+    Ok(cost_report(plan, exe, outputs, opts))
+}
+
+/// Result of simulating a batch of classifications executed in one
+/// activation window (the paper's continuous-classification operating
+/// mode, where the cluster bring-up cost is paid once per stream, not
+/// once per sample).
+#[derive(Debug, Clone)]
+pub struct BatchSimReport {
+    /// All `n_samples × n_out` outputs, packed row-major — bit-identical
+    /// to running each sample through [`simulate`] alone.
+    pub outputs: Vec<f32>,
+    pub n_samples: usize,
+    /// The single-classification report the batch totals scale from
+    /// (its `outputs` are the first sample's).
+    pub per_sample: SimReport,
+    /// Modeled time for the whole batch: `n · compute + one bring-up`.
+    pub total_seconds: f64,
+    /// Modeled energy for the whole batch.
+    pub total_energy_uj: f64,
+    /// Modeled sustained classification rate over the batch.
+    pub throughput_hz: f64,
+}
+
+/// Simulate `n_samples` packed classifications under `plan`, paying the
+/// target's fixed activation overhead once for the whole batch — the
+/// execution-model counterpart of [`SimReport::amortized_seconds`].
+pub fn simulate_batch(
+    plan: &DeploymentPlan,
+    exe: &Executable,
+    inputs: &[f32],
+    n_samples: usize,
+    opts: CostOptions,
+) -> Result<BatchSimReport> {
+    ensure!(n_samples > 0, "batch must contain at least one sample");
+    ensure!(
+        inputs.len() == n_samples * exe.num_inputs(),
+        "inputs length {} != {} samples x {} network inputs",
+        inputs.len(),
+        n_samples,
+        exe.num_inputs()
+    );
+    validate(plan, exe)?;
+    // One batched forward covers every sample (no redundant re-run of
+    // sample 0); the per-sample report reuses its first row.
+    let outputs = exe.forward_batch(inputs, n_samples);
+    let per_sample = cost_report(plan, exe, outputs[..exe.num_outputs()].to_vec(), opts);
+    let n = n_samples as f64;
+    let total_seconds = per_sample.seconds * n + plan.target.fixed_overhead_seconds();
+    let total_energy_uj = per_sample.energy_uj * n
+        + power::energy_uj(
+            plan.target.fixed_overhead_seconds(),
+            plan.target.fixed_overhead_mw(),
+        );
+    Ok(BatchSimReport {
+        outputs,
+        n_samples,
+        per_sample,
+        total_seconds,
+        total_energy_uj,
+        throughput_hz: n / total_seconds,
     })
 }
 
@@ -191,6 +292,38 @@ mod tests {
         for (a, b) in r.outputs.iter().zip(&rf) {
             assert!((a - b).abs() < 0.08, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn batch_outputs_match_per_sample_and_amortize_overhead() {
+        let net = float_net(&[7, 6, 5]);
+        let shape = NetShape::from(&net);
+        let p = plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+        let mut rng = Rng::new(3);
+        let n = 16;
+        let xs: Vec<f32> = (0..n * 7).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let r =
+            simulate_batch(&p, &Executable::Float(&net), &xs, n, CostOptions::default()).unwrap();
+        assert_eq!(r.outputs.len(), n * 5);
+        assert_eq!(r.n_samples, n);
+        for s in 0..n {
+            let single = simulate(
+                &p,
+                &Executable::Float(&net),
+                &xs[s * 7..(s + 1) * 7],
+                CostOptions::default(),
+            )
+            .unwrap();
+            assert_eq!(&r.outputs[s * 5..(s + 1) * 5], &single.outputs[..], "sample {s}");
+        }
+        // The batch pays the cluster bring-up once, so it beats n
+        // independent end-to-end classifications.
+        assert!(r.total_seconds < n as f64 * r.per_sample.e2e_seconds);
+        assert!(r.throughput_hz > 1.0 / r.per_sample.e2e_seconds);
+        // Degenerate batches are rejected.
+        assert!(
+            simulate_batch(&p, &Executable::Float(&net), &[], 0, CostOptions::default()).is_err()
+        );
     }
 
     #[test]

@@ -12,6 +12,6 @@ pub mod stream;
 pub mod trace;
 
 pub use cost::{network_cycles, CostOptions, CycleBreakdown};
-pub use engine::{simulate, Executable, SimReport};
+pub use engine::{simulate, simulate_batch, BatchSimReport, Executable, SimReport};
 pub use stream::{analyze as analyze_stream, ClusterPolicy, StreamReport};
 pub use trace::PowerTrace;

@@ -1,0 +1,129 @@
+//! Batch/single-sample consistency: `run_batch` over N samples must
+//! equal N independent `run` calls **exactly** (float: bit-identical,
+//! the batched kernels preserve per-sample accumulation order) and
+//! **bit-exactly** (fixed point), for every kernel implementation and
+//! for the parallel batch driver at every thread count.
+
+use fann_on_mcu::bench::batch::{run_batch_parallel, run_batch_parallel_with_kernel, run_batch_q_parallel};
+use fann_on_mcu::fann::{Activation, FixedNetwork, Network};
+use fann_on_mcu::kernels;
+use fann_on_mcu::quantize;
+use fann_on_mcu::util::proptest::{check, ensure};
+use fann_on_mcu::util::rng::Rng;
+
+fn random_net(rng: &mut Rng) -> Network {
+    let n_layers = rng.range_usize(2, 4);
+    let mut sizes = Vec::with_capacity(n_layers + 1);
+    for _ in 0..=n_layers {
+        sizes.push(rng.range_usize(1, 24));
+    }
+    let mut net = Network::new(&sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+    net.randomize(rng, None);
+    net
+}
+
+#[test]
+fn float_batch_equals_independent_runs_for_every_kernel() {
+    check("float batch == singles", 60, |rng| {
+        let net = random_net(rng);
+        let n_in = net.num_inputs();
+        let n_out = net.num_outputs();
+        let n = rng.range_usize(1, 16);
+        let xs: Vec<f32> = (0..n * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        for kernel in kernels::f32_kernels() {
+            let batched = net.run_batch_with_kernel(kernel, &xs, n);
+            ensure(
+                batched.len() == n * n_out,
+                format!("{}: bad output length", kernel.name()),
+            )?;
+            for s in 0..n {
+                let single = net.run_with_kernel(kernel, &xs[s * n_in..(s + 1) * n_in]);
+                ensure(
+                    batched[s * n_out..(s + 1) * n_out] == single[..],
+                    format!("{} sample {s}: batched != single", kernel.name()),
+                )?;
+            }
+        }
+        // The default-kernel convenience entry points agree too.
+        let batched = net.run_batch(&xs, n);
+        for s in 0..n {
+            let single = net.run(&xs[s * n_in..(s + 1) * n_in]);
+            ensure(
+                batched[s * n_out..(s + 1) * n_out] == single[..],
+                format!("default kernel sample {s}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fixed_batch_bit_exact_vs_independent_runs() {
+    check("fixed batch == singles", 60, |rng| {
+        let net = random_net(rng);
+        let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+        let n_in = fixed.num_inputs();
+        let n_out = fixed.num_outputs();
+        let n = rng.range_usize(1, 16);
+        let xs: Vec<f32> = (0..n * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let q: Vec<i32> = xs
+            .iter()
+            .map(|&v| quantize::quantize(v, fixed.decimal_point))
+            .collect();
+        let batched = fixed.run_batch_q(&q, n);
+        for s in 0..n {
+            let single = fixed.run_q(&q[s * n_in..(s + 1) * n_in]);
+            ensure(
+                batched[s * n_out..(s + 1) * n_out] == single[..],
+                format!("run_batch_q sample {s}"),
+            )?;
+        }
+        // Float-in/float-out wrapper (quantize + infer + dequantize).
+        let fbatched = fixed.run_batch(&xs, n);
+        for s in 0..n {
+            let single = fixed.run(&xs[s * n_in..(s + 1) * n_in]);
+            ensure(
+                fbatched[s * n_out..(s + 1) * n_out] == single[..],
+                format!("run_batch sample {s}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_driver_matches_serial_at_every_thread_count() {
+    check("parallel == serial", 30, |rng| {
+        let net = random_net(rng);
+        let n_in = net.num_inputs();
+        let n = rng.range_usize(1, 40);
+        let xs: Vec<f32> = (0..n * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let serial = net.run_batch(&xs, n);
+        for threads in [1usize, 2, 3, 4, 7] {
+            let par = run_batch_parallel(&net, &xs, n, threads);
+            ensure(par == serial, format!("threads={threads}"))?;
+            for kernel in kernels::f32_kernels() {
+                let park = run_batch_parallel_with_kernel(&net, kernel, &xs, n, threads);
+                let serk = net.run_batch_with_kernel(kernel, &xs, n);
+                ensure(
+                    park == serk,
+                    format!("kernel {} threads={threads}", kernel.name()),
+                )?;
+            }
+        }
+
+        let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+        let q: Vec<i32> = xs
+            .iter()
+            .map(|&v| quantize::quantize(v, fixed.decimal_point))
+            .collect();
+        let serial_q = fixed.run_batch_q(&q, n);
+        for threads in [1usize, 2, 5] {
+            ensure(
+                run_batch_q_parallel(&fixed, &q, n, threads) == serial_q,
+                format!("fixed threads={threads}"),
+            )?;
+        }
+        Ok(())
+    });
+}

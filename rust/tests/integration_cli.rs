@@ -33,6 +33,25 @@ fn info_lists_apps() {
 }
 
 #[test]
+fn throughput_runs_and_reports_all_paths() {
+    let out = bin()
+        .args([
+            "throughput", "--topo", "8,8,4", "--samples", "64", "--reps", "1", "--threads", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    for needle in ["run_batch()", "parallel driver", "run_q()", "vs loop"] {
+        assert!(text.contains(needle), "throughput output missing {needle:?}:\n{text}");
+    }
+}
+
+#[test]
 fn unknown_command_fails_with_help() {
     let out = bin().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());

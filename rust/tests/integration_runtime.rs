@@ -1,7 +1,10 @@
 //! Integration tests for the PJRT runtime: load the AOT artifacts, run
 //! forward passes and the training step, verify the Rust↔JAX contract.
 //!
-//! Requires `make artifacts` (skipped with a message otherwise).
+//! Requires `make artifacts` (skipped with a message otherwise) and the
+//! `pjrt` feature built against the real `xla` crate (the whole file is
+//! compiled out of the default offline build).
+#![cfg(feature = "pjrt")]
 
 use fann_on_mcu::fann::TrainData;
 use fann_on_mcu::runtime::{ArtifactDir, PjrtTrainer, Runtime};

@@ -1,0 +1,118 @@
+//! Property tests for `quantize`'s Q-format primitives, on the
+//! hand-rolled `util::proptest` harness:
+//!
+//! * quantize/dequantize round-trip error is bounded by one LSB,
+//! * `quantize` and `sat_i32` saturate at both rails (never wrap),
+//! * `qmul`'s arithmetic-shift semantics equal exact floor division
+//!   (i128 reference) for the full i32 range, and the `f64` reference
+//!   where f64 is exact.
+
+use fann_on_mcu::quantize::{
+    dequantize, qmul, quantize, sat_i32, I32_MAX, I32_MIN,
+};
+use fann_on_mcu::util::proptest::{check, ensure};
+
+#[test]
+fn quantize_dequantize_roundtrip_within_one_lsb() {
+    check("roundtrip", 512, |rng| {
+        let dec = rng.range_usize(1, 20) as u32;
+        let v = rng.range_f32(-1000.0, 1000.0);
+        let q = quantize(v, dec);
+        let back = dequantize(q as i64, dec);
+        let lsb = 1.0f32 / (1u64 << dec) as f32;
+        ensure(
+            (v - back).abs() <= lsb,
+            format!("dec={dec} v={v} back={back}"),
+        )
+    });
+}
+
+#[test]
+fn quantize_saturates_at_both_rails() {
+    check("quantize saturation", 64, |rng| {
+        let dec = rng.range_usize(1, 20) as u32;
+        ensure(quantize(1e30, dec) == i32::MAX, "positive rail")?;
+        ensure(quantize(-1e30, dec) == i32::MIN, "negative rail")?;
+        ensure(quantize(f32::INFINITY, dec) == i32::MAX, "+inf")?;
+        ensure(quantize(f32::NEG_INFINITY, dec) == i32::MIN, "-inf")?;
+        // Just past the rail saturates; well inside does not.
+        let max_exact = (i32::MAX as f64 / (1i64 << dec) as f64) as f32;
+        ensure(
+            quantize(max_exact * 2.0, dec) == i32::MAX,
+            format!("2x rail dec={dec}"),
+        )?;
+        let v = rng.range_f32(-1.0, 1.0);
+        let q = quantize(v, dec);
+        ensure(
+            q != i32::MAX && q != i32::MIN,
+            format!("small value saturated: v={v} dec={dec}"),
+        )
+    });
+}
+
+#[test]
+fn sat_i32_clamps_and_is_identity_inside() {
+    check("sat_i32", 512, |rng| {
+        // Inside the range: identity.
+        let inside = rng.next_u64() as u32 as i32;
+        ensure(sat_i32(inside as i64) == inside as i64, "identity inside")?;
+        // Outside: clamps to the rails, for arbitrarily large excess.
+        let excess = (rng.next_u64() >> 2) as i64; // non-negative
+        ensure(sat_i32(I32_MAX + 1 + excess) == I32_MAX, "upper rail")?;
+        ensure(sat_i32(I32_MIN - 1 - excess) == I32_MIN, "lower rail")?;
+        ensure(sat_i32(i64::MAX) == I32_MAX, "i64::MAX")?;
+        ensure(sat_i32(i64::MIN) == I32_MIN, "i64::MIN")
+    });
+}
+
+#[test]
+fn qmul_equals_exact_floor_division_full_range() {
+    check("qmul vs i128 floor", 512, |rng| {
+        let a = rng.next_u64() as u32 as i32;
+        let b = rng.next_u64() as u32 as i32;
+        let dec = rng.range_usize(1, 20) as u32;
+        let got = qmul(a, b, dec);
+        // Arithmetic shift right IS floor division by 2^dec; verify
+        // against div_euclid (exact floor) in i128 so the product can
+        // never overflow the reference.
+        let want = ((a as i128) * (b as i128)).div_euclid(1i128 << dec);
+        ensure(
+            got as i128 == want,
+            format!("a={a} b={b} dec={dec}: {got} != {want}"),
+        )
+    });
+}
+
+#[test]
+fn qmul_matches_f64_reference_where_f64_is_exact() {
+    check("qmul vs f64", 512, |rng| {
+        // |a|,|b| < 2^25 keeps the product < 2^50: exactly representable
+        // in f64, so floor(a*b / 2^dec) is the true mathematical value.
+        let a = (rng.next_u64() % (1 << 26)) as i64 - (1 << 25);
+        let b = (rng.next_u64() % (1 << 26)) as i64 - (1 << 25);
+        let dec = rng.range_usize(1, 20) as u32;
+        let got = qmul(a as i32, b as i32, dec);
+        let want = ((a as f64) * (b as f64) / (1i64 << dec) as f64).floor() as i64;
+        ensure(
+            got == want,
+            format!("a={a} b={b} dec={dec}: {got} != {want}"),
+        )
+    });
+}
+
+#[test]
+fn dequantize_inverts_exact_grid_points() {
+    check("grid exactness", 256, |rng| {
+        // Any Q(dec) integer dequantizes to a float that re-quantizes to
+        // itself (the grid is closed under the round trip).
+        let dec = rng.range_usize(1, 20) as u32;
+        // Keep the magnitude small enough that f32 represents the
+        // dequantized value exactly (24-bit mantissa).
+        let q = (rng.next_u64() % (1 << 23)) as i32 - (1 << 22);
+        let v = dequantize(q as i64, dec);
+        ensure(
+            quantize(v, dec) == q,
+            format!("dec={dec} q={q} v={v}"),
+        )
+    });
+}

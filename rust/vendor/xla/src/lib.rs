@@ -1,0 +1,106 @@
+//! Offline stub of the `xla` crate (PJRT bindings).
+//!
+//! The real `xla` crate links `xla_extension` and needs an XLA install,
+//! neither of which exists in the offline build environment. This stub
+//! mirrors exactly the API surface `runtime::client` uses so that
+//! `cargo build --features pjrt` always compiles; every entry point
+//! returns [`Error::Stub`] at runtime. To run against real PJRT, point
+//! the `xla` dependency in `rust/Cargo.toml` at the actual crate — no
+//! source change in the toolkit is needed.
+
+use std::fmt;
+
+/// The single error every stub entry point returns.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// PJRT is unavailable: this binary was built against the offline
+    /// xla stub.
+    Stub,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "xla stub: PJRT unavailable in this build (rebuild against the real `xla` crate)"
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Stub of a PJRT client handle.
+pub struct PjRtClient(());
+
+/// Stub of a compiled-and-loaded PJRT executable.
+pub struct PjRtLoadedExecutable(());
+
+/// Stub of a device buffer returned by execution.
+pub struct PjRtBuffer(());
+
+/// Stub of a host literal (tensor value).
+pub struct Literal(());
+
+/// Stub of a parsed HLO module proto.
+pub struct HloModuleProto(());
+
+/// Stub of an XLA computation.
+pub struct XlaComputation(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Stub)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Stub)
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Stub)
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Stub)
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::Stub)
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Self {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _shape: &[i64]) -> Result<Literal> {
+        Err(Error::Stub)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Stub)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Stub)
+    }
+}
