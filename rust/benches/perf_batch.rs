@@ -7,9 +7,11 @@
 //! 3. the `bench::batch` parallel driver (scoped threads × batched
 //!    kernels),
 //!
-//! for the float path, plus the fixed-point (`run_q`) counterparts.
-//! The shared `bench::batch::measure_throughput` driver asserts all
-//! modes produce bit-identical outputs before timing them. Run with:
+//! for the float path, plus the fixed-point (`run_q`) counterparts and
+//! the packed Q7/Q15 kernels (serial + parallel). The shared
+//! `bench::batch::measure_throughput` driver asserts all modes produce
+//! bit-identical outputs within their representation (packed pinned to
+//! a same-dec FixedQ reference) before timing them. Run with:
 //! `cargo bench --bench perf_batch` (`BATCH=… THREADS=… REPS=…` env
 //! overrides).
 
@@ -37,7 +39,7 @@ fn main() {
     let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
     let n_in = net.num_inputs();
     let xs: Vec<f32> = (0..n * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
-    let workers = batch::resolve_threads(threads);
+    let workers = batch::effective_workers(threads);
 
     println!(
         "=== §Perf: batched kernel dispatch ({}-{}-{}-{} MLP, {} MACs, batch {n}, {workers} worker(s)) ===\n",
@@ -60,10 +62,15 @@ fn main() {
     t.print();
 
     // rows[0] is the looped float baseline; rows[1]/rows[2] the batched
-    // float modes (see measure_throughput's fixed ordering).
+    // float modes; rows[4] the serial fixed batch; rows[6] the serial
+    // packed q7 batch (see measure_throughput's fixed ordering).
     let best = rows[1].seconds.min(rows[2].seconds);
     println!(
         "\nheadline: batched dispatch {:.2}x vs looped single-sample (target: >= 2x at batch >= 64)",
         rows[0].seconds / best
+    );
+    println!(
+        "headline: packed q7 {:.2}x vs fixed_q single-thread (target: >= 1.5x)",
+        rows[4].seconds / rows[6].seconds
     );
 }

@@ -170,9 +170,25 @@ pub fn classify_stream(
     inputs: &[f32],
     n_samples: usize,
 ) -> Result<(Vec<usize>, simulator::BatchSimReport)> {
+    let mut scratch = simulator::ExecScratch::new();
+    classify_stream_with(app, target, inputs, n_samples, &mut scratch)
+}
+
+/// [`classify_stream`] with a caller-owned [`simulator::ExecScratch`]:
+/// a long-running classification service calls this per window batch
+/// with one persistent arena, so the steady state allocates only the
+/// per-batch report buffers.
+pub fn classify_stream_with(
+    app: &TrainedApp,
+    target: Target,
+    inputs: &[f32],
+    n_samples: usize,
+    scratch: &mut simulator::ExecScratch,
+) -> Result<(Vec<usize>, simulator::BatchSimReport)> {
     let (plan, exe) = plan_for_target(app, target)?;
     let n_out = exe.num_outputs();
-    let report = simulator::simulate_batch(&plan, &exe, inputs, n_samples, CostOptions::default())?;
+    let report =
+        simulator::simulate_batch_with(&plan, &exe, inputs, n_samples, CostOptions::default(), scratch)?;
     let preds = report.outputs.chunks(n_out).map(crate::util::argmax).collect();
     Ok((preds, report))
 }

@@ -1,20 +1,31 @@
 //! Parallel batch inference driver — the host-side throughput harness
 //! for continuous-classification workloads (the `apps/` showcases and
-//! the `throughput` CLI command).
+//! the `throughput` / `bench json` CLI commands).
 //!
 //! Work splitting is deliberately simple: the sample axis is chopped
-//! into one contiguous chunk per worker and each worker runs the batched
-//! kernel path ([`crate::fann::Network::run_batch`]) on its chunk with
-//! `std::thread::scope` (the offline crate set has no `rayon`; scoped
-//! threads give the same fork-join shape without a dependency). Because
-//! the batched kernels are bit-identical to single-sample inference per
-//! sample, neither chunking nor thread count changes any output —
-//! `rust/tests/batch_consistency.rs` pins this.
+//! into one contiguous chunk per worker and each worker runs the
+//! allocation-free batched kernel path
+//! ([`crate::fann::Network::run_batch_into`]) on its chunk, writing
+//! straight into its disjoint slice of the output. Workers come from a
+//! persistent [`BatchPool`] (the offline crate set has no `rayon`;
+//! this hand-rolled pool gives the same fork-join shape), so thread
+//! spawn cost is paid once per process/stream instead of once per
+//! batch as with the seed's `std::thread::scope`, and each worker's
+//! thread-local [`crate::kernels::BatchScratch`] arena survives across
+//! batches — the steady state performs no allocation beyond the output
+//! vector. Because the batched kernels are bit-identical to
+//! single-sample inference per sample, neither chunking nor thread
+//! count changes any output — `rust/tests/batch_consistency.rs` pins
+//! this.
 
 use std::num::NonZeroUsize;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
-use crate::fann::{FixedNetwork, Network};
-use crate::kernels::DenseKernel;
+use crate::fann::{from_float_packed, FixedNetwork, Network, PackedNetwork};
+use crate::kernels::{self, BlockedF32, DenseKernel, PackedWidth, ScalarF32};
 
 /// Resolve a requested worker count: 0 means "all available cores".
 pub fn resolve_threads(requested: usize) -> usize {
@@ -45,43 +56,165 @@ pub fn chunks(n: usize, workers: usize) -> Vec<(usize, usize)> {
     out
 }
 
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent fork-join worker pool. Threads are spawned once (at
+/// construction, or once per process for [`global_pool`]) and then
+/// reused for every [`execute`](Self::execute) call; each worker keeps
+/// its thread-local kernel scratch alive between batches, so the
+/// per-batch cost is one channel send per chunk rather than a thread
+/// spawn plus two arena allocations.
+pub struct BatchPool {
+    tx: Option<mpsc::Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl BatchPool {
+    /// Spawn `workers` (≥ 1) threads that park on the job channel.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    // Take the job with the lock released before running
+                    // it, so other workers can pull concurrently.
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // pool dropped
+                    }
+                })
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            handles,
+            workers,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `jobs` to completion on the pool and return once **all** of
+    /// them have finished. Jobs may borrow from the caller's stack:
+    /// this call blocks until every job has run (or panicked inside the
+    /// pool, which re-panics here after all jobs have quiesced), so no
+    /// borrow outlives the call. Do not submit jobs that themselves
+    /// call `execute` on the same pool — with every worker waiting, the
+    /// nested call would deadlock.
+    pub fn execute<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        let (ack_tx, ack_rx) = mpsc::channel::<std::thread::Result<()>>();
+        let tx = self.tx.as_ref().expect("pool alive while not dropped");
+        for job in jobs {
+            let ack = ack_tx.clone();
+            let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                // The ack must fire even if the job panics, or the
+                // barrier below would deadlock; the panic payload rides
+                // along and is re-raised after the barrier instead.
+                let _ = ack.send(catch_unwind(AssertUnwindSafe(job)));
+            });
+            // SAFETY: the job is erased to 'static only to cross the
+            // channel; this function does not return (or unwind) until
+            // the barrier below has observed every job's completion
+            // ack, so all captured borrows strictly outlive the job's
+            // execution. Workers never drop a received job unexecuted
+            // (they only exit between jobs, on channel close).
+            let wrapped = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(wrapped)
+            };
+            tx.send(wrapped).expect("pool workers outlive the pool handle");
+        }
+        drop(ack_tx);
+        let mut first_panic = None;
+        for _ in 0..n {
+            match ack_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(payload)) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(payload);
+                    }
+                }
+                // Disconnect means every ack sender (each owned by a
+                // job wrapper) is gone, i.e. all jobs finished.
+                Err(_) => break,
+            }
+        }
+        if let Some(payload) = first_panic {
+            // Re-raise the original panic (message intact) only after
+            // every job has quiesced — borrowed data is safe to unwind.
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for BatchPool {
+    fn drop(&mut self) {
+        // Closing the channel wakes every worker out of recv().
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide pool the `run_batch_*_parallel` drivers submit to,
+/// sized to the machine and spawned on first use — so a stream of
+/// batches pays thread-spawn cost exactly once.
+pub fn global_pool() -> &'static BatchPool {
+    static POOL: OnceLock<BatchPool> = OnceLock::new();
+    POOL.get_or_init(|| BatchPool::new(resolve_threads(0)))
+}
+
+/// The worker count a request for `requested` threads (0 = auto)
+/// actually gets from the global pool: parallelism never exceeds the
+/// pool's size (the machine's cores). The throughput harness reports
+/// THIS number, not the request, so scaling tables and
+/// `BENCH_kernels.json` never claim more parallelism than ran.
+pub fn effective_workers(requested: usize) -> usize {
+    resolve_threads(requested).min(global_pool().workers())
+}
+
 /// The shared fork-join skeleton: split the sample axis into one
-/// contiguous chunk per worker, run `run(chunk_inputs, chunk_len)` on
-/// each under `std::thread::scope`, and reassemble the outputs in
-/// order. Element-type generic so the float and fixed drivers share
-/// one copy of the splitting logic.
-fn parallel_chunks<E, F>(
+/// contiguous chunk per requested worker, run `run(chunk_inputs,
+/// chunk_len, chunk_out)` for each on the global pool, writing straight
+/// into disjoint slices of `out`. Element-type generic so the float,
+/// fixed and packed drivers share one copy of the splitting logic.
+fn parallel_chunks_into<E, F>(
     inputs: &[E],
     n_samples: usize,
     n_in: usize,
     n_out: usize,
     workers: usize,
-    run: F,
-) -> Vec<E>
-where
-    E: Copy + Default + Send + Sync,
-    F: Fn(&[E], usize) -> Vec<E> + Sync,
+    out: &mut [E],
+    run: &F,
+) where
+    E: Send + Sync,
+    F: Fn(&[E], usize, &mut [E]) + Sync,
 {
-    let mut out = vec![E::default(); n_samples * n_out];
-    let plan = chunks(n_samples, workers);
-    // Hand each worker a disjoint slice of the output buffer.
-    let mut out_slices: Vec<&mut [E]> = Vec::with_capacity(plan.len());
-    let mut rest = out.as_mut_slice();
-    for &(_, len) in &plan {
+    debug_assert_eq!(out.len(), n_samples * n_out);
+    // Chunk only as wide as the pool can actually run: more chunks than
+    // workers would just queue, adding per-chunk overhead while the
+    // measured parallelism silently stayed at the pool size.
+    let plan = chunks(n_samples, workers.min(global_pool().workers()));
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(plan.len());
+    let mut rest = out;
+    for &(start, len) in &plan {
         let (head, tail) = std::mem::take(&mut rest).split_at_mut(len * n_out);
-        out_slices.push(head);
+        let in_chunk = &inputs[start * n_in..(start + len) * n_in];
+        jobs.push(Box::new(move || run(in_chunk, len, head)));
         rest = tail;
     }
-    std::thread::scope(|scope| {
-        for (&(start, len), out_chunk) in plan.iter().zip(out_slices) {
-            let in_chunk = &inputs[start * n_in..(start + len) * n_in];
-            let run = &run;
-            scope.spawn(move || {
-                out_chunk.copy_from_slice(&run(in_chunk, len));
-            });
-        }
-    });
-    out
+    global_pool().execute(jobs);
 }
 
 /// Run `n_samples` packed float rows through `net` on `threads` workers
@@ -110,9 +243,14 @@ pub fn run_batch_parallel_with_kernel(
     if workers <= 1 || n_samples <= 1 {
         return net.run_batch_with_kernel(kernel, inputs, n_samples);
     }
-    parallel_chunks(inputs, n_samples, n_in, net.num_outputs(), workers, |chunk, len| {
-        net.run_batch_with_kernel(kernel, chunk, len)
-    })
+    let n_out = net.num_outputs();
+    let mut out = vec![0.0f32; n_samples * n_out];
+    parallel_chunks_into(inputs, n_samples, n_in, n_out, workers, &mut out, &|chunk,
+                                                                              len,
+                                                                              dst| {
+        kernels::with_thread_scratch_f32(|s| net.run_batch_into(kernel, chunk, len, s, dst))
+    });
+    out
 }
 
 /// Fixed-point counterpart: run `n_samples` packed Q(dec) rows on
@@ -129,9 +267,53 @@ pub fn run_batch_q_parallel(
     if workers <= 1 || n_samples <= 1 {
         return net.run_batch_q(inputs_q, n_samples);
     }
-    parallel_chunks(inputs_q, n_samples, n_in, net.num_outputs(), workers, |chunk, len| {
-        net.run_batch_q(chunk, len)
-    })
+    let n_out = net.num_outputs();
+    let mut out = vec![0i32; n_samples * n_out];
+    parallel_chunks_into(inputs_q, n_samples, n_in, n_out, workers, &mut out, &|chunk,
+                                                                                len,
+                                                                                dst| {
+        kernels::with_thread_scratch_i32(|s| net.run_batch_q_into(chunk, len, s, dst))
+    });
+    out
+}
+
+/// Packed-kernel counterpart: run `n_samples` packed Q(dec) rows
+/// through a [`PackedNetwork`] on `threads` workers. Bit-exact vs
+/// [`PackedNetwork::run_batch_q`] (and therefore vs the `FixedNetwork`
+/// the packed net came from).
+pub fn run_batch_packed_parallel(
+    net: &PackedNetwork,
+    inputs_q: &[i32],
+    n_samples: usize,
+    threads: usize,
+) -> Vec<i32> {
+    let n_in = net.num_inputs();
+    assert_eq!(inputs_q.len(), n_samples * n_in);
+    let workers = resolve_threads(threads);
+    if workers <= 1 || n_samples <= 1 {
+        return net.run_batch_q(inputs_q, n_samples);
+    }
+    let n_out = net.num_outputs();
+    let mut out = vec![0i32; n_samples * n_out];
+    parallel_chunks_into(inputs_q, n_samples, n_in, n_out, workers, &mut out, &|chunk,
+                                                                                len,
+                                                                                dst| {
+        kernels::with_thread_scratch_i32(|s| net.run_batch_q_into(chunk, len, s, dst))
+    });
+    out
+}
+
+/// Order-sensitive digest of a float output buffer (bit patterns, so
+/// "close enough" never masks a divergence).
+pub fn checksum_f32(xs: &[f32]) -> u64 {
+    xs.iter()
+        .fold(0u64, |h, &v| h.wrapping_mul(0x100000001B3).wrapping_add(v.to_bits() as u64))
+}
+
+/// Order-sensitive digest of a Q-format output buffer.
+pub fn checksum_i32(xs: &[i32]) -> u64 {
+    xs.iter()
+        .fold(0u64, |h, &v| h.wrapping_mul(0x100000001B3).wrapping_add(v as u32 as u64))
 }
 
 /// One measured execution mode of the standard throughput comparison.
@@ -141,16 +323,23 @@ pub struct ThroughputRow {
     /// Median wall time for the whole batch.
     pub seconds: f64,
     /// The looped single-sample baseline this row is compared against
-    /// (the float loop for float rows, the fixed loop for fixed rows).
+    /// (the float loop for float rows, the fixed loop for fixed and
+    /// packed rows).
     pub baseline_seconds: f64,
+    /// Digest of the outputs produced inside the timed loop. Serves two
+    /// purposes: the timed computation feeds a value the optimizer
+    /// cannot elide, and modes of the same representation must agree
+    /// ([`measure_throughput`] asserts it), doubling as a parity check.
+    pub checksum: u64,
 }
 
-/// Measure the six standard modes — float/fixed × {looped single-sample,
-/// batched kernels, parallel driver} — on the same network and inputs.
-/// Shared by `benches/perf_batch.rs` and the `throughput` CLI command so
-/// the two can't drift. Asserts first that every mode produces
-/// bit-identical outputs; panics otherwise (a wrong-answer mode must
-/// never be timed as if it were an optimization).
+/// Measure the standard modes — float/fixed × {looped single-sample,
+/// batched kernels, parallel driver} plus the packed Q7/Q15 kernels ×
+/// {batched, parallel} — on the same network and inputs. Shared by
+/// `benches/perf_batch.rs` and the `throughput` CLI command so the two
+/// can't drift. Asserts first that every mode produces bit-identical
+/// outputs within its representation; panics otherwise (a wrong-answer
+/// mode must never be timed as if it were an optimization).
 pub fn measure_throughput(
     net: &Network,
     fixed: &FixedNetwork,
@@ -163,6 +352,14 @@ pub fn measure_throughput(
     let n_in = net.num_inputs();
     assert_eq!(xs.len(), n_samples * n_in);
     let xq = fixed.quantize_input(xs);
+
+    // The packed networks quantize at their own (narrower-weight)
+    // decimal points; each is bit-exact against a FixedQ reference at
+    // the same dec, asserted below.
+    let (fixed7, packed7) = from_float_packed(net, 1.0, PackedWidth::Q7).expect("q7 pack");
+    let (fixed15, packed15) = from_float_packed(net, 1.0, PackedWidth::Q15).expect("q15 pack");
+    let xq7 = packed7.quantize_input(xs);
+    let xq15 = packed15.quantize_input(xs);
 
     let mut looped = Vec::with_capacity(n_samples * net.num_outputs());
     for s in 0..n_samples {
@@ -184,39 +381,239 @@ pub fn measure_throughput(
         run_batch_q_parallel(fixed, &xq, n_samples, threads),
         "fixed parallel driver diverged"
     );
+    // Packed bit-exactness vs the wide FixedQ reference at the same
+    // decimal point — the kernel-family headline, re-verified on every
+    // measurement.
+    let packed7_out = packed7.run_batch_q(&xq7, n_samples);
+    assert_eq!(
+        packed7_out,
+        fixed7.run_batch_q(&xq7, n_samples),
+        "packed q7 diverged from FixedQ at dec {}",
+        packed7.decimal_point
+    );
+    assert_eq!(
+        packed7_out,
+        run_batch_packed_parallel(&packed7, &xq7, n_samples, threads),
+        "packed q7 parallel driver diverged"
+    );
+    let packed15_out = packed15.run_batch_q(&xq15, n_samples);
+    assert_eq!(
+        packed15_out,
+        fixed15.run_batch_q(&xq15, n_samples),
+        "packed q15 diverged from FixedQ at dec {}",
+        packed15.decimal_point
+    );
+    assert_eq!(
+        packed15_out,
+        run_batch_packed_parallel(&packed15, &xq15, n_samples, threads),
+        "packed q15 parallel driver diverged"
+    );
 
     let mut scratch = crate::fann::Scratch::for_network(net);
+    let mut ck = 0u64;
     let t_loop = super::time_median(warmup, reps, || {
+        ck = 0;
         for s in 0..n_samples {
-            std::hint::black_box(net.run_with(&mut scratch, &xs[s * n_in..(s + 1) * n_in]));
+            let out = net.run_with(&mut scratch, &xs[s * n_in..(s + 1) * n_in]);
+            ck = ck.wrapping_add(checksum_f32(out));
         }
+        std::hint::black_box(ck);
     });
+    let ck_loop = ck;
     let t_batch = super::time_median(warmup, reps, || {
-        std::hint::black_box(net.run_batch(xs, n_samples));
+        ck = checksum_f32(&net.run_batch(xs, n_samples));
+        std::hint::black_box(ck);
     });
+    let ck_batch = ck;
     let t_par = super::time_median(warmup, reps, || {
-        std::hint::black_box(run_batch_parallel(net, xs, n_samples, threads));
+        ck = checksum_f32(&run_batch_parallel(net, xs, n_samples, threads));
+        std::hint::black_box(ck);
     });
+    let ck_par = ck;
     let t_loop_q = super::time_median(warmup, reps, || {
+        ck = 0;
         for s in 0..n_samples {
-            std::hint::black_box(fixed.run_q(&xq[s * n_in..(s + 1) * n_in]));
+            ck = ck.wrapping_add(checksum_i32(&fixed.run_q(&xq[s * n_in..(s + 1) * n_in])));
         }
+        std::hint::black_box(ck);
     });
+    let ck_loop_q = ck;
     let t_batch_q = super::time_median(warmup, reps, || {
-        std::hint::black_box(fixed.run_batch_q(&xq, n_samples));
+        ck = checksum_i32(&fixed.run_batch_q(&xq, n_samples));
+        std::hint::black_box(ck);
     });
+    let ck_batch_q = ck;
     let t_par_q = super::time_median(warmup, reps, || {
-        std::hint::black_box(run_batch_q_parallel(fixed, &xq, n_samples, threads));
+        ck = checksum_i32(&run_batch_q_parallel(fixed, &xq, n_samples, threads));
+        std::hint::black_box(ck);
     });
+    let ck_par_q = ck;
+    let t_p7 = super::time_median(warmup, reps, || {
+        ck = checksum_i32(&packed7.run_batch_q(&xq7, n_samples));
+        std::hint::black_box(ck);
+    });
+    let ck_p7 = ck;
+    let t_p7_par = super::time_median(warmup, reps, || {
+        ck = checksum_i32(&run_batch_packed_parallel(&packed7, &xq7, n_samples, threads));
+        std::hint::black_box(ck);
+    });
+    let ck_p7_par = ck;
+    let t_p15 = super::time_median(warmup, reps, || {
+        ck = checksum_i32(&packed15.run_batch_q(&xq15, n_samples));
+        std::hint::black_box(ck);
+    });
+    let ck_p15 = ck;
+    let t_p15_par = super::time_median(warmup, reps, || {
+        ck = checksum_i32(&run_batch_packed_parallel(&packed15, &xq15, n_samples, threads));
+        std::hint::black_box(ck);
+    });
+    let ck_p15_par = ck;
 
-    vec![
-        ThroughputRow { name: "float: looped run()", seconds: t_loop, baseline_seconds: t_loop },
-        ThroughputRow { name: "float: run_batch()", seconds: t_batch, baseline_seconds: t_loop },
-        ThroughputRow { name: "float: parallel driver", seconds: t_par, baseline_seconds: t_loop },
-        ThroughputRow { name: "fixed: looped run_q()", seconds: t_loop_q, baseline_seconds: t_loop_q },
-        ThroughputRow { name: "fixed: run_batch_q()", seconds: t_batch_q, baseline_seconds: t_loop_q },
-        ThroughputRow { name: "fixed: parallel driver", seconds: t_par_q, baseline_seconds: t_loop_q },
-    ]
+    let rows = vec![
+        ThroughputRow { name: "float: looped run()", seconds: t_loop, baseline_seconds: t_loop, checksum: ck_loop },
+        ThroughputRow { name: "float: run_batch()", seconds: t_batch, baseline_seconds: t_loop, checksum: ck_batch },
+        ThroughputRow { name: "float: parallel driver", seconds: t_par, baseline_seconds: t_loop, checksum: ck_par },
+        ThroughputRow { name: "fixed: looped run_q()", seconds: t_loop_q, baseline_seconds: t_loop_q, checksum: ck_loop_q },
+        ThroughputRow { name: "fixed: run_batch_q()", seconds: t_batch_q, baseline_seconds: t_loop_q, checksum: ck_batch_q },
+        ThroughputRow { name: "fixed: parallel driver", seconds: t_par_q, baseline_seconds: t_loop_q, checksum: ck_par_q },
+        ThroughputRow { name: "packed q7: run_batch_q()", seconds: t_p7, baseline_seconds: t_loop_q, checksum: ck_p7 },
+        ThroughputRow { name: "packed q7: parallel driver", seconds: t_p7_par, baseline_seconds: t_loop_q, checksum: ck_p7_par },
+        ThroughputRow { name: "packed q15: run_batch_q()", seconds: t_p15, baseline_seconds: t_loop_q, checksum: ck_p15 },
+        ThroughputRow { name: "packed q15: parallel driver", seconds: t_p15_par, baseline_seconds: t_loop_q, checksum: ck_p15_par },
+    ];
+    // Checksums within one representation must agree — an elided or
+    // divergent timed loop must never be reported as a speedup. The
+    // looped float checksum uses a per-sample sum (different fold
+    // order), so batch and parallel rows are compared to each other.
+    assert_eq!(rows[1].checksum, rows[2].checksum, "float batch/parallel checksum");
+    assert_eq!(rows[4].checksum, rows[5].checksum, "fixed batch/parallel checksum");
+    assert_eq!(rows[6].checksum, rows[7].checksum, "packed q7 checksum");
+    assert_eq!(rows[8].checksum, rows[9].checksum, "packed q15 checksum");
+    rows
+}
+
+/// One row of the machine-readable kernel sweep (`bench json`).
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub kernel: &'static str,
+    /// `"serial"` or `"parallel"`.
+    pub mode: &'static str,
+    /// Median wall time for the whole batch.
+    pub seconds: f64,
+    pub samples_per_sec: f64,
+    /// Parameter storage (weights + biases) in this kernel's
+    /// representation — the packed kernels' footprint win.
+    pub bytes_per_network: usize,
+    pub checksum: u64,
+}
+
+/// The full kernel × execution-mode throughput sweep behind
+/// `bench json`: every dense kernel (scalar/blocked float, wide
+/// FixedQ, packed Q7/Q15) in serial and pool-parallel batched mode on
+/// the same randomized network and inputs. Asserts serial/parallel
+/// bit-parity per kernel before timing anything.
+pub fn kernel_sweep(
+    net: &Network,
+    xs: &[f32],
+    n_samples: usize,
+    threads: usize,
+    warmup: usize,
+    reps: usize,
+) -> Vec<SweepRow> {
+    let n_in = net.num_inputs();
+    assert_eq!(xs.len(), n_samples * n_in);
+    let fixed = FixedNetwork::from_float(net, 1.0).expect("fixed conversion");
+    let xq = fixed.quantize_input(xs);
+    let (fixed7, packed7) = from_float_packed(net, 1.0, PackedWidth::Q7).expect("q7 pack");
+    let (fixed15, packed15) = from_float_packed(net, 1.0, PackedWidth::Q15).expect("q15 pack");
+    let xq7 = packed7.quantize_input(xs);
+    let xq15 = packed15.quantize_input(xs);
+
+    let n_biases: usize = net.layers.iter().map(|l| l.biases.len()).sum();
+    let wide_bytes = 4 * (net.num_weights() + n_biases);
+
+    // One timing protocol for every (kernel, mode) cell: run the mode,
+    // fold its output into a checksum the optimizer cannot elide, keep
+    // the median wall time.
+    let timed_row = |kernel: &'static str, mode: &'static str, bytes: usize, run: &dyn Fn() -> u64| {
+        let mut ck = 0u64;
+        let t = super::time_median(warmup, reps, || {
+            ck = run();
+            std::hint::black_box(ck);
+        });
+        SweepRow {
+            kernel,
+            mode,
+            seconds: t,
+            samples_per_sec: n_samples as f64 / t,
+            bytes_per_network: bytes,
+            checksum: ck,
+        }
+    };
+
+    let mut rows: Vec<SweepRow> = Vec::with_capacity(10);
+
+    // Float kernels.
+    for kernel in [&ScalarF32 as &dyn DenseKernel<f32>, &BlockedF32] {
+        let serial = net.run_batch_with_kernel(kernel, xs, n_samples);
+        let parallel = run_batch_parallel_with_kernel(net, kernel, xs, n_samples, threads);
+        assert_eq!(serial, parallel, "{}: parallel diverged", kernel.name());
+        rows.push(timed_row(kernel.name(), "serial", wide_bytes, &|| {
+            checksum_f32(&net.run_batch_with_kernel(kernel, xs, n_samples))
+        }));
+        rows.push(timed_row(kernel.name(), "parallel", wide_bytes, &|| {
+            checksum_f32(&run_batch_parallel_with_kernel(net, kernel, xs, n_samples, threads))
+        }));
+    }
+
+    // Wide fixed-point kernel.
+    {
+        let serial = fixed.run_batch_q(&xq, n_samples);
+        assert_eq!(
+            serial,
+            run_batch_q_parallel(&fixed, &xq, n_samples, threads),
+            "fixed_q: parallel diverged"
+        );
+        rows.push(timed_row("fixed_q", "serial", wide_bytes, &|| {
+            checksum_i32(&fixed.run_batch_q(&xq, n_samples))
+        }));
+        rows.push(timed_row("fixed_q", "parallel", wide_bytes, &|| {
+            checksum_i32(&run_batch_q_parallel(&fixed, &xq, n_samples, threads))
+        }));
+    }
+
+    // Packed kernels, each pinned to its same-dec FixedQ reference.
+    for (name, reference, packed, xqp) in [
+        ("packed_q7", &fixed7, &packed7, &xq7),
+        ("packed_q15", &fixed15, &packed15, &xq15),
+    ] {
+        let serial = packed.run_batch_q(xqp, n_samples);
+        assert_eq!(
+            serial,
+            reference.run_batch_q(xqp, n_samples),
+            "{name}: diverged from FixedQ reference"
+        );
+        assert_eq!(
+            serial,
+            run_batch_packed_parallel(packed, xqp, n_samples, threads),
+            "{name}: parallel diverged"
+        );
+        rows.push(timed_row(name, "serial", packed.param_bytes(), &|| {
+            checksum_i32(&packed.run_batch_q(xqp, n_samples))
+        }));
+        rows.push(timed_row(name, "parallel", packed.param_bytes(), &|| {
+            checksum_i32(&run_batch_packed_parallel(packed, xqp, n_samples, threads))
+        }));
+    }
+
+    for pair in rows.chunks(2) {
+        assert_eq!(
+            pair[0].checksum, pair[1].checksum,
+            "{} serial/parallel checksum mismatch",
+            pair[0].kernel
+        );
+    }
+    rows
 }
 
 #[cfg(test)]
@@ -246,6 +643,61 @@ mod tests {
                 assert_eq!(next, n);
             }
         }
+    }
+
+    #[test]
+    fn pool_reuses_threads_across_executes() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let pool = BatchPool::new(3);
+        let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+        // Ten batches of three jobs: were threads spawned per batch the
+        // set would approach 30 distinct ids; a true pool stays ≤ 3.
+        for _ in 0..10 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+                .map(|_| {
+                    Box::new(|| {
+                        ids.lock().unwrap().insert(std::thread::current().id());
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.execute(jobs);
+        }
+        let distinct = ids.lock().unwrap().len();
+        assert!((1..=3).contains(&distinct), "saw {distinct} worker threads");
+    }
+
+    #[test]
+    fn pool_runs_more_jobs_than_workers() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = BatchPool::new(2);
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..17)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.execute(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 17);
+    }
+
+    #[test]
+    fn pool_propagates_job_panics_after_quiescing() {
+        let pool = BatchPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.execute(vec![
+                Box::new(|| panic!("boom")) as Box<dyn FnOnce() + Send + '_>,
+                Box::new(|| {}),
+            ]);
+        }));
+        // The original payload (not a generic wrapper) reaches the
+        // caller, so diagnostics keep the panicking job's message.
+        let payload = result.unwrap_err();
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // The pool survives a panicked job (catch_unwind in the worker).
+        pool.execute(vec![Box::new(|| {}) as Box<dyn FnOnce() + Send + '_>]);
     }
 
     #[test]
@@ -283,16 +735,55 @@ mod tests {
     }
 
     #[test]
-    fn measure_throughput_reports_all_six_modes() {
+    fn parallel_packed_is_bit_exact() {
+        let fnet = net(&[5, 9, 3], 13);
+        for width in [PackedWidth::Q7, PackedWidth::Q15] {
+            let (_, packed) = from_float_packed(&fnet, 1.0, width).unwrap();
+            let mut rng = Rng::new(21);
+            let n = 19;
+            let xs: Vec<f32> = (0..n * 5).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let q = packed.quantize_input(&xs);
+            let serial = packed.run_batch_q(&q, n);
+            for threads in [1, 2, 6] {
+                assert_eq!(
+                    run_batch_packed_parallel(&packed, &q, n, threads),
+                    serial,
+                    "{width:?} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn measure_throughput_reports_all_ten_modes() {
         let fnet = net(&[4, 6, 2], 3);
         let fixed = FixedNetwork::from_float(&fnet, 1.0).unwrap();
         let mut rng = Rng::new(2);
         let n = 8;
         let xs: Vec<f32> = (0..n * 4).map(|_| rng.range_f32(-1.0, 1.0)).collect();
         let rows = measure_throughput(&fnet, &fixed, &xs, n, 2, 0, 1);
-        assert_eq!(rows.len(), 6);
+        assert_eq!(rows.len(), 10);
         assert!(rows.iter().all(|r| r.seconds >= 0.0 && r.baseline_seconds >= 0.0));
         assert_eq!(rows[0].seconds, rows[0].baseline_seconds);
+    }
+
+    #[test]
+    fn kernel_sweep_covers_all_kernels_and_agrees() {
+        let fnet = net(&[6, 8, 3], 11);
+        let mut rng = Rng::new(4);
+        let n = 12;
+        let xs: Vec<f32> = (0..n * 6).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let rows = kernel_sweep(&fnet, &xs, n, 2, 0, 1);
+        let kernels: Vec<_> = rows.iter().map(|r| (r.kernel, r.mode)).collect();
+        for k in ["scalar_f32", "blocked_f32", "fixed_q", "packed_q7", "packed_q15"] {
+            assert!(kernels.contains(&(k, "serial")), "{k} serial missing");
+            assert!(kernels.contains(&(k, "parallel")), "{k} parallel missing");
+        }
+        // Packed storage beats the wide i32 representation.
+        let wide = rows.iter().find(|r| r.kernel == "fixed_q").unwrap().bytes_per_network;
+        let p7 = rows.iter().find(|r| r.kernel == "packed_q7").unwrap().bytes_per_network;
+        let p15 = rows.iter().find(|r| r.kernel == "packed_q15").unwrap().bytes_per_network;
+        assert!(p7 < wide && p15 < wide && p7 < p15);
     }
 
     #[test]
@@ -301,5 +792,14 @@ mod tests {
         assert!(run_batch_parallel(&net, &[], 0, 0).is_empty());
         assert!(resolve_threads(0) >= 1);
         assert_eq!(resolve_threads(5), 5);
+    }
+
+    #[test]
+    fn checksums_detect_divergence() {
+        assert_eq!(checksum_f32(&[1.0, 2.0]), checksum_f32(&[1.0, 2.0]));
+        assert_ne!(checksum_f32(&[1.0, 2.0]), checksum_f32(&[2.0, 1.0]));
+        assert_ne!(checksum_i32(&[1, 2, 3]), checksum_i32(&[1, 2, 4]));
+        // -0.0 and +0.0 are different bit patterns: the digest sees it.
+        assert_ne!(checksum_f32(&[0.0]), checksum_f32(&[-0.0]));
     }
 }

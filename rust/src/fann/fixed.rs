@@ -12,7 +12,10 @@ use anyhow::Result;
 
 use super::activation::Activation;
 use super::net::Network;
-use crate::kernels::{DenseKernel, DenseLayerRef, FixedQ};
+use crate::kernels::layout::{pack_rows, PackedPanels, PackedWidth};
+use crate::kernels::{
+    self, BatchScratch, DenseKernel, DenseLayerRef, FixedQ, PackedLayerRef, PackedQ15, PackedQ7,
+};
 use crate::quantize;
 
 /// One quantized layer (row-major weights like the float layer).
@@ -32,23 +35,18 @@ impl FixedLayer {
         DenseLayerRef::new(self.n_in, self.n_out, &self.weights, &self.biases)
     }
 
-    /// Forward one quantized sample: kernel affine part, then the
-    /// step-linear activation. The decimal point comes from the kernel
-    /// itself — the shift amount defines the arithmetic, so affine and
-    /// activation can never disagree on it.
+    /// Forward one quantized sample: one fused `matvec_act` call — the
+    /// kernel computes the affine part and applies the step-linear
+    /// activation at write-back. The decimal point comes from the
+    /// kernel itself — the shift amount defines the arithmetic, so
+    /// affine and activation can never disagree on it.
     pub fn forward_into_with(&self, kernel: &FixedQ, x_q: &[i32], out: &mut [i32]) {
-        kernel.matvec(&self.as_kernel_ref(), x_q, out);
-        for v in out.iter_mut() {
-            *v = quantize::activation_q(self.activation, *v as i64, kernel.dec) as i32;
-        }
+        kernel.matvec_act(&self.as_kernel_ref(), x_q, out, self.activation, 1.0);
     }
 
-    /// Batched forward over `n_samples` packed rows.
+    /// Batched forward over `n_samples` packed rows, activation fused.
     pub fn forward_batch_with(&self, kernel: &FixedQ, xs_q: &[i32], n_samples: usize, out: &mut [i32]) {
-        kernel.matmul(&self.as_kernel_ref(), xs_q, n_samples, out);
-        for v in out.iter_mut() {
-            *v = quantize::activation_q(self.activation, *v as i64, kernel.dec) as i32;
-        }
+        kernel.matmul_act(&self.as_kernel_ref(), xs_q, n_samples, out, self.activation, 1.0);
     }
 }
 
@@ -65,27 +63,7 @@ impl FixedNetwork {
     /// deployed net will see (1.0 for normalized data); it participates in
     /// the overflow analysis exactly like FANN's input-rescaling step.
     pub fn from_float(net: &Network, max_abs_input: f32) -> Result<Self> {
-        let mut max_abs_w = 0f32;
-        for layer in &net.layers {
-            for w in layer.weights.iter().chain(layer.biases.iter()) {
-                max_abs_w = max_abs_w.max(w.abs());
-            }
-        }
-        // Bound on any layer input: the raw input bound or an activation
-        // output bound (sigmoid/tanh are within [-1, 1]).
-        let mut max_abs_x = max_abs_input;
-        for layer in &net.layers {
-            let (lo, hi) = layer.activation.output_range();
-            if lo.is_finite() && hi.is_finite() {
-                max_abs_x = max_abs_x.max(lo.abs().max(hi.abs()));
-            } else {
-                // Unbounded activation (linear/relu): fall back to a
-                // conservative bound used by FANN's analysis.
-                max_abs_x = max_abs_x.max(8.0);
-            }
-        }
-        let max_fan_in = net.layers.iter().map(|l| l.n_in).max().unwrap();
-        let dec = quantize::choose_decimal_point(max_abs_w, max_fan_in, max_abs_x);
+        let dec = overflow_decimal_point(net, max_abs_input);
         Ok(Self::from_float_with_dec(net, dec))
     }
 
@@ -156,21 +134,41 @@ impl FixedNetwork {
     /// `n_in` Q(dec) values; returns `n_samples × n_out` Q(dec) outputs,
     /// bit-exact with `n_samples` independent [`run_q`](Self::run_q)
     /// calls (integer accumulation commutes; the batched kernel only
-    /// reorders weight reuse).
+    /// reorders weight reuse). Allocates only the output vector — the
+    /// inter-layer buffers come from this thread's persistent
+    /// [`BatchScratch`] arena.
     pub fn run_batch_q(&self, inputs_q: &[i32], n_samples: usize) -> Vec<i32> {
+        let mut out = vec![0i32; n_samples * self.num_outputs()];
+        kernels::with_thread_scratch_i32(|scratch| {
+            self.run_batch_q_into(inputs_q, n_samples, scratch, &mut out)
+        });
+        out
+    }
+
+    /// Allocation-free batched quantized inference into a caller buffer
+    /// (`out.len() == n_samples × n_out`), ping-ponging inter-layer
+    /// activations through `scratch` — the Q-format twin of
+    /// [`Network::run_batch_into`].
+    pub fn run_batch_q_into(
+        &self,
+        inputs_q: &[i32],
+        n_samples: usize,
+        scratch: &mut BatchScratch<i32>,
+        out: &mut [i32],
+    ) {
         assert_eq!(inputs_q.len(), n_samples * self.num_inputs());
+        assert_eq!(out.len(), n_samples * self.num_outputs());
         if n_samples == 0 {
-            return Vec::new();
+            return;
         }
         let kernel = FixedQ::new(self.decimal_point);
+        let n_layers = self.layers.len();
         let width = self.max_layer_width();
-        let mut a = vec![0i32; width * n_samples];
-        let mut b = vec![0i32; width * n_samples];
-        a[..inputs_q.len()].copy_from_slice(inputs_q);
+        let (a, b) = scratch.buffers(width * n_samples);
         let mut cur = self.num_inputs();
-        let mut flip = false;
-        for layer in &self.layers {
-            let (src, dst) = if flip { (&b, &mut a) } else { (&a, &mut b) };
+        for (li, layer) in self.layers.iter().enumerate() {
+            let last = li + 1 == n_layers;
+            let (src, dst) = kernels::batch_route(li, last, inputs_q, a, b, out);
             layer.forward_batch_with(
                 &kernel,
                 &src[..cur * n_samples],
@@ -178,10 +176,7 @@ impl FixedNetwork {
                 &mut dst[..layer.n_out * n_samples],
             );
             cur = layer.n_out;
-            flip = !flip;
         }
-        let buf = if flip { &b } else { &a };
-        buf[..cur * n_samples].to_vec()
     }
 
     /// Run a float sample end to end: quantize, infer, dequantize.
@@ -205,6 +200,218 @@ impl FixedNetwork {
     pub fn num_weights(&self) -> usize {
         self.layers.iter().map(|l| l.weights.len()).sum()
     }
+
+    /// Offline pack step (the load-time conversion the ISSUE's paper
+    /// analogy calls neuron-wise DMA layout): convert every layer's
+    /// row-major Q(dec) weights into [`PackedPanels`] at `width`.
+    /// Lossless or an error — quantize with
+    /// [`packable_decimal_point`] first so the weights fit.
+    pub fn pack(&self, width: PackedWidth) -> Result<PackedNetwork> {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                Ok(PackedLayer {
+                    panels: pack_rows(width, l.n_in, l.n_out, &l.weights)?,
+                    biases: l.biases.clone(),
+                    activation: l.activation,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PackedNetwork {
+            layers,
+            decimal_point: self.decimal_point,
+            width,
+        })
+    }
+}
+
+/// Largest steepness-folded parameter magnitude, `max |p · s|` —
+/// folded because `from_float_with_dec` quantizes `p · steepness`, so
+/// the folded value is what must be representable. `weights_only`
+/// selects the packed-width bound (biases stay wide i32 in
+/// [`PackedLayer`], so a large bias must not cost weight bits).
+fn max_abs_folded(net: &Network, weights_only: bool) -> f32 {
+    let mut max_abs = 0f32;
+    for layer in &net.layers {
+        for w in &layer.weights {
+            max_abs = max_abs.max((w * layer.steepness).abs());
+        }
+        if !weights_only {
+            for b in &layer.biases {
+                max_abs = max_abs.max((b * layer.steepness).abs());
+            }
+        }
+    }
+    max_abs
+}
+
+/// The FANN-style overflow analysis both quantization entry points
+/// share ([`FixedNetwork::from_float`] and [`packable_decimal_point`]):
+/// bound layer inputs by the raw input bound or the activation output
+/// range (8.0 fallback for unbounded linear/relu), then pick the
+/// decimal point from the worst-case accumulation over the widest
+/// fan-in ([`quantize::choose_decimal_point`]).
+fn overflow_decimal_point(net: &Network, max_abs_input: f32) -> u32 {
+    let max_abs_w = max_abs_folded(net, false);
+    let mut max_abs_x = max_abs_input;
+    for layer in &net.layers {
+        let (lo, hi) = layer.activation.output_range();
+        if lo.is_finite() && hi.is_finite() {
+            max_abs_x = max_abs_x.max(lo.abs().max(hi.abs()));
+        } else {
+            max_abs_x = max_abs_x.max(8.0);
+        }
+    }
+    let max_fan_in = net.layers.iter().map(|l| l.n_in).max().unwrap();
+    quantize::choose_decimal_point(max_abs_w, max_fan_in, max_abs_x)
+}
+
+/// The largest decimal point at which `net` both passes the shared
+/// overflow analysis ([`overflow_decimal_point`]) *and* has every
+/// steepness-folded **weight** representable at the narrow packed
+/// width — so `FixedNetwork::from_float_with_dec(net, dec)` followed
+/// by [`FixedNetwork::pack`] is lossless. May return 0 (pure-integer
+/// weights) when the largest weight only fits the narrow width with no
+/// fractional bits; a network whose weights exceed the width even at
+/// dec 0 makes [`FixedNetwork::pack`] report an error.
+pub fn packable_decimal_point(net: &Network, max_abs_input: f32, width: PackedWidth) -> u32 {
+    let dec = overflow_decimal_point(net, max_abs_input);
+    dec.min(width.max_dec_for(max_abs_folded(net, true)))
+}
+
+/// Quantize a float network at a width-representable decimal point and
+/// pack it, returning both forms: the [`FixedNetwork`] is the wide
+/// reference the packed one is bit-exact against (same dec, same
+/// arithmetic), and what the parity tests compare.
+pub fn from_float_packed(
+    net: &Network,
+    max_abs_input: f32,
+    width: PackedWidth,
+) -> Result<(FixedNetwork, PackedNetwork)> {
+    let dec = packable_decimal_point(net, max_abs_input, width);
+    let fixed = FixedNetwork::from_float_with_dec(net, dec);
+    let packed = fixed.pack(width)?;
+    Ok((fixed, packed))
+}
+
+/// One layer in packed-panel form: narrow word-packed weights, wide
+/// i32 biases (CMSIS-NN keeps bias wide too).
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    pub panels: PackedPanels,
+    pub biases: Vec<i32>,
+    pub activation: Activation,
+}
+
+/// A fully packed network: the deployment form of [`FixedNetwork`] for
+/// the low-bitwidth kernels. Inference is bit-exact with the
+/// `FixedNetwork` it was packed from (same decimal point, same
+/// per-product arithmetic — see [`crate::kernels::packed`]).
+#[derive(Debug, Clone)]
+pub struct PackedNetwork {
+    pub layers: Vec<PackedLayer>,
+    pub decimal_point: u32,
+    pub width: PackedWidth,
+}
+
+impl PackedNetwork {
+    pub fn num_inputs(&self) -> usize {
+        self.layers[0].panels.n_in
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.layers.last().unwrap().panels.n_out
+    }
+
+    pub fn max_layer_width(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.panels.n_in.max(l.panels.n_out))
+            .max()
+            .unwrap()
+    }
+
+    /// Packed parameter bytes (words + wide biases) — the
+    /// bytes-per-network column of the bench JSON,
+    /// ~4× (Q7) / ~2× (Q15) smaller than the i32 forms.
+    pub fn param_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.panels.weight_bytes() + l.biases.len() * 4)
+            .sum()
+    }
+
+    /// Quantize a float input vector to the network's Q format.
+    pub fn quantize_input(&self, input: &[f32]) -> Vec<i32> {
+        input
+            .iter()
+            .map(|&v| quantize::quantize(v, self.decimal_point))
+            .collect()
+    }
+
+    /// Run one (already quantized) sample; returns Q(dec) outputs.
+    pub fn run_q(&self, input_q: &[i32]) -> Vec<i32> {
+        self.run_batch_q(input_q, 1)
+    }
+
+    /// Batched quantized inference through the packed kernels; output
+    /// is bit-exact with [`FixedNetwork::run_batch_q`] on the source
+    /// network. Allocates only the output vector.
+    pub fn run_batch_q(&self, inputs_q: &[i32], n_samples: usize) -> Vec<i32> {
+        let mut out = vec![0i32; n_samples * self.num_outputs()];
+        kernels::with_thread_scratch_i32(|scratch| {
+            self.run_batch_q_into(inputs_q, n_samples, scratch, &mut out)
+        });
+        out
+    }
+
+    /// Allocation-free batched packed inference (see
+    /// [`FixedNetwork::run_batch_q_into`]).
+    pub fn run_batch_q_into(
+        &self,
+        inputs_q: &[i32],
+        n_samples: usize,
+        scratch: &mut BatchScratch<i32>,
+        out: &mut [i32],
+    ) {
+        assert_eq!(inputs_q.len(), n_samples * self.num_inputs());
+        assert_eq!(out.len(), n_samples * self.num_outputs());
+        if n_samples == 0 {
+            return;
+        }
+        let q7 = PackedQ7::new(self.decimal_point);
+        let q15 = PackedQ15::new(self.decimal_point);
+        let n_layers = self.layers.len();
+        let width = self.max_layer_width();
+        let (a, b) = scratch.buffers(width * n_samples);
+        let mut cur = self.num_inputs();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let last = li + 1 == n_layers;
+            let (src, dst) = kernels::batch_route(li, last, inputs_q, a, b, out);
+            let pref = PackedLayerRef::new(&layer.panels, &layer.biases);
+            let src = &src[..cur * n_samples];
+            let dst = &mut dst[..layer.panels.n_out * n_samples];
+            match self.width {
+                PackedWidth::Q7 => q7.matmul_act(&pref, src, n_samples, dst, layer.activation),
+                PackedWidth::Q15 => q15.matmul_act(&pref, src, n_samples, dst, layer.activation),
+            }
+            cur = layer.panels.n_out;
+        }
+    }
+
+    /// Run a float sample end to end: quantize, infer, dequantize.
+    pub fn run(&self, input: &[f32]) -> Vec<f32> {
+        ensure_len(input.len(), self.num_inputs());
+        self.run_q(&self.quantize_input(input))
+            .into_iter()
+            .map(|q| quantize::dequantize(q as i64, self.decimal_point))
+            .collect()
+    }
+}
+
+fn ensure_len(got: usize, want: usize) {
+    assert_eq!(got, want, "input length {got} != network inputs {want}");
 }
 
 #[cfg(test)]
@@ -274,6 +481,88 @@ mod tests {
         for s in 0..4 {
             let single = fixed.run(&xs[s * 2..(s + 1) * 2]);
             assert_eq!(fbatch[s], single[0]);
+        }
+    }
+
+    #[test]
+    fn packed_network_bit_exact_vs_fixed_reference() {
+        let net = trained_xor();
+        for width in [PackedWidth::Q7, PackedWidth::Q15] {
+            let (fixed, packed) = from_float_packed(&net, 1.0, width).unwrap();
+            assert_eq!(fixed.decimal_point, packed.decimal_point);
+            let xs = [0.0f32, 0.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0];
+            let q: Vec<i32> = xs
+                .iter()
+                .map(|&v| quantize::quantize(v, fixed.decimal_point))
+                .collect();
+            assert_eq!(
+                packed.run_batch_q(&q, 4),
+                fixed.run_batch_q(&q, 4),
+                "{width:?}"
+            );
+            // Packed storage is genuinely smaller than the i32 form.
+            let wide_bytes =
+                4 * (fixed.num_weights() + fixed.layers.iter().map(|l| l.biases.len()).sum::<usize>());
+            assert!(packed.param_bytes() < wide_bytes, "{width:?}");
+            // XOR decisions survive the narrow quantization.
+            for (x, want) in [
+                ([0.0f32, 0.0], 0.0f32),
+                ([0.0, 1.0], 1.0),
+                ([1.0, 0.0], 1.0),
+                ([1.0, 1.0], 0.0),
+            ] {
+                let y = packed.run(&x)[0];
+                assert_eq!(y >= 0.5, want >= 0.5, "{width:?} x={x:?} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn packable_decimal_point_fits_width() {
+        let net = trained_xor();
+        for width in [PackedWidth::Q7, PackedWidth::Q15] {
+            let dec = packable_decimal_point(&net, 1.0, width);
+            let fixed = FixedNetwork::from_float_with_dec(&net, dec);
+            for l in &fixed.layers {
+                assert!(width.fits(&l.weights), "{width:?} dec={dec}");
+            }
+            assert!(dec <= 20);
+        }
+    }
+
+    #[test]
+    fn packable_decimal_point_handles_wide_weights_and_biases() {
+        // A weight of 100 fits Q7 only at dec 0 — the chosen dec must
+        // drop to 0 and still pack losslessly (regression: a dec>=1
+        // floor used to force round(100·2)=200 > 127 and fail pack()).
+        let mut net = Network::new(&[2, 1], Activation::Linear, Activation::Linear).unwrap();
+        net.layers[0].weights = vec![100.0, -90.0];
+        net.layers[0].biases = vec![0.25];
+        let (fixed, packed) = from_float_packed(&net, 1.0, PackedWidth::Q7).unwrap();
+        assert_eq!(fixed.decimal_point, 0);
+        assert_eq!(packed.layers[0].panels.unpack(), vec![100, -90]);
+
+        // A big *bias* must not shrink the weights' fractional bits:
+        // biases stay wide i32, only weights bind the width constraint.
+        let mut net = Network::new(&[2, 1], Activation::Linear, Activation::Linear).unwrap();
+        net.layers[0].weights = vec![0.5, -0.5];
+        net.layers[0].biases = vec![50.0];
+        let dec = packable_decimal_point(&net, 1.0, PackedWidth::Q7);
+        assert!(dec >= 4, "bias should not bind the width constraint (dec={dec})");
+        assert!(net.layers[0].weights.iter().all(|&w| {
+            let q = quantize::quantize(w, dec);
+            PackedWidth::Q7.fits(&[q])
+        }));
+    }
+
+    #[test]
+    fn pack_rejects_unrepresentable_weights() {
+        let net = trained_xor();
+        let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+        // The default decimal point targets i32; q7 packing of those
+        // wide weights must fail loudly rather than truncate.
+        if fixed.layers.iter().any(|l| !PackedWidth::Q7.fits(&l.weights)) {
+            assert!(fixed.pack(PackedWidth::Q7).is_err());
         }
     }
 

@@ -25,5 +25,5 @@ pub mod tune;
 
 pub use activation::Activation;
 pub use data::TrainData;
-pub use fixed::FixedNetwork;
+pub use fixed::{from_float_packed, packable_decimal_point, FixedNetwork, PackedNetwork};
 pub use net::{Layer, Network, Scratch};

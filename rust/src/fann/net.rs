@@ -16,7 +16,7 @@
 use anyhow::{ensure, Result};
 
 use super::activation::Activation;
-use crate::kernels::{self, DenseKernel, DenseLayerRef};
+use crate::kernels::{self, BatchScratch, DenseKernel, DenseLayerRef};
 use crate::util::rng::Rng;
 
 // The 4-lane dot product used by the default kernel; re-exported from
@@ -62,21 +62,21 @@ impl Layer {
         self.forward_into_with(kernels::default_f32(), input, out);
     }
 
-    /// Forward one sample through an explicit [`DenseKernel`]: the
-    /// kernel computes the affine part, the activation (with steepness)
-    /// is applied here — the split that lets float and fixed paths share
-    /// the dispatch layer.
+    /// Forward one sample through an explicit [`DenseKernel`]: one
+    /// fused `matvec_act` call — the kernel computes the affine part
+    /// and applies the activation (with steepness) at write-back, while
+    /// the accumulator is still in registers (kernels without a fused
+    /// override fall back to matvec + a second sweep, numerically
+    /// identical).
     pub fn forward_into_with(&self, kernel: &dyn DenseKernel<f32>, input: &[f32], out: &mut [f32]) {
         debug_assert_eq!(input.len(), self.n_in);
         debug_assert_eq!(out.len(), self.n_out);
-        kernel.matvec(&self.as_kernel_ref(), input, out);
-        for v in out.iter_mut() {
-            *v = self.activation.apply(self.steepness * *v);
-        }
+        kernel.matvec_act(&self.as_kernel_ref(), input, out, self.activation, self.steepness);
     }
 
     /// Batched forward: `xs` packs `n_samples` rows of `n_in` values,
-    /// `out` receives `n_samples` rows of `n_out` values.
+    /// `out` receives `n_samples` rows of `n_out` values. Activation is
+    /// fused into the kernel's batched pass.
     pub fn forward_batch_with(
         &self,
         kernel: &dyn DenseKernel<f32>,
@@ -86,10 +86,14 @@ impl Layer {
     ) {
         debug_assert_eq!(xs.len(), self.n_in * n_samples);
         debug_assert_eq!(out.len(), self.n_out * n_samples);
-        kernel.matmul(&self.as_kernel_ref(), xs, n_samples, out);
-        for v in out.iter_mut() {
-            *v = self.activation.apply(self.steepness * *v);
-        }
+        kernel.matmul_act(
+            &self.as_kernel_ref(),
+            xs,
+            n_samples,
+            out,
+            self.activation,
+            self.steepness,
+        );
     }
 
     /// Number of weights (excluding biases).
@@ -232,27 +236,50 @@ impl Network {
     }
 
     /// [`run_batch`](Self::run_batch) through an explicit kernel.
+    /// Allocates only the output vector: the inter-layer ping-pong
+    /// buffers come from this thread's persistent [`BatchScratch`]
+    /// arena, so repeated same-shape calls perform no scratch
+    /// (re)allocation — `rust/tests/batch_scratch.rs` pins this.
     pub fn run_batch_with_kernel(
         &self,
         kernel: &dyn DenseKernel<f32>,
         inputs: &[f32],
         n_samples: usize,
     ) -> Vec<f32> {
+        let mut out = vec![0.0f32; n_samples * self.num_outputs()];
+        kernels::with_thread_scratch_f32(|scratch| {
+            self.run_batch_into(kernel, inputs, n_samples, scratch, &mut out)
+        });
+        out
+    }
+
+    /// The allocation-free batched forward: `inputs` packs `n_samples`
+    /// rows of `n_in` values, `out` (length `n_samples × n_out`)
+    /// receives the outputs. Inter-layer activations ping-pong through
+    /// `scratch`, which is grown once to `max_layer_width × n_samples`
+    /// per buffer and then only sliced; the first layer reads straight
+    /// from `inputs` and the last writes straight into `out`, so the
+    /// seed path's input copy and output `to_vec` are gone too.
+    pub fn run_batch_into(
+        &self,
+        kernel: &dyn DenseKernel<f32>,
+        inputs: &[f32],
+        n_samples: usize,
+        scratch: &mut BatchScratch<f32>,
+        out: &mut [f32],
+    ) {
         assert_eq!(inputs.len(), n_samples * self.num_inputs());
+        assert_eq!(out.len(), n_samples * self.num_outputs());
         if n_samples == 0 {
-            return Vec::new();
+            return;
         }
-        // Batched ping-pong buffers: rows stay packed at the current
-        // layer's width (stride = cur), so every matmul sees contiguous
-        // samples.
+        let n_layers = self.layers.len();
         let width = self.max_layer_width();
-        let mut a = vec![0.0f32; width * n_samples];
-        let mut b = vec![0.0f32; width * n_samples];
-        a[..inputs.len()].copy_from_slice(inputs);
+        let (a, b) = scratch.buffers(width * n_samples);
         let mut cur = self.num_inputs();
-        let mut flip = false;
-        for layer in &self.layers {
-            let (src, dst) = if flip { (&b, &mut a) } else { (&a, &mut b) };
+        for (li, layer) in self.layers.iter().enumerate() {
+            let last = li + 1 == n_layers;
+            let (src, dst) = kernels::batch_route(li, last, inputs, a, b, out);
             layer.forward_batch_with(
                 kernel,
                 &src[..cur * n_samples],
@@ -260,10 +287,7 @@ impl Network {
                 &mut dst[..layer.n_out * n_samples],
             );
             cur = layer.n_out;
-            flip = !flip;
         }
-        let buf = if flip { &b } else { &a };
-        buf[..cur * n_samples].to_vec()
     }
 
     /// Forward pass retaining every layer's output (for backprop). Returns
@@ -347,6 +371,27 @@ mod tests {
             assert_eq!(&batched[s * 3..(s + 1) * 3], &single[..], "sample {s}");
         }
         assert!(net.run_batch(&[], 0).is_empty());
+    }
+
+    #[test]
+    fn run_batch_into_matches_run_batch_all_depths() {
+        // Depth 1 (input straight to out), 2 (one scratch hop) and 4
+        // (full ping-pong) all agree with the Vec-returning path.
+        let mut rng = Rng::new(31);
+        for sizes in [vec![4usize, 3], vec![4, 6, 3], vec![4, 5, 6, 5, 3]] {
+            let mut net =
+                Network::new(&sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+            net.randomize(&mut rng, None);
+            let n = 5;
+            let xs: Vec<f32> = (0..n * 4).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let want = net.run_batch(&xs, n);
+            let mut scratch = crate::kernels::BatchScratch::new();
+            let mut got = vec![0.0f32; n * 3];
+            net.run_batch_into(crate::kernels::default_f32(), &xs, n, &mut scratch, &mut got);
+            assert_eq!(got, want, "sizes {sizes:?}");
+            // Empty batch is a no-op.
+            net.run_batch_into(crate::kernels::default_f32(), &[], 0, &mut scratch, &mut []);
+        }
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! only), pinned by `rust/tests/parity_kernels.rs`.
 
 use super::{DenseKernel, DenseLayerRef};
+use crate::fann::activation::Activation;
 
 /// Four-lane dot product: independent accumulators expose instruction-
 /// level parallelism / SIMD to the compiler. Reassociates float adds
@@ -44,6 +45,12 @@ impl DenseKernel<f32> for BlockedF32 {
         "blocked_f32"
     }
 
+    fn apply_epilogue(&self, act: Activation, steepness: f32, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = super::epilogue_f32(act, steepness, *v);
+        }
+    }
+
     fn matvec(&self, layer: &DenseLayerRef<f32>, x: &[f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), layer.n_in);
         debug_assert_eq!(out.len(), layer.n_out);
@@ -53,11 +60,63 @@ impl DenseKernel<f32> for BlockedF32 {
         }
     }
 
+    /// Fused single-sample pass: the activation is applied to the
+    /// bias+dot value while it is still a register, instead of a second
+    /// read-modify-write sweep over `out`. Same value, same function —
+    /// bit-identical to the unfused default.
+    fn matvec_act(
+        &self,
+        layer: &DenseLayerRef<f32>,
+        x: &[f32],
+        out: &mut [f32],
+        act: Activation,
+        steepness: f32,
+    ) {
+        debug_assert_eq!(x.len(), layer.n_in);
+        debug_assert_eq!(out.len(), layer.n_out);
+        for o in 0..layer.n_out {
+            let row = &layer.weights[o * layer.n_in..(o + 1) * layer.n_in];
+            out[o] = super::epilogue_f32(act, steepness, layer.biases[o] + dot_f32(row, x));
+        }
+    }
+
     /// 4×4 register-blocked batch tiles: each weight chunk is loaded
     /// once and reused across 4 samples; each input chunk is reused
     /// across 4 output neurons. Per-(sample, neuron) accumulation order
     /// is identical to `matvec`, so tiling is invisible to numerics.
     fn matmul(&self, layer: &DenseLayerRef<f32>, xs: &[f32], n_samples: usize, out: &mut [f32]) {
+        self.matmul_impl(layer, xs, n_samples, out, |v| v);
+    }
+
+    /// Fused batch pass: the activation runs at tile write-back, on the
+    /// accumulator value still in registers. Bit-identical to `matmul`
+    /// followed by the epilogue sweep.
+    fn matmul_act(
+        &self,
+        layer: &DenseLayerRef<f32>,
+        xs: &[f32],
+        n_samples: usize,
+        out: &mut [f32],
+        act: Activation,
+        steepness: f32,
+    ) {
+        self.matmul_impl(layer, xs, n_samples, out, |v| super::epilogue_f32(act, steepness, v));
+    }
+}
+
+impl BlockedF32 {
+    /// The shared 4×4 tile loop; `epilogue` is applied to each
+    /// bias-added accumulator at write-back (identity for the plain
+    /// `matmul`).
+    #[inline]
+    fn matmul_impl<F: Fn(f32) -> f32>(
+        &self,
+        layer: &DenseLayerRef<f32>,
+        xs: &[f32],
+        n_samples: usize,
+        out: &mut [f32],
+        epilogue: F,
+    ) {
         let n_in = layer.n_in;
         let n_out = layer.n_out;
         debug_assert_eq!(xs.len(), n_in * n_samples);
@@ -96,8 +155,9 @@ impl DenseKernel<f32> for BlockedF32 {
                                 * xs[(s0 + si) * n_in + i];
                         }
                         let a = &acc[si][oi];
-                        out[(s0 + si) * n_out + o0 + oi] =
-                            layer.biases[o0 + oi] + ((a[0] + a[2]) + (a[1] + a[3]) + tail);
+                        out[(s0 + si) * n_out + o0 + oi] = epilogue(
+                            layer.biases[o0 + oi] + ((a[0] + a[2]) + (a[1] + a[3]) + tail),
+                        );
                     }
                 }
                 o0 += ob;

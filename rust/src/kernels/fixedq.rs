@@ -11,6 +11,7 @@
 //! Pallas fixed-point kernel by the TSV parity vectors.
 
 use super::{DenseKernel, DenseLayerRef};
+use crate::fann::activation::Activation;
 use crate::quantize::{qmul, sat_i32};
 
 /// Q(dec) dense kernel. The decimal point is part of the kernel value,
@@ -31,6 +32,16 @@ impl DenseKernel<i32> for FixedQ {
         "fixed_q"
     }
 
+    /// Step-linear integer activation at this kernel's decimal point.
+    /// `steepness` is ignored: fixed-point conversion folds it into the
+    /// weights (`FixedNetwork::from_float_with_dec`), so the Q-format
+    /// epilogue always runs at steepness 1.
+    fn apply_epilogue(&self, act: Activation, _steepness: f32, out: &mut [i32]) {
+        for v in out.iter_mut() {
+            *v = super::epilogue_q(act, self.dec, *v);
+        }
+    }
+
     fn matvec(&self, layer: &DenseLayerRef<i32>, x: &[i32], out: &mut [i32]) {
         debug_assert_eq!(x.len(), layer.n_in);
         debug_assert_eq!(out.len(), layer.n_out);
@@ -49,6 +60,38 @@ impl DenseKernel<i32> for FixedQ {
     /// double-buffering banks on. Bit-exact vs `matvec` (integer adds
     /// commute; saturation happens once per output, after the sum).
     fn matmul(&self, layer: &DenseLayerRef<i32>, xs: &[i32], n_samples: usize, out: &mut [i32]) {
+        self.matmul_impl(layer, xs, n_samples, out, |v| v);
+    }
+
+    /// Fused batch pass: the step-linear activation runs on the
+    /// saturated accumulator at write-back. Bit-exact vs `matmul` + the
+    /// epilogue sweep (same value through the same function).
+    fn matmul_act(
+        &self,
+        layer: &DenseLayerRef<i32>,
+        xs: &[i32],
+        n_samples: usize,
+        out: &mut [i32],
+        act: Activation,
+        _steepness: f32,
+    ) {
+        let dec = self.dec;
+        self.matmul_impl(layer, xs, n_samples, out, |v| super::epilogue_q(act, dec, v));
+    }
+}
+
+impl FixedQ {
+    /// Shared 4-sample blocked loop; `epilogue` is applied to each
+    /// saturated i32 pre-activation at write-back.
+    #[inline]
+    fn matmul_impl<F: Fn(i32) -> i32>(
+        &self,
+        layer: &DenseLayerRef<i32>,
+        xs: &[i32],
+        n_samples: usize,
+        out: &mut [i32],
+        epilogue: F,
+    ) {
         let n_in = layer.n_in;
         let n_out = layer.n_out;
         debug_assert_eq!(xs.len(), n_in * n_samples);
@@ -65,7 +108,7 @@ impl DenseKernel<i32> for FixedQ {
                     }
                 }
                 for si in 0..sb {
-                    out[(s0 + si) * n_out + o] = sat_i32(acc[si]) as i32;
+                    out[(s0 + si) * n_out + o] = epilogue(sat_i32(acc[si]) as i32);
                 }
             }
             s0 += sb;

@@ -1,0 +1,278 @@
+//! Offline packing of row-major Q-format weights into the tiled,
+//! word-streamed panel layout the packed kernels consume — the
+//! software analogue of CMSIS-NN's `q7`/`q15` weight reordering and the
+//! paper's neuron-wise DMA streaming order. Packing happens **once at
+//! load time** (`FixedNetwork::pack`), never on the inference path.
+//!
+//! See the byte-order diagram in the [`crate::kernels`] module docs.
+//! The invariants the kernels rely on:
+//!
+//! * Rows are grouped into panels of [`ROWS_PER_PANEL`] consecutive
+//!   output neurons; the last panel is padded to full height with
+//!   all-zero rows (their outputs are never written back).
+//! * Within a panel, words are stored column-chunk-major: the words of
+//!   the panel's rows for input chunk `c` are adjacent, so the inner
+//!   loop over `c` reads `words[]` strictly forward — a straight word
+//!   stream.
+//! * A ragged trailing input chunk (`n_in % elems != 0`) pads its
+//!   unused lanes with weight 0, which is exact: `qmul(0, x) == 0`
+//!   contributes nothing to the accumulator.
+//! * Packing is lossless: every weight must be representable at the
+//!   narrow width ([`pack_rows`] returns an error otherwise), so
+//!   unpack(pack(w)) == w and the packed kernels can reproduce
+//!   [`super::FixedQ`]'s arithmetic bit for bit.
+
+use anyhow::{bail, Result};
+
+/// Output rows interleaved per panel (the register-tile height of the
+/// packed kernels).
+pub const ROWS_PER_PANEL: usize = 4;
+
+/// The two narrow storage widths (CMSIS-NN's q7/q15 naming).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PackedWidth {
+    /// 4 × i8 per u32 word.
+    Q7,
+    /// 2 × i16 per u32 word.
+    Q15,
+}
+
+impl PackedWidth {
+    /// Weights packed into one u32 word.
+    #[inline]
+    pub fn elems_per_word(self) -> usize {
+        match self {
+            PackedWidth::Q7 => 4,
+            PackedWidth::Q15 => 2,
+        }
+    }
+
+    /// Inclusive representable weight range at this width.
+    #[inline]
+    pub fn range(self) -> (i32, i32) {
+        match self {
+            PackedWidth::Q7 => (i8::MIN as i32, i8::MAX as i32),
+            PackedWidth::Q15 => (i16::MIN as i32, i16::MAX as i32),
+        }
+    }
+
+    /// `true` when every value fits the narrow width.
+    pub fn fits(self, weights: &[i32]) -> bool {
+        let (lo, hi) = self.range();
+        weights.iter().all(|&w| (lo..=hi).contains(&w))
+    }
+
+    /// Largest extra fractional bits a weight magnitude bound allows:
+    /// the biggest `dec` with `round(max_abs_w · 2^dec)` still in
+    /// range. Used to choose a packable decimal point.
+    pub fn max_dec_for(self, max_abs_w: f32) -> u32 {
+        let limit = match self {
+            PackedWidth::Q7 => i8::MAX as f64,
+            PackedWidth::Q15 => i16::MAX as f64,
+        };
+        let w = (max_abs_w.abs() as f64).max(1e-30);
+        let mut dec = 0u32;
+        // floor(log2(limit / w)), computed by the same round-and-check
+        // the quantizer applies so the bound is never off by one.
+        while dec < 30 && (w * (1u64 << (dec + 1)) as f64).round() <= limit {
+            dec += 1;
+        }
+        dec
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PackedWidth::Q7 => "q7",
+            PackedWidth::Q15 => "q15",
+        }
+    }
+}
+
+/// One dense layer's weights in packed panel form. `words` length is
+/// `panels(n_out) · words_per_row · ROWS_PER_PANEL`.
+#[derive(Debug, Clone)]
+pub struct PackedPanels {
+    pub width: PackedWidth,
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Words covering one row's `n_in` weights: `ceil(n_in / elems)`.
+    pub words_per_row: usize,
+    pub words: Vec<u32>,
+}
+
+impl PackedPanels {
+    /// Number of row panels (last one possibly padded).
+    #[inline]
+    pub fn panels(&self) -> usize {
+        self.n_out.div_ceil(ROWS_PER_PANEL)
+    }
+
+    /// Packed weight storage in bytes (the bytes-per-network metric's
+    /// per-layer contribution).
+    pub fn weight_bytes(&self) -> usize {
+        self.words.len() * 4
+    }
+
+    /// Unpack back to row-major `[n_out][n_in]` i32 weights (test and
+    /// round-trip support; inference never calls this).
+    pub fn unpack(&self) -> Vec<i32> {
+        let elems = self.width.elems_per_word();
+        let mut out = vec![0i32; self.n_in * self.n_out];
+        for o in 0..self.n_out {
+            let panel = o / ROWS_PER_PANEL;
+            let r = o % ROWS_PER_PANEL;
+            let base = panel * self.words_per_row * ROWS_PER_PANEL;
+            for c in 0..self.words_per_row {
+                let word = self.words[base + c * ROWS_PER_PANEL + r];
+                for e in 0..elems {
+                    let i = c * elems + e;
+                    if i < self.n_in {
+                        out[o * self.n_in + i] = unpack_lane(self.width, word, e);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Extract lane `e` of a packed word as a sign-extended i32.
+#[inline]
+pub fn unpack_lane(width: PackedWidth, word: u32, e: usize) -> i32 {
+    match width {
+        PackedWidth::Q7 => (word >> (8 * e)) as u8 as i8 as i32,
+        PackedWidth::Q15 => (word >> (16 * e)) as u16 as i16 as i32,
+    }
+}
+
+/// Pack one row-chunk of up to `elems` weights into a word
+/// (little-endian lane order; missing tail lanes stay 0).
+#[inline]
+fn pack_word(width: PackedWidth, chunk: &[i32]) -> u32 {
+    let mut word = 0u32;
+    match width {
+        PackedWidth::Q7 => {
+            for (e, &w) in chunk.iter().enumerate() {
+                word |= ((w as i8 as u8) as u32) << (8 * e);
+            }
+        }
+        PackedWidth::Q15 => {
+            for (e, &w) in chunk.iter().enumerate() {
+                word |= ((w as i16 as u16) as u32) << (16 * e);
+            }
+        }
+    }
+    word
+}
+
+/// Pack a row-major `[n_out][n_in]` Q-format weight matrix into panel
+/// layout. Errors if any weight does not fit the narrow width (packing
+/// must be lossless — choose the decimal point with
+/// [`PackedWidth::max_dec_for`] first).
+pub fn pack_rows(
+    width: PackedWidth,
+    n_in: usize,
+    n_out: usize,
+    weights: &[i32],
+) -> Result<PackedPanels> {
+    debug_assert_eq!(weights.len(), n_in * n_out);
+    let (lo, hi) = width.range();
+    if let Some(&w) = weights.iter().find(|&&w| !(lo..=hi).contains(&w)) {
+        bail!(
+            "weight {w} does not fit packed {} range [{lo}, {hi}] — requantize with a smaller decimal point",
+            width.label()
+        );
+    }
+    let elems = width.elems_per_word();
+    let words_per_row = n_in.div_ceil(elems);
+    let panels = n_out.div_ceil(ROWS_PER_PANEL);
+    let mut words = vec![0u32; panels * words_per_row * ROWS_PER_PANEL];
+    for o in 0..n_out {
+        let panel = o / ROWS_PER_PANEL;
+        let r = o % ROWS_PER_PANEL;
+        let base = panel * words_per_row * ROWS_PER_PANEL;
+        let row = &weights[o * n_in..(o + 1) * n_in];
+        for c in 0..words_per_row {
+            let i0 = c * elems;
+            let chunk = &row[i0..n_in.min(i0 + elems)];
+            words[base + c * ROWS_PER_PANEL + r] = pack_word(width, chunk);
+        }
+    }
+    Ok(PackedPanels {
+        width,
+        n_in,
+        n_out,
+        words_per_row,
+        words,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn q7_word_byte_order_matches_diagram() {
+        // w[0] in the low byte, w[3] in the high byte.
+        let p = pack_rows(PackedWidth::Q7, 4, 1, &[1, -2, 3, -4]).unwrap();
+        assert_eq!(p.words.len(), ROWS_PER_PANEL); // 1 row padded to a panel
+        let word = p.words[0];
+        assert_eq!(word & 0xFF, 1);
+        assert_eq!((word >> 8) & 0xFF, (-2i8 as u8) as u32);
+        assert_eq!((word >> 16) & 0xFF, 3);
+        assert_eq!((word >> 24) & 0xFF, (-4i8 as u8) as u32);
+        // Padding rows of the panel are zero words.
+        assert_eq!(&p.words[1..], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn roundtrip_all_shapes_q7_q15() {
+        let mut rng = Rng::new(0x9ACC);
+        for width in [PackedWidth::Q7, PackedWidth::Q15] {
+            let (lo, hi) = width.range();
+            for &n_in in &[1usize, 2, 3, 4, 5, 7, 8, 9, 33] {
+                for &n_out in &[1usize, 2, 3, 4, 5, 9] {
+                    let w: Vec<i32> = (0..n_in * n_out)
+                        .map(|_| lo + (rng.below((hi - lo + 1) as usize) as i32))
+                        .collect();
+                    let p = pack_rows(width, n_in, n_out, &w).unwrap();
+                    assert_eq!(p.unpack(), w, "{width:?} n_in={n_in} n_out={n_out}");
+                    assert_eq!(
+                        p.words.len(),
+                        n_out.div_ceil(ROWS_PER_PANEL)
+                            * ROWS_PER_PANEL
+                            * n_in.div_ceil(width.elems_per_word())
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_weight_rejected() {
+        assert!(pack_rows(PackedWidth::Q7, 1, 1, &[128]).is_err());
+        assert!(pack_rows(PackedWidth::Q7, 1, 1, &[-129]).is_err());
+        assert!(pack_rows(PackedWidth::Q7, 1, 1, &[127]).is_ok());
+        assert!(pack_rows(PackedWidth::Q15, 1, 1, &[32768]).is_err());
+        assert!(pack_rows(PackedWidth::Q15, 1, 1, &[-32768]).is_ok());
+    }
+
+    #[test]
+    fn max_dec_respects_rounding() {
+        // max|w| = 1.0: round(1.0 * 2^6) = 64 <= 127, round(1.0 * 2^7) =
+        // 128 > 127 -> dec 6 for q7.
+        assert_eq!(PackedWidth::Q7.max_dec_for(1.0), 6);
+        // q15: round(1.0 * 2^14) = 16384 <= 32767 -> 14.
+        assert_eq!(PackedWidth::Q15.max_dec_for(1.0), 14);
+        // Tiny weights are capped at 30 bits, not unbounded.
+        assert!(PackedWidth::Q7.max_dec_for(1e-9) <= 30);
+    }
+
+    #[test]
+    fn fits_check() {
+        assert!(PackedWidth::Q7.fits(&[-128, 0, 127]));
+        assert!(!PackedWidth::Q7.fits(&[-128, 0, 128]));
+        assert!(PackedWidth::Q15.fits(&[-32768, 32767]));
+    }
+}

@@ -19,18 +19,83 @@
 //! * [`FixedQ`] — i32/i64 Q-format with FANN `fann_mult` semantics,
 //!   bit-exact with [`crate::quantize`] (and therefore with the Pallas
 //!   fixed-point kernel pinned by the parity tests).
+//! * [`PackedQ7`] / [`PackedQ15`] — the low-bitwidth kernels: weights
+//!   stored 4×i8 (resp. 2×i16) per `u32` word in the row-panel layout
+//!   of [`layout::PackedPanels`], with the *same* per-product `qmul`
+//!   arithmetic as [`FixedQ`], so results are bit-exact whenever the
+//!   weights are representable at the narrow width (see below).
 //!
-//! Kernels compute the *pre-activation* affine part (`W·x + b`, Q-format
-//! saturated); activations stay with the caller, which is what lets the
-//! float and fixed networks share one dispatch layer.
+//! # Packed layout
+//!
+//! [`layout::PackedPanels`] stores a row-major `[n_out][n_in]` weight
+//! matrix as panels of `R = 4` consecutive output rows. Within a panel
+//! the inner dimension is split into words (4 bytes = 4 i8 weights for
+//! Q7, 2 half-words = 2 i16 weights for Q15) and the words of the four
+//! rows are interleaved column-chunk-major, so the inner loop is a
+//! single forward `u32` word-stream — the software mirror of the
+//! paper's neuron-wise DMA streaming order. Byte order within a Q7 word
+//! (little-endian, `w[i]` = weight for input `i` of that chunk):
+//!
+//! ```text
+//!   word for (row r, inputs 4c..4c+4):
+//!   bits  31..24   23..16   15..8    7..0
+//!         w[4c+3]  w[4c+2]  w[4c+1]  w[4c+0]
+//!
+//!   words[] stream for one panel (R = 4 rows, W = words per row):
+//!   (r0,c0)(r1,c0)(r2,c0)(r3,c0) (r0,c1)(r1,c1)(r2,c1)(r3,c1) ...
+//! ```
+//!
+//! Ragged edges are zero-padded: a trailing input chunk pads unused
+//! byte lanes with weight 0 (`qmul(0, x) == 0`, exact), and a trailing
+//! row panel pads to `R` rows of zero words whose outputs are never
+//! written back.
+//!
+//! # Fused activation epilogues
+//!
+//! Kernels compute the *pre-activation* affine part (`W·x + b`,
+//! Q-format saturated); [`DenseKernel::matvec_act`] /
+//! [`DenseKernel::matmul_act`] additionally apply the layer activation
+//! (with steepness) as an *epilogue*. The default implementation is
+//! `matmul` + a second pass over `out` (what the seed's callers did by
+//! hand); kernels that specialize it ([`BlockedF32`], [`FixedQ`], the
+//! packed pair) apply the activation at tile write-back while the
+//! accumulator is still in registers, saving one full read-modify-write
+//! sweep of the output per layer. Fused and unfused are numerically
+//! identical by construction (same value, same function, applied once).
 
 pub mod blocked;
 pub mod fixedq;
+pub mod layout;
+pub mod packed;
 pub mod scalar;
+
+use std::cell::RefCell;
 
 pub use blocked::{dot_f32, BlockedF32};
 pub use fixedq::FixedQ;
+pub use layout::{PackedPanels, PackedWidth};
+pub use packed::{PackedLayerRef, PackedQ15, PackedQ7};
 pub use scalar::ScalarF32;
+
+use crate::fann::activation::Activation;
+use crate::quantize;
+
+/// THE float activation epilogue: every float kernel (fused or
+/// unfused) routes each pre-activation value through this one
+/// function, so the fused-equals-unfused contract can never drift.
+#[inline(always)]
+pub fn epilogue_f32(act: Activation, steepness: f32, v: f32) -> f32 {
+    act.apply(steepness * v)
+}
+
+/// THE Q-format activation epilogue (step-linear integer activation at
+/// `dec`); single copy shared by [`FixedQ`] and the packed kernels.
+/// Steepness does not appear: fixed-point conversion folds it into the
+/// weights.
+#[inline(always)]
+pub fn epilogue_q(act: Activation, dec: u32, v: i32) -> i32 {
+    quantize::activation_q(act, v as i64, dec) as i32
+}
 
 /// Borrowed view of one dense layer's parameters, element type `E`
 /// (`f32` for the float path, `i32` for Q-format). Weights are row-major
@@ -64,6 +129,13 @@ impl<'a, E> DenseLayerRef<'a, E> {
 /// construction for kernels that don't specialize it; kernels that do
 /// specialize (e.g. [`BlockedF32`]) must preserve per-sample results
 /// bit-for-bit — `rust/tests/batch_consistency.rs` enforces this.
+///
+/// The `_act` variants fuse the activation epilogue (see the module
+/// docs); `apply_epilogue` is the one place a kernel defines what that
+/// epilogue *means* for its element type (float kernels evaluate
+/// `act(steepness · v)`, Q-format kernels evaluate the step-linear
+/// integer activation at their decimal point and ignore `steepness`,
+/// which quantization already folded into the weights).
 pub trait DenseKernel<E>: Send + Sync {
     /// Kernel name for reports and bench tables.
     fn name(&self) -> &'static str;
@@ -85,6 +157,130 @@ pub trait DenseKernel<E>: Send + Sync {
             );
         }
     }
+
+    /// Apply this kernel's activation epilogue in place over
+    /// pre-activation values (the unfused second pass).
+    fn apply_epilogue(&self, act: Activation, steepness: f32, out: &mut [E]);
+
+    /// `matvec` with the activation fused into the same pass. Default:
+    /// affine part, then the epilogue as a separate sweep.
+    fn matvec_act(
+        &self,
+        layer: &DenseLayerRef<E>,
+        x: &[E],
+        out: &mut [E],
+        act: Activation,
+        steepness: f32,
+    ) {
+        self.matvec(layer, x, out);
+        self.apply_epilogue(act, steepness, out);
+    }
+
+    /// `matmul` with the activation fused into the same pass. Default:
+    /// affine part, then the epilogue as a separate sweep.
+    fn matmul_act(
+        &self,
+        layer: &DenseLayerRef<E>,
+        xs: &[E],
+        n_samples: usize,
+        out: &mut [E],
+        act: Activation,
+        steepness: f32,
+    ) {
+        self.matmul(layer, xs, n_samples, out);
+        self.apply_epilogue(act, steepness, out);
+    }
+}
+
+/// Reusable ping-pong arena for batched layer-to-layer activations:
+/// grown once to `max_layer_width × n_samples` per buffer, then sliced
+/// per layer on every call — the zero-allocation replacement for the
+/// per-call `vec![0; width * n_samples]` pair the seed's batch path
+/// paid. Never shrinks, so repeated same-shape (or smaller) batches
+/// perform no allocation at all.
+#[derive(Debug, Default)]
+pub struct BatchScratch<E> {
+    a: Vec<E>,
+    b: Vec<E>,
+}
+
+impl<E: Copy + Default> BatchScratch<E> {
+    pub fn new() -> Self {
+        Self {
+            a: Vec::new(),
+            b: Vec::new(),
+        }
+    }
+
+    /// Borrow both ping-pong buffers at `len` elements each, growing
+    /// (never shrinking) the backing storage first.
+    pub fn buffers(&mut self, len: usize) -> (&mut [E], &mut [E]) {
+        if self.a.len() < len {
+            self.a.resize(len, E::default());
+        }
+        if self.b.len() < len {
+            self.b.resize(len, E::default());
+        }
+        (&mut self.a[..len], &mut self.b[..len])
+    }
+
+    /// Current capacity of each backing buffer — the regression hook for
+    /// the zero-reallocation test (stable across repeated same-shape
+    /// calls).
+    pub fn capacity(&self) -> (usize, usize) {
+        (self.a.capacity(), self.b.capacity())
+    }
+
+    /// Base pointers of the backing buffers (stable across repeated
+    /// same-shape calls; moves only when the arena has to grow).
+    pub fn base_ptrs(&self) -> (*const E, *const E) {
+        (self.a.as_ptr(), self.b.as_ptr())
+    }
+}
+
+/// The (src, dst) buffer routing of the allocation-free batch drivers,
+/// shared by `Network::run_batch_into`, `FixedNetwork::run_batch_q_into`
+/// and `PackedNetwork::run_batch_q_into` so the subtlest part of the
+/// ping-pong path lives exactly once: layer 0 reads `inputs`; layer
+/// `li > 0` reads what layer `li-1` wrote (`a` for odd `li`, `b` for
+/// even, since layer 0 writes `a`); the last layer writes straight into
+/// `out`. All three `&mut` buffers are borrowed for the returned pair's
+/// lifetime; callers reborrow per layer.
+#[inline]
+pub(crate) fn batch_route<'s, E>(
+    li: usize,
+    last: bool,
+    inputs: &'s [E],
+    a: &'s mut [E],
+    b: &'s mut [E],
+    out: &'s mut [E],
+) -> (&'s [E], &'s mut [E]) {
+    match (li == 0, last, li % 2 == 1) {
+        (true, true, _) => (inputs, out),
+        (true, false, _) => (inputs, a),
+        (false, true, odd) => (if odd { &*a } else { &*b }, out),
+        (false, false, true) => (&*a, b),
+        (false, false, false) => (&*b, a),
+    }
+}
+
+thread_local! {
+    static TLS_F32: RefCell<BatchScratch<f32>> = RefCell::new(BatchScratch::new());
+    static TLS_I32: RefCell<BatchScratch<i32>> = RefCell::new(BatchScratch::new());
+}
+
+/// Run `f` with this thread's persistent float batch scratch. The
+/// arena lives for the thread's lifetime, so steady-state batch calls
+/// through the convenience (`Vec`-returning) APIs allocate only their
+/// output vector. Not reentrant (the closure must not itself call a
+/// `with_thread_scratch_*` helper of the same type).
+pub fn with_thread_scratch_f32<R>(f: impl FnOnce(&mut BatchScratch<f32>) -> R) -> R {
+    TLS_F32.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Q-format counterpart of [`with_thread_scratch_f32`].
+pub fn with_thread_scratch_i32<R>(f: impl FnOnce(&mut BatchScratch<i32>) -> R) -> R {
+    TLS_I32.with(|s| f(&mut s.borrow_mut()))
 }
 
 /// The crate-wide default float kernel: what `Network::run` dispatches
@@ -123,5 +319,54 @@ mod tests {
             ScalarF32.matvec(&layer, &xs[s * 3..(s + 1) * 3], &mut single);
             assert_eq!(&batched[s * 2..(s + 1) * 2], &single[..]);
         }
+    }
+
+    #[test]
+    fn default_matmul_act_is_matmul_plus_epilogue() {
+        let w = [0.5f32, -1.0, 2.0, 0.25, 1.5, -0.5];
+        let b = [0.1f32, -0.2];
+        let layer = DenseLayerRef::new(3, 2, &w, &b);
+        let xs = [1.0f32, 2.0, 3.0, -1.0, 0.5, 0.0];
+        let mut fused = [0.0f32; 4];
+        ScalarF32.matmul_act(&layer, &xs, 2, &mut fused, Activation::Tanh, 0.5);
+        let mut unfused = [0.0f32; 4];
+        ScalarF32.matmul(&layer, &xs, 2, &mut unfused);
+        for v in unfused.iter_mut() {
+            *v = Activation::Tanh.apply(0.5 * *v);
+        }
+        assert_eq!(fused, unfused);
+    }
+
+    #[test]
+    fn scratch_grows_once_and_stays_put() {
+        let mut s: BatchScratch<f32> = BatchScratch::new();
+        {
+            let (a, b) = s.buffers(64);
+            assert_eq!(a.len(), 64);
+            assert_eq!(b.len(), 64);
+            a[0] = 1.0;
+            b[63] = 2.0;
+        }
+        let cap = s.capacity();
+        let ptrs = s.base_ptrs();
+        for _ in 0..10 {
+            let _ = s.buffers(64);
+            let _ = s.buffers(16); // smaller: must not shrink
+        }
+        assert_eq!(s.capacity(), cap);
+        assert_eq!(s.base_ptrs(), ptrs);
+    }
+
+    #[test]
+    fn thread_scratch_is_persistent() {
+        let p0 = with_thread_scratch_f32(|s| {
+            let _ = s.buffers(128);
+            s.base_ptrs().0 as usize
+        });
+        let p1 = with_thread_scratch_f32(|s| {
+            let _ = s.buffers(128);
+            s.base_ptrs().0 as usize
+        });
+        assert_eq!(p0, p1);
     }
 }

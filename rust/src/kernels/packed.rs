@@ -1,0 +1,459 @@
+//! The low-bitwidth packed kernels — host-side counterparts of
+//! CMSIS-NN's `arm_fully_connected_q7`/`_q15` and PULP-NN's 4×i8
+//! per-word dot products: weights stream as `u32` words out of the
+//! panel layout built by [`super::layout`], four (Q7) or two (Q15)
+//! MAC operands per load, with a panel of four output rows sharing
+//! every input load.
+//!
+//! # Bit-exactness contract
+//!
+//! Per-product arithmetic is *identical* to [`super::FixedQ`]: widen,
+//! multiply, arithmetic-shift-right by `dec` (`quantize::qmul`),
+//! accumulate in i64, saturate to i32 once per output. Because integer
+//! adds commute and zero-padded lanes contribute exactly 0, any
+//! traversal order over the packed panels produces the same i64 sum —
+//! so packed results are **bit-exact** vs `FixedQ` on the same Q(dec)
+//! parameters whenever the weights fit the narrow width (which the
+//! lossless `pack_rows` step guarantees). `rust/tests/parity_packed.rs`
+//! pins this, ragged tails included.
+//!
+//! # The narrow-multiply fast path
+//!
+//! The actual speedup over `FixedQ` comes from exploiting the narrow
+//! weights: when every input of the call satisfies `|x| < 2^24` (Q7,
+//! `|w| ≤ 2^7`) or `|x| < 2^16` (Q15, `|w| ≤ 2^15`), every product
+//! fits in i32, so the multiply+shift runs in 32-bit arithmetic — which
+//! the compiler can vectorize twice as wide as the generic i64 path —
+//! and only the accumulate widens to i64. The bound is checked once per
+//! call with a linear scan (negligible vs the `n_in · n_out` MAC work);
+//! inputs that exceed it (possible in principle: activations are full
+//! i32 Q(dec)) take the exact i64 path. Both paths compute the same
+//! value bit for bit: a product that fits i32 shifts identically at
+//! either width.
+
+use super::layout::{PackedPanels, PackedWidth, ROWS_PER_PANEL};
+use crate::fann::activation::Activation;
+use crate::quantize::{qmul, sat_i32};
+
+/// Borrowed view of one packed dense layer: panel-form weights plus
+/// plain i32 Q(dec) biases (biases stay wide, as in CMSIS-NN).
+#[derive(Debug, Clone, Copy)]
+pub struct PackedLayerRef<'a> {
+    pub panels: &'a PackedPanels,
+    pub biases: &'a [i32],
+}
+
+impl<'a> PackedLayerRef<'a> {
+    pub fn new(panels: &'a PackedPanels, biases: &'a [i32]) -> Self {
+        debug_assert_eq!(biases.len(), panels.n_out);
+        Self { panels, biases }
+    }
+}
+
+/// Compile-time description of one packed width (lane count, unpack,
+/// fast-path input bound). Monomorphizes the shared cores below into
+/// two straight-line kernels.
+trait Width: 'static {
+    const WIDTH: PackedWidth;
+    const ELEMS: usize;
+    /// Exclusive bound on `|x|` under which `w · x` fits in i32.
+    const FAST_LIMIT: u32;
+    /// Sign-extended lanes of one word; only the first `ELEMS` entries
+    /// are meaningful.
+    fn lanes(word: u32) -> [i32; 4];
+}
+
+struct W7;
+impl Width for W7 {
+    const WIDTH: PackedWidth = PackedWidth::Q7;
+    const ELEMS: usize = 4;
+    // |w| <= 2^7, |x| < 2^24  =>  |w·x| < 2^31.
+    const FAST_LIMIT: u32 = 1 << 24;
+    #[inline(always)]
+    fn lanes(word: u32) -> [i32; 4] {
+        [
+            word as u8 as i8 as i32,
+            (word >> 8) as u8 as i8 as i32,
+            (word >> 16) as u8 as i8 as i32,
+            (word >> 24) as u8 as i8 as i32,
+        ]
+    }
+}
+
+struct W15;
+impl Width for W15 {
+    const WIDTH: PackedWidth = PackedWidth::Q15;
+    const ELEMS: usize = 2;
+    // |w| <= 2^15, |x| < 2^16  =>  |w·x| < 2^31.
+    const FAST_LIMIT: u32 = 1 << 16;
+    #[inline(always)]
+    fn lanes(word: u32) -> [i32; 4] {
+        [word as u16 as i16 as i32, (word >> 16) as u16 as i16 as i32, 0, 0]
+    }
+}
+
+#[inline(always)]
+fn all_fast<W: Width>(xs: &[i32]) -> bool {
+    xs.iter().all(|&v| v.unsigned_abs() < W::FAST_LIMIT)
+}
+
+/// One sample through one packed layer; `prod` is the per-product
+/// arithmetic (fast i32 or exact i64 `qmul`), `epi` the write-back
+/// epilogue on the saturated i32 pre-activation.
+#[inline(always)]
+fn matvec_core<W, P, F>(layer: &PackedLayerRef, x: &[i32], out: &mut [i32], prod: P, epi: F)
+where
+    W: Width,
+    P: Fn(i32, i32) -> i64,
+    F: Fn(i32) -> i32,
+{
+    let p = layer.panels;
+    debug_assert_eq!(p.width, W::WIDTH);
+    debug_assert_eq!(x.len(), p.n_in);
+    debug_assert_eq!(out.len(), p.n_out);
+    let wpr = p.words_per_row;
+    let full = p.n_in / W::ELEMS;
+    for panel in 0..p.panels() {
+        let o0 = panel * ROWS_PER_PANEL;
+        let base = panel * wpr * ROWS_PER_PANEL;
+        let mut acc = [0i64; ROWS_PER_PANEL];
+        for c in 0..full {
+            let i0 = c * W::ELEMS;
+            let wbase = base + c * ROWS_PER_PANEL;
+            for (r, a) in acc.iter_mut().enumerate() {
+                let lanes = W::lanes(p.words[wbase + r]);
+                for e in 0..W::ELEMS {
+                    *a += prod(lanes[e], x[i0 + e]);
+                }
+            }
+        }
+        if full < wpr {
+            // Ragged tail chunk: the padded weight lanes are 0 and are
+            // simply not multiplied (identical sum either way).
+            let i0 = full * W::ELEMS;
+            let wbase = base + full * ROWS_PER_PANEL;
+            for (r, a) in acc.iter_mut().enumerate() {
+                let lanes = W::lanes(p.words[wbase + r]);
+                for (e, &xv) in x[i0..].iter().enumerate() {
+                    *a += prod(lanes[e], xv);
+                }
+            }
+        }
+        let rows = (p.n_out - o0).min(ROWS_PER_PANEL);
+        for r in 0..rows {
+            out[o0 + r] = epi(sat_i32(acc[r] + layer.biases[o0 + r] as i64) as i32);
+        }
+    }
+}
+
+/// Batched core: 4-sample tiles over the same panel word-stream, so
+/// each weight word is loaded once per 4 samples × 4 rows = 16 MACs
+/// (the weight-reuse the paper's DMA double-buffering banks on).
+#[inline(always)]
+fn matmul_core<W, P, F>(
+    layer: &PackedLayerRef,
+    xs: &[i32],
+    n_samples: usize,
+    out: &mut [i32],
+    prod: P,
+    epi: F,
+) where
+    W: Width,
+    P: Fn(i32, i32) -> i64,
+    F: Fn(i32) -> i32,
+{
+    let p = layer.panels;
+    debug_assert_eq!(p.width, W::WIDTH);
+    let n_in = p.n_in;
+    let n_out = p.n_out;
+    debug_assert_eq!(xs.len(), n_in * n_samples);
+    debug_assert_eq!(out.len(), n_out * n_samples);
+    let wpr = p.words_per_row;
+    let full = n_in / W::ELEMS;
+    let mut s0 = 0;
+    while s0 < n_samples {
+        let sb = (n_samples - s0).min(4);
+        for panel in 0..p.panels() {
+            let o0 = panel * ROWS_PER_PANEL;
+            let base = panel * wpr * ROWS_PER_PANEL;
+            let mut acc = [[0i64; ROWS_PER_PANEL]; 4];
+            for c in 0..full {
+                let i0 = c * W::ELEMS;
+                let wbase = base + c * ROWS_PER_PANEL;
+                for r in 0..ROWS_PER_PANEL {
+                    let lanes = W::lanes(p.words[wbase + r]);
+                    for (si, a) in acc.iter_mut().enumerate().take(sb) {
+                        let xb = (s0 + si) * n_in + i0;
+                        for e in 0..W::ELEMS {
+                            a[r] += prod(lanes[e], xs[xb + e]);
+                        }
+                    }
+                }
+            }
+            if full < wpr {
+                let i0 = full * W::ELEMS;
+                let tail = n_in - i0;
+                let wbase = base + full * ROWS_PER_PANEL;
+                for r in 0..ROWS_PER_PANEL {
+                    let lanes = W::lanes(p.words[wbase + r]);
+                    for (si, a) in acc.iter_mut().enumerate().take(sb) {
+                        let xb = (s0 + si) * n_in + i0;
+                        for e in 0..tail {
+                            a[r] += prod(lanes[e], xs[xb + e]);
+                        }
+                    }
+                }
+            }
+            let rows = (n_out - o0).min(ROWS_PER_PANEL);
+            for (si, a) in acc.iter().enumerate().take(sb) {
+                for r in 0..rows {
+                    out[(s0 + si) * n_out + o0 + r] =
+                        epi(sat_i32(a[r] + layer.biases[o0 + r] as i64) as i32);
+                }
+            }
+        }
+        s0 += sb;
+    }
+}
+
+macro_rules! packed_kernel {
+    ($kernel:ident, $w:ty, $name:literal, $doc:literal) => {
+        #[doc = $doc]
+        #[derive(Debug, Clone, Copy)]
+        pub struct $kernel {
+            /// Q(dec) decimal point — part of the kernel value, exactly
+            /// as in [`super::FixedQ`].
+            pub dec: u32,
+        }
+
+        impl $kernel {
+            pub fn new(dec: u32) -> Self {
+                Self { dec }
+            }
+
+            pub fn name(&self) -> &'static str {
+                $name
+            }
+
+            /// Pre-activation single-sample pass (packed analogue of
+            /// [`super::DenseKernel::matvec`]).
+            pub fn matvec(&self, layer: &PackedLayerRef, x: &[i32], out: &mut [i32]) {
+                self.matvec_impl(layer, x, out, |v| v);
+            }
+
+            /// Fused single-sample pass: step-linear activation applied
+            /// at write-back.
+            pub fn matvec_act(
+                &self,
+                layer: &PackedLayerRef,
+                x: &[i32],
+                out: &mut [i32],
+                act: Activation,
+            ) {
+                let dec = self.dec;
+                self.matvec_impl(layer, x, out, |v| super::epilogue_q(act, dec, v));
+            }
+
+            /// Pre-activation batched pass (packed analogue of
+            /// [`super::DenseKernel::matmul`]).
+            pub fn matmul(&self, layer: &PackedLayerRef, xs: &[i32], n_samples: usize, out: &mut [i32]) {
+                self.matmul_impl(layer, xs, n_samples, out, |v| v);
+            }
+
+            /// Fused batched pass.
+            pub fn matmul_act(
+                &self,
+                layer: &PackedLayerRef,
+                xs: &[i32],
+                n_samples: usize,
+                out: &mut [i32],
+                act: Activation,
+            ) {
+                let dec = self.dec;
+                self.matmul_impl(layer, xs, n_samples, out, |v| super::epilogue_q(act, dec, v));
+            }
+
+            #[inline]
+            fn matvec_impl<F: Fn(i32) -> i32>(
+                &self,
+                layer: &PackedLayerRef,
+                x: &[i32],
+                out: &mut [i32],
+                epi: F,
+            ) {
+                let dec = self.dec;
+                if all_fast::<$w>(x) {
+                    matvec_core::<$w, _, _>(layer, x, out, |w, xv| ((w * xv) >> dec) as i64, epi);
+                } else {
+                    matvec_core::<$w, _, _>(layer, x, out, |w, xv| qmul(w, xv, dec), epi);
+                }
+            }
+
+            #[inline]
+            fn matmul_impl<F: Fn(i32) -> i32>(
+                &self,
+                layer: &PackedLayerRef,
+                xs: &[i32],
+                n_samples: usize,
+                out: &mut [i32],
+                epi: F,
+            ) {
+                let dec = self.dec;
+                if all_fast::<$w>(xs) {
+                    matmul_core::<$w, _, _>(
+                        layer,
+                        xs,
+                        n_samples,
+                        out,
+                        |w, xv| ((w * xv) >> dec) as i64,
+                        epi,
+                    );
+                } else {
+                    matmul_core::<$w, _, _>(layer, xs, n_samples, out, |w, xv| qmul(w, xv, dec), epi);
+                }
+            }
+        }
+    };
+}
+
+packed_kernel!(
+    PackedQ7,
+    W7,
+    "packed_q7",
+    "Q(dec) dense kernel over 4×i8-per-word packed panels (CMSIS-NN \
+     `arm_fully_connected_q7` analogue). Bit-exact vs [`super::FixedQ`] \
+     on the same parameters."
+);
+
+packed_kernel!(
+    PackedQ15,
+    W15,
+    "packed_q15",
+    "Q(dec) dense kernel over 2×i16-per-word packed panels (CMSIS-NN \
+     `arm_fully_connected_q15` analogue). Bit-exact vs [`super::FixedQ`] \
+     on the same parameters."
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::layout::pack_rows;
+    use crate::kernels::{DenseKernel, DenseLayerRef, FixedQ};
+    use crate::util::rng::Rng;
+
+    fn random_layer(
+        rng: &mut Rng,
+        width: PackedWidth,
+        n_in: usize,
+        n_out: usize,
+    ) -> (Vec<i32>, Vec<i32>) {
+        let (lo, hi) = width.range();
+        let span = (hi - lo + 1) as usize;
+        let w: Vec<i32> = (0..n_in * n_out).map(|_| lo + rng.below(span) as i32).collect();
+        let b: Vec<i32> = (0..n_out).map(|_| rng.below(4001) as i32 - 2000).collect();
+        (w, b)
+    }
+
+    #[test]
+    fn bit_exact_vs_fixedq_including_ragged_tails() {
+        let mut rng = Rng::new(0xBEEF);
+        for width in [PackedWidth::Q7, PackedWidth::Q15] {
+            for &n_in in &[1usize, 2, 3, 4, 5, 7, 9, 16] {
+                for &n_out in &[1usize, 3, 4, 5, 8] {
+                    let dec = 6;
+                    let (w, b) = random_layer(&mut rng, width, n_in, n_out);
+                    let x: Vec<i32> =
+                        (0..n_in).map(|_| rng.below(2001) as i32 - 1000).collect();
+                    let layer = DenseLayerRef::new(n_in, n_out, &w, &b);
+                    let mut want = vec![0i32; n_out];
+                    FixedQ::new(dec).matvec(&layer, &x, &mut want);
+                    let panels = pack_rows(width, n_in, n_out, &w).unwrap();
+                    let pref = PackedLayerRef::new(&panels, &b);
+                    let mut got = vec![0i32; n_out];
+                    match width {
+                        PackedWidth::Q7 => PackedQ7::new(dec).matvec(&pref, &x, &mut got),
+                        PackedWidth::Q15 => PackedQ15::new(dec).matvec(&pref, &x, &mut got),
+                    }
+                    assert_eq!(got, want, "{width:?} n_in={n_in} n_out={n_out}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slow_path_large_inputs_bit_exact() {
+        // Inputs beyond the fast-path bound force the exact i64 route;
+        // results must still match FixedQ bit for bit.
+        let mut rng = Rng::new(0x51077);
+        let dec = 4;
+        let (n_in, n_out) = (9, 5);
+        let (w, b) = random_layer(&mut rng, PackedWidth::Q7, n_in, n_out);
+        let x: Vec<i32> = (0..n_in)
+            .map(|i| if i % 2 == 0 { i32::MAX - i as i32 } else { i32::MIN + i as i32 })
+            .collect();
+        let layer = DenseLayerRef::new(n_in, n_out, &w, &b);
+        let mut want = vec![0i32; n_out];
+        FixedQ::new(dec).matvec(&layer, &x, &mut want);
+        let panels = pack_rows(PackedWidth::Q7, n_in, n_out, &w).unwrap();
+        let pref = PackedLayerRef::new(&panels, &b);
+        let mut got = vec![0i32; n_out];
+        PackedQ7::new(dec).matvec(&pref, &x, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn matmul_bit_exact_vs_matvec_per_sample() {
+        let mut rng = Rng::new(0xABCD);
+        for width in [PackedWidth::Q7, PackedWidth::Q15] {
+            let dec = 7;
+            let (n_in, n_out, n_samples) = (11, 6, 7);
+            let (w, b) = random_layer(&mut rng, width, n_in, n_out);
+            let xs: Vec<i32> =
+                (0..n_in * n_samples).map(|_| rng.below(512) as i32 - 256).collect();
+            let panels = pack_rows(width, n_in, n_out, &w).unwrap();
+            let pref = PackedLayerRef::new(&panels, &b);
+            let mut batched = vec![0i32; n_out * n_samples];
+            let mut single = vec![0i32; n_out];
+            match width {
+                PackedWidth::Q7 => {
+                    let k = PackedQ7::new(dec);
+                    k.matmul(&pref, &xs, n_samples, &mut batched);
+                    for s in 0..n_samples {
+                        k.matvec(&pref, &xs[s * n_in..(s + 1) * n_in], &mut single);
+                        assert_eq!(&batched[s * n_out..(s + 1) * n_out], &single[..]);
+                    }
+                }
+                PackedWidth::Q15 => {
+                    let k = PackedQ15::new(dec);
+                    k.matmul(&pref, &xs, n_samples, &mut batched);
+                    for s in 0..n_samples {
+                        k.matvec(&pref, &xs[s * n_in..(s + 1) * n_in], &mut single);
+                        assert_eq!(&batched[s * n_out..(s + 1) * n_out], &single[..]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_equals_unfused() {
+        let mut rng = Rng::new(0xFACE);
+        let dec = 6;
+        let (n_in, n_out, n_samples) = (10, 7, 5);
+        let (w, b) = random_layer(&mut rng, PackedWidth::Q7, n_in, n_out);
+        let xs: Vec<i32> = (0..n_in * n_samples).map(|_| rng.below(257) as i32 - 128).collect();
+        let panels = pack_rows(PackedWidth::Q7, n_in, n_out, &w).unwrap();
+        let pref = PackedLayerRef::new(&panels, &b);
+        let k = PackedQ7::new(dec);
+        for act in crate::fann::activation::ALL {
+            let mut fused = vec![0i32; n_out * n_samples];
+            k.matmul_act(&pref, &xs, n_samples, &mut fused, act);
+            let mut unfused = vec![0i32; n_out * n_samples];
+            k.matmul(&pref, &xs, n_samples, &mut unfused);
+            for v in unfused.iter_mut() {
+                *v = crate::quantize::activation_q(act, *v as i64, dec) as i32;
+            }
+            assert_eq!(fused, unfused, "{act:?}");
+        }
+    }
+}

@@ -5,6 +5,7 @@
 //! reassociation the 4-lane kernel performs).
 
 use super::{DenseKernel, DenseLayerRef};
+use crate::fann::activation::Activation;
 
 /// Textbook dense layer: `acc = b[o]; acc += w·x` in index order.
 #[derive(Debug, Clone, Copy, Default)]
@@ -13,6 +14,12 @@ pub struct ScalarF32;
 impl DenseKernel<f32> for ScalarF32 {
     fn name(&self) -> &'static str {
         "scalar_f32"
+    }
+
+    fn apply_epilogue(&self, act: Activation, steepness: f32, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = super::epilogue_f32(act, steepness, *v);
+        }
     }
 
     fn matvec(&self, layer: &DenseLayerRef<f32>, x: &[f32], out: &mut [f32]) {
@@ -28,8 +35,10 @@ impl DenseKernel<f32> for ScalarF32 {
         }
     }
 
-    // No matmul override: the trait default (loop of matvec) IS the
-    // scalar batched semantics.
+    // No matmul/matmul_act override: the trait defaults (loop of
+    // matvec; matmul + separate epilogue sweep) ARE the scalar batched
+    // semantics — this kernel is the reference the fused paths are
+    // tested against.
 }
 
 #[cfg(test)]

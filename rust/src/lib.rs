@@ -22,16 +22,23 @@
 //! # Kernel dispatch
 //!
 //! Every dense forward path — the float [`fann::Network`], the Q-format
-//! [`fann::FixedNetwork`], and the simulator's
-//! [`simulator::Executable`] — executes its inner loop through the
-//! [`kernels`] layer: one [`kernels::DenseKernel`] trait with a
-//! single-sample `matvec` and a batched `matmul` entry point, and three
-//! implementations ([`kernels::ScalarF32`], [`kernels::BlockedF32`],
-//! [`kernels::FixedQ`]). Throughput workloads run many samples per
-//! deployment plan via `run_batch` (and the [`bench::batch`] parallel
-//! driver) instead of looping single-sample inference; per-sample
-//! numerics are bit-identical either way, pinned by
-//! `rust/tests/batch_consistency.rs` and `rust/tests/parity_kernels.rs`.
+//! [`fann::FixedNetwork`], the packed [`fann::PackedNetwork`], and the
+//! simulator's [`simulator::Executable`] — executes its inner loop
+//! through the [`kernels`] layer: the [`kernels::DenseKernel`] trait
+//! (single-sample `matvec`, batched `matmul`, fused
+//! `matvec_act`/`matmul_act` activation epilogues) implemented by
+//! [`kernels::ScalarF32`], [`kernels::BlockedF32`] and
+//! [`kernels::FixedQ`], plus the low-bitwidth packed pair
+//! [`kernels::PackedQ7`] / [`kernels::PackedQ15`] over the word-packed
+//! panel layout of [`kernels::layout`] (bit-exact vs `FixedQ`, built
+//! offline by `FixedNetwork::pack`). Throughput workloads run many
+//! samples per deployment plan via `run_batch` (and the
+//! [`bench::batch`] persistent-pool parallel driver) instead of looping
+//! single-sample inference — allocation-free in steady state through
+//! the [`kernels::BatchScratch`] arena; per-sample numerics are
+//! bit-identical either way, pinned by
+//! `rust/tests/batch_consistency.rs`, `rust/tests/parity_kernels.rs`
+//! and `rust/tests/parity_packed.rs`.
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! `fann-on-mcu` binary is self-contained.

@@ -10,7 +10,10 @@
 //! * `run`         — simulate one classification on a target.
 //! * `throughput`  — host-side batched-inference throughput: looped
 //!                   single-sample vs batched kernels vs the parallel
-//!                   batch driver, float and fixed.
+//!                   batch driver, float, fixed and packed.
+//! * `bench json`  — the machine-readable kernel × mode throughput
+//!                   sweep; writes `BENCH_kernels.json` (the per-PR
+//!                   perf baseline CI uploads as an artifact).
 //! * `info`        — list applications, targets, artifact status.
 //! * `help`        — this text.
 //!
@@ -253,7 +256,7 @@ fn cmd_throughput(args: &Args) -> Result<()> {
     let fixed = FixedNetwork::from_float(&net, 1.0)?;
     let n_in = net.num_inputs();
     let xs: Vec<f32> = (0..n * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
-    let workers = batch::resolve_threads(threads);
+    let workers = batch::effective_workers(threads);
     println!(
         "throughput: topology {:?} ({} MACs/inference), batch {n}, {workers} worker thread(s)\n",
         sizes,
@@ -271,6 +274,108 @@ fn cmd_throughput(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+/// `bench <mode>` — the perf-tracking harness. The only mode so far is
+/// `json`: run the kernel × execution-mode throughput sweep
+/// (`bench::batch::kernel_sweep`, bit-parity asserted before timing)
+/// and write it as `BENCH_kernels.json`, giving subsequent PRs a
+/// machine-readable perf baseline.
+fn cmd_bench(mode: &str, args: &Args) -> Result<()> {
+    match mode {
+        "json" => cmd_bench_json(args),
+        other => bail!("unknown bench mode {other:?} (known: json)"),
+    }
+}
+
+fn cmd_bench_json(args: &Args) -> Result<()> {
+    use fann_on_mcu::util::json::Json;
+
+    args.expect_only(&["topo", "samples", "threads", "reps", "seed", "out"])?;
+    // The ISSUE's reference MLP for the packed-vs-FixedQ speedup gate.
+    let sizes = parse_sizes(args.get_or("topo", "64,64,32"))?;
+    let n = args.get_usize("samples", 1024)?.max(1);
+    let threads = args.get_usize("threads", 0)?;
+    let reps = args.get_usize("reps", 7)?.max(1);
+    let seed = args.get_u64("seed", 7)?;
+    let out_path = args.get_or("out", "BENCH_kernels.json");
+
+    let mut rng = Rng::new(seed);
+    let mut net = Network::new(&sizes, Activation::Tanh, Activation::Sigmoid)?;
+    net.randomize(&mut rng, None);
+    let n_in = net.num_inputs();
+    let xs: Vec<f32> = (0..n * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let workers = batch::effective_workers(threads);
+    println!(
+        "bench json: topology {:?} ({} MACs/inference), batch {n}, {workers} worker(s), {reps} reps",
+        sizes,
+        net.macs()
+    );
+
+    let rows = batch::kernel_sweep(&net, &xs, n, threads, 1, reps);
+
+    let mut t = Table::new(vec!["kernel", "mode", "batch time", "samples/s", "bytes/net"]);
+    for r in &rows {
+        t.row(vec![
+            r.kernel.to_string(),
+            r.mode.to_string(),
+            fmt_time(r.seconds),
+            format!("{:.0}", r.samples_per_sec),
+            r.bytes_per_network.to_string(),
+        ]);
+    }
+    t.print();
+
+    let rate = |kernel: &str, mode: &str| {
+        rows.iter()
+            .find(|r| r.kernel == kernel && r.mode == mode)
+            .map(|r| r.samples_per_sec)
+            .unwrap_or(f64::NAN)
+    };
+    let speedup_q7 = rate("packed_q7", "serial") / rate("fixed_q", "serial");
+    let speedup_q15 = rate("packed_q15", "serial") / rate("fixed_q", "serial");
+    println!(
+        "\nheadline: packed_q7 {speedup_q7:.2}x / packed_q15 {speedup_q15:.2}x vs fixed_q (single-thread)"
+    );
+
+    let json = Json::obj()
+        .field("schema", "fann-on-mcu/bench-kernels/v1")
+        .field(
+            "topology",
+            Json::Arr(sizes.iter().map(|&s| Json::Int(s as i64)).collect::<Vec<_>>()),
+        )
+        .field("samples", n)
+        .field("reps", reps)
+        .field("threads_requested", threads)
+        .field("workers", workers)
+        .field("seed", Json::Int(seed as i64))
+        .field("macs_per_inference", net.macs())
+        .field(
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj()
+                            .field("kernel", r.kernel)
+                            .field("mode", r.mode)
+                            .field("seconds", r.seconds)
+                            .field("samples_per_sec", r.samples_per_sec)
+                            .field("bytes_per_network", r.bytes_per_network)
+                            // Hex string: u64 digests don't fit JSON's
+                            // i53-safe integer range.
+                            .field("checksum", format!("{:016x}", r.checksum))
+                            .build()
+                    })
+                    .collect::<Vec<_>>(),
+            ),
+        )
+        .field("speedup_packed_q7_vs_fixed_q_serial", speedup_q7)
+        .field("speedup_packed_q15_vs_fixed_q_serial", speedup_q15)
+        .build();
+    std::fs::write(out_path, json.to_pretty())
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
     Ok(())
 }
 
@@ -305,6 +410,8 @@ COMMANDS:
   deploy      --net FILE.net --target T [--out DIR] [--dtype fixed]
   run         --net FILE.net --target T --input \"v1,v2,...\" [--classifications N]
   throughput  [--topo \"64,64,64,8\"] [--samples N] [--threads T] [--reps R] [--seed N]
+  bench json  [--topo \"64,64,32\"] [--samples N] [--threads T] [--reps R] [--seed N]
+              [--out FILE]   write the kernel sweep to BENCH_kernels.json
   info        show applications, targets, artifact status
   help        this text
 
@@ -313,13 +420,24 @@ BENCHES: cargo bench (one binary per paper figure/table; see DESIGN.md)
 ";
 
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1))?;
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    // `bench` takes one positional mode word (`bench json`) ahead of
+    // its flags; everything else is pure `command --flag value` form.
+    let bench_mode = if argv.first().map(String::as_str) == Some("bench")
+        && argv.get(1).is_some_and(|a| !a.starts_with("--"))
+    {
+        Some(argv.remove(1))
+    } else {
+        None
+    };
+    let args = Args::parse(argv)?;
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "train-pjrt" => cmd_train_pjrt(&args),
         "deploy" => cmd_deploy(&args),
         "run" => cmd_run(&args),
         "throughput" => cmd_throughput(&args),
+        "bench" => cmd_bench(bench_mode.as_deref().unwrap_or("json"), &args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");

@@ -7,8 +7,13 @@
 //! * `python/compile/kernels/fixedpoint.py` (Pallas kernel),
 //! * this crate — where the *primitives* (`quantize`/`qmul`/`sat_i32`
 //!   and the step-linear activation tables) live here, and the dense
-//!   inner loop lives once, in [`crate::kernels::FixedQ`], which every
-//!   Rust fixed-point forward path dispatches through.
+//!   inner loop lives once per strategy in [`crate::kernels`]:
+//!   [`crate::kernels::FixedQ`] for wide i32 parameters and the packed
+//!   [`crate::kernels::PackedQ7`]/[`crate::kernels::PackedQ15`] pair
+//!   for word-packed narrow weights — all three reproduce exactly the
+//!   per-product `qmul` + i64-accumulate + `sat_i32` semantics defined
+//!   here, which is what makes them interchangeable bit for bit
+//!   (`rust/tests/parity_packed.rs`).
 //!
 //! A value `v` is stored as `round(v * 2^dec)` in an `i32`; `dec` (the
 //! *decimal point*) is network-wide, chosen by [`choose_decimal_point`].

@@ -12,7 +12,27 @@ use super::cost::{self, CostOptions, CycleBreakdown};
 use crate::deploy::DeploymentPlan;
 use crate::fann::activation::Activation;
 use crate::fann::{FixedNetwork, Network};
+use crate::kernels::{self, BatchScratch};
+use crate::quantize;
 use crate::targets::{power, DataType, Target};
+
+/// Reusable scratch for batched [`Executable`] execution: the float and
+/// Q-format ping-pong arenas plus the fixed path's quantize/dequantize
+/// staging buffers. Grown once, reused for every batch of a stream —
+/// `apps::classify_stream_with` threads one through a whole workload.
+#[derive(Debug, Default)]
+pub struct ExecScratch {
+    pub f: BatchScratch<f32>,
+    pub q: BatchScratch<i32>,
+    qin: Vec<i32>,
+    qout: Vec<i32>,
+}
+
+impl ExecScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 /// The executable forms a deployment can carry.
 #[derive(Debug)]
@@ -49,9 +69,39 @@ impl<'a> Executable<'a> {
     /// Execute `n_samples` packed rows through the batched kernels.
     /// Per-sample results are bit-identical to [`forward`](Self::forward).
     pub fn forward_batch(&self, inputs: &[f32], n_samples: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n_samples * self.num_outputs()];
+        let mut scratch = ExecScratch::new();
+        self.forward_batch_into(inputs, n_samples, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`forward_batch`](Self::forward_batch) with caller-owned scratch
+    /// and output — the allocation-free steady-state form. For fixed
+    /// executables, quantize → batched Q inference → dequantize all
+    /// stage through `scratch`.
+    pub fn forward_batch_into(
+        &self,
+        inputs: &[f32],
+        n_samples: usize,
+        scratch: &mut ExecScratch,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), n_samples * self.num_outputs());
         match self {
-            Executable::Float(n) => n.run_batch(inputs, n_samples),
-            Executable::Fixed(n) => n.run_batch(inputs, n_samples),
+            Executable::Float(n) => {
+                n.run_batch_into(kernels::default_f32(), inputs, n_samples, &mut scratch.f, out);
+            }
+            Executable::Fixed(n) => {
+                scratch.qin.clear();
+                scratch
+                    .qin
+                    .extend(inputs.iter().map(|&v| quantize::quantize(v, n.decimal_point)));
+                scratch.qout.resize(out.len(), 0);
+                n.run_batch_q_into(&scratch.qin, n_samples, &mut scratch.q, &mut scratch.qout[..]);
+                for (o, &q) in out.iter_mut().zip(scratch.qout.iter()) {
+                    *o = quantize::dequantize(q as i64, n.decimal_point);
+                }
+            }
         }
     }
 
@@ -215,6 +265,22 @@ pub fn simulate_batch(
     n_samples: usize,
     opts: CostOptions,
 ) -> Result<BatchSimReport> {
+    let mut scratch = ExecScratch::new();
+    simulate_batch_with(plan, exe, inputs, n_samples, opts, &mut scratch)
+}
+
+/// [`simulate_batch`] with caller-owned [`ExecScratch`]: repeated
+/// batches of a stream reuse one arena instead of reallocating the
+/// ping-pong buffers per call (only the report's output vector is
+/// allocated).
+pub fn simulate_batch_with(
+    plan: &DeploymentPlan,
+    exe: &Executable,
+    inputs: &[f32],
+    n_samples: usize,
+    opts: CostOptions,
+    scratch: &mut ExecScratch,
+) -> Result<BatchSimReport> {
     ensure!(n_samples > 0, "batch must contain at least one sample");
     ensure!(
         inputs.len() == n_samples * exe.num_inputs(),
@@ -226,7 +292,8 @@ pub fn simulate_batch(
     validate(plan, exe)?;
     // One batched forward covers every sample (no redundant re-run of
     // sample 0); the per-sample report reuses its first row.
-    let outputs = exe.forward_batch(inputs, n_samples);
+    let mut outputs = vec![0.0f32; n_samples * exe.num_outputs()];
+    exe.forward_batch_into(inputs, n_samples, scratch, &mut outputs);
     let per_sample = cost_report(plan, exe, outputs[..exe.num_outputs()].to_vec(), opts);
     let n = n_samples as f64;
     let total_seconds = per_sample.seconds * n + plan.target.fixed_overhead_seconds();

@@ -12,6 +12,9 @@ pub mod stream;
 pub mod trace;
 
 pub use cost::{network_cycles, CostOptions, CycleBreakdown};
-pub use engine::{simulate, simulate_batch, BatchSimReport, Executable, SimReport};
+pub use engine::{
+    simulate, simulate_batch, simulate_batch_with, BatchSimReport, ExecScratch, Executable,
+    SimReport,
+};
 pub use stream::{analyze as analyze_stream, ClusterPolicy, StreamReport};
 pub use trace::PowerTrace;

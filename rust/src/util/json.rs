@@ -1,0 +1,222 @@
+//! Minimal JSON value tree + serializer (the offline crate set has no
+//! `serde`), used by the `bench json` perf-tracking harness. Output is
+//! deterministic: object keys keep insertion order, floats render with
+//! `{}` (shortest round-trip representation), non-finite floats render
+//! as `null` (JSON has no NaN/Inf).
+
+use std::fmt::Write as _;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Integers stay exact (no float round-trip).
+    Int(i64),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object builder for insertion-ordered keys.
+    pub fn obj() -> ObjBuilder {
+        ObjBuilder(Vec::new())
+    }
+
+    /// Serialize with 2-space indentation — the form committed as a CI
+    /// artifact, so diffs between runs stay readable.
+    pub fn to_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, Some(2), 0);
+        s.push('\n');
+        s
+    }
+
+    fn write(&self, s: &mut String, indent: Option<usize>, depth: usize) {
+        match self {
+            Json::Null => s.push_str("null"),
+            Json::Bool(b) => s.push_str(if *b { "true" } else { "false" }),
+            Json::Int(v) => {
+                let _ = write!(s, "{v}");
+            }
+            Json::Num(v) => {
+                if v.is_finite() {
+                    let _ = write!(s, "{v}");
+                } else {
+                    s.push_str("null");
+                }
+            }
+            Json::Str(v) => write_escaped(s, v),
+            Json::Arr(items) => write_seq(s, indent, depth, '[', ']', items.len(), |s, i| {
+                items[i].write(s, indent, depth + 1)
+            }),
+            Json::Obj(pairs) => write_seq(s, indent, depth, '{', '}', pairs.len(), |s, i| {
+                write_escaped(s, &pairs[i].0);
+                s.push(':');
+                if indent.is_some() {
+                    s.push(' ');
+                }
+                pairs[i].1.write(s, indent, depth + 1);
+            }),
+        }
+    }
+}
+
+/// Compact (whitespace-free) serialization via `Display`/`to_string`.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        f.write_str(&s)
+    }
+}
+
+fn write_seq(
+    s: &mut String,
+    indent: Option<usize>,
+    depth: usize,
+    open: char,
+    close: char,
+    len: usize,
+    mut item: impl FnMut(&mut String, usize),
+) {
+    s.push(open);
+    for i in 0..len {
+        if i > 0 {
+            s.push(',');
+        }
+        if let Some(w) = indent {
+            s.push('\n');
+            s.push_str(&" ".repeat(w * (depth + 1)));
+        }
+        item(s, i);
+    }
+    if len > 0 {
+        if let Some(w) = indent {
+            s.push('\n');
+            s.push_str(&" ".repeat(w * depth));
+        }
+    }
+    s.push(close);
+}
+
+fn write_escaped(s: &mut String, v: &str) {
+    s.push('"');
+    for c in v.chars() {
+        match c {
+            '"' => s.push_str("\\\""),
+            '\\' => s.push_str("\\\\"),
+            '\n' => s.push_str("\\n"),
+            '\r' => s.push_str("\\r"),
+            '\t' => s.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(s, "\\u{:04x}", c as u32);
+            }
+            c => s.push(c),
+        }
+    }
+    s.push('"');
+}
+
+/// Insertion-ordered object builder: `Json::obj().field("k", 1).build()`.
+pub struct ObjBuilder(Vec<(String, Json)>);
+
+impl ObjBuilder {
+    pub fn field(mut self, key: &str, value: impl Into<Json>) -> Self {
+        self.0.push((key.to_string(), value.into()));
+        self
+    }
+
+    pub fn build(self) -> Json {
+        Json::Obj(self.0)
+    }
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Self {
+        Json::Bool(v)
+    }
+}
+impl From<i64> for Json {
+    fn from(v: i64) -> Self {
+        Json::Int(v)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Self {
+        Json::Int(v as i64)
+    }
+}
+impl From<f64> for Json {
+    fn from(v: f64) -> Self {
+        Json::Num(v)
+    }
+}
+impl From<&str> for Json {
+    fn from(v: &str) -> Self {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Self {
+        Json::Str(v)
+    }
+}
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Self {
+        Json::Arr(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compact_object() {
+        let j = Json::obj()
+            .field("name", "packed_q7")
+            .field("n", 3usize)
+            .field("x", 1.5f64)
+            .field("ok", true)
+            .build();
+        assert_eq!(
+            j.to_string(),
+            r#"{"name":"packed_q7","n":3,"x":1.5,"ok":true}"#
+        );
+    }
+
+    #[test]
+    fn arrays_and_nesting() {
+        let j = Json::Arr(vec![Json::Int(1), Json::obj().field("a", Json::Null).build()]);
+        assert_eq!(j.to_string(), r#"[1,{"a":null}]"#);
+    }
+
+    #[test]
+    fn escapes_and_nonfinite() {
+        let j = Json::obj()
+            .field("s", "a\"b\\c\nd")
+            .field("nan", f64::NAN)
+            .build();
+        assert_eq!(j.to_string(), r#"{"s":"a\"b\\c\nd","nan":null}"#);
+    }
+
+    #[test]
+    fn pretty_is_indented_and_reparseable_shape() {
+        let j = Json::obj()
+            .field("rows", Json::Arr(vec![Json::Int(1), Json::Int(2)]))
+            .build();
+        let p = j.to_pretty();
+        assert!(p.contains("\n  \"rows\": [\n    1,\n    2\n  ]\n}"));
+        assert!(p.ends_with("}\n"));
+    }
+
+    #[test]
+    fn whole_floats_render_as_valid_json() {
+        // `{}` on 2.0 prints "2" — integral, still valid JSON.
+        assert_eq!(Json::Num(2.0).to_string(), "2");
+        assert_eq!(Json::Int(-7).to_string(), "-7");
+    }
+}

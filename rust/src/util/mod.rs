@@ -1,7 +1,8 @@
 //! Small shared utilities: PRNG, property-test driver, TSV parsing, table
-//! printing. Hand-rolled because the offline crate set has no `rand`,
-//! `proptest` or `criterion`.
+//! printing, JSON emission. Hand-rolled because the offline crate set has
+//! no `rand`, `proptest`, `criterion` or `serde`.
 
+pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod table;

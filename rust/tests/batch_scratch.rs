@@ -1,0 +1,186 @@
+//! Zero-allocation regression for the batch execution path: repeated
+//! same-shape batches through [`Network::run_batch_into`] /
+//! [`FixedNetwork::run_batch_q_into`] must never reallocate the
+//! [`BatchScratch`] arena (capacity and base pointers stay put), and
+//! the parallel driver's persistent pool must keep outputs bit-stable
+//! across repeated streams.
+
+use fann_on_mcu::bench::batch::{run_batch_parallel, BatchPool};
+use fann_on_mcu::fann::{from_float_packed, Activation, FixedNetwork, Network};
+use fann_on_mcu::kernels::{self, BatchScratch, PackedWidth};
+use fann_on_mcu::util::rng::Rng;
+
+fn random_net(sizes: &[usize], seed: u64) -> Network {
+    let mut rng = Rng::new(seed);
+    let mut net = Network::new(sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+    net.randomize(&mut rng, None);
+    net
+}
+
+#[test]
+fn float_scratch_never_reallocates_on_same_shape_calls() {
+    let net = random_net(&[10, 32, 16, 4], 7);
+    let mut rng = Rng::new(3);
+    let n = 33;
+    let xs: Vec<f32> = (0..n * 10).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let mut scratch = BatchScratch::new();
+    let mut out = vec![0.0f32; n * 4];
+    let kernel = kernels::default_f32();
+
+    // First call grows the arena once.
+    net.run_batch_into(kernel, &xs, n, &mut scratch, &mut out);
+    let cap = scratch.capacity();
+    let ptrs = scratch.base_ptrs();
+    let want = out.clone();
+
+    for _ in 0..50 {
+        net.run_batch_into(kernel, &xs, n, &mut scratch, &mut out);
+    }
+    assert_eq!(scratch.capacity(), cap, "scratch capacity changed");
+    assert_eq!(scratch.base_ptrs(), ptrs, "scratch storage moved");
+    assert_eq!(out, want, "outputs drifted across reuse");
+
+    // Smaller batches through the same arena: still no reallocation.
+    let mut small_out = vec![0.0f32; 5 * 4];
+    net.run_batch_into(kernel, &xs[..5 * 10], 5, &mut scratch, &mut small_out);
+    assert_eq!(scratch.capacity(), cap);
+    assert_eq!(scratch.base_ptrs(), ptrs);
+    assert_eq!(&small_out[..], &want[..5 * 4], "prefix batch diverged");
+}
+
+#[test]
+fn fixed_and_packed_scratch_never_reallocate() {
+    let net = random_net(&[8, 24, 6], 11);
+    let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+    let (_, packed) = from_float_packed(&net, 1.0, PackedWidth::Q7).unwrap();
+    let mut rng = Rng::new(5);
+    let n = 21;
+    let xs: Vec<f32> = (0..n * 8).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let q = fixed.quantize_input(&xs);
+    let q7 = packed.quantize_input(&xs);
+
+    let mut scratch: BatchScratch<i32> = BatchScratch::new();
+    let mut out = vec![0i32; n * 6];
+    fixed.run_batch_q_into(&q, n, &mut scratch, &mut out);
+    let cap = scratch.capacity();
+    let ptrs = scratch.base_ptrs();
+    let want = out.clone();
+    for _ in 0..30 {
+        fixed.run_batch_q_into(&q, n, &mut scratch, &mut out);
+        // The packed net shares the same arena (same element type and
+        // width bound): still no growth.
+        packed.run_batch_q_into(&q7, n, &mut scratch, &mut out);
+    }
+    assert_eq!(scratch.capacity(), cap);
+    assert_eq!(scratch.base_ptrs(), ptrs);
+    fixed.run_batch_q_into(&q, n, &mut scratch, &mut out);
+    assert_eq!(out, want);
+}
+
+#[test]
+fn vec_api_matches_into_api_bitwise() {
+    let net = random_net(&[9, 14, 5], 23);
+    let mut rng = Rng::new(9);
+    let n = 12;
+    let xs: Vec<f32> = (0..n * 9).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    for kernel in kernels::f32_kernels() {
+        let want = net.run_batch_with_kernel(kernel, &xs, n);
+        let mut scratch = BatchScratch::new();
+        let mut got = vec![0.0f32; n * 5];
+        net.run_batch_into(kernel, &xs, n, &mut scratch, &mut got);
+        assert_eq!(got, want, "{}", kernel.name());
+    }
+    let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+    let q = fixed.quantize_input(&xs);
+    let want = fixed.run_batch_q(&q, n);
+    let mut scratch = BatchScratch::new();
+    let mut got = vec![0i32; n * 5];
+    fixed.run_batch_q_into(&q, n, &mut scratch, &mut got);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn growth_happens_once_then_larger_shapes_reuse() {
+    let net = random_net(&[6, 20, 3], 41);
+    let kernel = kernels::default_f32();
+    let mut scratch = BatchScratch::new();
+    let mut rng = Rng::new(2);
+    // Grow to the largest batch first …
+    let big = 64;
+    let xs_big: Vec<f32> = (0..big * 6).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let mut out_big = vec![0.0f32; big * 3];
+    net.run_batch_into(kernel, &xs_big, big, &mut scratch, &mut out_big);
+    let cap = scratch.capacity();
+    let ptrs = scratch.base_ptrs();
+    // … then every smaller batch reuses the arena untouched.
+    for n in [1usize, 7, 16, 63] {
+        let xs: Vec<f32> = xs_big[..n * 6].to_vec();
+        let mut out = vec![0.0f32; n * 3];
+        net.run_batch_into(kernel, &xs, n, &mut scratch, &mut out);
+        assert_eq!(scratch.capacity(), cap, "n={n}");
+        assert_eq!(scratch.base_ptrs(), ptrs, "n={n}");
+        assert_eq!(&out[..], &out_big[..n * 3], "n={n}");
+    }
+}
+
+#[test]
+fn thread_scratch_steady_state_for_vec_api() {
+    // The convenience Vec-returning API routes through the thread-local
+    // arena: after the first call it must stop growing too.
+    let net = random_net(&[7, 18, 4], 53);
+    let mut rng = Rng::new(8);
+    let n = 17;
+    let xs: Vec<f32> = (0..n * 7).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let _ = net.run_batch(&xs, n); // warm the TLS arena
+    let cap = kernels::with_thread_scratch_f32(|s| s.capacity());
+    let want = net.run_batch(&xs, n);
+    for _ in 0..20 {
+        assert_eq!(net.run_batch(&xs, n), want);
+    }
+    assert_eq!(kernels::with_thread_scratch_f32(|s| s.capacity()), cap);
+}
+
+#[test]
+fn parallel_driver_stable_across_repeated_streams() {
+    // The persistent pool serves many batches; outputs stay bit-equal
+    // to serial every time (workers' TLS arenas are reused, never
+    // corrupted by earlier batches of different shape).
+    let net_a = random_net(&[5, 11, 4], 61);
+    let net_b = random_net(&[12, 7, 2], 67);
+    let mut rng = Rng::new(13);
+    for round in 0..5 {
+        for (net, n_in, n) in [(&net_a, 5usize, 19usize), (&net_b, 12, 8)] {
+            let xs: Vec<f32> = (0..n * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let serial = net.run_batch(&xs, n);
+            for threads in [2usize, 4] {
+                assert_eq!(
+                    run_batch_parallel(net, &xs, n, threads),
+                    serial,
+                    "round={round} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn local_pool_shutdown_is_clean() {
+    // A scoped pool joins its workers on drop; dropping right after
+    // executing borrowed jobs must be safe and leak-free.
+    let data = vec![1u64, 2, 3, 4];
+    let sum = std::sync::Mutex::new(0u64);
+    {
+        let pool = BatchPool::new(2);
+        assert_eq!(pool.workers(), 2);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .iter()
+            .map(|&v| {
+                Box::new(move || {
+                    *sum.lock().unwrap() += v;
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.execute(jobs);
+    } // drop joins the workers
+    assert_eq!(*sum.lock().unwrap(), 10);
+}

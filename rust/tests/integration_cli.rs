@@ -52,6 +52,42 @@ fn throughput_runs_and_reports_all_paths() {
 }
 
 #[test]
+fn bench_json_writes_perf_baseline() {
+    let dir = tmpdir("benchjson");
+    let out_path = dir.join("BENCH_kernels.json");
+    let out = bin()
+        .args([
+            "bench", "json", "--topo", "8,8,4", "--samples", "32", "--reps", "1", "--threads",
+            "2", "--out", out_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "bench json failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = std::fs::read_to_string(&out_path).unwrap();
+    for needle in [
+        "\"schema\": \"fann-on-mcu/bench-kernels/v1\"",
+        "\"kernel\": \"packed_q7\"",
+        "\"kernel\": \"packed_q15\"",
+        "\"kernel\": \"fixed_q\"",
+        "\"kernel\": \"scalar_f32\"",
+        "\"kernel\": \"blocked_f32\"",
+        "\"mode\": \"parallel\"",
+        "\"bytes_per_network\"",
+        "speedup_packed_q7_vs_fixed_q_serial",
+    ] {
+        assert!(text.contains(needle), "bench json missing {needle:?}:\n{text}");
+    }
+    // Unknown bench mode is rejected.
+    let out = bin().args(["bench", "csv"]).output().unwrap();
+    assert!(!out.status.success());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn unknown_command_fails_with_help() {
     let out = bin().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());

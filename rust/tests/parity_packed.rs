@@ -1,0 +1,286 @@
+//! Packed-kernel parity: [`PackedQ7`]/[`PackedQ15`] must be **bit-exact**
+//! against [`FixedQ`] on the same Q(dec) parameters — the packed panel
+//! layout is storage reordering plus lossless narrowing, never a change
+//! of arithmetic — across randomized shapes including `n_in % 4 != 0`
+//! and `n_in < 4` ragged tails, at both network and raw-kernel level.
+//! Also pins fused-vs-unfused epilogue equality for every kernel.
+
+use fann_on_mcu::fann::activation::ALL as ALL_ACTS;
+use fann_on_mcu::fann::{from_float_packed, Activation, FixedNetwork, Network};
+use fann_on_mcu::kernels::layout::pack_rows;
+use fann_on_mcu::kernels::{
+    f32_kernels, DenseKernel, DenseLayerRef, FixedQ, PackedLayerRef, PackedQ15, PackedQ7,
+    PackedWidth,
+};
+use fann_on_mcu::quantize;
+use fann_on_mcu::util::proptest::{check, ensure};
+use fann_on_mcu::util::rng::Rng;
+
+fn random_narrow_layer(
+    rng: &mut Rng,
+    width: PackedWidth,
+    n_in: usize,
+    n_out: usize,
+) -> (Vec<i32>, Vec<i32>) {
+    let (lo, hi) = width.range();
+    let span = (hi - lo + 1) as usize;
+    let w: Vec<i32> = (0..n_in * n_out).map(|_| lo + rng.below(span) as i32).collect();
+    let b: Vec<i32> = (0..n_out).map(|_| rng.below(20001) as i32 - 10000).collect();
+    (w, b)
+}
+
+/// Run the packed kernel matching `width` (matvec or matmul).
+fn run_packed(
+    width: PackedWidth,
+    dec: u32,
+    layer: &PackedLayerRef,
+    xs: &[i32],
+    n_samples: usize,
+    out: &mut [i32],
+) {
+    match width {
+        PackedWidth::Q7 => PackedQ7::new(dec).matmul(layer, xs, n_samples, out),
+        PackedWidth::Q15 => PackedQ15::new(dec).matmul(layer, xs, n_samples, out),
+    }
+}
+
+#[test]
+fn packed_bit_exact_vs_fixedq_randomized_shapes() {
+    check("packed vs fixedq", 200, |rng| {
+        // 1..=9 guarantees n_in < 4 and n_in % 4 != 0 cases appear
+        // constantly; 1..=64 covers multi-panel rows.
+        let n_in = rng.range_usize(1, 64);
+        let n_out = rng.range_usize(1, 64);
+        let n_samples = rng.range_usize(1, 9);
+        let dec = rng.range_usize(2, 12) as u32;
+        let width = if rng.below(2) == 0 { PackedWidth::Q7 } else { PackedWidth::Q15 };
+        let (w, b) = random_narrow_layer(rng, width, n_in, n_out);
+        let xs: Vec<i32> = (0..n_in * n_samples)
+            .map(|_| rng.below(200001) as i32 - 100000)
+            .collect();
+
+        let layer = DenseLayerRef::new(n_in, n_out, &w, &b);
+        let mut want = vec![0i32; n_out * n_samples];
+        FixedQ::new(dec).matmul(&layer, &xs, n_samples, &mut want);
+
+        let panels = pack_rows(width, n_in, n_out, &w)
+            .map_err(|e| format!("pack failed: {e}"))?;
+        ensure(panels.unpack() == w, "pack/unpack round-trip")?;
+        let pref = PackedLayerRef::new(&panels, &b);
+        let mut got = vec![0i32; n_out * n_samples];
+        run_packed(width, dec, &pref, &xs, n_samples, &mut got);
+        ensure(
+            got == want,
+            format!("{width:?} n_in={n_in} n_out={n_out} n_samples={n_samples} dec={dec}"),
+        )
+    });
+}
+
+#[test]
+fn packed_tiny_and_ragged_tails_exhaustive() {
+    // Deterministic sweep over every n_in in 1..=9 (all < 4 and % 4
+    // residues) × panel-straddling n_out values.
+    let mut rng = Rng::new(0x7A11);
+    for width in [PackedWidth::Q7, PackedWidth::Q15] {
+        for n_in in 1..=9usize {
+            for &n_out in &[1usize, 2, 3, 4, 5, 7, 8, 9] {
+                let dec = 5;
+                let (w, b) = random_narrow_layer(&mut rng, width, n_in, n_out);
+                let x: Vec<i32> = (0..n_in).map(|_| rng.below(4001) as i32 - 2000).collect();
+                let layer = DenseLayerRef::new(n_in, n_out, &w, &b);
+                let mut want = vec![0i32; n_out];
+                FixedQ::new(dec).matvec(&layer, &x, &mut want);
+                let panels = pack_rows(width, n_in, n_out, &w).unwrap();
+                let pref = PackedLayerRef::new(&panels, &b);
+                let mut got = vec![0i32; n_out];
+                match width {
+                    PackedWidth::Q7 => PackedQ7::new(dec).matvec(&pref, &x, &mut got),
+                    PackedWidth::Q15 => PackedQ15::new(dec).matvec(&pref, &x, &mut got),
+                }
+                assert_eq!(got, want, "{width:?} n_in={n_in} n_out={n_out}");
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_slow_path_bit_exact_at_extreme_inputs() {
+    // Inputs outside the narrow-multiply fast-path bound (|x| >= 2^24
+    // for q7, 2^16 for q15) must fall back to exact i64 qmul and still
+    // match FixedQ, including saturation rails.
+    let mut rng = Rng::new(0xFA57);
+    for width in [PackedWidth::Q7, PackedWidth::Q15] {
+        let (n_in, n_out, n_samples) = (13, 6, 5);
+        let dec = 3;
+        let (w, b) = random_narrow_layer(&mut rng, width, n_in, n_out);
+        let xs: Vec<i32> = (0..n_in * n_samples)
+            .map(|i| match i % 4 {
+                0 => i32::MAX - i as i32,
+                1 => i32::MIN + i as i32,
+                2 => (1 << 25) + i as i32,
+                _ => rng.below(1000) as i32 - 500,
+            })
+            .collect();
+        let layer = DenseLayerRef::new(n_in, n_out, &w, &b);
+        let mut want = vec![0i32; n_out * n_samples];
+        FixedQ::new(dec).matmul(&layer, &xs, n_samples, &mut want);
+        let panels = pack_rows(width, n_in, n_out, &w).unwrap();
+        let pref = PackedLayerRef::new(&panels, &b);
+        let mut got = vec![0i32; n_out * n_samples];
+        run_packed(width, dec, &pref, &xs, n_samples, &mut got);
+        assert_eq!(got, want, "{width:?}");
+    }
+}
+
+#[test]
+fn packed_network_bit_exact_vs_fixed_reference_randomized() {
+    check("packed network vs fixed", 40, |rng| {
+        let n_layers = rng.range_usize(1, 3);
+        let mut sizes = Vec::with_capacity(n_layers + 1);
+        for _ in 0..=n_layers {
+            sizes.push(rng.range_usize(1, 20));
+        }
+        let mut net = Network::new(&sizes, Activation::Tanh, Activation::Sigmoid)
+            .map_err(|e| e.to_string())?;
+        net.randomize(rng, None);
+        let n_in = net.num_inputs();
+        let n = rng.range_usize(1, 8);
+        let xs: Vec<f32> = (0..n * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        for width in [PackedWidth::Q7, PackedWidth::Q15] {
+            let (fixed, packed) =
+                from_float_packed(&net, 1.0, width).map_err(|e| e.to_string())?;
+            ensure(
+                fixed.decimal_point == packed.decimal_point,
+                "decimal points agree",
+            )?;
+            let q = packed.quantize_input(&xs);
+            ensure(
+                packed.run_batch_q(&q, n) == fixed.run_batch_q(&q, n),
+                format!("{width:?} sizes={sizes:?} n={n}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_epilogue_equals_unfused_for_every_f32_kernel() {
+    check("fused == unfused (f32)", 80, |rng| {
+        let n_in = rng.range_usize(1, 32);
+        let n_out = rng.range_usize(1, 32);
+        let n_samples = rng.range_usize(1, 9);
+        let w: Vec<f32> = (0..n_in * n_out).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..n_out).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let xs: Vec<f32> = (0..n_in * n_samples).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let steepness = rng.range_f32(0.25, 2.0);
+        let layer = DenseLayerRef::new(n_in, n_out, &w, &b);
+        for kernel in f32_kernels() {
+            for act in ALL_ACTS {
+                let mut fused = vec![0.0f32; n_out * n_samples];
+                kernel.matmul_act(&layer, &xs, n_samples, &mut fused, act, steepness);
+                let mut unfused = vec![0.0f32; n_out * n_samples];
+                kernel.matmul(&layer, &xs, n_samples, &mut unfused);
+                kernel.apply_epilogue(act, steepness, &mut unfused);
+                ensure(
+                    fused == unfused,
+                    format!("{} matmul_act {act:?}", kernel.name()),
+                )?;
+                let x0 = &xs[..n_in];
+                let mut fused1 = vec![0.0f32; n_out];
+                kernel.matvec_act(&layer, x0, &mut fused1, act, steepness);
+                let mut unfused1 = vec![0.0f32; n_out];
+                kernel.matvec(&layer, x0, &mut unfused1);
+                kernel.apply_epilogue(act, steepness, &mut unfused1);
+                ensure(
+                    fused1 == unfused1,
+                    format!("{} matvec_act {act:?}", kernel.name()),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_epilogue_equals_unfused_for_q_kernels() {
+    check("fused == unfused (q)", 60, |rng| {
+        let n_in = rng.range_usize(1, 24);
+        let n_out = rng.range_usize(1, 24);
+        let n_samples = rng.range_usize(1, 6);
+        let dec = rng.range_usize(3, 12) as u32;
+        let (w, b) = {
+            let (lo, hi) = PackedWidth::Q7.range();
+            let span = (hi - lo + 1) as usize;
+            let w: Vec<i32> = (0..n_in * n_out).map(|_| lo + rng.below(span) as i32).collect();
+            let b: Vec<i32> = (0..n_out).map(|_| rng.below(2001) as i32 - 1000).collect();
+            (w, b)
+        };
+        let xs: Vec<i32> =
+            (0..n_in * n_samples).map(|_| rng.below(8193) as i32 - 4096).collect();
+        let layer = DenseLayerRef::new(n_in, n_out, &w, &b);
+        let kernel = FixedQ::new(dec);
+        for act in ALL_ACTS {
+            let mut fused = vec![0i32; n_out * n_samples];
+            kernel.matmul_act(&layer, &xs, n_samples, &mut fused, act, 1.0);
+            let mut unfused = vec![0i32; n_out * n_samples];
+            kernel.matmul(&layer, &xs, n_samples, &mut unfused);
+            kernel.apply_epilogue(act, 1.0, &mut unfused);
+            ensure(fused == unfused, format!("fixed_q {act:?}"))?;
+
+            // Packed q7 fused epilogue against the same unfused values.
+            let panels = pack_rows(PackedWidth::Q7, n_in, n_out, &w)
+                .map_err(|e| e.to_string())?;
+            let pref = PackedLayerRef::new(&panels, &b);
+            let mut pfused = vec![0i32; n_out * n_samples];
+            PackedQ7::new(dec).matmul_act(&pref, &xs, n_samples, &mut pfused, act);
+            ensure(pfused == unfused, format!("packed_q7 {act:?}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_outputs_track_float_network() {
+    // Sanity beyond bit-parity: the narrow quantization still computes
+    // the right function (within step-linear activation tolerance).
+    let mut rng = Rng::new(0xF10A7);
+    let mut net = Network::new(&[8, 12, 4], Activation::Tanh, Activation::Sigmoid).unwrap();
+    net.randomize(&mut rng, None);
+    let (_, packed) = from_float_packed(&net, 1.0, PackedWidth::Q15).unwrap();
+    for _ in 0..20 {
+        let x: Vec<f32> = (0..8).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let yf = net.run(&x);
+        let yq = packed.run(&x);
+        for (a, b) in yf.iter().zip(&yq) {
+            assert!((a - b).abs() < 0.08, "float {a} vs packed {b}");
+        }
+    }
+}
+
+#[test]
+fn fixed_network_forward_unchanged_by_fusion_refactor() {
+    // The fused routing must not change FixedNetwork numerics: compare
+    // against the longhand quantize::dense_q_into path layer by layer.
+    let mut rng = Rng::new(0xD00D);
+    let mut net = Network::new(&[6, 9, 3], Activation::Tanh, Activation::Sigmoid).unwrap();
+    net.randomize(&mut rng, None);
+    let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+    let x: Vec<f32> = (0..6).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let xq = fixed.quantize_input(&x);
+    let got = fixed.run_q(&xq);
+
+    let mut cur = xq;
+    for layer in &fixed.layers {
+        let mut next = vec![0i32; layer.n_out];
+        quantize::dense_q_into(
+            &cur,
+            &layer.weights,
+            &layer.biases,
+            fixed.decimal_point,
+            layer.activation,
+            &mut next,
+        );
+        cur = next;
+    }
+    assert_eq!(got, cur);
+}
