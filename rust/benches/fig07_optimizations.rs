@@ -20,7 +20,10 @@ fn main() {
     println!("=== Fig. 7: example network 5-100-100-3 optimization steps ===\n");
     let shape = NetShape::new(&[5, 100, 100, 3]);
     let acts = bench_acts(3);
-    let legacy = CostOptions { legacy_init: true };
+    let legacy = CostOptions {
+        legacy_init: true,
+        ..CostOptions::default()
+    };
     let optimized = CostOptions::default();
 
     let mut t = Table::new(vec![

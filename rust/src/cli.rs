@@ -71,13 +71,25 @@ impl Args {
     }
 }
 
-/// Parse a `--target` value into a [`crate::targets::Target`].
+/// Parse a `--target` value into a [`crate::targets::Target`]. Accepts
+/// the historical short aliases plus every [`crate::targets::Target::slug`]
+/// (`cortex-m4f`, `cortex-m4f-nrf52832`, `wolf-8core`, ...) so plans and
+/// bench rows round-trip back through the CLI to the same target, chip
+/// included.
 pub fn parse_target(s: &str) -> Result<crate::targets::Target> {
     use crate::targets::{Chip, Target};
+    fn parse_chip(s: &str) -> Result<Chip> {
+        Ok(match s {
+            "nrf52832" => Chip::Nrf52832,
+            "stm32l475vg" => Chip::Stm32l475vg,
+            "stm32f769" => Chip::Stm32f769,
+            other => bail!("unknown chip {other:?} (known: nrf52832, stm32l475vg, stm32f769)"),
+        })
+    }
     Ok(match s {
         "m4" | "cortex-m4" | "nrf52832" => Target::CortexM4(Chip::Nrf52832),
-        "m4-stm32" | "stm32l475vg" => Target::CortexM4(Chip::Stm32l475vg),
-        "m7" | "cortex-m7" | "stm32f769" => Target::CortexM7(Chip::Stm32f769),
+        "m4f" | "cortex-m4f" | "m4-stm32" | "stm32l475vg" => Target::CortexM4(Chip::Stm32l475vg),
+        "m7" | "m7f" | "cortex-m7" | "cortex-m7f" | "stm32f769" => Target::CortexM7(Chip::Stm32f769),
         "m0" | "cortex-m0" => Target::CortexM0(Chip::Nrf52832),
         "ibex" | "fc" | "wolf-fc" => Target::WolfFc,
         "riscy" | "cluster1" => Target::WolfCluster { cores: 1 },
@@ -87,9 +99,22 @@ pub fn parse_target(s: &str) -> Result<crate::targets::Target> {
                 Target::WolfCluster {
                     cores: n.parse().with_context(|| format!("bad target {other:?}"))?,
                 }
+            } else if let Some(n) = other
+                .strip_prefix("wolf-")
+                .and_then(|rest| rest.strip_suffix("core"))
+            {
+                Target::WolfCluster {
+                    cores: n.parse().with_context(|| format!("bad target {other:?}"))?,
+                }
+            } else if let Some(chip) = other.strip_prefix("cortex-m4f-") {
+                Target::CortexM4(parse_chip(chip)?)
+            } else if let Some(chip) = other.strip_prefix("cortex-m7f-") {
+                Target::CortexM7(parse_chip(chip)?)
+            } else if let Some(chip) = other.strip_prefix("cortex-m0-") {
+                Target::CortexM0(parse_chip(chip)?)
             } else {
                 bail!(
-                    "unknown target {other:?} (try: m4, m4-stm32, m7, m0, ibex, cluster1..cluster8)"
+                    "unknown target {other:?} (try: m4, cortex-m4f, m7, m0, ibex, wolf-fc, cluster1..cluster8, wolf-8core)"
                 )
             }
         }
@@ -164,6 +189,30 @@ mod tests {
             Target::WolfCluster { cores: 4 }
         );
         assert!(parse_target("gpu").is_err());
+    }
+
+    #[test]
+    fn target_slugs_round_trip_to_the_same_target() {
+        for t in [
+            Target::CortexM4(Chip::Stm32l475vg),
+            Target::CortexM4(Chip::Nrf52832),
+            Target::CortexM7(Chip::Stm32f769),
+            Target::CortexM0(Chip::Nrf52832),
+            Target::CortexM0(Chip::Stm32l475vg),
+            Target::WolfFc,
+            Target::WolfCluster { cores: 1 },
+            Target::WolfCluster { cores: 8 },
+        ] {
+            // Full equality — chip included — not just slug-string
+            // equality, so two chips can never alias through a plan file.
+            assert_eq!(parse_target(&t.slug()).unwrap(), t, "slug {:?}", t.slug());
+        }
+        assert_eq!(
+            parse_target("wolf-8core").unwrap(),
+            Target::WolfCluster { cores: 8 }
+        );
+        assert!(parse_target("wolf-xcore").is_err());
+        assert!(parse_target("cortex-m4f-unknownchip").is_err());
     }
 
     #[test]

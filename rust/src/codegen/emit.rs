@@ -1,0 +1,319 @@
+//! The emit pipeline: trained network → placement → generated C bundle
+//! + machine-readable [`DeployPlan`] + a self-contained
+//! [`EmittedArtifact`] the [`crate::emulator`] can execute.
+//!
+//! The artifact owns its parameters (exactly the values the generated
+//! `fann_net.h` prints), so `net → emit → emulate` really executes what
+//! was emitted rather than silently reading the source network again.
+
+use anyhow::{bail, Result};
+
+use super::plan::{build_deploy_plan, DeployPlan, NetRepr};
+use super::{generate, GeneratedCode, NetSource};
+use crate::deploy::{self, NetShape};
+use crate::fann::activation::Activation;
+use crate::fann::{from_float_packed, FixedNetwork, Network};
+use crate::kernels::layout::{PackedPanels, PackedWidth};
+use crate::targets::Target;
+
+/// One dense layer of an emitted artifact, parameters owned.
+#[derive(Debug, Clone)]
+pub struct EmittedLayer {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub activation: Activation,
+    pub weights: EmittedWeights,
+}
+
+/// The parameter payload of one emitted layer, in the representation
+/// the artifact was emitted at.
+#[derive(Debug, Clone)]
+pub enum EmittedWeights {
+    F32 {
+        /// Row-major `[n_out][n_in]`.
+        weights: Vec<f32>,
+        biases: Vec<f32>,
+        steepness: f32,
+    },
+    Q32 {
+        weights: Vec<i32>,
+        biases: Vec<i32>,
+    },
+    Packed {
+        panels: PackedPanels,
+        biases: Vec<i32>,
+    },
+}
+
+/// A self-contained emitted deployment: the plan plus the parameters,
+/// enough to execute without the source network.
+#[derive(Debug, Clone)]
+pub struct EmittedArtifact {
+    pub plan: DeployPlan,
+    pub layers: Vec<EmittedLayer>,
+}
+
+impl EmittedArtifact {
+    pub fn num_inputs(&self) -> usize {
+        self.layers[0].n_in
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.layers.last().unwrap().n_out
+    }
+}
+
+/// The full result of one emit: the C source bundle (including
+/// `deploy_plan.json`) and the executable artifact.
+#[derive(Debug, Clone)]
+pub struct EmitBundle {
+    pub code: GeneratedCode,
+    pub artifact: EmittedArtifact,
+}
+
+fn finish_code(
+    placement: &crate::deploy::DeploymentPlan,
+    source: NetSource,
+    plan: &DeployPlan,
+) -> GeneratedCode {
+    let mut code = generate(placement, source);
+    code.files
+        .push(("deploy_plan.json".to_string(), plan.to_json().to_pretty()));
+    code
+}
+
+/// Emit a float-trained network for `target` at representation `repr`.
+/// Quantization (q32) and lossless packing (q7/q15, decimal point chosen
+/// by [`crate::fann::packable_decimal_point`]) happen here;
+/// `max_abs_input` bounds the deployed inputs for the overflow analysis
+/// (1.0 for normalized data). Returns a structured error when the
+/// target/representation combination is unsupported (float on an
+/// FPU-less core), the network does not fit, or the weights cannot be
+/// packed losslessly.
+pub fn emit_float(
+    net: &Network,
+    target: Target,
+    repr: NetRepr,
+    max_abs_input: f32,
+) -> Result<EmitBundle> {
+    let shape = NetShape::from(net);
+    let placement = deploy::plan(&shape, target, repr.dtype())?;
+    let acts: Vec<Activation> = net.layers.iter().map(|l| l.activation).collect();
+
+    match repr {
+        NetRepr::F32 => {
+            let bytes: Vec<usize> = net
+                .layers
+                .iter()
+                .map(|l| (l.weights.len() + l.biases.len()) * 4)
+                .collect();
+            let plan = build_deploy_plan(&placement, repr, None, &acts, &bytes)?;
+            let code = finish_code(&placement, NetSource::Float(net), &plan);
+            let layers = net
+                .layers
+                .iter()
+                .map(|l| EmittedLayer {
+                    n_in: l.n_in,
+                    n_out: l.n_out,
+                    activation: l.activation,
+                    weights: EmittedWeights::F32 {
+                        weights: l.weights.clone(),
+                        biases: l.biases.clone(),
+                        steepness: l.steepness,
+                    },
+                })
+                .collect();
+            Ok(EmitBundle {
+                code,
+                artifact: EmittedArtifact { plan, layers },
+            })
+        }
+        NetRepr::Q32 => {
+            let fixed = FixedNetwork::from_float(net, max_abs_input)?;
+            emit_fixed(&fixed, target)
+        }
+        NetRepr::Q7 | NetRepr::Q15 => {
+            let width = if repr == NetRepr::Q7 {
+                PackedWidth::Q7
+            } else {
+                PackedWidth::Q15
+            };
+            let (_fixed, packed) = from_float_packed(net, max_abs_input, width)?;
+            let bytes: Vec<usize> = packed
+                .layers
+                .iter()
+                .map(|l| l.panels.weight_bytes() + l.biases.len() * 4)
+                .collect();
+            let plan = build_deploy_plan(
+                &placement,
+                repr,
+                Some(packed.decimal_point),
+                &acts,
+                &bytes,
+            )?;
+            let code = finish_code(&placement, NetSource::Packed(&packed), &plan);
+            let layers = packed
+                .layers
+                .iter()
+                .map(|l| EmittedLayer {
+                    n_in: l.panels.n_in,
+                    n_out: l.panels.n_out,
+                    activation: l.activation,
+                    weights: EmittedWeights::Packed {
+                        panels: l.panels.clone(),
+                        biases: l.biases.clone(),
+                    },
+                })
+                .collect();
+            Ok(EmitBundle {
+                code,
+                artifact: EmittedArtifact { plan, layers },
+            })
+        }
+    }
+}
+
+/// Emit an already-quantized network (q32) for `target` — the path a
+/// `*_fixed.net` file takes through `deploy emit`.
+pub fn emit_fixed(fixed: &FixedNetwork, target: Target) -> Result<EmitBundle> {
+    let shape = NetShape::from(fixed);
+    let placement = deploy::plan(&shape, target, NetRepr::Q32.dtype())?;
+    let acts: Vec<Activation> = fixed.layers.iter().map(|l| l.activation).collect();
+    let bytes: Vec<usize> = fixed
+        .layers
+        .iter()
+        .map(|l| (l.weights.len() + l.biases.len()) * 4)
+        .collect();
+    let plan = build_deploy_plan(
+        &placement,
+        NetRepr::Q32,
+        Some(fixed.decimal_point),
+        &acts,
+        &bytes,
+    )?;
+    let code = finish_code(&placement, NetSource::Fixed(fixed), &plan);
+    let layers = fixed
+        .layers
+        .iter()
+        .map(|l| EmittedLayer {
+            n_in: l.n_in,
+            n_out: l.n_out,
+            activation: l.activation,
+            weights: EmittedWeights::Q32 {
+                weights: l.weights.clone(),
+                biases: l.biases.clone(),
+            },
+        })
+        .collect();
+    Ok(EmitBundle {
+        code,
+        artifact: EmittedArtifact { plan, layers },
+    })
+}
+
+/// Emit with a representation chosen for the target: f32 on FPU cores,
+/// q32 otherwise (the paper's float-vs-fixed deployment split).
+pub fn emit_auto(net: &Network, target: Target, max_abs_input: f32) -> Result<EmitBundle> {
+    let repr = if target.supports_float() {
+        NetRepr::F32
+    } else {
+        NetRepr::Q32
+    };
+    emit_float(net, target, repr, max_abs_input)
+}
+
+/// Sanity guard shared by the CLI: packed representations are only
+/// meaningful when emitted from a float network (the packer picks the
+/// decimal point); a fixed `.net` file deploys as q32.
+pub fn repr_for_fixed_source(repr: NetRepr) -> Result<NetRepr> {
+    match repr {
+        NetRepr::Q32 => Ok(repr),
+        other => bail!(
+            "a fixed .net source deploys as q32; re-emit from the float .net for {}",
+            other.label()
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::targets::Chip;
+    use crate::util::rng::Rng;
+
+    fn small_net(sizes: &[usize]) -> Network {
+        let mut rng = Rng::new(11);
+        let mut net = Network::new(sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, None);
+        net
+    }
+
+    #[test]
+    fn emit_f32_bundle_contains_plan_json() {
+        let net = small_net(&[5, 7, 3]);
+        let b = emit_float(&net, Target::CortexM4(Chip::Stm32l475vg), NetRepr::F32, 1.0).unwrap();
+        let plan_json = b.code.file("deploy_plan.json").unwrap();
+        assert!(plan_json.contains("\"schema\": \"fann-on-mcu/deploy-plan/v1\""));
+        assert!(plan_json.contains("\"target\": \"cortex-m4f\""));
+        assert_eq!(b.artifact.num_inputs(), 5);
+        assert_eq!(b.artifact.num_outputs(), 3);
+        assert!(matches!(
+            b.artifact.layers[0].weights,
+            EmittedWeights::F32 { .. }
+        ));
+    }
+
+    #[test]
+    fn emitted_params_match_net_header_values() {
+        // The artifact must carry exactly what fann_net.h prints.
+        let net = small_net(&[3, 4, 2]);
+        let b = emit_float(&net, Target::WolfFc, NetRepr::Q32, 1.0).unwrap();
+        let header = b.code.file("fann_net.h").unwrap();
+        match &b.artifact.layers[0].weights {
+            EmittedWeights::Q32 { weights, .. } => {
+                let first = format!("fann_weights_0[{}]", weights.len());
+                assert!(header.contains(&first));
+                assert!(header.contains(&weights[0].to_string()));
+            }
+            other => panic!("expected Q32 weights, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn emit_packed_records_decimal_point_and_width() {
+        let net = small_net(&[6, 8, 3]);
+        for repr in [NetRepr::Q7, NetRepr::Q15] {
+            let b = emit_float(&net, Target::WolfCluster { cores: 8 }, repr, 1.0).unwrap();
+            assert_eq!(b.artifact.plan.repr, repr);
+            assert!(b.artifact.plan.decimal_point.is_some());
+            assert!(matches!(
+                b.artifact.layers[0].weights,
+                EmittedWeights::Packed { .. }
+            ));
+            assert!(b.code.file("fann_conf.h").unwrap().contains("FANN_PACKED_WEIGHT_BITS"));
+        }
+    }
+
+    #[test]
+    fn float_on_fpu_less_target_is_an_error() {
+        let net = small_net(&[4, 3, 2]);
+        assert!(emit_float(&net, Target::WolfFc, NetRepr::F32, 1.0).is_err());
+        // emit_auto falls back to q32 there.
+        let b = emit_auto(&net, Target::WolfFc, 1.0).unwrap();
+        assert_eq!(b.artifact.plan.repr, NetRepr::Q32);
+    }
+
+    #[test]
+    fn oversized_network_is_a_structured_error() {
+        let net = small_net(&[1024, 2048, 8]);
+        let err = emit_float(&net, Target::CortexM4(Chip::Nrf52832), NetRepr::F32, 1.0)
+            .unwrap_err();
+        assert!(err.to_string().contains("does not fit"));
+    }
+
+    #[test]
+    fn fixed_source_only_deploys_q32() {
+        assert!(repr_for_fixed_source(NetRepr::Q32).is_ok());
+        assert!(repr_for_fixed_source(NetRepr::Q7).is_err());
+    }
+}

@@ -9,10 +9,19 @@
 //! loop (Table I).
 
 pub mod arm;
+pub mod emit;
+pub mod plan;
 pub mod pulp;
 
+pub use emit::{
+    emit_auto, emit_fixed, emit_float, repr_for_fixed_source, EmitBundle, EmittedArtifact,
+    EmittedLayer, EmittedWeights,
+};
+pub use plan::{build_deploy_plan, DeployPlan, LayerDma, LayerPlan, NetRepr};
+
 use crate::deploy::{DeploymentPlan, DmaStrategy};
-use crate::fann::{FixedNetwork, Network};
+use crate::fann::{FixedNetwork, Network, PackedNetwork};
+use crate::kernels::layout::{PackedWidth, ROWS_PER_PANEL};
 use crate::targets::{DataType, Region, Target};
 
 /// A generated source bundle: `(file name, contents)` pairs.
@@ -34,10 +43,31 @@ impl GeneratedCode {
     }
 }
 
-/// The network parameters being emitted (float or fixed).
+/// The network parameters being emitted (float, wide fixed, or packed
+/// q7/q15 word-panel form).
 pub enum NetSource<'a> {
     Float(&'a Network),
     Fixed(&'a FixedNetwork),
+    Packed(&'a PackedNetwork),
+}
+
+impl NetSource<'_> {
+    /// Fixed-point decimal point of the emitted parameters, if any.
+    pub(crate) fn decimal_point(&self) -> Option<u32> {
+        match self {
+            NetSource::Float(_) => None,
+            NetSource::Fixed(n) => Some(n.decimal_point),
+            NetSource::Packed(p) => Some(p.decimal_point),
+        }
+    }
+
+    /// Packed storage width when the source is word-packed.
+    pub(crate) fn packed_width(&self) -> Option<PackedWidth> {
+        match self {
+            NetSource::Packed(p) => Some(p.width),
+            _ => None,
+        }
+    }
 }
 
 /// Generate the deployment bundle for a plan. Dispatches to the ARM or
@@ -83,6 +113,18 @@ pub(crate) fn emit_array_i32(name: &str, vals: &[i32], section: &str) -> String 
     )
 }
 
+pub(crate) fn emit_array_u32_hex(name: &str, vals: &[u32], section: &str) -> String {
+    let body = vals
+        .iter()
+        .map(|v| format!("0x{v:08x}u"))
+        .collect::<Vec<_>>()
+        .join(", ");
+    format!(
+        "static const uint32_t {name}[{}] {section} = {{{body}}};\n",
+        vals.len()
+    )
+}
+
 /// The linker-section attribute placing parameters per the plan.
 pub(crate) fn section_attr(plan: &DeploymentPlan) -> &'static str {
     match plan.region {
@@ -98,6 +140,16 @@ pub(crate) fn section_attr(plan: &DeploymentPlan) -> &'static str {
 /// Config header shared by both backends: network dimensions, placement,
 /// DMA strategy — everything the runtime loop needs at compile time.
 pub(crate) fn emit_conf_header(plan: &DeploymentPlan, dec: Option<u32>) -> String {
+    emit_conf_header_with(plan, dec, None)
+}
+
+/// [`emit_conf_header`] plus the packed-width defines when the emitted
+/// parameters are q7/q15 word panels.
+pub(crate) fn emit_conf_header_with(
+    plan: &DeploymentPlan,
+    dec: Option<u32>,
+    packed: Option<PackedWidth>,
+) -> String {
     let sizes = &plan.shape.sizes;
     let mut s = String::new();
     s.push_str("/* Auto-generated by fann-on-mcu. Do not edit. */\n");
@@ -128,6 +180,16 @@ pub(crate) fn emit_conf_header(plan: &DeploymentPlan, dec: Option<u32>) -> Strin
         s.push_str(&format!("#define FANN_FIXED_DECIMAL_POINT {dec}\n"));
         s.push_str(&format!("#define FANN_FIXED_ONE (1 << {dec})\n"));
     }
+    if let Some(width) = packed {
+        let bits = match width {
+            PackedWidth::Q7 => 8,
+            PackedWidth::Q15 => 16,
+        };
+        s.push_str(&format!("#define FANN_PACKED_WEIGHT_BITS {bits}\n"));
+        s.push_str(&format!(
+            "#define FANN_PACKED_ROWS_PER_PANEL {ROWS_PER_PANEL}\n"
+        ));
+    }
     s.push_str(&format!(
         "#define FANN_PLACEMENT_REGION \"{}\"\n",
         plan.region.name()
@@ -143,6 +205,71 @@ pub(crate) fn emit_conf_header(plan: &DeploymentPlan, dec: Option<u32>) -> Strin
     ));
     s.push_str("\n#endif /* FANN_CONF_H */\n");
     s
+}
+
+/// The packed `fann_run()`, shared by both backends: walks the 4-row
+/// panel layout of `fann_net.h` directly — row `o`'s word `c` sits at
+/// `panel_base + c · FANN_PACKED_ROWS_PER_PANEL + (o % ROWS_PER_PANEL)`
+/// (see [`crate::kernels::layout`]), so the dot helper takes the word
+/// stride instead of assuming contiguous rows. `parallel` adds the
+/// cluster stripe/fork note.
+pub(crate) fn emit_packed_run(parallel: bool) -> String {
+    let stripe = if parallel {
+        concat!(
+            "        /* cluster build: fork this row loop across FANN_NUM_CORES\n",
+            "         * (o = rt_core_id() + k * FANN_NUM_CORES stripes) and meet at\n",
+            "         * an rt_team_barrier() before the buffer swap; the fork\n",
+            "         * skeleton of the float fann_layer_worker applies unchanged. */\n"
+        )
+    } else {
+        ""
+    };
+    format!(
+        r#"/* Auto-generated by fann-on-mcu. Packed fann_run(): output rows are
+ * grouped in panels of FANN_PACKED_ROWS_PER_PANEL; within a panel, row
+ * r's word c sits at panel_base + c * FANN_PACKED_ROWS_PER_PANEL + r
+ * (the forward word stream described in fann_net.h), so the dot helper
+ * takes a word stride rather than assuming contiguous rows.
+ */
+#include <stdint.h>
+#include "fann_conf.h"
+#include "fann_net.h"
+
+#define FANN_PACKED_LANES (32 / FANN_PACKED_WEIGHT_BITS)
+
+int32_t fann_activation(int32_t x, int layer); /* step-linear tables */
+/* Bias is seeded into the i64 accumulator and the sum saturates ONCE at
+ * the end — the host PackedQ7/PackedQ15 kernels' exact semantics. */
+int32_t fann_dot_packed(const uint32_t *words, uint32_t word_stride,
+                        const int32_t *x, uint32_t n, int32_t bias);
+const uint32_t *fann_layer_words(uint32_t l);
+const int32_t *fann_layer_biases(uint32_t l);
+
+static int32_t fann_buf_a[FANN_MAX_LAYER_WIDTH];
+static int32_t fann_buf_b[FANN_MAX_LAYER_WIDTH];
+
+const int32_t *fann_run(const int32_t *input) {{
+    static const uint32_t sizes[FANN_NUM_LAYERS] = FANN_LAYER_SIZES;
+    const int32_t *cur = input;
+    int32_t *next = fann_buf_a;
+    for (uint32_t l = 0; l + 1 < FANN_NUM_LAYERS; ++l) {{
+        const uint32_t *words = fann_layer_words(l);
+        const int32_t *b = fann_layer_biases(l);
+        uint32_t wpr = (sizes[l] + FANN_PACKED_LANES - 1) / FANN_PACKED_LANES;
+{stripe}        for (uint32_t o = 0; o < sizes[l + 1]; ++o) {{
+            const uint32_t *panel = &words[(o / FANN_PACKED_ROWS_PER_PANEL)
+                                           * wpr * FANN_PACKED_ROWS_PER_PANEL];
+            int32_t acc = fann_dot_packed(&panel[o % FANN_PACKED_ROWS_PER_PANEL],
+                                          FANN_PACKED_ROWS_PER_PANEL, cur, sizes[l], b[o]);
+            next[o] = fann_activation(acc, l);
+        }}
+        cur = next;
+        next = (next == fann_buf_a) ? fann_buf_b : fann_buf_a;
+    }}
+    return cur;
+}}
+"#
+    )
 }
 
 /// Emit the per-layer parameter arrays (weights row-major per neuron —
@@ -176,6 +303,27 @@ pub(crate) fn emit_net_header(plan: &DeploymentPlan, net: &NetSource) -> String 
                     l.n_out,
                     l.activation.name(),
                     n.decimal_point
+                ));
+            }
+        }
+        NetSource::Packed(p) => {
+            for (i, l) in p.layers.iter().enumerate() {
+                s.push_str(&emit_array_u32_hex(
+                    &format!("fann_weights_{i}"),
+                    &l.panels.words,
+                    attr,
+                ));
+                s.push_str(&emit_array_i32(&format!("fann_biases_{i}"), &l.biases, attr));
+                s.push_str(&format!(
+                    "/* layer {i}: {}x{} act={} ({} word-packed, {} panels of {} rows, {} words/row, Q{}) */\n",
+                    l.panels.n_in,
+                    l.panels.n_out,
+                    l.activation.name(),
+                    l.panels.width.label(),
+                    l.panels.panels(),
+                    ROWS_PER_PANEL,
+                    l.panels.words_per_row,
+                    p.decimal_point
                 ));
             }
         }

@@ -1,0 +1,503 @@
+//! The machine-readable deployment plan emitted next to the generated C
+//! sources — the contract between the generator, the emulator and CI.
+//!
+//! [`crate::deploy::placement`] decides *where* the network lives (the
+//! Sec. IV-B policy); this module expands that placement into a
+//! [`DeployPlan`]: one [`LayerPlan`] per dense layer with its parameter
+//! bytes in the emitted representation, the region its parameters rest
+//! in, the region the inner loop reads them from, the per-layer DMA
+//! double-buffer schedule ([`LayerDma`], from the [`crate::targets::dma`]
+//! model) and a per-layer cycle estimate; plus whole-network
+//! cycle/time/energy estimates from [`crate::simulator::target_cost`]
+//! (Table I ISA costs × [`crate::targets::power`]). `to_json()` renders
+//! the plan as the `deploy_plan.json` artifact file.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::deploy::{self, DeploymentPlan, DmaStrategy};
+use crate::fann::activation::Activation;
+use crate::simulator::{self, cost, CostOptions, TargetCost};
+use crate::targets::{Core, DataType, Region, Target};
+use crate::util::json::Json;
+
+/// Numeric representation of the emitted network parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetRepr {
+    /// IEEE f32 (FPU targets only).
+    F32,
+    /// Wide Q(dec) i32 fixed point.
+    Q32,
+    /// 4×i8-per-word packed fixed point (panel layout).
+    Q7,
+    /// 2×i16-per-word packed fixed point (panel layout).
+    Q15,
+}
+
+impl NetRepr {
+    pub fn label(self) -> &'static str {
+        match self {
+            NetRepr::F32 => "f32",
+            NetRepr::Q32 => "q32",
+            NetRepr::Q7 => "q7",
+            NetRepr::Q15 => "q15",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" | "float" => NetRepr::F32,
+            "q32" | "fixed" => NetRepr::Q32,
+            "q7" => NetRepr::Q7,
+            "q15" => NetRepr::Q15,
+            other => bail!("unknown representation {other:?} (known: f32, q32, q7, q15)"),
+        })
+    }
+
+    /// The planner dtype this representation deploys as. Packed widths
+    /// plan as `Fixed`: the Eq. (2) estimate stays the paper's 4-byte
+    /// words (conservative), while the per-layer [`LayerPlan`] records
+    /// the actual packed bytes.
+    pub fn dtype(self) -> DataType {
+        match self {
+            NetRepr::F32 => DataType::Float32,
+            _ => DataType::Fixed,
+        }
+    }
+
+    /// MAC operands per inner-loop multiply on `core` for this
+    /// representation: the SIMD rungs of Fig. 3 (`pv.sdotsp` packs 4
+    /// int8 / 2 int16 MACs on RI5CY; `SMLAD` dual-MACs 16-bit pairs on
+    /// the M4/M7, with `SXTB16` making the q7 path dual too). Cores
+    /// without packed-SIMD support (M0, IBEX) stay at 1.
+    pub fn simd_lanes(self, core: Core) -> u8 {
+        match (self, core) {
+            (NetRepr::Q7, Core::Riscy) => 4,
+            (NetRepr::Q15, Core::Riscy) => 2,
+            (NetRepr::Q7 | NetRepr::Q15, Core::CortexM4 | Core::CortexM7) => 2,
+            _ => 1,
+        }
+    }
+
+    /// Cost-model options for this representation on `target`.
+    pub fn cost_options(self, target: Target) -> CostOptions {
+        CostOptions {
+            simd_lanes: self.simd_lanes(target.core()),
+            ..CostOptions::default()
+        }
+    }
+}
+
+/// Per-layer DMA double-buffer schedule entry (cluster targets whose
+/// network is shared-L2-resident).
+#[derive(Debug, Clone)]
+pub struct LayerDma {
+    pub granularity: DmaStrategy,
+    /// Transfers programmed for this layer (1 for layer-wise, one per
+    /// output neuron for neuron-wise).
+    pub chunks: usize,
+    /// Payload bytes of one transfer in the emitted representation.
+    pub chunk_bytes: usize,
+    /// L1 ping-pong staging footprint the schedule reserves (2 × chunk
+    /// for neuron-wise; 2 × the largest layer for the shared layer-wise
+    /// double buffer).
+    pub buffer_bytes: usize,
+    /// Modeled DMA cycles of this layer (cold start + overlapped
+    /// steady-state chunks, from [`crate::targets::dma::WOLF_DMA`]).
+    pub est_cycles: f64,
+}
+
+/// One dense layer of the deployment plan.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub index: usize,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub activation: Activation,
+    /// Parameter bytes (weights + biases) in the emitted representation.
+    pub param_bytes: usize,
+    /// Where the parameters live at rest.
+    pub param_region: Region,
+    /// Where the inner loop reads them from (L1 when DMA-staged).
+    pub compute_region: Region,
+    pub dma: Option<LayerDma>,
+    /// Modeled cycles of this layer (compute + overheads + DMA).
+    pub est_cycles: f64,
+}
+
+/// The machine-readable deployment plan: everything `deploy_plan.json`
+/// records and everything the emulator needs to walk the schedule.
+#[derive(Debug, Clone)]
+pub struct DeployPlan {
+    pub target: Target,
+    pub repr: NetRepr,
+    pub decimal_point: Option<u32>,
+    pub region: Region,
+    pub dma: Option<DmaStrategy>,
+    /// Eq. (2) estimate in bytes (4-byte words, the paper's form).
+    pub est_memory_bytes: usize,
+    pub sizes: Vec<usize>,
+    pub layers: Vec<LayerPlan>,
+    /// Whole-network cycle/time/energy estimate (SIMD-aware for packed
+    /// representations).
+    pub cost: TargetCost,
+    /// The raw Sec. IV-B placement this plan expands.
+    pub placement: DeploymentPlan,
+}
+
+impl DeployPlan {
+    /// Total parameter bytes in the emitted representation.
+    pub fn param_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.param_bytes).sum()
+    }
+
+    /// Resident L1 bytes of the activation ping-pong buffers
+    /// (`2 × widest layer` words — Eq. (2)'s data-buffer term).
+    pub fn activation_buffer_bytes(&self) -> usize {
+        2 * self.sizes.iter().copied().max().unwrap_or(0) * 4
+    }
+
+    /// Peak L1 staging footprint of the DMA schedule (0 without DMA).
+    pub fn staging_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .filter_map(|l| l.dma.as_ref().map(|d| d.buffer_bytes))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Expand a Sec. IV-B placement into the full per-layer plan.
+///
+/// * `repr` / `decimal_point` — the emitted representation;
+/// * `acts[l]` — activation of dense layer `l`;
+/// * `layer_param_bytes[l]` — that layer's weight+bias bytes **in the
+///   emitted representation** (packed widths are smaller than the
+///   4-byte words the Eq. (2) estimate assumes).
+///
+/// Returns a structured error (never panics) when the network does not
+/// fit the target or when the schedule would oversubscribe the cluster
+/// L1 budget — the satellite contract `rust/tests/prop_placement.rs`
+/// pins.
+pub fn build_deploy_plan(
+    placement: &DeploymentPlan,
+    repr: NetRepr,
+    decimal_point: Option<u32>,
+    acts: &[Activation],
+    layer_param_bytes: &[usize],
+) -> Result<DeployPlan> {
+    let sizes = placement.shape.sizes.clone();
+    ensure!(
+        acts.len() == sizes.len() - 1 && layer_param_bytes.len() == sizes.len() - 1,
+        "plan shape ({} dense layers) does not match activations ({}) / byte table ({})",
+        sizes.len() - 1,
+        acts.len(),
+        layer_param_bytes.len()
+    );
+    if !placement.fits() {
+        bail!(
+            "network does not fit {}: Eq. (2) estimates {} bytes and no placement policy \
+             (resident / flash-or-L2 / DMA-streamed) accepts it",
+            placement.target.label(),
+            placement.est_memory_bytes
+        );
+    }
+
+    let opts = repr.cost_options(placement.target);
+    let max_layer_bytes = layer_param_bytes.iter().copied().max().unwrap_or(0);
+
+    let mut layers = Vec::with_capacity(sizes.len() - 1);
+    let mut prev_compute = 0.0;
+    for (i, w) in sizes.windows(2).enumerate() {
+        let b = cost::layer_cycles(placement, w[0], w[1], acts[i], prev_compute, i == 0, opts);
+        prev_compute = b.compute;
+        let dma = placement.dma.map(|granularity| {
+            let (chunks, chunk_bytes, buffer_bytes) = match granularity {
+                DmaStrategy::LayerWise => {
+                    (1, layer_param_bytes[i], 2 * max_layer_bytes)
+                }
+                DmaStrategy::NeuronWise => {
+                    // One transfer per output neuron; the payload is the
+                    // neuron's share of the layer's emitted bytes (its
+                    // weight row plus its bias).
+                    let per_row = layer_param_bytes[i].div_ceil(w[1]);
+                    (w[1], per_row, 2 * per_row)
+                }
+            };
+            LayerDma {
+                granularity,
+                chunks,
+                chunk_bytes,
+                buffer_bytes,
+                est_cycles: b.dma,
+            }
+        });
+        layers.push(LayerPlan {
+            index: i,
+            n_in: w[0],
+            n_out: w[1],
+            activation: acts[i],
+            param_bytes: layer_param_bytes[i],
+            param_region: placement.region,
+            compute_region: if dma.is_some() {
+                Region::L1
+            } else {
+                placement.region
+            },
+            dma,
+            est_cycles: b.total(),
+        });
+    }
+
+    let cost = simulator::target_cost(placement, acts, opts);
+    let plan = DeployPlan {
+        target: placement.target,
+        repr,
+        decimal_point,
+        region: placement.region,
+        dma: placement.dma,
+        est_memory_bytes: placement.est_memory_bytes,
+        sizes,
+        layers,
+        cost,
+        placement: placement.clone(),
+    };
+
+    // Cluster L1 budget checks the placement policy's Eq. (2) screen
+    // cannot see: the DMA staging buffers must coexist with the
+    // activation ping-pong buffers in L1.
+    if matches!(plan.target, Target::WolfCluster { .. }) {
+        let budget = deploy::cluster_l1_budget();
+        let resident = match plan.region {
+            Region::L1 => plan.param_bytes(),
+            _ => plan.staging_bytes(),
+        };
+        let need = resident + plan.activation_buffer_bytes();
+        ensure!(
+            need <= budget,
+            "DMA/resident schedule oversubscribes cluster L1: {} bytes of parameters/staging \
+             + {} bytes of activation buffers > {} byte budget",
+            resident,
+            plan.activation_buffer_bytes(),
+            budget
+        );
+    }
+
+    Ok(plan)
+}
+
+fn region_json(r: Region) -> Json {
+    Json::Str(r.name().to_string())
+}
+
+fn dma_strategy_name(d: DmaStrategy) -> &'static str {
+    match d {
+        DmaStrategy::LayerWise => "layer-wise",
+        DmaStrategy::NeuronWise => "neuron-wise",
+    }
+}
+
+impl DeployPlan {
+    /// Render the plan as the `deploy_plan.json` artifact (insertion-
+    /// ordered keys, deterministic float formatting — see
+    /// [`crate::util::json`]).
+    pub fn to_json(&self) -> Json {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut o = Json::obj()
+                    .field("index", l.index)
+                    .field("n_in", l.n_in)
+                    .field("n_out", l.n_out)
+                    .field("activation", l.activation.name())
+                    .field("param_bytes", l.param_bytes)
+                    .field("param_region", region_json(l.param_region))
+                    .field("compute_region", region_json(l.compute_region))
+                    .field("est_cycles", l.est_cycles);
+                o = match &l.dma {
+                    Some(d) => o.field(
+                        "dma",
+                        Json::obj()
+                            .field("granularity", dma_strategy_name(d.granularity))
+                            .field("chunks", d.chunks)
+                            .field("chunk_bytes", d.chunk_bytes)
+                            .field("buffer_bytes", d.buffer_bytes)
+                            .field("est_cycles", d.est_cycles)
+                            .build(),
+                    ),
+                    None => o.field("dma", Json::Null),
+                };
+                o.build()
+            })
+            .collect::<Vec<_>>();
+
+        Json::obj()
+            .field("schema", "fann-on-mcu/deploy-plan/v1")
+            .field("target", self.target.slug())
+            .field("target_label", self.target.label())
+            .field("repr", self.repr.label())
+            .field(
+                "decimal_point",
+                match self.decimal_point {
+                    Some(d) => Json::Int(d as i64),
+                    None => Json::Null,
+                },
+            )
+            .field("region", region_json(self.region))
+            .field(
+                "dma",
+                match self.dma {
+                    Some(d) => Json::Str(dma_strategy_name(d).to_string()),
+                    None => Json::Null,
+                },
+            )
+            .field("est_memory_bytes", self.est_memory_bytes)
+            .field("param_bytes", self.param_bytes())
+            .field(
+                "layer_sizes",
+                Json::Arr(self.sizes.iter().map(|&s| Json::Int(s as i64)).collect()),
+            )
+            .field("layers", Json::Arr(layers))
+            .field(
+                "estimate",
+                Json::obj()
+                    .field("cycles", self.cost.breakdown.total())
+                    .field("cycles_compute", self.cost.breakdown.compute)
+                    .field("cycles_dma", self.cost.breakdown.dma)
+                    .field("cycles_barrier", self.cost.breakdown.barrier)
+                    .field("cycles_overhead", self.cost.breakdown.overhead)
+                    .field("cycles_activation", self.cost.breakdown.activation)
+                    .field("seconds", self.cost.seconds)
+                    .field("active_mw", self.cost.active_mw)
+                    .field("energy_uj", self.cost.energy_uj)
+                    .field("utilization", self.cost.utilization)
+                    .field("e2e_seconds", self.cost.e2e_seconds)
+                    .field("e2e_energy_uj", self.cost.e2e_energy_uj)
+                    .build(),
+            )
+            .build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deploy::{plan, NetShape};
+    use crate::targets::Chip;
+
+    const ACTS: [Activation; 2] = [Activation::Tanh, Activation::Sigmoid];
+
+    fn wide_bytes(sizes: &[usize]) -> Vec<usize> {
+        sizes
+            .windows(2)
+            .map(|w| (w[0] * w[1] + w[1]) * 4)
+            .collect()
+    }
+
+    #[test]
+    fn resident_plan_has_no_dma_and_matches_cost_model() {
+        let shape = NetShape::new(&[7, 6, 5]);
+        let p = plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+        let d = build_deploy_plan(&p, NetRepr::F32, None, &ACTS, &wide_bytes(&shape.sizes))
+            .unwrap();
+        assert_eq!(d.region, Region::L1);
+        assert!(d.layers.iter().all(|l| l.dma.is_none()));
+        assert!(d.layers.iter().all(|l| l.compute_region == Region::L1));
+        let direct = simulator::target_cost(&p, &ACTS, CostOptions::default());
+        assert_eq!(d.cost.breakdown.total(), direct.breakdown.total());
+        // Per-layer estimates sum to the network total minus the input
+        // DMA-in term the whole-network model adds for cluster runs.
+        let layer_sum: f64 = d.layers.iter().map(|l| l.est_cycles).sum();
+        assert!(layer_sum <= direct.breakdown.total());
+    }
+
+    #[test]
+    fn layerwise_schedule_covers_every_layer() {
+        let shape = NetShape::new(&[50, 100, 60, 100, 60, 8]);
+        let acts = vec![Activation::Tanh; 4]
+            .into_iter()
+            .chain([Activation::Sigmoid])
+            .collect::<Vec<_>>();
+        let p = plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+        assert_eq!(p.dma, Some(DmaStrategy::LayerWise));
+        let d =
+            build_deploy_plan(&p, NetRepr::F32, None, &acts, &wide_bytes(&shape.sizes)).unwrap();
+        assert_eq!(d.layers.len(), 5);
+        for l in &d.layers {
+            let dma = l.dma.as_ref().expect("layer-wise schedule covers all layers");
+            assert_eq!(dma.chunks, 1);
+            assert_eq!(dma.chunk_bytes, l.param_bytes);
+            assert_eq!(l.compute_region, Region::L1);
+            assert_eq!(l.param_region, Region::SharedL2);
+        }
+        // Shared double buffer: 2x the largest layer.
+        let max_bytes = d.layers.iter().map(|l| l.param_bytes).max().unwrap();
+        assert!(d.layers.iter().all(|l| l.dma.as_ref().unwrap().buffer_bytes == 2 * max_bytes));
+        assert!(d.staging_bytes() + d.activation_buffer_bytes() <= deploy::cluster_l1_budget());
+    }
+
+    #[test]
+    fn neuronwise_schedule_has_one_chunk_per_neuron() {
+        let shape = NetShape::new(&[600, 40, 8]);
+        let acts = [Activation::Tanh, Activation::Sigmoid];
+        let p = plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+        assert_eq!(p.dma, Some(DmaStrategy::NeuronWise));
+        let d =
+            build_deploy_plan(&p, NetRepr::F32, None, &acts, &wide_bytes(&shape.sizes)).unwrap();
+        let l0 = d.layers[0].dma.as_ref().unwrap();
+        assert_eq!(l0.chunks, 40);
+        assert_eq!(l0.chunk_bytes, ((600 * 40 + 40) * 4usize).div_ceil(40));
+        assert_eq!(l0.buffer_bytes, 2 * l0.chunk_bytes);
+    }
+
+    #[test]
+    fn nofit_is_a_structured_error() {
+        let shape = NetShape::new(&[2048, 2048, 8]);
+        let p = plan(&shape, Target::CortexM4(Chip::Nrf52832), DataType::Float32).unwrap();
+        let err = build_deploy_plan(&p, NetRepr::F32, None, &ACTS, &wide_bytes(&shape.sizes))
+            .unwrap_err();
+        assert!(err.to_string().contains("does not fit"));
+    }
+
+    #[test]
+    fn packed_repr_uses_simd_lanes_in_estimate() {
+        let shape = NetShape::new(&[64, 64, 32]);
+        let acts = [Activation::Tanh, Activation::Sigmoid];
+        let p = plan(&shape, Target::WolfCluster { cores: 1 }, DataType::Fixed).unwrap();
+        let wide =
+            build_deploy_plan(&p, NetRepr::Q32, Some(12), &acts, &wide_bytes(&shape.sizes))
+                .unwrap();
+        // Packed bytes: q7 stores 4 weights per word.
+        let packed_bytes: Vec<usize> = shape
+            .sizes
+            .windows(2)
+            .map(|w| w[1].div_ceil(4) * 4 * w[0].div_ceil(4) * 4 + w[1] * 4)
+            .collect();
+        let q7 = build_deploy_plan(&p, NetRepr::Q7, Some(6), &acts, &packed_bytes).unwrap();
+        assert!(q7.cost.breakdown.compute < wide.cost.breakdown.compute);
+        assert!(q7.param_bytes() < wide.param_bytes());
+    }
+
+    #[test]
+    fn repr_parse_round_trips() {
+        for r in [NetRepr::F32, NetRepr::Q32, NetRepr::Q7, NetRepr::Q15] {
+            assert_eq!(NetRepr::parse(r.label()).unwrap(), r);
+        }
+        assert!(NetRepr::parse("bf16").is_err());
+    }
+
+    #[test]
+    fn plan_json_has_schema_and_layers() {
+        let shape = NetShape::new(&[5, 4, 3]);
+        let p = plan(&shape, Target::WolfFc, DataType::Fixed).unwrap();
+        let d = build_deploy_plan(&p, NetRepr::Q32, Some(13), &ACTS, &wide_bytes(&shape.sizes))
+            .unwrap();
+        let text = d.to_json().to_pretty();
+        assert!(text.contains("\"schema\": \"fann-on-mcu/deploy-plan/v1\""));
+        assert!(text.contains("\"target\": \"wolf-fc\""));
+        assert!(text.contains("\"repr\": \"q32\""));
+        assert!(text.contains("\"decimal_point\": 13"));
+        assert!(text.contains("\"layers\""));
+        assert!(text.contains("\"estimate\""));
+    }
+}

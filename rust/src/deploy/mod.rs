@@ -9,4 +9,7 @@ pub mod memory;
 pub mod placement;
 
 pub use memory::{estimate_memory, NetShape};
-pub use placement::{plan, DeploymentPlan, DmaStrategy};
+pub use placement::{
+    cluster_l1_budget, place_cluster_with, place_cortex_with, place_fc_with, plan, DeploymentPlan,
+    DmaStrategy,
+};

@@ -44,8 +44,10 @@ impl DeploymentPlan {
 }
 
 /// L1 bytes available for network data on the cluster; the balance is
-/// reserved for stacks + activation buffers of the eight cores.
-fn l1_budget() -> usize {
+/// reserved for stacks + activation buffers of the eight cores. Public
+/// because the detailed-plan builder ([`crate::codegen::plan`]) and the
+/// emulator enforce the same budget on their schedules.
+pub fn cluster_l1_budget() -> usize {
     memspec::WOLF_MEMORY.l1 - 8 * 1024
 }
 
@@ -85,14 +87,28 @@ fn place_cortex_m(
     est: usize,
 ) -> (Region, Option<DmaStrategy>) {
     let mem = chip.memory();
-    if est <= mem.ram {
+    place_cortex_with(shape, dtype, est, mem.ram, mem.flash)
+}
+
+/// The Cortex-M placement policy against explicit budgets (RAM-resident,
+/// else constants in flash with runtime buffers in RAM, else no-fit).
+/// Budget-parameterized so `rust/tests/prop_placement.rs` can sweep
+/// random memory geometries, not just the three modeled chips.
+pub fn place_cortex_with(
+    shape: &NetShape,
+    dtype: DataType,
+    est: usize,
+    ram: usize,
+    flash: usize,
+) -> (Region, Option<DmaStrategy>) {
+    if est <= ram {
         (Region::Ram, None)
     } else {
         // Parameters go to flash; the RAM must still hold the runtime
         // buffers + bookkeeping (Eq. 2 minus the weights).
         let params = shape.param_bytes(dtype);
         let runtime = est - shape.num_weights() * dtype_size(dtype);
-        if params <= mem.flash && runtime <= mem.ram {
+        if params <= flash && runtime <= ram {
             (Region::Flash, None)
         } else {
             (Region::NoFit, None)
@@ -102,9 +118,19 @@ fn place_cortex_m(
 
 fn place_wolf_fc(est: usize) -> (Region, Option<DmaStrategy>) {
     let mem = memspec::WOLF_MEMORY;
-    if est <= mem.private_l2 {
+    place_fc_with(est, mem.private_l2, mem.shared_l2)
+}
+
+/// The FC placement policy against explicit budgets (private L2, else
+/// shared L2, else no-fit).
+pub fn place_fc_with(
+    est: usize,
+    private_l2: usize,
+    shared_l2: usize,
+) -> (Region, Option<DmaStrategy>) {
+    if est <= private_l2 {
         (Region::PrivateL2, None)
-    } else if est <= mem.shared_l2 {
+    } else if est <= shared_l2 {
         (Region::SharedL2, None)
     } else {
         (Region::NoFit, None)
@@ -112,23 +138,41 @@ fn place_wolf_fc(est: usize) -> (Region, Option<DmaStrategy>) {
 }
 
 fn place_wolf_cluster(shape: &NetShape, dtype: DataType, est: usize) -> (Region, Option<DmaStrategy>) {
-    let mem = memspec::WOLF_MEMORY;
-    let budget = l1_budget();
-    if est <= budget {
+    place_cluster_with(
+        shape,
+        dtype,
+        est,
+        cluster_l1_budget(),
+        memspec::WOLF_MEMORY.shared_l2,
+    )
+}
+
+/// The cluster placement policy against explicit budgets: L1-resident,
+/// else shared-L2-resident with layer-wise double buffering while the
+/// largest layer pair fits `l1_budget`, else neuron-wise while two
+/// weight rows fit, else no-fit.
+pub fn place_cluster_with(
+    shape: &NetShape,
+    dtype: DataType,
+    est: usize,
+    l1_budget: usize,
+    shared_l2: usize,
+) -> (Region, Option<DmaStrategy>) {
+    if est <= l1_budget {
         return (Region::L1, None);
     }
     // L2-resident, streamed. The network itself must fit shared L2.
-    if shape.param_bytes(dtype) > mem.shared_l2 {
+    if shape.param_bytes(dtype) > shared_l2 {
         return (Region::NoFit, None);
     }
     // Layer-wise double buffering: current + next layer resident.
     let largest_layer = shape.max_layer_param_bytes(dtype);
-    if 2 * largest_layer <= budget {
+    if 2 * largest_layer <= l1_budget {
         return (Region::SharedL2, Some(DmaStrategy::LayerWise));
     }
     // Neuron-wise double buffering: two weight rows resident.
     let row = shape.max_neuron_row_bytes(dtype);
-    if 2 * row <= budget {
+    if 2 * row <= l1_budget {
         return (Region::SharedL2, Some(DmaStrategy::NeuronWise));
     }
     (Region::NoFit, None)

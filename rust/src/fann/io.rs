@@ -90,7 +90,36 @@ where
         .collect()
 }
 
-/// Parse a float `.net` file.
+/// Largest decimal point a fixed `.net` file may declare: beyond this
+/// the Q-format shift itself is meaningless for i32 parameters (and
+/// downstream `1 << dec` arithmetic would overflow).
+const MAX_DECIMAL_POINT: u32 = 30;
+
+fn validate_shape(num_layers: usize, sizes: &[usize]) -> Result<()> {
+    ensure!(
+        num_layers >= 2,
+        "num_layers {num_layers} invalid: need at least input and output layers"
+    );
+    ensure!(sizes.len() == num_layers, "layer_sizes length mismatch");
+    ensure!(
+        sizes.iter().all(|&s| s > 0),
+        "zero-width layer in layer_sizes"
+    );
+    Ok(())
+}
+
+fn ensure_finite(vals: &[f32], what: &str, layer: usize) -> Result<()> {
+    ensure!(
+        vals.iter().all(|v| v.is_finite()),
+        "non-finite {what} in layer {layer} (NaN/inf cannot be deployed)"
+    );
+    Ok(())
+}
+
+/// Parse a float `.net` file. Malformed inputs — truncation, NaN/inf
+/// parameters, inconsistent layer counts, zero-width layers — are
+/// structured errors, never panics (`rust/tests/prop_io_roundtrip.rs`
+/// fuzzes this).
 pub fn load_float(text: &str) -> Result<Network> {
     let mut lines = text.lines();
     let magic = lines.next().context("empty file")?;
@@ -100,7 +129,7 @@ pub fn load_float(text: &str) -> Result<Network> {
     let mut r = KvReader { lines };
     let num_layers: usize = r.expect("num_layers")?.parse()?;
     let sizes: Vec<usize> = parse_vec(r.expect("layer_sizes")?)?;
-    ensure!(sizes.len() == num_layers, "layer_sizes length mismatch");
+    validate_shape(num_layers, &sizes)?;
     let acts: Vec<Activation> = r
         .expect("activations")?
         .split_whitespace()
@@ -109,13 +138,21 @@ pub fn load_float(text: &str) -> Result<Network> {
     ensure!(acts.len() == num_layers - 1, "activations length mismatch");
     let steep: Vec<f32> = parse_vec(r.expect("steepness")?)?;
     ensure!(steep.len() == num_layers - 1, "steepness length mismatch");
+    ensure_finite(&steep, "steepness", 0)?;
 
     let mut layers = Vec::with_capacity(num_layers - 1);
     for (i, w) in sizes.windows(2).enumerate() {
         let weights: Vec<f32> = parse_vec(r.expect("weights")?)?;
         let biases: Vec<f32> = parse_vec(r.expect("biases")?)?;
-        ensure!(weights.len() == w[0] * w[1], "weights size mismatch layer {i}");
+        // checked_mul: adversarially huge layer_sizes must error, not
+        // overflow-panic in debug builds.
+        let n_weights = w[0]
+            .checked_mul(w[1])
+            .with_context(|| format!("layer {i} size product overflows"))?;
+        ensure!(weights.len() == n_weights, "weights size mismatch layer {i}");
         ensure!(biases.len() == w[1], "biases size mismatch layer {i}");
+        ensure_finite(&weights, "weights", i)?;
+        ensure_finite(&biases, "biases", i)?;
         layers.push(Layer {
             n_in: w[0],
             n_out: w[1],
@@ -128,7 +165,11 @@ pub fn load_float(text: &str) -> Result<Network> {
     Ok(Network { layers })
 }
 
-/// Parse a fixed `.net` file.
+/// Parse a fixed `.net` file. Malformed inputs are structured errors,
+/// never panics. (Seed bug fixed here: a file whose `activations` line
+/// listed fewer entries than `num_layers - 1` used to index out of
+/// bounds and panic instead of erroring; the decimal point was also
+/// accepted unbounded.)
 pub fn load_fixed(text: &str) -> Result<FixedNetwork> {
     let mut lines = text.lines();
     let magic = lines.next().context("empty file")?;
@@ -137,20 +178,28 @@ pub fn load_fixed(text: &str) -> Result<FixedNetwork> {
     }
     let mut r = KvReader { lines };
     let decimal_point: u32 = r.expect("decimal_point")?.parse()?;
+    ensure!(
+        decimal_point <= MAX_DECIMAL_POINT,
+        "decimal_point {decimal_point} out of range (max {MAX_DECIMAL_POINT})"
+    );
     let num_layers: usize = r.expect("num_layers")?.parse()?;
     let sizes: Vec<usize> = parse_vec(r.expect("layer_sizes")?)?;
-    ensure!(sizes.len() == num_layers, "layer_sizes length mismatch");
+    validate_shape(num_layers, &sizes)?;
     let acts: Vec<Activation> = r
         .expect("activations")?
         .split_whitespace()
         .map(Activation::parse)
         .collect::<Result<_>>()?;
+    ensure!(acts.len() == num_layers - 1, "activations length mismatch");
 
     let mut layers = Vec::with_capacity(num_layers - 1);
     for (i, w) in sizes.windows(2).enumerate() {
         let weights: Vec<i32> = parse_vec(r.expect("weights")?)?;
         let biases: Vec<i32> = parse_vec(r.expect("biases")?)?;
-        ensure!(weights.len() == w[0] * w[1], "weights size mismatch layer {i}");
+        let n_weights = w[0]
+            .checked_mul(w[1])
+            .with_context(|| format!("layer {i} size product overflows"))?;
+        ensure!(weights.len() == n_weights, "weights size mismatch layer {i}");
         ensure!(biases.len() == w[1], "biases size mismatch layer {i}");
         layers.push(FixedLayer {
             n_in: w[0],
@@ -215,5 +264,61 @@ mod tests {
         // chop the last line
         text.truncate(text.rfind("biases=").unwrap());
         assert!(load_float(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_nonfinite_parameters() {
+        let net = random_net();
+        let text = save_float(&net);
+        let with_nan = text.replacen("weights=", "weights=NaN ", 1);
+        assert!(load_float(&with_nan).is_err());
+        let with_inf = text.replacen("biases=", "biases=inf ", 1);
+        assert!(load_float(&with_inf).is_err());
+    }
+
+    #[test]
+    fn rejects_degenerate_layer_counts() {
+        // num_layers < 2 and zero-width layers must be errors, not
+        // panics further downstream.
+        let text = "FANN_FLO_2.1\nnum_layers=1\nlayer_sizes=3\nactivations=\nsteepness=\n";
+        assert!(load_float(text).is_err());
+        let text = "FANN_FLO_2.1\nnum_layers=2\nlayer_sizes=3 0\nactivations=tanh\nsteepness=1\n";
+        assert!(load_float(text).is_err());
+    }
+
+    #[test]
+    fn fixed_rejects_wrong_activation_count_instead_of_panicking() {
+        // Regression for the seed bug: a short activations line used to
+        // index out of bounds in the layer loop.
+        let net = random_net();
+        let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+        let text = save_fixed(&fixed);
+        let broken = text.replacen("activations=tanh sigmoid", "activations=tanh", 1);
+        assert_ne!(text, broken, "test setup: activations line not found");
+        assert!(load_fixed(&broken).is_err());
+    }
+
+    #[test]
+    fn huge_layer_sizes_error_instead_of_overflowing() {
+        // 2^32 * 2^32 overflows usize: must be a structured error, not a
+        // debug-build multiply-overflow panic.
+        let fixed = "FANN_FIX_2.1\ndecimal_point=4\nnum_layers=2\n\
+                     layer_sizes=4294967296 4294967296\nactivations=tanh\nweights=1\nbiases=1\n";
+        assert!(load_fixed(fixed).is_err());
+        let float = "FANN_FLO_2.1\nnum_layers=2\n\
+                     layer_sizes=4294967296 4294967296\nactivations=tanh\nsteepness=1\n\
+                     weights=1\nbiases=1\n";
+        assert!(load_float(float).is_err());
+    }
+
+    #[test]
+    fn fixed_rejects_out_of_range_decimal_point() {
+        let net = random_net();
+        let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+        let text = save_fixed(&fixed);
+        let dec_line = format!("decimal_point={}", fixed.decimal_point);
+        let broken = text.replacen(&dec_line, "decimal_point=99", 1);
+        assert_ne!(text, broken);
+        assert!(load_fixed(&broken).is_err());
     }
 }

@@ -13,7 +13,10 @@
 //!   training step, AOT-lowered to HLO text in `artifacts/`.
 //! * **L3** — this crate: the FANN substrate ([`fann`]), the deployment
 //!   planner ([`deploy`]), cycle/energy MCU models ([`targets`]), the
-//!   execution simulator ([`simulator`]), C code generation ([`codegen`]),
+//!   execution simulator ([`simulator`]), C code generation plus the
+//!   machine-readable deploy plan ([`codegen`], `deploy emit`), the
+//!   emitted-artifact emulator ([`emulator`], `deploy emulate` — runs
+//!   generated deployments bit-exactly in CI without a cross-compiler),
 //!   the PJRT runtime that loads the AOT artifacts ([`runtime`],
 //!   `--features pjrt`), dataset generators ([`datasets`]), the paper's
 //!   application showcases ([`apps`]), and the benchmark harness
@@ -52,6 +55,7 @@ pub mod cli;
 pub mod codegen;
 pub mod datasets;
 pub mod deploy;
+pub mod emulator;
 pub mod fann;
 pub mod kernels;
 pub mod quantize;

@@ -2,26 +2,37 @@
 //!
 //! Commands:
 //!
-//! * `train`       — train an application showcase natively (iRPROP−),
-//!                   save float + fixed `.net` files, report accuracy.
-//! * `train-pjrt`  — train via the AOT-compiled JAX step (PJRT runtime;
-//!                   needs `--features pjrt`).
-//! * `deploy`      — plan placement + generate C code for a target.
-//! * `run`         — simulate one classification on a target.
-//! * `throughput`  — host-side batched-inference throughput: looped
-//!                   single-sample vs batched kernels vs the parallel
-//!                   batch driver, float, fixed and packed.
-//! * `bench json`  — the machine-readable kernel × mode throughput
-//!                   sweep; writes `BENCH_kernels.json` (the per-PR
-//!                   perf baseline CI uploads as an artifact).
-//! * `info`        — list applications, targets, artifact status.
-//! * `help`        — this text.
+//! * `train`          — train an application showcase natively (iRPROP−),
+//!                      save float + fixed `.net` files, report accuracy.
+//! * `train-pjrt`     — train via the AOT-compiled JAX step (PJRT
+//!                      runtime; needs `--features pjrt`).
+//! * `deploy`         — plan placement + generate C code for a target
+//!                      (legacy form; `deploy emit` supersedes it).
+//! * `deploy emit`    — the emit pipeline: placement + generated C +
+//!                      the machine-readable `deploy_plan.json`, from a
+//!                      `.net` file or a synthesized `--topo` network,
+//!                      at an explicit representation (f32/q32/q7/q15).
+//! * `deploy emulate` — execute the emitted artifact in the Rust
+//!                      emulator: bit-exact outputs vs the native
+//!                      kernels plus the walked DMA/cycle/energy report.
+//! * `run`            — simulate one classification on a target.
+//! * `throughput`     — host-side batched-inference throughput: looped
+//!                      single-sample vs batched kernels vs the parallel
+//!                      batch driver, float, fixed and packed.
+//! * `bench json`     — the machine-readable kernel × mode throughput
+//!                      sweep plus per-target emulated cycle counts;
+//!                      writes `BENCH_kernels.json` (the per-PR perf
+//!                      baseline CI uploads as an artifact).
+//! * `info`           — list applications, targets, artifact status.
+//! * `help`           — this text.
 //!
 //! Examples:
 //!
 //! ```text
 //! fann-on-mcu train --app fall --seed 7 --out /tmp/fall
-//! fann-on-mcu deploy --net /tmp/fall.net --target cluster8 --out /tmp/gen
+//! fann-on-mcu deploy emit --target cortex-m4f --out /tmp/gen
+//! fann-on-mcu deploy emit --net /tmp/fall.net --target wolf-8core --repr q7
+//! fann-on-mcu deploy emulate --target wolf-8core --topo "76,300,200,100,10"
 //! fann-on-mcu run --net /tmp/fall.net --target m4 --input "0.1,0.2,..."
 //! fann-on-mcu train-pjrt --topo xor --steps 400
 //! ```
@@ -33,14 +44,15 @@ use anyhow::{bail, Context, Result};
 use fann_on_mcu::apps::{self, AppSpec};
 use fann_on_mcu::bench::batch;
 use fann_on_mcu::cli::{parse_csv_f32, parse_sizes, parse_target, Args};
-use fann_on_mcu::codegen::{self, NetSource};
+use fann_on_mcu::codegen::{self, EmitBundle, NetRepr, NetSource};
 use fann_on_mcu::deploy::{self, NetShape};
+use fann_on_mcu::emulator;
 use fann_on_mcu::fann::{io, Activation, FixedNetwork, Network};
 use fann_on_mcu::runtime::ArtifactDir;
 #[cfg(feature = "pjrt")]
 use fann_on_mcu::runtime::{PjrtTrainer, Runtime};
 use fann_on_mcu::simulator::{self, CostOptions, Executable};
-use fann_on_mcu::targets::DataType;
+use fann_on_mcu::targets::{Chip, DataType, Target};
 use fann_on_mcu::util::rng::Rng;
 use fann_on_mcu::util::table::{fmt_energy, fmt_time, Table};
 
@@ -179,6 +191,203 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// Default synthesized topology and input bound shared by `deploy emit`
+/// / `deploy emulate` and their native-parity reference — one source of
+/// truth so the two can never drift apart.
+const EMIT_DEFAULT_TOPO: &str = "64,64,32";
+const EMIT_MAX_ABS_INPUT: f32 = 1.0;
+
+/// The resolved network a `deploy emit` / `deploy emulate` invocation
+/// operates on: a `.net` file (float or fixed) or a synthesized
+/// `--topo` network (deterministic per `--seed`).
+enum EmitSourceNet {
+    Float(Network),
+    Fixed(FixedNetwork),
+}
+
+fn resolve_emit_source(args: &Args) -> Result<EmitSourceNet> {
+    if let Some(path) = args.get("net") {
+        let (fnet, qnet) = load_any_net(path)?;
+        Ok(match (fnet, qnet) {
+            (Some(n), _) => EmitSourceNet::Float(n),
+            (_, Some(q)) => EmitSourceNet::Fixed(q),
+            _ => unreachable!(),
+        })
+    } else {
+        let sizes = parse_sizes(args.get_or("topo", EMIT_DEFAULT_TOPO))?;
+        let seed = args.get_u64("seed", 7)?;
+        let mut rng = Rng::new(seed);
+        let mut net = Network::new(&sizes, Activation::Tanh, Activation::Sigmoid)?;
+        net.randomize(&mut rng, None);
+        Ok(EmitSourceNet::Float(net))
+    }
+}
+
+/// Emit the resolved source for `target` at the `--repr` choice
+/// (default: f32 on FPU targets, q32 elsewhere; a fixed `.net` source
+/// always deploys as q32).
+fn emit_from_source(source: &EmitSourceNet, args: &Args, target: Target) -> Result<EmitBundle> {
+    let default_repr = if target.supports_float() { "f32" } else { "q32" };
+    match source {
+        EmitSourceNet::Float(n) => {
+            let repr = NetRepr::parse(args.get_or("repr", default_repr))?;
+            codegen::emit_float(n, target, repr, EMIT_MAX_ABS_INPUT)
+        }
+        EmitSourceNet::Fixed(q) => {
+            // Only an explicit conflicting --repr is an error.
+            if let Some(r) = args.get("repr") {
+                codegen::repr_for_fixed_source(NetRepr::parse(r)?)?;
+            }
+            codegen::emit_fixed(q, target)
+        }
+    }
+}
+
+/// The host-kernel outputs `deploy emulate` checks itself against,
+/// derived from the SAME resolved source the artifact was emitted from.
+fn native_reference_outputs(
+    source: &EmitSourceNet,
+    repr: NetRepr,
+    input: &[f32],
+) -> Result<Vec<f32>> {
+    use fann_on_mcu::fann::from_float_packed;
+    use fann_on_mcu::kernels::PackedWidth;
+    Ok(match source {
+        // Fixed source: the native path is the FixedNetwork itself.
+        EmitSourceNet::Fixed(q) => q.run(input),
+        EmitSourceNet::Float(n) => match repr {
+            NetRepr::F32 => n.run(input),
+            NetRepr::Q32 => FixedNetwork::from_float(n, EMIT_MAX_ABS_INPUT)?.run(input),
+            NetRepr::Q7 => from_float_packed(n, EMIT_MAX_ABS_INPUT, PackedWidth::Q7)?.1.run(input),
+            NetRepr::Q15 => {
+                from_float_packed(n, EMIT_MAX_ABS_INPUT, PackedWidth::Q15)?.1.run(input)
+            }
+        },
+    })
+}
+
+fn print_plan_summary(bundle: &EmitBundle) {
+    let plan = &bundle.artifact.plan;
+    println!("deploy plan for {} ({}):", plan.target.label(), plan.repr.label());
+    println!("  estimated memory (Eq. 2): {} bytes", plan.est_memory_bytes);
+    println!(
+        "  parameters: {} bytes in {} placement {}",
+        plan.param_bytes(),
+        plan.repr.label(),
+        plan.region.name()
+    );
+    if let Some(dma) = plan.dma {
+        println!("  DMA strategy: {dma:?} (staging {} bytes of L1)", plan.staging_bytes());
+    }
+    if let Some(dec) = plan.decimal_point {
+        println!("  decimal point: Q{dec}");
+    }
+    let mut t = Table::new(vec!["layer", "shape", "act", "bytes", "reads from", "dma chunks", "est cycles"]);
+    for l in &plan.layers {
+        t.row(vec![
+            l.index.to_string(),
+            format!("{}x{}", l.n_in, l.n_out),
+            l.activation.name().to_string(),
+            l.param_bytes.to_string(),
+            l.compute_region.name().to_string(),
+            l.dma.as_ref().map_or("-".to_string(), |d| d.chunks.to_string()),
+            format!("{:.0}", l.est_cycles),
+        ]);
+    }
+    t.print();
+    println!(
+        "  estimate: {:.0} cycles, {} / classification, {} energy",
+        plan.cost.breakdown.total(),
+        fmt_time(plan.cost.seconds),
+        fmt_energy(plan.cost.energy_uj * 1e-6),
+    );
+}
+
+/// `deploy emit` — run the emit pipeline and (optionally) write the
+/// bundle, including `deploy_plan.json`, to `--out DIR`.
+fn cmd_deploy_emit(args: &Args) -> Result<()> {
+    args.expect_only(&["net", "topo", "seed", "target", "repr", "out"])?;
+    let target = parse_target(args.get("target").context("--target required")?)?;
+    let source = resolve_emit_source(args)?;
+    let bundle = emit_from_source(&source, args, target)?;
+    print_plan_summary(&bundle);
+    match args.get("out") {
+        Some(dir) => {
+            std::fs::create_dir_all(dir)?;
+            for (name, contents) in &bundle.code.files {
+                std::fs::write(Path::new(dir).join(name), contents)?;
+                println!("  wrote {dir}/{name}");
+            }
+        }
+        None => println!(
+            "  generated {} files ({} bytes); pass --out DIR to write them",
+            bundle.code.files.len(),
+            bundle.code.total_bytes()
+        ),
+    }
+    Ok(())
+}
+
+/// `deploy emulate` — emit, then execute the emitted artifact in the
+/// Rust emulator and cross-check it bit-exactly against the native
+/// kernel path for the same representation.
+fn cmd_deploy_emulate(args: &Args) -> Result<()> {
+    args.expect_only(&["net", "topo", "seed", "target", "repr", "input"])?;
+    let target = parse_target(args.get("target").context("--target required")?)?;
+    let source = resolve_emit_source(args)?;
+    let bundle = emit_from_source(&source, args, target)?;
+    let n_in = bundle.artifact.num_inputs();
+    let input = match args.get("input") {
+        Some(csv) => parse_csv_f32(csv)?,
+        None => {
+            let mut rng = Rng::new(args.get_u64("seed", 7)? ^ 0xE31);
+            (0..n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+        }
+    };
+    let report = emulator::emulate(&bundle.artifact, &input)?;
+
+    // Native parity: run the same resolved source through the host
+    // kernel path of this representation and compare bit for bit (f32)
+    // / value for value (dequantized fixed outputs round-trip the same
+    // i32s).
+    let native = native_reference_outputs(&source, bundle.artifact.plan.repr, &input)?;
+    anyhow::ensure!(
+        report.outputs == native,
+        "emulated outputs diverged from the native kernel path: {:?} vs {native:?}",
+        report.outputs
+    );
+
+    println!("outputs: {:?}", report.outputs);
+    println!("predicted class: {}", fann_on_mcu::util::argmax(&report.outputs));
+    println!("parity vs native {} kernels: OK (bit-exact)", bundle.artifact.plan.repr.label());
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec![
+        "placement".to_string(),
+        bundle.artifact.plan.region.name().to_string(),
+    ])
+    .row(vec!["cycles".to_string(), format!("{:.0}", report.cycles())])
+    .row(vec!["compute time".to_string(), fmt_time(report.seconds)])
+    .row(vec![
+        "active power".to_string(),
+        format!("{:.2} mW", report.active_mw),
+    ])
+    .row(vec![
+        "energy/classification".to_string(),
+        fmt_energy(report.energy_uj * 1e-6),
+    ])
+    .row(vec!["DMA transfers".to_string(), report.dma_chunks.to_string()])
+    .row(vec![
+        "DMA bytes".to_string(),
+        report.dma_bytes.to_string(),
+    ])
+    .row(vec![
+        "peak L1 bytes".to_string(),
+        report.l1_peak_bytes.to_string(),
+    ]);
+    t.print();
     Ok(())
 }
 
@@ -339,6 +548,59 @@ fn cmd_bench_json(args: &Args) -> Result<()> {
         "\nheadline: packed_q7 {speedup_q7:.2}x / packed_q15 {speedup_q15:.2}x vs fixed_q (single-thread)"
     );
 
+    // Per-target emulated cycle counts: emit the same network for each
+    // modeled MCU and execute the artifact in the emulator, so the perf
+    // baseline tracks target-side estimates alongside host throughput.
+    let emu_cells: [(Target, NetRepr); 4] = [
+        (Target::CortexM4(Chip::Stm32l475vg), NetRepr::Q32),
+        (Target::WolfFc, NetRepr::Q32),
+        (Target::WolfCluster { cores: 8 }, NetRepr::Q32),
+        (Target::WolfCluster { cores: 8 }, NetRepr::Q7),
+    ];
+    let mut emulated_rows = Vec::new();
+    let mut et = Table::new(vec!["target", "repr", "placement", "cycles", "time", "inf/s"]);
+    for (target, repr) in emu_cells {
+        // A user-supplied --topo may legitimately not fit a target (or
+        // not pack at q7): record the skip instead of failing the sweep.
+        let bundle = match codegen::emit_float(&net, target, repr, 1.0) {
+            Ok(b) => b,
+            Err(e) => {
+                println!("  (skipping {} {}: {e})", target.slug(), repr.label());
+                continue;
+            }
+        };
+        let report = emulator::emulate(&bundle.artifact, &xs[..n_in])?;
+        let plan = &bundle.artifact.plan;
+        et.row(vec![
+            target.slug(),
+            repr.label().to_string(),
+            plan.region.name().to_string(),
+            format!("{:.0}", report.cycles()),
+            fmt_time(report.seconds),
+            format!("{:.0}", 1.0 / report.seconds),
+        ]);
+        emulated_rows.push(
+            Json::obj()
+                .field("target", target.slug())
+                .field("repr", repr.label())
+                .field("region", plan.region.name())
+                .field(
+                    "dma",
+                    match plan.dma {
+                        Some(d) => Json::Str(format!("{d:?}")),
+                        None => Json::Null,
+                    },
+                )
+                .field("emulated_cycles", report.cycles())
+                .field("seconds_per_inference", report.seconds)
+                .field("energy_uj_per_inference", report.energy_uj)
+                .field("inferences_per_sec", 1.0 / report.seconds)
+                .build(),
+        );
+    }
+    println!("\nemulated targets (one classification, analytic cycle model):");
+    et.print();
+
     let json = Json::obj()
         .field("schema", "fann-on-mcu/bench-kernels/v1")
         .field(
@@ -372,6 +634,7 @@ fn cmd_bench_json(args: &Args) -> Result<()> {
         )
         .field("speedup_packed_q7_vs_fixed_q_serial", speedup_q7)
         .field("speedup_packed_q15_vs_fixed_q_serial", speedup_q15)
+        .field("emulated", Json::Arr(emulated_rows))
         .build();
     std::fs::write(out_path, json.to_pretty())
         .with_context(|| format!("writing {out_path}"))?;
@@ -405,25 +668,33 @@ fann-on-mcu — FANN-on-MCU reproduction toolkit
 USAGE: fann-on-mcu <command> [--flag value]...
 
 COMMANDS:
-  train       --app <gesture|fall|activity> [--seed N] [--out PREFIX]
-  train-pjrt  --topo <xor|gesture|fall|activity> [--steps N] [--seed N]  (needs --features pjrt)
-  deploy      --net FILE.net --target T [--out DIR] [--dtype fixed]
-  run         --net FILE.net --target T --input \"v1,v2,...\" [--classifications N]
-  throughput  [--topo \"64,64,64,8\"] [--samples N] [--threads T] [--reps R] [--seed N]
-  bench json  [--topo \"64,64,32\"] [--samples N] [--threads T] [--reps R] [--seed N]
-              [--out FILE]   write the kernel sweep to BENCH_kernels.json
-  info        show applications, targets, artifact status
-  help        this text
+  train          --app <gesture|fall|activity> [--seed N] [--out PREFIX]
+  train-pjrt     --topo <xor|gesture|fall|activity> [--steps N] [--seed N]  (needs --features pjrt)
+  deploy         --net FILE.net --target T [--out DIR] [--dtype fixed]
+  deploy emit    --target T [--net FILE.net | --topo \"64,64,32\" --seed N]
+                 [--repr f32|q32|q7|q15] [--out DIR]
+                 emit C sources + the machine-readable deploy_plan.json
+  deploy emulate --target T [--net FILE.net | --topo ... --seed N] [--repr R]
+                 [--input \"v1,v2,...\"]
+                 execute the emitted artifact (bit-exact vs native kernels)
+  run            --net FILE.net --target T --input \"v1,v2,...\" [--classifications N]
+  throughput     [--topo \"64,64,64,8\"] [--samples N] [--threads T] [--reps R] [--seed N]
+  bench json     [--topo \"64,64,32\"] [--samples N] [--threads T] [--reps R] [--seed N]
+                 [--out FILE]   write the kernel sweep + per-target emulated
+                 cycle counts to BENCH_kernels.json
+  info           show applications, targets, artifact status
+  help           this text
 
-TARGETS: m4, m4-stm32, m0, ibex, cluster1..cluster8
+TARGETS: m4, cortex-m4f, m0, ibex/wolf-fc, cluster1..cluster8 (wolf-8core, ...)
 BENCHES: cargo bench (one binary per paper figure/table; see DESIGN.md)
 ";
 
 fn main() -> Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
-    // `bench` takes one positional mode word (`bench json`) ahead of
-    // its flags; everything else is pure `command --flag value` form.
-    let bench_mode = if argv.first().map(String::as_str) == Some("bench")
+    // `bench` and `deploy` take one optional positional mode word
+    // (`bench json`, `deploy emit`, `deploy emulate`) ahead of their
+    // flags; everything else is pure `command --flag value` form.
+    let sub_mode = if matches!(argv.first().map(String::as_str), Some("bench") | Some("deploy"))
         && argv.get(1).is_some_and(|a| !a.starts_with("--"))
     {
         Some(argv.remove(1))
@@ -434,10 +705,15 @@ fn main() -> Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "train-pjrt" => cmd_train_pjrt(&args),
-        "deploy" => cmd_deploy(&args),
+        "deploy" => match sub_mode.as_deref() {
+            None => cmd_deploy(&args),
+            Some("emit") => cmd_deploy_emit(&args),
+            Some("emulate") => cmd_deploy_emulate(&args),
+            Some(other) => bail!("unknown deploy mode {other:?} (known: emit, emulate)"),
+        },
         "run" => cmd_run(&args),
         "throughput" => cmd_throughput(&args),
-        "bench" => cmd_bench(bench_mode.as_deref().unwrap_or("json"), &args),
+        "bench" => cmd_bench(sub_mode.as_deref().unwrap_or("json"), &args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");

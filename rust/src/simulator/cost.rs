@@ -75,11 +75,27 @@ pub fn region_penalty_per_word(plan: &DeploymentPlan) -> f64 {
     }
 }
 
-/// Simulation knobs (Fig. 7 legacy-baseline toggle).
-#[derive(Debug, Clone, Copy, Default)]
+/// Simulation knobs (Fig. 7 legacy-baseline toggle + the packed-SIMD
+/// MAC width of the emitted representation).
+#[derive(Debug, Clone, Copy)]
 pub struct CostOptions {
     /// Model the FANNCortexM redundant bias-init (the "before" bars).
     pub legacy_init: bool,
+    /// MAC operands packed per inner-loop multiply (1 for f32/q32; the
+    /// q7/q15 emitted representations set 2 or 4 on SIMD-capable cores
+    /// — `pv.sdotsp` on RI5CY, `SMLAD` on the M4/M7 — mirroring the
+    /// Fig. 3 `IsaExtensions::simd_lanes` ladder). Values < 1 are
+    /// treated as 1.
+    pub simd_lanes: u8,
+}
+
+impl Default for CostOptions {
+    fn default() -> Self {
+        Self {
+            legacy_init: false,
+            simd_lanes: 1,
+        }
+    }
 }
 
 /// Cycles of one layer (`n_in -> n_out`, activation `act`) under `plan`.
@@ -97,7 +113,8 @@ pub fn layer_cycles(
 ) -> CycleBreakdown {
     let core = plan.target.core();
     let cores = plan.target.num_cores() as usize;
-    let mac = core.mac_cycles(dtype_of(plan)) + region_penalty_per_word(plan);
+    let lanes = opts.simd_lanes.max(1) as f64;
+    let mac = core.mac_cycles(dtype_of(plan)) / lanes + region_penalty_per_word(plan);
     let word = crate::deploy::memory::dtype_size(plan.dtype);
 
     let rows_pc = n_out.div_ceil(cores);
@@ -294,7 +311,15 @@ mod tests {
         for (dt, want) in [(DataType::Float32, 0.031), (DataType::Fixed, 0.077)] {
             let p = plan(&shape, Target::CortexM4(Chip::Stm32l475vg), dt).unwrap();
             let new = network_cycles(&p, &acts, CostOptions::default()).total();
-            let old = network_cycles(&p, &acts, CostOptions { legacy_init: true }).total();
+            let old = network_cycles(
+                &p,
+                &acts,
+                CostOptions {
+                    legacy_init: true,
+                    ..CostOptions::default()
+                },
+            )
+            .total();
             let gain = (old - new) / old;
             assert!(
                 (gain - want).abs() < 0.02,
@@ -312,6 +337,34 @@ mod tests {
         let b = network_cycles(&p, &acts_for(3), CostOptions::default());
         let frac = b.compute / b.total();
         assert!((0.80..=0.95).contains(&frac), "compute fraction {frac:.3}");
+    }
+
+    #[test]
+    fn simd_lanes_shrink_compute_only() {
+        let p = plan(&app_a(), Target::WolfCluster { cores: 1 }, DataType::Fixed).unwrap();
+        let acts = acts_for(4);
+        let one = network_cycles(&p, &acts, CostOptions::default());
+        let four = network_cycles(
+            &p,
+            &acts,
+            CostOptions {
+                simd_lanes: 4,
+                ..CostOptions::default()
+            },
+        );
+        assert!((four.compute - one.compute / 4.0).abs() < 1e-6);
+        assert_eq!(four.overhead, one.overhead);
+        assert_eq!(four.activation, one.activation);
+        // simd_lanes: 0 is clamped to 1, never a divide-by-zero.
+        let zero = network_cycles(
+            &p,
+            &acts,
+            CostOptions {
+                simd_lanes: 0,
+                ..CostOptions::default()
+            },
+        );
+        assert_eq!(zero.total(), one.total());
     }
 
     #[test]

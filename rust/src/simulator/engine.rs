@@ -175,20 +175,30 @@ fn validate(plan: &DeploymentPlan, exe: &Executable) -> Result<()> {
     Ok(())
 }
 
-/// Build the cycle/time/energy report for one classification under
-/// `plan`, attaching already-computed `outputs` (the cost model is
-/// independent of the numerics — the paper's premise).
-fn cost_report(
-    plan: &DeploymentPlan,
-    exe: &Executable,
-    outputs: Vec<f32>,
-    opts: CostOptions,
-) -> SimReport {
-    let acts = exe.activations();
-    let breakdown = cost::network_cycles(plan, &acts, opts);
+/// The target-dependent cost of one classification under a plan — the
+/// half of a [`SimReport`] that does not depend on the numerics (the
+/// cost model is independent of them: the paper's premise). Shared by
+/// the simulator, the deploy-plan builder ([`crate::codegen::plan`])
+/// and the emulator ([`crate::emulator`]), so all three always quote
+/// the same cycles/time/energy for the same plan.
+#[derive(Debug, Clone)]
+pub struct TargetCost {
+    pub breakdown: CycleBreakdown,
+    pub seconds: f64,
+    pub active_mw: f64,
+    pub energy_uj: f64,
+    pub utilization: f64,
+    pub e2e_seconds: f64,
+    pub e2e_energy_uj: f64,
+}
+
+/// Evaluate the cycle/time/energy model for one classification under
+/// `plan` with per-layer activations `acts`.
+pub fn target_cost(plan: &DeploymentPlan, acts: &[Activation], opts: CostOptions) -> TargetCost {
+    let breakdown = cost::network_cycles(plan, acts, opts);
     let cycles = breakdown.total();
     let seconds = cycles / plan.target.freq_hz();
-    let utilization = cost::utilization(plan, &acts);
+    let utilization = cost::utilization(plan, acts);
 
     let active_mw = match plan.target {
         Target::WolfCluster { cores } => {
@@ -204,8 +214,7 @@ fn cost_report(
             plan.target.fixed_overhead_mw(),
         );
 
-    SimReport {
-        outputs,
+    TargetCost {
         breakdown,
         seconds,
         active_mw,
@@ -213,6 +222,27 @@ fn cost_report(
         utilization,
         e2e_seconds,
         e2e_energy_uj,
+    }
+}
+
+/// Build the cycle/time/energy report for one classification under
+/// `plan`, attaching already-computed `outputs`.
+fn cost_report(
+    plan: &DeploymentPlan,
+    exe: &Executable,
+    outputs: Vec<f32>,
+    opts: CostOptions,
+) -> SimReport {
+    let c = target_cost(plan, &exe.activations(), opts);
+    SimReport {
+        outputs,
+        breakdown: c.breakdown,
+        seconds: c.seconds,
+        active_mw: c.active_mw,
+        energy_uj: c.energy_uj,
+        utilization: c.utilization,
+        e2e_seconds: c.e2e_seconds,
+        e2e_energy_uj: c.e2e_energy_uj,
     }
 }
 

@@ -13,8 +13,8 @@ pub mod trace;
 
 pub use cost::{network_cycles, CostOptions, CycleBreakdown};
 pub use engine::{
-    simulate, simulate_batch, simulate_batch_with, BatchSimReport, ExecScratch, Executable,
-    SimReport,
+    simulate, simulate_batch, simulate_batch_with, target_cost, BatchSimReport, ExecScratch,
+    Executable, SimReport, TargetCost,
 };
 pub use stream::{analyze as analyze_stream, ClusterPolicy, StreamReport};
 pub use trace::PowerTrace;

@@ -96,6 +96,29 @@ impl Target {
         }
     }
 
+    /// Stable machine-readable name used by the deploy-plan JSON, the
+    /// bench JSON's emulated-target rows and the CLI (`--target` accepts
+    /// every slug; `cli::parse_target` round-trips them to the *same*
+    /// target, chip included). The paper's reference chip per core gets
+    /// the bare slug; any other chip is suffixed with its lowercase name
+    /// so two chips can never collapse to one slug.
+    pub fn slug(self) -> String {
+        fn suffixed(base: &str, canonical: Chip, chip: Chip) -> String {
+            if chip == canonical {
+                base.to_string()
+            } else {
+                format!("{base}-{}", chip.name().to_lowercase())
+            }
+        }
+        match self {
+            Target::CortexM4(chip) => suffixed("cortex-m4f", Chip::Stm32l475vg, chip),
+            Target::CortexM7(chip) => suffixed("cortex-m7f", Chip::Stm32f769, chip),
+            Target::CortexM0(chip) => suffixed("cortex-m0", Chip::Nrf52832, chip),
+            Target::WolfFc => "wolf-fc".to_string(),
+            Target::WolfCluster { cores } => format!("wolf-{}core", cores.clamp(1, 8)),
+        }
+    }
+
     /// Human-readable name (Table II column headings).
     pub fn label(self) -> String {
         match self {
@@ -142,6 +165,27 @@ mod tests {
     fn only_cluster_pays_activation() {
         assert_eq!(Target::WolfFc.fixed_overhead_seconds(), 0.0);
         assert!(Target::WolfCluster { cores: 8 }.fixed_overhead_seconds() > 0.0);
+    }
+
+    #[test]
+    fn slugs_are_stable_and_unique() {
+        use std::collections::HashSet;
+        let targets = [
+            Target::CortexM4(Chip::Stm32l475vg),
+            Target::CortexM4(Chip::Nrf52832),
+            Target::CortexM7(Chip::Stm32f769),
+            Target::CortexM0(Chip::Nrf52832),
+            Target::WolfFc,
+            Target::WolfCluster { cores: 1 },
+            Target::WolfCluster { cores: 8 },
+        ];
+        let slugs: HashSet<String> = targets.iter().map(|t| t.slug()).collect();
+        assert_eq!(slugs.len(), targets.len(), "two targets share a slug");
+        assert_eq!(Target::CortexM4(Chip::Stm32l475vg).slug(), "cortex-m4f");
+        // Non-reference chips keep their identity in the slug.
+        assert_eq!(Target::CortexM4(Chip::Nrf52832).slug(), "cortex-m4f-nrf52832");
+        assert_eq!(Target::WolfCluster { cores: 8 }.slug(), "wolf-8core");
+        assert_eq!(Target::WolfCluster { cores: 99 }.slug(), "wolf-8core");
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! Golden-vector differential harness for the emit→emulate pipeline.
+//!
+//! Two halves:
+//!
+//! 1. **Differential grid** — for a grid of architectures (ragged
+//!    widths, every activation, f32/q32/q7/q15) the emulator's outputs
+//!    on the emitted artifact must be **bit-exact** vs the native kernel
+//!    path of the same representation (`FixedQ` via `FixedNetwork`,
+//!    `PackedQ7`/`PackedQ15` via `PackedNetwork`, `BlockedF32` via
+//!    `Network::run`) and within float tolerance vs `ScalarF32` — and
+//!    the contract must hold through the DMA double-buffer schedules of
+//!    networks that exceed cluster L1.
+//! 2. **Emitted-C snapshots** — deterministic configurations are pinned
+//!    against committed golden files under `rust/tests/golden/`;
+//!    regenerate with `UPDATE_GOLDEN=1 cargo test --test golden_codegen`.
+
+use std::path::PathBuf;
+
+use fann_on_mcu::codegen::{emit_fixed, emit_float, NetRepr};
+use fann_on_mcu::emulator::{emulate, emulate_q};
+use fann_on_mcu::fann::activation::ALL as ALL_ACTS;
+use fann_on_mcu::fann::fixed::FixedLayer;
+use fann_on_mcu::fann::{from_float_packed, Activation, FixedNetwork, Network};
+use fann_on_mcu::kernels::{PackedWidth, ScalarF32};
+use fann_on_mcu::targets::{Chip, Target};
+use fann_on_mcu::util::rng::Rng;
+
+fn grid_net(sizes: &[usize], hidden: Activation, seed: u64) -> Network {
+    let mut rng = Rng::new(seed);
+    let mut net = Network::new(sizes, hidden, Activation::Sigmoid).unwrap();
+    net.randomize(&mut rng, None);
+    net
+}
+
+fn grid_input(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0x1517);
+    (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+}
+
+/// Ragged shapes straddling the packed kernels' 4-lane / 4-row tiles.
+const GRID_SHAPES: [&[usize]; 4] = [&[5, 7, 3], &[4, 6, 6, 2], &[3, 5, 1], &[9, 4, 2]];
+
+#[test]
+fn q32_emulation_bit_exact_across_grid() {
+    for (si, &sizes) in GRID_SHAPES.iter().enumerate() {
+        for (ai, &hidden) in ALL_ACTS.iter().enumerate() {
+            let net = grid_net(sizes, hidden, 100 + (si * 7 + ai) as u64);
+            let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+            let x = grid_input(sizes[0], si as u64);
+            let xq = fixed.quantize_input(&x);
+            let native = fixed.run_q(&xq);
+            for target in [
+                Target::WolfFc,
+                Target::CortexM4(Chip::Nrf52832),
+                Target::WolfCluster { cores: 8 },
+            ] {
+                let bundle = emit_fixed(&fixed, target).unwrap();
+                let rep = emulate_q(&bundle.artifact, &xq).unwrap();
+                assert_eq!(
+                    rep.outputs_q.as_deref().unwrap(),
+                    &native[..],
+                    "sizes {sizes:?} hidden {hidden:?} target {target:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_emulation_bit_exact_across_grid() {
+    for (si, &sizes) in GRID_SHAPES.iter().enumerate() {
+        for (ai, &hidden) in ALL_ACTS.iter().enumerate() {
+            let net = grid_net(sizes, hidden, 300 + (si * 7 + ai) as u64);
+            for (width, repr) in [(PackedWidth::Q7, NetRepr::Q7), (PackedWidth::Q15, NetRepr::Q15)]
+            {
+                let (fixed_ref, packed) = from_float_packed(&net, 1.0, width).unwrap();
+                let x = grid_input(sizes[0], 31 + si as u64);
+                let xq = packed.quantize_input(&x);
+                let native = packed.run_q(&xq);
+                // Packed is itself pinned to the wide FixedQ reference.
+                assert_eq!(native, fixed_ref.run_q(&xq), "{width:?} {sizes:?}");
+                let bundle = emit_float(&net, Target::WolfCluster { cores: 8 }, repr, 1.0)
+                    .unwrap();
+                assert_eq!(bundle.artifact.plan.decimal_point, Some(packed.decimal_point));
+                let rep = emulate_q(&bundle.artifact, &xq).unwrap();
+                assert_eq!(
+                    rep.outputs_q.as_deref().unwrap(),
+                    &native[..],
+                    "sizes {sizes:?} hidden {hidden:?} {width:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_emulation_bit_exact_vs_default_and_close_to_scalar() {
+    for (si, &sizes) in GRID_SHAPES.iter().enumerate() {
+        for (ai, &hidden) in ALL_ACTS.iter().enumerate() {
+            let net = grid_net(sizes, hidden, 500 + (si * 7 + ai) as u64);
+            let x = grid_input(sizes[0], 77 + si as u64);
+            for target in [
+                Target::CortexM4(Chip::Stm32l475vg),
+                Target::WolfCluster { cores: 8 },
+            ] {
+                let bundle = emit_float(&net, target, NetRepr::F32, 1.0).unwrap();
+                let rep = emulate(&bundle.artifact, &x).unwrap();
+                // Bit-exact vs the default (BlockedF32) host path.
+                assert_eq!(rep.outputs, net.run(&x), "sizes {sizes:?} {target:?}");
+                // Within reassociation tolerance vs the scalar reference.
+                let scalar = net.run_with_kernel(&ScalarF32, &x);
+                for (a, b) in rep.outputs.iter().zip(&scalar) {
+                    assert!(
+                        (a - b).abs() < 3e-5,
+                        "sizes {sizes:?} hidden {hidden:?}: {a} vs scalar {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Layer-wise DMA: the whole network exceeds the cluster L1 budget but
+/// every layer fits half of it.
+#[test]
+fn layerwise_dma_network_bit_exact_and_walks_schedule() {
+    let sizes = [50usize, 100, 60, 100, 60, 8];
+    let net = grid_net(&sizes, Activation::Tanh, 1234);
+    let x = grid_input(50, 9);
+
+    // Float on the cluster.
+    let bundle = emit_float(&net, Target::WolfCluster { cores: 8 }, NetRepr::F32, 1.0).unwrap();
+    assert_eq!(
+        bundle.artifact.plan.dma,
+        Some(fann_on_mcu::deploy::DmaStrategy::LayerWise)
+    );
+    let rep = emulate(&bundle.artifact, &x).unwrap();
+    assert_eq!(rep.outputs, net.run(&x));
+    assert_eq!(rep.dma_chunks, 5, "one transfer per dense layer");
+    assert_eq!(rep.dma_bytes, bundle.artifact.plan.param_bytes());
+    assert!(rep.breakdown.dma > 0.0);
+    assert!(rep.l1_peak_bytes <= fann_on_mcu::deploy::cluster_l1_budget());
+
+    // Quantized on the cluster: still bit-exact through the staged path.
+    let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+    let bundle_q = emit_fixed(&fixed, Target::WolfCluster { cores: 8 }).unwrap();
+    let xq = fixed.quantize_input(&x);
+    let rep_q = emulate_q(&bundle_q.artifact, &xq).unwrap();
+    assert_eq!(rep_q.outputs_q.as_deref().unwrap(), &fixed.run_q(&xq)[..]);
+    assert_eq!(rep_q.dma_chunks, 5);
+}
+
+/// Neuron-wise DMA: a single layer exceeds L1, so the emulator slides a
+/// two-row staging window — one transfer per output neuron.
+#[test]
+fn neuronwise_dma_network_bit_exact_and_walks_rows() {
+    let sizes = [600usize, 40, 8];
+    let net = grid_net(&sizes, Activation::Tanh, 4321);
+    let x = grid_input(600, 5);
+
+    let bundle = emit_float(&net, Target::WolfCluster { cores: 8 }, NetRepr::F32, 1.0).unwrap();
+    assert_eq!(
+        bundle.artifact.plan.dma,
+        Some(fann_on_mcu::deploy::DmaStrategy::NeuronWise)
+    );
+    let rep = emulate(&bundle.artifact, &x).unwrap();
+    assert_eq!(rep.outputs, net.run(&x));
+    assert_eq!(rep.dma_chunks, 40 + 8, "one transfer per output neuron");
+    assert!(rep.l1_peak_bytes <= fann_on_mcu::deploy::cluster_l1_budget());
+
+    let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+    let bundle_q = emit_fixed(&fixed, Target::WolfCluster { cores: 8 }).unwrap();
+    let xq = fixed.quantize_input(&x);
+    let rep_q = emulate_q(&bundle_q.artifact, &xq).unwrap();
+    assert_eq!(rep_q.outputs_q.as_deref().unwrap(), &fixed.run_q(&xq)[..]);
+    assert_eq!(rep_q.dma_chunks, 48);
+
+    // Packed representation through the same neuron-wise schedule: the
+    // emulator slides a panel-granular staging window and must stay
+    // bit-exact vs the native packed network.
+    for (width, repr) in [(PackedWidth::Q7, NetRepr::Q7), (PackedWidth::Q15, NetRepr::Q15)] {
+        let (_, packed) = from_float_packed(&net, 1.0, width).unwrap();
+        let bundle_p = emit_float(&net, Target::WolfCluster { cores: 8 }, repr, 1.0).unwrap();
+        assert_eq!(
+            bundle_p.artifact.plan.dma,
+            Some(fann_on_mcu::deploy::DmaStrategy::NeuronWise),
+            "{width:?}"
+        );
+        let xqp = packed.quantize_input(&x);
+        let rep_p = emulate_q(&bundle_p.artifact, &xqp).unwrap();
+        assert_eq!(
+            rep_p.outputs_q.as_deref().unwrap(),
+            &packed.run_q(&xqp)[..],
+            "{width:?}"
+        );
+        assert_eq!(rep_p.dma_chunks, 48, "{width:?}");
+    }
+}
+
+#[test]
+fn emulated_cycles_match_plan_estimate_everywhere() {
+    let net = grid_net(&[9, 6, 4], Activation::Tanh, 9);
+    let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+    let x = grid_input(9, 1);
+    for target in [
+        Target::CortexM4(Chip::Nrf52832),
+        Target::WolfFc,
+        Target::WolfCluster { cores: 1 },
+        Target::WolfCluster { cores: 8 },
+    ] {
+        let bundle = emit_fixed(&fixed, target).unwrap();
+        let rep = emulate(&bundle.artifact, &x).unwrap();
+        assert_eq!(
+            rep.cycles(),
+            bundle.artifact.plan.cost.breakdown.total(),
+            "{target:?}"
+        );
+        assert_eq!(rep.energy_uj, bundle.artifact.plan.cost.energy_uj, "{target:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Emitted-C snapshots
+// ---------------------------------------------------------------------------
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(name)
+}
+
+fn check_golden(name: &str, contents: &str) {
+    let path = golden_path(name);
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, contents).unwrap();
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!("missing golden file {path:?} ({e}); run UPDATE_GOLDEN=1 cargo test --test golden_codegen to create it")
+    });
+    assert_eq!(
+        contents, want,
+        "emitted {name} diverged from the committed golden file; if the change is intentional, \
+         regenerate with UPDATE_GOLDEN=1 cargo test --test golden_codegen"
+    );
+}
+
+/// A hand-set fixed network whose emitted text is fully deterministic.
+fn golden_fixed_net() -> FixedNetwork {
+    FixedNetwork {
+        layers: vec![FixedLayer {
+            n_in: 3,
+            n_out: 2,
+            weights: vec![1, 2, 3, 4, 5, 6],
+            biases: vec![7, 8],
+            activation: Activation::Tanh,
+        }],
+        decimal_point: 4,
+    }
+}
+
+#[test]
+fn golden_m4_fixed_snapshots() {
+    let fixed = golden_fixed_net();
+    let bundle = emit_fixed(&fixed, Target::CortexM4(Chip::Nrf52832)).unwrap();
+    check_golden("m4_fixed_conf.h", bundle.code.file("fann_conf.h").unwrap());
+    check_golden("m4_fixed_net.h", bundle.code.file("fann_net.h").unwrap());
+    check_golden(
+        "m4_fixed_inner_loop.c",
+        bundle.code.file("fann_inner_loop.c").unwrap(),
+    );
+}
+
+#[test]
+fn golden_wolf8_layerwise_snapshots() {
+    // Weight values don't matter for these files: the conf header and
+    // the DMA loop depend only on shape, placement and strategy.
+    let net = grid_net(&[50, 100, 60, 100, 60, 8], Activation::Tanh, 7);
+    let bundle = emit_float(&net, Target::WolfCluster { cores: 8 }, NetRepr::F32, 1.0).unwrap();
+    assert!(bundle.code.file("fann_dma.c").is_some());
+    check_golden(
+        "wolf8_f32_layerwise_conf.h",
+        bundle.code.file("fann_conf.h").unwrap(),
+    );
+    check_golden(
+        "wolf8_f32_layerwise_dma.c",
+        bundle.code.file("fann_dma.c").unwrap(),
+    );
+}
+
+#[test]
+fn golden_dir_documents_update_path() {
+    // The golden directory must exist in-tree (snapshots are committed,
+    // not generated on demand in CI).
+    assert!(
+        golden_path(".").parent().unwrap().is_dir(),
+        "rust/tests/golden/ missing — run UPDATE_GOLDEN=1 cargo test --test golden_codegen"
+    );
+}

@@ -78,12 +78,77 @@ fn bench_json_writes_perf_baseline() {
         "\"mode\": \"parallel\"",
         "\"bytes_per_network\"",
         "speedup_packed_q7_vs_fixed_q_serial",
+        // Per-target emulated cycle counts (the CI bench-smoke gate).
+        "\"emulated\"",
+        "\"target\": \"cortex-m4f\"",
+        "\"target\": \"wolf-8core\"",
+        "\"emulated_cycles\"",
     ] {
         assert!(text.contains(needle), "bench json missing {needle:?}:\n{text}");
     }
     // Unknown bench mode is rejected.
     let out = bin().args(["bench", "csv"]).output().unwrap();
     assert!(!out.status.success());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn deploy_emit_and_emulate_acceptance_targets() {
+    let dir = tmpdir("emit");
+    for target in ["cortex-m4f", "wolf-8core"] {
+        let gen_dir = dir.join(target);
+        let out = bin()
+            .args([
+                "deploy", "emit", "--target", target, "--topo", "12,10,4", "--out",
+                gen_dir.to_str().unwrap(),
+            ])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "deploy emit --target {target} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        for file in ["fann_conf.h", "fann_net.h", "fann_inner_loop.c", "fann_run.c", "deploy_plan.json"] {
+            assert!(gen_dir.join(file).exists(), "{target}: missing {file}");
+        }
+        let plan = std::fs::read_to_string(gen_dir.join("deploy_plan.json")).unwrap();
+        assert!(plan.contains("\"schema\": \"fann-on-mcu/deploy-plan/v1\""));
+        assert!(plan.contains(&format!("\"target\": \"{target}\"")));
+
+        let out = bin()
+            .args(["deploy", "emulate", "--target", target, "--topo", "12,10,4"])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "deploy emulate --target {target} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("OK (bit-exact)"), "{target}: no parity line:\n{text}");
+        assert!(text.contains("predicted class"));
+    }
+
+    // A network that exceeds cluster L1 exercises the DMA schedule
+    // through the CLI path too.
+    let out = bin()
+        .args(["deploy", "emulate", "--target", "wolf-8core", "--topo", "600,40,8"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "DMA emulate failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("OK (bit-exact)"));
+    assert!(text.contains("DMA transfers"));
+
+    // Unknown deploy mode is rejected.
+    let out = bin().args(["deploy", "frobnicate"]).output().unwrap();
+    assert!(!out.status.success());
+
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -172,7 +172,15 @@ fn legacy_init_never_faster() {
             return Ok(());
         }
         let new = cost::network_cycles(&plan, &a, CostOptions::default()).total();
-        let old = cost::network_cycles(&plan, &a, CostOptions { legacy_init: true }).total();
+        let old = cost::network_cycles(
+            &plan,
+            &a,
+            CostOptions {
+                legacy_init: true,
+                ..CostOptions::default()
+            },
+        )
+        .total();
         ensure(old >= new, "legacy init faster than optimized")
     });
 }

@@ -1,0 +1,138 @@
+//! Round-trip + fuzz properties for the FANN `.net` file formats:
+//! reading back a written file reproduces the same network (bitwise
+//! parameters, same decimal-point metadata), and malformed inputs —
+//! random truncation, NaN/inf parameters, bad layer counts, short
+//! activation lines, out-of-range decimal points — produce structured
+//! errors, never panics.
+
+use fann_on_mcu::fann::activation::ALL as ALL_ACTS;
+use fann_on_mcu::fann::{io, Activation, FixedNetwork, Network};
+use fann_on_mcu::util::proptest::{check, ensure};
+use fann_on_mcu::util::rng::Rng;
+
+fn random_net(rng: &mut Rng) -> Network {
+    let n_layers = rng.range_usize(2, 5);
+    let sizes: Vec<usize> = (0..n_layers).map(|_| rng.range_usize(1, 9)).collect();
+    let hidden = ALL_ACTS[rng.below(ALL_ACTS.len())];
+    let output = ALL_ACTS[rng.below(ALL_ACTS.len())];
+    let mut net = Network::new(&sizes, hidden, output).unwrap();
+    net.randomize(rng, None);
+    for layer in &mut net.layers {
+        layer.steepness = rng.range_f32(0.25, 2.0);
+    }
+    net
+}
+
+#[test]
+fn float_roundtrip_is_bitwise_identical() {
+    check("float .net round-trip", 120, |rng| {
+        let net = random_net(rng);
+        let text = io::save_float(&net);
+        let back = io::load_float(&text).map_err(|e| e.to_string())?;
+        ensure(back.layers.len() == net.layers.len(), "layer count changed")?;
+        for (i, (a, b)) in net.layers.iter().zip(&back.layers).enumerate() {
+            ensure(a.n_in == b.n_in && a.n_out == b.n_out, format!("layer {i} shape"))?;
+            ensure(a.weights == b.weights, format!("layer {i} weights not bitwise equal"))?;
+            ensure(a.biases == b.biases, format!("layer {i} biases not bitwise equal"))?;
+            ensure(a.activation == b.activation, format!("layer {i} activation"))?;
+            ensure(a.steepness == b.steepness, format!("layer {i} steepness"))?;
+        }
+        // And therefore identical outputs.
+        let x: Vec<f32> = (0..net.num_inputs()).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        ensure(net.run(&x) == back.run(&x), "outputs diverged after round-trip")
+    });
+}
+
+#[test]
+fn fixed_roundtrip_preserves_decimal_point_and_params() {
+    check("fixed .net round-trip", 120, |rng| {
+        let net = random_net(rng);
+        let fixed = FixedNetwork::from_float(&net, 1.0).map_err(|e| e.to_string())?;
+        let text = io::save_fixed(&fixed);
+        let back = io::load_fixed(&text).map_err(|e| e.to_string())?;
+        ensure(
+            back.decimal_point == fixed.decimal_point,
+            format!(
+                "decimal point changed: {} -> {}",
+                fixed.decimal_point, back.decimal_point
+            ),
+        )?;
+        for (i, (a, b)) in fixed.layers.iter().zip(&back.layers).enumerate() {
+            ensure(a.weights == b.weights, format!("layer {i} weights"))?;
+            ensure(a.biases == b.biases, format!("layer {i} biases"))?;
+            ensure(a.activation == b.activation, format!("layer {i} activation"))?;
+        }
+        let xq: Vec<i32> = (0..fixed.num_inputs()).map(|_| rng.below(2048) as i32 - 1024).collect();
+        ensure(fixed.run_q(&xq) == back.run_q(&xq), "Q outputs diverged after round-trip")
+    });
+}
+
+#[test]
+fn random_truncation_never_panics() {
+    check("truncation fuzz", 200, |rng| {
+        let net = random_net(rng);
+        let text = if rng.below(2) == 0 {
+            io::save_float(&net)
+        } else {
+            io::save_fixed(&FixedNetwork::from_float(&net, 1.0).map_err(|e| e.to_string())?)
+        };
+        // Chop at a random byte (the formats are pure ASCII, so every
+        // index is a char boundary) — the loaders must return, not
+        // panic. A longer prefix may still parse if the chop lands
+        // exactly at the end; anything else must be a clean Err.
+        let cut = rng.below(text.len().max(1));
+        let prefix = &text[..cut];
+        let _ = io::load_float(prefix);
+        let _ = io::load_fixed(prefix);
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupted_fields_are_errors_not_panics() {
+    check("field corruption fuzz", 150, |rng| {
+        let net = random_net(rng);
+        let fixed = FixedNetwork::from_float(&net, 1.0).map_err(|e| e.to_string())?;
+        let float_text = io::save_float(&net);
+        let fixed_text = io::save_fixed(&fixed);
+
+        // A grab-bag of malformed variants; each must load as Err.
+        let cases: Vec<String> = vec![
+            float_text.replacen("weights=", "weights=NaN ", 1),
+            float_text.replacen("steepness=", "steepness=inf ", 1),
+            float_text.replacen("num_layers=", "num_layers=1\nbogus=", 1),
+            float_text.replacen("layer_sizes=", "layer_sizes=0 ", 1),
+            float_text.replacen("activations=", "activations=softmax ", 1),
+            fixed_text.replacen("decimal_point=", "decimal_point=9", 1),
+            fixed_text.replacen("activations=", "activations=tanh\nweights=", 1),
+            fixed_text.replacen("weights=", "weights=notanumber ", 1),
+        ];
+        for (i, case) in cases.iter().enumerate() {
+            let res = if case.starts_with("FANN_FLO") {
+                io::load_float(case).map(|_| ())
+            } else {
+                io::load_fixed(case).map(|_| ())
+            };
+            ensure(res.is_err(), format!("corrupt case {i} unexpectedly parsed"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trained_pipeline_survives_roundtrip() {
+    // The end-to-end file contract: save → load → quantized outputs
+    // bit-equal, which is what `deploy --net file.net` relies on.
+    let mut rng = Rng::new(0xD15C);
+    let mut net = Network::new(&[4, 6, 2], Activation::Tanh, Activation::Sigmoid).unwrap();
+    net.randomize(&mut rng, None);
+    let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+
+    let f2 = io::load_float(&io::save_float(&net)).unwrap();
+    let q2 = io::load_fixed(&io::save_fixed(&fixed)).unwrap();
+    let x = [0.3f32, -0.1, 0.8, -0.9];
+    assert_eq!(net.run(&x), f2.run(&x));
+    let xq = fixed.quantize_input(&x);
+    assert_eq!(fixed.run_q(&xq), q2.run_q(&xq));
+    assert_eq!(fixed.decimal_point, q2.decimal_point);
+}

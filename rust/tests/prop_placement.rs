@@ -1,0 +1,187 @@
+//! Property tests for the placement policy and the detailed deploy
+//! plan: for random networks and random memory budgets,
+//!
+//! * the chosen placement never oversubscribes the budget it claims to
+//!   fit (L1 / L2 / RAM / flash);
+//! * every weight/activation buffer is placed exactly once in the
+//!   detailed plan, and the DMA double-buffer schedule covers every
+//!   layer that does not fit L1;
+//! * oversized networks produce a structured error (`NoFit` from the
+//!   policy, `Err` from the plan builder) — never a panic.
+
+use fann_on_mcu::codegen::{build_deploy_plan, emit_float, NetRepr};
+use fann_on_mcu::deploy::{
+    self, cluster_l1_budget, estimate_memory, place_cluster_with, place_cortex_with,
+    place_fc_with, DmaStrategy, NetShape,
+};
+use fann_on_mcu::fann::{Activation, Network};
+use fann_on_mcu::targets::{DataType, Region, Target};
+use fann_on_mcu::util::proptest::{check, ensure};
+use fann_on_mcu::util::rng::Rng;
+
+fn random_shape(rng: &mut Rng) -> NetShape {
+    let n_layers = rng.range_usize(2, 5);
+    let sizes: Vec<usize> = (0..n_layers).map(|_| rng.range_usize(1, 300)).collect();
+    NetShape::new(&sizes)
+}
+
+fn random_dtype(rng: &mut Rng) -> DataType {
+    if rng.below(2) == 0 {
+        DataType::Float32
+    } else {
+        DataType::Fixed
+    }
+}
+
+#[test]
+fn cluster_placement_never_oversubscribes_budgets() {
+    check("cluster placement respects budgets", 400, |rng| {
+        let shape = random_shape(rng);
+        let dtype = random_dtype(rng);
+        let l1 = rng.range_usize(1, 160) * 1024;
+        let l2 = rng.range_usize(1, 600) * 1024;
+        let est = estimate_memory(&shape, dtype);
+        let (region, dma) = place_cluster_with(&shape, dtype, est, l1, l2);
+        match (region, dma) {
+            (Region::L1, None) => ensure(est <= l1, format!("L1: est {est} > budget {l1}")),
+            (Region::L1, Some(_)) => Err("L1-resident must not stream".into()),
+            (Region::SharedL2, Some(DmaStrategy::LayerWise)) => {
+                ensure(
+                    shape.param_bytes(dtype) <= l2
+                        && 2 * shape.max_layer_param_bytes(dtype) <= l1,
+                    "layer-wise double buffer exceeds budgets",
+                )
+            }
+            (Region::SharedL2, Some(DmaStrategy::NeuronWise)) => ensure(
+                shape.param_bytes(dtype) <= l2 && 2 * shape.max_neuron_row_bytes(dtype) <= l1,
+                "neuron-wise double buffer exceeds budgets",
+            ),
+            (Region::SharedL2, None) => Err("cluster L2 placement must stream".into()),
+            (Region::NoFit, None) => {
+                // NoFit must be genuine: no policy would have accepted it.
+                ensure(
+                    est > l1
+                        && (shape.param_bytes(dtype) > l2
+                            || 2 * shape.max_neuron_row_bytes(dtype) > l1),
+                    "NoFit despite a feasible policy",
+                )
+            }
+            other => Err(format!("impossible cluster placement {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn fc_and_cortex_placements_respect_budgets() {
+    check("fc/cortex placements respect budgets", 400, |rng| {
+        let shape = random_shape(rng);
+        let dtype = random_dtype(rng);
+        let est = estimate_memory(&shape, dtype);
+
+        let private = rng.range_usize(1, 128) * 1024;
+        let shared = rng.range_usize(1, 512) * 1024;
+        match place_fc_with(est, private, shared) {
+            (Region::PrivateL2, None) => ensure(est <= private, "private L2 oversubscribed")?,
+            (Region::SharedL2, None) => {
+                ensure(est > private && est <= shared, "shared L2 misplaced")?
+            }
+            (Region::NoFit, None) => ensure(est > shared, "FC NoFit despite fitting")?,
+            other => return Err(format!("impossible FC placement {other:?}")),
+        }
+
+        let ram = rng.range_usize(1, 256) * 1024;
+        let flash = rng.range_usize(1, 2048) * 1024;
+        match place_cortex_with(&shape, dtype, est, ram, flash) {
+            (Region::Ram, None) => ensure(est <= ram, "RAM oversubscribed")?,
+            (Region::Flash, None) => {
+                let params = shape.param_bytes(dtype);
+                let runtime = est - shape.num_weights() * 4;
+                ensure(
+                    est > ram && params <= flash && runtime <= ram,
+                    "flash split oversubscribed",
+                )?
+            }
+            (Region::NoFit, None) => ensure(est > ram, "cortex NoFit despite fitting RAM")?,
+            other => return Err(format!("impossible cortex placement {other:?}")),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn detailed_plan_places_every_layer_exactly_once_and_dma_covers_l1_misfits() {
+    check("detailed plan invariants", 60, |rng| {
+        let n_layers = rng.range_usize(2, 4);
+        let sizes: Vec<usize> = (0..n_layers).map(|_| rng.range_usize(1, 220)).collect();
+        let mut net = Network::new(&sizes, Activation::Tanh, Activation::Sigmoid)
+            .map_err(|e| e.to_string())?;
+        net.randomize(rng, None);
+        let bundle = match emit_float(&net, Target::WolfCluster { cores: 8 }, NetRepr::F32, 1.0)
+        {
+            Ok(b) => b,
+            // Structured no-fit / oversubscription errors are a legal
+            // outcome of random shapes — the property is "no panic".
+            Err(_) => return Ok(()),
+        };
+        let plan = &bundle.artifact.plan;
+
+        // Every dense layer appears exactly once, in order.
+        ensure(plan.layers.len() == sizes.len() - 1, "layer count mismatch")?;
+        for (i, l) in plan.layers.iter().enumerate() {
+            ensure(l.index == i, format!("layer {i} indexed as {}", l.index))?;
+            ensure(
+                l.n_in == sizes[i] && l.n_out == sizes[i + 1],
+                format!("layer {i} shape mismatch"),
+            )?;
+            ensure(l.param_bytes == (sizes[i] * sizes[i + 1] + sizes[i + 1]) * 4,
+                format!("layer {i} byte count mismatch"))?;
+        }
+
+        let budget = cluster_l1_budget();
+        match plan.region {
+            Region::L1 => {
+                ensure(plan.dma.is_none(), "L1-resident plan must not stream")?;
+                ensure(
+                    plan.param_bytes() + plan.activation_buffer_bytes() <= budget,
+                    "L1-resident plan oversubscribes the budget",
+                )?;
+            }
+            Region::SharedL2 => {
+                // The schedule covers ALL layers (a fortiori every layer
+                // that does not fit L1), and its staging fits L1.
+                for l in &plan.layers {
+                    let dma = l.dma.as_ref().ok_or("L2-resident layer without DMA")?;
+                    ensure(dma.chunks >= 1, "empty DMA schedule")?;
+                    ensure(
+                        dma.chunks * dma.chunk_bytes >= l.param_bytes,
+                        "DMA schedule moves fewer bytes than the layer holds",
+                    )?;
+                    ensure(l.compute_region == Region::L1, "streamed layer computes from L2")?;
+                }
+                ensure(
+                    plan.staging_bytes() + plan.activation_buffer_bytes() <= budget,
+                    "staging oversubscribes L1",
+                )?;
+            }
+            other => return Err(format!("unexpected cluster region {other:?}")),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn oversized_networks_error_structurally_not_by_panic() {
+    // Far over every memory: placement reports NoFit, the plan builder
+    // and the emit pipeline return errors with actionable messages.
+    let shape = NetShape::new(&[2048, 2048, 8]);
+    let p = deploy::plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+    assert_eq!(p.region, Region::NoFit);
+    let acts = [Activation::Tanh, Activation::Sigmoid];
+    let bytes: Vec<usize> = shape
+        .sizes
+        .windows(2)
+        .map(|w| (w[0] * w[1] + w[1]) * 4)
+        .collect();
+    let err = build_deploy_plan(&p, NetRepr::F32, None, &acts, &bytes).unwrap_err();
+    assert!(err.to_string().contains("does not fit"), "{err}");
+}
