@@ -33,7 +33,7 @@ fn main() {
             if cores == 1 {
                 base = secs;
             }
-            let util = utilization(&plan, &acts);
+            let util = utilization(&plan, &acts, CostOptions::default());
             let mw = power::WOLF_CLUSTER.active_mw(cores, util);
             let uj = power::energy_uj(secs, mw);
             if uj < best.1 {

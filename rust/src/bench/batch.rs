@@ -25,7 +25,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 use crate::fann::{from_float_packed, FixedNetwork, Network, PackedNetwork};
-use crate::kernels::{self, BlockedF32, DenseKernel, PackedWidth, ScalarF32};
+use crate::kernels::{self, BlockedF32, DenseKernel, ExecPlan, PackedWidth, PlanScratch, ScalarF32};
 
 /// Resolve a requested worker count: 0 means "all available cores".
 pub fn resolve_threads(requested: usize) -> usize {
@@ -38,22 +38,12 @@ pub fn resolve_threads(requested: usize) -> usize {
 }
 
 /// Split `n` items into at most `workers` contiguous `(start, len)`
-/// chunks of near-equal size (first `n % workers` chunks get one extra).
+/// chunks of near-equal size (first `n % workers` chunks get one
+/// extra). Delegates to the crate's one row/sample partition
+/// ([`kernels::split_rows`]) so the inter-sample chunking and the
+/// intra-layer row split can never drift apart.
 pub fn chunks(n: usize, workers: usize) -> Vec<(usize, usize)> {
-    let workers = workers.max(1).min(n.max(1));
-    let base = n / workers;
-    let extra = n % workers;
-    let mut out = Vec::with_capacity(workers);
-    let mut start = 0;
-    for w in 0..workers {
-        let len = base + usize::from(w < extra);
-        if len == 0 {
-            break;
-        }
-        out.push((start, len));
-        start += len;
-    }
-    out
+    kernels::split_rows(n, workers)
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -303,6 +293,212 @@ pub fn run_batch_packed_parallel(
     out
 }
 
+/// Raw-pointer wrapper that lets row-split jobs write their disjoint
+/// (but sample-interleaved, hence not slice-splittable) row ranges of
+/// one shared output buffer from pool workers.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// The neuron-parallel (output-row-split) driver core: for every layer,
+/// partition the output rows across `workers` (the paper's intra-network
+/// parallelization — each cluster core computes a contiguous block of
+/// neurons), run one job per range on the persistent [`BatchPool`], and
+/// let `execute`'s completion barrier be the per-layer barrier. Each
+/// job computes its rows for ALL samples into a contiguous thread-local
+/// block and scatters them into the sample-major output (single-sample
+/// runs write in place — their row range IS contiguous). Row
+/// accumulation is independent, so any core count and any ragged split
+/// is bit-exact vs the serial plan run — `rust/tests/prop_rowsplit.rs`
+/// pins this.
+///
+/// This composes with (rather than replaces) the inter-sample chunking
+/// of [`run_batch_parallel`]: row-splitting parallelizes the *latency*
+/// of one sample stream, sample-chunking parallelizes *throughput* over
+/// many; see README "Performance".
+fn rowsplit_f32_core(
+    plan: &ExecPlan,
+    inputs: &[f32],
+    n_samples: usize,
+    workers: usize,
+    out: &mut [f32],
+) {
+    let n_layers = plan.num_layers();
+    kernels::with_thread_scratch_f32(|scratch| {
+        let (a, b) = scratch.buffers(plan.max_layer_width() * n_samples);
+        for li in 0..n_layers {
+            let last = li + 1 == n_layers;
+            let (n_in, n_out) = plan.layer_dims(li);
+            let (src, dst) = kernels::batch_route(li, last, inputs, a, b, out);
+            let src = &src[..n_in * n_samples];
+            let dst = &mut dst[..n_out * n_samples];
+            let ranges = plan.partition_rows(li, workers);
+            if ranges.len() <= 1 {
+                plan.run_layer_rows_f32(li, src, n_samples, 0..n_out, dst);
+                continue;
+            }
+            let ptr = SendPtr(dst.as_mut_ptr());
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+            for &(r0, r1) in &ranges {
+                jobs.push(Box::new(move || {
+                    let rr = r1 - r0;
+                    // SAFETY: every job writes only rows [r0, r1) of each
+                    // sample's output; ranges are disjoint and cover
+                    // [0, n_out), and `execute` does not return until
+                    // every job has acked — no two writers alias, no
+                    // reader runs concurrently. Jobs run on pool worker
+                    // threads, so their thread-local scratch never
+                    // collides with this (caller) thread's arena.
+                    if n_samples == 1 {
+                        let d = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r0), rr) };
+                        plan.run_layer_rows_f32(li, src, 1, r0..r1, d);
+                    } else {
+                        kernels::with_thread_scratch_f32(|s| {
+                            let (tmp, _) = s.buffers(rr * n_samples);
+                            plan.run_layer_rows_f32(li, src, n_samples, r0..r1, tmp);
+                            for smp in 0..n_samples {
+                                let d = unsafe {
+                                    std::slice::from_raw_parts_mut(ptr.0.add(smp * n_out + r0), rr)
+                                };
+                                d.copy_from_slice(&tmp[smp * rr..(smp + 1) * rr]);
+                            }
+                        });
+                    }
+                }));
+            }
+            // Per-layer barrier: execute() returns only when every row
+            // job of this layer has finished.
+            global_pool().execute(jobs);
+        }
+    });
+}
+
+/// Q-format row-split core: identical structure to the f32 core, plus
+/// the layer's narrow-path input scan hoisted out of the jobs (one scan
+/// per layer, shared verdict — not one scan per row job).
+fn rowsplit_q_core(
+    plan: &ExecPlan,
+    inputs: &[i32],
+    n_samples: usize,
+    workers: usize,
+    out: &mut [i32],
+) {
+    let n_layers = plan.num_layers();
+    kernels::with_thread_scratch_i32(|scratch| {
+        let (a, b) = scratch.buffers(plan.max_layer_width() * n_samples);
+        for li in 0..n_layers {
+            let last = li + 1 == n_layers;
+            let (n_in, n_out) = plan.layer_dims(li);
+            let (src, dst) = kernels::batch_route(li, last, inputs, a, b, out);
+            let src = &src[..n_in * n_samples];
+            let dst = &mut dst[..n_out * n_samples];
+            let ranges = plan.partition_rows(li, workers);
+            let narrow = plan.narrow_ok(li, src);
+            if ranges.len() <= 1 {
+                plan.run_layer_rows_q_hinted(li, src, n_samples, (0..n_out, narrow), dst);
+                continue;
+            }
+            let ptr = SendPtr(dst.as_mut_ptr());
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+            for &(r0, r1) in &ranges {
+                jobs.push(Box::new(move || {
+                    let rr = r1 - r0;
+                    // SAFETY: see rowsplit_f32_core — disjoint row
+                    // ranges, barrier before any other access.
+                    if n_samples == 1 {
+                        let d = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r0), rr) };
+                        plan.run_layer_rows_q_hinted(li, src, 1, (r0..r1, narrow), d);
+                    } else {
+                        kernels::with_thread_scratch_i32(|s| {
+                            let (tmp, _) = s.buffers(rr * n_samples);
+                            plan.run_layer_rows_q_hinted(li, src, n_samples, (r0..r1, narrow), tmp);
+                            for smp in 0..n_samples {
+                                let d = unsafe {
+                                    std::slice::from_raw_parts_mut(ptr.0.add(smp * n_out + r0), rr)
+                                };
+                                d.copy_from_slice(&tmp[smp * rr..(smp + 1) * rr]);
+                            }
+                        });
+                    }
+                }));
+            }
+            global_pool().execute(jobs);
+        }
+    });
+}
+
+/// Run a compiled f32 [`ExecPlan`] with every layer's output rows split
+/// across `threads` workers (0 = all cores). Bit-identical to the
+/// serial plan run and therefore to the dispatch path.
+///
+/// Must be called from OUTSIDE the global pool: the per-layer barrier
+/// submits jobs to [`global_pool`] and blocks for them, so invoking
+/// this (or [`run_plan_q_rowsplit`]) from inside a job already running
+/// on that pool — e.g. from work submitted via the `run_batch_*_parallel`
+/// drivers — can deadlock with every worker waiting. The two
+/// parallelism axes compose at the call-site level (pick per workload),
+/// not by nesting.
+pub fn run_plan_rowsplit(
+    plan: &ExecPlan,
+    inputs: &[f32],
+    n_samples: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; n_samples * plan.num_outputs()];
+    run_plan_rowsplit_into(plan, inputs, n_samples, threads, &mut out);
+    out
+}
+
+/// [`run_plan_rowsplit`] writing into a caller-owned buffer — the
+/// allocation-free form timed loops reuse.
+pub fn run_plan_rowsplit_into(
+    plan: &ExecPlan,
+    inputs: &[f32],
+    n_samples: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    assert!(plan.is_float(), "f32 row-split driver on a {} plan", plan.repr_label());
+    assert_eq!(inputs.len(), n_samples * plan.num_inputs());
+    assert_eq!(out.len(), n_samples * plan.num_outputs());
+    if n_samples == 0 {
+        return;
+    }
+    rowsplit_f32_core(plan, inputs, n_samples, resolve_threads(threads), out);
+}
+
+/// Q-format counterpart of [`run_plan_rowsplit`] for Q32 and packed
+/// plans. Bit-exact vs [`ExecPlan::run_batch_q`] for any core count.
+/// Same no-nesting rule as [`run_plan_rowsplit`].
+pub fn run_plan_q_rowsplit(
+    plan: &ExecPlan,
+    inputs_q: &[i32],
+    n_samples: usize,
+    threads: usize,
+) -> Vec<i32> {
+    let mut out = vec![0i32; n_samples * plan.num_outputs()];
+    run_plan_q_rowsplit_into(plan, inputs_q, n_samples, threads, &mut out);
+    out
+}
+
+/// [`run_plan_q_rowsplit`] writing into a caller-owned buffer.
+pub fn run_plan_q_rowsplit_into(
+    plan: &ExecPlan,
+    inputs_q: &[i32],
+    n_samples: usize,
+    threads: usize,
+    out: &mut [i32],
+) {
+    assert!(!plan.is_float(), "Q row-split driver on an f32 plan");
+    assert_eq!(inputs_q.len(), n_samples * plan.num_inputs());
+    assert_eq!(out.len(), n_samples * plan.num_outputs());
+    if n_samples == 0 {
+        return;
+    }
+    rowsplit_q_core(plan, inputs_q, n_samples, resolve_threads(threads), out);
+}
+
 /// Order-sensitive digest of a float output buffer (bit patterns, so
 /// "close enough" never masks a divergence).
 pub fn checksum_f32(xs: &[f32]) -> u64 {
@@ -469,6 +665,59 @@ pub fn measure_throughput(
     });
     let ck_p15_par = ck;
 
+    // Compiled execution plans: serial (static dispatch, contiguous
+    // arena, compile-time narrow-kernel resolution) and the
+    // neuron-parallel row-split driver. Parity asserted before timing.
+    let plan_f = ExecPlan::compile(net);
+    let plan_q = ExecPlan::compile(fixed);
+    assert_eq!(
+        plan_f.run_batch_f32(xs, n_samples),
+        net.run_batch(xs, n_samples),
+        "f32 exec plan diverged from dispatch"
+    );
+    assert_eq!(
+        run_plan_rowsplit(&plan_f, xs, n_samples, threads),
+        net.run_batch(xs, n_samples),
+        "f32 row-split diverged from dispatch"
+    );
+    assert_eq!(
+        plan_q.run_batch_q(&xq, n_samples),
+        fixed.run_batch_q(&xq, n_samples),
+        "q32 exec plan diverged from dispatch"
+    );
+    assert_eq!(
+        run_plan_q_rowsplit(&plan_q, &xq, n_samples, threads),
+        fixed.run_batch_q(&xq, n_samples),
+        "q32 row-split diverged from dispatch"
+    );
+    let mut pscratch = PlanScratch::new();
+    let mut plan_out_f = vec![0.0f32; n_samples * net.num_outputs()];
+    let t_planf = super::time_median(warmup, reps, || {
+        plan_f.run_batch_f32_into(xs, n_samples, &mut pscratch, &mut plan_out_f);
+        ck = checksum_f32(&plan_out_f);
+        std::hint::black_box(ck);
+    });
+    let ck_planf = ck;
+    let t_planf_rs = super::time_median(warmup, reps, || {
+        run_plan_rowsplit_into(&plan_f, xs, n_samples, threads, &mut plan_out_f);
+        ck = checksum_f32(&plan_out_f);
+        std::hint::black_box(ck);
+    });
+    let ck_planf_rs = ck;
+    let mut plan_out_q = vec![0i32; n_samples * fixed.num_outputs()];
+    let t_planq = super::time_median(warmup, reps, || {
+        plan_q.run_batch_q_into(&xq, n_samples, &mut pscratch, &mut plan_out_q);
+        ck = checksum_i32(&plan_out_q);
+        std::hint::black_box(ck);
+    });
+    let ck_planq = ck;
+    let t_planq_rs = super::time_median(warmup, reps, || {
+        run_plan_q_rowsplit_into(&plan_q, &xq, n_samples, threads, &mut plan_out_q);
+        ck = checksum_i32(&plan_out_q);
+        std::hint::black_box(ck);
+    });
+    let ck_planq_rs = ck;
+
     let rows = vec![
         ThroughputRow { name: "float: looped run()", seconds: t_loop, baseline_seconds: t_loop, checksum: ck_loop },
         ThroughputRow { name: "float: run_batch()", seconds: t_batch, baseline_seconds: t_loop, checksum: ck_batch },
@@ -480,6 +729,10 @@ pub fn measure_throughput(
         ThroughputRow { name: "packed q7: parallel driver", seconds: t_p7_par, baseline_seconds: t_loop_q, checksum: ck_p7_par },
         ThroughputRow { name: "packed q15: run_batch_q()", seconds: t_p15, baseline_seconds: t_loop_q, checksum: ck_p15 },
         ThroughputRow { name: "packed q15: parallel driver", seconds: t_p15_par, baseline_seconds: t_loop_q, checksum: ck_p15_par },
+        ThroughputRow { name: "float: exec plan", seconds: t_planf, baseline_seconds: t_loop, checksum: ck_planf },
+        ThroughputRow { name: "float: exec plan row-split", seconds: t_planf_rs, baseline_seconds: t_loop, checksum: ck_planf_rs },
+        ThroughputRow { name: "fixed: exec plan", seconds: t_planq, baseline_seconds: t_loop_q, checksum: ck_planq },
+        ThroughputRow { name: "fixed: exec plan row-split", seconds: t_planq_rs, baseline_seconds: t_loop_q, checksum: ck_planq_rs },
     ];
     // Checksums within one representation must agree — an elided or
     // divergent timed loop must never be reported as a speedup. The
@@ -489,6 +742,10 @@ pub fn measure_throughput(
     assert_eq!(rows[4].checksum, rows[5].checksum, "fixed batch/parallel checksum");
     assert_eq!(rows[6].checksum, rows[7].checksum, "packed q7 checksum");
     assert_eq!(rows[8].checksum, rows[9].checksum, "packed q15 checksum");
+    assert_eq!(rows[10].checksum, rows[1].checksum, "f32 exec plan checksum");
+    assert_eq!(rows[11].checksum, rows[1].checksum, "f32 row-split checksum");
+    assert_eq!(rows[12].checksum, rows[4].checksum, "q32 exec plan checksum");
+    assert_eq!(rows[13].checksum, rows[4].checksum, "q32 row-split checksum");
     rows
 }
 
@@ -606,13 +863,90 @@ pub fn kernel_sweep(
         }));
     }
 
+    // Compiled execution plans, one per kernel family: serial (static
+    // dispatch over the contiguous arena) and the neuron-parallel
+    // row-split driver. Output checksums must be identical to the
+    // dispatch path of the same family — a compiled plan that computes
+    // anything else must never be timed as an optimization.
+    {
+        use std::cell::RefCell;
+        let pscratch = RefCell::new(PlanScratch::new());
+        let plan_f = ExecPlan::compile(net);
+        let plan_q = ExecPlan::compile(&fixed);
+        let plan_q7 = ExecPlan::compile(&packed7);
+        let plan_q15 = ExecPlan::compile(&packed15);
+        // Output buffers hoisted out of the timed closures: these rows
+        // measure the execution strategy, not the allocator (the plan's
+        // whole point is zero steady-state allocation).
+        let out_f = RefCell::new(vec![0.0f32; n_samples * plan_f.num_outputs()]);
+        let out_q = RefCell::new(vec![0i32; n_samples * plan_q.num_outputs()]);
+
+        let dispatch_f = net.run_batch_with_kernel(&BlockedF32, xs, n_samples);
+        assert_eq!(plan_f.run_batch_f32(xs, n_samples), dispatch_f, "exec_plan_f32 diverged");
+        assert_eq!(
+            run_plan_rowsplit(&plan_f, xs, n_samples, threads),
+            dispatch_f,
+            "exec_plan_f32 row-split diverged"
+        );
+        rows.push(timed_row("exec_plan_f32", "serial", plan_f.param_bytes(), &|| {
+            let mut out = out_f.borrow_mut();
+            plan_f.run_batch_f32_into(xs, n_samples, &mut pscratch.borrow_mut(), &mut out);
+            checksum_f32(&out)
+        }));
+        rows.push(timed_row("exec_plan_f32", "rowsplit", plan_f.param_bytes(), &|| {
+            let mut out = out_f.borrow_mut();
+            run_plan_rowsplit_into(&plan_f, xs, n_samples, threads, &mut out);
+            checksum_f32(&out)
+        }));
+
+        for (name, plan, xqp) in [
+            ("exec_plan_q32", &plan_q, &xq),
+            ("exec_plan_q7", &plan_q7, &xq7),
+            ("exec_plan_q15", &plan_q15, &xq15),
+        ] {
+            let dispatch = match name {
+                "exec_plan_q32" => fixed.run_batch_q(xqp, n_samples),
+                "exec_plan_q7" => packed7.run_batch_q(xqp, n_samples),
+                _ => packed15.run_batch_q(xqp, n_samples),
+            };
+            assert_eq!(plan.run_batch_q(xqp, n_samples), dispatch, "{name} diverged");
+            assert_eq!(
+                run_plan_q_rowsplit(plan, xqp, n_samples, threads),
+                dispatch,
+                "{name} row-split diverged"
+            );
+            rows.push(timed_row(name, "serial", plan.param_bytes(), &|| {
+                let mut out = out_q.borrow_mut();
+                plan.run_batch_q_into(xqp, n_samples, &mut pscratch.borrow_mut(), &mut out);
+                checksum_i32(&out)
+            }));
+            rows.push(timed_row(name, "rowsplit", plan.param_bytes(), &|| {
+                let mut out = out_q.borrow_mut();
+                run_plan_q_rowsplit_into(plan, xqp, n_samples, threads, &mut out);
+                checksum_i32(&out)
+            }));
+        }
+    }
+
     for pair in rows.chunks(2) {
         assert_eq!(
             pair[0].checksum, pair[1].checksum,
-            "{} serial/parallel checksum mismatch",
-            pair[0].kernel
+            "{} {}/{} checksum mismatch",
+            pair[0].kernel, pair[0].mode, pair[1].mode
         );
     }
+    // Every exec-plan family must checksum identically to its dispatch
+    // counterpart (same representation, same inputs).
+    let ck_of = |kernel: &str| {
+        rows.iter()
+            .find(|r| r.kernel == kernel && r.mode == "serial")
+            .map(|r| r.checksum)
+            .unwrap()
+    };
+    assert_eq!(ck_of("exec_plan_f32"), ck_of("blocked_f32"), "f32 plan/dispatch checksum");
+    assert_eq!(ck_of("exec_plan_q32"), ck_of("fixed_q"), "q32 plan/dispatch checksum");
+    assert_eq!(ck_of("exec_plan_q7"), ck_of("packed_q7"), "q7 plan/dispatch checksum");
+    assert_eq!(ck_of("exec_plan_q15"), ck_of("packed_q15"), "q15 plan/dispatch checksum");
     rows
 }
 
@@ -755,16 +1089,17 @@ mod tests {
     }
 
     #[test]
-    fn measure_throughput_reports_all_ten_modes() {
+    fn measure_throughput_reports_all_fourteen_modes() {
         let fnet = net(&[4, 6, 2], 3);
         let fixed = FixedNetwork::from_float(&fnet, 1.0).unwrap();
         let mut rng = Rng::new(2);
         let n = 8;
         let xs: Vec<f32> = (0..n * 4).map(|_| rng.range_f32(-1.0, 1.0)).collect();
         let rows = measure_throughput(&fnet, &fixed, &xs, n, 2, 0, 1);
-        assert_eq!(rows.len(), 10);
+        assert_eq!(rows.len(), 14);
         assert!(rows.iter().all(|r| r.seconds >= 0.0 && r.baseline_seconds >= 0.0));
         assert_eq!(rows[0].seconds, rows[0].baseline_seconds);
+        assert!(rows.iter().any(|r| r.name == "fixed: exec plan row-split"));
     }
 
     #[test]
@@ -779,11 +1114,45 @@ mod tests {
             assert!(kernels.contains(&(k, "serial")), "{k} serial missing");
             assert!(kernels.contains(&(k, "parallel")), "{k} parallel missing");
         }
+        for k in ["exec_plan_f32", "exec_plan_q32", "exec_plan_q7", "exec_plan_q15"] {
+            assert!(kernels.contains(&(k, "serial")), "{k} serial missing");
+            assert!(kernels.contains(&(k, "rowsplit")), "{k} rowsplit missing");
+        }
         // Packed storage beats the wide i32 representation.
         let wide = rows.iter().find(|r| r.kernel == "fixed_q").unwrap().bytes_per_network;
         let p7 = rows.iter().find(|r| r.kernel == "packed_q7").unwrap().bytes_per_network;
         let p15 = rows.iter().find(|r| r.kernel == "packed_q15").unwrap().bytes_per_network;
         assert!(p7 < wide && p15 < wide && p7 < p15);
+    }
+
+    #[test]
+    fn rowsplit_bit_identical_to_serial_plan_all_worker_counts() {
+        let fnet = net(&[6, 11, 1, 4], 41); // includes a single-neuron layer
+        let plan_f = ExecPlan::compile(&fnet);
+        let fixed = FixedNetwork::from_float(&fnet, 1.0).unwrap();
+        let plan_q = ExecPlan::compile(&fixed);
+        let mut rng = Rng::new(6);
+        for n in [1usize, 5, 23] {
+            let xs: Vec<f32> = (0..n * 6).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let want_f = plan_f.run_batch_f32(&xs, n);
+            let xq = fixed.quantize_input(&xs);
+            let want_q = plan_q.run_batch_q(&xq, n);
+            for workers in [1usize, 2, 3, 8] {
+                assert_eq!(
+                    run_plan_rowsplit(&plan_f, &xs, n, workers),
+                    want_f,
+                    "f32 n={n} workers={workers}"
+                );
+                assert_eq!(
+                    run_plan_q_rowsplit(&plan_q, &xq, n, workers),
+                    want_q,
+                    "q32 n={n} workers={workers}"
+                );
+            }
+        }
+        // Empty batches are no-ops.
+        assert!(run_plan_rowsplit(&plan_f, &[], 0, 4).is_empty());
+        assert!(run_plan_q_rowsplit(&plan_q, &[], 0, 4).is_empty());
     }
 
     #[test]

@@ -82,8 +82,11 @@ pub fn whole_network_cycles(shape: &NetShape, target: Target, dtype: DataType) -
 }
 
 /// Wall-clock timing helper for the perf bench: median of `reps` runs
-/// after `warmup` runs; returns seconds per call.
+/// after `warmup` runs; returns seconds per call. `reps` is clamped to
+/// a minimum of 1 — `reps == 0` used to index the median of an empty
+/// sample vector and panic.
 pub fn time_median<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> f64 {
+    let reps = reps.max(1);
     for _ in 0..warmup {
         f();
     }
@@ -166,5 +169,16 @@ mod tests {
             std::hint::black_box(x);
         });
         assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn time_median_zero_reps_clamps_instead_of_panicking() {
+        // Regression: reps == 0 indexed samples[0] of an empty vec.
+        let mut calls = 0usize;
+        let t = time_median(0, 0, || {
+            calls += 1;
+        });
+        assert!(t >= 0.0);
+        assert_eq!(calls, 1, "clamped to one measured rep");
     }
 }

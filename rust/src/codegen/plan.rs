@@ -78,10 +78,17 @@ impl NetRepr {
         }
     }
 
-    /// Cost-model options for this representation on `target`.
+    /// Cost-model options for this representation on `target`. Packed
+    /// representations additionally quantize the parallel row split to
+    /// whole 4-row word panels (`row_block`), matching the panel
+    /// schedule the emulator walks and the host row-split driver runs.
     pub fn cost_options(self, target: Target) -> CostOptions {
         CostOptions {
             simd_lanes: self.simd_lanes(target.core()),
+            row_block: match self {
+                NetRepr::Q7 | NetRepr::Q15 => 4,
+                _ => 1,
+            },
             ..CostOptions::default()
         }
     }

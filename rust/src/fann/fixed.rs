@@ -201,6 +201,14 @@ impl FixedNetwork {
         self.layers.iter().map(|l| l.weights.len()).sum()
     }
 
+    /// Compile into an ahead-of-time execution plan
+    /// ([`crate::kernels::ExecPlan`]): static kernel dispatch, a
+    /// contiguous Q(dec) arena, and the compile-time narrow-multiply
+    /// resolution. Bit-exact vs [`run_batch_q`](Self::run_batch_q).
+    pub fn compile_plan(&self) -> kernels::ExecPlan {
+        kernels::ExecPlan::compile(self)
+    }
+
     /// Offline pack step (the load-time conversion the ISSUE's paper
     /// analogy calls neuron-wise DMA layout): convert every layer's
     /// row-major Q(dec) weights into [`PackedPanels`] at `width`.
@@ -324,12 +332,26 @@ impl PackedNetwork {
         self.layers.last().unwrap().panels.n_out
     }
 
+    pub fn layer_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![self.layers[0].panels.n_in];
+        sizes.extend(self.layers.iter().map(|l| l.panels.n_out));
+        sizes
+    }
+
     pub fn max_layer_width(&self) -> usize {
         self.layers
             .iter()
             .map(|l| l.panels.n_in.max(l.panels.n_out))
             .max()
             .unwrap()
+    }
+
+    /// Compile into an ahead-of-time execution plan with the panel
+    /// words of every layer copied into one flat word arena
+    /// ([`crate::kernels::ExecPlan`]). Bit-exact vs
+    /// [`run_batch_q`](Self::run_batch_q).
+    pub fn compile_plan(&self) -> kernels::ExecPlan {
+        kernels::ExecPlan::compile(self)
     }
 
     /// Packed parameter bytes (words + wide biases) — the

@@ -290,6 +290,15 @@ impl Network {
         }
     }
 
+    /// Compile this network into an ahead-of-time execution plan:
+    /// concrete kernel, fused epilogue and a contiguous parameter arena
+    /// resolved once ([`crate::kernels::ExecPlan`]), with zero per-call
+    /// dispatch and a row-split multicore path. Output is bit-identical
+    /// to [`run_batch`](Self::run_batch).
+    pub fn compile_plan(&self) -> kernels::ExecPlan {
+        kernels::ExecPlan::compile(self)
+    }
+
     /// Forward pass retaining every layer's output (for backprop). Returns
     /// `outputs[l]` = activations of layer l (l = 0 is the input itself).
     pub fn forward_trace(&self, input: &[f32]) -> Vec<Vec<f32>> {

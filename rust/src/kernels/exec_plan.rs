@@ -1,0 +1,888 @@
+//! Ahead-of-time **compiled execution plans** — the host-side analogue
+//! of the paper's generator resolving everything it can before the
+//! first inference runs (CMSIS-NN's "resolve layout and fusion ahead of
+//! time, not per call").
+//!
+//! [`ExecPlan::compile`] walks a [`Network`], [`FixedNetwork`] or
+//! [`PackedNetwork`] **once** and freezes, per layer:
+//!
+//! * the **concrete kernel** — static dispatch, no per-call
+//!   `dyn DenseKernel` vtable hop. For Q32 plans the compiler also
+//!   inspects the weights: it records the largest `|w|` and derives the
+//!   input bound under which every product fits 32-bit arithmetic, so
+//!   the run path picks the narrow-multiply kernel with one cheap input
+//!   scan instead of paying the generic widening `qmul` per product
+//!   (bit-exact either way — a product that fits i32 shifts
+//!   identically at both widths; see [`crate::kernels::packed`]).
+//! * the **fused activation epilogue** (activation + steepness), baked
+//!   next to the kernel choice.
+//! * the **parameters**, copied into a single contiguous arena in
+//!   traversal order — weights then biases, layer after layer — so an
+//!   inference streams one flat allocation front to back (the software
+//!   mirror of the paper's L1-resident parameter image).
+//!
+//! Execution then needs **zero steady-state allocation**: one flat
+//! [`PlanScratch`] buffer is split in half for the inter-layer
+//! ping-pong, the first layer reads the caller's input and the last
+//! writes the caller's output directly.
+//!
+//! # Row-split (neuron-parallel) execution
+//!
+//! [`split_rows`] is THE row partition of the paper's intra-network
+//! parallelization (neuron-wise splitting of each layer across the Mr.
+//! Wolf cluster's cores): near-equal contiguous ranges, first `n % w`
+//! ranges one row longer. It is shared by three consumers so they can
+//! never disagree: the multicore host driver
+//! (`bench::batch::run_plan_rowsplit*`), the emulator's per-core
+//! cluster walk, and the analytic cost model
+//! ([`rows_per_core_max`] == `ceil(n/cores)` — the wall-clock rows of a
+//! layer are whatever the fullest core received). Because every output
+//! row's accumulation is independent, any split is bit-exact; for
+//! packed plans the partition is panel-aligned (four rows share a word
+//! block).
+
+use std::ops::Range;
+
+use super::layout::{PackedWidth, ROWS_PER_PANEL};
+use super::{DenseKernel, DenseLayerRef, FixedQ, PackedLayerRef, PackedQ15, PackedQ7};
+use crate::fann::activation::Activation;
+use crate::fann::{FixedNetwork, Network, PackedNetwork};
+use crate::quantize::{self, sat_i32};
+
+/// Split `n` rows into at most `workers` contiguous `(start, len)`
+/// ranges of near-equal size (first `n % workers` ranges get one extra
+/// row). The one row-split schedule shared by the host driver, the
+/// emulator and the cost model.
+pub fn split_rows(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let workers = workers.max(1).min(n.max(1));
+    let base = n / workers;
+    let extra = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
+        if len == 0 {
+            break;
+        }
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Rows of the fullest range of [`split_rows`]`(n, cores)` — the
+/// per-layer wall-clock work of a parallel section. Identical to
+/// `n.div_ceil(cores)` for this near-equal split; the cost model uses
+/// this accessor so its arithmetic provably follows the schedule the
+/// executors walk.
+pub fn rows_per_core_max(n: usize, cores: usize) -> usize {
+    split_rows(n, cores).first().map_or(0, |&(_, len)| len)
+}
+
+/// Block-aligned row partition: distribute `ceil(n / block)` blocks of
+/// `block` rows across `workers` with [`split_rows`], clipping the last
+/// range to `n`. Returns `(r0, r1)` half-open row ranges. `block == 1`
+/// is exactly the row-granular split; the packed representations use
+/// `block == ROWS_PER_PANEL` because four output rows share one word
+/// panel, so a core's work quantizes to whole panels. This is the one
+/// partition the host row-split driver, the emulator's cluster walk and
+/// the cost model all derive from.
+pub fn split_row_blocks(n: usize, block: usize, workers: usize) -> Vec<(usize, usize)> {
+    let block = block.max(1);
+    split_rows(n.div_ceil(block), workers)
+        .into_iter()
+        .map(|(b0, blen)| (b0 * block, ((b0 + blen) * block).min(n)))
+        .collect()
+}
+
+/// Wall-clock rows of the fullest core under
+/// [`split_row_blocks`]`(n, block, cores)` — what a parallel layer's
+/// compute is billed at. Equals `ceil(n / cores)` for `block == 1`.
+pub fn rows_per_core_block_max(n: usize, block: usize, cores: usize) -> usize {
+    split_row_blocks(n, block, cores)
+        .into_iter()
+        .map(|(r0, r1)| r1 - r0)
+        .max()
+        .unwrap_or(0)
+}
+
+/// Sources an [`ExecPlan`] can be compiled from.
+pub trait PlanSource {
+    fn compile_exec_plan(&self) -> ExecPlan;
+}
+
+/// Frozen per-layer record: shape, arena offsets, fused epilogue, and
+/// the compile-time kernel-selection facts.
+#[derive(Debug, Clone)]
+struct PlanLayer {
+    n_in: usize,
+    n_out: usize,
+    /// Offset of this layer's weights in the plan arena (elements for
+    /// dense plans, `u32` words for packed plans).
+    w_off: usize,
+    /// Weight span at `w_off` (elements / words).
+    w_len: usize,
+    /// Offset of this layer's biases (same arena for dense plans, the
+    /// bias arena for packed plans).
+    b_off: usize,
+    act: Activation,
+    steepness: f32,
+    /// Q32 plans: inclusive bound on `|x|` under which every product
+    /// `w · x` of this layer fits in i32 (derived from `max |w|` at
+    /// compile time). Unused by f32/packed plans.
+    narrow_x_bound: u32,
+    /// Packed plans: words covering one row (`ceil(n_in / elems)`).
+    words_per_row: usize,
+}
+
+/// The representation a plan executes in, with its parameter arena.
+#[derive(Debug, Clone)]
+enum Repr {
+    F32 {
+        arena: Vec<f32>,
+    },
+    Q32 {
+        arena: Vec<i32>,
+        dec: u32,
+    },
+    Packed {
+        words: Vec<u32>,
+        biases: Vec<i32>,
+        dec: u32,
+        width: PackedWidth,
+    },
+}
+
+/// A compiled, immediately executable network: concrete kernels, fused
+/// epilogues and a contiguous parameter arena resolved once at compile
+/// time (see the module docs). `Sync`, so one plan can be shared by
+/// every worker of a row-split or batch-parallel driver.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    repr: Repr,
+    layers: Vec<PlanLayer>,
+    sizes: Vec<usize>,
+}
+
+/// The single flat scratch of a plan execution: one buffer per element
+/// type, split in half for the inter-layer ping-pong. Grown once,
+/// never shrunk — steady-state plan runs allocate nothing.
+#[derive(Debug, Default)]
+pub struct PlanScratch {
+    f: Vec<f32>,
+    q: Vec<i32>,
+}
+
+impl PlanScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn halves_f32(&mut self, len: usize) -> (&mut [f32], &mut [f32]) {
+        if self.f.len() < 2 * len {
+            self.f.resize(2 * len, 0.0);
+        }
+        let (a, b) = self.f.split_at_mut(len);
+        (a, &mut b[..len])
+    }
+
+    fn halves_q(&mut self, len: usize) -> (&mut [i32], &mut [i32]) {
+        if self.q.len() < 2 * len {
+            self.q.resize(2 * len, 0);
+        }
+        let (a, b) = self.q.split_at_mut(len);
+        (a, &mut b[..len])
+    }
+}
+
+impl ExecPlan {
+    /// Compile an execution plan from any supported network form
+    /// (`&Network`, `&FixedNetwork`, `&PackedNetwork`).
+    pub fn compile<S: PlanSource + ?Sized>(src: &S) -> ExecPlan {
+        src.compile_exec_plan()
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.sizes[0]
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Layer sizes `[in, h1, ..., out]` of the compiled network.
+    pub fn layer_sizes(&self) -> Vec<usize> {
+        self.sizes.clone()
+    }
+
+    /// `(n_in, n_out)` of layer `li`.
+    pub fn layer_dims(&self, li: usize) -> (usize, usize) {
+        (self.layers[li].n_in, self.layers[li].n_out)
+    }
+
+    /// Per-layer activations (in order).
+    pub fn activations(&self) -> Vec<Activation> {
+        self.layers.iter().map(|l| l.act).collect()
+    }
+
+    pub fn max_layer_width(&self) -> usize {
+        self.sizes.iter().copied().max().unwrap()
+    }
+
+    /// `true` for plans compiled from a float network.
+    pub fn is_float(&self) -> bool {
+        matches!(self.repr, Repr::F32 { .. })
+    }
+
+    /// The Q(dec) decimal point of fixed-point plans (`None` for f32).
+    pub fn decimal_point(&self) -> Option<u32> {
+        match &self.repr {
+            Repr::F32 { .. } => None,
+            Repr::Q32 { dec, .. } => Some(*dec),
+            Repr::Packed { dec, .. } => Some(*dec),
+        }
+    }
+
+    /// Short representation label for reports (`f32`/`q32`/`q7`/`q15`).
+    pub fn repr_label(&self) -> &'static str {
+        match &self.repr {
+            Repr::F32 { .. } => "f32",
+            Repr::Q32 { .. } => "q32",
+            Repr::Packed { width, .. } => width.label(),
+        }
+    }
+
+    /// Parameter arena footprint in bytes (weights + biases in the
+    /// plan's representation).
+    pub fn param_bytes(&self) -> usize {
+        match &self.repr {
+            Repr::F32 { arena } => arena.len() * 4,
+            Repr::Q32 { arena, .. } => arena.len() * 4,
+            Repr::Packed { words, biases, .. } => words.len() * 4 + biases.len() * 4,
+        }
+    }
+
+    /// The parallel split granularity of this plan's rows: packed plans
+    /// quantize to whole word panels, dense plans split per row.
+    pub fn row_block(&self) -> usize {
+        match &self.repr {
+            Repr::Packed { .. } => ROWS_PER_PANEL,
+            _ => 1,
+        }
+    }
+
+    /// Row partition of layer `li` for `workers` cores: the shared
+    /// [`split_row_blocks`] schedule at this plan's
+    /// [`row_block`](Self::row_block) (the end of the last range is
+    /// clipped to `n_out`). Returns `(r0, r1)` half-open row ranges.
+    pub fn partition_rows(&self, li: usize, workers: usize) -> Vec<(usize, usize)> {
+        split_row_blocks(self.layers[li].n_out, self.row_block(), workers)
+    }
+
+    /// Whether layer `li`'s inputs clear the compile-time narrow bound,
+    /// i.e. the 32-bit multiply kernel is exact for this call (for Q32
+    /// plans the bound comes from `max |w|`; for packed plans it is the
+    /// width's `|x| < FAST_LIMIT` condition). Always `false` for f32
+    /// plans. Row-split drivers hoist this one scan per layer and share
+    /// the verdict across row jobs instead of rescanning per job.
+    pub fn narrow_ok(&self, li: usize, src: &[i32]) -> bool {
+        match &self.repr {
+            Repr::F32 { .. } => false,
+            _ => {
+                let bound = self.layers[li].narrow_x_bound;
+                src.iter().all(|&v| v.unsigned_abs() <= bound)
+            }
+        }
+    }
+
+    /// Run one float sample end to end: f32 plans run directly; fixed
+    /// plans quantize at the compiled decimal point, run the integer
+    /// path and dequantize (what [`crate::simulator::Executable`] needs).
+    pub fn run(&self, input: &[f32]) -> Vec<f32> {
+        assert_eq!(input.len(), self.num_inputs());
+        let mut scratch = PlanScratch::new();
+        match &self.repr {
+            Repr::F32 { .. } => {
+                let mut out = vec![0.0f32; self.num_outputs()];
+                self.run_batch_f32_into(input, 1, &mut scratch, &mut out);
+                out
+            }
+            _ => {
+                let dec = self.decimal_point().unwrap();
+                let xq: Vec<i32> = input.iter().map(|&v| quantize::quantize(v, dec)).collect();
+                let mut out = vec![0i32; self.num_outputs()];
+                self.run_batch_q_into(&xq, 1, &mut scratch, &mut out);
+                out.into_iter()
+                    .map(|q| quantize::dequantize(q as i64, dec))
+                    .collect()
+            }
+        }
+    }
+
+    /// Batched f32 execution (f32 plans only): `xs` packs `n_samples`
+    /// rows, `out` receives `n_samples × n_out`. Bit-identical to the
+    /// dispatch path ([`Network::run_batch`]) — same kernel, same
+    /// parameter values, same order — with zero per-layer dispatch and
+    /// zero steady-state allocation.
+    pub fn run_batch_f32_into(
+        &self,
+        xs: &[f32],
+        n_samples: usize,
+        scratch: &mut PlanScratch,
+        out: &mut [f32],
+    ) {
+        assert!(self.is_float(), "f32 entry point on a {} plan", self.repr_label());
+        assert_eq!(xs.len(), n_samples * self.num_inputs());
+        assert_eq!(out.len(), n_samples * self.num_outputs());
+        if n_samples == 0 {
+            return;
+        }
+        let n_layers = self.layers.len();
+        let (a, b) = scratch.halves_f32(self.max_layer_width() * n_samples);
+        for li in 0..n_layers {
+            let last = li + 1 == n_layers;
+            let (n_in, n_out) = self.layer_dims(li);
+            let (src, dst) = super::batch_route(li, last, xs, a, b, out);
+            self.run_layer_rows_f32(
+                li,
+                &src[..n_in * n_samples],
+                n_samples,
+                0..n_out,
+                &mut dst[..n_out * n_samples],
+            );
+        }
+    }
+
+    /// Vec-returning convenience for [`run_batch_f32_into`](Self::run_batch_f32_into).
+    pub fn run_batch_f32(&self, xs: &[f32], n_samples: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n_samples * self.num_outputs()];
+        let mut scratch = PlanScratch::new();
+        self.run_batch_f32_into(xs, n_samples, &mut scratch, &mut out);
+        out
+    }
+
+    /// Batched Q(dec) execution (Q32 and packed plans): bit-exact vs
+    /// the dispatch paths ([`FixedNetwork::run_batch_q`] /
+    /// [`PackedNetwork::run_batch_q`]) on the same quantized inputs.
+    pub fn run_batch_q_into(
+        &self,
+        xs: &[i32],
+        n_samples: usize,
+        scratch: &mut PlanScratch,
+        out: &mut [i32],
+    ) {
+        assert!(!self.is_float(), "Q entry point on an f32 plan");
+        assert_eq!(xs.len(), n_samples * self.num_inputs());
+        assert_eq!(out.len(), n_samples * self.num_outputs());
+        if n_samples == 0 {
+            return;
+        }
+        let n_layers = self.layers.len();
+        let (a, b) = scratch.halves_q(self.max_layer_width() * n_samples);
+        for li in 0..n_layers {
+            let last = li + 1 == n_layers;
+            let (n_in, n_out) = self.layer_dims(li);
+            let (src, dst) = super::batch_route(li, last, xs, a, b, out);
+            self.run_layer_rows_q(
+                li,
+                &src[..n_in * n_samples],
+                n_samples,
+                0..n_out,
+                &mut dst[..n_out * n_samples],
+            );
+        }
+    }
+
+    /// Vec-returning convenience for [`run_batch_q_into`](Self::run_batch_q_into).
+    pub fn run_batch_q(&self, xs: &[i32], n_samples: usize) -> Vec<i32> {
+        let mut out = vec![0i32; n_samples * self.num_outputs()];
+        let mut scratch = PlanScratch::new();
+        self.run_batch_q_into(xs, n_samples, &mut scratch, &mut out);
+        out
+    }
+
+    /// Compute rows `rows` of layer `li` for `n_samples` packed input
+    /// rows (f32 plans). `dst` holds the range's rows contiguously,
+    /// sample-major with row stride `rows.len()` — the row-split worker
+    /// granularity. Row accumulation is independent, so any range
+    /// reassembles the whole layer bit for bit.
+    pub fn run_layer_rows_f32(
+        &self,
+        li: usize,
+        src: &[f32],
+        n_samples: usize,
+        rows: Range<usize>,
+        dst: &mut [f32],
+    ) {
+        let l = &self.layers[li];
+        debug_assert!(rows.end <= l.n_out);
+        debug_assert_eq!(dst.len(), (rows.end - rows.start) * n_samples);
+        let arena = match &self.repr {
+            Repr::F32 { arena } => arena,
+            _ => panic!("f32 layer execution on a {} plan", self.repr_label()),
+        };
+        let w = &arena[l.w_off + rows.start * l.n_in..l.w_off + rows.end * l.n_in];
+        let b = &arena[l.b_off + rows.start..l.b_off + rows.end];
+        let lref = DenseLayerRef::new(l.n_in, rows.end - rows.start, w, b);
+        // Concrete kernel, resolved at compile time: BlockedF32's fused
+        // batched pass (the crate default the dispatch path also ends
+        // up in — same accumulation order per output row, so sub-range
+        // results are bit-identical to the whole-layer call).
+        super::BlockedF32.matmul_act(&lref, src, n_samples, dst, l.act, l.steepness);
+    }
+
+    /// Compute rows `rows` of layer `li` (Q32 and packed plans). For
+    /// packed plans `rows` must be panel-aligned (use
+    /// [`partition_rows`](Self::partition_rows)). Resolves the narrow
+    /// fast path itself; row-split drivers that already scanned the
+    /// layer input use [`run_layer_rows_q_hinted`](Self::run_layer_rows_q_hinted).
+    pub fn run_layer_rows_q(
+        &self,
+        li: usize,
+        src: &[i32],
+        n_samples: usize,
+        rows: Range<usize>,
+        dst: &mut [i32],
+    ) {
+        let narrow = self.narrow_ok(li, src);
+        self.run_layer_rows_q_hinted(li, src, n_samples, (rows, narrow), dst);
+    }
+
+    /// [`run_layer_rows_q`](Self::run_layer_rows_q) with the layer's
+    /// narrow-path verdict hoisted by the caller: `job` is the row
+    /// range plus the result of [`narrow_ok`](Self::narrow_ok) for this
+    /// layer's input, so N row jobs share one input scan. The hint only
+    /// selects between two bit-identical kernels — a wrong `false`
+    /// costs speed, never correctness; `true` must come from
+    /// `narrow_ok` (the narrow kernel assumes products fit i32).
+    pub fn run_layer_rows_q_hinted(
+        &self,
+        li: usize,
+        src: &[i32],
+        n_samples: usize,
+        job: (Range<usize>, bool),
+        dst: &mut [i32],
+    ) {
+        let (rows, narrow) = job;
+        let l = &self.layers[li];
+        debug_assert!(rows.end <= l.n_out);
+        debug_assert_eq!(dst.len(), (rows.end - rows.start) * n_samples);
+        match &self.repr {
+            Repr::Q32 { arena, dec } => {
+                let w = &arena[l.w_off + rows.start * l.n_in..l.w_off + rows.end * l.n_in];
+                let b = &arena[l.b_off + rows.start..l.b_off + rows.end];
+                let lref = DenseLayerRef::new(l.n_in, rows.end - rows.start, w, b);
+                if narrow {
+                    matmul_act_q32_narrow(*dec, &lref, src, n_samples, dst, l.act);
+                } else {
+                    FixedQ::new(*dec).matmul_act(&lref, src, n_samples, dst, l.act, 1.0);
+                }
+            }
+            Repr::Packed {
+                words,
+                biases,
+                dec,
+                width,
+            } => {
+                debug_assert_eq!(rows.start % ROWS_PER_PANEL, 0, "packed split must be panel-aligned");
+                let lref = PackedLayerRef::from_raw(
+                    *width,
+                    l.n_in,
+                    l.n_out,
+                    l.words_per_row,
+                    &words[l.w_off..l.w_off + l.w_len],
+                    &biases[l.b_off..l.b_off + l.n_out],
+                );
+                let p0 = rows.start / ROWS_PER_PANEL;
+                let p1 = rows.end.div_ceil(ROWS_PER_PANEL);
+                // The hoisted verdict: equivalent to the kernels'
+                // internal `all_fast` scan (|x| <= FAST_LIMIT - 1 ⟺
+                // |x| < FAST_LIMIT), resolved once per layer.
+                match width {
+                    PackedWidth::Q7 => PackedQ7::new(*dec).matmul_act_panels_hinted(
+                        &lref,
+                        src,
+                        n_samples,
+                        (p0..p1, narrow),
+                        dst,
+                        l.act,
+                    ),
+                    PackedWidth::Q15 => PackedQ15::new(*dec).matmul_act_panels_hinted(
+                        &lref,
+                        src,
+                        n_samples,
+                        (p0..p1, narrow),
+                        dst,
+                        l.act,
+                    ),
+                }
+            }
+            Repr::F32 { .. } => panic!("Q layer execution on an f32 plan"),
+        }
+    }
+}
+
+/// The compile-time-selected narrow Q32 kernel: per-product multiply +
+/// arithmetic shift in 32-bit arithmetic (vectorizes twice as wide as
+/// the generic i64 `qmul`), i64 accumulate, one saturation per output —
+/// bit-exact vs [`FixedQ`] whenever the caller's input scan cleared the
+/// layer's compile-time `narrow_x_bound`. Same 4-sample blocking as
+/// `FixedQ::matmul_impl`, same fused epilogue.
+fn matmul_act_q32_narrow(
+    dec: u32,
+    layer: &DenseLayerRef<i32>,
+    xs: &[i32],
+    n_samples: usize,
+    out: &mut [i32],
+    act: Activation,
+) {
+    let n_in = layer.n_in;
+    let n_out = layer.n_out;
+    debug_assert_eq!(xs.len(), n_in * n_samples);
+    debug_assert_eq!(out.len(), n_out * n_samples);
+    let mut s0 = 0;
+    while s0 < n_samples {
+        let sb = (n_samples - s0).min(4);
+        for o in 0..n_out {
+            let row = &layer.weights[o * n_in..(o + 1) * n_in];
+            let mut acc = [layer.biases[o] as i64; 4];
+            for (i, &w) in row.iter().enumerate() {
+                for (si, a) in acc.iter_mut().enumerate().take(sb) {
+                    *a += ((w * xs[(s0 + si) * n_in + i]) >> dec) as i64;
+                }
+            }
+            for (si, a) in acc.iter().enumerate().take(sb) {
+                out[(s0 + si) * n_out + o] = super::epilogue_q(act, dec, sat_i32(*a) as i32);
+            }
+        }
+        s0 += sb;
+    }
+}
+
+impl PlanSource for Network {
+    fn compile_exec_plan(&self) -> ExecPlan {
+        let total: usize = self.layers.iter().map(|l| l.weights.len() + l.biases.len()).sum();
+        let mut arena = Vec::with_capacity(total);
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            let w_off = arena.len();
+            arena.extend_from_slice(&l.weights);
+            let b_off = arena.len();
+            arena.extend_from_slice(&l.biases);
+            layers.push(PlanLayer {
+                n_in: l.n_in,
+                n_out: l.n_out,
+                w_off,
+                w_len: l.weights.len(),
+                b_off,
+                act: l.activation,
+                steepness: l.steepness,
+                narrow_x_bound: 0,
+                words_per_row: 0,
+            });
+        }
+        ExecPlan {
+            repr: Repr::F32 { arena },
+            layers,
+            sizes: self.layer_sizes(),
+        }
+    }
+}
+
+impl PlanSource for FixedNetwork {
+    fn compile_exec_plan(&self) -> ExecPlan {
+        let total: usize = self.layers.iter().map(|l| l.weights.len() + l.biases.len()).sum();
+        let mut arena = Vec::with_capacity(total);
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            // Compile-time kernel selection fact: the largest weight
+            // magnitude bounds the input range under which every
+            // product fits i32 (|w·x| <= wmax · bound <= i32::MAX).
+            let wmax = l.weights.iter().map(|w| w.unsigned_abs()).max().unwrap_or(0);
+            let narrow_x_bound = if wmax == 0 {
+                u32::MAX
+            } else {
+                i32::MAX as u32 / wmax
+            };
+            let w_off = arena.len();
+            arena.extend_from_slice(&l.weights);
+            let b_off = arena.len();
+            arena.extend_from_slice(&l.biases);
+            layers.push(PlanLayer {
+                n_in: l.n_in,
+                n_out: l.n_out,
+                w_off,
+                w_len: l.weights.len(),
+                b_off,
+                act: l.activation,
+                steepness: 1.0,
+                narrow_x_bound,
+                words_per_row: 0,
+            });
+        }
+        ExecPlan {
+            repr: Repr::Q32 {
+                arena,
+                dec: self.decimal_point,
+            },
+            layers,
+            sizes: self.layer_sizes(),
+        }
+    }
+}
+
+impl PlanSource for PackedNetwork {
+    fn compile_exec_plan(&self) -> ExecPlan {
+        let total_w: usize = self.layers.iter().map(|l| l.panels.words.len()).sum();
+        let total_b: usize = self.layers.iter().map(|l| l.biases.len()).sum();
+        let mut words = Vec::with_capacity(total_w);
+        let mut biases = Vec::with_capacity(total_b);
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            let w_off = words.len();
+            words.extend_from_slice(&l.panels.words);
+            let b_off = biases.len();
+            biases.extend_from_slice(&l.biases);
+            layers.push(PlanLayer {
+                n_in: l.panels.n_in,
+                n_out: l.panels.n_out,
+                w_off,
+                w_len: l.panels.words.len(),
+                b_off,
+                act: l.activation,
+                steepness: 1.0,
+                // Packing guarantees narrow weights, so the fast-path
+                // condition is the width's input bound alone.
+                narrow_x_bound: self.width.fast_input_bound(),
+                words_per_row: l.panels.words_per_row,
+            });
+        }
+        ExecPlan {
+            repr: Repr::Packed {
+                words,
+                biases,
+                dec: self.decimal_point,
+                width: self.width,
+            },
+            layers,
+            sizes: self.layer_sizes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fann::from_float_packed;
+    use crate::util::rng::Rng;
+
+    fn net(sizes: &[usize], seed: u64) -> Network {
+        let mut rng = Rng::new(seed);
+        let mut n = Network::new(sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+        n.randomize(&mut rng, None);
+        n
+    }
+
+    #[test]
+    fn split_rows_covers_exactly_once_and_max_is_ceil() {
+        for n in [0usize, 1, 2, 3, 7, 8, 24, 100] {
+            for w in [1usize, 2, 3, 7, 8, 16] {
+                let ranges = split_rows(n, w);
+                let mut next = 0;
+                for &(start, len) in &ranges {
+                    assert_eq!(start, next);
+                    assert!(len > 0);
+                    next += len;
+                }
+                assert_eq!(next, n);
+                if n > 0 {
+                    // The schedule's fullest range IS the cost model's
+                    // ceil(n / cores) — one shared partition.
+                    assert_eq!(rows_per_core_max(n, w), n.div_ceil(w));
+                }
+            }
+        }
+        assert_eq!(rows_per_core_max(0, 4), 0);
+    }
+
+    #[test]
+    fn block_aligned_split_covers_and_bills_the_fullest_core() {
+        for n in [1usize, 3, 4, 5, 8, 11, 13, 16, 24, 40] {
+            for block in [1usize, 4] {
+                for w in 1..=8usize {
+                    let ranges = split_row_blocks(n, block, w);
+                    let mut next = 0;
+                    for &(r0, r1) in &ranges {
+                        assert_eq!(r0, next);
+                        assert_eq!(r0 % block, 0, "n={n} block={block} w={w}");
+                        assert!(r1 > r0);
+                        next = r1;
+                    }
+                    assert_eq!(next, n);
+                    let max = ranges.iter().map(|&(r0, r1)| r1 - r0).max().unwrap();
+                    assert_eq!(rows_per_core_block_max(n, block, w), max);
+                    if block == 1 {
+                        assert_eq!(max, rows_per_core_max(n, w));
+                    }
+                }
+            }
+        }
+        // The reviewer's case: 16 packed rows on 8 cores = 4 panels on
+        // 8 cores -> the fullest core owns one whole panel (4 rows),
+        // not ceil(16/8) = 2.
+        assert_eq!(rows_per_core_block_max(16, 4, 8), 4);
+        assert_eq!(rows_per_core_max(16, 8), 2);
+    }
+
+    #[test]
+    fn f32_plan_bit_identical_to_dispatch() {
+        let n = net(&[5, 9, 4, 3], 11);
+        let plan = ExecPlan::compile(&n);
+        assert_eq!(plan.layer_sizes(), n.layer_sizes());
+        assert_eq!(plan.repr_label(), "f32");
+        assert!(plan.is_float());
+        let mut rng = Rng::new(3);
+        let samples = 7;
+        let xs: Vec<f32> = (0..samples * 5).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        assert_eq!(plan.run_batch_f32(&xs, samples), n.run_batch(&xs, samples));
+        // Single-sample entry agrees with Network::run.
+        assert_eq!(plan.run(&xs[..5]), n.run(&xs[..5]));
+    }
+
+    #[test]
+    fn q32_plan_narrow_and_wide_paths_bit_exact() {
+        let n = net(&[6, 8, 3], 21);
+        let mut rng = Rng::new(5);
+        let samples = 6;
+        let xs: Vec<f32> = (0..samples * 6).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+
+        // Default (overflow-analysis) decimal point: deep fractional
+        // bits make raw products exceed i32 — the wide path runs, and
+        // it is the bit-exactness reference by construction.
+        let fixed = FixedNetwork::from_float(&n, 1.0).unwrap();
+        let plan = ExecPlan::compile(&fixed);
+        assert_eq!(plan.repr_label(), "q32");
+        assert_eq!(plan.decimal_point(), Some(fixed.decimal_point));
+        let xq = fixed.quantize_input(&xs);
+        assert_eq!(plan.run_batch_q(&xq, samples), fixed.run_batch_q(&xq, samples));
+
+        // A shallow decimal point keeps weights and inputs small enough
+        // that the compile-time bound clears: the narrow 32-bit kernel
+        // runs and must still match FixedQ bit for bit.
+        let shallow = FixedNetwork::from_float_with_dec(&n, 6);
+        let plan_s = ExecPlan::compile(&shallow);
+        let xq_s = shallow.quantize_input(&xs);
+        assert!(plan_s.narrow_ok(0, &xq_s), "dec 6 inputs should clear the narrow bound");
+        assert_eq!(plan_s.run_batch_q(&xq_s, samples), shallow.run_batch_q(&xq_s, samples));
+
+        // Near-overflow inputs force the wide path; still bit-exact.
+        let huge: Vec<i32> = (0..6)
+            .map(|i| if i % 2 == 0 { i32::MAX - i as i32 } else { i32::MIN + 1 + i as i32 })
+            .collect();
+        assert!(!plan_s.narrow_ok(0, &huge));
+        assert_eq!(plan_s.run_batch_q(&huge, 1), shallow.run_batch_q(&huge, 1));
+    }
+
+    #[test]
+    fn packed_plans_bit_exact_vs_dispatch() {
+        let n = net(&[7, 10, 5], 9);
+        for width in [PackedWidth::Q7, PackedWidth::Q15] {
+            let (_, packed) = from_float_packed(&n, 1.0, width).unwrap();
+            let plan = ExecPlan::compile(&packed);
+            assert_eq!(plan.repr_label(), width.label());
+            let mut rng = Rng::new(2);
+            let samples = 5;
+            let xs: Vec<f32> = (0..samples * 7).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let xq = packed.quantize_input(&xs);
+            assert_eq!(
+                plan.run_batch_q(&xq, samples),
+                packed.run_batch_q(&xq, samples),
+                "{width:?}"
+            );
+            assert_eq!(plan.param_bytes(), packed.param_bytes(), "{width:?}");
+        }
+    }
+
+    #[test]
+    fn row_ranges_reassemble_layers_bit_exactly() {
+        let n = net(&[9, 11, 6], 31);
+        let fixed = FixedNetwork::from_float(&n, 1.0).unwrap();
+        let plan = ExecPlan::compile(&fixed);
+        let mut rng = Rng::new(7);
+        let samples = 4;
+        let xs: Vec<f32> = (0..samples * 9).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let xq = fixed.quantize_input(&xs);
+        // Whole layer 0 via one call vs stitched from ragged ranges.
+        let (n_in, n_out) = plan.layer_dims(0);
+        let src = &xq[..samples * n_in];
+        let mut whole = vec![0i32; n_out * samples];
+        plan.run_layer_rows_q(0, src, samples, 0..n_out, &mut whole);
+        for workers in 1..=8 {
+            let mut stitched = vec![0i32; n_out * samples];
+            for (r0, r1) in plan.partition_rows(0, workers) {
+                let rr = r1 - r0;
+                let mut part = vec![0i32; rr * samples];
+                plan.run_layer_rows_q(0, src, samples, r0..r1, &mut part);
+                for s in 0..samples {
+                    stitched[s * n_out + r0..s * n_out + r1]
+                        .copy_from_slice(&part[s * rr..(s + 1) * rr]);
+                }
+            }
+            assert_eq!(stitched, whole, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn partition_rows_is_panel_aligned_for_packed() {
+        let n = net(&[5, 11, 3], 17);
+        let (_, packed) = from_float_packed(&n, 1.0, PackedWidth::Q7).unwrap();
+        let plan = ExecPlan::compile(&packed);
+        for workers in 1..=8 {
+            let ranges = plan.partition_rows(0, workers);
+            let mut next = 0;
+            for &(r0, r1) in &ranges {
+                assert_eq!(r0, next);
+                assert_eq!(r0 % ROWS_PER_PANEL, 0, "workers={workers}");
+                assert!(r1 > r0);
+                next = r1;
+            }
+            assert_eq!(next, 11);
+        }
+        // A single-panel layer never splits below one panel.
+        assert_eq!(plan.partition_rows(1, 8).len(), 1);
+    }
+
+    #[test]
+    fn arena_is_contiguous_in_traversal_order() {
+        let n = net(&[4, 6, 5, 2], 1);
+        let fixed = FixedNetwork::from_float(&n, 1.0).unwrap();
+        let plan = ExecPlan::compile(&fixed);
+        let mut expect_off = 0;
+        for li in 0..plan.num_layers() {
+            let l = &plan.layers[li];
+            assert_eq!(l.w_off, expect_off);
+            assert_eq!(l.b_off, l.w_off + l.w_len);
+            expect_off = l.b_off + l.n_out;
+        }
+        assert_eq!(plan.param_bytes(), 4 * expect_off);
+    }
+
+    #[test]
+    fn plan_scratch_is_one_flat_buffer() {
+        let mut s = PlanScratch::new();
+        let (a, b) = s.halves_q(16);
+        a[0] = 1;
+        b[15] = 2;
+        assert_eq!(a.len(), 16);
+        assert_eq!(b.len(), 16);
+        // Both halves come from one allocation: growing for a smaller
+        // request is a no-op.
+        let cap = s.q.capacity();
+        let _ = s.halves_q(8);
+        assert_eq!(s.q.capacity(), cap);
+    }
+}

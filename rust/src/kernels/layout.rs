@@ -86,6 +86,18 @@ impl PackedWidth {
             PackedWidth::Q15 => "q15",
         }
     }
+
+    /// Inclusive bound on `|x|` under which `w · x` provably fits i32
+    /// for ANY weight representable at this width — the packed
+    /// kernels' narrow-multiply fast-path condition (`|x| < 2^24` for
+    /// q7, `|x| < 2^16` for q15), exposed so a compiled execution plan
+    /// can hoist the input scan out of its row-split jobs.
+    pub fn fast_input_bound(self) -> u32 {
+        match self {
+            PackedWidth::Q7 => (1 << 24) - 1,
+            PackedWidth::Q15 => (1 << 16) - 1,
+        }
+    }
 }
 
 /// One dense layer's weights in packed panel form. `words` length is

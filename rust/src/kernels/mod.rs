@@ -64,6 +64,7 @@
 //! identical by construction (same value, same function, applied once).
 
 pub mod blocked;
+pub mod exec_plan;
 pub mod fixedq;
 pub mod layout;
 pub mod packed;
@@ -72,6 +73,10 @@ pub mod scalar;
 use std::cell::RefCell;
 
 pub use blocked::{dot_f32, BlockedF32};
+pub use exec_plan::{
+    rows_per_core_block_max, rows_per_core_max, split_row_blocks, split_rows, ExecPlan,
+    PlanScratch, PlanSource,
+};
 pub use fixedq::FixedQ;
 pub use layout::{PackedPanels, PackedWidth};
 pub use packed::{PackedLayerRef, PackedQ15, PackedQ7};

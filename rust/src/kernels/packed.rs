@@ -30,23 +30,81 @@
 //! i32 Q(dec)) take the exact i64 path. Both paths compute the same
 //! value bit for bit: a product that fits i32 shifts identically at
 //! either width.
+//!
+//! # Unrolled word stream and panel ranges
+//!
+//! The single-sample core consumes **four panel words per iteration**
+//! into four independent accumulator lanes per row (the PULP-NN
+//! unrolled-MAC recipe), reduced once at panel end — bit-exact because
+//! integer adds commute. Both cores also take a *panel range*, so a
+//! row-split executor ([`crate::kernels::exec_plan`]) can hand each
+//! core a contiguous block of panels and stay bit-exact vs the
+//! whole-layer call (per-panel accumulation is independent).
+
+use std::ops::Range;
 
 use super::layout::{PackedPanels, PackedWidth, ROWS_PER_PANEL};
 use crate::fann::activation::Activation;
 use crate::quantize::{qmul, sat_i32};
 
 /// Borrowed view of one packed dense layer: panel-form weights plus
-/// plain i32 Q(dec) biases (biases stay wide, as in CMSIS-NN).
+/// plain i32 Q(dec) biases (biases stay wide, as in CMSIS-NN). Holds
+/// the panel geometry and a borrowed word slice directly — rather than
+/// a `&PackedPanels` — so layers can be viewed straight out of a flat
+/// word arena ([`crate::kernels::ExecPlan`]) with no per-call copy.
 #[derive(Debug, Clone, Copy)]
 pub struct PackedLayerRef<'a> {
-    pub panels: &'a PackedPanels,
+    pub width: PackedWidth,
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Words covering one row's `n_in` weights: `ceil(n_in / elems)`.
+    pub words_per_row: usize,
+    pub words: &'a [u32],
     pub biases: &'a [i32],
 }
 
 impl<'a> PackedLayerRef<'a> {
     pub fn new(panels: &'a PackedPanels, biases: &'a [i32]) -> Self {
-        debug_assert_eq!(biases.len(), panels.n_out);
-        Self { panels, biases }
+        Self::from_raw(
+            panels.width,
+            panels.n_in,
+            panels.n_out,
+            panels.words_per_row,
+            &panels.words,
+            biases,
+        )
+    }
+
+    /// Borrow a packed layer out of a flat word arena (the compiled
+    /// execution-plan form). `words` must hold exactly the layer's
+    /// panel stream: `panels · words_per_row · ROWS_PER_PANEL` words.
+    pub fn from_raw(
+        width: PackedWidth,
+        n_in: usize,
+        n_out: usize,
+        words_per_row: usize,
+        words: &'a [u32],
+        biases: &'a [i32],
+    ) -> Self {
+        debug_assert_eq!(biases.len(), n_out);
+        debug_assert_eq!(
+            words.len(),
+            n_out.div_ceil(ROWS_PER_PANEL) * words_per_row * ROWS_PER_PANEL
+        );
+        Self {
+            width,
+            n_in,
+            n_out,
+            words_per_row,
+            words,
+            biases,
+        }
+    }
+
+    /// Number of row panels (last one possibly padded).
+    #[inline]
+    pub fn panels(&self) -> usize {
+        self.n_out.div_ceil(ROWS_PER_PANEL)
     }
 }
 
@@ -97,33 +155,66 @@ fn all_fast<W: Width>(xs: &[i32]) -> bool {
     xs.iter().all(|&v| v.unsigned_abs() < W::FAST_LIMIT)
 }
 
-/// One sample through one packed layer; `prod` is the per-product
-/// arithmetic (fast i32 or exact i64 `qmul`), `epi` the write-back
-/// epilogue on the saturated i32 pre-activation.
+/// One sample through panels `panels` of one packed layer; `prod` is
+/// the per-product arithmetic (fast i32 or exact i64 `qmul`), `epi` the
+/// write-back epilogue on the saturated i32 pre-activation. `out`
+/// covers exactly the range's rows (`panels.start * ROWS_PER_PANEL` up
+/// to `n_out`-clipped range end).
+///
+/// Inner loop: four panel words consumed per iteration into four
+/// independent accumulator lanes per row (reduced at panel end) — the
+/// unrolled-MAC loop structure of PULP-NN / Table I, exposing ILP/SIMD
+/// to the compiler. Integer adds commute, so lane splitting and the
+/// end-of-panel reduction are bit-exact vs the one-accumulator loop.
 #[inline(always)]
-fn matvec_core<W, P, F>(layer: &PackedLayerRef, x: &[i32], out: &mut [i32], prod: P, epi: F)
-where
+fn matvec_core<W, P, F>(
+    layer: &PackedLayerRef,
+    x: &[i32],
+    panels: Range<usize>,
+    out: &mut [i32],
+    prod: P,
+    epi: F,
+) where
     W: Width,
     P: Fn(i32, i32) -> i64,
     F: Fn(i32) -> i32,
 {
-    let p = layer.panels;
-    debug_assert_eq!(p.width, W::WIDTH);
-    debug_assert_eq!(x.len(), p.n_in);
-    debug_assert_eq!(out.len(), p.n_out);
-    let wpr = p.words_per_row;
-    let full = p.n_in / W::ELEMS;
-    for panel in 0..p.panels() {
+    debug_assert_eq!(layer.width, W::WIDTH);
+    debug_assert_eq!(x.len(), layer.n_in);
+    debug_assert!(panels.end <= layer.panels());
+    let r_base = panels.start * ROWS_PER_PANEL;
+    debug_assert_eq!(
+        out.len(),
+        (panels.end * ROWS_PER_PANEL).min(layer.n_out) - r_base
+    );
+    let wpr = layer.words_per_row;
+    let full = layer.n_in / W::ELEMS;
+    let full4 = full & !3;
+    for panel in panels {
         let o0 = panel * ROWS_PER_PANEL;
         let base = panel * wpr * ROWS_PER_PANEL;
-        let mut acc = [0i64; ROWS_PER_PANEL];
-        for c in 0..full {
+        // acc[row][lane]: four independent unroll lanes per output row.
+        let mut acc = [[0i64; 4]; ROWS_PER_PANEL];
+        let mut c = 0;
+        while c < full4 {
+            for (r, a) in acc.iter_mut().enumerate() {
+                for (u, au) in a.iter_mut().enumerate() {
+                    let lanes = W::lanes(layer.words[base + (c + u) * ROWS_PER_PANEL + r]);
+                    let i0 = (c + u) * W::ELEMS;
+                    for e in 0..W::ELEMS {
+                        *au += prod(lanes[e], x[i0 + e]);
+                    }
+                }
+            }
+            c += 4;
+        }
+        for c in full4..full {
             let i0 = c * W::ELEMS;
             let wbase = base + c * ROWS_PER_PANEL;
             for (r, a) in acc.iter_mut().enumerate() {
-                let lanes = W::lanes(p.words[wbase + r]);
+                let lanes = W::lanes(layer.words[wbase + r]);
                 for e in 0..W::ELEMS {
-                    *a += prod(lanes[e], x[i0 + e]);
+                    a[0] += prod(lanes[e], x[i0 + e]);
                 }
             }
         }
@@ -133,27 +224,32 @@ where
             let i0 = full * W::ELEMS;
             let wbase = base + full * ROWS_PER_PANEL;
             for (r, a) in acc.iter_mut().enumerate() {
-                let lanes = W::lanes(p.words[wbase + r]);
+                let lanes = W::lanes(layer.words[wbase + r]);
                 for (e, &xv) in x[i0..].iter().enumerate() {
-                    *a += prod(lanes[e], xv);
+                    a[0] += prod(lanes[e], xv);
                 }
             }
         }
-        let rows = (p.n_out - o0).min(ROWS_PER_PANEL);
+        let rows = (layer.n_out - o0).min(ROWS_PER_PANEL);
         for r in 0..rows {
-            out[o0 + r] = epi(sat_i32(acc[r] + layer.biases[o0 + r] as i64) as i32);
+            let sum = (acc[r][0] + acc[r][2]) + (acc[r][1] + acc[r][3]);
+            out[o0 - r_base + r] = epi(sat_i32(sum + layer.biases[o0 + r] as i64) as i32);
         }
     }
 }
 
-/// Batched core: 4-sample tiles over the same panel word-stream, so
-/// each weight word is loaded once per 4 samples × 4 rows = 16 MACs
-/// (the weight-reuse the paper's DMA double-buffering banks on).
+/// Batched core: 4-sample tiles over the panel word-stream of the
+/// `panels` range, so each weight word is loaded once per 4 samples × 4
+/// rows = 16 MACs (the weight-reuse the paper's DMA double-buffering
+/// banks on). `out` is the range's rows only, sample-major with row
+/// stride equal to the range's row count — the full-range call is
+/// therefore exactly the historical whole-layer layout.
 #[inline(always)]
 fn matmul_core<W, P, F>(
     layer: &PackedLayerRef,
     xs: &[i32],
     n_samples: usize,
+    panels: Range<usize>,
     out: &mut [i32],
     prod: P,
     epi: F,
@@ -162,18 +258,20 @@ fn matmul_core<W, P, F>(
     P: Fn(i32, i32) -> i64,
     F: Fn(i32) -> i32,
 {
-    let p = layer.panels;
-    debug_assert_eq!(p.width, W::WIDTH);
-    let n_in = p.n_in;
-    let n_out = p.n_out;
+    debug_assert_eq!(layer.width, W::WIDTH);
+    let n_in = layer.n_in;
+    let n_out = layer.n_out;
     debug_assert_eq!(xs.len(), n_in * n_samples);
-    debug_assert_eq!(out.len(), n_out * n_samples);
-    let wpr = p.words_per_row;
+    debug_assert!(panels.end <= layer.panels());
+    let r_base = panels.start * ROWS_PER_PANEL;
+    let range_rows = (panels.end * ROWS_PER_PANEL).min(n_out) - r_base;
+    debug_assert_eq!(out.len(), range_rows * n_samples);
+    let wpr = layer.words_per_row;
     let full = n_in / W::ELEMS;
     let mut s0 = 0;
     while s0 < n_samples {
         let sb = (n_samples - s0).min(4);
-        for panel in 0..p.panels() {
+        for panel in panels.clone() {
             let o0 = panel * ROWS_PER_PANEL;
             let base = panel * wpr * ROWS_PER_PANEL;
             let mut acc = [[0i64; ROWS_PER_PANEL]; 4];
@@ -181,7 +279,7 @@ fn matmul_core<W, P, F>(
                 let i0 = c * W::ELEMS;
                 let wbase = base + c * ROWS_PER_PANEL;
                 for r in 0..ROWS_PER_PANEL {
-                    let lanes = W::lanes(p.words[wbase + r]);
+                    let lanes = W::lanes(layer.words[wbase + r]);
                     for (si, a) in acc.iter_mut().enumerate().take(sb) {
                         let xb = (s0 + si) * n_in + i0;
                         for e in 0..W::ELEMS {
@@ -195,7 +293,7 @@ fn matmul_core<W, P, F>(
                 let tail = n_in - i0;
                 let wbase = base + full * ROWS_PER_PANEL;
                 for r in 0..ROWS_PER_PANEL {
-                    let lanes = W::lanes(p.words[wbase + r]);
+                    let lanes = W::lanes(layer.words[wbase + r]);
                     for (si, a) in acc.iter_mut().enumerate().take(sb) {
                         let xb = (s0 + si) * n_in + i0;
                         for e in 0..tail {
@@ -207,7 +305,7 @@ fn matmul_core<W, P, F>(
             let rows = (n_out - o0).min(ROWS_PER_PANEL);
             for (si, a) in acc.iter().enumerate().take(sb) {
                 for r in 0..rows {
-                    out[(s0 + si) * n_out + o0 + r] =
+                    out[(s0 + si) * range_rows + (o0 - r_base) + r] =
                         epi(sat_i32(a[r] + layer.biases[o0 + r] as i64) as i32);
                 }
             }
@@ -238,7 +336,7 @@ macro_rules! packed_kernel {
             /// Pre-activation single-sample pass (packed analogue of
             /// [`super::DenseKernel::matvec`]).
             pub fn matvec(&self, layer: &PackedLayerRef, x: &[i32], out: &mut [i32]) {
-                self.matvec_impl(layer, x, out, |v| v);
+                self.matvec_impl(layer, x, 0..layer.panels(), out, |v| v);
             }
 
             /// Fused single-sample pass: step-linear activation applied
@@ -251,13 +349,31 @@ macro_rules! packed_kernel {
                 act: Activation,
             ) {
                 let dec = self.dec;
-                self.matvec_impl(layer, x, out, |v| super::epilogue_q(act, dec, v));
+                self.matvec_impl(layer, x, 0..layer.panels(), out, |v| {
+                    super::epilogue_q(act, dec, v)
+                });
+            }
+
+            /// Fused single-sample pass over panels `panels` only —
+            /// the row-split worker entry point. `out` covers exactly
+            /// the range's rows. Bit-exact vs the whole-layer call
+            /// (per-panel accumulation is independent).
+            pub fn matvec_act_panels(
+                &self,
+                layer: &PackedLayerRef,
+                x: &[i32],
+                panels: std::ops::Range<usize>,
+                out: &mut [i32],
+                act: Activation,
+            ) {
+                let dec = self.dec;
+                self.matvec_impl(layer, x, panels, out, |v| super::epilogue_q(act, dec, v));
             }
 
             /// Pre-activation batched pass (packed analogue of
             /// [`super::DenseKernel::matmul`]).
             pub fn matmul(&self, layer: &PackedLayerRef, xs: &[i32], n_samples: usize, out: &mut [i32]) {
-                self.matmul_impl(layer, xs, n_samples, out, |v| v);
+                self.matmul_impl(layer, xs, n_samples, 0..layer.panels(), out, |v| v);
             }
 
             /// Fused batched pass.
@@ -270,7 +386,69 @@ macro_rules! packed_kernel {
                 act: Activation,
             ) {
                 let dec = self.dec;
-                self.matmul_impl(layer, xs, n_samples, out, |v| super::epilogue_q(act, dec, v));
+                self.matmul_impl(layer, xs, n_samples, 0..layer.panels(), out, |v| {
+                    super::epilogue_q(act, dec, v)
+                });
+            }
+
+            /// Fused batched pass over panels `panels` only. `out`
+            /// holds the range's rows sample-major (row stride = the
+            /// range's row count).
+            pub fn matmul_act_panels(
+                &self,
+                layer: &PackedLayerRef,
+                xs: &[i32],
+                n_samples: usize,
+                panels: std::ops::Range<usize>,
+                out: &mut [i32],
+                act: Activation,
+            ) {
+                let dec = self.dec;
+                self.matmul_impl(layer, xs, n_samples, panels, out, |v| {
+                    super::epilogue_q(act, dec, v)
+                });
+            }
+
+            /// [`matmul_act_panels`](Self::matmul_act_panels) with the
+            /// fast-path verdict hoisted by the caller: `job` is the
+            /// panel range plus the result of scanning every input of
+            /// the layer against this width's bound (`|x| < FAST_LIMIT`
+            /// for all of `xs`), so N row-split jobs share one input
+            /// scan instead of each rescanning `n_in × n_samples`
+            /// elements. A wrong `false` costs speed, never
+            /// correctness; `true` must come from a full scan.
+            pub fn matmul_act_panels_hinted(
+                &self,
+                layer: &PackedLayerRef,
+                xs: &[i32],
+                n_samples: usize,
+                job: (std::ops::Range<usize>, bool),
+                out: &mut [i32],
+                act: Activation,
+            ) {
+                let (panels, fast) = job;
+                let dec = self.dec;
+                if fast {
+                    matmul_core::<$w, _, _>(
+                        layer,
+                        xs,
+                        n_samples,
+                        panels,
+                        out,
+                        |w, xv| ((w * xv) >> dec) as i64,
+                        |v| super::epilogue_q(act, dec, v),
+                    );
+                } else {
+                    matmul_core::<$w, _, _>(
+                        layer,
+                        xs,
+                        n_samples,
+                        panels,
+                        out,
+                        |w, xv| qmul(w, xv, dec),
+                        |v| super::epilogue_q(act, dec, v),
+                    );
+                }
             }
 
             #[inline]
@@ -278,14 +456,15 @@ macro_rules! packed_kernel {
                 &self,
                 layer: &PackedLayerRef,
                 x: &[i32],
+                panels: std::ops::Range<usize>,
                 out: &mut [i32],
                 epi: F,
             ) {
                 let dec = self.dec;
                 if all_fast::<$w>(x) {
-                    matvec_core::<$w, _, _>(layer, x, out, |w, xv| ((w * xv) >> dec) as i64, epi);
+                    matvec_core::<$w, _, _>(layer, x, panels, out, |w, xv| ((w * xv) >> dec) as i64, epi);
                 } else {
-                    matvec_core::<$w, _, _>(layer, x, out, |w, xv| qmul(w, xv, dec), epi);
+                    matvec_core::<$w, _, _>(layer, x, panels, out, |w, xv| qmul(w, xv, dec), epi);
                 }
             }
 
@@ -295,6 +474,7 @@ macro_rules! packed_kernel {
                 layer: &PackedLayerRef,
                 xs: &[i32],
                 n_samples: usize,
+                panels: std::ops::Range<usize>,
                 out: &mut [i32],
                 epi: F,
             ) {
@@ -304,12 +484,13 @@ macro_rules! packed_kernel {
                         layer,
                         xs,
                         n_samples,
+                        panels,
                         out,
                         |w, xv| ((w * xv) >> dec) as i64,
                         epi,
                     );
                 } else {
-                    matmul_core::<$w, _, _>(layer, xs, n_samples, out, |w, xv| qmul(w, xv, dec), epi);
+                    matmul_core::<$w, _, _>(layer, xs, n_samples, panels, out, |w, xv| qmul(w, xv, dec), epi);
                 }
             }
         }
@@ -432,6 +613,93 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn unrolled_word_stream_bit_exact_on_long_rows() {
+        // n_in large enough to exercise the 4-word unrolled inner loop
+        // (full4 > 0) plus a remainder chunk and a ragged tail.
+        let mut rng = Rng::new(0x10C4);
+        for width in [PackedWidth::Q7, PackedWidth::Q15] {
+            for &n_in in &[17usize, 32, 40, 65, 130] {
+                let n_out = 6;
+                let dec = 5;
+                let (w, b) = random_layer(&mut rng, width, n_in, n_out);
+                let x: Vec<i32> = (0..n_in).map(|_| rng.below(4001) as i32 - 2000).collect();
+                let layer = DenseLayerRef::new(n_in, n_out, &w, &b);
+                let mut want = vec![0i32; n_out];
+                FixedQ::new(dec).matvec(&layer, &x, &mut want);
+                let panels = pack_rows(width, n_in, n_out, &w).unwrap();
+                let pref = PackedLayerRef::new(&panels, &b);
+                let mut got = vec![0i32; n_out];
+                match width {
+                    PackedWidth::Q7 => PackedQ7::new(dec).matvec(&pref, &x, &mut got),
+                    PackedWidth::Q15 => PackedQ15::new(dec).matvec(&pref, &x, &mut got),
+                }
+                assert_eq!(got, want, "{width:?} n_in={n_in}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_ranges_reassemble_the_whole_layer() {
+        // Computing each panel block separately (the row-split worker
+        // granularity) reproduces the whole-layer call bit for bit,
+        // single-sample and batched.
+        let mut rng = Rng::new(0x50_1177);
+        let dec = 6;
+        let (n_in, n_out, n_samples) = (13, 11, 5); // 3 panels, last ragged
+        let (w, b) = random_layer(&mut rng, PackedWidth::Q7, n_in, n_out);
+        let xs: Vec<i32> = (0..n_in * n_samples).map(|_| rng.below(801) as i32 - 400).collect();
+        let panels = pack_rows(PackedWidth::Q7, n_in, n_out, &w).unwrap();
+        let pref = PackedLayerRef::new(&panels, &b);
+        let k = PackedQ7::new(dec);
+        let act = crate::fann::activation::Activation::Tanh;
+        let mut whole = vec![0i32; n_out * n_samples];
+        k.matmul_act(&pref, &xs, n_samples, &mut whole, act);
+        for (p0, p1) in [(0usize, 1usize), (1, 3), (0, 3), (2, 3)] {
+            let r0 = p0 * ROWS_PER_PANEL;
+            let r1 = (p1 * ROWS_PER_PANEL).min(n_out);
+            let rr = r1 - r0;
+            let mut part = vec![0i32; rr * n_samples];
+            k.matmul_act_panels(&pref, &xs, n_samples, p0..p1, &mut part, act);
+            for s in 0..n_samples {
+                assert_eq!(
+                    &part[s * rr..(s + 1) * rr],
+                    &whole[s * n_out + r0..s * n_out + r1],
+                    "panels {p0}..{p1} sample {s}"
+                );
+            }
+            // Single-sample range form agrees too.
+            let mut single = vec![0i32; rr];
+            k.matvec_act_panels(&pref, &xs[..n_in], p0..p1, &mut single, act);
+            assert_eq!(&single[..], &whole[r0..r1]);
+        }
+    }
+
+    #[test]
+    fn hinted_panels_match_unhinted_for_both_verdicts() {
+        // The hoisted fast-path verdict only selects between two
+        // bit-identical kernels: `true` (inputs really do clear the
+        // bound) and a conservative `false` must both reproduce the
+        // scanning entry point exactly.
+        let mut rng = Rng::new(0x41D7);
+        let dec = 6;
+        let (n_in, n_out, n_samples) = (10, 9, 5);
+        let (w, b) = random_layer(&mut rng, PackedWidth::Q7, n_in, n_out);
+        let xs: Vec<i32> = (0..n_in * n_samples).map(|_| rng.below(2001) as i32 - 1000).collect();
+        let panels = pack_rows(PackedWidth::Q7, n_in, n_out, &w).unwrap();
+        let pref = PackedLayerRef::new(&panels, &b);
+        let k = PackedQ7::new(dec);
+        let act = crate::fann::activation::Activation::Sigmoid;
+        let all = pref.panels();
+        let mut want = vec![0i32; n_out * n_samples];
+        k.matmul_act_panels(&pref, &xs, n_samples, 0..all, &mut want, act);
+        for fast in [true, false] {
+            let mut got = vec![0i32; n_out * n_samples];
+            k.matmul_act_panels_hinted(&pref, &xs, n_samples, (0..all, fast), &mut got, act);
+            assert_eq!(got, want, "fast={fast}");
         }
     }
 

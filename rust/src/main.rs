@@ -18,11 +18,18 @@
 //! * `run`            — simulate one classification on a target.
 //! * `throughput`     — host-side batched-inference throughput: looped
 //!                      single-sample vs batched kernels vs the parallel
-//!                      batch driver, float, fixed and packed.
+//!                      batch driver vs compiled execution plans
+//!                      (serial + row-split), float, fixed and packed.
 //! * `bench json`     — the machine-readable kernel × mode throughput
-//!                      sweep plus per-target emulated cycle counts;
-//!                      writes `BENCH_kernels.json` (the per-PR perf
-//!                      baseline CI uploads as an artifact).
+//!                      sweep (incl. compiled-plan serial/row-split rows
+//!                      and the fig11 row-split speedup) plus per-target
+//!                      emulated cycle counts; writes
+//!                      `BENCH_kernels.json` (the per-PR perf baseline
+//!                      CI diffs against the committed copy).
+//! * `bench smoke`    — row-split correctness gate: the compiled-plan
+//!                      row-split path under 1/2/8 workers must
+//!                      checksum-match the serial run for every kernel
+//!                      family.
 //! * `info`           — list applications, targets, artifact status.
 //! * `help`           — this text.
 //!
@@ -494,8 +501,181 @@ fn cmd_throughput(args: &Args) -> Result<()> {
 fn cmd_bench(mode: &str, args: &Args) -> Result<()> {
     match mode {
         "json" => cmd_bench_json(args),
-        other => bail!("unknown bench mode {other:?} (known: json)"),
+        "smoke" => cmd_bench_smoke(args),
+        other => bail!("unknown bench mode {other:?} (known: json, smoke)"),
     }
+}
+
+/// `bench smoke` — the row-split correctness gate CI runs on every
+/// push: execute the compiled-plan row-split path under 1, 2 and 8
+/// workers for every kernel family on the fig11 and reference
+/// topologies, and fail unless every checksum matches the serial plan
+/// run exactly.
+fn cmd_bench_smoke(args: &Args) -> Result<()> {
+    use fann_on_mcu::bench::fig11_shape;
+    use fann_on_mcu::fann::from_float_packed;
+    use fann_on_mcu::kernels::{ExecPlan, PackedWidth};
+
+    args.expect_only(&["samples", "seed"])?;
+    let n = args.get_usize("samples", 96)?.max(1);
+    let seed = args.get_u64("seed", 7)?;
+
+    let topologies: [(&str, Vec<usize>); 2] = [
+        ("fig11(6,8)", fig11_shape(6, 8).sizes),
+        ("reference", vec![64, 64, 32]),
+    ];
+    let mut checked = 0usize;
+    for (label, sizes) in topologies {
+        let mut rng = Rng::new(seed ^ 0x50_C0DE);
+        let mut net = Network::new(&sizes, Activation::Tanh, Activation::Sigmoid)?;
+        net.randomize(&mut rng, None);
+        let n_in = net.num_inputs();
+        let xs: Vec<f32> = (0..n * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+
+        // Float family.
+        let plan_f = ExecPlan::compile(&net);
+        let serial_ck = batch::checksum_f32(&plan_f.run_batch_f32(&xs, n));
+        for workers in [1usize, 2, 8] {
+            let ck = batch::checksum_f32(&batch::run_plan_rowsplit(&plan_f, &xs, n, workers));
+            anyhow::ensure!(
+                ck == serial_ck,
+                "{label} f32: row-split checksum {ck:016x} != serial {serial_ck:016x} at {workers} workers"
+            );
+            checked += 1;
+        }
+
+        // Q32 + packed families.
+        let fixed = FixedNetwork::from_float(&net, 1.0)?;
+        let (_, packed7) = from_float_packed(&net, 1.0, PackedWidth::Q7)?;
+        let (_, packed15) = from_float_packed(&net, 1.0, PackedWidth::Q15)?;
+        let q_plans: [(&str, ExecPlan, Vec<i32>); 3] = [
+            ("q32", ExecPlan::compile(&fixed), fixed.quantize_input(&xs)),
+            ("q7", ExecPlan::compile(&packed7), packed7.quantize_input(&xs)),
+            ("q15", ExecPlan::compile(&packed15), packed15.quantize_input(&xs)),
+        ];
+        for (family, plan, xq) in &q_plans {
+            let serial_ck = batch::checksum_i32(&plan.run_batch_q(xq, n));
+            for workers in [1usize, 2, 8] {
+                let ck = batch::checksum_i32(&batch::run_plan_q_rowsplit(plan, xq, n, workers));
+                anyhow::ensure!(
+                    ck == serial_ck,
+                    "{label} {family}: row-split checksum {ck:016x} != serial {serial_ck:016x} at {workers} workers"
+                );
+                checked += 1;
+            }
+        }
+    }
+    println!(
+        "bench smoke: {checked} row-split runs (1/2/8 workers x f32/q32/q7/q15 x 2 topologies) \
+         all checksum-identical to serial"
+    );
+    Ok(())
+}
+
+/// The compiled-plan headline measurement: the q32 [`ExecPlan`]
+/// streaming `n` samples (kernels, epilogues and arena resolved once;
+/// persistent flat scratch; 4-sample register tiles) against the seed's
+/// execution model the plan replaces — one per-call kernel dispatch per
+/// sample (`FixedNetwork::run_q` in a loop: per-call scratch routing,
+/// batch-of-one kernel entry and a fresh output allocation per
+/// classification). Outputs asserted bit-identical before timing.
+fn bench_execplan_vs_dispatch(net: &Network, xs: &[f32], n: usize, reps: usize) -> Result<f64> {
+    use fann_on_mcu::kernels::{ExecPlan, PlanScratch};
+
+    let fixed = FixedNetwork::from_float(net, 1.0)?;
+    let xq = fixed.quantize_input(xs);
+    let plan = ExecPlan::compile(&fixed);
+    let n_in = fixed.num_inputs();
+    let n_out = fixed.num_outputs();
+
+    let mut looped = Vec::with_capacity(n * n_out);
+    for s in 0..n {
+        looped.extend_from_slice(&fixed.run_q(&xq[s * n_in..(s + 1) * n_in]));
+    }
+    anyhow::ensure!(
+        plan.run_batch_q(&xq, n) == looped,
+        "exec plan diverged from the per-call dispatch loop"
+    );
+
+    let mut ck = 0u64;
+    let t_dispatch = fann_on_mcu::bench::time_median(1, reps, || {
+        ck = 0;
+        for s in 0..n {
+            ck = ck
+                .wrapping_add(batch::checksum_i32(&fixed.run_q(&xq[s * n_in..(s + 1) * n_in])));
+        }
+        std::hint::black_box(ck);
+    });
+    let mut scratch = PlanScratch::new();
+    let mut out = vec![0i32; n * n_out];
+    let t_plan = fann_on_mcu::bench::time_median(1, reps, || {
+        plan.run_batch_q_into(&xq, n, &mut scratch, &mut out);
+        ck = batch::checksum_i32(&out);
+        std::hint::black_box(ck);
+    });
+    Ok(t_dispatch / t_plan)
+}
+
+/// Measured Fig. 11 row-split comparison reported by `bench json`.
+struct Fig11Rowsplit {
+    sizes: Vec<usize>,
+    serial_seconds: f64,
+    rowsplit_seconds: f64,
+    workers_requested: usize,
+    speedup: f64,
+    checksum: u64,
+}
+
+/// Time the q32 execution plan of the paper's Fig. 11 network family
+/// (l_total = 6, d = 8 — the intra-network-parallelism benchmark)
+/// serially and under the 8-worker row-split driver, asserting bit
+/// parity before and checksum parity while timing.
+fn bench_fig11_rowsplit(n: usize, seed: u64, reps: usize) -> Result<Fig11Rowsplit> {
+    use fann_on_mcu::bench::{fig11_shape, time_median};
+    use fann_on_mcu::kernels::{ExecPlan, PlanScratch};
+
+    const WORKERS: usize = 8;
+    let sizes = fig11_shape(6, 8).sizes;
+    let mut rng = Rng::new(seed ^ 0xF16);
+    let mut net = Network::new(&sizes, Activation::Tanh, Activation::Sigmoid)?;
+    net.randomize(&mut rng, None);
+    let fixed = FixedNetwork::from_float(&net, 1.0)?;
+    let plan = ExecPlan::compile(&fixed);
+    let n_in = net.num_inputs();
+    let xs: Vec<f32> = (0..n * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let xq = fixed.quantize_input(&xs);
+
+    let serial = plan.run_batch_q(&xq, n);
+    anyhow::ensure!(
+        serial == batch::run_plan_q_rowsplit(&plan, &xq, n, WORKERS),
+        "fig11 row-split diverged from serial plan execution"
+    );
+
+    let mut scratch = PlanScratch::new();
+    let mut out = vec![0i32; n * plan.num_outputs()];
+    let mut ck = 0u64;
+    let t_serial = time_median(1, reps, || {
+        plan.run_batch_q_into(&xq, n, &mut scratch, &mut out);
+        ck = batch::checksum_i32(&out);
+        std::hint::black_box(ck);
+    });
+    let ck_serial = ck;
+    // Same preallocated output buffer as the serial loop, so the timed
+    // comparison measures the execution strategy, not the allocator.
+    let t_rowsplit = time_median(1, reps, || {
+        batch::run_plan_q_rowsplit_into(&plan, &xq, n, WORKERS, &mut out);
+        ck = batch::checksum_i32(&out);
+        std::hint::black_box(ck);
+    });
+    anyhow::ensure!(ck == ck_serial, "fig11 timed row-split checksum diverged");
+    Ok(Fig11Rowsplit {
+        sizes,
+        serial_seconds: t_serial,
+        rowsplit_seconds: t_rowsplit,
+        workers_requested: WORKERS,
+        speedup: t_serial / t_rowsplit,
+        checksum: ck_serial,
+    })
 }
 
 fn cmd_bench_json(args: &Args) -> Result<()> {
@@ -544,18 +724,38 @@ fn cmd_bench_json(args: &Args) -> Result<()> {
     };
     let speedup_q7 = rate("packed_q7", "serial") / rate("fixed_q", "serial");
     let speedup_q15 = rate("packed_q15", "serial") / rate("fixed_q", "serial");
+    // The compiled-plan headline: the q32 exec plan streaming the whole
+    // sample set (everything resolved at compile time, one flat
+    // scratch) vs the seed's execution model this ISSUE replaces — one
+    // per-call kernel dispatch per sample. Parity asserted inside.
+    let speedup_execplan = bench_execplan_vs_dispatch(&net, &xs, n, reps)?;
     println!(
-        "\nheadline: packed_q7 {speedup_q7:.2}x / packed_q15 {speedup_q15:.2}x vs fixed_q (single-thread)"
+        "\nheadline: packed_q7 {speedup_q7:.2}x / packed_q15 {speedup_q15:.2}x vs fixed_q; \
+         exec_plan q32 {speedup_execplan:.2}x vs per-call dispatch (single-thread)"
+    );
+
+    // Intra-network parallelism on the paper's Fig. 11 family
+    // (l_total = 6, d = 8): the q32 plan's row-split path under 8
+    // requested workers vs its own serial run, bit-parity asserted.
+    let fig11 = bench_fig11_rowsplit(n, seed, reps)?;
+    println!(
+        "fig11 {:?}: row-split x{} workers {:.2}x vs serial exec plan ({} -> {} samples/s)",
+        fig11.sizes,
+        fig11.workers_requested,
+        fig11.speedup,
+        (n as f64 / fig11.serial_seconds) as u64,
+        (n as f64 / fig11.rowsplit_seconds) as u64,
     );
 
     // Per-target emulated cycle counts: emit the same network for each
     // modeled MCU and execute the artifact in the emulator, so the perf
     // baseline tracks target-side estimates alongside host throughput.
-    let emu_cells: [(Target, NetRepr); 4] = [
+    let emu_cells: [(Target, NetRepr); 5] = [
         (Target::CortexM4(Chip::Stm32l475vg), NetRepr::Q32),
         (Target::WolfFc, NetRepr::Q32),
         (Target::WolfCluster { cores: 8 }, NetRepr::Q32),
         (Target::WolfCluster { cores: 8 }, NetRepr::Q7),
+        (Target::WolfCluster { cores: 8 }, NetRepr::Q15),
     ];
     let mut emulated_rows = Vec::new();
     let mut et = Table::new(vec!["target", "repr", "placement", "cycles", "time", "inf/s"]);
@@ -634,6 +834,23 @@ fn cmd_bench_json(args: &Args) -> Result<()> {
         )
         .field("speedup_packed_q7_vs_fixed_q_serial", speedup_q7)
         .field("speedup_packed_q15_vs_fixed_q_serial", speedup_q15)
+        .field("speedup_execplan_vs_dispatch_serial", speedup_execplan)
+        .field("speedup_rowsplit_8w_vs_serial", fig11.speedup)
+        .field(
+            "fig11_rowsplit",
+            Json::obj()
+                .field(
+                    "topology",
+                    Json::Arr(fig11.sizes.iter().map(|&s| Json::Int(s as i64)).collect::<Vec<_>>()),
+                )
+                .field("workers_requested", fig11.workers_requested)
+                .field("serial_seconds", fig11.serial_seconds)
+                .field("rowsplit_seconds", fig11.rowsplit_seconds)
+                .field("samples_per_sec_serial", n as f64 / fig11.serial_seconds)
+                .field("samples_per_sec_rowsplit", n as f64 / fig11.rowsplit_seconds)
+                .field("checksum", format!("{:016x}", fig11.checksum))
+                .build(),
+        )
         .field("emulated", Json::Arr(emulated_rows))
         .build();
     std::fs::write(out_path, json.to_pretty())
@@ -680,8 +897,11 @@ COMMANDS:
   run            --net FILE.net --target T --input \"v1,v2,...\" [--classifications N]
   throughput     [--topo \"64,64,64,8\"] [--samples N] [--threads T] [--reps R] [--seed N]
   bench json     [--topo \"64,64,32\"] [--samples N] [--threads T] [--reps R] [--seed N]
-                 [--out FILE]   write the kernel sweep + per-target emulated
-                 cycle counts to BENCH_kernels.json
+                 [--out FILE]   write the kernel sweep (incl. exec-plan
+                 serial/row-split rows + fig11 row-split speedup) and
+                 per-target emulated cycle counts to BENCH_kernels.json
+  bench smoke    [--samples N] [--seed N]   assert the row-split path is
+                 checksum-identical to serial under 1/2/8 workers
   info           show applications, targets, artifact status
   help           this text
 

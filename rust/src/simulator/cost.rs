@@ -17,6 +17,7 @@
 
 use crate::deploy::{DeploymentPlan, DmaStrategy};
 use crate::fann::activation::Activation;
+use crate::kernels::exec_plan::rows_per_core_block_max;
 use crate::targets::{dma, memspec, Region, Target};
 
 /// Synchronization cost per layer for a parallel cluster section
@@ -87,6 +88,14 @@ pub struct CostOptions {
     /// Fig. 3 `IsaExtensions::simd_lanes` ladder). Values < 1 are
     /// treated as 1.
     pub simd_lanes: u8,
+    /// Row granularity of the parallel (neuron-wise) split: 1 for the
+    /// row-granular f32/q32 kernels; the packed representations set 4
+    /// because four output rows share one word panel, so a cluster
+    /// core's work quantizes to whole panels
+    /// ([`crate::kernels::exec_plan::split_row_blocks`] — the same
+    /// partition the emulator walks and the host row-split driver
+    /// executes). Values < 1 are treated as 1.
+    pub row_block: u8,
 }
 
 impl Default for CostOptions {
@@ -94,6 +103,7 @@ impl Default for CostOptions {
         Self {
             legacy_init: false,
             simd_lanes: 1,
+            row_block: 1,
         }
     }
 }
@@ -117,7 +127,14 @@ pub fn layer_cycles(
     let mac = core.mac_cycles(dtype_of(plan)) / lanes + region_penalty_per_word(plan);
     let word = crate::deploy::memory::dtype_size(plan.dtype);
 
-    let rows_pc = n_out.div_ceil(cores);
+    // Per-core rows of the crate's one row-split schedule
+    // (`kernels::exec_plan::split_row_blocks` — the partition the host
+    // row-split driver and the emulator actually walk): the wall-clock
+    // rows of a parallel layer are whatever the fullest core received.
+    // At row granularity (f32/q32) that equals ceil(n_out / cores);
+    // packed reprs set `row_block = 4`, so small layers bill whole
+    // word panels per core.
+    let rows_pc = rows_per_core_block_max(n_out, opts.row_block.max(1) as usize, cores);
     let neuron_ovh = core.per_neuron_overhead()
         + if opts.legacy_init {
             match plan.dtype {
@@ -189,13 +206,15 @@ pub fn network_cycles(plan: &DeploymentPlan, acts: &[Activation], opts: CostOpti
     total
 }
 
-/// Core-busy fraction of a parallel run (ceil losses at each layer):
+/// Core-busy fraction of a parallel run (ceil losses at each layer,
+/// panel-quantized for packed representations via `opts.row_block`):
 /// used by the power model for idle-at-barrier clock gating.
-pub fn utilization(plan: &DeploymentPlan, acts: &[Activation]) -> f64 {
+pub fn utilization(plan: &DeploymentPlan, acts: &[Activation], opts: CostOptions) -> f64 {
     let cores = plan.target.num_cores() as usize;
     if cores == 1 {
         return 1.0;
     }
+    let block = opts.row_block.max(1) as usize;
     let sizes = &plan.shape.sizes;
     let core = plan.target.core();
     let mac = core.mac_cycles(dtype_of(plan));
@@ -205,7 +224,7 @@ pub fn utilization(plan: &DeploymentPlan, acts: &[Activation]) -> f64 {
         let row = w[0] as f64 * mac
             + core.per_neuron_overhead()
             + core.activation_cycles(acts[l]);
-        let rows_pc = w[1].div_ceil(cores) as f64;
+        let rows_pc = rows_per_core_block_max(w[1], block, cores) as f64;
         busy += w[1] as f64 * row;
         wall += rows_pc * row * cores as f64;
     }
@@ -377,10 +396,60 @@ mod tests {
         )
         .unwrap();
         let acts = acts_for(4);
-        let u_big = utilization(&big, &acts);
-        let u_small = utilization(&small, &acts_for(2));
+        let u_big = utilization(&big, &acts, CostOptions::default());
+        let u_small = utilization(&small, &acts_for(2), CostOptions::default());
         assert!(u_big > 0.85, "{u_big}");
         assert!(u_small < 0.5, "{u_small}");
+    }
+
+    #[test]
+    fn packed_row_block_bills_whole_panels_on_the_cluster() {
+        // 16 output rows on 8 cores: row-granular billing is 2 rows per
+        // core, but a packed layer's 4 panels can only go to 4 cores —
+        // the fullest core computes one whole panel (4 rows). The
+        // row_block knob makes the estimate follow the panel schedule.
+        let shape = NetShape::new(&[64, 16, 16]);
+        let p = plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Fixed).unwrap();
+        let acts = acts_for(2);
+        let row = network_cycles(&p, &acts, CostOptions::default());
+        let panel = network_cycles(
+            &p,
+            &acts,
+            CostOptions {
+                row_block: 4,
+                ..CostOptions::default()
+            },
+        );
+        assert!(
+            panel.compute > row.compute * 1.5,
+            "panel-quantized compute {} should roughly double row-granular {}",
+            panel.compute,
+            row.compute
+        );
+        // Utilization drops correspondingly (half the cores idle).
+        let u_row = utilization(&p, &acts, CostOptions::default());
+        let u_panel = utilization(
+            &p,
+            &acts,
+            CostOptions {
+                row_block: 4,
+                ..CostOptions::default()
+            },
+        );
+        assert!(u_panel < u_row, "{u_panel} vs {u_row}");
+        // Single-core runs are unaffected by the block size.
+        let p1 = plan(&shape, Target::WolfCluster { cores: 1 }, DataType::Fixed).unwrap();
+        let a = network_cycles(&p1, &acts, CostOptions::default()).total();
+        let b = network_cycles(
+            &p1,
+            &acts,
+            CostOptions {
+                row_block: 4,
+                ..CostOptions::default()
+            },
+        )
+        .total();
+        assert_eq!(a, b);
     }
 
     #[test]

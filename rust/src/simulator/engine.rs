@@ -12,18 +12,20 @@ use super::cost::{self, CostOptions, CycleBreakdown};
 use crate::deploy::DeploymentPlan;
 use crate::fann::activation::Activation;
 use crate::fann::{FixedNetwork, Network};
-use crate::kernels::{self, BatchScratch};
+use crate::kernels::{self, BatchScratch, ExecPlan, PlanScratch};
 use crate::quantize;
 use crate::targets::{power, DataType, Target};
 
 /// Reusable scratch for batched [`Executable`] execution: the float and
 /// Q-format ping-pong arenas plus the fixed path's quantize/dequantize
-/// staging buffers. Grown once, reused for every batch of a stream —
-/// `apps::classify_stream_with` threads one through a whole workload.
+/// staging buffers and the compiled-plan flat scratch. Grown once,
+/// reused for every batch of a stream — `apps::classify_stream_with`
+/// threads one through a whole workload.
 #[derive(Debug, Default)]
 pub struct ExecScratch {
     pub f: BatchScratch<f32>,
     pub q: BatchScratch<i32>,
+    plan: PlanScratch,
     qin: Vec<i32>,
     qout: Vec<i32>,
 }
@@ -34,11 +36,14 @@ impl ExecScratch {
     }
 }
 
-/// The executable forms a deployment can carry.
+/// The executable forms a deployment can carry. `Compiled` executes an
+/// ahead-of-time [`ExecPlan`] (any representation) — same numerics as
+/// the network it was compiled from, zero per-layer dispatch.
 #[derive(Debug)]
 pub enum Executable<'a> {
     Float(&'a Network),
     Fixed(&'a FixedNetwork),
+    Compiled(&'a ExecPlan),
 }
 
 impl<'a> Executable<'a> {
@@ -46,6 +51,7 @@ impl<'a> Executable<'a> {
         match self {
             Executable::Float(n) => n.num_inputs(),
             Executable::Fixed(n) => n.num_inputs(),
+            Executable::Compiled(p) => p.num_inputs(),
         }
     }
 
@@ -53,16 +59,18 @@ impl<'a> Executable<'a> {
         match self {
             Executable::Float(n) => n.num_outputs(),
             Executable::Fixed(n) => n.num_outputs(),
+            Executable::Compiled(p) => p.num_outputs(),
         }
     }
 
     /// Execute one sample numerically (float outputs; dequantized for
-    /// fixed executables). Both arms dispatch through the crate's
-    /// [`crate::kernels::DenseKernel`] layer.
+    /// fixed executables). All arms dispatch through the crate's
+    /// kernel layer — `Compiled` through its frozen concrete kernels.
     pub fn forward(&self, input: &[f32]) -> Vec<f32> {
         match self {
             Executable::Float(n) => n.run(input),
             Executable::Fixed(n) => n.run(input),
+            Executable::Compiled(p) => p.run(input),
         }
     }
 
@@ -102,6 +110,25 @@ impl<'a> Executable<'a> {
                     *o = quantize::dequantize(q as i64, n.decimal_point);
                 }
             }
+            Executable::Compiled(p) => {
+                if p.is_float() {
+                    p.run_batch_f32_into(inputs, n_samples, &mut scratch.plan, out);
+                } else {
+                    let dec = p.decimal_point().expect("fixed plan has a decimal point");
+                    scratch.qin.clear();
+                    scratch.qin.extend(inputs.iter().map(|&v| quantize::quantize(v, dec)));
+                    scratch.qout.resize(out.len(), 0);
+                    p.run_batch_q_into(
+                        &scratch.qin,
+                        n_samples,
+                        &mut scratch.plan,
+                        &mut scratch.qout[..],
+                    );
+                    for (o, &q) in out.iter_mut().zip(scratch.qout.iter()) {
+                        *o = quantize::dequantize(q as i64, dec);
+                    }
+                }
+            }
         }
     }
 
@@ -109,6 +136,7 @@ impl<'a> Executable<'a> {
         match self {
             Executable::Float(n) => n.layers.iter().map(|l| l.activation).collect(),
             Executable::Fixed(n) => n.layers.iter().map(|l| l.activation).collect(),
+            Executable::Compiled(p) => p.activations(),
         }
     }
 
@@ -116,6 +144,7 @@ impl<'a> Executable<'a> {
         match self {
             Executable::Float(n) => n.layer_sizes(),
             Executable::Fixed(n) => n.layer_sizes(),
+            Executable::Compiled(p) => p.layer_sizes(),
         }
     }
 }
@@ -170,6 +199,8 @@ fn validate(plan: &DeploymentPlan, exe: &Executable) -> Result<()> {
     );
     match (&exe, plan.dtype) {
         (Executable::Float(_), DataType::Float32) | (Executable::Fixed(_), DataType::Fixed) => {}
+        (Executable::Compiled(p), DataType::Float32) if p.is_float() => {}
+        (Executable::Compiled(p), DataType::Fixed) if !p.is_float() => {}
         _ => anyhow::bail!("plan dtype does not match executable representation"),
     }
     Ok(())
@@ -198,7 +229,7 @@ pub fn target_cost(plan: &DeploymentPlan, acts: &[Activation], opts: CostOptions
     let breakdown = cost::network_cycles(plan, acts, opts);
     let cycles = breakdown.total();
     let seconds = cycles / plan.target.freq_hz();
-    let utilization = cost::utilization(plan, acts);
+    let utilization = cost::utilization(plan, acts, opts);
 
     let active_mw = match plan.target {
         Target::WolfCluster { cores } => {
@@ -421,6 +452,42 @@ mod tests {
         assert!(
             simulate_batch(&p, &Executable::Float(&net), &[], 0, CostOptions::default()).is_err()
         );
+    }
+
+    #[test]
+    fn compiled_executable_matches_interpreted_paths() {
+        let net = float_net(&[7, 6, 5]);
+        let shape = NetShape::from(&net);
+        let x = [0.1f32, -0.5, 0.9, 0.0, 0.3, -0.2, 0.7];
+
+        // Float plan vs float network, same deployment plan.
+        let plan_f = net.compile_plan();
+        let p = plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+        let want = simulate(&p, &Executable::Float(&net), &x, CostOptions::default()).unwrap();
+        let got = simulate(&p, &Executable::Compiled(&plan_f), &x, CostOptions::default()).unwrap();
+        assert_eq!(got.outputs, want.outputs);
+        assert_eq!(got.breakdown.total(), want.breakdown.total());
+
+        // Fixed plan vs fixed network.
+        let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+        let plan_q = fixed.compile_plan();
+        let pq = plan(&shape, Target::WolfFc, DataType::Fixed).unwrap();
+        let want_q = simulate(&pq, &Executable::Fixed(&fixed), &x, CostOptions::default()).unwrap();
+        let got_q =
+            simulate(&pq, &Executable::Compiled(&plan_q), &x, CostOptions::default()).unwrap();
+        assert_eq!(got_q.outputs, want_q.outputs);
+
+        // Batched form through the shared scratch agrees per sample.
+        let mut rng = Rng::new(8);
+        let n = 9;
+        let xs: Vec<f32> = (0..n * 7).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let rb = simulate_batch(&p, &Executable::Compiled(&plan_f), &xs, n, CostOptions::default())
+            .unwrap();
+        assert_eq!(rb.outputs, net.run_batch(&xs, n));
+
+        // Representation mismatch is rejected for compiled plans too.
+        assert!(simulate(&pq, &Executable::Compiled(&plan_f), &x, CostOptions::default()).is_err());
+        assert!(simulate(&p, &Executable::Compiled(&plan_q), &x, CostOptions::default()).is_err());
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Integration suite for the compiled execution plans
+//! (`kernels::exec_plan`): compile-from-every-source parity against the
+//! dispatch paths over a grid of ragged shapes, the narrow/wide q32
+//! kernel selection, and the `simulator::Executable::Compiled` wiring.
+
+use fann_on_mcu::bench::batch::{run_plan_q_rowsplit, run_plan_rowsplit};
+use fann_on_mcu::deploy::{self, NetShape};
+use fann_on_mcu::fann::{from_float_packed, Activation, FixedNetwork, Network};
+use fann_on_mcu::kernels::{PackedWidth, PlanScratch};
+use fann_on_mcu::simulator::{self, CostOptions, Executable};
+use fann_on_mcu::targets::{DataType, Target};
+use fann_on_mcu::util::rng::Rng;
+
+fn net(sizes: &[usize], seed: u64) -> Network {
+    let mut rng = Rng::new(seed);
+    let mut n = Network::new(sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+    n.randomize(&mut rng, None);
+    n
+}
+
+/// The shape grid: ragged widths straddling the 4-wide tile and panel
+/// boundaries, a single-neuron output, and a deeper stack.
+fn shape_grid() -> Vec<Vec<usize>> {
+    vec![
+        vec![1, 1],
+        vec![3, 1],
+        vec![4, 4, 4],
+        vec![5, 9, 3],
+        vec![7, 13, 11, 2],
+        vec![16, 8, 8, 16, 4],
+        vec![33, 5, 17, 1],
+    ]
+}
+
+#[test]
+fn compiled_plans_match_dispatch_for_every_source_and_shape() {
+    for (i, sizes) in shape_grid().into_iter().enumerate() {
+        let fnet = net(&sizes, 100 + i as u64);
+        let mut rng = Rng::new(50 + i as u64);
+        for n_samples in [1usize, 4, 7] {
+            let xs: Vec<f32> =
+                (0..n_samples * sizes[0]).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+
+            // Float source.
+            let plan = fnet.compile_plan();
+            assert_eq!(
+                plan.run_batch_f32(&xs, n_samples),
+                fnet.run_batch(&xs, n_samples),
+                "{sizes:?} f32 n={n_samples}"
+            );
+
+            // Fixed source.
+            let fixed = FixedNetwork::from_float(&fnet, 1.0).unwrap();
+            let plan_q = fixed.compile_plan();
+            let xq = fixed.quantize_input(&xs);
+            assert_eq!(
+                plan_q.run_batch_q(&xq, n_samples),
+                fixed.run_batch_q(&xq, n_samples),
+                "{sizes:?} q32 n={n_samples}"
+            );
+
+            // Packed sources.
+            for width in [PackedWidth::Q7, PackedWidth::Q15] {
+                let (reference, packed) = from_float_packed(&fnet, 1.0, width).unwrap();
+                let plan_p = packed.compile_plan();
+                let xqp = packed.quantize_input(&xs);
+                let got = plan_p.run_batch_q(&xqp, n_samples);
+                assert_eq!(
+                    got,
+                    packed.run_batch_q(&xqp, n_samples),
+                    "{sizes:?} {width:?} n={n_samples}"
+                );
+                // And transitively bit-exact vs the wide FixedQ
+                // reference at the same decimal point.
+                assert_eq!(
+                    got,
+                    reference.run_batch_q(&xqp, n_samples),
+                    "{sizes:?} {width:?} vs FixedQ n={n_samples}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_reuses_one_flat_scratch_with_no_steady_state_allocation() {
+    let fnet = net(&[12, 9, 5], 3);
+    let fixed = FixedNetwork::from_float(&fnet, 1.0).unwrap();
+    let plan = fixed.compile_plan();
+    let mut rng = Rng::new(9);
+    let n = 6;
+    let xs: Vec<f32> = (0..n * 12).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let xq = fixed.quantize_input(&xs);
+    let mut scratch = PlanScratch::new();
+    let mut out = vec![0i32; n * plan.num_outputs()];
+    plan.run_batch_q_into(&xq, n, &mut scratch, &mut out);
+    let want = out.clone();
+    // Repeated same-shape runs must neither reallocate nor drift.
+    for _ in 0..10 {
+        plan.run_batch_q_into(&xq, n, &mut scratch, &mut out);
+        assert_eq!(out, want);
+    }
+}
+
+#[test]
+fn q32_wide_path_inputs_stay_bit_exact_through_the_network() {
+    // Inputs near the i32 rails force the exact i64 path on layer 0;
+    // deeper layers drop back to the narrow kernel after the first
+    // activation bounds the values. Every mix must equal FixedQ.
+    let fnet = net(&[6, 10, 4], 77);
+    let fixed = FixedNetwork::from_float(&fnet, 1.0).unwrap();
+    let plan = fixed.compile_plan();
+    let huge: Vec<i32> = (0..6)
+        .map(|i| match i % 3 {
+            0 => i32::MAX - i as i32,
+            1 => i32::MIN + 1 + i as i32,
+            _ => (1 << 28) + i as i32,
+        })
+        .collect();
+    assert_eq!(plan.run_batch_q(&huge, 1), fixed.run_batch_q(&huge, 1));
+    assert!(!plan.narrow_ok(0, &huge));
+    // Row-split on the wide path is bit-exact too.
+    for workers in [2usize, 5, 8] {
+        assert_eq!(
+            run_plan_q_rowsplit(&plan, &huge, 1, workers),
+            fixed.run_batch_q(&huge, 1),
+            "workers={workers}"
+        );
+    }
+}
+
+#[test]
+fn compiled_executable_runs_under_deployment_plans() {
+    let fnet = net(&[8, 14, 6], 5);
+    let shape = NetShape::from(&fnet);
+    let x: Vec<f32> = {
+        let mut rng = Rng::new(13);
+        (0..8).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+    };
+
+    // Float compiled plan on the cluster.
+    let plan_f = fnet.compile_plan();
+    let dp = deploy::plan(&shape, Target::WolfCluster { cores: 8 }, DataType::Float32).unwrap();
+    let want = simulator::simulate(&dp, &Executable::Float(&fnet), &x, CostOptions::default())
+        .unwrap();
+    let got =
+        simulator::simulate(&dp, &Executable::Compiled(&plan_f), &x, CostOptions::default())
+            .unwrap();
+    assert_eq!(got.outputs, want.outputs);
+    assert_eq!(got.breakdown.total(), want.breakdown.total());
+    assert_eq!(got.energy_uj, want.energy_uj);
+
+    // Fixed compiled plan on the FC, batched.
+    let fixed = FixedNetwork::from_float(&fnet, 1.0).unwrap();
+    let plan_q = fixed.compile_plan();
+    let dq = deploy::plan(&shape, Target::WolfFc, DataType::Fixed).unwrap();
+    let mut rng = Rng::new(21);
+    let n = 5;
+    let xs: Vec<f32> = (0..n * 8).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let want_b =
+        simulator::simulate_batch(&dq, &Executable::Fixed(&fixed), &xs, n, CostOptions::default())
+            .unwrap();
+    let got_b = simulator::simulate_batch(
+        &dq,
+        &Executable::Compiled(&plan_q),
+        &xs,
+        n,
+        CostOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(got_b.outputs, want_b.outputs);
+    assert_eq!(got_b.total_seconds, want_b.total_seconds);
+}
+
+#[test]
+fn rowsplit_composes_with_sample_chunk_parallelism() {
+    // The two parallelism axes answer different questions but must
+    // agree bit for bit: row-split (intra-layer) and the inter-sample
+    // chunked driver, on the same plan-equivalent network.
+    let fnet = net(&[10, 24, 16, 8], 55);
+    let plan = fnet.compile_plan();
+    let mut rng = Rng::new(2);
+    let n = 17;
+    let xs: Vec<f32> = (0..n * 10).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let serial = plan.run_batch_f32(&xs, n);
+    assert_eq!(
+        fann_on_mcu::bench::batch::run_batch_parallel(&fnet, &xs, n, 4),
+        serial,
+        "inter-sample driver"
+    );
+    assert_eq!(run_plan_rowsplit(&plan, &xs, n, 4), serial, "intra-layer driver");
+}

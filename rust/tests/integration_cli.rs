@@ -46,7 +46,14 @@ fn throughput_runs_and_reports_all_paths() {
         String::from_utf8_lossy(&out.stderr)
     );
     let text = String::from_utf8_lossy(&out.stdout);
-    for needle in ["run_batch()", "parallel driver", "run_q()", "vs loop"] {
+    for needle in [
+        "run_batch()",
+        "parallel driver",
+        "run_q()",
+        "vs loop",
+        "exec plan",
+        "exec plan row-split",
+    ] {
         assert!(text.contains(needle), "throughput output missing {needle:?}:\n{text}");
     }
 }
@@ -78,10 +85,21 @@ fn bench_json_writes_perf_baseline() {
         "\"mode\": \"parallel\"",
         "\"bytes_per_network\"",
         "speedup_packed_q7_vs_fixed_q_serial",
+        // Compiled-plan rows + the two new speedup gates.
+        "\"kernel\": \"exec_plan_f32\"",
+        "\"kernel\": \"exec_plan_q32\"",
+        "\"kernel\": \"exec_plan_q7\"",
+        "\"kernel\": \"exec_plan_q15\"",
+        "\"mode\": \"rowsplit\"",
+        "speedup_execplan_vs_dispatch_serial",
+        "speedup_rowsplit_8w_vs_serial",
+        "\"fig11_rowsplit\"",
+        "\"workers_requested\": 8",
         // Per-target emulated cycle counts (the CI bench-smoke gate).
         "\"emulated\"",
         "\"target\": \"cortex-m4f\"",
         "\"target\": \"wolf-8core\"",
+        "\"repr\": \"q15\"",
         "\"emulated_cycles\"",
     ] {
         assert!(text.contains(needle), "bench json missing {needle:?}:\n{text}");
@@ -90,6 +108,21 @@ fn bench_json_writes_perf_baseline() {
     let out = bin().args(["bench", "csv"]).output().unwrap();
     assert!(!out.status.success());
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_smoke_asserts_rowsplit_checksum_parity() {
+    let out = bin().args(["bench", "smoke", "--samples", "24"]).output().unwrap();
+    assert!(
+        out.status.success(),
+        "bench smoke failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("all checksum-identical to serial"),
+        "bench smoke output:\n{text}"
+    );
 }
 
 #[test]

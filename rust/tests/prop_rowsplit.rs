@@ -1,0 +1,131 @@
+//! Property test for the neuron-parallel (row-split) execution path:
+//! over random network shapes, every kernel family (f32, q32, packed
+//! q7/q15) and every core count 1..=8, the row-split driver must be
+//! **bit-exact** vs the serial compiled-plan run — which the exec-plan
+//! suite in turn pins to the dispatch paths. Shapes deliberately
+//! include single-neuron layers and layers smaller than the core count
+//! (ragged splits, idle cores), and batch sizes of 1 (the in-place
+//! write path) and >1 (the scatter path).
+
+use fann_on_mcu::bench::batch::{run_plan_q_rowsplit, run_plan_rowsplit};
+use fann_on_mcu::fann::{from_float_packed, Activation, FixedNetwork, Network};
+use fann_on_mcu::kernels::{ExecPlan, PackedWidth};
+use fann_on_mcu::util::proptest::{check, ensure};
+use fann_on_mcu::util::rng::Rng;
+
+/// Random layer sizes: depth 2..=4 transitions, widths 1..=33 with a
+/// bias toward tiny layers so single-neuron and sub-core-count layers
+/// appear often.
+fn random_sizes(rng: &mut Rng) -> Vec<usize> {
+    let depth = rng.range_usize(2, 4);
+    (0..=depth)
+        .map(|_| {
+            if rng.below(4) == 0 {
+                rng.range_usize(1, 7) // tiny: often < 8 cores, sometimes 1
+            } else {
+                rng.range_usize(1, 33)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn rowsplit_bit_exact_across_shapes_cores_and_families() {
+    check("row-split parity", 20, |rng| {
+        let sizes = random_sizes(rng);
+        let mut net = Network::new(&sizes, Activation::Tanh, Activation::Sigmoid)
+            .map_err(|e| e.to_string())?;
+        net.randomize(rng, None);
+        let n_in = sizes[0];
+        let n_samples = if rng.below(2) == 0 { 1 } else { rng.range_usize(2, 9) };
+        let xs: Vec<f32> = (0..n_samples * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+
+        // f32 family.
+        let plan_f = ExecPlan::compile(&net);
+        let want_f = plan_f.run_batch_f32(&xs, n_samples);
+        ensure(
+            want_f == net.run_batch(&xs, n_samples),
+            format!("{sizes:?}: f32 plan diverged from dispatch"),
+        )?;
+        for cores in 1..=8usize {
+            let got = run_plan_rowsplit(&plan_f, &xs, n_samples, cores);
+            ensure(
+                got == want_f,
+                format!("{sizes:?}: f32 row-split diverged at {cores} cores, n={n_samples}"),
+            )?;
+        }
+
+        // q32 family.
+        let fixed = FixedNetwork::from_float(&net, 1.0).map_err(|e| e.to_string())?;
+        let plan_q = ExecPlan::compile(&fixed);
+        let xq = fixed.quantize_input(&xs);
+        let want_q = plan_q.run_batch_q(&xq, n_samples);
+        ensure(
+            want_q == fixed.run_batch_q(&xq, n_samples),
+            format!("{sizes:?}: q32 plan diverged from dispatch"),
+        )?;
+        for cores in 1..=8usize {
+            let got = run_plan_q_rowsplit(&plan_q, &xq, n_samples, cores);
+            ensure(
+                got == want_q,
+                format!("{sizes:?}: q32 row-split diverged at {cores} cores, n={n_samples}"),
+            )?;
+        }
+
+        // Packed families (panel-aligned splits).
+        for width in [PackedWidth::Q7, PackedWidth::Q15] {
+            let (_, packed) = from_float_packed(&net, 1.0, width).map_err(|e| e.to_string())?;
+            let plan_p = ExecPlan::compile(&packed);
+            let xqp = packed.quantize_input(&xs);
+            let want_p = plan_p.run_batch_q(&xqp, n_samples);
+            ensure(
+                want_p == packed.run_batch_q(&xqp, n_samples),
+                format!("{sizes:?}: {width:?} plan diverged from dispatch"),
+            )?;
+            for cores in 1..=8usize {
+                let got = run_plan_q_rowsplit(&plan_p, &xqp, n_samples, cores);
+                ensure(
+                    got == want_p,
+                    format!(
+                        "{sizes:?}: {width:?} row-split diverged at {cores} cores, n={n_samples}"
+                    ),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn rowsplit_handles_degenerate_layers_exhaustively() {
+    // Deterministic corner shapes: single-neuron output, every layer
+    // smaller than 8 cores, and a single-panel packed layer.
+    for sizes in [vec![3usize, 1], vec![5, 2, 1], vec![4, 3, 2, 1], vec![9, 4, 3]] {
+        let mut rng = Rng::new(0xD_E9E0);
+        let mut net = Network::new(&sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+        net.randomize(&mut rng, None);
+        let n_in = sizes[0];
+        for n_samples in [1usize, 3] {
+            let xs: Vec<f32> =
+                (0..n_samples * n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let plan_f = ExecPlan::compile(&net);
+            let want = plan_f.run_batch_f32(&xs, n_samples);
+            let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+            let plan_q = ExecPlan::compile(&fixed);
+            let xq = fixed.quantize_input(&xs);
+            let want_q = plan_q.run_batch_q(&xq, n_samples);
+            for cores in 1..=8usize {
+                assert_eq!(
+                    run_plan_rowsplit(&plan_f, &xs, n_samples, cores),
+                    want,
+                    "{sizes:?} cores={cores} n={n_samples}"
+                );
+                assert_eq!(
+                    run_plan_q_rowsplit(&plan_q, &xq, n_samples, cores),
+                    want_q,
+                    "{sizes:?} cores={cores} n={n_samples}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate for BENCH_kernels.json.
+
+Compares a fresh `cargo run --release -- bench json` output against the
+committed baseline and fails if any `speedup_*` field regressed below
+RATIO (default 0.8) x its baseline value, or disappeared entirely.
+
+Usage: bench_diff.py BASELINE.json FRESH.json [RATIO]
+
+Only `speedup_*` fields are gated: absolute wall-times vary with runner
+hardware, but the *ratios* (packed vs wide, compiled plan vs dispatch,
+row-split vs serial) are what the optimization claims are made of, and
+those must not silently decay. New speedup fields in the fresh run are
+allowed (the gate is forward-compatible); refresh the baseline by
+rerunning `bench json` on a quiet machine and committing the result.
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(sys.argv[1]) as f:
+        base = json.load(f)
+    with open(sys.argv[2]) as f:
+        fresh = json.load(f)
+    ratio = float(sys.argv[3]) if len(sys.argv) > 3 else 0.8
+
+    failures = []
+    checked = 0
+    for key in sorted(base):
+        if not key.startswith("speedup_"):
+            continue
+        floor = base[key]
+        if not isinstance(floor, (int, float)) or floor <= 0:
+            failures.append(f"{key}: baseline value {floor!r} is not a positive number")
+            continue
+        got = fresh.get(key)
+        if not isinstance(got, (int, float)):
+            failures.append(f"{key}: missing from the fresh run")
+            continue
+        checked += 1
+        if got < ratio * floor:
+            failures.append(
+                f"{key}: {got:.3f} < {ratio} x baseline {floor:.3f} (floor {ratio * floor:.3f})"
+            )
+        else:
+            print(f"ok {key}: {got:.3f} (baseline {floor:.3f}, floor {ratio * floor:.3f})")
+
+    if checked == 0 and not failures:
+        failures.append("baseline contains no speedup_* fields — nothing was gated")
+    if failures:
+        print("bench regression check FAILED:", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"bench regression check passed ({checked} speedup fields)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
