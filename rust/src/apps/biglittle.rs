@@ -23,7 +23,9 @@ pub struct BigLittle<'a> {
     pub little: &'a FixedNetwork,
     /// Big classifier (float, runs on the cluster).
     pub big: &'a Network,
+    /// Deployment of the always-on little network.
     pub little_plan: deploy::DeploymentPlan,
+    /// Deployment of the wake-up big network.
     pub big_plan: deploy::DeploymentPlan,
 }
 
@@ -34,10 +36,13 @@ pub struct DutyCycleReport {
     pub windows: u64,
     /// Windows that triggered the big classifier.
     pub onsets: u64,
+    /// Energy of the little tier over the window, in uJ.
     pub little_energy_uj: f64,
+    /// Energy of the big tier over the window, in uJ.
     pub big_energy_uj: f64,
     /// Cluster activation overhead energy (paid once per onset burst).
     pub overhead_energy_uj: f64,
+    /// Total dual-domain energy over the window, in uJ.
     pub total_energy_uj: f64,
     /// Energy had every window gone straight to the big classifier.
     pub always_big_energy_uj: f64,

@@ -6,6 +6,7 @@
 
 pub mod biglittle;
 pub mod energy;
+pub mod paper;
 
 use anyhow::Result;
 
@@ -21,12 +22,17 @@ use crate::util::rng::Rng;
 /// (mirrors `python/compile/topologies.py`; parity pinned by tests).
 #[derive(Debug, Clone)]
 pub struct AppSpec {
+    /// CLI name (`gesture`, `fall`, `activity`).
     pub name: &'static str,
+    /// Human-readable title (paper Sec. VI).
     pub title: &'static str,
+    /// Layer sizes `[in, hidden..., out]`.
     pub sizes: &'static [usize],
     /// Paper-reported accuracy for the showcase (fraction).
     pub paper_accuracy: f32,
+    /// iRPROP- epoch budget.
     pub max_epochs: usize,
+    /// Early-stop MSE threshold.
     pub desired_error: f32,
 }
 
@@ -70,9 +76,11 @@ pub const EXAMPLE: AppSpec = AppSpec {
     desired_error: 0.0,
 };
 
+/// The registered Sec. VI showcases, in Table II order.
 pub const ALL_APPS: [&AppSpec; 3] = [&GESTURE, &FALL, &ACTIVITY];
 
 impl AppSpec {
+    /// Synthesize this app's dataset (deterministic per seed).
     pub fn dataset(&self, seed: u64) -> TrainData {
         match self.name {
             "gesture" => datasets::gesture(seed),
@@ -82,10 +90,12 @@ impl AppSpec {
         }
     }
 
+    /// Shape-only view for the deployment planner.
     pub fn shape(&self) -> NetShape {
         NetShape::new(self.sizes)
     }
 
+    /// Multiply-accumulates per classification.
     pub fn macs(&self) -> usize {
         self.shape().macs()
     }
@@ -93,11 +103,17 @@ impl AppSpec {
 
 /// A trained, quantized, deployable application.
 pub struct TrainedApp {
+    /// The showcase recipe this app was trained from.
     pub spec: &'static AppSpec,
+    /// The trained float network.
     pub net: Network,
+    /// Quantized form for FPU-less targets.
     pub fixed: FixedNetwork,
+    /// Accuracy on the training split.
     pub train_accuracy: f32,
+    /// Accuracy on the held-out split.
     pub test_accuracy: f32,
+    /// Per-epoch MSE of the training run.
     pub mse_curve: Vec<f32>,
 }
 

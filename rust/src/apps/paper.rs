@@ -1,0 +1,290 @@
+//! The paper-reproduction application pipelines: the three
+//! wearable-bracelet case studies behind the paper's headline claims
+//! (few-µs latency, few-mW power, the octa-core-vs-M4 speedup and
+//! energy-reduction numbers), each run end to end —
+//! train (iRPROP−) → quantize → pack → plan → emit → emulate.
+//!
+//! This module owns the *host* half of the pipeline: synthesizing the
+//! dataset ([`crate::datasets::wearable`]), training the float MLP,
+//! choosing the deployed representation (packed q7 where the weights
+//! fit and accuracy holds, widening to q15/q32 otherwise) and measuring
+//! float/quantized accuracy. The *target* half — per-MCU emission,
+//! emulation and the assembled `PAPER_RESULTS.json` — lives in
+//! [`crate::bench::paper`], which `paper reproduce` drives.
+
+use anyhow::{Context, Result};
+
+use crate::codegen::NetRepr;
+use crate::datasets::wearable;
+use crate::fann::train::{accuracy, rprop::Rprop, rprop::RpropConfig};
+use crate::fann::{
+    from_float_packed, Activation, FixedNetwork, Network, PackedNetwork, TrainData,
+};
+use crate::kernels::PackedWidth;
+use crate::util::rng::Rng;
+
+/// Inputs are min/max-normalized to `[-1, 1]` before training, so the
+/// fixed-point overflow analysis bounds them by 1.0 — the same constant
+/// the emit pipeline passes to `codegen::emit_float`.
+pub const PAPER_MAX_ABS_INPUT: f32 = 1.0;
+
+/// Topology + training recipe of one paper-reproduction case study.
+///
+/// Deliberately separate from [`crate::apps::AppSpec`] (the Sec. VI
+/// showcases): this registry drives a different pipeline — quick/full
+/// dataset sizing, accuracy-guarded representation selection and the
+/// `paper reproduce` sweep — whose knobs (`epochs(quick)`,
+/// `accuracy_floor` as a reported expectation rather than a paper
+/// quote) do not fit the showcase type. Shared behavior stays shared:
+/// both delegate prediction to [`crate::util::predict_class`] and
+/// shape math to the same layer-size convention.
+#[derive(Debug, Clone)]
+pub struct PaperAppSpec {
+    /// CLI name (`emg`, `ecg`, `eeg`).
+    pub name: &'static str,
+    /// Human-readable title used in reports.
+    pub title: &'static str,
+    /// Layer sizes `[in, hidden..., out]`.
+    pub sizes: &'static [usize],
+    /// iRPROP− epoch budget of the full (non-quick) pipeline.
+    pub max_epochs: usize,
+    /// Early-stop MSE threshold.
+    pub desired_error: f32,
+    /// Test accuracy the full pipeline is expected to reach (reported,
+    /// not enforced — `PaperPipeline::meets_floor` records the outcome).
+    pub accuracy_floor: f32,
+}
+
+/// Case study A — 8-channel surface-EMG hand-gesture classification
+/// (the bracelet's 192-100-4 MLP).
+pub const EMG: PaperAppSpec = PaperAppSpec {
+    name: "emg",
+    title: "EMG hand-gesture classification (8ch)",
+    sizes: &[192, 100, 4],
+    max_epochs: 60,
+    desired_error: 0.005,
+    accuracy_floor: 0.85,
+};
+
+/// Case study B — single-lead ECG heartbeat/arrhythmia detection.
+pub const ECG: PaperAppSpec = PaperAppSpec {
+    name: "ecg",
+    title: "ECG heartbeat/arrhythmia detection",
+    sizes: &[64, 32, 3],
+    max_epochs: 80,
+    desired_error: 0.005,
+    accuracy_floor: 0.9,
+};
+
+/// Case study C — EEG/BMI-style binary movement-intention detector.
+pub const EEG: PaperAppSpec = PaperAppSpec {
+    name: "eeg",
+    title: "EEG/BMI movement-intention detection",
+    sizes: &[16, 20, 1],
+    max_epochs: 80,
+    desired_error: 0.01,
+    accuracy_floor: 0.8,
+};
+
+/// The three case studies `paper reproduce` runs, in report order.
+pub const PAPER_APPS: [&PaperAppSpec; 3] = [&EMG, &ECG, &EEG];
+
+/// Look a paper app up by CLI name.
+pub fn paper_app_by_name(name: &str) -> Result<&'static PaperAppSpec> {
+    PAPER_APPS
+        .iter()
+        .find(|a| a.name == name)
+        .copied()
+        .with_context(|| format!("unknown paper app {name:?} (known: emg, ecg, eeg)"))
+}
+
+impl PaperAppSpec {
+    /// Synthesize this app's dataset. `quick` shrinks the per-class
+    /// sample count for CI smoke runs; topology and generator shape
+    /// are unchanged, so modeled latency/memory/energy depend only on
+    /// the representation `choose_repr` lands on (recorded as `repr`
+    /// in the results) — at the same representation, quick and full
+    /// runs model identically and only the achieved accuracy differs.
+    pub fn dataset(&self, seed: u64, quick: bool) -> TrainData {
+        match (self.name, quick) {
+            ("emg", false) => wearable::emg(seed),
+            ("emg", true) => wearable::emg_sized(seed, 40),
+            ("ecg", false) => wearable::ecg(seed),
+            ("ecg", true) => wearable::ecg_sized(seed, 60),
+            ("eeg", false) => wearable::eeg(seed),
+            ("eeg", true) => wearable::eeg_sized(seed, 80),
+            (other, _) => panic!("no dataset for paper app {other:?}"),
+        }
+    }
+
+    /// Epoch budget (`quick` caps it for smoke runs).
+    pub fn epochs(&self, quick: bool) -> usize {
+        if quick {
+            self.max_epochs.min(15)
+        } else {
+            self.max_epochs
+        }
+    }
+
+    /// Multiply-accumulates per classification.
+    pub fn macs(&self) -> usize {
+        self.sizes.windows(2).map(|w| w[0] * w[1]).sum()
+    }
+}
+
+/// The host half of one reproduced case study: the trained float
+/// network, its quantized/packed deployment forms at the chosen
+/// representation, accuracy on the held-out split, and the test set the
+/// target sweep probes with.
+pub struct PaperPipeline {
+    /// The case-study recipe this pipeline ran.
+    pub spec: &'static PaperAppSpec,
+    /// The trained float network.
+    pub net: Network,
+    /// Wide Q(dec) form at the *deployed* decimal point (the packed
+    /// representation's reference; bit-exact vs `packed`).
+    pub fixed: FixedNetwork,
+    /// Panel-packed form when `repr` is q7/q15 (`None` for q32).
+    pub packed: Option<PackedNetwork>,
+    /// The representation the target sweep deploys (q7 preferred).
+    pub repr: NetRepr,
+    /// Q-format decimal point of the deployed representation.
+    pub decimal_point: u32,
+    /// Float-path accuracy on the training split.
+    pub train_accuracy: f32,
+    /// Float-path accuracy on the held-out split.
+    pub test_accuracy: f32,
+    /// Accuracy of the deployed (quantized) representation on the
+    /// held-out split — the number the paper quotes per case study.
+    pub quantized_test_accuracy: f32,
+    /// Whether `quantized_test_accuracy` reached the spec's floor.
+    pub meets_floor: bool,
+    /// Per-epoch MSE curve of the iRPROP− run.
+    pub mse_curve: Vec<f32>,
+    /// Held-out split (normalized), used as emulation probes.
+    pub test: TrainData,
+}
+
+/// Classification accuracy of a quantized network over a dataset
+/// (the shared [`crate::util::predict_class`] rule).
+pub fn fixed_accuracy(fixed: &FixedNetwork, data: &TrainData) -> f32 {
+    let mut correct = 0usize;
+    for i in 0..data.len() {
+        if crate::util::predict_class(&fixed.run(data.input(i))) == data.label(i) {
+            correct += 1;
+        }
+    }
+    correct as f32 / data.len() as f32
+}
+
+/// Pick the deployed representation: the narrowest packed width whose
+/// quantized accuracy stays within 5 points of the float path (q7, then
+/// q15), falling back to wide q32. Returns the chosen representation
+/// with its fixed/packed forms and the quantized held-out accuracy.
+fn choose_repr(
+    net: &Network,
+    test: &TrainData,
+    float_test_accuracy: f32,
+) -> Result<(NetRepr, FixedNetwork, Option<PackedNetwork>, f32)> {
+    for (repr, width) in [(NetRepr::Q7, PackedWidth::Q7), (NetRepr::Q15, PackedWidth::Q15)] {
+        if let Ok((fixed, packed)) = from_float_packed(net, PAPER_MAX_ABS_INPUT, width) {
+            let acc = fixed_accuracy(&fixed, test);
+            if acc >= float_test_accuracy - 0.05 {
+                return Ok((repr, fixed, Some(packed), acc));
+            }
+        }
+    }
+    let fixed = FixedNetwork::from_float(net, PAPER_MAX_ABS_INPUT)?;
+    let acc = fixed_accuracy(&fixed, test);
+    Ok((NetRepr::Q32, fixed, None, acc))
+}
+
+/// Run the host half of one case study: synthesize → normalize → split
+/// 80/20 → train with iRPROP− → quantize at a packable decimal point →
+/// pack. Deterministic per `(spec, seed, quick)`.
+pub fn train_paper_app(
+    spec: &'static PaperAppSpec,
+    seed: u64,
+    quick: bool,
+) -> Result<PaperPipeline> {
+    let mut data = spec.dataset(seed, quick);
+    data.normalize_inputs();
+    let (train, test) = data.split(0.8);
+
+    let mut rng = Rng::new(seed ^ 0xA99);
+    let mut net = Network::new(spec.sizes, Activation::Tanh, Activation::Sigmoid)?;
+    net.randomize(&mut rng, None);
+
+    let mut trainer = Rprop::new(&net, RpropConfig::default());
+    let mse_curve = trainer.train_until(&mut net, &train, spec.epochs(quick), spec.desired_error);
+
+    let train_accuracy = accuracy(&net, &train);
+    let test_accuracy = accuracy(&net, &test);
+    let (repr, fixed, packed, quantized_test_accuracy) =
+        choose_repr(&net, &test, test_accuracy)?;
+
+    Ok(PaperPipeline {
+        spec,
+        decimal_point: fixed.decimal_point,
+        net,
+        fixed,
+        packed,
+        repr,
+        train_accuracy,
+        test_accuracy,
+        quantized_test_accuracy,
+        meets_floor: quantized_test_accuracy >= spec.accuracy_floor,
+        mse_curve,
+        test,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_shapes_match_issue() {
+        assert_eq!(EMG.sizes, &[192, 100, 4]);
+        assert_eq!(EMG.macs(), 192 * 100 + 100 * 4);
+        assert_eq!(ECG.sizes.first(), Some(&wearable::ECG_WINDOW));
+        assert_eq!(EEG.sizes.last(), Some(&1));
+        assert!(paper_app_by_name("ecg").is_ok());
+        assert!(paper_app_by_name("gait").is_err());
+    }
+
+    #[test]
+    fn quick_pipeline_is_deterministic() {
+        let a = train_paper_app(&EEG, 11, true).unwrap();
+        let b = train_paper_app(&EEG, 11, true).unwrap();
+        assert_eq!(a.mse_curve, b.mse_curve);
+        assert_eq!(a.test_accuracy, b.test_accuracy);
+        assert_eq!(a.repr.label(), b.repr.label());
+        for (la, lb) in a.fixed.layers.iter().zip(&b.fixed.layers) {
+            assert_eq!(la.weights, lb.weights);
+        }
+    }
+
+    #[test]
+    fn eeg_quick_trains_above_chance() {
+        let p = train_paper_app(&EEG, 7, true).unwrap();
+        assert!(
+            p.test_accuracy > 0.6,
+            "EEG quick test accuracy {} is at chance",
+            p.test_accuracy
+        );
+        // Training reduced the MSE.
+        assert!(p.mse_curve.last().unwrap() < p.mse_curve.first().unwrap());
+    }
+
+    #[test]
+    fn packed_form_is_bit_exact_vs_fixed_reference() {
+        let p = train_paper_app(&ECG, 7, true).unwrap();
+        if let Some(packed) = &p.packed {
+            for i in 0..8.min(p.test.len()) {
+                let xq = p.fixed.quantize_input(p.test.input(i));
+                assert_eq!(p.fixed.run_q(&xq), packed.run_q(&xq), "sample {i}");
+            }
+        }
+    }
+}

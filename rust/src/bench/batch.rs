@@ -87,6 +87,7 @@ impl BatchPool {
         }
     }
 
+    /// Worker threads the pool runs.
     pub fn workers(&self) -> usize {
         self.workers
     }
@@ -515,6 +516,7 @@ pub fn checksum_i32(xs: &[i32]) -> u64 {
 /// One measured execution mode of the standard throughput comparison.
 #[derive(Debug, Clone)]
 pub struct ThroughputRow {
+    /// Display name of the execution mode.
     pub name: &'static str,
     /// Median wall time for the whole batch.
     pub seconds: f64,
@@ -752,15 +754,18 @@ pub fn measure_throughput(
 /// One row of the machine-readable kernel sweep (`bench json`).
 #[derive(Debug, Clone)]
 pub struct SweepRow {
+    /// Kernel family name (`scalar_f32`, `packed_q7`, ...).
     pub kernel: &'static str,
     /// `"serial"` or `"parallel"`.
     pub mode: &'static str,
     /// Median wall time for the whole batch.
     pub seconds: f64,
+    /// Throughput over the whole batch.
     pub samples_per_sec: f64,
     /// Parameter storage (weights + biases) in this kernel's
     /// representation — the packed kernels' footprint win.
     pub bytes_per_network: usize,
+    /// Digest of the outputs produced inside the timed loop.
     pub checksum: u64,
 }
 

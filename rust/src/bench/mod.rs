@@ -4,9 +4,12 @@
 //!
 //! [`batch`] is the parallel batch-inference driver used by the
 //! throughput bench (`benches/perf_batch.rs`), the `throughput` CLI
-//! command and the continuous-classification app helpers.
+//! command and the continuous-classification app helpers. [`paper`] is
+//! the `paper reproduce` driver that sweeps the wearable case studies
+//! across the modeled targets and writes `PAPER_RESULTS.json`.
 
 pub mod batch;
+pub mod paper;
 
 use std::time::Instant;
 

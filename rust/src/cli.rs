@@ -1,15 +1,24 @@
 //! Hand-rolled CLI argument parsing (no `clap` in the offline crate set).
 //!
 //! Grammar: `fann-on-mcu <command> [--flag value]...`. Flags are
-//! order-insensitive; unknown flags are errors.
+//! order-insensitive; unknown flags are errors. Flags listed in
+//! [`BOOLEAN_FLAGS`] are switches: they may appear valueless
+//! (`paper reproduce --quick` == `--quick true`); every other flag
+//! still errors when its value is missing.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+/// The flags that parse as valueless boolean switches. Every other
+/// flag keeps the `--flag value` grammar (and the "needs a value"
+/// error), so forgetting a value can never silently become `"true"`.
+pub const BOOLEAN_FLAGS: &[&str] = &["quick"];
+
 /// Parsed command line: the subcommand and its `--key value` flags.
 #[derive(Debug, Clone)]
 pub struct Args {
+    /// The subcommand word (`train`, `deploy`, `paper`, ...).
     pub command: String,
     flags: HashMap<String, String>,
 }
@@ -17,16 +26,23 @@ pub struct Args {
 impl Args {
     /// Parse from an iterator of arguments (without argv[0]).
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
-        let mut it = args.into_iter();
+        let mut it = args.into_iter().peekable();
         let command = it.next().unwrap_or_else(|| "help".to_string());
         let mut flags = HashMap::new();
         while let Some(arg) = it.next() {
             let key = arg
                 .strip_prefix("--")
                 .with_context(|| format!("expected --flag, found {arg:?}"))?;
-            let val = it
-                .next()
-                .with_context(|| format!("flag --{key} needs a value"))?;
+            // A registered switch directly followed by another flag (or
+            // by the end of the line) is valueless and parses as true.
+            let has_value = it.peek().is_some_and(|next| !next.starts_with("--"));
+            let val = if has_value {
+                it.next().unwrap()
+            } else if BOOLEAN_FLAGS.contains(&key) {
+                "true".to_string()
+            } else {
+                bail!("flag --{key} needs a value");
+            };
             if flags.insert(key.to_string(), val).is_some() {
                 bail!("duplicate flag --{key}");
             }
@@ -34,14 +50,17 @@ impl Args {
         Ok(Self { command, flags })
     }
 
+    /// The raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(String::as_str)
     }
 
+    /// The value of `--key`, or `default` when absent.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Parse `--key` as a `usize` (errors on malformed input).
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             Some(v) => v.parse().with_context(|| format!("bad --{key} {v:?}")),
@@ -49,10 +68,22 @@ impl Args {
         }
     }
 
+    /// Parse `--key` as a `u64` (errors on malformed input).
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             Some(v) => v.parse().with_context(|| format!("bad --{key} {v:?}")),
             None => Ok(default),
+        }
+    }
+
+    /// Boolean switch: absent → `false`; `--key` / `--key true` /
+    /// `--key 1` → `true`; `--key false` / `--key 0` → `false`.
+    pub fn get_flag(&self, key: &str) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(false),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(other) => bail!("bad boolean --{key} {other:?} (use true/false)"),
         }
     }
 
@@ -165,8 +196,26 @@ mod tests {
     #[test]
     fn rejects_malformed() {
         assert!(args(&["run", "positional"]).is_err());
-        assert!(args(&["run", "--flag"]).is_err());
         assert!(args(&["run", "--a", "1", "--a", "2"]).is_err());
+        // Non-switch flags still require a value — trailing or followed
+        // by another flag.
+        assert!(args(&["run", "--flag"]).is_err());
+        assert!(args(&["paper", "--out"]).is_err());
+        assert!(args(&["paper", "--out", "--quick"]).is_err());
+    }
+
+    #[test]
+    fn boolean_switches() {
+        // Trailing switch and switch-before-another-flag both parse true.
+        let a = args(&["paper", "--quick"]).unwrap();
+        assert!(a.get_flag("quick").unwrap());
+        let a = args(&["paper", "--quick", "--seed", "9"]).unwrap();
+        assert!(a.get_flag("quick").unwrap());
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 9);
+        // Explicit values still work; absent defaults to false.
+        assert!(!args(&["paper", "--quick", "false"]).unwrap().get_flag("quick").unwrap());
+        assert!(!args(&["paper"]).unwrap().get_flag("quick").unwrap());
+        assert!(args(&["paper", "--quick", "maybe"]).unwrap().get_flag("quick").is_err());
     }
 
     #[test]

@@ -19,9 +19,13 @@ use crate::targets::Target;
 /// One dense layer of an emitted artifact, parameters owned.
 #[derive(Debug, Clone)]
 pub struct EmittedLayer {
+    /// Input width of this layer.
     pub n_in: usize,
+    /// Output rows of this layer.
     pub n_out: usize,
+    /// Activation applied at the layer output.
     pub activation: Activation,
+    /// Owned parameter payload in the emitted representation.
     pub weights: EmittedWeights,
 }
 
@@ -29,18 +33,27 @@ pub struct EmittedLayer {
 /// the artifact was emitted at.
 #[derive(Debug, Clone)]
 pub enum EmittedWeights {
+    /// IEEE f32 parameters.
     F32 {
         /// Row-major `[n_out][n_in]`.
         weights: Vec<f32>,
+        /// One bias per output row.
         biases: Vec<f32>,
+        /// Activation steepness folded at run time (float path only).
         steepness: f32,
     },
+    /// Wide Q(dec) i32 parameters.
     Q32 {
+        /// Row-major `[n_out][n_in]` Q(dec) weights.
         weights: Vec<i32>,
+        /// One Q(dec) bias per output row.
         biases: Vec<i32>,
     },
+    /// Word-panel-packed q7/q15 parameters.
     Packed {
+        /// The packed weight panels.
         panels: PackedPanels,
+        /// Wide i32 biases (CMSIS-NN keeps bias wide).
         biases: Vec<i32>,
     },
 }
@@ -49,15 +62,19 @@ pub enum EmittedWeights {
 /// enough to execute without the source network.
 #[derive(Debug, Clone)]
 pub struct EmittedArtifact {
+    /// The machine-readable schedule the artifact executes under.
     pub plan: DeployPlan,
+    /// Dense layers with owned parameters, in execution order.
     pub layers: Vec<EmittedLayer>,
 }
 
 impl EmittedArtifact {
+    /// Input width of the emitted network.
     pub fn num_inputs(&self) -> usize {
         self.layers[0].n_in
     }
 
+    /// Output width of the emitted network.
     pub fn num_outputs(&self) -> usize {
         self.layers.last().unwrap().n_out
     }
@@ -67,7 +84,9 @@ impl EmittedArtifact {
 /// `deploy_plan.json`) and the executable artifact.
 #[derive(Debug, Clone)]
 pub struct EmitBundle {
+    /// The C source bundle plus `deploy_plan.json`.
     pub code: GeneratedCode,
+    /// The self-contained executable artifact.
     pub artifact: EmittedArtifact,
 }
 

@@ -27,10 +27,12 @@ use crate::targets::{DataType, Region, Target};
 /// A generated source bundle: `(file name, contents)` pairs.
 #[derive(Debug, Clone)]
 pub struct GeneratedCode {
+    /// Emitted `(file name, contents)` pairs, in write order.
     pub files: Vec<(String, String)>,
 }
 
 impl GeneratedCode {
+    /// Contents of the emitted file called `name`, if present.
     pub fn file(&self, name: &str) -> Option<&str> {
         self.files
             .iter()
@@ -38,6 +40,7 @@ impl GeneratedCode {
             .map(|(_, c)| c.as_str())
     }
 
+    /// Total size of the bundle in bytes.
     pub fn total_bytes(&self) -> usize {
         self.files.iter().map(|(_, c)| c.len()).sum()
     }
@@ -46,8 +49,11 @@ impl GeneratedCode {
 /// The network parameters being emitted (float, wide fixed, or packed
 /// q7/q15 word-panel form).
 pub enum NetSource<'a> {
+    /// IEEE f32 parameters from a float network.
     Float(&'a Network),
+    /// Wide Q(dec) i32 parameters from a fixed network.
     Fixed(&'a FixedNetwork),
+    /// Word-panel-packed q7/q15 parameters.
     Packed(&'a PackedNetwork),
 }
 
@@ -71,7 +77,7 @@ impl NetSource<'_> {
 }
 
 /// Generate the deployment bundle for a plan. Dispatches to the ARM or
-/// PULP backend; both share the [`common`] parameter emission.
+/// PULP backend; both share the same parameter-emission helpers.
 pub fn generate(plan: &DeploymentPlan, net: NetSource) -> GeneratedCode {
     match plan.target {
         Target::CortexM4(_) | Target::CortexM7(_) | Target::CortexM0(_) => {

@@ -34,6 +34,7 @@ pub enum NetRepr {
 }
 
 impl NetRepr {
+    /// Stable lowercase name (`f32`, `q32`, `q7`, `q15`).
     pub fn label(self) -> &'static str {
         match self {
             NetRepr::F32 => "f32",
@@ -43,6 +44,7 @@ impl NetRepr {
         }
     }
 
+    /// Parse a `--repr` CLI value.
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "f32" | "float" => NetRepr::F32,
@@ -98,6 +100,7 @@ impl NetRepr {
 /// network is shared-L2-resident).
 #[derive(Debug, Clone)]
 pub struct LayerDma {
+    /// Double-buffer granularity (layer-wise or neuron-wise).
     pub granularity: DmaStrategy,
     /// Transfers programmed for this layer (1 for layer-wise, one per
     /// output neuron for neuron-wise).
@@ -116,9 +119,13 @@ pub struct LayerDma {
 /// One dense layer of the deployment plan.
 #[derive(Debug, Clone)]
 pub struct LayerPlan {
+    /// Dense-layer index (0-based).
     pub index: usize,
+    /// Input width of the layer.
     pub n_in: usize,
+    /// Output rows of the layer.
     pub n_out: usize,
+    /// Activation applied at the layer output.
     pub activation: Activation,
     /// Parameter bytes (weights + biases) in the emitted representation.
     pub param_bytes: usize,
@@ -126,6 +133,7 @@ pub struct LayerPlan {
     pub param_region: Region,
     /// Where the inner loop reads them from (L1 when DMA-staged).
     pub compute_region: Region,
+    /// DMA schedule entry when this layer streams from L2.
     pub dma: Option<LayerDma>,
     /// Modeled cycles of this layer (compute + overheads + DMA).
     pub est_cycles: f64,
@@ -135,14 +143,21 @@ pub struct LayerPlan {
 /// records and everything the emulator needs to walk the schedule.
 #[derive(Debug, Clone)]
 pub struct DeployPlan {
+    /// The deployment target.
     pub target: Target,
+    /// Numeric representation of the emitted parameters.
     pub repr: NetRepr,
+    /// Q-format decimal point (fixed-point representations).
     pub decimal_point: Option<u32>,
+    /// Where the network parameters live at rest.
     pub region: Region,
+    /// Whole-network DMA strategy (cluster L2-resident nets).
     pub dma: Option<DmaStrategy>,
     /// Eq. (2) estimate in bytes (4-byte words, the paper's form).
     pub est_memory_bytes: usize,
+    /// Layer sizes `[in, h1, ..., out]`.
     pub sizes: Vec<usize>,
+    /// Per-dense-layer schedule, in execution order.
     pub layers: Vec<LayerPlan>,
     /// Whole-network cycle/time/energy estimate (SIMD-aware for packed
     /// representations).

@@ -9,19 +9,27 @@
 //! ratio tunes achievable accuracy (DESIGN.md §1 records the
 //! substitution).
 
+pub mod wearable;
+
+pub use wearable::{ecg, ecg_sized, eeg, eeg_sized, emg, emg_sized};
+
 use crate::fann::TrainData;
 use crate::util::rng::Rng;
 
 /// Parameters of a synthetic classification dataset.
 #[derive(Debug, Clone, Copy)]
 pub struct SyntheticSpec {
+    /// Input features per sample.
     pub num_features: usize,
+    /// Number of classes.
     pub num_classes: usize,
+    /// Samples generated per class.
     pub samples_per_class: usize,
     /// Distance scale of class means from the origin.
     pub separation: f32,
     /// Within-class standard deviation.
     pub spread: f32,
+    /// RNG seed (datasets are deterministic per seed).
     pub seed: u64,
 }
 

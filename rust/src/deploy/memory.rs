@@ -21,10 +21,12 @@ use crate::targets::DataType;
 /// deployment planner is representation-agnostic.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NetShape {
+    /// Layer sizes `[in, h1, ..., out]`.
     pub sizes: Vec<usize>,
 }
 
 impl NetShape {
+    /// Shape from explicit layer sizes (panics on < 2 layers).
     pub fn new(sizes: &[usize]) -> Self {
         assert!(sizes.len() >= 2, "need at least input and output layers");
         Self {
@@ -32,22 +34,27 @@ impl NetShape {
         }
     }
 
+    /// Total connection weights.
     pub fn num_weights(&self) -> usize {
         self.sizes.windows(2).map(|w| w[0] * w[1]).sum()
     }
 
+    /// Neurons incl. one bias pseudo-neuron per layer (FANN layout).
     pub fn num_neurons_with_bias(&self) -> usize {
         self.sizes.iter().map(|s| s + 1).sum()
     }
 
+    /// Layer count incl. the input layer (FANN convention).
     pub fn num_fann_layers(&self) -> usize {
         self.sizes.len()
     }
 
+    /// Widest layer (sizes the ping-pong activation buffers).
     pub fn max_layer_width(&self) -> usize {
         *self.sizes.iter().max().unwrap()
     }
 
+    /// Multiply-accumulates per classification (= weights).
     pub fn macs(&self) -> usize {
         self.num_weights()
     }

@@ -26,7 +26,9 @@ pub enum DmaStrategy {
 /// The result of planning a deployment.
 #[derive(Debug, Clone)]
 pub struct DeploymentPlan {
+    /// The deployment target.
     pub target: Target,
+    /// Numeric type the network deploys as.
     pub dtype: DataType,
     /// Where the network parameters live.
     pub region: Region,
@@ -34,10 +36,12 @@ pub struct DeploymentPlan {
     pub dma: Option<DmaStrategy>,
     /// Eq. (2) estimate in bytes.
     pub est_memory_bytes: usize,
+    /// Shape of the deployed network.
     pub shape: NetShape,
 }
 
 impl DeploymentPlan {
+    /// Whether a region was found that holds the network.
     pub fn fits(&self) -> bool {
         self.region != Region::NoFit
     }

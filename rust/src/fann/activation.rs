@@ -15,10 +15,13 @@ use anyhow::{bail, Result};
 /// Activation function selector (FANN enum subset used by the toolkit).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Activation {
+    /// Identity (FANN_LINEAR).
     Linear,
+    /// Logistic sigmoid (FANN_SIGMOID).
     Sigmoid,
     /// FANN_SIGMOID_SYMMETRIC.
     Tanh,
+    /// Rectified linear.
     Relu,
 }
 

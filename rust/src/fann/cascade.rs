@@ -41,7 +41,9 @@ pub struct CascadeConfig {
     pub desired_error: f32,
     /// Stop early if a round improves MSE by less than this fraction.
     pub min_improvement: f32,
+    /// Activation of installed hidden neurons.
     pub hidden_activation: Activation,
+    /// Activation of the output layer.
     pub output_activation: Activation,
 }
 
@@ -95,7 +97,9 @@ pub struct CascadeReport {
     /// MSE after each installed neuron (index 0 = before any hidden
     /// neuron, outputs trained directly on inputs).
     pub mse_curve: Vec<f32>,
+    /// Hidden neurons the run installed.
     pub neurons_installed: usize,
+    /// Whether the target error stopped the run early.
     pub stopped_early: bool,
 }
 

@@ -17,13 +17,18 @@ use crate::util::rng::Rng;
 /// `targets` is `[n][num_outputs]`.
 #[derive(Debug, Clone)]
 pub struct TrainData {
+    /// Features per sample.
     pub num_inputs: usize,
+    /// Target values per sample.
     pub num_outputs: usize,
+    /// All inputs, row-major `[len][num_inputs]`.
     pub inputs: Vec<f32>,
+    /// All targets, row-major `[len][num_outputs]`.
     pub targets: Vec<f32>,
 }
 
 impl TrainData {
+    /// Empty dataset with the given row shapes.
     pub fn new(num_inputs: usize, num_outputs: usize) -> Self {
         Self {
             num_inputs,
@@ -33,6 +38,7 @@ impl TrainData {
         }
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         if self.num_inputs == 0 {
             0
@@ -41,10 +47,12 @@ impl TrainData {
         }
     }
 
+    /// Whether the dataset holds no samples.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Append one `(input, target)` sample.
     pub fn push(&mut self, input: &[f32], target: &[f32]) {
         assert_eq!(input.len(), self.num_inputs);
         assert_eq!(target.len(), self.num_outputs);
@@ -52,10 +60,12 @@ impl TrainData {
         self.targets.extend_from_slice(target);
     }
 
+    /// Input row of sample `i`.
     pub fn input(&self, i: usize) -> &[f32] {
         &self.inputs[i * self.num_inputs..(i + 1) * self.num_inputs]
     }
 
+    /// Target row of sample `i`.
     pub fn target(&self, i: usize) -> &[f32] {
         &self.targets[i * self.num_outputs..(i + 1) * self.num_outputs]
     }

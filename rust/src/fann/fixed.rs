@@ -21,10 +21,15 @@ use crate::quantize;
 /// One quantized layer (row-major weights like the float layer).
 #[derive(Debug, Clone)]
 pub struct FixedLayer {
+    /// Input width of this layer.
     pub n_in: usize,
+    /// Output rows of this layer.
     pub n_out: usize,
+    /// Row-major `[n_out][n_in]` Q(dec) weights.
     pub weights: Vec<i32>,
+    /// One Q(dec) bias per output row.
     pub biases: Vec<i32>,
+    /// Activation applied at the layer output.
     pub activation: Activation,
 }
 
@@ -53,6 +58,7 @@ impl FixedLayer {
 /// A fully quantized network.
 #[derive(Debug, Clone)]
 pub struct FixedNetwork {
+    /// Dense layers in execution order.
     pub layers: Vec<FixedLayer>,
     /// Network-wide decimal point (Q(dec)).
     pub decimal_point: u32,
@@ -97,20 +103,24 @@ impl FixedNetwork {
         }
     }
 
+    /// Input width of the network.
     pub fn num_inputs(&self) -> usize {
         self.layers[0].n_in
     }
 
+    /// Output width of the network.
     pub fn num_outputs(&self) -> usize {
         self.layers.last().unwrap().n_out
     }
 
+    /// Layer sizes `[in, h1, ..., out]`.
     pub fn layer_sizes(&self) -> Vec<usize> {
         let mut sizes = vec![self.layers[0].n_in];
         sizes.extend(self.layers.iter().map(|l| l.n_out));
         sizes
     }
 
+    /// Widest layer (sizes the ping-pong buffers).
     pub fn max_layer_width(&self) -> usize {
         self.layer_sizes().into_iter().max().unwrap()
     }
@@ -307,8 +317,11 @@ pub fn from_float_packed(
 /// i32 biases (CMSIS-NN keeps bias wide too).
 #[derive(Debug, Clone)]
 pub struct PackedLayer {
+    /// Word-packed weight panels.
     pub panels: PackedPanels,
+    /// Wide i32 biases (one per output row).
     pub biases: Vec<i32>,
+    /// Activation applied at the layer output.
     pub activation: Activation,
 }
 
@@ -318,26 +331,33 @@ pub struct PackedLayer {
 /// per-product arithmetic — see [`crate::kernels::packed`]).
 #[derive(Debug, Clone)]
 pub struct PackedNetwork {
+    /// Packed dense layers in execution order.
     pub layers: Vec<PackedLayer>,
+    /// Shared Q-format decimal point.
     pub decimal_point: u32,
+    /// Packed element width (q7 or q15).
     pub width: PackedWidth,
 }
 
 impl PackedNetwork {
+    /// Input width of the network.
     pub fn num_inputs(&self) -> usize {
         self.layers[0].panels.n_in
     }
 
+    /// Output width of the network.
     pub fn num_outputs(&self) -> usize {
         self.layers.last().unwrap().panels.n_out
     }
 
+    /// Layer sizes `[in, h1, ..., out]`.
     pub fn layer_sizes(&self) -> Vec<usize> {
         let mut sizes = vec![self.layers[0].panels.n_in];
         sizes.extend(self.layers.iter().map(|l| l.panels.n_out));
         sizes
     }
 
+    /// Widest layer (sizes the ping-pong buffers).
     pub fn max_layer_width(&self) -> usize {
         self.layers
             .iter()

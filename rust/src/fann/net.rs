@@ -26,19 +26,24 @@ pub use crate::kernels::dot_f32;
 /// One fully-connected layer.
 #[derive(Debug, Clone)]
 pub struct Layer {
+    /// Input width of this layer.
     pub n_in: usize,
+    /// Output rows of this layer.
     pub n_out: usize,
     /// Row-major `[n_out][n_in]`: `weights[o * n_in + i]`. Row-major per
     /// output neuron is exactly the order the paper's neuron-wise DMA
     /// streams weights in.
     pub weights: Vec<f32>,
+    /// One bias per output row.
     pub biases: Vec<f32>,
+    /// Activation applied at the layer output.
     pub activation: Activation,
     /// Uniform activation steepness `s` (output = act(s · sum)).
     pub steepness: f32,
 }
 
 impl Layer {
+    /// All-zero layer of the given shape.
     pub fn zeros(n_in: usize, n_out: usize, activation: Activation) -> Self {
         Self {
             n_in,
@@ -110,6 +115,7 @@ impl Layer {
 /// A multi-layer perceptron.
 #[derive(Debug, Clone)]
 pub struct Network {
+    /// Dense layers in execution order.
     pub layers: Vec<Layer>,
 }
 
@@ -154,10 +160,12 @@ impl Network {
         sizes
     }
 
+    /// Input width of the network.
     pub fn num_inputs(&self) -> usize {
         self.layers[0].n_in
     }
 
+    /// Output width of the network.
     pub fn num_outputs(&self) -> usize {
         self.layers.last().unwrap().n_out
     }
@@ -322,6 +330,7 @@ pub struct Scratch {
 }
 
 impl Scratch {
+    /// Scratch sized for the widest layer of `net`.
     pub fn for_network(net: &Network) -> Self {
         let w = net.max_layer_width();
         Self {

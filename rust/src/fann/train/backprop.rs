@@ -9,7 +9,9 @@ use crate::fann::net::Network;
 /// FANN (`learning_rate = 0.7`, `learning_momentum = 0.0`).
 #[derive(Debug, Clone, Copy)]
 pub struct BackpropConfig {
+    /// Step size of the gradient update.
     pub learning_rate: f32,
+    /// Momentum coefficient (0.0 = plain gradient descent).
     pub momentum: f32,
 }
 
@@ -25,12 +27,14 @@ impl Default for BackpropConfig {
 /// Incremental (per-sample) trainer with momentum.
 #[derive(Debug)]
 pub struct Incremental {
+    /// Hyper-parameters in use.
     pub config: BackpropConfig,
     grads: Gradients,
     velocity: Gradients,
 }
 
 impl Incremental {
+    /// Fresh trainer state shaped like `net`.
     pub fn new(net: &Network, config: BackpropConfig) -> Self {
         Self {
             config,
@@ -69,11 +73,13 @@ impl Incremental {
 /// Full-batch gradient-descent trainer (`FANN_TRAIN_BATCH`).
 #[derive(Debug)]
 pub struct Batch {
+    /// Hyper-parameters in use.
     pub config: BackpropConfig,
     grads: Gradients,
 }
 
 impl Batch {
+    /// Fresh trainer state shaped like `net`.
     pub fn new(net: &Network, config: BackpropConfig) -> Self {
         Self {
             config,

@@ -21,11 +21,14 @@ use super::net::Network;
 /// Per-layer gradients, same shapes as the layer parameters.
 #[derive(Debug, Clone)]
 pub struct Gradients {
+    /// Per-layer weight gradients, same shapes as the network.
     pub d_weights: Vec<Vec<f32>>,
+    /// Per-layer bias gradients.
     pub d_biases: Vec<Vec<f32>>,
 }
 
 impl Gradients {
+    /// Zero gradients shaped like `net`.
     pub fn zeros_like(net: &Network) -> Self {
         Self {
             d_weights: net.layers.iter().map(|l| vec![0.0; l.weights.len()]).collect(),
@@ -33,6 +36,7 @@ impl Gradients {
         }
     }
 
+    /// Reset all gradients to zero.
     pub fn clear(&mut self) {
         for g in &mut self.d_weights {
             g.iter_mut().for_each(|v| *v = 0.0);
@@ -42,6 +46,7 @@ impl Gradients {
         }
     }
 
+    /// Multiply every gradient by `s` (batch averaging).
     pub fn scale(&mut self, s: f32) {
         for g in &mut self.d_weights {
             g.iter_mut().for_each(|v| *v *= s);
@@ -67,19 +72,14 @@ pub fn mse(net: &Network, data: &TrainData) -> f32 {
     (acc / (data.len() * net.num_outputs()) as f64) as f32
 }
 
-/// Classification accuracy (argmax for multi-output, 0.5 threshold for
-/// single-output nets).
+/// Classification accuracy (the shared [`crate::util::predict_class`]
+/// rule: argmax for multi-output, 0.5 threshold for single-output).
 pub fn accuracy(net: &Network, data: &TrainData) -> f32 {
     let mut correct = 0usize;
     let mut scratch = super::net::Scratch::for_network(net);
     for i in 0..data.len() {
         let out = net.run_with(&mut scratch, data.input(i));
-        let pred = if net.num_outputs() == 1 {
-            usize::from(out[0] >= 0.5)
-        } else {
-            crate::util::argmax(out)
-        };
-        if pred == data.label(i) {
+        if crate::util::predict_class(out) == data.label(i) {
             correct += 1;
         }
     }

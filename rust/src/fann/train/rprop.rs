@@ -13,10 +13,15 @@ use crate::fann::net::Network;
 /// iRPROP− hyper-parameters (FANN defaults).
 #[derive(Debug, Clone, Copy)]
 pub struct RpropConfig {
+    /// Step growth factor on gradient-sign agreement (eta+).
     pub increase_factor: f32,
+    /// Step shrink factor on sign flip (eta-).
     pub decrease_factor: f32,
+    /// Lower clamp of the per-weight step.
     pub delta_min: f32,
+    /// Upper clamp of the per-weight step.
     pub delta_max: f32,
+    /// Initial per-weight step.
     pub delta_zero: f32,
 }
 
@@ -35,6 +40,7 @@ impl Default for RpropConfig {
 /// iRPROP− trainer state: previous gradients + per-parameter step sizes.
 #[derive(Debug)]
 pub struct Rprop {
+    /// The iRPROP- hyper-parameters in use.
     pub config: RpropConfig,
     grads: Gradients,
     prev_grads: Gradients,
@@ -42,6 +48,7 @@ pub struct Rprop {
 }
 
 impl Rprop {
+    /// Fresh trainer state shaped like `net`.
     pub fn new(net: &Network, config: RpropConfig) -> Self {
         let mut steps = Gradients::zeros_like(net);
         for g in steps.d_weights.iter_mut().chain(steps.d_biases.iter_mut()) {

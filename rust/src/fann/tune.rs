@@ -21,15 +21,20 @@ use crate::util::rng::Rng;
 /// Trainer choices the search iterates over (FANN's training algorithms).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TrainerKind {
+    /// iRPROP- (FANN_TRAIN_RPROP, the library default).
     Rprop,
+    /// Full-batch gradient descent (FANN_TRAIN_BATCH).
     Batch,
+    /// Per-sample gradient descent (FANN_TRAIN_INCREMENTAL).
     Incremental,
 }
 
 impl TrainerKind {
+    /// Every trainer the search can pick from.
     pub const ALL: [TrainerKind; 3] =
         [TrainerKind::Rprop, TrainerKind::Batch, TrainerKind::Incremental];
 
+    /// Stable lowercase name.
     pub fn name(self) -> &'static str {
         match self {
             TrainerKind::Rprop => "rprop",
@@ -45,8 +50,11 @@ pub struct SearchSpace {
     /// Candidate hidden-layer widths (single hidden layer, FANNTool's
     /// default exploration shape).
     pub hidden_widths: Vec<usize>,
+    /// Hidden activations the search tries.
     pub hidden_activations: Vec<Activation>,
+    /// Trainers the search tries.
     pub trainers: Vec<TrainerKind>,
+    /// Training epochs per trial.
     pub epochs: usize,
     /// Optional Eq. (2) memory cap in bytes (configurations whose
     /// estimate exceeds it are skipped).
@@ -68,18 +76,27 @@ impl Default for SearchSpace {
 /// One evaluated configuration.
 #[derive(Debug, Clone)]
 pub struct TrialResult {
+    /// Hidden-layer width of the trial.
     pub hidden: usize,
+    /// Hidden activation of the trial.
     pub activation: Activation,
+    /// Trainer used by the trial.
     pub trainer: TrainerKind,
+    /// Validation MSE after training.
     pub val_mse: f32,
+    /// Validation accuracy after training.
     pub val_accuracy: f32,
+    /// Eq. (2) memory estimate of the trial topology.
     pub est_memory: usize,
 }
 
 /// Search outcome: best network + the full trial table.
 pub struct TuneResult {
+    /// The winning trained network.
     pub best: Network,
+    /// Metrics of the winning trial.
     pub best_trial: TrialResult,
+    /// Every evaluated trial, in search order.
     pub trials: Vec<TrialResult>,
 }
 

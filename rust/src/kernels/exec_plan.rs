@@ -174,6 +174,7 @@ pub struct PlanScratch {
 }
 
 impl PlanScratch {
+    /// Empty scratch; the flat buffer grows on first run.
     pub fn new() -> Self {
         Self::default()
     }
@@ -202,14 +203,17 @@ impl ExecPlan {
         src.compile_exec_plan()
     }
 
+    /// Input width of the compiled network.
     pub fn num_inputs(&self) -> usize {
         self.sizes[0]
     }
 
+    /// Output width of the compiled network.
     pub fn num_outputs(&self) -> usize {
         *self.sizes.last().unwrap()
     }
 
+    /// Number of compiled dense layers.
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }
@@ -229,6 +233,7 @@ impl ExecPlan {
         self.layers.iter().map(|l| l.act).collect()
     }
 
+    /// Widest layer (sizes the ping-pong scratch halves).
     pub fn max_layer_width(&self) -> usize {
         self.sizes.iter().copied().max().unwrap()
     }

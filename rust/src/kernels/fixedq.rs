@@ -18,10 +18,12 @@ use crate::quantize::{qmul, sat_i32};
 /// because the shift amount is what defines the arithmetic.
 #[derive(Debug, Clone, Copy)]
 pub struct FixedQ {
+    /// Q-format decimal point of every operand.
     pub dec: u32,
 }
 
 impl FixedQ {
+    /// Kernel for Q(dec) arithmetic.
     pub fn new(dec: u32) -> Self {
         Self { dec }
     }

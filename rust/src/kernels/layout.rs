@@ -80,6 +80,7 @@ impl PackedWidth {
         dec
     }
 
+    /// Stable lowercase name (`q7`, `q15`).
     pub fn label(self) -> &'static str {
         match self {
             PackedWidth::Q7 => "q7",
@@ -104,11 +105,15 @@ impl PackedWidth {
 /// `panels(n_out) · words_per_row · ROWS_PER_PANEL`.
 #[derive(Debug, Clone)]
 pub struct PackedPanels {
+    /// Packed element width.
     pub width: PackedWidth,
+    /// Input width (columns per row).
     pub n_in: usize,
+    /// Output rows packed into the panels.
     pub n_out: usize,
     /// Words covering one row's `n_in` weights: `ceil(n_in / elems)`.
     pub words_per_row: usize,
+    /// The packed word stream, panel-major.
     pub words: Vec<u32>,
 }
 

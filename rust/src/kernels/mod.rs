@@ -107,13 +107,18 @@ pub fn epilogue_q(act: Activation, dec: u32, v: i32) -> i32 {
 /// per output neuron (`weights[o * n_in + i]`), the MCU streaming order.
 #[derive(Debug, Clone, Copy)]
 pub struct DenseLayerRef<'a, E> {
+    /// Input width of the layer.
     pub n_in: usize,
+    /// Output rows of the layer.
     pub n_out: usize,
+    /// Row-major `[n_out][n_in]` weights.
     pub weights: &'a [E],
+    /// One bias per output row.
     pub biases: &'a [E],
 }
 
 impl<'a, E> DenseLayerRef<'a, E> {
+    /// Borrowed view over one layer's parameters (length-checked).
     pub fn new(n_in: usize, n_out: usize, weights: &'a [E], biases: &'a [E]) -> Self {
         debug_assert_eq!(weights.len(), n_in * n_out);
         debug_assert_eq!(biases.len(), n_out);
@@ -210,6 +215,7 @@ pub struct BatchScratch<E> {
 }
 
 impl<E: Copy + Default> BatchScratch<E> {
+    /// Empty arena; buffers grow on first use.
     pub fn new() -> Self {
         Self {
             a: Vec::new(),

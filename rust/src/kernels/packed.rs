@@ -54,16 +54,22 @@ use crate::quantize::{qmul, sat_i32};
 /// word arena ([`crate::kernels::ExecPlan`]) with no per-call copy.
 #[derive(Debug, Clone, Copy)]
 pub struct PackedLayerRef<'a> {
+    /// Packed element width.
     pub width: PackedWidth,
+    /// Input width of the layer.
     pub n_in: usize,
+    /// Output rows of the layer.
     pub n_out: usize,
     /// Words covering one row's `n_in` weights: `ceil(n_in / elems)`.
     pub words_per_row: usize,
+    /// Borrowed packed word stream, panel-major.
     pub words: &'a [u32],
+    /// Borrowed wide i32 biases.
     pub biases: &'a [i32],
 }
 
 impl<'a> PackedLayerRef<'a> {
+    /// Borrowed view over one packed layer's parameters.
     pub fn new(panels: &'a PackedPanels, biases: &'a [i32]) -> Self {
         Self::from_raw(
             panels.width,
@@ -325,10 +331,12 @@ macro_rules! packed_kernel {
         }
 
         impl $kernel {
+            /// Kernel for Q(dec) arithmetic.
             pub fn new(dec: u32) -> Self {
                 Self { dec }
             }
 
+            /// Kernel display name (`packed_q7` / `packed_q15`).
             pub fn name(&self) -> &'static str {
                 $name
             }

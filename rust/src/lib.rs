@@ -46,8 +46,22 @@
 //! Python never runs on the request path: after `make artifacts`, the
 //! `fann-on-mcu` binary is self-contained.
 //!
+//! # Reproducing the paper's results
+//!
+//! The `paper reproduce` CLI command runs the three wearable case
+//! studies ([`apps::paper`]: EMG gesture, ECG arrhythmia, EEG/BMI
+//! detection) end to end — train → quantize → pack → plan → emit →
+//! emulate — across the modeled targets and writes the machine-readable
+//! `PAPER_RESULTS.json` plus a rendered `RESULTS.md`
+//! ([`bench::paper`]), including the paper's wolf-8core-vs-Cortex-M4
+//! speedup and energy-reduction headline fields.
+//!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
-//! index mapping every figure/table of the paper to a bench target.
+//! index mapping every figure/table of the paper to a bench target, and
+//! `docs/ARCHITECTURE.md` for the end-to-end trace of one sample
+//! through the stack.
+
+#![warn(missing_docs)]
 
 pub mod apps;
 pub mod bench;

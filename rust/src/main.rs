@@ -30,6 +30,13 @@
 //!                      row-split path under 1/2/8 workers must
 //!                      checksum-match the serial run for every kernel
 //!                      family.
+//! * `paper reproduce` — the paper-results reproduction suite: train the
+//!                      three wearable case studies (EMG / ECG / EEG),
+//!                      emit + emulate each across the modeled targets
+//!                      (`cortex-m4f`, `wolf-fc`, `wolf-{1,2,4,8}core`)
+//!                      and write `PAPER_RESULTS.json` + `RESULTS.md`
+//!                      with the per-app latency/memory/energy rows and
+//!                      the wolf-8core-vs-m4 headline fields.
 //! * `info`           — list applications, targets, artifact status.
 //! * `help`           — this text.
 //!
@@ -859,6 +866,69 @@ fn cmd_bench_json(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `paper reproduce` — run the three wearable case studies end to end
+/// (train → quantize → pack → plan → emit → emulate) across the modeled
+/// targets and write the machine-readable `PAPER_RESULTS.json` plus the
+/// rendered `RESULTS.md`.
+fn cmd_paper_reproduce(args: &Args) -> Result<()> {
+    use fann_on_mcu::bench::paper::{self, ReproduceOptions};
+
+    args.expect_only(&["seed", "quick", "out"])?;
+    let options = ReproduceOptions {
+        seed: args.get_u64("seed", 7)?,
+        quick: args.get_flag("quick")?,
+    };
+    let out_dir = Path::new(args.get_or("out", "."));
+    println!(
+        "paper reproduce: 3 apps x 6 targets, seed {}, {} mode",
+        options.seed,
+        if options.quick { "quick" } else { "full" }
+    );
+
+    let results = paper::reproduce(options)?;
+    for a in &results.apps {
+        let p = &a.pipeline;
+        println!(
+            "\n{} ({:?}, {}): float {:.1}% / quantized {:.1}% test accuracy{}",
+            p.spec.title,
+            p.spec.sizes,
+            p.repr.label(),
+            p.test_accuracy * 100.0,
+            p.quantized_test_accuracy * 100.0,
+            if p.meets_floor { "" } else { "  [below floor]" },
+        );
+        let mut t = Table::new(vec![
+            "target", "placement", "latency", "energy/class", "power", "mem est/budget",
+        ]);
+        for r in &a.rows {
+            t.row(vec![
+                r.target.slug(),
+                r.region.name().to_string(),
+                fmt_time(r.seconds),
+                fmt_energy(r.energy_uj * 1e-6),
+                format!("{:.1} mW", r.active_mw),
+                format!("{}/{} B", r.est_memory_bytes, r.budget_bytes),
+            ]);
+        }
+        t.print();
+        println!(
+            "  wolf-8core vs cortex-m4f: {:.1}x speedup, {:.0}% energy reduction",
+            a.speedup_wolf8_vs_m4,
+            a.energy_reduction_wolf8_vs_m4 * 100.0
+        );
+    }
+
+    println!(
+        "\nheadline (geomean over apps): speedup_wolf8_vs_m4 {:.2}x, \
+         energy_reduction_wolf8_vs_m4 {:.0}%",
+        results.speedup_wolf8_vs_m4,
+        results.energy_reduction_wolf8_vs_m4 * 100.0
+    );
+    let (json_path, md_path) = paper::write_results(&results, out_dir)?;
+    println!("wrote {} and {}", json_path.display(), md_path.display());
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     args.expect_only(&["artifacts"])?;
     println!("applications:");
@@ -902,6 +972,11 @@ COMMANDS:
                  per-target emulated cycle counts to BENCH_kernels.json
   bench smoke    [--samples N] [--seed N]   assert the row-split path is
                  checksum-identical to serial under 1/2/8 workers
+  paper reproduce [--seed N] [--quick] [--out DIR]
+                 train the EMG/ECG/EEG wearable case studies, emit +
+                 emulate each on cortex-m4f, wolf-fc and wolf-{1,2,4,8}core,
+                 write PAPER_RESULTS.json + RESULTS.md (latency, memory
+                 vs budget, energy, speedup_wolf8_vs_m4 headline)
   info           show applications, targets, artifact status
   help           this text
 
@@ -914,8 +989,10 @@ fn main() -> Result<()> {
     // `bench` and `deploy` take one optional positional mode word
     // (`bench json`, `deploy emit`, `deploy emulate`) ahead of their
     // flags; everything else is pure `command --flag value` form.
-    let sub_mode = if matches!(argv.first().map(String::as_str), Some("bench") | Some("deploy"))
-        && argv.get(1).is_some_and(|a| !a.starts_with("--"))
+    let sub_mode = if matches!(
+        argv.first().map(String::as_str),
+        Some("bench") | Some("deploy") | Some("paper")
+    ) && argv.get(1).is_some_and(|a| !a.starts_with("--"))
     {
         Some(argv.remove(1))
     } else {
@@ -934,6 +1011,10 @@ fn main() -> Result<()> {
         "run" => cmd_run(&args),
         "throughput" => cmd_throughput(&args),
         "bench" => cmd_bench(sub_mode.as_deref().unwrap_or("json"), &args),
+        "paper" => match sub_mode.as_deref().unwrap_or("reproduce") {
+            "reproduce" => cmd_paper_reproduce(&args),
+            other => bail!("unknown paper mode {other:?} (known: reproduce)"),
+        },
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");

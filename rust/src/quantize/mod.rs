@@ -23,7 +23,9 @@
 
 use crate::fann::activation::Activation;
 
+/// `i32::MIN` widened for saturation arithmetic.
 pub const I32_MIN: i64 = i32::MIN as i64;
+/// `i32::MAX` widened for saturation arithmetic.
 pub const I32_MAX: i64 = i32::MAX as i64;
 
 /// Saturate an `i64` accumulator to the `i32` range.

@@ -6,23 +6,35 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 /// Parsed `<name>_manifest.txt` — the arg-shape contract between the
-//  L2 lowering and the Rust runtime.
+/// L2 lowering and the Rust runtime.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Topology name (`xor`, `gesture`, ...).
     pub name: String,
+    /// Input feature count.
     pub inputs: usize,
+    /// Output unit count.
     pub outputs: usize,
+    /// Hidden layer widths.
     pub hidden: Vec<usize>,
+    /// Hidden activation name.
     pub hidden_activation: String,
+    /// Output activation name.
     pub output_activation: String,
+    /// SGD learning rate baked into the train step.
     pub learning_rate: f32,
+    /// Batch sizes the forward pass was lowered at.
     pub fwd_batches: Vec<usize>,
+    /// Batch size the train step was lowered at.
     pub train_batch: usize,
+    /// Multiply-accumulates per inference.
     pub macs: usize,
+    /// Total trainable parameters.
     pub num_params: usize,
 }
 
 impl Manifest {
+    /// Layer sizes `[in, hidden..., out]`.
     pub fn layer_sizes(&self) -> Vec<usize> {
         let mut v = vec![self.inputs];
         v.extend(&self.hidden);
@@ -30,6 +42,7 @@ impl Manifest {
         v
     }
 
+    /// Parse the `key value` manifest text format.
     pub fn parse(text: &str) -> Result<Self> {
         let mut m = Manifest {
             name: String::new(),
@@ -84,6 +97,7 @@ impl Manifest {
 /// Handle to an artifact directory.
 #[derive(Debug, Clone)]
 pub struct ArtifactDir {
+    /// Directory holding the `*.hlo.txt` / manifest files.
     pub root: PathBuf,
 }
 
@@ -110,6 +124,7 @@ impl ArtifactDir {
         Ok(Self { root })
     }
 
+    /// Load and parse the manifest of topology `name`.
     pub fn manifest(&self, name: &str) -> Result<Manifest> {
         let path = self.root.join(format!("{name}_manifest.txt"));
         let text = std::fs::read_to_string(&path)
@@ -117,14 +132,17 @@ impl ArtifactDir {
         Manifest::parse(&text)
     }
 
+    /// Path of the forward-pass HLO lowered at `batch`.
     pub fn forward_hlo(&self, name: &str, batch: usize) -> PathBuf {
         self.root.join(format!("{name}_fwd_b{batch}.hlo.txt"))
     }
 
+    /// Path of the train-step HLO lowered at `batch`.
     pub fn train_hlo(&self, name: &str, batch: usize) -> PathBuf {
         self.root.join(format!("{name}_train_b{batch}.hlo.txt"))
     }
 
+    /// Path of a golden parity TSV (`weights`, `forward`, ...).
     pub fn parity_file(&self, which: &str) -> PathBuf {
         self.root.join(format!("parity_{which}.tsv"))
     }

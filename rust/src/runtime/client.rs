@@ -12,6 +12,7 @@ use anyhow::{Context, Result};
 /// A compiled HLO program ready to execute on the CPU PJRT client.
 pub struct CompiledModel {
     exe: xla::PjRtLoadedExecutable,
+    /// Name the model was compiled under (for diagnostics).
     pub name: String,
 }
 
@@ -27,6 +28,7 @@ impl Runtime {
         Ok(Self { client })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -2,8 +2,8 @@
 //!
 //! [`artifacts`] locates and describes `artifacts/*.hlo.txt` and is
 //! always compiled (it is plain file parsing, used by the parity tests
-//! and the CLI's `info` command). The executing half — [`client`]
-//! wrapping the `xla` crate (PJRT CPU) and [`trainer`] driving the AOT
+//! and the CLI's `info` command). The executing half — `client`
+//! wrapping the `xla` crate (PJRT CPU) and `trainer` driving the AOT
 //! training step — is gated behind the off-by-default `pjrt` feature so
 //! the tier-1 build needs neither an XLA install nor network access.
 //! The offline build wires `--features pjrt` to a stub `xla` crate that

@@ -13,6 +13,7 @@ use crate::util::rng::Rng;
 /// `[w0, b0, w1, b1, ..., x(, y)]`; `w_l` is `(n_in, n_out)` row-major
 /// over `n_in` (JAX layout).
 pub struct PjrtTrainer {
+    /// The artifact manifest this trainer was built from.
     pub manifest: Manifest,
     train_step: CompiledModel,
     fwd1: CompiledModel,

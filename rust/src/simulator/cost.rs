@@ -32,14 +32,19 @@ pub const STREAM_CONTENTION_PER_CORE: f64 = 0.008;
 /// (redundant bias-buffer initialization, Sec. V-B / Fig. 7), float and
 /// fixed variants. Eliminated by FANN-on-MCU.
 pub const LEGACY_INIT_FLOAT: f64 = 14.0;
+/// Fixed-point variant of [`LEGACY_INIT_FLOAT`].
 pub const LEGACY_INIT_FIXED: f64 = 31.0;
 
 /// Cycle breakdown of a simulated inference.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CycleBreakdown {
+    /// Inner-loop MAC cycles.
     pub compute: f64,
+    /// Visible (un-hidden) DMA cycles.
     pub dma: f64,
+    /// Cluster fork/barrier synchronization cycles.
     pub barrier: f64,
+    /// Per-layer and per-neuron bookkeeping cycles.
     pub overhead: f64,
     /// Cycles spent in activation functions (Fig. 7 separates weight
     /// matrix vs activation time).
@@ -47,6 +52,7 @@ pub struct CycleBreakdown {
 }
 
 impl CycleBreakdown {
+    /// Sum of every cycle category.
     pub fn total(&self) -> f64 {
         self.compute + self.dma + self.barrier + self.overhead + self.activation
     }

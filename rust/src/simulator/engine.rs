@@ -23,7 +23,9 @@ use crate::targets::{power, DataType, Target};
 /// threads one through a whole workload.
 #[derive(Debug, Default)]
 pub struct ExecScratch {
+    /// Float ping-pong arena.
     pub f: BatchScratch<f32>,
+    /// Q-format ping-pong arena.
     pub q: BatchScratch<i32>,
     plan: PlanScratch,
     qin: Vec<i32>,
@@ -31,6 +33,7 @@ pub struct ExecScratch {
 }
 
 impl ExecScratch {
+    /// Empty scratch; every buffer grows on first use.
     pub fn new() -> Self {
         Self::default()
     }
@@ -41,12 +44,16 @@ impl ExecScratch {
 /// the network it was compiled from, zero per-layer dispatch.
 #[derive(Debug)]
 pub enum Executable<'a> {
+    /// The float reference network.
     Float(&'a Network),
+    /// The wide Q(dec) network.
     Fixed(&'a FixedNetwork),
+    /// An ahead-of-time compiled execution plan.
     Compiled(&'a ExecPlan),
 }
 
 impl<'a> Executable<'a> {
+    /// Input width of the executable network.
     pub fn num_inputs(&self) -> usize {
         match self {
             Executable::Float(n) => n.num_inputs(),
@@ -55,6 +62,7 @@ impl<'a> Executable<'a> {
         }
     }
 
+    /// Output width of the executable network.
     pub fn num_outputs(&self) -> usize {
         match self {
             Executable::Float(n) => n.num_outputs(),
@@ -132,6 +140,7 @@ impl<'a> Executable<'a> {
         }
     }
 
+    /// Per-layer activations, in order.
     pub fn activations(&self) -> Vec<Activation> {
         match self {
             Executable::Float(n) => n.layers.iter().map(|l| l.activation).collect(),
@@ -140,6 +149,7 @@ impl<'a> Executable<'a> {
         }
     }
 
+    /// Layer sizes `[in, h1, ..., out]`.
     pub fn layer_sizes(&self) -> Vec<usize> {
         match self {
             Executable::Float(n) => n.layer_sizes(),
@@ -214,12 +224,19 @@ fn validate(plan: &DeploymentPlan, exe: &Executable) -> Result<()> {
 /// the same cycles/time/energy for the same plan.
 #[derive(Debug, Clone)]
 pub struct TargetCost {
+    /// Cycle breakdown of the compute phase.
     pub breakdown: CycleBreakdown,
+    /// Compute-phase wall time at the target clock.
     pub seconds: f64,
+    /// Average power during compute (utilization-aware).
     pub active_mw: f64,
+    /// Compute-phase energy in microjoules.
     pub energy_uj: f64,
+    /// Cluster core-busy fraction (1.0 on single-core targets).
     pub utilization: f64,
+    /// One-classification time incl. the one-time cluster bring-up.
     pub e2e_seconds: f64,
+    /// One-classification energy incl. the bring-up phase.
     pub e2e_energy_uj: f64,
 }
 
@@ -304,6 +321,7 @@ pub struct BatchSimReport {
     /// All `n_samples × n_out` outputs, packed row-major — bit-identical
     /// to running each sample through [`simulate`] alone.
     pub outputs: Vec<f32>,
+    /// Samples in the batch.
     pub n_samples: usize,
     /// The single-classification report the batch totals scale from
     /// (its `outputs` are the first sample's).

@@ -11,14 +11,18 @@ use crate::targets::{power, Target};
 /// One constant-power phase.
 #[derive(Debug, Clone)]
 pub struct Phase {
+    /// Phase label (`activation`, `compute`, ...).
     pub name: &'static str,
+    /// Phase duration.
     pub seconds: f64,
+    /// Average power during the phase.
     pub milliwatts: f64,
 }
 
 /// A full classification trace.
 #[derive(Debug, Clone)]
 pub struct PowerTrace {
+    /// Phases in chronological order.
     pub phases: Vec<Phase>,
 }
 
@@ -65,6 +69,7 @@ impl PowerTrace {
         Self { phases }
     }
 
+    /// Total duration across all phases.
     pub fn total_seconds(&self) -> f64 {
         self.phases.iter().map(|p| p.seconds).sum()
     }

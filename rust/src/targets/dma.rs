@@ -25,6 +25,7 @@ pub struct DmaModel {
     pub bytes_per_cycle: f64,
 }
 
+/// The Mr. Wolf cluster DMA timing fit.
 pub const WOLF_DMA: DmaModel = DmaModel {
     setup_cycles: 30.0,
     bytes_per_cycle: 8.0,

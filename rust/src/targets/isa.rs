@@ -21,6 +21,7 @@ use crate::fann::activation::Activation;
 /// Numeric type of a deployed network.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DataType {
+    /// IEEE f32.
     Float32,
     /// Q(dec) fixed point in i32.
     Fixed,
@@ -112,6 +113,7 @@ impl Core {
         }
     }
 
+    /// Display name of the extension rung.
     pub fn name(self) -> &'static str {
         match self {
             Core::CortexM0 => "Cortex-M0",
@@ -128,28 +130,34 @@ impl Core {
 /// 2 (16-bit) or 4 (8-bit) MACs per instruction via `pv.sdotsp`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct IsaExtensions {
+    /// Zero-overhead hardware loops (`lp.setup`).
     pub hardware_loop: bool,
+    /// Post-incrementing loads/stores.
     pub post_increment: bool,
     /// SIMD lanes packed per MAC instruction: 1 (off), 2 (16-bit), 4 (8-bit).
     pub simd_lanes: u8,
 }
 
 impl IsaExtensions {
+    /// Plain RV32IMC (the Fig. 3 baseline).
     pub const BASELINE_RV32IMC: Self = Self {
         hardware_loop: false,
         post_increment: false,
         simd_lanes: 1,
     };
+    /// XPULP loops + post-increment, SIMD off.
     pub const XPULP_NO_SIMD: Self = Self {
         hardware_loop: true,
         post_increment: true,
         simd_lanes: 1,
     };
+    /// XPULP with 2-lane (16-bit) SIMD dot products.
     pub const XPULP_SIMD2: Self = Self {
         hardware_loop: true,
         post_increment: true,
         simd_lanes: 2,
     };
+    /// XPULP with 4-lane (8-bit) SIMD dot products.
     pub const XPULP_SIMD4: Self = Self {
         hardware_loop: true,
         post_increment: true,

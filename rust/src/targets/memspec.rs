@@ -22,6 +22,7 @@ pub enum Region {
 }
 
 impl Region {
+    /// Display name.
     pub fn name(self) -> &'static str {
         match self {
             Region::Ram => "RAM",
@@ -61,6 +62,7 @@ pub enum Chip {
 }
 
 impl Chip {
+    /// Memory geometry of the chip.
     pub fn memory(self) -> ChipMemory {
         match self {
             Chip::Stm32l475vg => ChipMemory {
@@ -90,6 +92,7 @@ impl Chip {
         }
     }
 
+    /// Display name.
     pub fn name(self) -> &'static str {
         match self {
             Chip::Stm32l475vg => "STM32L475VG",
@@ -103,8 +106,11 @@ impl Chip {
 /// shared + 64 kB FC-private; 64 kB cluster L1 (16 × 4 kB banks).
 #[derive(Debug, Clone, Copy)]
 pub struct WolfMemory {
+    /// FC-private L2 bytes.
     pub private_l2: usize,
+    /// Shared L2 bytes (4 banks).
     pub shared_l2: usize,
+    /// Cluster L1 TCDM bytes (16 banks).
     pub l1: usize,
     /// Extra cycles per word for FC accesses to *shared* L2 (bank
     /// arbitration) relative to private L2.
@@ -114,6 +120,7 @@ pub struct WolfMemory {
     pub cluster_l2_penalty_per_word: f64,
 }
 
+/// The Mr. Wolf memory geometry (Sec. III-B).
 pub const WOLF_MEMORY: WolfMemory = WolfMemory {
     private_l2: 64 * 1024,
     shared_l2: 448 * 1024,

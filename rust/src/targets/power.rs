@@ -20,7 +20,9 @@
 /// Power states of a single-core MCU (Cortex-M or FC).
 #[derive(Debug, Clone, Copy)]
 pub struct McuPower {
+    /// Average power while computing.
     pub active_mw: f64,
+    /// Deep-sleep power (retention on).
     pub sleep_mw: f64,
 }
 
@@ -59,6 +61,7 @@ pub struct ClusterPower {
     pub overhead_phase_mw: f64,
 }
 
+/// Mr. Wolf cluster power fit (Table II operating points).
 pub const WOLF_CLUSTER: ClusterPower = ClusterPower {
     base_mw: 14.4,
     per_core_mw: 5.9,

@@ -9,13 +9,19 @@ use std::fmt::Write as _;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
     /// Integers stay exact (no float round-trip).
     Int(i64),
+    /// Floating-point number (non-finite renders as `null`).
     Num(f64),
+    /// String value.
     Str(String),
+    /// Array of values.
     Arr(Vec<Json>),
+    /// Object as insertion-ordered `(key, value)` pairs.
     Obj(Vec<(String, Json)>),
 }
 
@@ -124,11 +130,13 @@ fn write_escaped(s: &mut String, v: &str) {
 pub struct ObjBuilder(Vec<(String, Json)>);
 
 impl ObjBuilder {
+    /// Append one key/value pair (chainable).
     pub fn field(mut self, key: &str, value: impl Into<Json>) -> Self {
         self.0.push((key.to_string(), value.into()));
         self
     }
 
+    /// Finish the object.
     pub fn build(self) -> Json {
         Json::Obj(self.0)
     }

@@ -25,6 +25,18 @@ pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
         .fold(0.0f32, f32::max)
 }
 
+/// The one classification rule of the toolkit: argmax for multi-output
+/// networks, 0.5 threshold for single-sigmoid-output binary detectors.
+/// Shared by the float/quantized accuracy metrics and the
+/// paper-reproduction parity checks so the rule cannot diverge.
+pub fn predict_class(outputs: &[f32]) -> usize {
+    if outputs.len() == 1 {
+        usize::from(outputs[0] >= 0.5)
+    } else {
+        argmax(outputs)
+    }
+}
+
 /// Index of the maximum element (classification argmax).
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;

@@ -9,6 +9,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
         Self {
             header: header.into_iter().map(Into::into).collect(),
@@ -16,6 +17,7 @@ impl Table {
         }
     }
 
+    /// Append one row (chainable).
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(
@@ -29,6 +31,7 @@ impl Table {
         self
     }
 
+    /// Render with aligned columns.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
@@ -59,6 +62,7 @@ impl Table {
         out
     }
 
+    /// Render to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

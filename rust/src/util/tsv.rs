@@ -18,27 +18,34 @@ use anyhow::{bail, Context, Result};
 /// One named tensor: shape (1-D or 2-D) + flat values.
 #[derive(Debug, Clone)]
 pub struct Tensor {
+    /// Tensor shape (1-D or 2-D).
     pub shape: Vec<usize>,
+    /// Flat values, row-major.
     pub values: Vec<f64>,
 }
 
 impl Tensor {
+    /// Element count (product of the shape).
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Values narrowed to f32.
     pub fn as_f32(&self) -> Vec<f32> {
         self.values.iter().map(|&v| v as f32).collect()
     }
 
+    /// Values truncated to i32.
     pub fn as_i32(&self) -> Vec<i32> {
         self.values.iter().map(|&v| v as i32).collect()
     }
 
+    /// Values truncated to i64.
     pub fn as_i64(&self) -> Vec<i64> {
         self.values.iter().map(|&v| v as i64).collect()
     }
@@ -47,14 +54,20 @@ impl Tensor {
 /// One parity case: a topology's tensors keyed by tag.
 #[derive(Debug, Clone, Default)]
 pub struct ParityCase {
+    /// Topology name of the case.
     pub name: String,
+    /// Decimal point for fixed-point cases.
     pub dec: Option<u32>,
+    /// Hidden activation name.
     pub hidden_act: String,
+    /// Output activation name.
     pub output_act: String,
+    /// Named tensors, in file order.
     pub tensors: Vec<(String, Tensor)>,
 }
 
 impl ParityCase {
+    /// The tensor tagged `tag`, if present.
     pub fn tensor(&self, tag: &str) -> Option<&Tensor> {
         self.tensors
             .iter()

@@ -1,0 +1,202 @@
+//! Paper-reproduction suite tests: dataset generator contracts, the
+//! per-app quick pipeline (trained → quantized → emitted → emulated
+//! agrees with the host paths), and the `paper reproduce` driver's
+//! `PAPER_RESULTS.json` / `RESULTS.md` outputs with their headline
+//! fields — the integration gate behind the ISSUE's acceptance
+//! criterion (CI additionally runs the CLI form `paper reproduce
+//! --quick` and asserts the same fields from the shell).
+
+use fann_on_mcu::apps::paper::{train_paper_app, PAPER_APPS, PAPER_MAX_ABS_INPUT};
+use fann_on_mcu::bench::paper::{paper_targets, reproduce, write_results, ReproduceOptions};
+use fann_on_mcu::codegen;
+use fann_on_mcu::datasets::wearable;
+use fann_on_mcu::emulator;
+use fann_on_mcu::targets::Target;
+use fann_on_mcu::util::predict_class;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("fann_paper_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn wearable_generators_are_deterministic_and_balanced() {
+    // Determinism under a fixed seed, across the full generator set.
+    for gen in [wearable::emg, wearable::ecg, wearable::eeg] {
+        let a = gen(123);
+        let b = gen(123);
+        assert_eq!(a.inputs, b.inputs);
+        assert_eq!(a.targets, b.targets);
+        assert_ne!(a.inputs, gen(124).inputs);
+    }
+    // Class balance sanity: every class holds exactly its share.
+    let d = wearable::emg(9);
+    let per_class = d.len() / wearable::EMG_CLASSES;
+    for c in 0..wearable::EMG_CLASSES {
+        assert_eq!((0..d.len()).filter(|&i| d.label(i) == c).count(), per_class);
+    }
+    let d = wearable::ecg(9);
+    for c in 0..wearable::ECG_CLASSES {
+        assert_eq!(
+            (0..d.len()).filter(|&i| d.label(i) == c).count(),
+            d.len() / wearable::ECG_CLASSES
+        );
+    }
+    let d = wearable::eeg(9);
+    assert_eq!(
+        (0..d.len()).filter(|&i| d.label(i) == 1).count() * 2,
+        d.len()
+    );
+}
+
+#[test]
+fn sized_variants_scale_without_changing_shape() {
+    let small = wearable::emg_sized(5, 10);
+    assert_eq!(small.len(), 10 * wearable::EMG_CLASSES);
+    assert_eq!(small.num_inputs, wearable::EMG_CHANNELS * wearable::EMG_WINDOW);
+    let small = wearable::ecg_sized(5, 12);
+    assert_eq!(small.len(), 12 * wearable::ECG_CLASSES);
+    let small = wearable::eeg_sized(5, 14);
+    assert_eq!((small.len(), small.num_outputs), (28, 1));
+}
+
+/// Small-epoch smoke run per app: the trained → quantized → emitted →
+/// emulated chain must (a) be bit-exact between the emulated artifact
+/// and the host quantized network, and (b) classify in agreement with
+/// the host float path on a strong majority of held-out samples.
+#[test]
+fn quick_pipeline_emulated_predictions_agree_with_host() {
+    for spec in PAPER_APPS {
+        let pipe = train_paper_app(spec, 7, true).unwrap();
+        let bundle = codegen::emit_float(
+            &pipe.net,
+            Target::WolfCluster { cores: 8 },
+            pipe.repr,
+            PAPER_MAX_ABS_INPUT,
+        )
+        .unwrap();
+
+        let n = 12.min(pipe.test.len());
+        let mut agree_float = 0usize;
+        for i in 0..n {
+            let x = pipe.test.input(i);
+            let report = emulator::emulate(&bundle.artifact, x).unwrap();
+            // Bit-exact vs the host quantized path (same invariant
+            // `deploy emulate` enforces).
+            assert_eq!(
+                report.outputs,
+                pipe.fixed.run(x),
+                "{}: emulated vs host quantized, sample {i}",
+                spec.name
+            );
+            if predict_class(&report.outputs) == predict_class(&pipe.net.run(x)) {
+                agree_float += 1;
+            }
+        }
+        assert!(
+            agree_float * 10 >= n * 8,
+            "{}: emulated agreed with the float path on only {agree_float}/{n} samples",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn reproduce_quick_produces_sane_headline_and_files() {
+    let results = reproduce(ReproduceOptions { seed: 7, quick: true }).unwrap();
+
+    // Shape: every app swept over every target, in registry order.
+    assert_eq!(results.apps.len(), PAPER_APPS.len());
+    for (a, spec) in results.apps.iter().zip(PAPER_APPS) {
+        assert_eq!(a.pipeline.spec.name, spec.name);
+        assert_eq!(a.rows.len(), paper_targets().len());
+        for r in &a.rows {
+            assert!(r.cycles > 0.0, "{}: no cycles on {}", spec.name, r.target.slug());
+            assert!(r.energy_uj > 0.0);
+            assert!(r.param_bytes > 0 && r.budget_bytes > 0);
+            assert!(
+                r.est_memory_bytes <= r.budget_bytes,
+                "{} does not fit {} yet region={}",
+                spec.name,
+                r.target.slug(),
+                r.region.name()
+            );
+        }
+        // Per-app headline fields are finite and the cluster scaling
+        // curve is monotone-ish: 8 cores beat 1 core.
+        assert!(a.speedup_wolf8_vs_m4.is_finite());
+        let s8 = a
+            .cluster_scaling
+            .iter()
+            .find(|&&(c, _, _)| c == 8)
+            .map(|&(_, s, _)| s)
+            .unwrap();
+        assert!(s8 > 1.0, "{}: 8-core cluster speedup {s8} <= 1", spec.name);
+    }
+
+    // The ISSUE's acceptance gate: headline fields present and sane.
+    assert!(
+        results.speedup_wolf8_vs_m4 > 1.0,
+        "speedup_wolf8_vs_m4 {}",
+        results.speedup_wolf8_vs_m4
+    );
+    assert!(
+        results.energy_reduction_wolf8_vs_m4 > 0.0
+            && results.energy_reduction_wolf8_vs_m4 < 1.0,
+        "energy_reduction_wolf8_vs_m4 {}",
+        results.energy_reduction_wolf8_vs_m4
+    );
+
+    // Written artifacts contain the machine-readable fields.
+    let dir = tmpdir("results");
+    let (json_path, md_path) = write_results(&results, &dir).unwrap();
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    for needle in [
+        "\"schema\": \"fann-on-mcu/paper-results/v1\"",
+        "\"speedup_wolf8_vs_m4\"",
+        "\"energy_reduction_wolf8_vs_m4\"",
+        "\"latency_cycles\"",
+        "\"memory_budget_bytes\"",
+        "\"energy_uj_per_classification\"",
+        "\"cluster_scaling\"",
+        "\"name\": \"emg\"",
+        "\"name\": \"ecg\"",
+        "\"name\": \"eeg\"",
+        "\"target\": \"cortex-m4f\"",
+        "\"target\": \"wolf-8core\"",
+    ] {
+        assert!(json.contains(needle), "PAPER_RESULTS.json missing {needle}");
+    }
+    let md = std::fs::read_to_string(&md_path).unwrap();
+    assert!(md.contains("# Paper-reproduction results"));
+    assert!(md.contains("wolf-8core"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The EMG flagship app must exercise the DMA-streaming cluster path
+/// (its Eq. 2 footprint exceeds the L1 budget), so the reproduction
+/// covers both cluster placements: L1-resident (ECG/EEG) and
+/// L2-resident with DMA (EMG).
+#[test]
+fn emg_streams_from_l2_while_small_apps_sit_in_l1() {
+    let pipe_emg = train_paper_app(PAPER_APPS[0], 3, true).unwrap();
+    let b = codegen::emit_float(
+        &pipe_emg.net,
+        Target::WolfCluster { cores: 8 },
+        pipe_emg.repr,
+        PAPER_MAX_ABS_INPUT,
+    )
+    .unwrap();
+    assert!(b.artifact.plan.dma.is_some(), "EMG should DMA-stream");
+
+    let pipe_eeg = train_paper_app(PAPER_APPS[2], 3, true).unwrap();
+    let b = codegen::emit_float(
+        &pipe_eeg.net,
+        Target::WolfCluster { cores: 8 },
+        pipe_eeg.repr,
+        PAPER_MAX_ABS_INPUT,
+    )
+    .unwrap();
+    assert!(b.artifact.plan.dma.is_none(), "EEG should be L1-resident");
+}
