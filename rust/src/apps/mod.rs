@@ -193,7 +193,10 @@ pub fn classify_stream(
 /// [`classify_stream`] with a caller-owned [`simulator::ExecScratch`]:
 /// a long-running classification service calls this per window batch
 /// with one persistent arena, so the steady state allocates only the
-/// per-batch report buffers.
+/// per-batch report buffers. (For hosting many models behind
+/// request-level adaptive micro-batching — rather than pre-batched
+/// windows of one app — see [`crate::service::InferenceService`] and
+/// the `service load` harness.)
 pub fn classify_stream_with(
     app: &TrainedApp,
     target: Target,

@@ -430,7 +430,10 @@ fn rowsplit_q_core(
 }
 
 /// Run a compiled f32 [`ExecPlan`] with every layer's output rows split
-/// across `threads` workers (0 = all cores). Bit-identical to the
+/// across `threads` workers (0 = all cores; clamped to the global
+/// pool's worker count via [`effective_workers`], so a huge request
+/// degrades to full fan-out instead of slicing layers into more
+/// fragments than there are threads to run them). Bit-identical to the
 /// serial plan run and therefore to the dispatch path.
 ///
 /// Must be called from OUTSIDE the global pool: the per-layer barrier
@@ -466,12 +469,13 @@ pub fn run_plan_rowsplit_into(
     if n_samples == 0 {
         return;
     }
-    rowsplit_f32_core(plan, inputs, n_samples, resolve_threads(threads), out);
+    rowsplit_f32_core(plan, inputs, n_samples, effective_workers(threads), out);
 }
 
 /// Q-format counterpart of [`run_plan_rowsplit`] for Q32 and packed
 /// plans. Bit-exact vs [`ExecPlan::run_batch_q`] for any core count.
-/// Same no-nesting rule as [`run_plan_rowsplit`].
+/// Same no-nesting rule and [`effective_workers`] clamp as
+/// [`run_plan_rowsplit`].
 pub fn run_plan_q_rowsplit(
     plan: &ExecPlan,
     inputs_q: &[i32],
@@ -497,7 +501,7 @@ pub fn run_plan_q_rowsplit_into(
     if n_samples == 0 {
         return;
     }
-    rowsplit_q_core(plan, inputs_q, n_samples, resolve_threads(threads), out);
+    rowsplit_q_core(plan, inputs_q, n_samples, effective_workers(threads), out);
 }
 
 /// Order-sensitive digest of a float output buffer (bit patterns, so
@@ -1158,6 +1162,31 @@ mod tests {
         // Empty batches are no-ops.
         assert!(run_plan_rowsplit(&plan_f, &[], 0, 4).is_empty());
         assert!(run_plan_q_rowsplit(&plan_q, &[], 0, 4).is_empty());
+    }
+
+    #[test]
+    fn rowsplit_clamps_oversized_worker_requests_to_the_pool() {
+        // Requesting far more workers than the pool has must behave
+        // exactly like full fan-out, not slice every layer into
+        // thousands of sub-row fragments (the pre-clamp bug: the
+        // drivers fed the raw request into the row splitter).
+        assert_eq!(effective_workers(10_000), global_pool().workers());
+        let fnet = net(&[6, 11, 4], 42);
+        let plan_f = ExecPlan::compile(&fnet);
+        let fixed = FixedNetwork::from_float(&fnet, 1.0).unwrap();
+        let plan_q = ExecPlan::compile(&fixed);
+        let mut rng = Rng::new(9);
+        let n = 7;
+        let xs: Vec<f32> = (0..n * 6).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let xq = fixed.quantize_input(&xs);
+        assert_eq!(
+            run_plan_rowsplit(&plan_f, &xs, n, 10_000),
+            plan_f.run_batch_f32(&xs, n)
+        );
+        assert_eq!(
+            run_plan_q_rowsplit(&plan_q, &xq, n, 10_000),
+            plan_q.run_batch_q(&xq, n)
+        );
     }
 
     #[test]

@@ -19,8 +19,9 @@
 //!   generated deployments bit-exactly in CI without a cross-compiler),
 //!   the PJRT runtime that loads the AOT artifacts ([`runtime`],
 //!   `--features pjrt`), dataset generators ([`datasets`]), the paper's
-//!   application showcases ([`apps`]), and the benchmark harness
-//!   ([`bench`]).
+//!   application showcases ([`apps`]), the benchmark harness
+//!   ([`bench`]), and the multi-tenant inference host with adaptive
+//!   micro-batching ([`service`], `service load`).
 //!
 //! # Kernel dispatch
 //!
@@ -74,6 +75,7 @@ pub mod fann;
 pub mod kernels;
 pub mod quantize;
 pub mod runtime;
+pub mod service;
 pub mod simulator;
 pub mod targets;
 pub mod util;

@@ -37,6 +37,14 @@
 //!                      and write `PAPER_RESULTS.json` + `RESULTS.md`
 //!                      with the per-app latency/memory/energy rows and
 //!                      the wolf-8core-vs-m4 headline fields.
+//! * `service load`   — the multi-tenant inference-service load harness:
+//!                      replay seeded simulated wearable clients through
+//!                      the adaptive micro-batching host (the
+//!                      `fann_on_mcu::service` module), assert every
+//!                      coalesced output bit-exact vs serial
+//!                      per-request execution, and write
+//!                      `BENCH_service.json` (samples/s, p50/p99 latency,
+//!                      mean batch size) for the CI ratchet.
 //! * `info`           — list applications, targets, artifact status.
 //! * `help`           — this text.
 //!
@@ -929,6 +937,106 @@ fn cmd_paper_reproduce(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `service <mode>` — the multi-tenant inference host. The only mode so
+/// far is `load`: the synthetic client-replay harness.
+fn cmd_service(mode: &str, args: &Args) -> Result<()> {
+    match mode {
+        "load" => cmd_service_load(args),
+        other => bail!("unknown service mode {other:?} (known: load)"),
+    }
+}
+
+/// `service load` — replay seeded simulated wearable clients through
+/// the adaptive micro-batching `fann_on_mcu::service` host (three
+/// registered models: packed-q7 EMG, q32 ECG, f32 EEG), assert every
+/// coalesced reply bit-exact against serial per-request execution, and
+/// write `BENCH_service.json`.
+fn cmd_service_load(args: &Args) -> Result<()> {
+    use fann_on_mcu::service::load::{self, LoadOptions};
+    use std::time::Duration;
+
+    args.expect_only(&[
+        "quick",
+        "clients",
+        "requests",
+        "seed",
+        "max-batch",
+        "max-delay-us",
+        "capacity",
+        "submitters",
+        "workers",
+        "out",
+    ])?;
+    let mut opts = if args.get_flag("quick")? {
+        LoadOptions::quick()
+    } else {
+        LoadOptions::default()
+    };
+    opts.clients = args.get_usize("clients", opts.clients)?.max(1);
+    opts.requests_per_client = args.get_usize("requests", opts.requests_per_client)?.max(1);
+    opts.seed = args.get_u64("seed", opts.seed)?;
+    opts.submitters = args.get_usize("submitters", opts.submitters)?.max(1);
+    opts.policy.max_batch = args.get_usize("max-batch", opts.policy.max_batch)?;
+    opts.policy.max_delay =
+        Duration::from_micros(args.get_u64("max-delay-us", opts.policy.max_delay.as_micros() as u64)?);
+    opts.policy.queue_capacity = args.get_usize("capacity", opts.policy.queue_capacity)?;
+    opts.policy.exec_workers = args.get_usize("workers", opts.policy.exec_workers)?;
+    let out_path = args.get_or("out", "BENCH_service.json");
+
+    println!(
+        "service load: {} clients x {} requests = {} total, max_batch {}, max_delay {:?}, \
+         capacity {}, {} submitter(s), {} exec worker(s)",
+        opts.clients,
+        opts.requests_per_client,
+        opts.total_requests(),
+        opts.policy.max_batch,
+        opts.policy.max_delay,
+        opts.policy.queue_capacity,
+        opts.submitters,
+        opts.policy.exec_workers,
+    );
+
+    let report = load::run(&opts)?;
+
+    let mut t = Table::new(vec![
+        "model", "repr", "topology", "completed", "shed", "batches", "mean batch", "p50", "p99",
+        "peak depth",
+    ]);
+    for r in &report.rows {
+        t.row(vec![
+            r.model.clone(),
+            r.repr.to_string(),
+            format!("{:?}", r.topology),
+            r.completed.to_string(),
+            r.shed.to_string(),
+            r.batches.to_string(),
+            format!("{:.2}", r.mean_batch),
+            format!("{} us", r.p50_us),
+            format!("{} us", r.p99_us),
+            r.peak_queue_depth.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "headline: {:.0} samples/s coalesced vs {:.0} serial per-request ({:.2}x), \
+         mean batch {:.2}, p50 {} us / p99 {} us, shed {} (retries {}), {} tenants, \
+         outputs bit-exact vs serial",
+        report.samples_per_sec,
+        report.serial_samples_per_sec,
+        report.speedup_service_vs_serial,
+        report.mean_batch,
+        report.p50_us,
+        report.p99_us,
+        report.shed_total,
+        report.retries_total,
+        report.tenants,
+    );
+    std::fs::write(out_path, report.to_json().to_pretty())
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     args.expect_only(&["artifacts"])?;
     println!("applications:");
@@ -977,6 +1085,14 @@ COMMANDS:
                  emulate each on cortex-m4f, wolf-fc and wolf-{1,2,4,8}core,
                  write PAPER_RESULTS.json + RESULTS.md (latency, memory
                  vs budget, energy, speedup_wolf8_vs_m4 headline)
+  service load   [--quick] [--clients N] [--requests N] [--seed N]
+                 [--max-batch N] [--max-delay-us N] [--capacity N]
+                 [--submitters N] [--workers N] [--out FILE]
+                 replay simulated wearable clients (EMG q7 / ECG q32 /
+                 EEG f32) through the multi-tenant micro-batching
+                 service; every coalesced reply asserted bit-exact vs
+                 serial per-request execution; writes BENCH_service.json
+                 (samples/s, p50/p99 latency, mean batch size)
   info           show applications, targets, artifact status
   help           this text
 
@@ -986,12 +1102,13 @@ BENCHES: cargo bench (one binary per paper figure/table; see DESIGN.md)
 
 fn main() -> Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
-    // `bench` and `deploy` take one optional positional mode word
-    // (`bench json`, `deploy emit`, `deploy emulate`) ahead of their
-    // flags; everything else is pure `command --flag value` form.
+    // `bench`, `deploy`, `paper` and `service` take one optional
+    // positional mode word (`bench json`, `deploy emit`, `service
+    // load`, ...) ahead of their flags; everything else is pure
+    // `command --flag value` form.
     let sub_mode = if matches!(
         argv.first().map(String::as_str),
-        Some("bench") | Some("deploy") | Some("paper")
+        Some("bench") | Some("deploy") | Some("paper") | Some("service")
     ) && argv.get(1).is_some_and(|a| !a.starts_with("--"))
     {
         Some(argv.remove(1))
@@ -1015,6 +1132,7 @@ fn main() -> Result<()> {
             "reproduce" => cmd_paper_reproduce(&args),
             other => bail!("unknown paper mode {other:?} (known: reproduce)"),
         },
+        "service" => cmd_service(sub_mode.as_deref().unwrap_or("load"), &args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");

@@ -1,0 +1,589 @@
+//! The long-running inference host: submit → coalesce → execute →
+//! reply.
+//!
+//! Clients call [`InferenceService::submit`] with one sample and a
+//! reply channel; the service validates and (for Q-format models)
+//! quantizes the input up front, enqueues it on the model's bounded
+//! [`MicroBatchQueue`], and a single dispatcher coalesces each queue
+//! into one `run_batch_*_into` call — the same zero-allocation compiled
+//! path the throughput harness drives — then scatters the outputs back
+//! to each client's channel. One persistent [`ExecEngine`] (plan
+//! scratch + gather/output buffers) is reused for every batch, so the
+//! execute path allocates nothing in steady state beyond each reply's
+//! output vector.
+//!
+//! Two operating modes share all of that machinery:
+//!
+//! * **Started** ([`InferenceService::start`]): a dispatcher thread
+//!   sleeps until the nearest queue deadline (or a submit wakeup) and
+//!   flushes whatever is ready. [`shutdown`](InferenceService::shutdown)
+//!   — or dropping the service — drains every queue before the thread
+//!   exits, so accepted requests always get a reply.
+//! * **Manual** ([`InferenceService::new`]): no thread; tests pump the
+//!   scheduler explicitly with [`pump_at`](InferenceService::pump_at) /
+//!   [`drain`](InferenceService::drain), making deadline-flush and
+//!   backpressure behavior fully deterministic (no sleeps, no races).
+//!
+//! Batched execution is bit-identical per sample to single-sample runs
+//! (the batch-consistency invariant the kernel tests pin), so the
+//! micro-batcher can never change a client's answer — only its latency.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::bench::batch;
+use crate::kernels::PlanScratch;
+use crate::quantize::quantize;
+
+use super::metrics::MetricsSnapshot;
+use super::queue::{Batch, FlushReason, MicroBatchQueue};
+use super::registry::ModelRegistry;
+use super::{BatchPolicy, SubmitError};
+
+/// One model output in the model's native representation: `F32` for
+/// float plans, `Q` (fixed-point at the plan's decimal point) for
+/// q32/q7/q15 plans — exactly what the underlying kernel produced, so
+/// bit-exactness against a serial reference is checkable without any
+/// float round-trip.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Output {
+    /// Float-plan outputs.
+    F32(Vec<f32>),
+    /// Q-format plan outputs (interpret at the plan's decimal point).
+    Q(Vec<i32>),
+}
+
+/// What a client receives on its reply channel for one accepted
+/// request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reply {
+    /// The ticket [`InferenceService::submit`] returned for this
+    /// request.
+    pub ticket: u64,
+    /// The model outputs for the submitted sample.
+    pub output: Output,
+    /// Enqueue → reply latency in microseconds (includes queueing and
+    /// execution).
+    pub latency_us: u64,
+    /// Size of the coalesced batch this request rode in.
+    pub batch_size: usize,
+}
+
+/// A validated request waiting in a model queue. Q-format inputs are
+/// quantized at submit time, so a coalesced batch and a per-request
+/// serial run see *identical* integer inputs — the bit-exactness
+/// guarantee needs no float re-quantization anywhere downstream.
+struct Pending {
+    ticket: u64,
+    tenant: u64,
+    input: PendingInput,
+    reply: mpsc::Sender<Reply>,
+}
+
+enum PendingInput {
+    F32(Vec<f32>),
+    Q(Vec<i32>),
+}
+
+/// All model queues, guarded by one mutex (submits touch one queue for
+/// a few pushes; the dispatcher holds it only to pick/take a batch —
+/// execution happens outside the lock).
+struct SchedState {
+    queues: BTreeMap<String, MicroBatchQueue<Pending>>,
+}
+
+impl SchedState {
+    /// Take the ready batch whose head request is oldest (cross-model
+    /// FIFO fairness). Returns the model id, the batch and the queue's
+    /// remaining depth.
+    fn take_ready(&mut self, now: Instant) -> Option<(String, Batch<Pending>, usize)> {
+        let mut best_id: Option<&String> = None;
+        let mut best_head: Option<Instant> = None;
+        for (id, q) in &self.queues {
+            if q.ready(now).is_none() {
+                continue;
+            }
+            let Some(head) = q.head_enqueued() else {
+                continue;
+            };
+            let better = match best_head {
+                None => true,
+                Some(t) => head < t,
+            };
+            if better {
+                best_id = Some(id);
+                best_head = Some(head);
+            }
+        }
+        let id = best_id?.clone();
+        let q = self.queues.get_mut(&id).expect("picked id exists");
+        let b = q.take(now).expect("picked queue is ready");
+        let depth = q.len();
+        Some((id, b, depth))
+    }
+
+    /// Take any non-empty queue's next batch unconditionally (drain).
+    fn take_any(&mut self) -> Option<(String, Batch<Pending>, usize)> {
+        for (id, q) in self.queues.iter_mut() {
+            if let Some(b) = q.drain_batch() {
+                let id = id.clone();
+                let depth = q.len();
+                return Some((id, b, depth));
+            }
+        }
+        None
+    }
+
+    /// The earliest deadline across all queues — what the dispatcher
+    /// sleeps until when nothing is ready yet.
+    fn next_deadline(&self) -> Option<Instant> {
+        self.queues.values().filter_map(|q| q.next_deadline()).min()
+    }
+}
+
+/// Persistent per-dispatcher execution state: the plan scratch plus
+/// grow-only gather/output buffers, reused across every batch of every
+/// model — the execute path's zero-steady-state-allocation guarantee.
+struct ExecEngine {
+    scratch: PlanScratch,
+    in_f: Vec<f32>,
+    in_q: Vec<i32>,
+    out_f: Vec<f32>,
+    out_q: Vec<i32>,
+}
+
+impl ExecEngine {
+    fn new() -> Self {
+        Self {
+            scratch: PlanScratch::new(),
+            in_f: Vec::new(),
+            in_q: Vec::new(),
+            out_f: Vec::new(),
+            out_q: Vec::new(),
+        }
+    }
+}
+
+struct Inner {
+    registry: Arc<ModelRegistry>,
+    policy: BatchPolicy,
+    state: Mutex<SchedState>,
+    wake: Condvar,
+    metrics: Mutex<MetricsSnapshot>,
+    engine: Mutex<ExecEngine>,
+    next_ticket: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl Inner {
+    /// Execute one coalesced batch and reply to every request in it.
+    /// Called with no lock held; takes `engine`, then (after release)
+    /// `metrics` — never `state`, so it cannot deadlock with submitters.
+    fn execute_batch(&self, model_id: &str, batch_of: Batch<Pending>, depth_after: usize) {
+        let Some(model) = self.registry.get(model_id) else {
+            // Unreachable today (models are never deregistered), but a
+            // dropped batch must not hang clients silently: with no
+            // reply possible, dropping the senders closes the channels.
+            return;
+        };
+        let plan = model.plan();
+        let n = batch_of.items.len();
+        if n == 0 {
+            return;
+        }
+        let n_in = plan.num_inputs();
+        let n_out = plan.num_outputs();
+        let workers = self.policy.exec_workers;
+
+        let mut guard = self.engine.lock().expect("engine lock");
+        let engine = &mut *guard;
+        let done_at;
+        if plan.is_float() {
+            grow(&mut engine.in_f, n * n_in, 0.0);
+            grow(&mut engine.out_f, n * n_out, 0.0);
+            for (i, (p, _)) in batch_of.items.iter().enumerate() {
+                let PendingInput::F32(v) = &p.input else {
+                    unreachable!("f32 plan queued a Q input");
+                };
+                engine.in_f[i * n_in..(i + 1) * n_in].copy_from_slice(v);
+            }
+            let xs = &engine.in_f[..n * n_in];
+            let out = &mut engine.out_f[..n * n_out];
+            if workers > 1 {
+                // The dispatcher is a plain thread (never a pool
+                // worker), so the row-split driver's no-nesting rule
+                // holds by construction.
+                batch::run_plan_rowsplit_into(plan, xs, n, workers, out);
+            } else {
+                plan.run_batch_f32_into(xs, n, &mut engine.scratch, out);
+            }
+            done_at = Instant::now();
+            for (i, (p, enq)) in batch_of.items.iter().enumerate() {
+                let out = engine.out_f[i * n_out..(i + 1) * n_out].to_vec();
+                send_reply(p, enq, done_at, Output::F32(out), n);
+            }
+        } else {
+            grow(&mut engine.in_q, n * n_in, 0);
+            grow(&mut engine.out_q, n * n_out, 0);
+            for (i, (p, _)) in batch_of.items.iter().enumerate() {
+                let PendingInput::Q(v) = &p.input else {
+                    unreachable!("Q plan queued an f32 input");
+                };
+                engine.in_q[i * n_in..(i + 1) * n_in].copy_from_slice(v);
+            }
+            let xs = &engine.in_q[..n * n_in];
+            let out = &mut engine.out_q[..n * n_out];
+            if workers > 1 {
+                batch::run_plan_q_rowsplit_into(plan, xs, n, workers, out);
+            } else {
+                plan.run_batch_q_into(xs, n, &mut engine.scratch, out);
+            }
+            done_at = Instant::now();
+            for (i, (p, enq)) in batch_of.items.iter().enumerate() {
+                let out = engine.out_q[i * n_out..(i + 1) * n_out].to_vec();
+                send_reply(p, enq, done_at, Output::Q(out), n);
+            }
+        }
+        drop(guard);
+
+        let mut metrics = self.metrics.lock().expect("metrics lock");
+        {
+            let m = metrics.models.entry(model_id.to_string()).or_default();
+            m.note_flush(batch_of.reason, n);
+            m.note_depth(depth_after);
+            for (_, enq) in &batch_of.items {
+                m.latency.record(done_at.duration_since(*enq).as_micros() as u64);
+            }
+        }
+        for (p, _) in &batch_of.items {
+            metrics.tenants.entry(p.tenant).or_default().completed += 1;
+        }
+    }
+}
+
+fn grow<T: Clone>(buf: &mut Vec<T>, need: usize, fill: T) {
+    if buf.len() < need {
+        buf.resize(need, fill);
+    }
+}
+
+fn send_reply(p: &Pending, enqueued: &Instant, done_at: Instant, output: Output, batch_size: usize) {
+    // A gone client (dropped receiver) is not an error; the work was
+    // already shared with the rest of the batch.
+    let _ = p.reply.send(Reply {
+        ticket: p.ticket,
+        output,
+        latency_us: done_at.duration_since(*enqueued).as_micros() as u64,
+        batch_size,
+    });
+}
+
+/// The multi-tenant inference host. See the [module docs](super::host)
+/// for the dataflow; [`ModelRegistry`] for registration;
+/// [`BatchPolicy`] for the flush/shed knobs.
+pub struct InferenceService {
+    inner: Arc<Inner>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl InferenceService {
+    /// A manual-mode service (no dispatcher thread): flush decisions
+    /// run only when [`pump`](Self::pump) / [`pump_at`](Self::pump_at)
+    /// / [`drain`](Self::drain) are called. The deterministic harness
+    /// the scheduler tests drive.
+    pub fn new(registry: Arc<ModelRegistry>, policy: &BatchPolicy) -> Self {
+        let inner = Arc::new(Inner {
+            registry,
+            policy: policy.normalized(),
+            state: Mutex::new(SchedState { queues: BTreeMap::new() }),
+            wake: Condvar::new(),
+            metrics: Mutex::new(MetricsSnapshot::default()),
+            engine: Mutex::new(ExecEngine::new()),
+            next_ticket: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+        });
+        Self { inner, dispatcher: None }
+    }
+
+    /// A started service: spawns the dispatcher thread that sleeps
+    /// until the nearest queue deadline (or a submit wakeup) and
+    /// flushes whatever is ready.
+    pub fn start(registry: Arc<ModelRegistry>, policy: &BatchPolicy) -> Self {
+        let mut svc = Self::new(registry, policy);
+        let inner = Arc::clone(&svc.inner);
+        let handle = std::thread::Builder::new()
+            .name("svc-dispatch".to_string())
+            .spawn(move || dispatcher_loop(&inner))
+            .expect("spawn dispatcher");
+        svc.dispatcher = Some(handle);
+        svc
+    }
+
+    /// Submit one sample for `model` on behalf of `tenant`. On success
+    /// the request is queued and the returned ticket will eventually
+    /// arrive on `reply` (batched with others when traffic allows).
+    /// Rejections ([`SubmitError`]) are synchronous and leave no trace.
+    pub fn submit(
+        &self,
+        model: &str,
+        tenant: u64,
+        input: &[f32],
+        reply: &mpsc::Sender<Reply>,
+    ) -> Result<u64, SubmitError> {
+        let Some(m) = self.inner.registry.get(model) else {
+            return Err(SubmitError::UnknownModel(model.to_string()));
+        };
+        let plan = m.plan();
+        if input.len() != plan.num_inputs() {
+            return Err(SubmitError::BadInputWidth {
+                expected: plan.num_inputs(),
+                got: input.len(),
+            });
+        }
+        let pending_input = if plan.is_float() {
+            PendingInput::F32(input.to_vec())
+        } else {
+            let dec = plan.decimal_point().expect("Q plan has a decimal point");
+            PendingInput::Q(input.iter().map(|&v| quantize(v, dec)).collect())
+        };
+        let ticket = self.inner.next_ticket.fetch_add(1, Ordering::Relaxed);
+        let pending = Pending {
+            ticket,
+            tenant,
+            input: pending_input,
+            reply: reply.clone(),
+        };
+        let now = Instant::now();
+        let pushed = {
+            let mut st = self.inner.state.lock().expect("state lock");
+            let q = st
+                .queues
+                .entry(model.to_string())
+                .or_insert_with(|| MicroBatchQueue::new(&self.inner.policy));
+            q.push(pending, now).map_err(|_| q.capacity())
+        };
+        match pushed {
+            Ok(depth) => {
+                self.inner.wake.notify_all();
+                let mut metrics = self.inner.metrics.lock().expect("metrics lock");
+                let mm = metrics.models.entry(model.to_string()).or_default();
+                mm.requests += 1;
+                mm.note_depth(depth);
+                metrics.tenants.entry(tenant).or_default().requests += 1;
+                Ok(ticket)
+            }
+            Err(capacity) => {
+                let mut metrics = self.inner.metrics.lock().expect("metrics lock");
+                metrics.models.entry(model.to_string()).or_default().shed += 1;
+                metrics.tenants.entry(tenant).or_default().shed += 1;
+                Err(SubmitError::QueueFull { capacity })
+            }
+        }
+    }
+
+    /// Manual pump at the real clock — [`pump_at`](Self::pump_at) with
+    /// `Instant::now()`.
+    pub fn pump(&self) -> usize {
+        self.pump_at(Instant::now())
+    }
+
+    /// Execute every batch whose size or deadline trigger has fired as
+    /// of `now`; returns how many batches ran. Passing a future instant
+    /// makes deadline flushes happen deterministically in tests —
+    /// without sleeping. Safe to call alongside a running dispatcher
+    /// (both just take ready batches under the lock).
+    pub fn pump_at(&self, now: Instant) -> usize {
+        let mut ran = 0;
+        loop {
+            let taken = self.inner.state.lock().expect("state lock").take_ready(now);
+            match taken {
+                Some((id, b, depth)) => {
+                    self.inner.execute_batch(&id, b, depth);
+                    ran += 1;
+                }
+                None => return ran,
+            }
+        }
+    }
+
+    /// Flush *everything* still queued, ready or not (partial batches
+    /// execute with [`FlushReason::Drain`]); returns how many batches
+    /// ran. Used at shutdown and by tests.
+    pub fn drain(&self) -> usize {
+        let mut ran = 0;
+        loop {
+            let taken = self.inner.state.lock().expect("state lock").take_any();
+            match taken {
+                Some((id, b, depth)) => {
+                    self.inner.execute_batch(&id, b, depth);
+                    ran += 1;
+                }
+                None => return ran,
+            }
+        }
+    }
+
+    /// A consistent snapshot of every per-model / per-tenant counter.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.inner.metrics.lock().expect("metrics lock").clone()
+    }
+
+    /// The registry this service serves from.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.inner.registry
+    }
+
+    /// Stop the service: the dispatcher (if any) drains every queue and
+    /// exits; in manual mode the queues are drained inline. Every
+    /// accepted request has been replied to when this returns. Returns
+    /// the final metrics snapshot — unlike [`metrics`](Self::metrics)
+    /// mid-run, it is guaranteed to account for every batch (replies are
+    /// sent before counters are bumped, so a mid-run snapshot can trail
+    /// the last reply by one batch).
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.finish();
+        self.inner.metrics.lock().expect("metrics lock").clone()
+    }
+
+    fn finish(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        self.inner.wake.notify_all();
+        match self.dispatcher.take() {
+            Some(h) => {
+                let _ = h.join();
+            }
+            None => {
+                self.drain();
+            }
+        }
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+/// The dispatcher: wait for a trigger, take the oldest ready batch,
+/// execute it outside the lock, repeat. On shutdown, drain every queue
+/// (partial batches run with [`FlushReason::Drain`]) before exiting.
+fn dispatcher_loop(inner: &Inner) {
+    loop {
+        let taken = {
+            let mut st = inner.state.lock().expect("state lock");
+            loop {
+                let now = Instant::now();
+                if let Some(t) = st.take_ready(now) {
+                    break Some(t);
+                }
+                if inner.shutdown.load(Ordering::Acquire) {
+                    break st.take_any();
+                }
+                // Sleep until the nearest deadline can fire (floored so
+                // an imminent deadline never busy-spins), or idle-tick
+                // when every queue is empty. Submits notify the condvar,
+                // so light traffic still gets sub-delay wakeups.
+                let wait = match st.next_deadline() {
+                    Some(d) => d
+                        .saturating_duration_since(now)
+                        .max(Duration::from_micros(50)),
+                    None => Duration::from_millis(20),
+                };
+                let (guard, _) = inner
+                    .wake
+                    .wait_timeout(st, wait)
+                    .expect("state lock poisoned");
+                st = guard;
+            }
+        };
+        match taken {
+            Some((id, b, depth)) => inner.execute_batch(&id, b, depth),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fann::{Activation, Network};
+    use crate::util::rng::Rng;
+
+    fn registry_with(sizes: &[usize], id: &str) -> Arc<ModelRegistry> {
+        let mut rng = Rng::new(11);
+        let mut n = Network::new(sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+        n.randomize(&mut rng, None);
+        let reg = Arc::new(ModelRegistry::new());
+        reg.register(id, &n).unwrap();
+        reg
+    }
+
+    #[test]
+    fn manual_pump_respects_size_trigger() {
+        let reg = registry_with(&[3, 4, 2], "m");
+        let policy = BatchPolicy {
+            max_batch: 2,
+            max_delay: Duration::from_secs(3600),
+            ..BatchPolicy::default()
+        };
+        let svc = InferenceService::new(reg, &policy);
+        let (tx, rx) = mpsc::channel();
+        svc.submit("m", 1, &[0.1, 0.2, 0.3], &tx).unwrap();
+        // One waiting request, huge deadline: nothing is ready.
+        assert_eq!(svc.pump(), 0);
+        svc.submit("m", 2, &[0.4, 0.5, 0.6], &tx).unwrap();
+        // Size trigger: one batch of two.
+        assert_eq!(svc.pump(), 1);
+        let a = rx.recv().unwrap();
+        let b = rx.recv().unwrap();
+        assert_eq!(a.batch_size, 2);
+        assert_eq!(b.batch_size, 2);
+        assert!(a.ticket != b.ticket);
+        let m = svc.metrics();
+        assert_eq!(m.models["m"].size_flushes, 1);
+        assert_eq!(m.models["m"].completed, 2);
+        assert_eq!(m.tenants[&1].completed, 1);
+    }
+
+    #[test]
+    fn submit_validates_model_and_width() {
+        let reg = registry_with(&[3, 4, 2], "m");
+        let svc = InferenceService::new(reg, &BatchPolicy::default());
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(
+            svc.submit("nope", 0, &[0.0; 3], &tx),
+            Err(SubmitError::UnknownModel("nope".to_string()))
+        );
+        assert_eq!(
+            svc.submit("m", 0, &[0.0; 5], &tx),
+            Err(SubmitError::BadInputWidth { expected: 3, got: 5 })
+        );
+        // Rejections leave no trace in the accepted-request counters.
+        assert_eq!(svc.metrics().total_requests(), 0);
+    }
+
+    #[test]
+    fn shutdown_in_manual_mode_drains_pending_requests() {
+        let reg = registry_with(&[2, 3, 1], "m");
+        let policy = BatchPolicy {
+            max_batch: 100,
+            max_delay: Duration::from_secs(3600),
+            ..BatchPolicy::default()
+        };
+        let svc = InferenceService::new(reg, &policy);
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..3 {
+            svc.submit("m", 7, &[0.5, -0.5], &tx).unwrap();
+        }
+        let snap = svc.shutdown();
+        let replies: Vec<Reply> = rx.try_iter().collect();
+        assert_eq!(replies.len(), 3);
+        assert!(replies.iter().all(|r| r.batch_size == 3));
+        assert_eq!(snap.total_completed(), 3);
+        assert_eq!(snap.models["m"].drain_flushes, 1);
+    }
+}

@@ -1,0 +1,597 @@
+//! The synthetic service load harness behind `service load`.
+//!
+//! Replays a fleet of simulated wearable clients against a running
+//! [`InferenceService`] and measures what the micro-batcher buys. Three
+//! models cover every plan family end to end:
+//!
+//! * `emg-q7` — the paper's 192-100-4 EMG gesture MLP as a **packed
+//!   Q7** plan;
+//! * `ecg-q32` — the 64-32-3 ECG arrhythmia MLP as a **Q32** plan;
+//! * `eeg-f32` — the 16-20-1 EEG/BMI MLP as an **f32** plan.
+//!
+//! Clients are assigned round-robin across the models; each replays a
+//! deterministic (per-seed) sequence of samples drawn from the
+//! [`crate::datasets::wearable`] signal generators. Every reply is
+//! checked **bit-exact** against a precomputed per-sample reference
+//! (`run()` errors on any mismatch), and the same request multiset is
+//! also executed as a serial per-request loop — quantize + one
+//! single-sample plan run per request, the no-batching server a
+//! micro-batcher replaces — to time `speedup_service_vs_serial` on the
+//! same machine. The resulting [`LoadReport`] serializes to
+//! `BENCH_service.json`, whose `ratchet_*`/`speedup_*` fields CI gates
+//! via `scripts/bench_diff.py` (see the README "Serving" section for
+//! the field dictionary).
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::datasets::wearable;
+use crate::fann::{from_float_packed, Activation, FixedNetwork, Network, TrainData};
+use crate::kernels::{ExecPlan, PackedWidth, PlanScratch};
+use crate::quantize::quantize;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::host::{InferenceService, Output};
+use super::metrics::MetricsSnapshot;
+use super::registry::ModelRegistry;
+use super::{BatchPolicy, SubmitError};
+
+/// Load-harness configuration. `Default` is the full CI run (125k
+/// requests ≥ the 100k acceptance floor); [`LoadOptions::quick`] is the
+/// smoke-test size.
+#[derive(Debug, Clone)]
+pub struct LoadOptions {
+    /// Simulated wearable clients (each is one tenant id).
+    pub clients: usize,
+    /// Requests each client submits.
+    pub requests_per_client: usize,
+    /// Seed for model weights, input pools and the request schedule.
+    pub seed: u64,
+    /// Submitter threads the clients are sharded across.
+    pub submitters: usize,
+    /// Scheduler policy for the run.
+    pub policy: BatchPolicy,
+}
+
+impl Default for LoadOptions {
+    fn default() -> Self {
+        Self {
+            clients: 25_000,
+            requests_per_client: 5,
+            seed: 7,
+            submitters: 4,
+            policy: BatchPolicy {
+                max_batch: 32,
+                max_delay: Duration::from_millis(1),
+                queue_capacity: 4096,
+                exec_workers: 1,
+            },
+        }
+    }
+}
+
+impl LoadOptions {
+    /// The smoke-test size (~6k requests): same code path, CI-cheap.
+    pub fn quick() -> Self {
+        Self {
+            clients: 2_000,
+            requests_per_client: 3,
+            ..Self::default()
+        }
+    }
+
+    /// Total requests this configuration replays.
+    pub fn total_requests(&self) -> usize {
+        self.clients * self.requests_per_client
+    }
+}
+
+/// Per-model results of a load run (counters from the service metrics
+/// plus the model's identity).
+#[derive(Debug, Clone)]
+pub struct ModelLoadRow {
+    /// Registry id (`emg-q7`, `ecg-q32`, `eeg-f32`).
+    pub model: String,
+    /// Plan representation label (`f32`/`q32`/`q7`).
+    pub repr: &'static str,
+    /// Layer sizes.
+    pub topology: Vec<usize>,
+    /// Requests accepted for this model.
+    pub requests: u64,
+    /// Requests completed (== accepted at the end of a run).
+    pub completed: u64,
+    /// Requests shed at submit time (each was retried until accepted).
+    pub shed: u64,
+    /// Coalesced batches executed.
+    pub batches: u64,
+    /// Mean coalesced batch size.
+    pub mean_batch: f64,
+    /// Size- / deadline- / drain-triggered flush counts.
+    pub flushes: (u64, u64, u64),
+    /// Largest batch executed.
+    pub max_batch_seen: usize,
+    /// Peak queue depth observed.
+    pub peak_queue_depth: usize,
+    /// Median request latency (µs, enqueue → reply).
+    pub p50_us: u64,
+    /// 99th-percentile request latency (µs).
+    pub p99_us: u64,
+}
+
+/// Everything a load run measured — the in-memory form of
+/// `BENCH_service.json`.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// The configuration that produced this report.
+    pub options: LoadOptions,
+    /// Requests replayed (clients × requests_per_client).
+    pub total_requests: usize,
+    /// Wall time of the service phase (first submit → last reply).
+    pub wall_seconds: f64,
+    /// Service throughput: `total_requests / wall_seconds`.
+    pub samples_per_sec: f64,
+    /// Wall time of the serial per-request reference loop.
+    pub serial_seconds: f64,
+    /// Serial throughput: `total_requests / serial_seconds`.
+    pub serial_samples_per_sec: f64,
+    /// `serial_seconds / wall_seconds` — what coalescing (plus
+    /// pipelining submit work onto client threads) buys end to end.
+    pub speedup_service_vs_serial: f64,
+    /// Mean coalesced batch size across all models — the ratchet field
+    /// CI floors (a regression here means the scheduler stopped
+    /// coalescing).
+    pub mean_batch: f64,
+    /// Median request latency (µs) across all models.
+    pub p50_us: u64,
+    /// 99th-percentile request latency (µs) across all models.
+    pub p99_us: u64,
+    /// Requests shed (and retried by their client) across the run.
+    pub shed_total: u64,
+    /// Submit retries performed by clients after sheds.
+    pub retries_total: u64,
+    /// Distinct tenant ids the service saw.
+    pub tenants: usize,
+    /// Every reply matched the serial per-request reference bit for
+    /// bit. `run()` errors instead of returning a report when false.
+    pub bit_exact: bool,
+    /// Per-model rows.
+    pub rows: Vec<ModelLoadRow>,
+}
+
+/// One load-harness model: a compiled plan plus its deterministic input
+/// pool and the precomputed per-sample reference outputs.
+struct LoadModel {
+    id: &'static str,
+    repr: &'static str,
+    sizes: Vec<usize>,
+    plan: ExecPlan,
+    n_in: usize,
+    n_out: usize,
+    /// Input pool, `pool_samples × n_in`, already normalized to [-1, 1].
+    pool_f: Vec<f32>,
+    /// The pool quantized at the plan's decimal point (empty for f32
+    /// plans) — identical values to what submit-time quantization
+    /// produces, since both call [`quantize`] at the same dec.
+    pool_q: Vec<i32>,
+    pool_samples: usize,
+    /// Reference outputs per pool sample (float plans).
+    expected_f: Vec<f32>,
+    /// Reference outputs per pool sample (Q plans).
+    expected_q: Vec<i32>,
+}
+
+fn flatten_inputs(data: &TrainData) -> Vec<f32> {
+    let mut xs = Vec::with_capacity(data.len() * data.input(0).len());
+    for i in 0..data.len() {
+        xs.extend_from_slice(data.input(i));
+    }
+    xs
+}
+
+fn randomized_net(sizes: &[usize], rng: &mut Rng) -> Result<Network> {
+    let mut net = Network::new(sizes, Activation::Tanh, Activation::Sigmoid)?;
+    net.randomize(rng, None);
+    Ok(net)
+}
+
+/// Build the three load models (one per plan family) with seeded
+/// weights and seeded wearable input pools. Weights are random — the
+/// harness measures scheduling and kernels, not accuracy — but inputs
+/// come from the paper's signal generators so request content has the
+/// real workloads' shape and dynamic range.
+fn build_models(seed: u64, pool_per_class: usize) -> Result<Vec<LoadModel>> {
+    let mut rng = Rng::new(seed ^ 0x5E21_1CE0);
+    let mut models = Vec::with_capacity(3);
+
+    // emg-q7: 192-100-4 as a packed Q7 plan.
+    {
+        let sizes = vec![wearable::EMG_CHANNELS * wearable::EMG_WINDOW, 100, wearable::EMG_CLASSES];
+        let mut r = rng.fork(1);
+        let net = randomized_net(&sizes, &mut r)?;
+        let (_, packed) =
+            from_float_packed(&net, 1.0, PackedWidth::Q7).context("packing emg-q7")?;
+        let plan = ExecPlan::compile(&packed);
+        let mut data = wearable::emg_sized(seed ^ 0xA, pool_per_class);
+        data.normalize_inputs();
+        models.push(finish_model("emg-q7", "q7", sizes, plan, &data)?);
+    }
+    // ecg-q32: 64-32-3 as a wide Q32 plan.
+    {
+        let sizes = vec![wearable::ECG_WINDOW, 32, wearable::ECG_CLASSES];
+        let mut r = rng.fork(2);
+        let net = randomized_net(&sizes, &mut r)?;
+        let fixed = FixedNetwork::from_float(&net, 1.0).context("quantizing ecg-q32")?;
+        let plan = ExecPlan::compile(&fixed);
+        let mut data = wearable::ecg_sized(seed ^ 0xB, pool_per_class);
+        data.normalize_inputs();
+        models.push(finish_model("ecg-q32", "q32", sizes, plan, &data)?);
+    }
+    // eeg-f32: 16-20-1 as a float plan.
+    {
+        let sizes = vec![wearable::EEG_CHANNELS * wearable::EEG_BANDS, 20, 1];
+        let mut r = rng.fork(3);
+        let net = randomized_net(&sizes, &mut r)?;
+        let plan = ExecPlan::compile(&net);
+        let mut data = wearable::eeg_sized(seed ^ 0xC, pool_per_class);
+        data.normalize_inputs();
+        models.push(finish_model("eeg-f32", "f32", sizes, plan, &data)?);
+    }
+    Ok(models)
+}
+
+fn finish_model(
+    id: &'static str,
+    repr: &'static str,
+    sizes: Vec<usize>,
+    plan: ExecPlan,
+    data: &TrainData,
+) -> Result<LoadModel> {
+    let n_in = plan.num_inputs();
+    let n_out = plan.num_outputs();
+    ensure!(data.input(0).len() == n_in, "{id}: pool width != plan inputs");
+    let pool_f = flatten_inputs(data);
+    let pool_samples = data.len();
+    let (pool_q, expected_f, expected_q) = if plan.is_float() {
+        let expected = plan.run_batch_f32(&pool_f, pool_samples);
+        (Vec::new(), expected, Vec::new())
+    } else {
+        let dec = plan.decimal_point().expect("Q plan has a decimal point");
+        let pool_q: Vec<i32> = pool_f.iter().map(|&v| quantize(v, dec)).collect();
+        let expected = plan.run_batch_q(&pool_q, pool_samples);
+        (pool_q, Vec::new(), expected)
+    };
+    Ok(LoadModel {
+        id,
+        repr,
+        sizes,
+        plan,
+        n_in,
+        n_out,
+        pool_f,
+        pool_q,
+        pool_samples,
+        expected_f,
+        expected_q,
+    })
+}
+
+/// The deterministic request schedule: which pool sample client `c`'s
+/// `r`-th request submits (a Weyl-style mix so neighboring clients
+/// don't walk the pool in lockstep).
+fn pool_index(c: usize, r: usize, pool_samples: usize) -> usize {
+    c.wrapping_mul(2_654_435_761)
+        .wrapping_add(r.wrapping_mul(40_503))
+        % pool_samples
+}
+
+/// Time the serial per-request reference: one quantize (for Q models)
+/// plus one single-sample plan run per request, reusing one scratch and
+/// output buffer — an honest no-batching server loop, not a strawman
+/// with per-call allocation.
+fn run_serial_reference(models: &[LoadModel], opts: &LoadOptions) -> f64 {
+    let mut scratch = PlanScratch::new();
+    let max_out = models.iter().map(|m| m.n_out).max().unwrap_or(1);
+    let max_in = models.iter().map(|m| m.n_in).max().unwrap_or(1);
+    let mut out_f = vec![0.0f32; max_out];
+    let mut out_q = vec![0i32; max_out];
+    let mut in_q = vec![0i32; max_in];
+    let mut ck = 0u64;
+    let t0 = Instant::now();
+    for c in 0..opts.clients {
+        let m = &models[c % models.len()];
+        for r in 0..opts.requests_per_client {
+            let pi = pool_index(c, r, m.pool_samples);
+            let x = &m.pool_f[pi * m.n_in..(pi + 1) * m.n_in];
+            if m.plan.is_float() {
+                m.plan.run_batch_f32_into(x, 1, &mut scratch, &mut out_f[..m.n_out]);
+                ck = ck.wrapping_add(crate::bench::batch::checksum_f32(&out_f[..m.n_out]));
+            } else {
+                let dec = m.plan.decimal_point().expect("Q plan");
+                for (dst, &v) in in_q[..m.n_in].iter_mut().zip(x) {
+                    *dst = quantize(v, dec);
+                }
+                m.plan.run_batch_q_into(&in_q[..m.n_in], 1, &mut scratch, &mut out_q[..m.n_out]);
+                ck = ck.wrapping_add(crate::bench::batch::checksum_i32(&out_q[..m.n_out]));
+            }
+        }
+    }
+    std::hint::black_box(ck);
+    t0.elapsed().as_secs_f64()
+}
+
+/// One submitter thread's work: submit every request of its client
+/// range (retrying sheds with a short backoff — closed-loop
+/// backpressure), then receive exactly that many replies and count
+/// bit-exact mismatches against the precomputed reference.
+fn submitter(
+    svc: &InferenceService,
+    models: &[LoadModel],
+    clients: Range<usize>,
+    requests_per_client: usize,
+) -> (u64, u64) {
+    let (tx, rx) = mpsc::channel();
+    let mut expect: HashMap<u64, (usize, usize)> =
+        HashMap::with_capacity(clients.len() * requests_per_client);
+    let mut retries = 0u64;
+    for c in clients {
+        let mi = c % models.len();
+        let m = &models[mi];
+        for r in 0..requests_per_client {
+            let pi = pool_index(c, r, m.pool_samples);
+            let input = &m.pool_f[pi * m.n_in..(pi + 1) * m.n_in];
+            loop {
+                match svc.submit(m.id, c as u64, input, &tx) {
+                    Ok(ticket) => {
+                        expect.insert(ticket, (mi, pi));
+                        break;
+                    }
+                    Err(SubmitError::QueueFull { .. }) => {
+                        // Shed: back off briefly and retry — the client
+                        // keeps its request, the queue keeps its bound.
+                        retries += 1;
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    Err(e) => panic!("load submit failed: {e}"),
+                }
+            }
+        }
+    }
+    let mut mismatches = 0u64;
+    for _ in 0..expect.len() {
+        let reply = rx.recv().expect("service replies to every accepted request");
+        let (mi, pi) = expect[&reply.ticket];
+        let m = &models[mi];
+        let ok = match &reply.output {
+            Output::F32(v) => v[..] == m.expected_f[pi * m.n_out..(pi + 1) * m.n_out],
+            Output::Q(v) => v[..] == m.expected_q[pi * m.n_out..(pi + 1) * m.n_out],
+        };
+        if !ok {
+            mismatches += 1;
+        }
+    }
+    (mismatches, retries)
+}
+
+fn rows_from_snapshot(models: &[LoadModel], snap: &MetricsSnapshot) -> Vec<ModelLoadRow> {
+    models
+        .iter()
+        .map(|m| {
+            let mm = snap.models.get(m.id).cloned().unwrap_or_default();
+            ModelLoadRow {
+                model: m.id.to_string(),
+                repr: m.repr,
+                topology: m.sizes.clone(),
+                requests: mm.requests,
+                completed: mm.completed,
+                shed: mm.shed,
+                batches: mm.batches,
+                mean_batch: mm.mean_batch(),
+                flushes: (mm.size_flushes, mm.deadline_flushes, mm.drain_flushes),
+                max_batch_seen: mm.max_batch_seen,
+                peak_queue_depth: mm.peak_queue_depth,
+                p50_us: mm.latency.p50(),
+                p99_us: mm.latency.p99(),
+            }
+        })
+        .collect()
+}
+
+/// Run the load harness: build the three models, time the serial
+/// per-request reference, replay the full request schedule through a
+/// started [`InferenceService`], verify every reply bit-exact, and
+/// assemble the [`LoadReport`]. Errors if any reply mismatches or any
+/// accepted request goes unanswered.
+pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
+    ensure!(opts.clients > 0 && opts.requests_per_client > 0, "empty load configuration");
+    let total = opts.total_requests();
+    let models = build_models(opts.seed, 40)?;
+
+    let serial_seconds = run_serial_reference(&models, opts);
+
+    let registry = Arc::new(ModelRegistry::new());
+    for m in &models {
+        registry.register_plan(m.id, m.plan.clone())?;
+    }
+    let svc = InferenceService::start(registry, &opts.policy);
+
+    let submitters = opts.submitters.clamp(1, opts.clients);
+    let t0 = Instant::now();
+    let per_thread: Vec<(u64, u64)> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(submitters);
+        let base = opts.clients / submitters;
+        let extra = opts.clients % submitters;
+        let mut start = 0usize;
+        for i in 0..submitters {
+            let len = base + usize::from(i < extra);
+            let range = start..start + len;
+            start += len;
+            let svc_ref = &svc;
+            let models_ref = &models;
+            let rpc = opts.requests_per_client;
+            handles.push(s.spawn(move || submitter(svc_ref, models_ref, range, rpc)));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("submitter thread"))
+            .collect()
+    });
+    let wall_seconds = t0.elapsed().as_secs_f64();
+    // shutdown() joins the dispatcher, so the returned snapshot is
+    // guaranteed to account for every executed batch.
+    let snap = svc.shutdown();
+
+    let mismatches: u64 = per_thread.iter().map(|&(m, _)| m).sum();
+    let retries_total: u64 = per_thread.iter().map(|&(_, r)| r).sum();
+    ensure!(
+        mismatches == 0,
+        "{mismatches} of {total} coalesced replies diverged from serial per-request execution"
+    );
+    ensure!(
+        snap.total_completed() == total as u64,
+        "completed {} != submitted {total}",
+        snap.total_completed()
+    );
+
+    let latency = snap.merged_latency();
+    Ok(LoadReport {
+        options: opts.clone(),
+        total_requests: total,
+        wall_seconds,
+        samples_per_sec: total as f64 / wall_seconds,
+        serial_seconds,
+        serial_samples_per_sec: total as f64 / serial_seconds,
+        speedup_service_vs_serial: serial_seconds / wall_seconds,
+        mean_batch: snap.mean_batch(),
+        p50_us: latency.p50(),
+        p99_us: latency.p99(),
+        shed_total: snap.total_shed(),
+        retries_total,
+        tenants: snap.tenants.len(),
+        bit_exact: true,
+        rows: rows_from_snapshot(&models, &snap),
+    })
+}
+
+impl LoadReport {
+    /// Serialize as the `BENCH_service.json` document (see the README
+    /// "Serving" section for the field dictionary).
+    pub fn to_json(&self) -> Json {
+        let policy = &self.options.policy;
+        Json::obj()
+            .field("schema", "fann-on-mcu/bench-service/v1")
+            .field("seed", Json::Int(self.options.seed as i64))
+            .field("clients", self.options.clients)
+            .field("requests_per_client", self.options.requests_per_client)
+            .field("total_requests", self.total_requests)
+            .field(
+                "policy",
+                Json::obj()
+                    .field("max_batch", policy.max_batch)
+                    .field("max_delay_us", policy.max_delay.as_micros() as usize)
+                    .field("queue_capacity", policy.queue_capacity)
+                    .field("exec_workers", policy.exec_workers)
+                    .field("submitters", self.options.submitters)
+                    .build(),
+            )
+            .field("wall_seconds", self.wall_seconds)
+            .field("samples_per_sec", self.samples_per_sec)
+            .field("serial_seconds", self.serial_seconds)
+            .field("serial_samples_per_sec", self.serial_samples_per_sec)
+            .field("speedup_service_vs_serial", self.speedup_service_vs_serial)
+            .field("ratchet_mean_batch", self.mean_batch)
+            .field("p50_us", Json::Int(self.p50_us as i64))
+            .field("p99_us", Json::Int(self.p99_us as i64))
+            .field("shed_total", Json::Int(self.shed_total as i64))
+            .field("retries_total", Json::Int(self.retries_total as i64))
+            .field("tenants", self.tenants)
+            .field("bit_exact", self.bit_exact)
+            .field(
+                "models",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj()
+                                .field("model", r.model.as_str())
+                                .field("repr", r.repr)
+                                .field(
+                                    "topology",
+                                    Json::Arr(
+                                        r.topology
+                                            .iter()
+                                            .map(|&s| Json::Int(s as i64))
+                                            .collect::<Vec<_>>(),
+                                    ),
+                                )
+                                .field("requests", Json::Int(r.requests as i64))
+                                .field("completed", Json::Int(r.completed as i64))
+                                .field("shed", Json::Int(r.shed as i64))
+                                .field("batches", Json::Int(r.batches as i64))
+                                .field("mean_batch", r.mean_batch)
+                                .field("size_flushes", Json::Int(r.flushes.0 as i64))
+                                .field("deadline_flushes", Json::Int(r.flushes.1 as i64))
+                                .field("drain_flushes", Json::Int(r.flushes.2 as i64))
+                                .field("max_batch_seen", r.max_batch_seen)
+                                .field("peak_queue_depth", r.peak_queue_depth)
+                                .field("p50_us", Json::Int(r.p50_us as i64))
+                                .field("p99_us", Json::Int(r.p99_us as i64))
+                                .build()
+                        })
+                        .collect::<Vec<_>>(),
+                ),
+            )
+            .build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_load_run_is_bit_exact_and_complete() {
+        let opts = LoadOptions {
+            clients: 12,
+            requests_per_client: 2,
+            seed: 3,
+            submitters: 2,
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_micros(500),
+                queue_capacity: 64,
+                exec_workers: 1,
+            },
+        };
+        let report = run(&opts).unwrap();
+        assert_eq!(report.total_requests, 24);
+        assert!(report.bit_exact);
+        assert!(report.samples_per_sec > 0.0);
+        assert!(report.p99_us >= report.p50_us);
+        assert_eq!(report.rows.len(), 3);
+        assert_eq!(report.rows.iter().map(|r| r.completed).sum::<u64>(), 24);
+        let json = report.to_json().to_pretty();
+        for field in [
+            "\"schema\"",
+            "\"samples_per_sec\"",
+            "\"p50_us\"",
+            "\"p99_us\"",
+            "\"ratchet_mean_batch\"",
+            "\"speedup_service_vs_serial\"",
+            "\"bit_exact\"",
+        ] {
+            assert!(json.contains(field), "missing {field} in {json}");
+        }
+    }
+
+    #[test]
+    fn pool_index_stays_in_bounds_and_varies() {
+        let idx: Vec<usize> = (0..8).map(|r| pool_index(5, r, 17)).collect();
+        assert!(idx.iter().all(|&i| i < 17));
+        assert!(idx.windows(2).any(|w| w[0] != w[1]));
+    }
+}

@@ -1,0 +1,309 @@
+//! Per-model / per-tenant service counters and the log-bucketed
+//! latency histogram behind the p50/p99 fields of `BENCH_service.json`.
+//!
+//! Everything here is plain data guarded by the host's one metrics
+//! mutex — no atomics to reason about, and a [`MetricsSnapshot`] is a
+//! straight clone, so a snapshot is always internally consistent.
+//! `BTreeMap`s keep iteration (and therefore every report and JSON
+//! artifact) deterministically ordered.
+
+use std::collections::BTreeMap;
+
+use super::queue::FlushReason;
+
+/// Latency histogram over geometric (~25% growth) microsecond buckets,
+/// 1 µs up to > 60 s. Percentiles come back as the matched bucket's
+/// upper bound, so a reported p99 is within one bucket (≤ 25%) of the
+/// exact order statistic — plenty for a throughput harness, at O(1)
+/// record cost and a fixed small footprint per model.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Inclusive upper bound of each bucket, strictly increasing.
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram with the standard bucket ladder.
+    pub fn new() -> Self {
+        let mut bounds = Vec::with_capacity(96);
+        let mut b: u64 = 1;
+        while b < 60_000_000 {
+            bounds.push(b);
+            // ≥ +1 guarantees strict growth at the small end, ~+25%
+            // beyond it.
+            b = (b + b / 4).max(b + 1);
+        }
+        bounds.push(u64::MAX);
+        let counts = vec![0; bounds.len()];
+        Self { bounds, counts, total: 0 }
+    }
+
+    /// Record one latency observation in microseconds.
+    pub fn record(&mut self, us: u64) {
+        let idx = self.bounds.partition_point(|&b| b < us);
+        self.counts[idx.min(self.counts.len() - 1)] += 1;
+        self.total += 1;
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// The `p`-quantile (`0.0 < p ≤ 1.0`) as the upper bound of the
+    /// bucket holding that order statistic; `0` when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((p * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.bounds[i];
+            }
+        }
+        *self.bounds.last().expect("non-empty ladder")
+    }
+
+    /// Median latency (µs).
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    /// 99th-percentile latency (µs).
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+
+    /// Fold another histogram into this one (same standard ladder) —
+    /// used to aggregate per-model latency into the service headline.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        debug_assert_eq!(self.bounds.len(), other.bounds.len());
+        for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+    }
+}
+
+/// Counters for one model id.
+#[derive(Debug, Clone, Default)]
+pub struct ModelMetrics {
+    /// Requests accepted into the queue (excludes shed).
+    pub requests: u64,
+    /// Requests executed and replied to.
+    pub completed: u64,
+    /// Requests rejected because the bounded queue was at capacity.
+    pub shed: u64,
+    /// Coalesced batches executed.
+    pub batches: u64,
+    /// Samples executed across those batches (= `completed`).
+    pub batched_samples: u64,
+    /// Batches released by the size trigger.
+    pub size_flushes: u64,
+    /// Batches released by the deadline trigger (partial batches).
+    pub deadline_flushes: u64,
+    /// Batches released by explicit drain (shutdown / manual flush).
+    pub drain_flushes: u64,
+    /// Batches of size 1 (requests that rode alone).
+    pub solo_batches: u64,
+    /// Largest coalesced batch executed.
+    pub max_batch_seen: usize,
+    /// Queue depth after the most recent queue transition.
+    pub queue_depth: usize,
+    /// Highest queue depth observed.
+    pub peak_queue_depth: usize,
+    /// Request latency (enqueue → reply) distribution.
+    pub latency: LatencyHistogram,
+}
+
+impl ModelMetrics {
+    /// Mean coalesced batch size — the micro-batching win (`1.0` means
+    /// no coalescing happened). `0` batches yields `0.0`.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_samples as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of completed requests that shared their batch with at
+    /// least one other request (a batch of size 1 contributes exactly
+    /// one unbatched sample). `0.0` until something completes.
+    pub fn batched_ratio(&self) -> f64 {
+        if self.batched_samples == 0 {
+            0.0
+        } else {
+            1.0 - self.solo_batches as f64 / self.batched_samples as f64
+        }
+    }
+
+    pub(crate) fn note_flush(&mut self, reason: FlushReason, batch_size: usize) {
+        self.batches += 1;
+        self.batched_samples += batch_size as u64;
+        self.completed += batch_size as u64;
+        if batch_size == 1 {
+            self.solo_batches += 1;
+        }
+        self.max_batch_seen = self.max_batch_seen.max(batch_size);
+        match reason {
+            FlushReason::Size => self.size_flushes += 1,
+            FlushReason::Deadline => self.deadline_flushes += 1,
+            FlushReason::Drain => self.drain_flushes += 1,
+        }
+    }
+
+    pub(crate) fn note_depth(&mut self, depth: usize) {
+        self.queue_depth = depth;
+        self.peak_queue_depth = self.peak_queue_depth.max(depth);
+    }
+}
+
+/// Counters for one tenant (client) id, across all models.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TenantCounters {
+    /// Requests accepted from this tenant.
+    pub requests: u64,
+    /// Requests executed and replied to.
+    pub completed: u64,
+    /// Requests shed back to this tenant.
+    pub shed: u64,
+}
+
+/// A consistent copy of every counter the service keeps, taken under
+/// the one metrics lock. Doubles as the service's internal store.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Per-model counters, keyed by model id.
+    pub models: BTreeMap<String, ModelMetrics>,
+    /// Per-tenant counters, keyed by tenant id.
+    pub tenants: BTreeMap<u64, TenantCounters>,
+}
+
+impl MetricsSnapshot {
+    /// Requests accepted across all models.
+    pub fn total_requests(&self) -> u64 {
+        self.models.values().map(|m| m.requests).sum()
+    }
+
+    /// Requests executed and replied to across all models.
+    pub fn total_completed(&self) -> u64 {
+        self.models.values().map(|m| m.completed).sum()
+    }
+
+    /// Requests shed across all models.
+    pub fn total_shed(&self) -> u64 {
+        self.models.values().map(|m| m.shed).sum()
+    }
+
+    /// Mean coalesced batch size across all models.
+    pub fn mean_batch(&self) -> f64 {
+        let batches: u64 = self.models.values().map(|m| m.batches).sum();
+        let samples: u64 = self.models.values().map(|m| m.batched_samples).sum();
+        if batches == 0 {
+            0.0
+        } else {
+            samples as f64 / batches as f64
+        }
+    }
+
+    /// All models' latency histograms folded into one.
+    pub fn merged_latency(&self) -> LatencyHistogram {
+        let mut h = LatencyHistogram::new();
+        for m in self.models.values() {
+            h.merge(&m.latency);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_bracket_the_order_statistic() {
+        let mut h = LatencyHistogram::new();
+        for us in 1..=1000u64 {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.p50();
+        let p99 = h.p99();
+        // Bucket bounds grow ≤ 25%, so the reported quantile sits in
+        // [exact, exact * 1.25].
+        assert!((500..=625).contains(&p50), "p50 {p50}");
+        assert!((990..=1238).contains(&p99), "p99 {p99}");
+        assert!(p99 >= p50);
+    }
+
+    #[test]
+    fn histogram_handles_extremes_and_empty() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.percentile(0.99), 0);
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert!(h.p99() >= 60_000_000);
+        assert_eq!(h.p50(), 1); // the 0-µs sample lands in the first bucket
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for _ in 0..10 {
+            a.record(100);
+            b.record(10_000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 20);
+        assert_eq!(a.p50(), a.percentile(0.5));
+        assert!(a.p99() >= 10_000);
+    }
+
+    #[test]
+    fn model_metrics_flush_accounting() {
+        let mut m = ModelMetrics::default();
+        m.note_flush(FlushReason::Size, 8);
+        m.note_flush(FlushReason::Deadline, 3);
+        m.note_flush(FlushReason::Drain, 1);
+        assert_eq!(m.batches, 3);
+        assert_eq!(m.batched_samples, 12);
+        assert_eq!(m.completed, 12);
+        assert_eq!(m.max_batch_seen, 8);
+        assert_eq!((m.size_flushes, m.deadline_flushes, m.drain_flushes), (1, 1, 1));
+        assert!((m.mean_batch() - 4.0).abs() < 1e-9);
+        assert!(m.batched_ratio() > 0.0);
+    }
+
+    #[test]
+    fn snapshot_aggregates_across_models() {
+        let mut s = MetricsSnapshot::default();
+        let a = s.models.entry("a".into()).or_default();
+        a.requests = 10;
+        a.note_flush(FlushReason::Size, 10);
+        a.latency.record(50);
+        let b = s.models.entry("b".into()).or_default();
+        b.requests = 4;
+        b.shed = 2;
+        b.note_flush(FlushReason::Deadline, 4);
+        b.latency.record(5000);
+        assert_eq!(s.total_requests(), 14);
+        assert_eq!(s.total_completed(), 14);
+        assert_eq!(s.total_shed(), 2);
+        assert!((s.mean_batch() - 7.0).abs() < 1e-9);
+        assert_eq!(s.merged_latency().count(), 2);
+    }
+}

@@ -1,0 +1,136 @@
+//! Multi-tenant inference host — the request-level layer above the
+//! compiled [`crate::kernels::ExecPlan`] / [`crate::bench::batch`]
+//! execution stack.
+//!
+//! The paper's end game (§VII) is continuous real-time classification
+//! for *fleets* of wearable devices. The per-inference kernels are only
+//! half of that story: sustained node throughput comes from how
+//! per-client single-sample requests are coalesced onto the batched
+//! zero-allocation execution path. This module provides that layer:
+//!
+//! * [`ModelRegistry`] — many compiled [`crate::kernels::ExecPlan`]s
+//!   keyed by model id, shared immutably across threads.
+//! * [`MicroBatchQueue`] — the pure adaptive micro-batching core: a
+//!   bounded FIFO per model that flushes on batch-size *or* deadline,
+//!   whichever comes first, and sheds (rejects) arrivals when full.
+//!   Time is a parameter, so every flush decision is unit-testable
+//!   without sleeping.
+//! * [`InferenceService`] — the host: clients [`submit`] single
+//!   samples; a dispatcher coalesces each model's queue into one
+//!   `run_batch_*_into` call on a persistent [`crate::kernels::PlanScratch`]
+//!   (zero steady-state allocation on the execute path) and scatters
+//!   the outputs back to per-client reply channels. Batched execution
+//!   is bit-identical per sample to single-sample runs (pinned by
+//!   `rust/tests/batch_consistency.rs`), so coalescing never changes
+//!   any client's answer — `rust/tests/service.rs` re-pins this end to
+//!   end across f32/q32/packed plans.
+//! * [`MetricsSnapshot`] — per-model and per-tenant counters (requests,
+//!   completed, shed, batches, flush causes, queue depth) plus a
+//!   log-bucketed latency histogram with p50/p99 accessors.
+//! * [`load`] — the synthetic load harness behind the `service load`
+//!   CLI: replays tens of thousands of simulated wearable clients from
+//!   the seeded [`crate::datasets::wearable`] generators, asserts every
+//!   coalesced output bit-exact against serial per-request execution,
+//!   and writes `BENCH_service.json` for the CI ratchet.
+//!
+//! [`submit`]: InferenceService::submit
+
+pub mod host;
+pub mod load;
+pub mod metrics;
+pub mod queue;
+pub mod registry;
+
+pub use host::{InferenceService, Output, Reply};
+pub use metrics::{LatencyHistogram, MetricsSnapshot, ModelMetrics, TenantCounters};
+pub use queue::{Batch, FlushReason, MicroBatchQueue};
+pub use registry::{ModelRegistry, ServiceModel};
+
+use std::time::Duration;
+
+/// Adaptive micro-batching policy: when a model's queue flushes, how
+/// much it may hold, and how a coalesced batch executes.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many requests are waiting (the size
+    /// trigger). Clamped to ≥ 1.
+    pub max_batch: usize,
+    /// Flush when the *oldest* waiting request has been queued this
+    /// long (the deadline trigger) — bounds worst-case added latency
+    /// when traffic is light.
+    pub max_delay: Duration,
+    /// Bounded-queue capacity per model; arrivals beyond it are shed
+    /// (rejected with [`SubmitError::QueueFull`]) instead of growing
+    /// the queue without bound. Clamped to ≥ `max_batch`.
+    pub queue_capacity: usize,
+    /// Worker threads for executing one coalesced batch through the
+    /// neuron-parallel row-split driver
+    /// ([`crate::bench::batch::run_plan_rowsplit_into`]); `0` or `1`
+    /// keeps the serial plan path (best for small models, where the
+    /// per-layer barrier costs more than it buys).
+    pub exec_workers: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_delay: Duration::from_millis(1),
+            queue_capacity: 1024,
+            exec_workers: 1,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// The policy with its invariants enforced (`max_batch ≥ 1`,
+    /// `queue_capacity ≥ max_batch`) — applied once at queue/service
+    /// construction so the scheduler core never re-checks.
+    pub fn normalized(&self) -> Self {
+        let max_batch = self.max_batch.max(1);
+        Self {
+            max_batch,
+            max_delay: self.max_delay,
+            queue_capacity: self.queue_capacity.max(max_batch),
+            exec_workers: self.exec_workers,
+        }
+    }
+}
+
+/// Why [`InferenceService::submit`] rejected a request. Rejections are
+/// synchronous and deterministic: nothing was enqueued, no ticket was
+/// issued, and the caller decides whether to retry (backpressure) or
+/// drop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// No model with this id in the registry.
+    UnknownModel(String),
+    /// Input length does not match the model's input layer.
+    BadInputWidth {
+        /// The model's expected input width.
+        expected: usize,
+        /// The submitted sample's length.
+        got: usize,
+    },
+    /// The model's bounded queue is at capacity — the request was shed.
+    QueueFull {
+        /// The capacity the queue was at when the request was shed.
+        capacity: usize,
+    },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownModel(id) => write!(f, "unknown model {id:?}"),
+            SubmitError::BadInputWidth { expected, got } => {
+                write!(f, "bad input width: expected {expected}, got {got}")
+            }
+            SubmitError::QueueFull { capacity } => {
+                write!(f, "queue full (capacity {capacity}): request shed")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}

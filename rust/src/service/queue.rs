@@ -1,0 +1,237 @@
+//! The pure adaptive micro-batching core: one bounded FIFO per model,
+//! flushed on batch-size or deadline — whichever comes first — with
+//! deterministic shedding at capacity.
+//!
+//! Deliberately free of threads, clocks and channels: `now` is a
+//! parameter to every time-sensitive method, so each flush decision is
+//! a pure function of (queue contents, policy, now) and the test suite
+//! can drive deadline and backpressure behavior without sleeping. The
+//! host ([`crate::service::InferenceService`]) owns the real clock and
+//! the wakeups.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::BatchPolicy;
+
+/// Why a batch left the queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The size trigger: `max_batch` requests were waiting.
+    Size,
+    /// The deadline trigger: the oldest request waited `max_delay` —
+    /// the batch may be partial.
+    Deadline,
+    /// An explicit drain (service shutdown or manual flush) — the
+    /// batch may be partial and the deadline need not have passed.
+    Drain,
+}
+
+impl FlushReason {
+    /// Stable lower-case label (`"size"` / `"deadline"` / `"drain"`)
+    /// for reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FlushReason::Size => "size",
+            FlushReason::Deadline => "deadline",
+            FlushReason::Drain => "drain",
+        }
+    }
+}
+
+/// One coalesced batch taken from a queue: the requests in FIFO order,
+/// each with its enqueue time, plus why the flush fired.
+#[derive(Debug)]
+pub struct Batch<T> {
+    /// `(request, enqueued_at)` in arrival order — at most
+    /// `max_batch` of them.
+    pub items: Vec<(T, Instant)>,
+    /// The trigger that released this batch.
+    pub reason: FlushReason,
+}
+
+/// A bounded per-model FIFO with size-or-deadline flushing. Generic
+/// over the payload so the scheduling logic is testable with plain
+/// values; the host instantiates it with its pending-request type.
+#[derive(Debug)]
+pub struct MicroBatchQueue<T> {
+    items: VecDeque<(T, Instant)>,
+    policy: BatchPolicy,
+}
+
+impl<T> MicroBatchQueue<T> {
+    /// An empty queue under `policy` (normalized on entry: `max_batch ≥
+    /// 1`, `queue_capacity ≥ max_batch`).
+    pub fn new(policy: &BatchPolicy) -> Self {
+        Self {
+            items: VecDeque::new(),
+            policy: policy.normalized(),
+        }
+    }
+
+    /// Requests currently waiting.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Whether no request is waiting.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The bound beyond which arrivals are shed.
+    pub fn capacity(&self) -> usize {
+        self.policy.queue_capacity
+    }
+
+    /// Enqueue at time `now`. Returns the new depth, or gives the item
+    /// back (`Err`) when the queue is at capacity — the deterministic
+    /// shed: nothing about the queue changes on rejection.
+    pub fn push(&mut self, item: T, now: Instant) -> Result<usize, T> {
+        if self.items.len() >= self.policy.queue_capacity {
+            return Err(item);
+        }
+        self.items.push_back((item, now));
+        Ok(self.items.len())
+    }
+
+    /// The flush trigger that has fired at `now`, if any: `Size` once
+    /// `max_batch` requests wait, else `Deadline` once the oldest
+    /// request has waited `max_delay`. `None` means keep coalescing.
+    pub fn ready(&self, now: Instant) -> Option<FlushReason> {
+        if self.items.len() >= self.policy.max_batch {
+            return Some(FlushReason::Size);
+        }
+        let &(_, oldest) = self.items.front()?;
+        if now.duration_since(oldest) >= self.policy.max_delay {
+            return Some(FlushReason::Deadline);
+        }
+        None
+    }
+
+    /// When the head request was enqueued (the queue's flush priority:
+    /// oldest head goes first across models).
+    pub fn head_enqueued(&self) -> Option<Instant> {
+        self.items.front().map(|&(_, t)| t)
+    }
+
+    /// The instant at which [`ready`](Self::ready) will turn `Some`
+    /// by deadline alone — what the dispatcher sleeps until when no
+    /// size trigger is pending. `None` when the queue is empty.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.items.front().map(|&(_, t)| t + self.policy.max_delay)
+    }
+
+    /// Take up to `max_batch` requests if a trigger has fired at `now`
+    /// (`None` otherwise). FIFO order is preserved; requests beyond
+    /// `max_batch` stay queued for the next flush.
+    pub fn take(&mut self, now: Instant) -> Option<Batch<T>> {
+        let reason = self.ready(now)?;
+        Some(self.take_with_reason(reason))
+    }
+
+    /// Take up to `max_batch` requests unconditionally (shutdown /
+    /// manual drain) — `None` only when empty.
+    pub fn drain_batch(&mut self) -> Option<Batch<T>> {
+        if self.items.is_empty() {
+            return None;
+        }
+        Some(self.take_with_reason(FlushReason::Drain))
+    }
+
+    fn take_with_reason(&mut self, reason: FlushReason) -> Batch<T> {
+        let n = self.items.len().min(self.policy.max_batch);
+        Batch {
+            items: self.items.drain(..n).collect(),
+            reason,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn policy(max_batch: usize, delay_ms: u64, capacity: usize) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_delay: Duration::from_millis(delay_ms),
+            queue_capacity: capacity,
+            exec_workers: 1,
+        }
+    }
+
+    #[test]
+    fn size_trigger_flushes_exactly_max_batch_in_fifo_order() {
+        let mut q = MicroBatchQueue::new(&policy(4, 1000, 64));
+        let t0 = Instant::now();
+        for i in 0..6 {
+            q.push(i, t0).unwrap();
+        }
+        assert_eq!(q.ready(t0), Some(FlushReason::Size));
+        let b = q.take(t0).unwrap();
+        assert_eq!(b.reason, FlushReason::Size);
+        let vals: Vec<i32> = b.items.iter().map(|&(v, _)| v).collect();
+        assert_eq!(vals, vec![0, 1, 2, 3]);
+        // The two stragglers stay for the next trigger.
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.ready(t0), None);
+    }
+
+    #[test]
+    fn deadline_trigger_fires_with_partial_batch() {
+        let mut q = MicroBatchQueue::new(&policy(8, 2, 64));
+        let t0 = Instant::now();
+        q.push('a', t0).unwrap();
+        q.push('b', t0 + Duration::from_micros(300)).unwrap();
+        // Before the oldest request's deadline: keep coalescing.
+        assert_eq!(q.ready(t0 + Duration::from_millis(1)), None);
+        // At the deadline: a partial (2 of 8) batch flushes.
+        let now = t0 + Duration::from_millis(2);
+        assert_eq!(q.ready(now), Some(FlushReason::Deadline));
+        assert_eq!(q.next_deadline(), Some(t0 + Duration::from_millis(2)));
+        let b = q.take(now).unwrap();
+        assert_eq!(b.reason, FlushReason::Deadline);
+        assert_eq!(b.items.len(), 2);
+        assert!(q.is_empty());
+        assert!(q.take(now + Duration::from_secs(1)).is_none());
+    }
+
+    #[test]
+    fn sheds_deterministically_at_capacity_and_recovers() {
+        let mut q = MicroBatchQueue::new(&policy(8, 1000, 3));
+        let t0 = Instant::now();
+        assert_eq!(q.push(1, t0), Ok(1));
+        assert_eq!(q.push(2, t0), Ok(2));
+        assert_eq!(q.push(3, t0), Ok(3));
+        // Full: the 4th and 5th arrivals are handed back unchanged.
+        assert_eq!(q.push(4, t0), Err(4));
+        assert_eq!(q.push(5, t0), Err(5));
+        assert_eq!(q.len(), 3);
+        // Draining frees capacity again.
+        let b = q.drain_batch().unwrap();
+        assert_eq!(b.reason, FlushReason::Drain);
+        assert_eq!(b.items.len(), 3);
+        assert_eq!(q.push(6, t0), Ok(1));
+    }
+
+    #[test]
+    fn normalization_keeps_capacity_at_least_max_batch() {
+        let q: MicroBatchQueue<u8> = MicroBatchQueue::new(&policy(16, 1, 2));
+        assert_eq!(q.capacity(), 16);
+        let q: MicroBatchQueue<u8> = MicroBatchQueue::new(&BatchPolicy {
+            max_batch: 0,
+            ..BatchPolicy::default()
+        });
+        assert_eq!(q.policy.max_batch, 1);
+    }
+
+    #[test]
+    fn drain_of_empty_queue_is_none() {
+        let mut q: MicroBatchQueue<u8> = MicroBatchQueue::new(&BatchPolicy::default());
+        assert!(q.drain_batch().is_none());
+        assert_eq!(q.head_enqueued(), None);
+        assert_eq!(q.next_deadline(), None);
+    }
+}

@@ -1,0 +1,132 @@
+//! The model registry: many compiled [`ExecPlan`]s keyed by model id.
+//!
+//! A registered model is an immutable `Arc<ServiceModel>` — the plan's
+//! arena is position-independent and read-only at inference time, so
+//! one registration serves every submitter thread and the dispatcher
+//! concurrently without copies. Registration is cheap enough to do at
+//! startup for a whole fleet of model variants; ids are unique (a
+//! second registration under the same id is an error, never a silent
+//! replacement of a model that in-flight requests still reference).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::kernels::{ExecPlan, PlanSource};
+
+/// One registered model: an id plus its compiled execution plan.
+#[derive(Debug)]
+pub struct ServiceModel {
+    id: String,
+    plan: ExecPlan,
+}
+
+impl ServiceModel {
+    /// The registry key.
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// The compiled plan requests against this model execute through.
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
+    }
+}
+
+/// Thread-safe id → [`ServiceModel`] map. `BTreeMap` keeps `ids()` and
+/// every report listing deterministic.
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    models: RwLock<BTreeMap<String, Arc<ServiceModel>>>,
+}
+
+impl ModelRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an already-compiled plan under `id`. Errors when the id
+    /// is taken.
+    pub fn register_plan(&self, id: &str, plan: ExecPlan) -> Result<()> {
+        let mut models = self.models.write().expect("registry lock");
+        if models.contains_key(id) {
+            bail!("model id {id:?} already registered");
+        }
+        models.insert(
+            id.to_string(),
+            Arc::new(ServiceModel { id: id.to_string(), plan }),
+        );
+        Ok(())
+    }
+
+    /// Compile `src` (any [`PlanSource`]: float, fixed or packed
+    /// network) and register it under `id`.
+    pub fn register<S: PlanSource + ?Sized>(&self, id: &str, src: &S) -> Result<()> {
+        self.register_plan(id, ExecPlan::compile(src))
+    }
+
+    /// Look up a model by id.
+    pub fn get(&self, id: &str) -> Option<Arc<ServiceModel>> {
+        self.models.read().expect("registry lock").get(id).cloned()
+    }
+
+    /// Registered ids, sorted.
+    pub fn ids(&self) -> Vec<String> {
+        self.models.read().expect("registry lock").keys().cloned().collect()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.models.read().expect("registry lock").len()
+    }
+
+    /// Whether no model is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fann::{Activation, FixedNetwork, Network};
+    use crate::util::rng::Rng;
+
+    fn net(sizes: &[usize], seed: u64) -> Network {
+        let mut rng = Rng::new(seed);
+        let mut n = Network::new(sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+        n.randomize(&mut rng, None);
+        n
+    }
+
+    #[test]
+    fn registers_all_plan_sources_and_lists_sorted() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        let f = net(&[4, 6, 2], 1);
+        let q = FixedNetwork::from_float(&net(&[3, 5, 2], 2), 1.0).unwrap();
+        reg.register("float-model", &f).unwrap();
+        reg.register("fixed-model", &q).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.ids(), vec!["fixed-model", "float-model"]);
+        let m = reg.get("float-model").unwrap();
+        assert_eq!(m.id(), "float-model");
+        assert!(m.plan().is_float());
+        assert_eq!(m.plan().num_inputs(), 4);
+        assert!(!reg.get("fixed-model").unwrap().plan().is_float());
+        assert!(reg.get("missing").is_none());
+    }
+
+    #[test]
+    fn duplicate_id_is_an_error_not_a_replacement() {
+        let reg = ModelRegistry::new();
+        let a = net(&[2, 3, 1], 3);
+        let b = net(&[9, 3, 1], 4);
+        reg.register("m", &a).unwrap();
+        assert!(reg.register("m", &b).is_err());
+        // The original registration is untouched.
+        assert_eq!(reg.get("m").unwrap().plan().num_inputs(), 2);
+    }
+}

@@ -1,0 +1,261 @@
+//! Multi-tenant inference-service gate.
+//!
+//! Pins the service-layer contract end to end:
+//!
+//! * coalesced micro-batch replies are **bit-exact** vs per-request
+//!   serial execution, across all three plan families (f32, q32,
+//!   packed q7) — micro-batching may change latency, never answers;
+//! * the deadline trigger flushes partial batches, deterministically
+//!   (manual mode passes an explicit `now`) and in a started service;
+//! * backpressure sheds exactly at capacity, leaves no trace, and the
+//!   queue recovers after a drain;
+//! * per-model and per-tenant counters reconcile with what clients saw;
+//! * a tiny `service load` run reports the `BENCH_service.json` schema.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use fann_on_mcu::fann::{from_float_packed, Activation, FixedNetwork, Network};
+use fann_on_mcu::kernels::PackedWidth;
+use fann_on_mcu::quantize::quantize;
+use fann_on_mcu::service::load::{self, LoadOptions};
+use fann_on_mcu::service::{
+    BatchPolicy, InferenceService, ModelRegistry, Output, SubmitError,
+};
+use fann_on_mcu::util::rng::Rng;
+
+fn rand_net(sizes: &[usize], seed: u64) -> Network {
+    let mut rng = Rng::new(seed);
+    let mut n = Network::new(sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+    n.randomize(&mut rng, None);
+    n
+}
+
+fn policy(max_batch: usize, max_delay: Duration, capacity: usize) -> BatchPolicy {
+    BatchPolicy {
+        max_batch,
+        max_delay,
+        queue_capacity: capacity,
+        exec_workers: 1,
+    }
+}
+
+const HOUR: Duration = Duration::from_secs(3600);
+
+/// The per-request serial reference for one sample, quantizing exactly
+/// like `InferenceService::submit` does.
+fn serial_reference(reg: &ModelRegistry, model: &str, input: &[f32]) -> Output {
+    let m = reg.get(model).unwrap();
+    let plan = m.plan();
+    if plan.is_float() {
+        Output::F32(plan.run_batch_f32(input, 1))
+    } else {
+        let dec = plan.decimal_point().unwrap();
+        let xq: Vec<i32> = input.iter().map(|&v| quantize(v, dec)).collect();
+        Output::Q(plan.run_batch_q(&xq, 1))
+    }
+}
+
+#[test]
+fn coalesced_replies_bit_exact_across_plan_families() {
+    let f_net = rand_net(&[5, 9, 3], 1);
+    let fixed = FixedNetwork::from_float(&rand_net(&[6, 7, 2], 2), 1.0).unwrap();
+    let (_, packed) = from_float_packed(&rand_net(&[8, 12, 4], 3), 1.0, PackedWidth::Q7).unwrap();
+
+    let reg = Arc::new(ModelRegistry::new());
+    reg.register("f32-model", &f_net).unwrap();
+    reg.register("q32-model", &fixed).unwrap();
+    reg.register("q7-model", &packed).unwrap();
+
+    // Manual mode + huge deadline: the only flush triggers in play are
+    // size (pump) and drain, so batch composition is fully determined.
+    let svc = InferenceService::new(Arc::clone(&reg), &policy(4, HOUR, 64));
+    let (tx, rx) = mpsc::channel();
+    let mut rng = Rng::new(44);
+    let mut expected: HashMap<u64, Output> = HashMap::new();
+    for (model, n_in) in [("f32-model", 5usize), ("q32-model", 6), ("q7-model", 8)] {
+        // 7 requests per model: one size-triggered batch of 4, one
+        // drain batch of 3 — both partial-batch and full-batch
+        // coalescing get a bit-exactness check.
+        for s in 0..7u64 {
+            let input: Vec<f32> = (0..n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let want = serial_reference(&reg, model, &input);
+            let ticket = svc.submit(model, s, &input, &tx).unwrap();
+            assert!(expected.insert(ticket, want).is_none(), "tickets must be unique");
+        }
+    }
+
+    assert_eq!(svc.pump(), 3, "one size-triggered batch per model");
+    assert_eq!(svc.drain(), 3, "one drain batch of 3 per model");
+
+    for _ in 0..expected.len() {
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.batch_size == 4 || r.batch_size == 3, "batch_size {}", r.batch_size);
+        assert_eq!(
+            r.output, expected[&r.ticket],
+            "coalesced reply for ticket {} diverged from serial per-request execution",
+            r.ticket
+        );
+    }
+
+    let m = svc.metrics();
+    assert_eq!(m.total_completed(), 21);
+    for model in ["f32-model", "q32-model", "q7-model"] {
+        assert_eq!(m.models[model].size_flushes, 1, "{model}");
+        assert_eq!(m.models[model].drain_flushes, 1, "{model}");
+        assert_eq!(m.models[model].max_batch_seen, 4, "{model}");
+    }
+}
+
+#[test]
+fn deadline_flush_fires_with_partial_batch() {
+    let reg = Arc::new(ModelRegistry::new());
+    reg.register("m", &rand_net(&[3, 5, 2], 9)).unwrap();
+    let svc = InferenceService::new(reg, &policy(100, HOUR, 256));
+    let (tx, rx) = mpsc::channel();
+    for s in 0..3u64 {
+        svc.submit("m", s, &[0.1, -0.2, 0.3], &tx).unwrap();
+    }
+    // Far below both triggers: nothing may flush.
+    assert_eq!(svc.pump(), 0);
+    // Jump the scheduler clock past the oldest request's deadline: the
+    // partial batch (3 of 100) must flush — no sleeping involved.
+    assert_eq!(svc.pump_at(Instant::now() + 2 * HOUR), 1);
+    for _ in 0..3 {
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.batch_size, 3);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.models["m"].deadline_flushes, 1);
+    assert_eq!(m.models["m"].size_flushes, 0);
+    assert_eq!(m.models["m"].completed, 3);
+}
+
+#[test]
+fn started_service_flushes_on_deadline() {
+    let reg = Arc::new(ModelRegistry::new());
+    reg.register("m", &rand_net(&[4, 6, 2], 10)).unwrap();
+    // Size trigger unreachable (1000), so only the 2ms deadline can
+    // release these requests.
+    let svc = InferenceService::start(reg, &policy(1000, Duration::from_millis(2), 2048));
+    let (tx, rx) = mpsc::channel();
+    for s in 0..2u64 {
+        svc.submit("m", s, &[0.2, 0.4, -0.6, 0.8], &tx).unwrap();
+    }
+    for _ in 0..2 {
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.batch_size <= 2);
+    }
+    let snap = svc.shutdown();
+    assert!(
+        snap.models["m"].deadline_flushes >= 1,
+        "replies arrived without any deadline flush: {:?}",
+        snap.models["m"]
+    );
+    assert_eq!(snap.models["m"].completed, 2);
+}
+
+#[test]
+fn backpressure_sheds_deterministically_at_capacity_and_recovers() {
+    let reg = Arc::new(ModelRegistry::new());
+    reg.register("m", &rand_net(&[2, 4, 2], 11)).unwrap();
+    let svc = InferenceService::new(reg, &policy(8, HOUR, 4));
+    let (tx, rx) = mpsc::channel();
+    for s in 0..4u64 {
+        svc.submit("m", s, &[0.1, 0.2], &tx).unwrap();
+    }
+    // The 5th and 6th arrivals are shed — synchronously, no ticket, no
+    // queue mutation.
+    for s in 4..6u64 {
+        assert_eq!(
+            svc.submit("m", s, &[0.1, 0.2], &tx),
+            Err(SubmitError::QueueFull { capacity: 4 })
+        );
+    }
+    let m = svc.metrics();
+    assert_eq!(m.models["m"].requests, 4);
+    assert_eq!(m.models["m"].shed, 2);
+    assert_eq!(m.tenants[&4].shed, 1);
+    assert_eq!(m.tenants[&5].shed, 1);
+
+    // Draining frees capacity; the queue accepts again.
+    assert_eq!(svc.drain(), 1);
+    assert_eq!(rx.try_iter().count(), 4);
+    svc.submit("m", 6, &[0.1, 0.2], &tx).unwrap();
+    assert_eq!(svc.metrics().models["m"].shed, 2, "recovered submits shed nothing");
+}
+
+#[test]
+fn submit_rejects_unknown_model_and_bad_width() {
+    let reg = Arc::new(ModelRegistry::new());
+    reg.register("m", &rand_net(&[3, 4, 2], 12)).unwrap();
+    let svc = InferenceService::new(reg, &BatchPolicy::default());
+    let (tx, _rx) = mpsc::channel();
+    assert_eq!(
+        svc.submit("ghost", 0, &[0.0; 3], &tx),
+        Err(SubmitError::UnknownModel("ghost".to_string()))
+    );
+    assert_eq!(
+        svc.submit("m", 0, &[0.0; 4], &tx),
+        Err(SubmitError::BadInputWidth { expected: 3, got: 4 })
+    );
+    assert_eq!(svc.metrics().total_requests(), 0);
+}
+
+#[test]
+fn per_tenant_and_per_model_counters_reconcile() {
+    let reg = Arc::new(ModelRegistry::new());
+    reg.register("m", &rand_net(&[2, 3, 2], 13)).unwrap();
+    let svc = InferenceService::new(reg, &policy(4, HOUR, 64));
+    let (tx, rx) = mpsc::channel();
+    for tenant in [1u64, 1, 2, 2] {
+        svc.submit("m", tenant, &[0.3, -0.3], &tx).unwrap();
+    }
+    assert_eq!(svc.pump(), 1);
+    assert_eq!(rx.try_iter().count(), 4);
+    let m = svc.metrics();
+    assert_eq!(m.tenants[&1].requests, 2);
+    assert_eq!(m.tenants[&1].completed, 2);
+    assert_eq!(m.tenants[&2].completed, 2);
+    let mm = &m.models["m"];
+    assert_eq!(mm.batches, 1);
+    assert!((mm.mean_batch() - 4.0).abs() < 1e-9);
+    // Every completed request shared its batch: fully coalesced.
+    assert!((mm.batched_ratio() - 1.0).abs() < 1e-9);
+    assert!(mm.latency.count() == 4 && mm.latency.p99() >= mm.latency.p50());
+}
+
+#[test]
+fn load_harness_smoke_reports_the_bench_schema() {
+    let opts = LoadOptions {
+        clients: 30,
+        requests_per_client: 2,
+        seed: 5,
+        submitters: 3,
+        policy: policy(8, Duration::from_micros(500), 128),
+    };
+    let report = load::run(&opts).unwrap();
+    assert_eq!(report.total_requests, 60);
+    assert!(report.bit_exact);
+    assert!(report.samples_per_sec > 0.0 && report.serial_samples_per_sec > 0.0);
+    assert!(report.p99_us >= report.p50_us);
+    assert_eq!(report.rows.len(), 3, "emg-q7 + ecg-q32 + eeg-f32");
+    assert_eq!(report.rows.iter().map(|r| r.completed).sum::<u64>(), 60);
+    assert_eq!(report.tenants, 30);
+    let json = report.to_json().to_pretty();
+    for field in [
+        "\"schema\": \"fann-on-mcu/bench-service/v1\"",
+        "\"samples_per_sec\"",
+        "\"p50_us\"",
+        "\"p99_us\"",
+        "\"ratchet_mean_batch\"",
+        "\"speedup_service_vs_serial\"",
+        "\"bit_exact\": true",
+        "\"emg-q7\"",
+        "\"ecg-q32\"",
+        "\"eeg-f32\"",
+    ] {
+        assert!(json.contains(field), "missing {field}");
+    }
+}

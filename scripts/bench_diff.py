@@ -1,22 +1,43 @@
 #!/usr/bin/env python3
-"""Perf-trajectory gate for BENCH_kernels.json.
+"""Perf-trajectory gate for BENCH_*.json artifacts.
 
-Compares a fresh `cargo run --release -- bench json` output against the
-committed baseline and fails if any `speedup_*` field regressed below
-RATIO (default 0.8) x its baseline value, or disappeared entirely.
+Compares a fresh benchmark JSON (``bench json`` or ``service load``)
+against the committed baseline and fails if any gated field regressed
+below RATIO (default 0.8) x its baseline value, or disappeared entirely.
 
 Usage: bench_diff.py BASELINE.json FRESH.json [RATIO]
 
-Only `speedup_*` fields are gated: absolute wall-times vary with runner
-hardware, but the *ratios* (packed vs wide, compiled plan vs dispatch,
-row-split vs serial) are what the optimization claims are made of, and
-those must not silently decay. New speedup fields in the fresh run are
-allowed (the gate is forward-compatible); refresh the baseline by
-rerunning `bench json` on a quiet machine and committing the result.
+Gated fields:
+
+* ``speedup_*`` — optimization ratios (packed vs wide, compiled plan vs
+  dispatch, coalesced service vs serial per-request). Absolute
+  wall-times vary with runner hardware, but these ratios are what the
+  optimization claims are made of and must not silently decay.
+  Exception: ``speedup_rowsplit_*`` is reported as ADVISORY only — the
+  fig11 row-split speedup compares two multi-threaded timings on shared
+  CI runners, whose core counts and noise floors swing it well past any
+  honest regression threshold (the kernels themselves are gated for
+  correctness by ``bench smoke``'s checksum parity instead).
+* ``ratchet_*`` — scheduler-quality scalars (e.g. the service's mean
+  coalesced batch size) that must not silently decay either.
+
+New gated fields in the fresh run are allowed (the gate is
+forward-compatible); refresh a baseline by rerunning the producing
+command on a quiet machine and committing the result.
 """
 
 import json
 import sys
+
+
+def is_gated(key: str) -> bool:
+    if key.startswith("speedup_rowsplit_"):
+        return False  # advisory: cross-thread timing ratio, too noisy to gate
+    return key.startswith("speedup_") or key.startswith("ratchet_")
+
+
+def is_advisory(key: str) -> bool:
+    return key.startswith("speedup_rowsplit_")
 
 
 def main() -> int:
@@ -32,7 +53,15 @@ def main() -> int:
     failures = []
     checked = 0
     for key in sorted(base):
-        if not key.startswith("speedup_"):
+        if is_advisory(key):
+            floor = base[key]
+            got = fresh.get(key)
+            if isinstance(floor, (int, float)) and isinstance(got, (int, float)):
+                print(f"advisory {key}: {got:.3f} (baseline {floor:.3f}, not gated)")
+            else:
+                print(f"advisory {key}: baseline {floor!r}, fresh {got!r} (not gated)")
+            continue
+        if not is_gated(key):
             continue
         floor = base[key]
         if not isinstance(floor, (int, float)) or floor <= 0:
@@ -51,13 +80,13 @@ def main() -> int:
             print(f"ok {key}: {got:.3f} (baseline {floor:.3f}, floor {ratio * floor:.3f})")
 
     if checked == 0 and not failures:
-        failures.append("baseline contains no speedup_* fields — nothing was gated")
+        failures.append("baseline contains no gated speedup_*/ratchet_* fields — nothing was gated")
     if failures:
         print("bench regression check FAILED:", file=sys.stderr)
         for line in failures:
             print(f"  {line}", file=sys.stderr)
         return 1
-    print(f"bench regression check passed ({checked} speedup fields)")
+    print(f"bench regression check passed ({checked} gated fields)")
     return 0
 
 
