@@ -45,6 +45,16 @@
 //!                      per-request execution, and write
 //!                      `BENCH_service.json` (samples/s, p50/p99 latency,
 //!                      mean batch size) for the CI ratchet.
+//! * `service chaos`  — the seeded fault-injection harness: replay the
+//!                      same client fleet against a service with an
+//!                      injected `FaultPlan` (exec panics, latency
+//!                      spikes, NaN-poisoned inputs, dispatcher kills)
+//!                      and audit the fault-tolerance contract (exactly
+//!                      one terminal reply per accepted request,
+//!                      quarantine trip → probe → recovery, watchdog
+//!                      restarts, bit-exact successful replies); writes
+//!                      `BENCH_chaos.json` and exits non-zero on any
+//!                      violated invariant.
 //! * `info`           — list applications, targets, artifact status.
 //! * `help`           — this text.
 //!
@@ -937,12 +947,14 @@ fn cmd_paper_reproduce(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `service <mode>` — the multi-tenant inference host. The only mode so
-/// far is `load`: the synthetic client-replay harness.
+/// `service <mode>` — the multi-tenant inference host. `load` is the
+/// synthetic client-replay harness; `chaos` is the seeded
+/// fault-injection harness.
 fn cmd_service(mode: &str, args: &Args) -> Result<()> {
     match mode {
         "load" => cmd_service_load(args),
-        other => bail!("unknown service mode {other:?} (known: load)"),
+        "chaos" => cmd_service_chaos(args),
+        other => bail!("unknown service mode {other:?} (known: load, chaos)"),
     }
 }
 
@@ -1031,10 +1043,89 @@ fn cmd_service_load(args: &Args) -> Result<()> {
         report.retries_total,
         report.tenants,
     );
+    if report.gave_up_total > 0 {
+        println!(
+            "warning: {} requests gave up after exhausting the shed-retry budget",
+            report.gave_up_total
+        );
+    }
     std::fs::write(out_path, report.to_json().to_pretty())
         .with_context(|| format!("writing {out_path}"))?;
     println!("wrote {out_path}");
     Ok(())
+}
+
+/// `service chaos` — replay the same simulated client fleet against a
+/// service with an injected deterministic `FaultPlan`, write the audit
+/// as `BENCH_chaos.json`, and exit non-zero if any fault-tolerance
+/// invariant is violated (the artifact is written *before* the check,
+/// so a red run still leaves the full report behind).
+fn cmd_service_chaos(args: &Args) -> Result<()> {
+    use fann_on_mcu::service::chaos::{self, ChaosOptions};
+
+    args.expect_only(&["quick", "clients", "requests", "seed", "submitters", "out"])?;
+    let mut opts = if args.get_flag("quick")? {
+        ChaosOptions::quick()
+    } else {
+        ChaosOptions::default()
+    };
+    opts.clients = args.get_usize("clients", opts.clients)?.max(1);
+    opts.requests_per_client = args.get_usize("requests", opts.requests_per_client)?.max(1);
+    let seed = args.get_u64("seed", opts.seed)?;
+    opts.seed = seed;
+    opts.plan.seed = seed;
+    opts.submitters = args.get_usize("submitters", opts.submitters)?.max(1);
+    let out_path = args.get_or("out", "BENCH_chaos.json");
+
+    println!(
+        "service chaos: {} clients x {} requests = {} total; panic window [{}, {}) on {}, \
+         nan_prob {}, dispatcher kills at {:?}; breaker threshold {}, cooldown {:?}",
+        opts.clients,
+        opts.requests_per_client,
+        opts.total_requests(),
+        opts.plan.panic_from,
+        opts.plan.panic_until,
+        opts.plan.panic_model,
+        opts.plan.nan_prob,
+        opts.plan.kill_at_iters,
+        opts.breaker.failure_threshold,
+        opts.breaker.cooldown,
+    );
+
+    let report = chaos::run(&opts)?;
+    std::fs::write(out_path, report.to_json().to_pretty())
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("wrote {out_path}");
+    println!(
+        "replies: {} ok / {} exec-failed / {} timeout / {} aborted of {} accepted; \
+         rejects: {} bad-input, {} shed-gave-up, {} quarantined-gave-up; \
+         lost {}, duplicates {}, mismatches {}",
+        report.replies_ok,
+        report.replies_exec_failed,
+        report.replies_timeout,
+        report.replies_aborted,
+        report.accepted,
+        report.rejected_bad_input,
+        report.shed_gave_up,
+        report.quarantined_gave_up,
+        report.lost_replies,
+        report.duplicate_replies,
+        report.mismatches,
+    );
+    println!(
+        "quarantine: {} trips, {} probes, {} recoveries; watchdog restarts {}; \
+         exec failures {}; p50 {} us / p99 {} us (faulted-model p99 {} us, healthy p99 {} us)",
+        report.quarantine_trips,
+        report.quarantine_probes,
+        report.quarantine_recoveries,
+        report.watchdog_restarts,
+        report.exec_failures,
+        report.p50_us,
+        report.p99_us,
+        report.p99_us_faulted_model,
+        report.p99_us_healthy_models,
+    );
+    report.check()
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -1093,6 +1184,14 @@ COMMANDS:
                  service; every coalesced reply asserted bit-exact vs
                  serial per-request execution; writes BENCH_service.json
                  (samples/s, p50/p99 latency, mean batch size)
+  service chaos  [--quick] [--clients N] [--requests N] [--seed N]
+                 [--submitters N] [--out FILE]
+                 seeded fault injection against the same service (exec
+                 panics, latency spikes, NaN-poisoned inputs, dispatcher
+                 kills); audits exactly-one-terminal-reply, quarantine
+                 trip/probe/recovery, watchdog restarts, and bit-exact
+                 successful replies; writes BENCH_chaos.json and exits
+                 non-zero on any violated invariant
   info           show applications, targets, artifact status
   help           this text
 

@@ -1,0 +1,693 @@
+//! The seeded chaos harness behind `service chaos`.
+//!
+//! Replays the same three wearable models as the [`super::load`]
+//! harness — `emg-q7` (packed Q7), `ecg-q32` (Q32), `eeg-f32` (f32) —
+//! through a *started* [`InferenceService`], but with a deterministic
+//! [`FaultPlan`] injected: a window of `emg-q7` executions panics (so
+//! the circuit breaker must trip, probe, and recover), random batches
+//! get latency spikes, a fraction of `eeg-f32` requests carry
+//! NaN-poisoned inputs (which submit-time validation must reject), and
+//! the dispatcher is killed at chosen loop iterations (which the
+//! watchdog must survive by failing pending requests and respawning).
+//!
+//! The harness then audits the fault-tolerance contract end to end:
+//!
+//! * **Exactly one terminal reply per accepted request** — no lost
+//!   replies, no duplicates, every reply a success or a typed
+//!   [`InferError`](super::InferError).
+//! * **Quarantine round-trip** — the breaker tripped (> 0 trips),
+//!   admitted probes, and recovered (> 0 recoveries) once the panic
+//!   window passed.
+//! * **Watchdog supervision** — every injected dispatcher kill was
+//!   survived (restarts ≥ 1 when kills are planned) and the run still
+//!   completed.
+//! * **Bit-exactness under chaos** — every *successful* reply still
+//!   matches the precomputed serial per-sample reference bit for bit:
+//!   faults may fail requests, but they may never corrupt an answer.
+//!
+//! [`ChaosReport::to_json`] serializes the audit as
+//! `BENCH_chaos.json` (schema `fann-on-mcu/bench-chaos/v1`; field
+//! dictionary in the README "Fault tolerance" section), and
+//! [`ChaosReport::check`] turns any violated invariant into an error —
+//! the CLI writes the artifact first, then fails loudly, and CI
+//! re-asserts the invariants from the JSON.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::util::json::Json;
+
+use super::faults::FaultPlan;
+use super::host::{InferenceService, Output};
+use super::load::{build_models, pool_index, shed_backoff, LoadModel, MAX_SHED_RETRIES};
+use super::metrics::MetricsSnapshot;
+use super::registry::{BreakerPolicy, ModelRegistry};
+use super::{BatchPolicy, InferError, SubmitError};
+
+/// How many times a client retries one quarantine-rejected request
+/// before giving up. Deliberately generous: retries are what deliver
+/// half-open probes through consecutive cooldowns, so the budget must
+/// outlast the panic window's worth of probe → fail → cooldown rounds.
+pub const MAX_QUARANTINE_RETRIES: u32 = 800;
+
+/// Backoff before quarantine-retry `attempt`: a flat 300–600 µs
+/// jittered wait — long enough for cooldowns to elapse between
+/// attempts, short enough that probes flow promptly after one does.
+fn quarantine_backoff(attempt: u32, salt: u64) -> Duration {
+    let h = (salt.rotate_left(13) ^ u64::from(attempt))
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    Duration::from_micros(300 + (h >> 48) % 300)
+}
+
+/// Chaos-harness configuration. `Default` is the full CI run;
+/// [`ChaosOptions::quick`] is the smoke-test size.
+#[derive(Debug, Clone)]
+pub struct ChaosOptions {
+    /// Simulated wearable clients (each is one tenant id).
+    pub clients: usize,
+    /// Requests each client attempts.
+    pub requests_per_client: usize,
+    /// Seed for model weights, input pools and the request schedule
+    /// (also the default [`FaultPlan`] seed).
+    pub seed: u64,
+    /// Submitter threads the clients are sharded across.
+    pub submitters: usize,
+    /// Scheduler policy for the run (includes the request budget that
+    /// produces `Timeout` replies under pressure).
+    pub policy: BatchPolicy,
+    /// Circuit-breaker policy for the run's registry.
+    pub breaker: BreakerPolicy,
+    /// The injected fault schedule.
+    pub plan: FaultPlan,
+}
+
+impl Default for ChaosOptions {
+    fn default() -> Self {
+        let seed = 11;
+        Self {
+            clients: 10_000,
+            requests_per_client: 4,
+            seed,
+            submitters: 4,
+            policy: BatchPolicy {
+                max_batch: 32,
+                max_delay: Duration::from_millis(1),
+                queue_capacity: 4096,
+                request_budget: Some(Duration::from_millis(500)),
+                ..BatchPolicy::default()
+            },
+            breaker: BreakerPolicy {
+                failure_threshold: 5,
+                cooldown: Duration::from_millis(5),
+            },
+            plan: FaultPlan {
+                seed,
+                panic_model: "emg-q7".to_string(),
+                panic_from: 20,
+                panic_until: 60,
+                spike_prob: 0.005,
+                spike: Duration::from_millis(2),
+                nan_prob: 0.03,
+                kill_at_iters: vec![0, 64],
+            },
+        }
+    }
+}
+
+impl ChaosOptions {
+    /// The smoke-test size: same fault families, CI-cheap.
+    pub fn quick() -> Self {
+        let seed = 11;
+        Self {
+            clients: 1_500,
+            requests_per_client: 2,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_delay: Duration::from_micros(200),
+                queue_capacity: 512,
+                request_budget: Some(Duration::from_millis(500)),
+                ..BatchPolicy::default()
+            },
+            breaker: BreakerPolicy {
+                failure_threshold: 3,
+                cooldown: Duration::from_millis(3),
+            },
+            plan: FaultPlan {
+                seed,
+                panic_model: "emg-q7".to_string(),
+                panic_from: 10,
+                panic_until: 25,
+                spike_prob: 0.002,
+                spike: Duration::from_millis(1),
+                nan_prob: 0.02,
+                kill_at_iters: vec![0],
+            },
+            ..Self::default()
+        }
+    }
+
+    /// Requests the schedule attempts (accepted + rejected).
+    pub fn total_requests(&self) -> usize {
+        self.clients * self.requests_per_client
+    }
+}
+
+/// What one chaos submitter thread observed.
+#[derive(Debug, Default)]
+struct ChaosStats {
+    accepted: u64,
+    replies_ok: u64,
+    replies_exec_failed: u64,
+    replies_timeout: u64,
+    replies_aborted: u64,
+    rejected_bad_input: u64,
+    shed_gave_up: u64,
+    quarantined_gave_up: u64,
+    quarantined_rejects: u64,
+    shed_retries: u64,
+    lost_replies: u64,
+    duplicate_replies: u64,
+    mismatches: u64,
+}
+
+impl ChaosStats {
+    fn absorb(&mut self, o: &ChaosStats) {
+        self.accepted += o.accepted;
+        self.replies_ok += o.replies_ok;
+        self.replies_exec_failed += o.replies_exec_failed;
+        self.replies_timeout += o.replies_timeout;
+        self.replies_aborted += o.replies_aborted;
+        self.rejected_bad_input += o.rejected_bad_input;
+        self.shed_gave_up += o.shed_gave_up;
+        self.quarantined_gave_up += o.quarantined_gave_up;
+        self.quarantined_rejects += o.quarantined_rejects;
+        self.shed_retries += o.shed_retries;
+        self.lost_replies += o.lost_replies;
+        self.duplicate_replies += o.duplicate_replies;
+        self.mismatches += o.mismatches;
+    }
+}
+
+/// One chaos submitter: submit its client range under the fault plan
+/// (poisoning the planned requests, retrying sheds and quarantine
+/// rejects within bounded budgets), then collect exactly one terminal
+/// reply per accepted ticket, classifying and bit-checking each.
+fn chaos_submitter(
+    svc: &InferenceService,
+    models: &[LoadModel],
+    plan: &FaultPlan,
+    clients: Range<usize>,
+    requests_per_client: usize,
+) -> ChaosStats {
+    let (tx, rx) = mpsc::channel();
+    let mut expect: HashMap<u64, (usize, usize)> = HashMap::new();
+    let mut stats = ChaosStats::default();
+    let mut poisoned: Vec<f32> = Vec::new();
+    for c in clients {
+        let mi = c % models.len();
+        let m = &models[mi];
+        for r in 0..requests_per_client {
+            let pi = pool_index(c, r, m.pool_samples);
+            let input = &m.pool_f[pi * m.n_in..(pi + 1) * m.n_in];
+            if m.plan.is_float() && plan.poison_input(c as u64, r as u64) {
+                // A poisoned request: submit-time validation must
+                // synchronously reject it, leaving nothing queued.
+                poisoned.clear();
+                poisoned.extend_from_slice(input);
+                poisoned[pi % m.n_in] = f32::NAN;
+                match svc.submit(m.id, c as u64, &poisoned, &tx) {
+                    Err(SubmitError::BadInput { .. }) => stats.rejected_bad_input += 1,
+                    // Anything else means validation regressed; the
+                    // mismatch count fails the run's bit_exact gate.
+                    other => {
+                        stats.mismatches += 1;
+                        if let Ok(ticket) = other {
+                            expect.insert(ticket, (mi, pi));
+                            stats.accepted += 1;
+                        }
+                    }
+                }
+                continue;
+            }
+            let mut shed_attempts = 0u32;
+            let mut quar_attempts = 0u32;
+            loop {
+                match svc.submit(m.id, c as u64, input, &tx) {
+                    Ok(ticket) => {
+                        expect.insert(ticket, (mi, pi));
+                        stats.accepted += 1;
+                        break;
+                    }
+                    Err(SubmitError::QueueFull { .. }) => {
+                        if shed_attempts >= MAX_SHED_RETRIES {
+                            stats.shed_gave_up += 1;
+                            break;
+                        }
+                        stats.shed_retries += 1;
+                        std::thread::sleep(shed_backoff(shed_attempts, c as u64));
+                        shed_attempts += 1;
+                    }
+                    Err(SubmitError::Quarantined { .. }) => {
+                        stats.quarantined_rejects += 1;
+                        if quar_attempts >= MAX_QUARANTINE_RETRIES {
+                            stats.quarantined_gave_up += 1;
+                            break;
+                        }
+                        std::thread::sleep(quarantine_backoff(quar_attempts, c as u64));
+                        quar_attempts += 1;
+                    }
+                    Err(e) => panic!("chaos submit failed unexpectedly: {e}"),
+                }
+            }
+        }
+    }
+    // Exactly one terminal reply per accepted ticket: removing from
+    // `expect` detects duplicates, what's left at the end is lost.
+    while !expect.is_empty() {
+        let Ok(reply) = rx.recv_timeout(Duration::from_secs(120)) else {
+            break;
+        };
+        let Some((mi, pi)) = expect.remove(&reply.ticket) else {
+            stats.duplicate_replies += 1;
+            continue;
+        };
+        let m = &models[mi];
+        match &reply.outcome {
+            Ok(out) => {
+                stats.replies_ok += 1;
+                let ok = match out {
+                    Output::F32(v) => v[..] == m.expected_f[pi * m.n_out..(pi + 1) * m.n_out],
+                    Output::Q(v) => v[..] == m.expected_q[pi * m.n_out..(pi + 1) * m.n_out],
+                };
+                if !ok {
+                    stats.mismatches += 1;
+                }
+            }
+            Err(InferError::ExecFailed { .. }) => stats.replies_exec_failed += 1,
+            Err(InferError::Timeout { .. }) => stats.replies_timeout += 1,
+            Err(InferError::Aborted { .. }) => stats.replies_aborted += 1,
+        }
+    }
+    stats.lost_replies += expect.len() as u64;
+    stats
+}
+
+/// Everything a chaos run measured — the in-memory form of
+/// `BENCH_chaos.json`.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    /// The configuration (including the fault plan) that produced this
+    /// report.
+    pub options: ChaosOptions,
+    /// Requests the schedule attempted.
+    pub total_requests: usize,
+    /// Requests accepted into queues (got a ticket).
+    pub accepted: u64,
+    /// Accepted requests answered with a successful output.
+    pub replies_ok: u64,
+    /// Accepted requests answered `ExecFailed` (their batch panicked).
+    pub replies_exec_failed: u64,
+    /// Accepted requests answered `Timeout` (stale past the budget).
+    pub replies_timeout: u64,
+    /// Accepted requests answered `Aborted` (dispatcher restart).
+    pub replies_aborted: u64,
+    /// Poisoned submits rejected by NaN/inf validation.
+    pub rejected_bad_input: u64,
+    /// Requests abandoned after the shed-retry budget.
+    pub shed_gave_up: u64,
+    /// Requests abandoned after the quarantine-retry budget.
+    pub quarantined_gave_up: u64,
+    /// Individual quarantine fast-rejections observed (each retried).
+    pub quarantined_rejects: u64,
+    /// Accepted requests that never received a terminal reply — the
+    /// invariant violation this harness exists to catch; must be 0.
+    pub lost_replies: u64,
+    /// Tickets that received more than one reply; must be 0.
+    pub duplicate_replies: u64,
+    /// Successful replies whose output diverged from the per-sample
+    /// reference (plus poisoned submits that were wrongly accepted);
+    /// must be 0.
+    pub mismatches: u64,
+    /// Circuit-breaker trips across all models.
+    pub quarantine_trips: u64,
+    /// Half-open probes admitted across all models.
+    pub quarantine_probes: u64,
+    /// Breaker recoveries across all models.
+    pub quarantine_recoveries: u64,
+    /// Times the watchdog respawned a dead dispatcher.
+    pub watchdog_restarts: u64,
+    /// Dispatcher loop iterations observed (liveness heartbeat).
+    pub dispatcher_heartbeats: u64,
+    /// Batch executions that panicked (caught at the batch boundary).
+    pub exec_failures: u64,
+    /// Median latency (µs) of successful replies, all models.
+    pub p50_us: u64,
+    /// 99th-percentile latency (µs) of successful replies, all models.
+    pub p99_us: u64,
+    /// p99 (µs) of successful replies on the fault-injected model.
+    pub p99_us_faulted_model: u64,
+    /// p99 (µs) of successful replies on the healthy models.
+    pub p99_us_healthy_models: u64,
+    /// Wall time of the chaos phase (first submit → last reply).
+    pub wall_seconds: f64,
+    /// `lost_replies == 0 && duplicate_replies == 0` and the service's
+    /// own counters agree: `completed + failed == accepted`.
+    pub accounting_ok: bool,
+    /// `mismatches == 0`: no fault corrupted any delivered answer.
+    pub bit_exact_ok: bool,
+}
+
+/// Run the chaos harness: build the load models, start a service with
+/// the injected [`FaultPlan`], replay the schedule, and audit the
+/// fault-tolerance contract. Errors only on setup failure — invariant
+/// violations land in the report so the caller can serialize it first,
+/// then fail via [`ChaosReport::check`].
+pub fn run(opts: &ChaosOptions) -> Result<ChaosReport> {
+    ensure!(opts.clients > 0 && opts.requests_per_client > 0, "empty chaos configuration");
+    let models = build_models(opts.seed, 40)?;
+    let registry = Arc::new(ModelRegistry::with_breaker(opts.breaker.clone()));
+    for m in &models {
+        registry.register_plan(m.id, m.plan.clone())?;
+    }
+    let svc = InferenceService::start_with_faults(registry, &opts.policy, Some(opts.plan.clone()));
+
+    let submitters = opts.submitters.clamp(1, opts.clients);
+    let t0 = Instant::now();
+    let per_thread: Vec<ChaosStats> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(submitters);
+        let base = opts.clients / submitters;
+        let extra = opts.clients % submitters;
+        let mut start = 0usize;
+        for i in 0..submitters {
+            let len = base + usize::from(i < extra);
+            let range = start..start + len;
+            start += len;
+            let svc_ref = &svc;
+            let models_ref = &models;
+            let plan_ref = &opts.plan;
+            let rpc = opts.requests_per_client;
+            handles.push(s.spawn(move || chaos_submitter(svc_ref, models_ref, plan_ref, range, rpc)));
+        }
+        handles
+            .into_iter()
+            // A panicking submitter is a harness bug, not an injected
+            // fault (faults live inside the service); propagate it.
+            .map(|h| h.join().expect("chaos submitter thread"))
+            .collect()
+    });
+    let wall_seconds = t0.elapsed().as_secs_f64();
+    let snap = svc.shutdown();
+
+    let mut stats = ChaosStats::default();
+    for s in &per_thread {
+        stats.absorb(s);
+    }
+    Ok(assemble_report(opts, stats, &snap, &models, wall_seconds))
+}
+
+fn assemble_report(
+    opts: &ChaosOptions,
+    stats: ChaosStats,
+    snap: &MetricsSnapshot,
+    models: &[LoadModel],
+    wall_seconds: f64,
+) -> ChaosReport {
+    let merged = snap.merged_latency();
+    let faulted = &opts.plan.panic_model;
+    let p99_faulted = snap
+        .models
+        .get(faulted)
+        .map(|m| m.latency.p99())
+        .unwrap_or(0);
+    let mut healthy = crate::service::metrics::LatencyHistogram::new();
+    for m in models {
+        if m.id != faulted {
+            if let Some(mm) = snap.models.get(m.id) {
+                healthy.merge(&mm.latency);
+            }
+        }
+    }
+    let exec_failures: u64 = snap.models.values().map(|m| m.exec_failures).sum();
+    let probes: u64 = snap.models.values().map(|m| m.quarantine_probes).sum();
+    let accounting_ok = stats.lost_replies == 0
+        && stats.duplicate_replies == 0
+        && snap.total_completed() + snap.total_failed() == stats.accepted;
+    ChaosReport {
+        options: opts.clone(),
+        total_requests: opts.total_requests(),
+        accepted: stats.accepted,
+        replies_ok: stats.replies_ok,
+        replies_exec_failed: stats.replies_exec_failed,
+        replies_timeout: stats.replies_timeout,
+        replies_aborted: stats.replies_aborted,
+        rejected_bad_input: stats.rejected_bad_input,
+        shed_gave_up: stats.shed_gave_up,
+        quarantined_gave_up: stats.quarantined_gave_up,
+        quarantined_rejects: stats.quarantined_rejects,
+        lost_replies: stats.lost_replies,
+        duplicate_replies: stats.duplicate_replies,
+        mismatches: stats.mismatches,
+        quarantine_trips: snap.total_quarantine_trips(),
+        quarantine_probes: probes,
+        quarantine_recoveries: snap.total_quarantine_recoveries(),
+        watchdog_restarts: snap.watchdog_restarts,
+        dispatcher_heartbeats: snap.dispatcher_heartbeats,
+        exec_failures,
+        p50_us: merged.p50(),
+        p99_us: merged.p99(),
+        p99_us_faulted_model: p99_faulted,
+        p99_us_healthy_models: healthy.p99(),
+        wall_seconds,
+        accounting_ok,
+        bit_exact_ok: stats.mismatches == 0,
+    }
+}
+
+impl ChaosReport {
+    /// Error on the first violated fault-tolerance invariant. Called by
+    /// the CLI *after* the report has been written, so a red run still
+    /// leaves the full `BENCH_chaos.json` behind for diagnosis.
+    pub fn check(&self) -> Result<()> {
+        ensure!(
+            self.accounting_ok,
+            "reply accounting broken: {} lost, {} duplicate replies \
+             (accepted {}, terminal {})",
+            self.lost_replies,
+            self.duplicate_replies,
+            self.accepted,
+            self.replies_ok + self.replies_exec_failed + self.replies_timeout + self.replies_aborted,
+        );
+        ensure!(
+            self.bit_exact_ok,
+            "{} successful replies diverged from the serial reference under faults",
+            self.mismatches
+        );
+        let plan = &self.options.plan;
+        if plan.panic_until > plan.panic_from && !plan.panic_model.is_empty() {
+            ensure!(self.exec_failures > 0, "panic window injected but no execution failed");
+            ensure!(self.quarantine_trips > 0, "execution failures never tripped the breaker");
+            ensure!(
+                self.quarantine_recoveries > 0,
+                "the breaker tripped but never recovered ({} trips, {} probes)",
+                self.quarantine_trips,
+                self.quarantine_probes
+            );
+        }
+        if !plan.kill_at_iters.is_empty() {
+            ensure!(
+                self.watchdog_restarts > 0,
+                "dispatcher kills injected but the watchdog never restarted it"
+            );
+        }
+        if plan.nan_prob > 0.0 {
+            ensure!(
+                self.rejected_bad_input > 0,
+                "poisoned inputs injected but none was rejected at submit"
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialize as the `BENCH_chaos.json` document (schema
+    /// `fann-on-mcu/bench-chaos/v1`; field dictionary in the README
+    /// "Fault tolerance" section).
+    pub fn to_json(&self) -> Json {
+        let o = &self.options;
+        let p = &o.policy;
+        let plan = &o.plan;
+        Json::obj()
+            .field("schema", "fann-on-mcu/bench-chaos/v1")
+            .field("seed", Json::Int(o.seed as i64))
+            .field("clients", o.clients)
+            .field("requests_per_client", o.requests_per_client)
+            .field("total_requests", self.total_requests)
+            .field(
+                "policy",
+                Json::obj()
+                    .field("max_batch", p.max_batch)
+                    .field("max_delay_us", p.max_delay.as_micros() as usize)
+                    .field("queue_capacity", p.queue_capacity)
+                    .field("exec_workers", p.exec_workers)
+                    .field(
+                        "request_budget_us",
+                        Json::Int(p.request_budget.unwrap_or(Duration::ZERO).as_micros() as i64),
+                    )
+                    .field("submitters", o.submitters)
+                    .build(),
+            )
+            .field(
+                "breaker",
+                Json::obj()
+                    .field("failure_threshold", Json::Int(i64::from(o.breaker.failure_threshold)))
+                    .field("cooldown_us", Json::Int(o.breaker.cooldown.as_micros() as i64))
+                    .build(),
+            )
+            .field(
+                "fault_plan",
+                Json::obj()
+                    .field("panic_model", plan.panic_model.as_str())
+                    .field("panic_from", Json::Int(plan.panic_from as i64))
+                    .field("panic_until", Json::Int(plan.panic_until as i64))
+                    .field("spike_prob", plan.spike_prob)
+                    .field("spike_us", Json::Int(plan.spike.as_micros() as i64))
+                    .field("nan_prob", plan.nan_prob)
+                    .field(
+                        "kill_at_iters",
+                        Json::Arr(
+                            plan.kill_at_iters
+                                .iter()
+                                .map(|&i| Json::Int(i as i64))
+                                .collect::<Vec<_>>(),
+                        ),
+                    )
+                    .build(),
+            )
+            .field("accepted", Json::Int(self.accepted as i64))
+            .field(
+                "replies",
+                Json::obj()
+                    .field("ok", Json::Int(self.replies_ok as i64))
+                    .field("exec_failed", Json::Int(self.replies_exec_failed as i64))
+                    .field("timeout", Json::Int(self.replies_timeout as i64))
+                    .field("aborted", Json::Int(self.replies_aborted as i64))
+                    .build(),
+            )
+            .field(
+                "rejects",
+                Json::obj()
+                    .field("bad_input", Json::Int(self.rejected_bad_input as i64))
+                    .field("shed_gave_up", Json::Int(self.shed_gave_up as i64))
+                    .field("quarantined_gave_up", Json::Int(self.quarantined_gave_up as i64))
+                    .field("quarantined_rejects", Json::Int(self.quarantined_rejects as i64))
+                    .build(),
+            )
+            .field("lost_replies", Json::Int(self.lost_replies as i64))
+            .field("duplicate_replies", Json::Int(self.duplicate_replies as i64))
+            .field("mismatches", Json::Int(self.mismatches as i64))
+            .field(
+                "quarantine",
+                Json::obj()
+                    .field("trips", Json::Int(self.quarantine_trips as i64))
+                    .field("probes", Json::Int(self.quarantine_probes as i64))
+                    .field("recoveries", Json::Int(self.quarantine_recoveries as i64))
+                    .build(),
+            )
+            .field("watchdog_restarts", Json::Int(self.watchdog_restarts as i64))
+            .field("dispatcher_heartbeats", Json::Int(self.dispatcher_heartbeats as i64))
+            .field("exec_failures", Json::Int(self.exec_failures as i64))
+            .field("p50_us", Json::Int(self.p50_us as i64))
+            .field("p99_us", Json::Int(self.p99_us as i64))
+            .field("p99_us_faulted_model", Json::Int(self.p99_us_faulted_model as i64))
+            .field("p99_us_healthy_models", Json::Int(self.p99_us_healthy_models as i64))
+            .field("wall_seconds", self.wall_seconds)
+            .field("accounting_ok", self.accounting_ok)
+            .field("bit_exact_ok", self.bit_exact_ok)
+            .build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A micro chaos run exercising every fault family end to end:
+    /// panic window → trip → probes → recovery, a dispatcher kill at
+    /// iteration 0 → watchdog restart, and NaN poisoning → submit
+    /// rejection — all deterministic from the seed.
+    #[test]
+    fn micro_chaos_run_holds_every_invariant() {
+        let opts = ChaosOptions {
+            clients: 90,
+            requests_per_client: 2,
+            seed: 11,
+            submitters: 2,
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_micros(200),
+                queue_capacity: 128,
+                request_budget: Some(Duration::from_secs(5)),
+                ..BatchPolicy::default()
+            },
+            breaker: BreakerPolicy {
+                failure_threshold: 2,
+                cooldown: Duration::from_millis(1),
+            },
+            plan: FaultPlan {
+                seed: 11,
+                panic_model: "emg-q7".to_string(),
+                panic_from: 2,
+                panic_until: 4,
+                nan_prob: 0.2,
+                kill_at_iters: vec![0],
+                ..FaultPlan::default()
+            },
+        };
+        let report = run(&opts).unwrap();
+        // The harness's own schedule knows exactly how many requests
+        // were poisoned; validation must have rejected each one.
+        let models = build_models(opts.seed, 40).unwrap();
+        let expected_poisoned: u64 = (0..opts.clients)
+            .filter(|c| models[c % models.len()].plan.is_float())
+            .map(|c| {
+                (0..opts.requests_per_client)
+                    .filter(|&r| opts.plan.poison_input(c as u64, r as u64))
+                    .count() as u64
+            })
+            .sum();
+        assert_eq!(report.rejected_bad_input, expected_poisoned);
+        assert!(expected_poisoned > 0, "seed 11 poisons at least one request");
+        assert_eq!(report.lost_replies, 0);
+        assert_eq!(report.duplicate_replies, 0);
+        assert_eq!(report.mismatches, 0);
+        assert!(report.quarantine_trips > 0);
+        assert!(report.quarantine_recoveries > 0);
+        assert!(report.watchdog_restarts >= 1);
+        assert!(report.accounting_ok && report.bit_exact_ok);
+        report.check().unwrap();
+        let json = report.to_json().to_pretty();
+        for field in [
+            "\"schema\"",
+            "\"fault_plan\"",
+            "\"lost_replies\"",
+            "\"duplicate_replies\"",
+            "\"quarantine\"",
+            "\"watchdog_restarts\"",
+            "\"accounting_ok\"",
+            "\"bit_exact_ok\"",
+        ] {
+            assert!(json.contains(field), "missing {field} in {json}");
+        }
+    }
+
+    #[test]
+    fn quarantine_backoff_stays_in_band() {
+        for attempt in 0..32 {
+            let d = quarantine_backoff(attempt, 7).as_micros() as u64;
+            assert!((300..600).contains(&d), "attempt {attempt}: {d}");
+        }
+    }
+}

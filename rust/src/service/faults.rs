@@ -1,0 +1,190 @@
+//! Seeded, deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a pure description of *which* faults fire *when*:
+//! every decision is a deterministic function of (plan, model,
+//! sequence number), so a chaos run is exactly reproducible from its
+//! seed — the same executions panic, the same batches get latency
+//! spikes, the same requests carry poisoned inputs, and the dispatcher
+//! dies at the same loop iterations. Nothing here touches a clock or
+//! an RNG stream at decision time; randomness is a hash of the seed.
+//!
+//! The plan is consulted from three places:
+//!
+//! * [`InferenceService`](super::InferenceService) execution — per
+//!   model, per execution attempt: [`FaultPlan::should_panic`] (the
+//!   injected kernel panic that panic isolation must contain) and
+//!   [`FaultPlan::spike_for`] (an injected slow batch).
+//! * The dispatcher loop — per iteration:
+//!   [`FaultPlan::should_kill_dispatcher`] panics the dispatcher
+//!   *outside* any batch scope, exercising the watchdog respawn path
+//!   without ever holding un-replied requests.
+//! * The chaos load generator — per request:
+//!   [`FaultPlan::poison_input`] decides which submitted samples carry
+//!   a NaN, which the submit-time input validation must reject.
+
+use std::time::Duration;
+
+/// A deterministic seeded schedule of injected faults. See the
+/// [module docs](self) for where each knob is consulted.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Seed for the probabilistic faults (spikes, poisoned inputs).
+    pub seed: u64,
+    /// The model whose executions fail during the panic window.
+    pub panic_model: String,
+    /// Injected-panic window over `panic_model`'s execution-attempt
+    /// sequence numbers: attempts in `[panic_from, panic_until)`
+    /// panic. Probe executions advance the sequence too, so a
+    /// quarantined model's failed probes walk it toward the window's
+    /// end — and recovery.
+    pub panic_from: u64,
+    /// Exclusive end of the panic window.
+    pub panic_until: u64,
+    /// Probability that any batch execution (any model) gets an
+    /// injected latency spike.
+    pub spike_prob: f64,
+    /// Duration of one injected latency spike.
+    pub spike: Duration,
+    /// Probability that a chaos load-generator request carries a
+    /// NaN-poisoned input (only meaningful for f32 models — Q models
+    /// quantize at submit).
+    pub nan_prob: f64,
+    /// Dispatcher loop iterations at which an injected panic kills the
+    /// dispatcher (the watchdog must fail pending requests and
+    /// respawn it). Iteration numbers are global across respawns, so
+    /// each listed iteration kills at most once.
+    pub kill_at_iters: Vec<u64>,
+}
+
+impl Default for FaultPlan {
+    /// A plan that injects nothing (empty panic window, zero
+    /// probabilities, no kills) — useful as a base for `..` updates.
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            panic_model: String::new(),
+            panic_from: 0,
+            panic_until: 0,
+            spike_prob: 0.0,
+            spike: Duration::ZERO,
+            nan_prob: 0.0,
+            kill_at_iters: Vec::new(),
+        }
+    }
+}
+
+/// splitmix64 finalizer — a cheap, well-mixed hash for fault decisions.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over the model id, so per-model fault streams differ.
+fn model_tag(model: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in model.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Map a hash to `[0, 1)` for probability thresholds.
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultPlan {
+    /// Whether `model`'s execution attempt number `seq` must panic.
+    pub fn should_panic(&self, model: &str, seq: u64) -> bool {
+        model == self.panic_model && seq >= self.panic_from && seq < self.panic_until
+    }
+
+    /// The injected latency spike for `model`'s execution attempt
+    /// `seq`, if the seeded coin says so.
+    pub fn spike_for(&self, model: &str, seq: u64) -> Option<Duration> {
+        if self.spike_prob <= 0.0 || self.spike.is_zero() {
+            return None;
+        }
+        let h = mix(self.seed ^ model_tag(model) ^ seq.wrapping_mul(0x2545_F491_4F6C_DD1D));
+        (unit(h) < self.spike_prob).then_some(self.spike)
+    }
+
+    /// Whether dispatcher loop iteration `iter` must panic (outside
+    /// any batch scope — no request is ever held across this panic).
+    pub fn should_kill_dispatcher(&self, iter: u64) -> bool {
+        self.kill_at_iters.contains(&iter)
+    }
+
+    /// Whether the chaos load generator poisons client `client`'s
+    /// request number `req` with a NaN input.
+    pub fn poison_input(&self, client: u64, req: u64) -> bool {
+        if self.nan_prob <= 0.0 {
+            return false;
+        }
+        let h = mix(self.seed ^ client.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ req.rotate_left(17));
+        unit(h) < self.nan_prob
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> FaultPlan {
+        FaultPlan {
+            seed: 42,
+            panic_model: "emg-q7".to_string(),
+            panic_from: 10,
+            panic_until: 20,
+            spike_prob: 0.25,
+            spike: Duration::from_micros(100),
+            nan_prob: 0.1,
+            kill_at_iters: vec![3, 7],
+        }
+    }
+
+    #[test]
+    fn panic_window_is_half_open_and_model_scoped() {
+        let p = plan();
+        assert!(!p.should_panic("emg-q7", 9));
+        assert!(p.should_panic("emg-q7", 10));
+        assert!(p.should_panic("emg-q7", 19));
+        assert!(!p.should_panic("emg-q7", 20));
+        assert!(!p.should_panic("ecg-q32", 15));
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_seed_sensitive() {
+        let p = plan();
+        let spikes: Vec<bool> = (0..64).map(|s| p.spike_for("m", s).is_some()).collect();
+        assert_eq!(
+            spikes,
+            (0..64).map(|s| p.spike_for("m", s).is_some()).collect::<Vec<_>>(),
+            "same plan, same decisions"
+        );
+        assert!(spikes.iter().any(|&b| b), "spike_prob 0.25 over 64 attempts fires");
+        assert!(!spikes.iter().all(|&b| b), "...but not always");
+        let reseeded = FaultPlan { seed: 43, ..plan() };
+        let other: Vec<bool> = (0..64).map(|s| reseeded.spike_for("m", s).is_some()).collect();
+        assert_ne!(spikes, other, "different seed, different stream");
+
+        let poisons: Vec<bool> = (0..256).map(|r| p.poison_input(5, r)).collect();
+        assert!(poisons.iter().any(|&b| b));
+        assert!(!poisons.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn default_plan_injects_nothing() {
+        let p = FaultPlan::default();
+        assert!(!p.should_panic("", 0));
+        assert!(p.spike_for("m", 0).is_none());
+        assert!(!p.should_kill_dispatcher(0));
+        assert!(!p.poison_input(0, 0));
+        let p = plan();
+        assert!(p.should_kill_dispatcher(3) && p.should_kill_dispatcher(7));
+        assert!(!p.should_kill_dispatcher(4));
+    }
+}

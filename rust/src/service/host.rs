@@ -1,10 +1,11 @@
 //! The long-running inference host: submit → coalesce → execute →
-//! reply.
+//! reply, built to survive faults.
 //!
 //! Clients call [`InferenceService::submit`] with one sample and a
-//! reply channel; the service validates and (for Q-format models)
-//! quantizes the input up front, enqueues it on the model's bounded
-//! [`MicroBatchQueue`], and a single dispatcher coalesces each queue
+//! reply channel; the service validates (width, NaN/inf on the f32
+//! path) and (for Q-format models) quantizes the input up front,
+//! consults the model's circuit breaker, enqueues it on the model's
+//! bounded [`MicroBatchQueue`], and a dispatcher coalesces each queue
 //! into one `run_batch_*_into` call — the same zero-allocation compiled
 //! path the throughput harness drives — then scatters the outputs back
 //! to each client's channel. One persistent [`ExecEngine`] (plan
@@ -12,36 +13,65 @@
 //! execute path allocates nothing in steady state beyond each reply's
 //! output vector.
 //!
+//! **The terminal-reply invariant.** Every accepted request gets
+//! exactly one terminal [`Reply`] — a successful [`Output`], or a typed
+//! [`InferError`] (`ExecFailed` when its batch panicked, `Timeout` when
+//! it went stale past [`BatchPolicy::request_budget`], `Aborted` when a
+//! dispatcher restart failed it before execution). Batch execution runs
+//! under `catch_unwind`, so a panicking kernel fails only its own
+//! batch; the started-mode dispatcher runs under a watchdog supervisor
+//! that fails (never leaks) pending requests and respawns the
+//! dispatcher when it dies. `rust/tests/prop_service_faults.rs` pins
+//! the invariant under randomized fault schedules.
+//!
 //! Two operating modes share all of that machinery:
 //!
-//! * **Started** ([`InferenceService::start`]): a dispatcher thread
-//!   sleeps until the nearest queue deadline (or a submit wakeup) and
-//!   flushes whatever is ready. [`shutdown`](InferenceService::shutdown)
-//!   — or dropping the service — drains every queue before the thread
-//!   exits, so accepted requests always get a reply.
-//! * **Manual** ([`InferenceService::new`]): no thread; tests pump the
+//! * **Started** ([`InferenceService::start`]): a watchdog thread
+//!   supervises the dispatcher thread, which sleeps until the nearest
+//!   queue deadline (or a submit wakeup) and flushes whatever is
+//!   ready. [`shutdown`](InferenceService::shutdown) — or dropping the
+//!   service — drains every queue before the threads exit, so accepted
+//!   requests always get a reply.
+//! * **Manual** ([`InferenceService::new`]): no threads; tests pump the
 //!   scheduler explicitly with [`pump_at`](InferenceService::pump_at) /
-//!   [`drain`](InferenceService::drain), making deadline-flush and
-//!   backpressure behavior fully deterministic (no sleeps, no races).
+//!   [`drain`](InferenceService::drain) and submit with an explicit
+//!   clock via [`submit_at`](InferenceService::submit_at), making every
+//!   flush, timeout, and quarantine decision fully deterministic (no
+//!   sleeps, no races).
 //!
 //! Batched execution is bit-identical per sample to single-sample runs
 //! (the batch-consistency invariant the kernel tests pin), so the
-//! micro-batcher can never change a client's answer — only its latency.
+//! micro-batcher can never change a client's answer — only its latency
+//! or, under faults, whether a typed error arrives instead.
+//!
+//! Lock order is strictly `state` → `engine` → `metrics` (the breaker's
+//! health lock nests inside none of them), never the reverse, so
+//! submitters, the dispatcher, and the watchdog cannot deadlock.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::bench::batch;
-use crate::kernels::PlanScratch;
+use crate::kernels::{ExecPlan, PlanScratch};
 use crate::quantize::quantize;
 
+use super::faults::FaultPlan;
 use super::metrics::MetricsSnapshot;
-use super::queue::{Batch, FlushReason, MicroBatchQueue};
-use super::registry::ModelRegistry;
-use super::{BatchPolicy, SubmitError};
+use super::queue::{Batch, MicroBatchQueue};
+use super::registry::{Admission, BreakerEvent, ModelRegistry};
+use super::{BatchPolicy, InferError, SubmitError};
+
+/// Lock a mutex, recovering from poison: the protected structures here
+/// (queues, metrics, grow-only engine buffers) are valid after any
+/// panic — every writer either completes a whole update or leaves data
+/// that the next batch overwrites — so a poisoned lock must not
+/// cascade a dead batch into a dead service.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// One model output in the model's native representation: `F32` for
 /// float plans, `Q` (fixed-point at the plan's decimal point) for
@@ -56,20 +86,35 @@ pub enum Output {
     Q(Vec<i32>),
 }
 
-/// What a client receives on its reply channel for one accepted
-/// request.
+/// The one terminal message a client receives on its reply channel for
+/// each accepted request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Reply {
     /// The ticket [`InferenceService::submit`] returned for this
     /// request.
     pub ticket: u64,
-    /// The model outputs for the submitted sample.
-    pub output: Output,
-    /// Enqueue → reply latency in microseconds (includes queueing and
-    /// execution).
+    /// The model outputs for the submitted sample, or the typed reason
+    /// the request failed. Exactly one such reply arrives per accepted
+    /// request — success, exec failure, timeout, or abort.
+    pub outcome: Result<Output, InferError>,
+    /// Enqueue → reply latency in microseconds (includes queueing and,
+    /// for executed requests, execution).
     pub latency_us: u64,
-    /// Size of the coalesced batch this request rode in.
+    /// Size of the coalesced batch this request rode in; `0` when the
+    /// request never executed (timeout or abort).
     pub batch_size: usize,
+}
+
+impl Reply {
+    /// Whether this reply carries a successful output.
+    pub fn is_ok(&self) -> bool {
+        self.outcome.is_ok()
+    }
+
+    /// The successful output, if any.
+    pub fn output(&self) -> Option<&Output> {
+        self.outcome.as_ref().ok()
+    }
 }
 
 /// A validated request waiting in a model queue. Q-format inputs are
@@ -81,6 +126,9 @@ struct Pending {
     tenant: u64,
     input: PendingInput,
     reply: mpsc::Sender<Reply>,
+    /// This request is the model's half-open quarantine probe; if it
+    /// dies without executing, its probe slot must be released.
+    is_probe: bool,
 }
 
 enum PendingInput {
@@ -119,6 +167,9 @@ impl SchedState {
             }
         }
         let id = best_id?.clone();
+        // Invariant: `id` was produced by the loop above from this very
+        // map, and a queue that reported ready stays ready until
+        // mutated — both lookups are locally provable.
         let q = self.queues.get_mut(&id).expect("picked id exists");
         let b = q.take(now).expect("picked queue is ready");
         let depth = q.len();
@@ -147,12 +198,15 @@ impl SchedState {
 /// Persistent per-dispatcher execution state: the plan scratch plus
 /// grow-only gather/output buffers, reused across every batch of every
 /// model — the execute path's zero-steady-state-allocation guarantee.
+/// Also carries the per-model execution-attempt counters that key the
+/// deterministic [`FaultPlan`] decisions.
 struct ExecEngine {
     scratch: PlanScratch,
     in_f: Vec<f32>,
     in_q: Vec<i32>,
     out_f: Vec<f32>,
     out_q: Vec<i32>,
+    exec_seq: BTreeMap<String, u64>,
 }
 
 impl ExecEngine {
@@ -163,6 +217,7 @@ impl ExecEngine {
             in_q: Vec::new(),
             out_f: Vec::new(),
             out_q: Vec::new(),
+            exec_seq: BTreeMap::new(),
         }
     }
 }
@@ -170,97 +225,276 @@ impl ExecEngine {
 struct Inner {
     registry: Arc<ModelRegistry>,
     policy: BatchPolicy,
+    faults: Option<FaultPlan>,
     state: Mutex<SchedState>,
     wake: Condvar,
     metrics: Mutex<MetricsSnapshot>,
     engine: Mutex<ExecEngine>,
     next_ticket: AtomicU64,
     shutdown: AtomicBool,
+    /// Dispatcher loop iterations, global across respawns — both the
+    /// heartbeat the watchdog surfaces and the key for injected
+    /// dispatcher kills.
+    dispatch_iters: AtomicU64,
+    /// Times the watchdog respawned a dead dispatcher.
+    restarts: AtomicU64,
 }
 
 impl Inner {
-    /// Execute one coalesced batch and reply to every request in it.
-    /// Called with no lock held; takes `engine`, then (after release)
-    /// `metrics` — never `state`, so it cannot deadlock with submitters.
-    fn execute_batch(&self, model_id: &str, batch_of: Batch<Pending>, depth_after: usize) {
+    /// Execute one coalesced batch and send exactly one terminal reply
+    /// to every request in it: stale requests get `Timeout`, a caught
+    /// execution panic fails the remainder with `ExecFailed`, success
+    /// replies carry outputs. `now` is the scheduling clock the batch
+    /// was taken at — timeout and breaker decisions use it, so manual
+    /// mode stays on one virtual timeline. Called with no lock held;
+    /// takes `engine`, then (after release) `metrics` — never `state`,
+    /// so it cannot deadlock with submitters.
+    fn execute_batch(
+        &self,
+        model_id: &str,
+        batch_of: Batch<Pending>,
+        depth_after: usize,
+        now: Instant,
+    ) {
+        let reason = batch_of.reason;
         let Some(model) = self.registry.get(model_id) else {
             // Unreachable today (models are never deregistered), but a
-            // dropped batch must not hang clients silently: with no
-            // reply possible, dropping the senders closes the channels.
+            // dropped batch must not hang clients silently: every
+            // request still gets its terminal reply.
+            self.abort_items(model_id, batch_of.items, &format!("model {model_id:?} missing"));
             return;
         };
         let plan = model.plan();
-        let n = batch_of.items.len();
-        if n == 0 {
-            return;
+
+        // Stale requests answered Timeout instead of executed.
+        let budget = self.policy.request_budget;
+        let (live, expired) = batch_of.split_expired(budget, now);
+        let budget_us = budget.unwrap_or(Duration::ZERO).as_micros() as u64;
+        for (p, enq) in &expired {
+            if p.is_probe {
+                self.registry.release_probe(model_id);
+            }
+            let waited = now.duration_since(*enq).as_micros() as u64;
+            send_reply(p, Err(InferError::Timeout { waited_us: waited, budget_us }), waited, 0);
         }
-        let n_in = plan.num_inputs();
-        let n_out = plan.num_outputs();
+
+        let n = live.len();
         let workers = self.policy.exec_workers;
-
-        let mut guard = self.engine.lock().expect("engine lock");
-        let engine = &mut *guard;
-        let done_at;
-        if plan.is_float() {
-            grow(&mut engine.in_f, n * n_in, 0.0);
-            grow(&mut engine.out_f, n * n_out, 0.0);
-            for (i, (p, _)) in batch_of.items.iter().enumerate() {
-                let PendingInput::F32(v) = &p.input else {
-                    unreachable!("f32 plan queued a Q input");
-                };
-                engine.in_f[i * n_in..(i + 1) * n_in].copy_from_slice(v);
+        let mut exec_error: Option<InferError> = None;
+        let mut outputs: Vec<Output> = Vec::new();
+        let mut done_at = now;
+        if n > 0 {
+            let mut guard = lock_recover(&self.engine);
+            let engine = &mut *guard;
+            let seq = {
+                let s = engine.exec_seq.entry(model_id.to_string()).or_insert(0);
+                let cur = *s;
+                *s += 1;
+                cur
+            };
+            if let Some(spike) = self.faults.as_ref().and_then(|f| f.spike_for(model_id, seq)) {
+                std::thread::sleep(spike);
             }
-            let xs = &engine.in_f[..n * n_in];
-            let out = &mut engine.out_f[..n * n_out];
-            if workers > 1 {
-                // The dispatcher is a plain thread (never a pool
-                // worker), so the row-split driver's no-nesting rule
-                // holds by construction.
-                batch::run_plan_rowsplit_into(plan, xs, n, workers, out);
-            } else {
-                plan.run_batch_f32_into(xs, n, &mut engine.scratch, out);
-            }
+            let inject = self
+                .faults
+                .as_ref()
+                .is_some_and(|f| f.should_panic(model_id, seq));
+            // Panic isolation: a panicking kernel (or injected fault)
+            // fails only this batch. The engine guard outlives the
+            // catch, so the engine mutex is never poisoned by a caught
+            // panic; its grow-only buffers are overwritten by the next
+            // batch regardless of where this one stopped.
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if inject {
+                    panic!("injected exec fault (model {model_id}, exec #{seq})");
+                }
+                run_batch_kernels(engine, plan, &live, workers)
+            }));
             done_at = Instant::now();
-            for (i, (p, enq)) in batch_of.items.iter().enumerate() {
-                let out = engine.out_f[i * n_out..(i + 1) * n_out].to_vec();
-                send_reply(p, enq, done_at, Output::F32(out), n);
-            }
-        } else {
-            grow(&mut engine.in_q, n * n_in, 0);
-            grow(&mut engine.out_q, n * n_out, 0);
-            for (i, (p, _)) in batch_of.items.iter().enumerate() {
-                let PendingInput::Q(v) = &p.input else {
-                    unreachable!("Q plan queued an f32 input");
-                };
-                engine.in_q[i * n_in..(i + 1) * n_in].copy_from_slice(v);
-            }
-            let xs = &engine.in_q[..n * n_in];
-            let out = &mut engine.out_q[..n * n_out];
-            if workers > 1 {
-                batch::run_plan_q_rowsplit_into(plan, xs, n, workers, out);
-            } else {
-                plan.run_batch_q_into(xs, n, &mut engine.scratch, out);
-            }
-            done_at = Instant::now();
-            for (i, (p, enq)) in batch_of.items.iter().enumerate() {
-                let out = engine.out_q[i * n_out..(i + 1) * n_out].to_vec();
-                send_reply(p, enq, done_at, Output::Q(out), n);
+            match run {
+                Ok(outs) => outputs = outs,
+                Err(payload) => {
+                    exec_error = Some(InferError::ExecFailed {
+                        detail: panic_detail(payload.as_ref()),
+                    });
+                }
             }
         }
-        drop(guard);
 
-        let mut metrics = self.metrics.lock().expect("metrics lock");
+        // One breaker observation per execution attempt, on the same
+        // clock the batch was scheduled at.
+        let event = if n > 0 {
+            self.registry.note_exec(model_id, exec_error.is_none(), now)
+        } else {
+            BreakerEvent::None
+        };
+
+        match &exec_error {
+            None => {
+                for ((p, enq), out) in live.iter().zip(outputs) {
+                    let latency = done_at.duration_since(*enq).as_micros() as u64;
+                    send_reply(p, Ok(out), latency, n);
+                }
+            }
+            Some(err) => {
+                for (p, enq) in &live {
+                    let latency = done_at.duration_since(*enq).as_micros() as u64;
+                    send_reply(p, Err(err.clone()), latency, n);
+                }
+            }
+        }
+
+        let mut metrics = lock_recover(&self.metrics);
         {
             let m = metrics.models.entry(model_id.to_string()).or_default();
-            m.note_flush(batch_of.reason, n);
             m.note_depth(depth_after);
-            for (_, enq) in &batch_of.items {
-                m.latency.record(done_at.duration_since(*enq).as_micros() as u64);
+            m.timeouts += expired.len() as u64;
+            match &exec_error {
+                None if n > 0 => {
+                    m.note_flush(reason, n);
+                    for (_, enq) in &live {
+                        m.latency.record(done_at.duration_since(*enq).as_micros() as u64);
+                    }
+                }
+                Some(_) => {
+                    m.exec_failures += 1;
+                    m.failed += n as u64;
+                }
+                None => {}
+            }
+            match event {
+                BreakerEvent::Tripped => m.quarantine_trips += 1,
+                BreakerEvent::Recovered => m.quarantine_recoveries += 1,
+                BreakerEvent::None => {}
             }
         }
-        for (p, _) in &batch_of.items {
-            metrics.tenants.entry(p.tenant).or_default().completed += 1;
+        for (p, _) in &expired {
+            metrics.tenants.entry(p.tenant).or_default().failed += 1;
         }
+        for (p, _) in &live {
+            let t = metrics.tenants.entry(p.tenant).or_default();
+            if exec_error.is_none() {
+                t.completed += 1;
+            } else {
+                t.failed += 1;
+            }
+        }
+    }
+
+    /// Reply `Aborted` to a set of requests that will never execute,
+    /// releasing any probe slot among them and keeping the counters
+    /// consistent.
+    fn abort_items(&self, model_id: &str, items: Vec<(Pending, Instant)>, detail: &str) {
+        if items.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        for (p, enq) in &items {
+            if p.is_probe {
+                self.registry.release_probe(model_id);
+            }
+            let waited = now.duration_since(*enq).as_micros() as u64;
+            send_reply(p, Err(InferError::Aborted { detail: detail.to_string() }), waited, 0);
+        }
+        let mut metrics = lock_recover(&self.metrics);
+        metrics
+            .models
+            .entry(model_id.to_string())
+            .or_default()
+            .aborted += items.len() as u64;
+        for (p, _) in &items {
+            metrics.tenants.entry(p.tenant).or_default().failed += 1;
+        }
+    }
+
+    /// Drain every queue and fail all still-pending requests with
+    /// [`InferError::Aborted`] — the watchdog's pending-request policy
+    /// across a dispatcher restart. Returns how many were failed.
+    fn fail_all_pending(&self, detail: &str) -> usize {
+        let mut per_model: Vec<(String, Vec<(Pending, Instant)>)> = Vec::new();
+        {
+            let mut st = lock_recover(&self.state);
+            for (id, q) in st.queues.iter_mut() {
+                let mut items = Vec::new();
+                while let Some(b) = q.drain_batch() {
+                    items.extend(b.items);
+                }
+                if !items.is_empty() {
+                    per_model.push((id.clone(), items));
+                }
+            }
+        }
+        let mut count = 0;
+        for (id, items) in per_model {
+            count += items.len();
+            self.abort_items(&id, items, detail);
+        }
+        count
+    }
+
+    fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = lock_recover(&self.metrics).clone();
+        snap.watchdog_restarts = self.restarts.load(Ordering::Relaxed);
+        snap.dispatcher_heartbeats = self.dispatch_iters.load(Ordering::Relaxed);
+        snap
+    }
+}
+
+/// Gather the live requests' inputs, run the plan (serial or
+/// row-split), and scatter per-request outputs. Runs inside the
+/// panic-isolation boundary; everything it touches in `engine` is
+/// overwritten by the next batch, so a mid-run panic leaves no
+/// poisoned state behind.
+fn run_batch_kernels(
+    engine: &mut ExecEngine,
+    plan: &ExecPlan,
+    live: &[(Pending, Instant)],
+    workers: usize,
+) -> Vec<Output> {
+    let n = live.len();
+    let n_in = plan.num_inputs();
+    let n_out = plan.num_outputs();
+    if plan.is_float() {
+        grow(&mut engine.in_f, n * n_in, 0.0);
+        grow(&mut engine.out_f, n * n_out, 0.0);
+        for (i, (p, _)) in live.iter().enumerate() {
+            let PendingInput::F32(v) = &p.input else {
+                unreachable!("f32 plan queued a Q input");
+            };
+            engine.in_f[i * n_in..(i + 1) * n_in].copy_from_slice(v);
+        }
+        let xs = &engine.in_f[..n * n_in];
+        let out = &mut engine.out_f[..n * n_out];
+        if workers > 1 {
+            // The dispatcher is a plain thread (never a pool worker),
+            // so the row-split driver's no-nesting rule holds by
+            // construction.
+            batch::run_plan_rowsplit_into(plan, xs, n, workers, out);
+        } else {
+            plan.run_batch_f32_into(xs, n, &mut engine.scratch, out);
+        }
+        (0..n)
+            .map(|i| Output::F32(engine.out_f[i * n_out..(i + 1) * n_out].to_vec()))
+            .collect()
+    } else {
+        grow(&mut engine.in_q, n * n_in, 0);
+        grow(&mut engine.out_q, n * n_out, 0);
+        for (i, (p, _)) in live.iter().enumerate() {
+            let PendingInput::Q(v) = &p.input else {
+                unreachable!("Q plan queued an f32 input");
+            };
+            engine.in_q[i * n_in..(i + 1) * n_in].copy_from_slice(v);
+        }
+        let xs = &engine.in_q[..n * n_in];
+        let out = &mut engine.out_q[..n * n_out];
+        if workers > 1 {
+            batch::run_plan_q_rowsplit_into(plan, xs, n, workers, out);
+        } else {
+            plan.run_batch_q_into(xs, n, &mut engine.scratch, out);
+        }
+        (0..n)
+            .map(|i| Output::Q(engine.out_q[i * n_out..(i + 1) * n_out].to_vec()))
+            .collect()
     }
 }
 
@@ -270,68 +504,121 @@ fn grow<T: Clone>(buf: &mut Vec<T>, need: usize, fill: T) {
     }
 }
 
-fn send_reply(p: &Pending, enqueued: &Instant, done_at: Instant, output: Output, batch_size: usize) {
+/// Extract a human-readable detail from a caught panic payload.
+fn panic_detail(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn send_reply(p: &Pending, outcome: Result<Output, InferError>, latency_us: u64, batch_size: usize) {
     // A gone client (dropped receiver) is not an error; the work was
     // already shared with the rest of the batch.
     let _ = p.reply.send(Reply {
         ticket: p.ticket,
-        output,
-        latency_us: done_at.duration_since(*enqueued).as_micros() as u64,
+        outcome,
+        latency_us,
         batch_size,
     });
 }
 
 /// The multi-tenant inference host. See the [module docs](super::host)
-/// for the dataflow; [`ModelRegistry`] for registration;
-/// [`BatchPolicy`] for the flush/shed knobs.
+/// for the dataflow and fault-tolerance contract; [`ModelRegistry`] for
+/// registration and quarantine; [`BatchPolicy`] for the flush/shed/
+/// budget knobs.
 pub struct InferenceService {
     inner: Arc<Inner>,
-    dispatcher: Option<JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
 }
 
 impl InferenceService {
-    /// A manual-mode service (no dispatcher thread): flush decisions
-    /// run only when [`pump`](Self::pump) / [`pump_at`](Self::pump_at)
-    /// / [`drain`](Self::drain) are called. The deterministic harness
-    /// the scheduler tests drive.
+    /// A manual-mode service (no threads): flush decisions run only
+    /// when [`pump`](Self::pump) / [`pump_at`](Self::pump_at) /
+    /// [`drain`](Self::drain) are called. The deterministic harness
+    /// the scheduler and fault tests drive.
     pub fn new(registry: Arc<ModelRegistry>, policy: &BatchPolicy) -> Self {
+        Self::new_with_faults(registry, policy, None)
+    }
+
+    /// Manual mode with an injected [`FaultPlan`] (chaos testing).
+    pub fn new_with_faults(
+        registry: Arc<ModelRegistry>,
+        policy: &BatchPolicy,
+        faults: Option<FaultPlan>,
+    ) -> Self {
         let inner = Arc::new(Inner {
             registry,
             policy: policy.normalized(),
+            faults,
             state: Mutex::new(SchedState { queues: BTreeMap::new() }),
             wake: Condvar::new(),
             metrics: Mutex::new(MetricsSnapshot::default()),
             engine: Mutex::new(ExecEngine::new()),
             next_ticket: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
+            dispatch_iters: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
         });
-        Self { inner, dispatcher: None }
+        Self { inner, supervisor: None }
     }
 
-    /// A started service: spawns the dispatcher thread that sleeps
-    /// until the nearest queue deadline (or a submit wakeup) and
-    /// flushes whatever is ready.
+    /// A started service: spawns the watchdog supervisor, which runs
+    /// the dispatcher thread (sleeping until the nearest queue deadline
+    /// or a submit wakeup, flushing whatever is ready) and respawns it
+    /// — failing, never leaking, pending requests — if it dies.
     pub fn start(registry: Arc<ModelRegistry>, policy: &BatchPolicy) -> Self {
-        let mut svc = Self::new(registry, policy);
+        Self::start_with_faults(registry, policy, None)
+    }
+
+    /// Started mode with an injected [`FaultPlan`] (chaos testing).
+    pub fn start_with_faults(
+        registry: Arc<ModelRegistry>,
+        policy: &BatchPolicy,
+        faults: Option<FaultPlan>,
+    ) -> Self {
+        let mut svc = Self::new_with_faults(registry, policy, faults);
         let inner = Arc::clone(&svc.inner);
         let handle = std::thread::Builder::new()
-            .name("svc-dispatch".to_string())
-            .spawn(move || dispatcher_loop(&inner))
-            .expect("spawn dispatcher");
-        svc.dispatcher = Some(handle);
+            .name("svc-watchdog".to_string())
+            .spawn(move || supervisor_loop(&inner))
+            // Invariant: no request has been accepted yet (the service
+            // is still being constructed), so failing to start here
+            // leaks nothing — propagating the spawn error is correct.
+            .expect("spawn watchdog supervisor at service start");
+        svc.supervisor = Some(handle);
         svc
     }
 
-    /// Submit one sample for `model` on behalf of `tenant`. On success
-    /// the request is queued and the returned ticket will eventually
-    /// arrive on `reply` (batched with others when traffic allows).
-    /// Rejections ([`SubmitError`]) are synchronous and leave no trace.
+    /// Submit one sample for `model` on behalf of `tenant` at the real
+    /// clock — [`submit_at`](Self::submit_at) with `Instant::now()`.
     pub fn submit(
         &self,
         model: &str,
         tenant: u64,
         input: &[f32],
         reply: &mpsc::Sender<Reply>,
+    ) -> Result<u64, SubmitError> {
+        self.submit_at(model, tenant, input, reply, Instant::now())
+    }
+
+    /// Submit one sample at an explicit clock `now` (quarantine
+    /// cooldowns and queue deadlines are measured on it, so manual-mode
+    /// tests can drive the whole admit/flush/timeout timeline
+    /// virtually). On success the request is queued and the returned
+    /// ticket will eventually arrive on `reply` as exactly one terminal
+    /// [`Reply`]. Rejections ([`SubmitError`]) are synchronous and
+    /// leave nothing queued.
+    pub fn submit_at(
+        &self,
+        model: &str,
+        tenant: u64,
+        input: &[f32],
+        reply: &mpsc::Sender<Reply>,
+        now: Instant,
     ) -> Result<u64, SubmitError> {
         let Some(m) = self.inner.registry.get(model) else {
             return Err(SubmitError::UnknownModel(model.to_string()));
@@ -344,21 +631,43 @@ impl InferenceService {
             });
         }
         let pending_input = if plan.is_float() {
+            // NaN/inf would poison every sample coalesced into the same
+            // kernel call; Q plans are immune (quantize saturates).
+            if let Some(index) = input.iter().position(|v| !v.is_finite()) {
+                return Err(SubmitError::BadInput { index });
+            }
             PendingInput::F32(input.to_vec())
         } else {
+            // Invariant: `!plan.is_float()` implies a Q plan, and every
+            // Q plan is compiled with a decimal point.
             let dec = plan.decimal_point().expect("Q plan has a decimal point");
             PendingInput::Q(input.iter().map(|&v| quantize(v, dec)).collect())
         };
+
+        // Circuit breaker: quarantined models fast-reject; the first
+        // submit after the cooldown becomes the half-open probe.
+        let admission = self.inner.registry.admit(model, now);
+        if admission == Admission::Reject {
+            let mut metrics = lock_recover(&self.inner.metrics);
+            metrics
+                .models
+                .entry(model.to_string())
+                .or_default()
+                .rejected_quarantined += 1;
+            return Err(SubmitError::Quarantined { model: model.to_string() });
+        }
+        let is_probe = admission == Admission::Probe;
+
         let ticket = self.inner.next_ticket.fetch_add(1, Ordering::Relaxed);
         let pending = Pending {
             ticket,
             tenant,
             input: pending_input,
             reply: reply.clone(),
+            is_probe,
         };
-        let now = Instant::now();
         let pushed = {
-            let mut st = self.inner.state.lock().expect("state lock");
+            let mut st = lock_recover(&self.inner.state);
             let q = st
                 .queues
                 .entry(model.to_string())
@@ -368,15 +677,23 @@ impl InferenceService {
         match pushed {
             Ok(depth) => {
                 self.inner.wake.notify_all();
-                let mut metrics = self.inner.metrics.lock().expect("metrics lock");
+                let mut metrics = lock_recover(&self.inner.metrics);
                 let mm = metrics.models.entry(model.to_string()).or_default();
                 mm.requests += 1;
                 mm.note_depth(depth);
+                if is_probe {
+                    mm.quarantine_probes += 1;
+                }
                 metrics.tenants.entry(tenant).or_default().requests += 1;
                 Ok(ticket)
             }
             Err(capacity) => {
-                let mut metrics = self.inner.metrics.lock().expect("metrics lock");
+                // The shed probe never executes — release its slot so
+                // the next submit can probe instead.
+                if is_probe {
+                    self.inner.registry.release_probe(model);
+                }
+                let mut metrics = lock_recover(&self.inner.metrics);
                 metrics.models.entry(model.to_string()).or_default().shed += 1;
                 metrics.tenants.entry(tenant).or_default().shed += 1;
                 Err(SubmitError::QueueFull { capacity })
@@ -392,16 +709,17 @@ impl InferenceService {
 
     /// Execute every batch whose size or deadline trigger has fired as
     /// of `now`; returns how many batches ran. Passing a future instant
-    /// makes deadline flushes happen deterministically in tests —
-    /// without sleeping. Safe to call alongside a running dispatcher
-    /// (both just take ready batches under the lock).
+    /// makes deadline flushes (and request-budget timeouts) happen
+    /// deterministically in tests — without sleeping. Safe to call
+    /// alongside a running dispatcher (both just take ready batches
+    /// under the lock).
     pub fn pump_at(&self, now: Instant) -> usize {
         let mut ran = 0;
         loop {
-            let taken = self.inner.state.lock().expect("state lock").take_ready(now);
+            let taken = lock_recover(&self.inner.state).take_ready(now);
             match taken {
                 Some((id, b, depth)) => {
-                    self.inner.execute_batch(&id, b, depth);
+                    self.inner.execute_batch(&id, b, depth, now);
                     ran += 1;
                 }
                 None => return ran,
@@ -410,15 +728,15 @@ impl InferenceService {
     }
 
     /// Flush *everything* still queued, ready or not (partial batches
-    /// execute with [`FlushReason::Drain`]); returns how many batches
-    /// ran. Used at shutdown and by tests.
+    /// execute with [`FlushReason::Drain`](super::FlushReason::Drain));
+    /// returns how many batches ran. Used at shutdown and by tests.
     pub fn drain(&self) -> usize {
         let mut ran = 0;
         loop {
-            let taken = self.inner.state.lock().expect("state lock").take_any();
+            let taken = lock_recover(&self.inner.state).take_any();
             match taken {
                 Some((id, b, depth)) => {
-                    self.inner.execute_batch(&id, b, depth);
+                    self.inner.execute_batch(&id, b, depth, Instant::now());
                     ran += 1;
                 }
                 None => return ran,
@@ -426,9 +744,19 @@ impl InferenceService {
         }
     }
 
-    /// A consistent snapshot of every per-model / per-tenant counter.
+    /// Fail every still-queued request with [`InferError::Aborted`]
+    /// (each gets its terminal reply; nothing executes, nothing leaks)
+    /// and return how many were failed. This is the watchdog's policy
+    /// across a dispatcher restart, exposed for tests and for
+    /// operational teardown-without-drain.
+    pub fn fail_pending(&self, detail: &str) -> usize {
+        self.inner.fail_all_pending(detail)
+    }
+
+    /// A consistent snapshot of every per-model / per-tenant counter,
+    /// including the watchdog's restart and heartbeat counts.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.inner.metrics.lock().expect("metrics lock").clone()
+        self.inner.snapshot()
     }
 
     /// The registry this service serves from.
@@ -438,22 +766,27 @@ impl InferenceService {
 
     /// Stop the service: the dispatcher (if any) drains every queue and
     /// exits; in manual mode the queues are drained inline. Every
-    /// accepted request has been replied to when this returns. Returns
-    /// the final metrics snapshot — unlike [`metrics`](Self::metrics)
-    /// mid-run, it is guaranteed to account for every batch (replies are
-    /// sent before counters are bumped, so a mid-run snapshot can trail
-    /// the last reply by one batch).
+    /// accepted request has received its terminal reply when this
+    /// returns. Returns the final metrics snapshot — unlike
+    /// [`metrics`](Self::metrics) mid-run, it is guaranteed to account
+    /// for every batch (replies are sent before counters are bumped, so
+    /// a mid-run snapshot can trail the last reply by one batch).
     pub fn shutdown(mut self) -> MetricsSnapshot {
         self.finish();
-        self.inner.metrics.lock().expect("metrics lock").clone()
+        self.inner.snapshot()
     }
 
     fn finish(&mut self) {
         self.inner.shutdown.store(true, Ordering::Release);
         self.inner.wake.notify_all();
-        match self.dispatcher.take() {
+        match self.supervisor.take() {
             Some(h) => {
                 let _ = h.join();
+                // Belt and braces: if the dispatcher died during
+                // shutdown, the supervisor already failed the pending
+                // set; a clean exit leaves nothing queued. Either way
+                // this is a no-op unless something slipped in between.
+                self.inner.fail_all_pending("service shut down");
             }
             None => {
                 self.drain();
@@ -468,20 +801,63 @@ impl Drop for InferenceService {
     }
 }
 
+/// The watchdog: run the dispatcher, and when it dies (a panic that
+/// escaped batch isolation — e.g. an injected dispatcher kill), fail
+/// every pending request with its terminal `Aborted` reply and respawn.
+/// A clean dispatcher exit means shutdown completed.
+fn supervisor_loop(inner: &Arc<Inner>) {
+    loop {
+        let worker = Arc::clone(inner);
+        let handle = match std::thread::Builder::new()
+            .name("svc-dispatch".to_string())
+            .spawn(move || dispatcher_loop(&worker))
+        {
+            Ok(h) => h,
+            Err(_) => {
+                // OS refused a thread: nothing can execute anymore, so
+                // fail pending instead of leaking and stop supervising.
+                inner.fail_all_pending("dispatcher spawn failed");
+                return;
+            }
+        };
+        if handle.join().is_ok() {
+            // Clean exit: the dispatcher drained everything at
+            // shutdown.
+            return;
+        }
+        inner.restarts.fetch_add(1, Ordering::Relaxed);
+        inner.fail_all_pending("dispatcher restarted after panic");
+        if inner.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+    }
+}
+
 /// The dispatcher: wait for a trigger, take the oldest ready batch,
 /// execute it outside the lock, repeat. On shutdown, drain every queue
-/// (partial batches run with [`FlushReason::Drain`]) before exiting.
+/// (partial batches run with `FlushReason::Drain`) before exiting.
+/// Each loop iteration bumps the shared heartbeat/iteration counter —
+/// the watchdog's liveness signal and the [`FaultPlan`] kill key.
 fn dispatcher_loop(inner: &Inner) {
     loop {
+        let iter = inner.dispatch_iters.fetch_add(1, Ordering::Relaxed);
+        if let Some(f) = &inner.faults {
+            if f.should_kill_dispatcher(iter) {
+                // Injected outside any batch scope: no request is held
+                // here, so the watchdog can fail pending and respawn
+                // without a single reply being lost.
+                panic!("injected dispatcher kill (iteration {iter})");
+            }
+        }
         let taken = {
-            let mut st = inner.state.lock().expect("state lock");
+            let mut st = lock_recover(&inner.state);
             loop {
                 let now = Instant::now();
                 if let Some(t) = st.take_ready(now) {
-                    break Some(t);
+                    break Some((t, now));
                 }
                 if inner.shutdown.load(Ordering::Acquire) {
-                    break st.take_any();
+                    break st.take_any().map(|t| (t, now));
                 }
                 // Sleep until the nearest deadline can fire (floored so
                 // an imminent deadline never busy-spins), or idle-tick
@@ -496,12 +872,12 @@ fn dispatcher_loop(inner: &Inner) {
                 let (guard, _) = inner
                     .wake
                     .wait_timeout(st, wait)
-                    .expect("state lock poisoned");
+                    .unwrap_or_else(PoisonError::into_inner);
                 st = guard;
             }
         };
         match taken {
-            Some((id, b, depth)) => inner.execute_batch(&id, b, depth),
+            Some(((id, b, depth), now)) => inner.execute_batch(&id, b, depth, now),
             None => return,
         }
     }
@@ -540,6 +916,7 @@ mod tests {
         assert_eq!(svc.pump(), 1);
         let a = rx.recv().unwrap();
         let b = rx.recv().unwrap();
+        assert!(a.is_ok() && b.is_ok());
         assert_eq!(a.batch_size, 2);
         assert_eq!(b.batch_size, 2);
         assert!(a.ticket != b.ticket);
@@ -550,7 +927,7 @@ mod tests {
     }
 
     #[test]
-    fn submit_validates_model_and_width() {
+    fn submit_validates_model_width_and_finiteness() {
         let reg = registry_with(&[3, 4, 2], "m");
         let svc = InferenceService::new(reg, &BatchPolicy::default());
         let (tx, _rx) = mpsc::channel();
@@ -561,6 +938,14 @@ mod tests {
         assert_eq!(
             svc.submit("m", 0, &[0.0; 5], &tx),
             Err(SubmitError::BadInputWidth { expected: 3, got: 5 })
+        );
+        assert_eq!(
+            svc.submit("m", 0, &[0.0, f32::NAN, 0.0], &tx),
+            Err(SubmitError::BadInput { index: 1 })
+        );
+        assert_eq!(
+            svc.submit("m", 0, &[f32::INFINITY, 0.0, 0.0], &tx),
+            Err(SubmitError::BadInput { index: 0 })
         );
         // Rejections leave no trace in the accepted-request counters.
         assert_eq!(svc.metrics().total_requests(), 0);
@@ -582,8 +967,126 @@ mod tests {
         let snap = svc.shutdown();
         let replies: Vec<Reply> = rx.try_iter().collect();
         assert_eq!(replies.len(), 3);
-        assert!(replies.iter().all(|r| r.batch_size == 3));
+        assert!(replies.iter().all(|r| r.is_ok() && r.batch_size == 3));
         assert_eq!(snap.total_completed(), 3);
         assert_eq!(snap.models["m"].drain_flushes, 1);
+    }
+
+    #[test]
+    fn fail_pending_aborts_queued_requests_with_terminal_replies() {
+        let reg = registry_with(&[2, 3, 1], "m");
+        let policy = BatchPolicy {
+            max_batch: 100,
+            max_delay: Duration::from_secs(3600),
+            ..BatchPolicy::default()
+        };
+        let svc = InferenceService::new(reg, &policy);
+        let (tx, rx) = mpsc::channel();
+        for t in 0..4u64 {
+            svc.submit("m", t, &[0.5, -0.5], &tx).unwrap();
+        }
+        assert_eq!(svc.fail_pending("test abort"), 4);
+        let replies: Vec<Reply> = rx.try_iter().collect();
+        assert_eq!(replies.len(), 4);
+        for r in &replies {
+            assert_eq!(
+                r.outcome,
+                Err(InferError::Aborted { detail: "test abort".to_string() })
+            );
+            assert_eq!(r.batch_size, 0);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.models["m"].aborted, 4);
+        assert_eq!(m.total_failed(), 4);
+        assert_eq!(m.total_completed(), 0);
+        // Nothing left: a second call is a no-op.
+        assert_eq!(svc.fail_pending("again"), 0);
+    }
+
+    #[test]
+    fn stale_requests_time_out_instead_of_executing() {
+        let reg = registry_with(&[2, 3, 1], "m");
+        let policy = BatchPolicy {
+            max_batch: 2,
+            max_delay: Duration::from_secs(3600),
+            request_budget: Some(Duration::from_millis(10)),
+            ..BatchPolicy::default()
+        };
+        let svc = InferenceService::new(reg, &policy);
+        let (tx, rx) = mpsc::channel();
+        let t0 = Instant::now();
+        // First request goes stale (submitted at t0, second arrives
+        // 20ms later on the virtual clock → size trigger fires at a
+        // `now` where the first has blown its 10ms budget).
+        svc.submit_at("m", 1, &[0.5, -0.5], &tx, t0).unwrap();
+        let t1 = t0 + Duration::from_millis(20);
+        svc.submit_at("m", 2, &[0.25, 0.75], &tx, t1).unwrap();
+        assert_eq!(svc.pump_at(t1), 1);
+        let mut ok = 0;
+        let mut timed_out = 0;
+        for _ in 0..2 {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            match r.outcome {
+                Ok(_) => {
+                    ok += 1;
+                    assert_eq!(r.batch_size, 1, "only the live request executed");
+                }
+                Err(InferError::Timeout { waited_us, budget_us }) => {
+                    timed_out += 1;
+                    assert_eq!(budget_us, 10_000);
+                    assert!(waited_us >= 10_000, "waited {waited_us}");
+                    assert_eq!(r.batch_size, 0);
+                }
+                Err(e) => panic!("unexpected error {e}"),
+            }
+        }
+        assert_eq!((ok, timed_out), (1, 1));
+        let m = svc.metrics();
+        assert_eq!(m.models["m"].timeouts, 1);
+        assert_eq!(m.models["m"].completed, 1);
+    }
+
+    #[test]
+    fn injected_exec_panic_fails_only_that_batch() {
+        let reg = registry_with(&[2, 3, 1], "m");
+        let policy = BatchPolicy {
+            max_batch: 2,
+            max_delay: Duration::from_secs(3600),
+            ..BatchPolicy::default()
+        };
+        // Exec attempt #0 panics; #1 onward succeed.
+        let faults = FaultPlan {
+            panic_model: "m".to_string(),
+            panic_from: 0,
+            panic_until: 1,
+            ..FaultPlan::default()
+        };
+        let svc = InferenceService::new_with_faults(reg, &policy, Some(faults));
+        let (tx, rx) = mpsc::channel();
+        for t in 0..2u64 {
+            svc.submit("m", t, &[0.5, -0.5], &tx).unwrap();
+        }
+        assert_eq!(svc.pump(), 1);
+        for _ in 0..2 {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            match r.outcome {
+                Err(InferError::ExecFailed { detail }) => {
+                    assert!(detail.contains("injected exec fault"), "{detail}");
+                }
+                other => panic!("expected ExecFailed, got {other:?}"),
+            }
+        }
+        // The next batch executes normally — the panic was contained.
+        for t in 0..2u64 {
+            svc.submit("m", 10 + t, &[0.5, -0.5], &tx).unwrap();
+        }
+        assert_eq!(svc.pump(), 1);
+        for _ in 0..2 {
+            assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        }
+        let m = svc.metrics();
+        assert_eq!(m.models["m"].exec_failures, 1);
+        assert_eq!(m.models["m"].failed, 2);
+        assert_eq!(m.models["m"].completed, 2);
     }
 }

@@ -69,7 +69,7 @@ impl Default for LoadOptions {
                 max_batch: 32,
                 max_delay: Duration::from_millis(1),
                 queue_capacity: 4096,
-                exec_workers: 1,
+                ..BatchPolicy::default()
             },
         }
     }
@@ -105,8 +105,12 @@ pub struct ModelLoadRow {
     pub requests: u64,
     /// Requests completed (== accepted at the end of a run).
     pub completed: u64,
-    /// Requests shed at submit time (each was retried until accepted).
+    /// Shed submits (each is one rejected attempt; clients retry with
+    /// capped jittered backoff).
     pub shed: u64,
+    /// Requests whose client exhausted its shed-retry budget and gave
+    /// up — never accepted, never replied to. `0` in a healthy run.
+    pub gave_up: u64,
     /// Coalesced batches executed.
     pub batches: u64,
     /// Mean coalesced batch size.
@@ -154,6 +158,11 @@ pub struct LoadReport {
     pub shed_total: u64,
     /// Submit retries performed by clients after sheds.
     pub retries_total: u64,
+    /// Requests abandoned after exhausting the shed-retry budget
+    /// (`MAX_SHED_RETRIES` attempts with capped jittered exponential
+    /// backoff). The bit-exact and completion invariants then hold over
+    /// `total_requests - gave_up_total` accepted requests.
+    pub gave_up_total: u64,
     /// Distinct tenant ids the service saw.
     pub tenants: usize,
     /// Every reply matched the serial per-request reference bit for
@@ -164,25 +173,27 @@ pub struct LoadReport {
 }
 
 /// One load-harness model: a compiled plan plus its deterministic input
-/// pool and the precomputed per-sample reference outputs.
-struct LoadModel {
-    id: &'static str,
-    repr: &'static str,
-    sizes: Vec<usize>,
-    plan: ExecPlan,
-    n_in: usize,
-    n_out: usize,
+/// pool and the precomputed per-sample reference outputs. Shared with
+/// the [`super::chaos`] harness (`pub(super)`), which replays the same
+/// models under an injected [`super::FaultPlan`].
+pub(super) struct LoadModel {
+    pub(super) id: &'static str,
+    pub(super) repr: &'static str,
+    pub(super) sizes: Vec<usize>,
+    pub(super) plan: ExecPlan,
+    pub(super) n_in: usize,
+    pub(super) n_out: usize,
     /// Input pool, `pool_samples × n_in`, already normalized to [-1, 1].
-    pool_f: Vec<f32>,
+    pub(super) pool_f: Vec<f32>,
     /// The pool quantized at the plan's decimal point (empty for f32
     /// plans) — identical values to what submit-time quantization
     /// produces, since both call [`quantize`] at the same dec.
-    pool_q: Vec<i32>,
-    pool_samples: usize,
+    pub(super) pool_q: Vec<i32>,
+    pub(super) pool_samples: usize,
     /// Reference outputs per pool sample (float plans).
-    expected_f: Vec<f32>,
+    pub(super) expected_f: Vec<f32>,
     /// Reference outputs per pool sample (Q plans).
-    expected_q: Vec<i32>,
+    pub(super) expected_q: Vec<i32>,
 }
 
 fn flatten_inputs(data: &TrainData) -> Vec<f32> {
@@ -204,7 +215,7 @@ fn randomized_net(sizes: &[usize], rng: &mut Rng) -> Result<Network> {
 /// harness measures scheduling and kernels, not accuracy — but inputs
 /// come from the paper's signal generators so request content has the
 /// real workloads' shape and dynamic range.
-fn build_models(seed: u64, pool_per_class: usize) -> Result<Vec<LoadModel>> {
+pub(super) fn build_models(seed: u64, pool_per_class: usize) -> Result<Vec<LoadModel>> {
     let mut rng = Rng::new(seed ^ 0x5E21_1CE0);
     let mut models = Vec::with_capacity(3);
 
@@ -260,6 +271,8 @@ fn finish_model(
         let expected = plan.run_batch_f32(&pool_f, pool_samples);
         (Vec::new(), expected, Vec::new())
     } else {
+        // Invariant: the non-float branch implies a Q plan, and every
+        // Q plan is compiled with a decimal point.
         let dec = plan.decimal_point().expect("Q plan has a decimal point");
         let pool_q: Vec<i32> = pool_f.iter().map(|&v| quantize(v, dec)).collect();
         let expected = plan.run_batch_q(&pool_q, pool_samples);
@@ -283,7 +296,7 @@ fn finish_model(
 /// The deterministic request schedule: which pool sample client `c`'s
 /// `r`-th request submits (a Weyl-style mix so neighboring clients
 /// don't walk the pool in lockstep).
-fn pool_index(c: usize, r: usize, pool_samples: usize) -> usize {
+pub(super) fn pool_index(c: usize, r: usize, pool_samples: usize) -> usize {
     c.wrapping_mul(2_654_435_761)
         .wrapping_add(r.wrapping_mul(40_503))
         % pool_samples
@@ -311,6 +324,7 @@ fn run_serial_reference(models: &[LoadModel], opts: &LoadOptions) -> f64 {
                 m.plan.run_batch_f32_into(x, 1, &mut scratch, &mut out_f[..m.n_out]);
                 ck = ck.wrapping_add(crate::bench::batch::checksum_f32(&out_f[..m.n_out]));
             } else {
+                // Invariant: non-float ⇒ Q plan ⇒ decimal point set.
                 let dec = m.plan.decimal_point().expect("Q plan");
                 for (dst, &v) in in_q[..m.n_in].iter_mut().zip(x) {
                     *dst = quantize(v, dec);
@@ -324,26 +338,63 @@ fn run_serial_reference(models: &[LoadModel], opts: &LoadOptions) -> f64 {
     t0.elapsed().as_secs_f64()
 }
 
+/// How many times a client retries one shed request before giving up.
+/// With the capped exponential backoff below this is tens of
+/// milliseconds of closed-loop backpressure per request — far beyond
+/// what a correctly bounded queue needs to clear a batch, so a give-up
+/// means the service is genuinely wedged, not merely busy.
+pub(super) const MAX_SHED_RETRIES: u32 = 50;
+
+/// Backoff before shed-retry `attempt`: capped exponential (100 µs
+/// doubling to 1.6 ms) plus a deterministic per-client jitter so
+/// submitter threads don't re-collide on the queue bound in lockstep.
+pub(super) fn shed_backoff(attempt: u32, salt: u64) -> Duration {
+    let base = 100u64 << attempt.min(4);
+    let h = (salt ^ u64::from(attempt).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_mul(0x2545_F491_4F6C_DD1D);
+    Duration::from_micros(base + (h >> 48) % (base / 2 + 1))
+}
+
+/// What one submitter thread observed.
+#[derive(Debug, Default)]
+struct SubmitterStats {
+    /// Replies whose output diverged from the per-sample reference (or
+    /// arrived as an error — impossible in a fault-free run).
+    mismatches: u64,
+    /// Shed-retry submit attempts.
+    retries: u64,
+    /// Requests abandoned after [`MAX_SHED_RETRIES`], per model index.
+    gave_up: Vec<u64>,
+    /// Accepted requests whose reply never arrived (the terminal-reply
+    /// invariant is broken if this is ever non-zero).
+    lost: u64,
+}
+
 /// One submitter thread's work: submit every request of its client
-/// range (retrying sheds with a short backoff — closed-loop
-/// backpressure), then receive exactly that many replies and count
-/// bit-exact mismatches against the precomputed reference.
+/// range (retrying sheds with capped jittered backoff — closed-loop
+/// backpressure that cannot spin forever), then receive exactly one
+/// reply per accepted request and count bit-exact mismatches against
+/// the precomputed reference.
 fn submitter(
     svc: &InferenceService,
     models: &[LoadModel],
     clients: Range<usize>,
     requests_per_client: usize,
-) -> (u64, u64) {
+) -> SubmitterStats {
     let (tx, rx) = mpsc::channel();
     let mut expect: HashMap<u64, (usize, usize)> =
         HashMap::with_capacity(clients.len() * requests_per_client);
-    let mut retries = 0u64;
+    let mut stats = SubmitterStats {
+        gave_up: vec![0; models.len()],
+        ..SubmitterStats::default()
+    };
     for c in clients {
         let mi = c % models.len();
         let m = &models[mi];
         for r in 0..requests_per_client {
             let pi = pool_index(c, r, m.pool_samples);
             let input = &m.pool_f[pi * m.n_in..(pi + 1) * m.n_in];
+            let mut attempt = 0u32;
             loop {
                 match svc.submit(m.id, c as u64, input, &tx) {
                     Ok(ticket) => {
@@ -351,36 +402,59 @@ fn submitter(
                         break;
                     }
                     Err(SubmitError::QueueFull { .. }) => {
-                        // Shed: back off briefly and retry — the client
-                        // keeps its request, the queue keeps its bound.
-                        retries += 1;
-                        std::thread::sleep(Duration::from_micros(200));
+                        // Shed: back off and retry — the client keeps
+                        // its request, the queue keeps its bound — but
+                        // only MAX_SHED_RETRIES times, so a wedged
+                        // service turns into a counted give-up instead
+                        // of a submitter spinning forever.
+                        if attempt >= MAX_SHED_RETRIES {
+                            stats.gave_up[mi] += 1;
+                            break;
+                        }
+                        stats.retries += 1;
+                        std::thread::sleep(shed_backoff(attempt, c as u64));
+                        attempt += 1;
                     }
                     Err(e) => panic!("load submit failed: {e}"),
                 }
             }
         }
     }
-    let mut mismatches = 0u64;
-    for _ in 0..expect.len() {
-        let reply = rx.recv().expect("service replies to every accepted request");
+    let expected_replies = expect.len();
+    let mut received = 0usize;
+    while received < expected_replies {
+        // Bounded wait: a reply that never comes must surface as a
+        // counted lost reply, not a hung harness.
+        let Ok(reply) = rx.recv_timeout(Duration::from_secs(120)) else {
+            break;
+        };
+        received += 1;
         let (mi, pi) = expect[&reply.ticket];
         let m = &models[mi];
-        let ok = match &reply.output {
-            Output::F32(v) => v[..] == m.expected_f[pi * m.n_out..(pi + 1) * m.n_out],
-            Output::Q(v) => v[..] == m.expected_q[pi * m.n_out..(pi + 1) * m.n_out],
+        let ok = match reply.output() {
+            Some(Output::F32(v)) => v[..] == m.expected_f[pi * m.n_out..(pi + 1) * m.n_out],
+            Some(Output::Q(v)) => v[..] == m.expected_q[pi * m.n_out..(pi + 1) * m.n_out],
+            // A fault-free run must never answer an accepted request
+            // with an error.
+            None => false,
         };
         if !ok {
-            mismatches += 1;
+            stats.mismatches += 1;
         }
     }
-    (mismatches, retries)
+    stats.lost += (expected_replies - received) as u64;
+    stats
 }
 
-fn rows_from_snapshot(models: &[LoadModel], snap: &MetricsSnapshot) -> Vec<ModelLoadRow> {
+fn rows_from_snapshot(
+    models: &[LoadModel],
+    snap: &MetricsSnapshot,
+    gave_up: &[u64],
+) -> Vec<ModelLoadRow> {
     models
         .iter()
-        .map(|m| {
+        .enumerate()
+        .map(|(mi, m)| {
             let mm = snap.models.get(m.id).cloned().unwrap_or_default();
             ModelLoadRow {
                 model: m.id.to_string(),
@@ -389,6 +463,7 @@ fn rows_from_snapshot(models: &[LoadModel], snap: &MetricsSnapshot) -> Vec<Model
                 requests: mm.requests,
                 completed: mm.completed,
                 shed: mm.shed,
+                gave_up: gave_up.get(mi).copied().unwrap_or(0),
                 batches: mm.batches,
                 mean_batch: mm.mean_batch(),
                 flushes: (mm.size_flushes, mm.deadline_flushes, mm.drain_flushes),
@@ -421,7 +496,7 @@ pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
 
     let submitters = opts.submitters.clamp(1, opts.clients);
     let t0 = Instant::now();
-    let per_thread: Vec<(u64, u64)> = std::thread::scope(|s| {
+    let per_thread: Vec<SubmitterStats> = std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(submitters);
         let base = opts.clients / submitters;
         let extra = opts.clients % submitters;
@@ -437,6 +512,9 @@ pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
         }
         handles
             .into_iter()
+            // A panicking submitter is a harness bug (its asserts hold
+            // the bit-exactness gate); propagating the panic is the
+            // correct failure mode, not something to recover from.
             .map(|h| h.join().expect("submitter thread"))
             .collect()
     });
@@ -445,15 +523,25 @@ pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
     // guaranteed to account for every executed batch.
     let snap = svc.shutdown();
 
-    let mismatches: u64 = per_thread.iter().map(|&(m, _)| m).sum();
-    let retries_total: u64 = per_thread.iter().map(|&(_, r)| r).sum();
+    let mismatches: u64 = per_thread.iter().map(|s| s.mismatches).sum();
+    let retries_total: u64 = per_thread.iter().map(|s| s.retries).sum();
+    let lost_total: u64 = per_thread.iter().map(|s| s.lost).sum();
+    let mut gave_up_by_model = vec![0u64; models.len()];
+    for s in &per_thread {
+        for (dst, g) in gave_up_by_model.iter_mut().zip(&s.gave_up) {
+            *dst += g;
+        }
+    }
+    let gave_up_total: u64 = gave_up_by_model.iter().sum();
+    let accepted = total as u64 - gave_up_total;
     ensure!(
         mismatches == 0,
-        "{mismatches} of {total} coalesced replies diverged from serial per-request execution"
+        "{mismatches} of {accepted} coalesced replies diverged from serial per-request execution"
     );
+    ensure!(lost_total == 0, "{lost_total} accepted requests never received a reply");
     ensure!(
-        snap.total_completed() == total as u64,
-        "completed {} != submitted {total}",
+        snap.total_completed() == accepted,
+        "completed {} != accepted {accepted}",
         snap.total_completed()
     );
 
@@ -462,7 +550,7 @@ pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
         options: opts.clone(),
         total_requests: total,
         wall_seconds,
-        samples_per_sec: total as f64 / wall_seconds,
+        samples_per_sec: accepted as f64 / wall_seconds,
         serial_seconds,
         serial_samples_per_sec: total as f64 / serial_seconds,
         speedup_service_vs_serial: serial_seconds / wall_seconds,
@@ -471,9 +559,10 @@ pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
         p99_us: latency.p99(),
         shed_total: snap.total_shed(),
         retries_total,
+        gave_up_total,
         tenants: snap.tenants.len(),
         bit_exact: true,
-        rows: rows_from_snapshot(&models, &snap),
+        rows: rows_from_snapshot(&models, &snap, &gave_up_by_model),
     })
 }
 
@@ -508,6 +597,7 @@ impl LoadReport {
             .field("p99_us", Json::Int(self.p99_us as i64))
             .field("shed_total", Json::Int(self.shed_total as i64))
             .field("retries_total", Json::Int(self.retries_total as i64))
+            .field("gave_up_total", Json::Int(self.gave_up_total as i64))
             .field("tenants", self.tenants)
             .field("bit_exact", self.bit_exact)
             .field(
@@ -531,6 +621,7 @@ impl LoadReport {
                                 .field("requests", Json::Int(r.requests as i64))
                                 .field("completed", Json::Int(r.completed as i64))
                                 .field("shed", Json::Int(r.shed as i64))
+                                .field("gave_up", Json::Int(r.gave_up as i64))
                                 .field("batches", Json::Int(r.batches as i64))
                                 .field("mean_batch", r.mean_batch)
                                 .field("size_flushes", Json::Int(r.flushes.0 as i64))
@@ -564,12 +655,13 @@ mod tests {
                 max_batch: 4,
                 max_delay: Duration::from_micros(500),
                 queue_capacity: 64,
-                exec_workers: 1,
+                ..BatchPolicy::default()
             },
         };
         let report = run(&opts).unwrap();
         assert_eq!(report.total_requests, 24);
         assert!(report.bit_exact);
+        assert_eq!(report.gave_up_total, 0);
         assert!(report.samples_per_sec > 0.0);
         assert!(report.p99_us >= report.p50_us);
         assert_eq!(report.rows.len(), 3);
@@ -583,9 +675,23 @@ mod tests {
             "\"ratchet_mean_batch\"",
             "\"speedup_service_vs_serial\"",
             "\"bit_exact\"",
+            "\"gave_up_total\"",
         ] {
             assert!(json.contains(field), "missing {field} in {json}");
         }
+    }
+
+    #[test]
+    fn shed_backoff_is_capped_and_jittered() {
+        // Exponential up to the cap...
+        assert!(shed_backoff(0, 1) < shed_backoff(4, 1) || shed_backoff(4, 1).as_micros() >= 1600);
+        for attempt in 0..60 {
+            let d = shed_backoff(attempt, 9).as_micros() as u64;
+            let base = 100u64 << attempt.min(4);
+            assert!((base..=base + base / 2).contains(&d), "attempt {attempt}: {d}");
+        }
+        // ...and deterministic per (attempt, salt).
+        assert_eq!(shed_backoff(3, 5), shed_backoff(3, 5));
     }
 
     #[test]

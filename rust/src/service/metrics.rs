@@ -72,6 +72,8 @@ impl LatencyHistogram {
                 return self.bounds[i];
             }
         }
+        // Invariant: the bucket ladder is built non-empty at
+        // construction and never shrinks.
         *self.bounds.last().expect("non-empty ladder")
     }
 
@@ -101,10 +103,33 @@ impl LatencyHistogram {
 pub struct ModelMetrics {
     /// Requests accepted into the queue (excludes shed).
     pub requests: u64,
-    /// Requests executed and replied to.
+    /// Requests executed successfully and replied to.
     pub completed: u64,
     /// Requests rejected because the bounded queue was at capacity.
     pub shed: u64,
+    /// Requests answered [`super::InferError::ExecFailed`] — their
+    /// batch panicked during execution (caught at the batch boundary).
+    pub failed: u64,
+    /// Requests answered [`super::InferError::Timeout`] — stale past
+    /// the [`super::BatchPolicy::request_budget`] when their batch was
+    /// taken.
+    pub timeouts: u64,
+    /// Requests answered [`super::InferError::Aborted`] — failed
+    /// without execution across a dispatcher restart or teardown.
+    pub aborted: u64,
+    /// Batch executions that panicked (each fails a whole batch; the
+    /// per-request count is [`failed`](Self::failed)).
+    pub exec_failures: u64,
+    /// Submits fast-rejected because the model was quarantined.
+    pub rejected_quarantined: u64,
+    /// Times the circuit breaker tripped this model into quarantine
+    /// (including a failed half-open probe re-tripping it).
+    pub quarantine_trips: u64,
+    /// Half-open probe requests admitted after a quarantine cooldown.
+    pub quarantine_probes: u64,
+    /// Times the model recovered (a successful execution closed the
+    /// breaker from quarantine/half-open).
+    pub quarantine_recoveries: u64,
     /// Coalesced batches executed.
     pub batches: u64,
     /// Samples executed across those batches (= `completed`).
@@ -175,10 +200,13 @@ impl ModelMetrics {
 pub struct TenantCounters {
     /// Requests accepted from this tenant.
     pub requests: u64,
-    /// Requests executed and replied to.
+    /// Requests executed successfully and replied to.
     pub completed: u64,
     /// Requests shed back to this tenant.
     pub shed: u64,
+    /// Accepted requests answered with a terminal [`super::InferError`]
+    /// (exec failure, timeout, or abort).
+    pub failed: u64,
 }
 
 /// A consistent copy of every counter the service keeps, taken under
@@ -189,6 +217,12 @@ pub struct MetricsSnapshot {
     pub models: BTreeMap<String, ModelMetrics>,
     /// Per-tenant counters, keyed by tenant id.
     pub tenants: BTreeMap<u64, TenantCounters>,
+    /// Times the watchdog respawned a dead dispatcher (started mode).
+    pub watchdog_restarts: u64,
+    /// Dispatcher loop iterations observed — the heartbeat the
+    /// watchdog layer surfaces (monotonically increasing while the
+    /// dispatcher is alive; manual-mode services never beat).
+    pub dispatcher_heartbeats: u64,
 }
 
 impl MetricsSnapshot {
@@ -197,7 +231,7 @@ impl MetricsSnapshot {
         self.models.values().map(|m| m.requests).sum()
     }
 
-    /// Requests executed and replied to across all models.
+    /// Requests executed successfully and replied to across all models.
     pub fn total_completed(&self) -> u64 {
         self.models.values().map(|m| m.completed).sum()
     }
@@ -205,6 +239,25 @@ impl MetricsSnapshot {
     /// Requests shed across all models.
     pub fn total_shed(&self) -> u64 {
         self.models.values().map(|m| m.shed).sum()
+    }
+
+    /// Accepted requests answered with a terminal error across all
+    /// models (exec failures + timeouts + aborts). Together with
+    /// [`total_completed`](Self::total_completed) this accounts for
+    /// every terminal reply: `requests = completed + failed + still
+    /// queued`.
+    pub fn total_failed(&self) -> u64 {
+        self.models.values().map(|m| m.failed + m.timeouts + m.aborted).sum()
+    }
+
+    /// Quarantine trips across all models.
+    pub fn total_quarantine_trips(&self) -> u64 {
+        self.models.values().map(|m| m.quarantine_trips).sum()
+    }
+
+    /// Quarantine recoveries across all models.
+    pub fn total_quarantine_recoveries(&self) -> u64 {
+        self.models.values().map(|m| m.quarantine_recoveries).sum()
     }
 
     /// Mean coalesced batch size across all models.
@@ -286,6 +339,24 @@ mod tests {
         assert_eq!((m.size_flushes, m.deadline_flushes, m.drain_flushes), (1, 1, 1));
         assert!((m.mean_batch() - 4.0).abs() < 1e-9);
         assert!(m.batched_ratio() > 0.0);
+    }
+
+    #[test]
+    fn failure_counters_aggregate_into_total_failed() {
+        let mut s = MetricsSnapshot::default();
+        let a = s.models.entry("a".into()).or_default();
+        a.requests = 10;
+        a.failed = 3;
+        a.timeouts = 2;
+        a.exec_failures = 1;
+        a.quarantine_trips = 1;
+        let b = s.models.entry("b".into()).or_default();
+        b.aborted = 4;
+        b.quarantine_recoveries = 1;
+        assert_eq!(s.total_failed(), 9);
+        assert_eq!(s.total_quarantine_trips(), 1);
+        assert_eq!(s.total_quarantine_recoveries(), 1);
+        assert_eq!(s.total_completed(), 0);
     }
 
     #[test]

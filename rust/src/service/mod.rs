@@ -33,18 +33,45 @@
 //!   coalesced output bit-exact against serial per-request execution,
 //!   and writes `BENCH_service.json` for the CI ratchet.
 //!
+//! The layer is built to *survive* faults, not just schedule around
+//! load — the paper's deployment target is an always-on wearable where
+//! a wedged pipeline is a dead device:
+//!
+//! * **Panic isolation** — each batch executes under `catch_unwind`;
+//!   a panicking kernel fails only that batch's requests with a typed
+//!   [`InferError::ExecFailed`] reply. Every accepted request gets
+//!   exactly one terminal reply — success, timeout, or error — never
+//!   silence.
+//! * **Model quarantine** — [`ModelRegistry`] runs a per-model circuit
+//!   breaker ([`BreakerPolicy`]): consecutive execution failures trip
+//!   the model into a `Quarantined` state that fast-rejects at submit,
+//!   then a half-open probe after a cooldown decides recovery.
+//! * **Watchdog supervision** — started services run the dispatcher
+//!   under a supervisor that detects dispatcher death, fails (never
+//!   leaks) pending requests, and respawns the dispatcher.
+//! * **Deadline budgets** — [`BatchPolicy::request_budget`] answers
+//!   stale queued requests [`InferError::Timeout`] instead of
+//!   executing them.
+//! * **Fault injection** — a seeded deterministic [`FaultPlan`]
+//!   (exec panics, latency spikes, dispatcher kills, poisoned inputs)
+//!   drives the [`chaos`] harness behind the `service chaos` CLI,
+//!   which writes `BENCH_chaos.json` and is asserted in CI.
+//!
 //! [`submit`]: InferenceService::submit
 
+pub mod chaos;
+pub mod faults;
 pub mod host;
 pub mod load;
 pub mod metrics;
 pub mod queue;
 pub mod registry;
 
+pub use faults::FaultPlan;
 pub use host::{InferenceService, Output, Reply};
 pub use metrics::{LatencyHistogram, MetricsSnapshot, ModelMetrics, TenantCounters};
 pub use queue::{Batch, FlushReason, MicroBatchQueue};
-pub use registry::{ModelRegistry, ServiceModel};
+pub use registry::{Admission, BreakerEvent, BreakerPolicy, HealthState, ModelRegistry, ServiceModel};
 
 use std::time::Duration;
 
@@ -69,6 +96,13 @@ pub struct BatchPolicy {
     /// keeps the serial plan path (best for small models, where the
     /// per-layer barrier costs more than it buys).
     pub exec_workers: usize,
+    /// Per-request deadline budget: a request that has already waited
+    /// longer than this when its batch is taken for execution is
+    /// answered [`InferError::Timeout`] instead of executed — a stale
+    /// answer to a real-time classification request is worthless, and
+    /// skipping it sheds load exactly when the service is furthest
+    /// behind. `None` (the default) never times requests out.
+    pub request_budget: Option<Duration>,
 }
 
 impl Default for BatchPolicy {
@@ -78,6 +112,7 @@ impl Default for BatchPolicy {
             max_delay: Duration::from_millis(1),
             queue_capacity: 1024,
             exec_workers: 1,
+            request_budget: None,
         }
     }
 }
@@ -93,6 +128,7 @@ impl BatchPolicy {
             max_delay: self.max_delay,
             queue_capacity: self.queue_capacity.max(max_batch),
             exec_workers: self.exec_workers,
+            request_budget: self.request_budget,
         }
     }
 }
@@ -117,6 +153,25 @@ pub enum SubmitError {
         /// The capacity the queue was at when the request was shed.
         capacity: usize,
     },
+    /// A non-finite (NaN/inf) value in an f32-plan input. Q-family
+    /// plans quantize (and so saturate) at submit time; the f32 path
+    /// would propagate the poison through every sample coalesced into
+    /// the same batch's kernel call, so it is rejected up front —
+    /// mirroring the NaN/inf hardening in [`crate::fann::io`].
+    BadInput {
+        /// Index of the first non-finite element in the submitted
+        /// sample.
+        index: usize,
+    },
+    /// The model is quarantined: its circuit breaker tripped after
+    /// consecutive execution failures and the cooldown has not elapsed
+    /// (or a half-open probe is already in flight). Fast-rejected at
+    /// submit so a broken model cannot consume queue space or
+    /// execution time. See [`BreakerPolicy`].
+    Quarantined {
+        /// The quarantined model's id.
+        model: String,
+    },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -129,8 +184,60 @@ impl std::fmt::Display for SubmitError {
             SubmitError::QueueFull { capacity } => {
                 write!(f, "queue full (capacity {capacity}): request shed")
             }
+            SubmitError::BadInput { index } => {
+                write!(f, "non-finite input value at index {index} (NaN/inf rejected)")
+            }
+            SubmitError::Quarantined { model } => {
+                write!(f, "model {model:?} is quarantined (circuit breaker open)")
+            }
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
+
+/// Why an *accepted* request failed — the error side of a terminal
+/// [`Reply`]. Every accepted request gets exactly one terminal reply:
+/// a successful [`Output`] or one of these. (Rejected submits never
+/// enter the queue and are reported synchronously via [`SubmitError`].)
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InferError {
+    /// The batch this request rode in panicked during execution (a
+    /// kernel bug or an injected fault). The panic was caught at the
+    /// batch boundary; only this batch's requests fail.
+    ExecFailed {
+        /// The caught panic payload (or a placeholder for non-string
+        /// payloads).
+        detail: String,
+    },
+    /// The request waited longer than the configured
+    /// [`BatchPolicy::request_budget`] before its batch was taken, so
+    /// it was answered instead of executed stale.
+    Timeout {
+        /// How long the request had waited when it was timed out (µs).
+        waited_us: u64,
+        /// The configured budget (µs).
+        budget_us: u64,
+    },
+    /// The request was failed without execution — the dispatcher died
+    /// and the watchdog failed all pending requests before respawning
+    /// it, or the service was torn down abnormally.
+    Aborted {
+        /// Human-readable cause (e.g. `"dispatcher restarted"`).
+        detail: String,
+    },
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::ExecFailed { detail } => write!(f, "batch execution failed: {detail}"),
+            InferError::Timeout { waited_us, budget_us } => {
+                write!(f, "request timed out (waited {waited_us} us, budget {budget_us} us)")
+            }
+            InferError::Aborted { detail } => write!(f, "request aborted: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}

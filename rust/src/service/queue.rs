@@ -10,7 +10,7 @@
 //! the wakeups.
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::BatchPolicy;
 
@@ -48,6 +48,30 @@ pub struct Batch<T> {
     pub items: Vec<(T, Instant)>,
     /// The trigger that released this batch.
     pub reason: FlushReason,
+}
+
+impl<T> Batch<T> {
+    /// Split into `(live, expired)` at `now` under a per-request
+    /// deadline budget: requests that have already waited longer than
+    /// `budget` are expired (answered `Timeout` by the host instead of
+    /// executed — a stale real-time classification is worthless), the
+    /// rest execute. `budget: None` expires nothing. Pure and
+    /// time-parametric like the rest of the scheduler core; relative
+    /// order is preserved on both sides.
+    #[allow(clippy::type_complexity)]
+    pub fn split_expired(
+        self,
+        budget: Option<Duration>,
+        now: Instant,
+    ) -> (Vec<(T, Instant)>, Vec<(T, Instant)>) {
+        match budget {
+            None => (self.items, Vec::new()),
+            Some(b) => self
+                .items
+                .into_iter()
+                .partition(|&(_, enq)| now.duration_since(enq) <= b),
+        }
+    }
 }
 
 /// A bounded per-model FIFO with size-or-deadline flushing. Generic
@@ -158,7 +182,7 @@ mod tests {
             max_batch,
             max_delay: Duration::from_millis(delay_ms),
             queue_capacity: capacity,
-            exec_workers: 1,
+            ..BatchPolicy::default()
         }
     }
 
@@ -225,6 +249,28 @@ mod tests {
             ..BatchPolicy::default()
         });
         assert_eq!(q.policy.max_batch, 1);
+    }
+
+    #[test]
+    fn split_expired_partitions_on_budget_and_preserves_order() {
+        let mut q = MicroBatchQueue::new(&policy(8, 1000, 64));
+        let t0 = Instant::now();
+        q.push('a', t0).unwrap();
+        q.push('b', t0 + Duration::from_millis(4)).unwrap();
+        q.push('c', t0 + Duration::from_millis(9)).unwrap();
+        let b = q.drain_batch().unwrap();
+        // Budget 5ms at t0+10ms: 'a' waited 10ms (expired), 'b' 6ms
+        // (expired), 'c' 1ms (live).
+        let now = t0 + Duration::from_millis(10);
+        let (live, expired) = b.split_expired(Some(Duration::from_millis(5)), now);
+        assert_eq!(live.iter().map(|&(v, _)| v).collect::<Vec<_>>(), vec!['c']);
+        assert_eq!(expired.iter().map(|&(v, _)| v).collect::<Vec<_>>(), vec!['a', 'b']);
+        // No budget: nothing expires.
+        let mut q = MicroBatchQueue::new(&policy(8, 1000, 64));
+        q.push('z', t0).unwrap();
+        let (live, expired) = q.drain_batch().unwrap().split_expired(None, now);
+        assert_eq!(live.len(), 1);
+        assert!(expired.is_empty());
     }
 
     #[test]

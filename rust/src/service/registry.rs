@@ -1,4 +1,5 @@
-//! The model registry: many compiled [`ExecPlan`]s keyed by model id.
+//! The model registry: many compiled [`ExecPlan`]s keyed by model id,
+//! plus each model's health state machine (the circuit breaker).
 //!
 //! A registered model is an immutable `Arc<ServiceModel>` — the plan's
 //! arena is position-independent and read-only at inference time, so
@@ -7,13 +8,100 @@
 //! startup for a whole fleet of model variants; ids are unique (a
 //! second registration under the same id is an error, never a silent
 //! replacement of a model that in-flight requests still reference).
+//!
+//! Health lives beside the plans: [`BreakerPolicy::failure_threshold`]
+//! consecutive execution failures trip a model from `Closed` to
+//! `Open` (quarantined — submits fast-reject), the configured cooldown
+//! later a single half-open probe is admitted, and its outcome decides
+//! recovery (`Closed`) or another quarantine round. Every transition
+//! is time-parametric — `now` is an argument — so the whole state
+//! machine is unit-testable without sleeping, in the same style as the
+//! scheduler core.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::kernels::{ExecPlan, PlanSource};
+
+/// Circuit-breaker policy shared by every model in a registry.
+#[derive(Debug, Clone)]
+pub struct BreakerPolicy {
+    /// Consecutive execution failures that trip a model into
+    /// quarantine. Clamped to ≥ 1.
+    pub failure_threshold: u32,
+    /// How long a tripped model stays quarantined before one half-open
+    /// probe is admitted.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> Self {
+        Self {
+            failure_threshold: 3,
+            cooldown: Duration::from_millis(250),
+        }
+    }
+}
+
+/// A model's externally visible health, for reports and tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Healthy: submits are admitted normally.
+    Closed,
+    /// Quarantined: submits fast-reject until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed: one probe decides recovery vs re-quarantine.
+    HalfOpen,
+}
+
+/// What [`ModelRegistry::admit`] decided for one submit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Healthy model — enqueue normally.
+    Accept,
+    /// The model was quarantined and its cooldown has elapsed: this
+    /// request is the half-open probe. The caller must mark the
+    /// request so a probe that never executes (shed, timed out,
+    /// aborted) can be released via
+    /// [`ModelRegistry::release_probe`].
+    Probe,
+    /// Quarantined (cooldown pending, or a probe is already in
+    /// flight) — reject with [`super::SubmitError::Quarantined`].
+    Reject,
+}
+
+/// What [`ModelRegistry::note_exec`] observed — the host turns these
+/// into quarantine metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerEvent {
+    /// No state transition.
+    None,
+    /// The model just entered quarantine (threshold reached, or a
+    /// half-open probe failed).
+    Tripped,
+    /// The model just recovered (a successful execution while
+    /// half-open or quarantined).
+    Recovered,
+}
+
+/// Per-model breaker state. `Closed` counts consecutive failures;
+/// `Open` remembers when the cooldown ends; `HalfOpen` tracks whether
+/// the single probe slot is taken.
+#[derive(Debug, Clone, Copy)]
+enum Health {
+    Closed { consecutive_failures: u32 },
+    Open { until: Instant },
+    HalfOpen { probe_in_flight: bool },
+}
+
+impl Default for Health {
+    fn default() -> Self {
+        Health::Closed { consecutive_failures: 0 }
+    }
+}
 
 /// One registered model: an id plus its compiled execution plan.
 #[derive(Debug)]
@@ -34,23 +122,46 @@ impl ServiceModel {
     }
 }
 
-/// Thread-safe id → [`ServiceModel`] map. `BTreeMap` keeps `ids()` and
-/// every report listing deterministic.
+/// Thread-safe id → [`ServiceModel`] map plus per-model circuit
+/// breakers. `BTreeMap` keeps `ids()` and every report listing
+/// deterministic.
 #[derive(Debug, Default)]
 pub struct ModelRegistry {
     models: RwLock<BTreeMap<String, Arc<ServiceModel>>>,
+    breaker: BreakerPolicy,
+    health: Mutex<BTreeMap<String, Health>>,
 }
 
 impl ModelRegistry {
-    /// An empty registry.
+    /// An empty registry with the default [`BreakerPolicy`].
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// An empty registry with an explicit circuit-breaker policy.
+    pub fn with_breaker(breaker: BreakerPolicy) -> Self {
+        Self {
+            breaker: BreakerPolicy {
+                failure_threshold: breaker.failure_threshold.max(1),
+                cooldown: breaker.cooldown,
+            },
+            ..Self::default()
+        }
+    }
+
+    /// The circuit-breaker policy every model in this registry runs
+    /// under.
+    pub fn breaker(&self) -> &BreakerPolicy {
+        &self.breaker
     }
 
     /// Register an already-compiled plan under `id`. Errors when the id
     /// is taken.
     pub fn register_plan(&self, id: &str, plan: ExecPlan) -> Result<()> {
-        let mut models = self.models.write().expect("registry lock");
+        // Registration mutates nothing but the map, so a poisoned lock
+        // (a panic elsewhere while holding it) leaves a fully valid
+        // map — recover instead of cascading the panic.
+        let mut models = self.models.write().unwrap_or_else(|e| e.into_inner());
         if models.contains_key(id) {
             bail!("model id {id:?} already registered");
         }
@@ -69,22 +180,120 @@ impl ModelRegistry {
 
     /// Look up a model by id.
     pub fn get(&self, id: &str) -> Option<Arc<ServiceModel>> {
-        self.models.read().expect("registry lock").get(id).cloned()
+        // Readers see an always-consistent map even after a writer
+        // panic (the map is updated via single `insert` calls).
+        self.models.read().unwrap_or_else(|e| e.into_inner()).get(id).cloned()
     }
 
     /// Registered ids, sorted.
     pub fn ids(&self) -> Vec<String> {
-        self.models.read().expect("registry lock").keys().cloned().collect()
+        self.models
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .keys()
+            .cloned()
+            .collect()
     }
 
     /// Number of registered models.
     pub fn len(&self) -> usize {
-        self.models.read().expect("registry lock").len()
+        self.models.read().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     /// Whether no model is registered.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Admission decision for one submit to `id` at time `now`:
+    /// healthy models accept, quarantined models reject until the
+    /// cooldown elapses, and the first submit after the cooldown is
+    /// admitted as the single half-open probe.
+    pub fn admit(&self, id: &str, now: Instant) -> Admission {
+        let mut health = self.health.lock().unwrap_or_else(|e| e.into_inner());
+        let h = health.entry(id.to_string()).or_default();
+        match *h {
+            Health::Closed { .. } => Admission::Accept,
+            Health::Open { until } => {
+                if now < until {
+                    Admission::Reject
+                } else {
+                    *h = Health::HalfOpen { probe_in_flight: true };
+                    Admission::Probe
+                }
+            }
+            Health::HalfOpen { probe_in_flight: false } => {
+                *h = Health::HalfOpen { probe_in_flight: true };
+                Admission::Probe
+            }
+            Health::HalfOpen { probe_in_flight: true } => Admission::Reject,
+        }
+    }
+
+    /// Record one execution outcome for `id` at time `now` and apply
+    /// the breaker transition: a success closes the breaker (a
+    /// [`BreakerEvent::Recovered`] if it was open/half-open); a failure
+    /// counts toward [`BreakerPolicy::failure_threshold`] and trips —
+    /// or re-trips a failed half-open probe — into quarantine until
+    /// `now + cooldown`.
+    pub fn note_exec(&self, id: &str, ok: bool, now: Instant) -> BreakerEvent {
+        let mut health = self.health.lock().unwrap_or_else(|e| e.into_inner());
+        let h = health.entry(id.to_string()).or_default();
+        if ok {
+            let was_unhealthy = !matches!(*h, Health::Closed { .. });
+            *h = Health::Closed { consecutive_failures: 0 };
+            return if was_unhealthy { BreakerEvent::Recovered } else { BreakerEvent::None };
+        }
+        match *h {
+            Health::Closed { consecutive_failures } => {
+                let failures = consecutive_failures + 1;
+                if failures >= self.breaker.failure_threshold {
+                    *h = Health::Open { until: now + self.breaker.cooldown };
+                    BreakerEvent::Tripped
+                } else {
+                    *h = Health::Closed { consecutive_failures: failures };
+                    BreakerEvent::None
+                }
+            }
+            // A failed half-open probe re-opens with a fresh cooldown.
+            Health::HalfOpen { .. } => {
+                *h = Health::Open { until: now + self.breaker.cooldown };
+                BreakerEvent::Tripped
+            }
+            // Already quarantined (a pre-trip batch finished late):
+            // refresh the cooldown, no new event.
+            Health::Open { .. } => {
+                *h = Health::Open { until: now + self.breaker.cooldown };
+                BreakerEvent::None
+            }
+        }
+    }
+
+    /// Release the half-open probe slot for `id` without an execution
+    /// outcome — the probe request was failed before it ran (timed
+    /// out, or aborted by a dispatcher restart). The next admitted
+    /// submit becomes the new probe, so a lost probe can never wedge a
+    /// model in half-open limbo.
+    pub fn release_probe(&self, id: &str) {
+        let mut health = self.health.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(h) = health.get_mut(id) {
+            if matches!(*h, Health::HalfOpen { probe_in_flight: true }) {
+                *h = Health::HalfOpen { probe_in_flight: false };
+            }
+        }
+    }
+
+    /// The model's externally visible health right now (quarantine
+    /// expiry is decided lazily at [`admit`](Self::admit) time, so an
+    /// `Open` model whose cooldown has passed still reports `Open`
+    /// until the next submit probes it).
+    pub fn health(&self, id: &str) -> HealthState {
+        let health = self.health.lock().unwrap_or_else(|e| e.into_inner());
+        match health.get(id) {
+            None | Some(Health::Closed { .. }) => HealthState::Closed,
+            Some(Health::Open { .. }) => HealthState::Open,
+            Some(Health::HalfOpen { .. }) => HealthState::HalfOpen,
+        }
     }
 }
 
@@ -117,6 +326,65 @@ mod tests {
         assert_eq!(m.plan().num_inputs(), 4);
         assert!(!reg.get("fixed-model").unwrap().plan().is_float());
         assert!(reg.get("missing").is_none());
+    }
+
+    #[test]
+    fn breaker_trips_after_threshold_probes_and_recovers() {
+        let reg = ModelRegistry::with_breaker(BreakerPolicy {
+            failure_threshold: 3,
+            cooldown: Duration::from_millis(10),
+        });
+        let t0 = Instant::now();
+        // Healthy model admits freely; sub-threshold failures don't trip.
+        assert_eq!(reg.admit("m", t0), Admission::Accept);
+        assert_eq!(reg.note_exec("m", false, t0), BreakerEvent::None);
+        assert_eq!(reg.note_exec("m", false, t0), BreakerEvent::None);
+        assert_eq!(reg.health("m"), HealthState::Closed);
+        // Third consecutive failure trips quarantine.
+        assert_eq!(reg.note_exec("m", false, t0), BreakerEvent::Tripped);
+        assert_eq!(reg.health("m"), HealthState::Open);
+        // During cooldown every submit is rejected.
+        assert_eq!(reg.admit("m", t0 + Duration::from_millis(5)), Admission::Reject);
+        // Cooldown elapsed: exactly one probe is admitted, the rest
+        // keep rejecting while it is in flight.
+        let t1 = t0 + Duration::from_millis(10);
+        assert_eq!(reg.admit("m", t1), Admission::Probe);
+        assert_eq!(reg.health("m"), HealthState::HalfOpen);
+        assert_eq!(reg.admit("m", t1), Admission::Reject);
+        // Failed probe re-trips with a fresh cooldown.
+        assert_eq!(reg.note_exec("m", false, t1), BreakerEvent::Tripped);
+        assert_eq!(reg.admit("m", t1 + Duration::from_millis(5)), Admission::Reject);
+        // Next probe succeeds: recovered, back to normal admission.
+        let t2 = t1 + Duration::from_millis(10);
+        assert_eq!(reg.admit("m", t2), Admission::Probe);
+        assert_eq!(reg.note_exec("m", true, t2), BreakerEvent::Recovered);
+        assert_eq!(reg.health("m"), HealthState::Closed);
+        assert_eq!(reg.admit("m", t2), Admission::Accept);
+        // A success resets the consecutive-failure counter.
+        assert_eq!(reg.note_exec("m", false, t2), BreakerEvent::None);
+        assert_eq!(reg.note_exec("m", true, t2), BreakerEvent::None);
+        assert_eq!(reg.note_exec("m", false, t2), BreakerEvent::None);
+        assert_eq!(reg.note_exec("m", false, t2), BreakerEvent::None);
+        assert_eq!(reg.health("m"), HealthState::Closed);
+    }
+
+    #[test]
+    fn released_probe_slot_readmits_a_new_probe() {
+        let reg = ModelRegistry::with_breaker(BreakerPolicy {
+            failure_threshold: 1,
+            cooldown: Duration::from_millis(1),
+        });
+        let t0 = Instant::now();
+        assert_eq!(reg.note_exec("m", false, t0), BreakerEvent::Tripped);
+        let t1 = t0 + Duration::from_millis(1);
+        assert_eq!(reg.admit("m", t1), Admission::Probe);
+        assert_eq!(reg.admit("m", t1), Admission::Reject);
+        // The probe died without executing (e.g. a dispatcher
+        // restart): releasing its slot lets the next submit probe.
+        reg.release_probe("m");
+        assert_eq!(reg.admit("m", t1), Admission::Probe);
+        // Health of a never-seen model is Closed.
+        assert_eq!(reg.health("ghost"), HealthState::Closed);
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! Property test for the fault-tolerance layer: over randomized seeded
+//! fault schedules (injected exec-panic windows that trip and then
+//! release the per-model quarantine breaker), randomized batching
+//! policies (size and deadline flush triggers, shed-at-capacity,
+//! optional per-request deadline budgets), randomized pump/advance
+//! interleavings and randomized shutdown timing (mid-run
+//! `fail_pending`, end-of-run drain), every **accepted** request
+//! receives **exactly one** terminal reply — never zero (lost), never
+//! two (duplicate) — and the service's own counters reconcile with
+//! what the client-side channel saw. Everything runs in manual mode on
+//! a virtual clock, so the whole admit/flush/timeout/quarantine
+//! timeline is deterministic per seed and needs no sleeps.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use fann_on_mcu::fann::{Activation, FixedNetwork, Network};
+use fann_on_mcu::kernels::ExecPlan;
+use fann_on_mcu::service::{
+    BatchPolicy, BreakerPolicy, FaultPlan, InferenceService, ModelRegistry, SubmitError,
+};
+use fann_on_mcu::util::proptest::{check, ensure};
+use fann_on_mcu::util::rng::Rng;
+
+/// One f32 model and one fixed-point model, so both the finiteness
+/// check (f32 rejects NaN at submit) and the quantize-at-submit path
+/// (Q saturates, immune to poison) stay under test.
+const MODELS: [&str; 2] = ["pf", "pq"];
+
+fn registry(rng: &mut Rng, breaker: BreakerPolicy) -> Arc<ModelRegistry> {
+    let reg = Arc::new(ModelRegistry::with_breaker(breaker));
+    let mut net = Network::new(&[3, 5, 2], Activation::Tanh, Activation::Sigmoid).unwrap();
+    net.randomize(rng, None);
+    reg.register("pf", &net).unwrap();
+    let fixed = FixedNetwork::from_float(&net, 1.0).unwrap();
+    reg.register_plan("pq", ExecPlan::compile(&fixed)).unwrap();
+    reg
+}
+
+#[test]
+fn every_accepted_request_gets_exactly_one_terminal_reply() {
+    check("exactly-one-terminal-reply", 60, |rng| {
+        // Randomized policy: tiny batches and capacities so size
+        // triggers, deadline triggers and sheds all fire often.
+        let mut policy = BatchPolicy {
+            max_batch: rng.range_usize(1, 4),
+            max_delay: Duration::from_micros(rng.range_usize(50, 2000) as u64),
+            queue_capacity: rng.range_usize(2, 8),
+            request_budget: if rng.below(3) == 0 {
+                None
+            } else {
+                Some(Duration::from_micros(rng.range_usize(100, 3000) as u64))
+            },
+            ..BatchPolicy::default()
+        };
+        if rng.below(3) == 0 {
+            policy.exec_workers = 2;
+        }
+        let breaker = BreakerPolicy {
+            failure_threshold: rng.range_usize(1, 3) as u32,
+            cooldown: Duration::from_micros(rng.range_usize(200, 2000) as u64),
+        };
+        // Randomized fault schedule: a panic window (possibly empty)
+        // over one model's execution-attempt sequence. No latency
+        // spikes (they sleep for real) and no dispatcher kills (manual
+        // mode has no dispatcher) — those live in the chaos harness.
+        let from = rng.below(4) as u64;
+        let plan = FaultPlan {
+            seed: rng.next_u64(),
+            panic_model: MODELS[rng.below(2)].to_string(),
+            panic_from: from,
+            panic_until: from + rng.below(5) as u64,
+            ..FaultPlan::default()
+        };
+
+        let reg = registry(rng, breaker);
+        let svc = InferenceService::new_with_faults(Arc::clone(&reg), &policy, Some(plan));
+        let (tx, rx) = mpsc::channel();
+        let t0 = Instant::now();
+        let mut offset_us: u64 = 0;
+        let mut accepted: HashMap<u64, &str> = HashMap::new();
+
+        let events = rng.range_usize(8, 40);
+        for _ in 0..events {
+            offset_us += rng.below(1500) as u64;
+            let now = t0 + Duration::from_micros(offset_us);
+            match rng.below(10) {
+                0..=5 => {
+                    let model = MODELS[rng.below(2)];
+                    let tenant = rng.below(3) as u64;
+                    let mut input = [0.0f32; 3];
+                    for v in &mut input {
+                        *v = rng.range_f32(-1.0, 1.0);
+                    }
+                    if model == "pf" && rng.below(8) == 0 {
+                        // Poisoned submit: rejected synchronously, no
+                        // ticket, no queued trace.
+                        let i = rng.below(3);
+                        input[i] = f32::NAN;
+                        ensure(
+                            svc.submit_at(model, tenant, &input, &tx, now)
+                                == Err(SubmitError::BadInput { index: i }),
+                            "NaN input must be rejected at submit",
+                        )?;
+                        continue;
+                    }
+                    match svc.submit_at(model, tenant, &input, &tx, now) {
+                        Ok(ticket) => {
+                            ensure(
+                                accepted.insert(ticket, model).is_none(),
+                                "ticket numbers must be unique",
+                            )?;
+                        }
+                        // Backpressure and quarantine are synchronous
+                        // rejections: nothing queued, nothing owed.
+                        Err(SubmitError::QueueFull { .. })
+                        | Err(SubmitError::Quarantined { .. }) => {}
+                        Err(e) => return Err(format!("unexpected submit rejection: {e}")),
+                    }
+                }
+                6 | 7 => {
+                    svc.pump_at(now);
+                }
+                8 => {
+                    svc.fail_pending("prop: injected mid-run failure");
+                }
+                _ => {
+                    // Jump the clock far enough to expire every
+                    // deadline trigger and request budget, then pump:
+                    // timeouts must be terminal replies too.
+                    offset_us += 10_000;
+                    svc.pump_at(t0 + Duration::from_micros(offset_us));
+                }
+            }
+        }
+
+        // Randomized shutdown timing; manual-mode shutdown drains
+        // whatever is still queued, so nothing may leak.
+        match rng.below(3) {
+            0 => {
+                svc.fail_pending("prop: failed at shutdown");
+            }
+            1 => {
+                svc.pump_at(t0 + Duration::from_micros(offset_us));
+            }
+            _ => {}
+        }
+        let snap = svc.shutdown();
+
+        // The invariant: exactly one terminal reply per accepted
+        // ticket. All senders are gone, so try_iter sees everything.
+        drop(tx);
+        let mut seen: HashMap<u64, u32> = HashMap::new();
+        for r in rx.try_iter() {
+            *seen.entry(r.ticket).or_insert(0) += 1;
+            ensure(
+                accepted.contains_key(&r.ticket),
+                format!("reply for ticket {} that was never accepted", r.ticket),
+            )?;
+        }
+        ensure(
+            seen.values().all(|&c| c == 1),
+            "some ticket received more than one terminal reply",
+        )?;
+        ensure(
+            seen.len() == accepted.len(),
+            format!("lost replies: accepted {} but saw {}", accepted.len(), seen.len()),
+        )?;
+        // And the service's books agree with the channel.
+        ensure(
+            snap.total_requests() == accepted.len() as u64,
+            "accepted-request counter diverged from client view",
+        )?;
+        ensure(
+            snap.total_completed() + snap.total_failed() == accepted.len() as u64,
+            format!(
+                "counters leak: completed {} + failed {} != accepted {}",
+                snap.total_completed(),
+                snap.total_failed(),
+                accepted.len()
+            ),
+        )?;
+        Ok(())
+    });
+}

@@ -10,6 +10,12 @@
 //! * backpressure sheds exactly at capacity, leaves no trace, and the
 //!   queue recovers after a drain;
 //! * per-model and per-tenant counters reconcile with what clients saw;
+//! * NaN/inf f32 inputs are rejected synchronously at submit;
+//! * the circuit breaker trips after consecutive execution failures,
+//!   fast-rejects while quarantined, admits exactly one half-open
+//!   probe, and recovers — deterministically, on a virtual clock;
+//! * the watchdog respawns a killed dispatcher and requests still
+//!   complete (aborted in-flight requests get terminal replies);
 //! * a tiny `service load` run reports the `BENCH_service.json` schema.
 
 use std::collections::HashMap;
@@ -21,7 +27,8 @@ use fann_on_mcu::kernels::PackedWidth;
 use fann_on_mcu::quantize::quantize;
 use fann_on_mcu::service::load::{self, LoadOptions};
 use fann_on_mcu::service::{
-    BatchPolicy, InferenceService, ModelRegistry, Output, SubmitError,
+    BatchPolicy, BreakerPolicy, FaultPlan, HealthState, InferError, InferenceService,
+    ModelRegistry, Output, SubmitError,
 };
 use fann_on_mcu::util::rng::Rng;
 
@@ -37,7 +44,7 @@ fn policy(max_batch: usize, max_delay: Duration, capacity: usize) -> BatchPolicy
         max_batch,
         max_delay,
         queue_capacity: capacity,
-        exec_workers: 1,
+        ..BatchPolicy::default()
     }
 }
 
@@ -93,7 +100,8 @@ fn coalesced_replies_bit_exact_across_plan_families() {
         let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.batch_size == 4 || r.batch_size == 3, "batch_size {}", r.batch_size);
         assert_eq!(
-            r.output, expected[&r.ticket],
+            r.outcome,
+            Ok(expected[&r.ticket].clone()),
             "coalesced reply for ticket {} diverged from serial per-request execution",
             r.ticket
         );
@@ -200,7 +208,125 @@ fn submit_rejects_unknown_model_and_bad_width() {
         svc.submit("m", 0, &[0.0; 4], &tx),
         Err(SubmitError::BadInputWidth { expected: 3, got: 4 })
     );
+    // NaN/inf on the f32 path is rejected synchronously: one poisoned
+    // sample would otherwise corrupt every request coalesced into the
+    // same kernel call.
+    assert_eq!(
+        svc.submit("m", 0, &[f32::NAN, 0.0, 0.0], &tx),
+        Err(SubmitError::BadInput { index: 0 })
+    );
+    assert_eq!(
+        svc.submit("m", 0, &[0.0, 0.0, f32::NEG_INFINITY], &tx),
+        Err(SubmitError::BadInput { index: 2 })
+    );
     assert_eq!(svc.metrics().total_requests(), 0);
+}
+
+#[test]
+fn quarantine_trips_probes_and_recovers_end_to_end() {
+    let reg = Arc::new(ModelRegistry::with_breaker(BreakerPolicy {
+        failure_threshold: 2,
+        cooldown: Duration::from_millis(50),
+    }));
+    reg.register("m", &rand_net(&[2, 3, 1], 21)).unwrap();
+    // Execution attempts 0 and 1 panic; everything later succeeds.
+    let faults = FaultPlan {
+        panic_model: "m".to_string(),
+        panic_from: 0,
+        panic_until: 2,
+        ..FaultPlan::default()
+    };
+    let svc =
+        InferenceService::new_with_faults(Arc::clone(&reg), &policy(1, HOUR, 64), Some(faults));
+    let (tx, rx) = mpsc::channel();
+    let t0 = Instant::now();
+    // Two failing executions (max_batch 1: one request per batch) trip
+    // the breaker at the threshold.
+    svc.submit_at("m", 1, &[0.1, 0.2], &tx, t0).unwrap();
+    svc.submit_at("m", 2, &[0.1, 0.2], &tx, t0).unwrap();
+    assert_eq!(svc.pump_at(t0), 2);
+    for _ in 0..2 {
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(matches!(r.outcome, Err(InferError::ExecFailed { .. })), "{:?}", r.outcome);
+    }
+    assert_eq!(reg.health("m"), HealthState::Open);
+    // During the cooldown, submits fast-reject without touching the
+    // queue.
+    assert_eq!(
+        svc.submit_at("m", 3, &[0.1, 0.2], &tx, t0 + Duration::from_millis(10)),
+        Err(SubmitError::Quarantined { model: "m".to_string() })
+    );
+    // Once the cooldown elapses exactly one probe is admitted...
+    let t1 = t0 + Duration::from_millis(50);
+    svc.submit_at("m", 4, &[0.1, 0.2], &tx, t1).unwrap();
+    assert_eq!(reg.health("m"), HealthState::HalfOpen);
+    // ...and concurrent submits keep rejecting while it is in flight.
+    assert!(matches!(
+        svc.submit_at("m", 5, &[0.1, 0.2], &tx, t1),
+        Err(SubmitError::Quarantined { .. })
+    ));
+    // The probe executes (attempt #2, past the panic window): recovery.
+    assert_eq!(svc.pump_at(t1), 1);
+    assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+    assert_eq!(reg.health("m"), HealthState::Closed);
+    // Healthy again: normal admission, normal execution.
+    svc.submit_at("m", 6, &[0.1, 0.2], &tx, t1).unwrap();
+    assert_eq!(svc.pump_at(t1), 1);
+    assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+    let m = svc.metrics();
+    let mm = &m.models["m"];
+    assert_eq!(mm.exec_failures, 2);
+    assert_eq!(mm.quarantine_trips, 1);
+    assert_eq!(mm.quarantine_probes, 1);
+    assert_eq!(mm.quarantine_recoveries, 1);
+    assert_eq!(mm.rejected_quarantined, 2);
+    assert_eq!(mm.completed, 2);
+    assert_eq!(mm.failed, 2);
+}
+
+#[test]
+fn watchdog_respawns_dispatcher_after_injected_kills() {
+    let reg = Arc::new(ModelRegistry::new());
+    reg.register("m", &rand_net(&[2, 3, 1], 22)).unwrap();
+    // The dispatcher is killed at its first two loop iterations; the
+    // watchdog must fail whatever was pending (terminal Aborted
+    // replies, never silence) and respawn it both times.
+    let faults = FaultPlan {
+        kill_at_iters: vec![0, 1],
+        ..FaultPlan::default()
+    };
+    let svc = InferenceService::start_with_faults(
+        reg,
+        &policy(4, Duration::from_millis(1), 64),
+        Some(faults),
+    );
+    let (tx, rx) = mpsc::channel();
+    let mut completed = false;
+    for _ in 0..100 {
+        svc.submit("m", 1, &[0.5, -0.5], &tx).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        match r.outcome {
+            Ok(_) => {
+                completed = true;
+                break;
+            }
+            // Submitted into a dispatcher-death window: terminal reply
+            // received, resubmit.
+            Err(InferError::Aborted { .. }) => continue,
+            Err(e) => panic!("unexpected terminal error: {e}"),
+        }
+    }
+    assert!(completed, "no request completed after the watchdog respawns");
+    let snap = svc.shutdown();
+    assert_eq!(snap.watchdog_restarts, 2);
+    assert!(snap.dispatcher_heartbeats >= 2);
+    // Exactly one terminal reply per accepted request, even across
+    // restarts.
+    assert_eq!(
+        snap.total_completed() + snap.total_failed(),
+        snap.total_requests(),
+        "{snap:?}"
+    );
 }
 
 #[test]
