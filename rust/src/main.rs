@@ -976,6 +976,8 @@ fn cmd_service_load(args: &Args) -> Result<()> {
         "max-delay-us",
         "capacity",
         "submitters",
+        "shards",
+        "adaptive",
         "workers",
         "out",
     ])?;
@@ -988,6 +990,8 @@ fn cmd_service_load(args: &Args) -> Result<()> {
     opts.requests_per_client = args.get_usize("requests", opts.requests_per_client)?.max(1);
     opts.seed = args.get_u64("seed", opts.seed)?;
     opts.submitters = args.get_usize("submitters", opts.submitters)?.max(1);
+    opts.shards = args.get_usize("shards", opts.shards)?.max(1);
+    opts.policy.adaptive_delay = args.get_flag("adaptive")? || opts.policy.adaptive_delay;
     opts.policy.max_batch = args.get_usize("max-batch", opts.policy.max_batch)?;
     opts.policy.max_delay =
         Duration::from_micros(args.get_u64("max-delay-us", opts.policy.max_delay.as_micros() as u64)?);
@@ -997,7 +1001,7 @@ fn cmd_service_load(args: &Args) -> Result<()> {
 
     println!(
         "service load: {} clients x {} requests = {} total, max_batch {}, max_delay {:?}, \
-         capacity {}, {} submitter(s), {} exec worker(s)",
+         capacity {}, {} submitter(s), {} shard(s), {} exec worker(s), adaptive delay {}",
         opts.clients,
         opts.requests_per_client,
         opts.total_requests(),
@@ -1005,7 +1009,9 @@ fn cmd_service_load(args: &Args) -> Result<()> {
         opts.policy.max_delay,
         opts.policy.queue_capacity,
         opts.submitters,
+        opts.shards,
         opts.policy.exec_workers,
+        if opts.policy.adaptive_delay { "on" } else { "off" },
     );
 
     let report = load::run(&opts)?;
@@ -1043,6 +1049,15 @@ fn cmd_service_load(args: &Args) -> Result<()> {
         report.retries_total,
         report.tenants,
     );
+    println!(
+        "head-of-line: hot {} flooded vs cold {} — cold p99 {} us at 1 shard \
+         vs {} us at {} shard(s)",
+        report.head_of_line.hot_model,
+        report.head_of_line.cold_model,
+        report.head_of_line.cold_p99_us_single,
+        report.head_of_line.cold_p99_us_sharded,
+        report.head_of_line.shards,
+    );
     if report.gave_up_total > 0 {
         println!(
             "warning: {} requests gave up after exhausting the shed-retry budget",
@@ -1063,7 +1078,7 @@ fn cmd_service_load(args: &Args) -> Result<()> {
 fn cmd_service_chaos(args: &Args) -> Result<()> {
     use fann_on_mcu::service::chaos::{self, ChaosOptions};
 
-    args.expect_only(&["quick", "clients", "requests", "seed", "submitters", "out"])?;
+    args.expect_only(&["quick", "clients", "requests", "seed", "submitters", "shards", "out"])?;
     let mut opts = if args.get_flag("quick")? {
         ChaosOptions::quick()
     } else {
@@ -1075,14 +1090,17 @@ fn cmd_service_chaos(args: &Args) -> Result<()> {
     opts.seed = seed;
     opts.plan.seed = seed;
     opts.submitters = args.get_usize("submitters", opts.submitters)?.max(1);
+    opts.shards = args.get_usize("shards", opts.shards)?.max(1);
     let out_path = args.get_or("out", "BENCH_chaos.json");
 
     println!(
-        "service chaos: {} clients x {} requests = {} total; panic window [{}, {}) on {}, \
+        "service chaos: {} clients x {} requests = {} total on {} shard(s); \
+         panic window [{}, {}) on {}, \
          nan_prob {}, dispatcher kills at {:?}; breaker threshold {}, cooldown {:?}",
         opts.clients,
         opts.requests_per_client,
         opts.total_requests(),
+        opts.shards,
         opts.plan.panic_from,
         opts.plan.panic_until,
         opts.plan.panic_model,
@@ -1124,6 +1142,11 @@ fn cmd_service_chaos(args: &Args) -> Result<()> {
         report.p99_us,
         report.p99_us_faulted_model,
         report.p99_us_healthy_models,
+    );
+    println!(
+        "shards: {} dispatcher shard(s); per-shard counters reconcile: {}",
+        report.shard_rows.len(),
+        report.shard_accounting_ok,
     );
     report.check()
 }
@@ -1178,14 +1201,17 @@ COMMANDS:
                  vs budget, energy, speedup_wolf8_vs_m4 headline)
   service load   [--quick] [--clients N] [--requests N] [--seed N]
                  [--max-batch N] [--max-delay-us N] [--capacity N]
-                 [--submitters N] [--workers N] [--out FILE]
+                 [--submitters N] [--shards N] [--adaptive] [--workers N]
+                 [--out FILE]
                  replay simulated wearable clients (EMG q7 / ECG q32 /
                  EEG f32) through the multi-tenant micro-batching
-                 service; every coalesced reply asserted bit-exact vs
-                 serial per-request execution; writes BENCH_service.json
-                 (samples/s, p50/p99 latency, mean batch size)
+                 service across N dispatcher shards; every coalesced
+                 reply asserted bit-exact vs serial per-request
+                 execution; writes BENCH_service.json (samples/s,
+                 p50/p99 latency, mean batch size, per-shard rows, and
+                 a hot/cold head-of-line decoupling probe)
   service chaos  [--quick] [--clients N] [--requests N] [--seed N]
-                 [--submitters N] [--out FILE]
+                 [--submitters N] [--shards N] [--out FILE]
                  seeded fault injection against the same service (exec
                  panics, latency spikes, NaN-poisoned inputs, dispatcher
                  kills); audits exactly-one-terminal-reply, quarantine

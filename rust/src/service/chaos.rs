@@ -43,9 +43,10 @@ use crate::util::json::Json;
 
 use super::faults::FaultPlan;
 use super::host::{InferenceService, Output};
-use super::load::{build_models, pool_index, shed_backoff, LoadModel, MAX_SHED_RETRIES};
-use super::metrics::MetricsSnapshot;
+use super::load::{build_models, pool_index, shard_rows_json, shed_backoff, LoadModel, MAX_SHED_RETRIES};
+use super::metrics::{MetricsSnapshot, ShardMetrics};
 use super::registry::{BreakerPolicy, ModelRegistry};
+use super::shard::ShardPolicy;
 use super::{BatchPolicy, InferError, SubmitError};
 
 /// How many times a client retries one quarantine-rejected request
@@ -76,6 +77,9 @@ pub struct ChaosOptions {
     pub seed: u64,
     /// Submitter threads the clients are sharded across.
     pub submitters: usize,
+    /// Dispatcher shards the service runs; injected dispatcher kills
+    /// target only the shard hosting the fault plan's panic model.
+    pub shards: usize,
     /// Scheduler policy for the run (includes the request budget that
     /// produces `Timeout` replies under pressure).
     pub policy: BatchPolicy,
@@ -93,6 +97,7 @@ impl Default for ChaosOptions {
             requests_per_client: 4,
             seed,
             submitters: 4,
+            shards: 1,
             policy: BatchPolicy {
                 max_batch: 32,
                 max_delay: Duration::from_millis(1),
@@ -113,6 +118,7 @@ impl Default for ChaosOptions {
                 spike: Duration::from_millis(2),
                 nan_prob: 0.03,
                 kill_at_iters: vec![0, 64],
+                ..FaultPlan::default()
             },
         }
     }
@@ -145,6 +151,7 @@ impl ChaosOptions {
                 spike: Duration::from_millis(1),
                 nan_prob: 0.02,
                 kill_at_iters: vec![0],
+                ..FaultPlan::default()
             },
             ..Self::default()
         }
@@ -359,6 +366,12 @@ pub struct ChaosReport {
     pub accounting_ok: bool,
     /// `mismatches == 0`: no fault corrupted any delivered answer.
     pub bit_exact_ok: bool,
+    /// Per-shard counter rows from the service snapshot.
+    pub shard_rows: Vec<ShardMetrics>,
+    /// The per-shard rows sum back to the aggregate counters: completed,
+    /// failed, watchdog restarts, and dispatcher heartbeats all
+    /// reconcile shard-by-shard.
+    pub shard_accounting_ok: bool,
 }
 
 /// Run the chaos harness: build the load models, start a service with
@@ -373,7 +386,12 @@ pub fn run(opts: &ChaosOptions) -> Result<ChaosReport> {
     for m in &models {
         registry.register_plan(m.id, m.plan.clone())?;
     }
-    let svc = InferenceService::start_with_faults(registry, &opts.policy, Some(opts.plan.clone()));
+    let svc = InferenceService::start_sharded(
+        registry,
+        &opts.policy,
+        &ShardPolicy::new(opts.shards),
+        Some(opts.plan.clone()),
+    );
 
     let submitters = opts.submitters.clamp(1, opts.clients);
     let t0 = Instant::now();
@@ -436,6 +454,15 @@ fn assemble_report(
     let accounting_ok = stats.lost_replies == 0
         && stats.duplicate_replies == 0
         && snap.total_completed() + snap.total_failed() == stats.accepted;
+    let shard_completed: u64 = snap.shards.iter().map(|s| s.completed).sum();
+    let shard_failed: u64 = snap.shards.iter().map(|s| s.failed).sum();
+    let shard_restarts: u64 = snap.shards.iter().map(|s| s.restarts).sum();
+    let shard_heartbeats: u64 = snap.shards.iter().map(|s| s.heartbeats).sum();
+    let shard_accounting_ok = !snap.shards.is_empty()
+        && shard_completed == snap.total_completed()
+        && shard_failed == snap.total_failed()
+        && shard_restarts == snap.watchdog_restarts
+        && shard_heartbeats == snap.dispatcher_heartbeats;
     ChaosReport {
         options: opts.clone(),
         total_requests: opts.total_requests(),
@@ -464,6 +491,8 @@ fn assemble_report(
         wall_seconds,
         accounting_ok,
         bit_exact_ok: stats.mismatches == 0,
+        shard_rows: snap.shards.clone(),
+        shard_accounting_ok,
     }
 }
 
@@ -485,6 +514,12 @@ impl ChaosReport {
             self.bit_exact_ok,
             "{} successful replies diverged from the serial reference under faults",
             self.mismatches
+        );
+        ensure!(
+            self.shard_accounting_ok,
+            "per-shard counters do not reconcile with the aggregate \
+             ({} shard rows)",
+            self.shard_rows.len()
         );
         let plan = &self.options.plan;
         if plan.panic_until > plan.panic_from && !plan.panic_model.is_empty() {
@@ -539,6 +574,8 @@ impl ChaosReport {
                     .field("submitters", o.submitters)
                     .build(),
             )
+            .field("shards", o.shards.max(1))
+            .field("shards_detail", shard_rows_json(&self.shard_rows))
             .field(
                 "breaker",
                 Json::obj()
@@ -554,6 +591,7 @@ impl ChaosReport {
                     .field("panic_until", Json::Int(plan.panic_until as i64))
                     .field("spike_prob", plan.spike_prob)
                     .field("spike_us", Json::Int(plan.spike.as_micros() as i64))
+                    .field("spike_model", plan.spike_model.as_str())
                     .field("nan_prob", plan.nan_prob)
                     .field(
                         "kill_at_iters",
@@ -605,6 +643,7 @@ impl ChaosReport {
             .field("p99_us_healthy_models", Json::Int(self.p99_us_healthy_models as i64))
             .field("wall_seconds", self.wall_seconds)
             .field("accounting_ok", self.accounting_ok)
+            .field("shard_accounting_ok", self.shard_accounting_ok)
             .field("bit_exact_ok", self.bit_exact_ok)
             .build()
     }
@@ -625,6 +664,7 @@ mod tests {
             requests_per_client: 2,
             seed: 11,
             submitters: 2,
+            shards: 2,
             policy: BatchPolicy {
                 max_batch: 4,
                 max_delay: Duration::from_micros(200),
@@ -667,6 +707,13 @@ mod tests {
         assert!(report.quarantine_recoveries > 0);
         assert!(report.watchdog_restarts >= 1);
         assert!(report.accounting_ok && report.bit_exact_ok);
+        // Two dispatcher shards, and every per-shard counter sums back
+        // to the aggregate even with kills landing on the faulted
+        // model's shard only.
+        assert_eq!(report.shard_rows.len(), 2);
+        assert!(report.shard_accounting_ok);
+        let restarts: u64 = report.shard_rows.iter().map(|s| s.restarts).sum();
+        assert_eq!(restarts, report.watchdog_restarts);
         report.check().unwrap();
         let json = report.to_json().to_pretty();
         for field in [
@@ -678,6 +725,9 @@ mod tests {
             "\"watchdog_restarts\"",
             "\"accounting_ok\"",
             "\"bit_exact_ok\"",
+            "\"shards\"",
+            "\"shards_detail\"",
+            "\"shard_accounting_ok\"",
         ] {
             assert!(json.contains(field), "missing {field} in {json}");
         }

@@ -17,7 +17,11 @@
 //! * The dispatcher loop — per iteration:
 //!   [`FaultPlan::should_kill_dispatcher`] panics the dispatcher
 //!   *outside* any batch scope, exercising the watchdog respawn path
-//!   without ever holding un-replied requests.
+//!   without ever holding un-replied requests. In a sharded service the
+//!   kills target the shard hosting [`FaultPlan::panic_model`] (shard 0
+//!   when no panic model is set), so each listed iteration still kills
+//!   exactly one dispatcher and the other shards' watchdog counters
+//!   stay untouched.
 //! * The chaos load generator — per request:
 //!   [`FaultPlan::poison_input`] decides which submitted samples carry
 //!   a NaN, which the submit-time input validation must reject.
@@ -40,11 +44,16 @@ pub struct FaultPlan {
     pub panic_from: u64,
     /// Exclusive end of the panic window.
     pub panic_until: u64,
-    /// Probability that any batch execution (any model) gets an
-    /// injected latency spike.
+    /// Probability that a batch execution gets an injected latency
+    /// spike. Applies to every model unless
+    /// [`spike_model`](Self::spike_model) narrows it.
     pub spike_prob: f64,
     /// Duration of one injected latency spike.
     pub spike: Duration,
+    /// When non-empty, only this model's batches are eligible for
+    /// injected spikes — the targeted "one hot, slow model" used by the
+    /// head-of-line scenario. Empty (the default) spikes any model.
+    pub spike_model: String,
     /// Probability that a chaos load-generator request carries a
     /// NaN-poisoned input (only meaningful for f32 models — Q models
     /// quantize at submit).
@@ -67,22 +76,26 @@ impl Default for FaultPlan {
             panic_until: 0,
             spike_prob: 0.0,
             spike: Duration::ZERO,
+            spike_model: String::new(),
             nan_prob: 0.0,
             kill_at_iters: Vec::new(),
         }
     }
 }
 
-/// splitmix64 finalizer — a cheap, well-mixed hash for fault decisions.
-fn mix(mut z: u64) -> u64 {
+/// splitmix64 finalizer — a cheap, well-mixed hash for fault decisions
+/// (also reused by the load harness's shed-retry jitter, so backed-off
+/// clients never share a jitter stream).
+pub(super) fn mix(mut z: u64) -> u64 {
     z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     z ^ (z >> 31)
 }
 
-/// FNV-1a over the model id, so per-model fault streams differ.
-fn model_tag(model: &str) -> u64 {
+/// FNV-1a over the model id, so per-model fault streams differ (also
+/// the static model → shard hash in [`super::ShardPolicy`]).
+pub(super) fn model_tag(model: &str) -> u64 {
     let mut h: u64 = 0xCBF2_9CE4_8422_2325;
     for b in model.as_bytes() {
         h ^= u64::from(*b);
@@ -103,9 +116,13 @@ impl FaultPlan {
     }
 
     /// The injected latency spike for `model`'s execution attempt
-    /// `seq`, if the seeded coin says so.
+    /// `seq`, if the seeded coin says so (and `model` matches
+    /// [`spike_model`](Self::spike_model) when one is set).
     pub fn spike_for(&self, model: &str, seq: u64) -> Option<Duration> {
         if self.spike_prob <= 0.0 || self.spike.is_zero() {
+            return None;
+        }
+        if !self.spike_model.is_empty() && model != self.spike_model {
             return None;
         }
         let h = mix(self.seed ^ model_tag(model) ^ seq.wrapping_mul(0x2545_F491_4F6C_DD1D));
@@ -143,7 +160,23 @@ mod tests {
             spike: Duration::from_micros(100),
             nan_prob: 0.1,
             kill_at_iters: vec![3, 7],
+            ..FaultPlan::default()
         }
+    }
+
+    #[test]
+    fn spike_model_filter_narrows_spikes_to_one_model() {
+        let p = FaultPlan {
+            spike_prob: 1.0,
+            spike: Duration::from_micros(100),
+            spike_model: "hot".to_string(),
+            ..FaultPlan::default()
+        };
+        assert!((0..32).all(|s| p.spike_for("hot", s).is_some()));
+        assert!((0..32).all(|s| p.spike_for("cold", s).is_none()));
+        // Empty filter keeps the old any-model behavior.
+        let p = FaultPlan { spike_model: String::new(), ..p };
+        assert!(p.spike_for("cold", 0).is_some());
     }
 
     #[test]

@@ -44,9 +44,26 @@
 //! micro-batcher can never change a client's answer — only its latency
 //! or, under faults, whether a typed error arrives instead.
 //!
-//! Lock order is strictly `state` → `engine` → `metrics` (the breaker's
-//! health lock nests inside none of them), never the reverse, so
-//! submitters, the dispatcher, and the watchdog cannot deadlock.
+//! **Sharding.** The service runs [`ShardPolicy::shards`] independent
+//! dispatcher shards. Each shard owns its own queue set (scheduler
+//! state + wake condvar), its own [`ExecEngine`], and — in started
+//! mode — its own watchdog/dispatcher thread pair, so a panicking or
+//! slow model only ever stalls the shard it lives on. Models are
+//! assigned to shards by [`ShardPolicy::shard_of`] (static FNV hash,
+//! overridable per model via [`ModelRegistry::pin_shard`]); a model
+//! always maps to exactly one shard, so its queue FIFO order and
+//! execution-attempt sequence (the [`FaultPlan`] key) are exactly what
+//! they were in the single-dispatcher service. Every invariant above
+//! holds per shard and in aggregate — a watchdog that respawns shard
+//! 2's dispatcher fails (never leaks) only shard 2's pending requests,
+//! and injected dispatcher kills target only the shard hosting the
+//! fault plan's panic model.
+//!
+//! Lock order is strictly `state` → `engine` → `metrics` within a
+//! shard (the breaker's health lock nests inside none of them), never
+//! the reverse, and no code path holds two shards' scheduler or engine
+//! locks at once, so submitters, dispatchers, and watchdogs cannot
+//! deadlock.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -59,9 +76,10 @@ use crate::kernels::{ExecPlan, PlanScratch};
 use crate::quantize::quantize;
 
 use super::faults::FaultPlan;
-use super::metrics::MetricsSnapshot;
+use super::metrics::{MetricsSnapshot, ShardMetrics};
 use super::queue::{Batch, MicroBatchQueue};
 use super::registry::{Admission, BreakerEvent, ModelRegistry};
+use super::shard::ShardPolicy;
 use super::{BatchPolicy, InferError, SubmitError};
 
 /// Lock a mutex, recovering from poison: the protected structures here
@@ -145,11 +163,14 @@ struct SchedState {
 
 impl SchedState {
     /// Take the ready batch whose head request is oldest (cross-model
-    /// FIFO fairness). Returns the model id, the batch and the queue's
-    /// remaining depth.
+    /// FIFO fairness); equal head-enqueue instants tie-break on the
+    /// *model id* — an explicit, deterministic total order, so two
+    /// models whose heads arrived on the same clock tick are always
+    /// served in the same order regardless of map internals or
+    /// insertion history. Returns the model id, the batch and the
+    /// queue's remaining depth.
     fn take_ready(&mut self, now: Instant) -> Option<(String, Batch<Pending>, usize)> {
-        let mut best_id: Option<&String> = None;
-        let mut best_head: Option<Instant> = None;
+        let mut best: Option<(Instant, &String)> = None;
         for (id, q) in &self.queues {
             if q.ready(now).is_none() {
                 continue;
@@ -157,16 +178,15 @@ impl SchedState {
             let Some(head) = q.head_enqueued() else {
                 continue;
             };
-            let better = match best_head {
+            let better = match best {
                 None => true,
-                Some(t) => head < t,
+                Some((t, bid)) => (head, id.as_str()) < (t, bid.as_str()),
             };
             if better {
-                best_id = Some(id);
-                best_head = Some(head);
+                best = Some((head, id));
             }
         }
-        let id = best_id?.clone();
+        let id = best?.1.clone();
         // Invariant: `id` was produced by the loop above from this very
         // map, and a queue that reported ready stays ready until
         // mutated — both lookups are locally provable.
@@ -222,35 +242,76 @@ impl ExecEngine {
     }
 }
 
-struct Inner {
-    registry: Arc<ModelRegistry>,
-    policy: BatchPolicy,
-    faults: Option<FaultPlan>,
+/// One dispatcher shard: its own queue set and wake trigger, its own
+/// execution engine, and its own heartbeat/restart counters. Started
+/// mode runs one watchdog/dispatcher thread pair per shard; a panic on
+/// one shard never touches another's state.
+struct Shard {
     state: Mutex<SchedState>,
     wake: Condvar,
-    metrics: Mutex<MetricsSnapshot>,
     engine: Mutex<ExecEngine>,
-    next_ticket: AtomicU64,
-    shutdown: AtomicBool,
-    /// Dispatcher loop iterations, global across respawns — both the
-    /// heartbeat the watchdog surfaces and the key for injected
-    /// dispatcher kills.
+    /// This shard's dispatcher loop iterations, monotone across
+    /// respawns — the heartbeat the watchdog surfaces and (on the
+    /// kill-target shard) the key for injected dispatcher kills.
     dispatch_iters: AtomicU64,
-    /// Times the watchdog respawned a dead dispatcher.
+    /// Times this shard's watchdog respawned its dead dispatcher.
     restarts: AtomicU64,
 }
 
+impl Shard {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(SchedState { queues: BTreeMap::new() }),
+            wake: Condvar::new(),
+            engine: Mutex::new(ExecEngine::new()),
+            dispatch_iters: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+        }
+    }
+}
+
+struct Inner {
+    registry: Arc<ModelRegistry>,
+    policy: BatchPolicy,
+    shard_policy: ShardPolicy,
+    faults: Option<FaultPlan>,
+    shards: Vec<Shard>,
+    metrics: Mutex<MetricsSnapshot>,
+    next_ticket: AtomicU64,
+    shutdown: AtomicBool,
+}
+
 impl Inner {
-    /// Execute one coalesced batch and send exactly one terminal reply
-    /// to every request in it: stale requests get `Timeout`, a caught
-    /// execution panic fails the remainder with `ExecFailed`, success
-    /// replies carry outputs. `now` is the scheduling clock the batch
-    /// was taken at — timeout and breaker decisions use it, so manual
-    /// mode stays on one virtual timeline. Called with no lock held;
-    /// takes `engine`, then (after release) `metrics` — never `state`,
-    /// so it cannot deadlock with submitters.
+    /// The shard serving `model`: the registry pin when one is set,
+    /// else the shard policy's static hash.
+    fn shard_of(&self, model: &str) -> usize {
+        self.shard_policy
+            .shard_of(model, self.registry.pinned_shard(model))
+    }
+
+    /// The shard injected dispatcher kills target: the one hosting the
+    /// fault plan's `panic_model` (shard 0 when no panic model is set),
+    /// so each `kill_at_iters` entry still kills exactly one dispatcher
+    /// and every other shard's watchdog counters stay untouched.
+    fn kill_shard(&self) -> usize {
+        match &self.faults {
+            Some(f) if !f.panic_model.is_empty() => self.shard_of(&f.panic_model),
+            _ => 0,
+        }
+    }
+
+    /// Execute one coalesced batch on `shard` and send exactly one
+    /// terminal reply to every request in it: stale requests get
+    /// `Timeout`, a caught execution panic fails the remainder with
+    /// `ExecFailed`, success replies carry outputs. `now` is the
+    /// scheduling clock the batch was taken at — timeout and breaker
+    /// decisions use it, so manual mode stays on one virtual timeline.
+    /// Called with no lock held; takes the shard's `engine`, then
+    /// (after release) `metrics` — never any `state`, so it cannot
+    /// deadlock with submitters.
     fn execute_batch(
         &self,
+        shard: usize,
         model_id: &str,
         batch_of: Batch<Pending>,
         depth_after: usize,
@@ -284,7 +345,7 @@ impl Inner {
         let mut outputs: Vec<Output> = Vec::new();
         let mut done_at = now;
         if n > 0 {
-            let mut guard = lock_recover(&self.engine);
+            let mut guard = lock_recover(&self.shards[shard].engine);
             let engine = &mut *guard;
             let seq = {
                 let s = engine.exec_seq.entry(model_id.to_string()).or_insert(0);
@@ -407,13 +468,15 @@ impl Inner {
         }
     }
 
-    /// Drain every queue and fail all still-pending requests with
-    /// [`InferError::Aborted`] — the watchdog's pending-request policy
-    /// across a dispatcher restart. Returns how many were failed.
-    fn fail_all_pending(&self, detail: &str) -> usize {
+    /// Drain one shard's queues and fail all its still-pending requests
+    /// with [`InferError::Aborted`] — the watchdog's pending-request
+    /// policy across *that shard's* dispatcher restart. Other shards'
+    /// queues are untouched: a hot shard's crash never aborts a cold
+    /// shard's requests. Returns how many were failed.
+    fn fail_shard_pending(&self, shard: usize, detail: &str) -> usize {
         let mut per_model: Vec<(String, Vec<(Pending, Instant)>)> = Vec::new();
         {
-            let mut st = lock_recover(&self.state);
+            let mut st = lock_recover(&self.shards[shard].state);
             for (id, q) in st.queues.iter_mut() {
                 let mut items = Vec::new();
                 while let Some(b) = q.drain_batch() {
@@ -432,10 +495,47 @@ impl Inner {
         count
     }
 
+    /// [`fail_shard_pending`](Self::fail_shard_pending) across every
+    /// shard — service-wide teardown.
+    fn fail_all_pending(&self, detail: &str) -> usize {
+        (0..self.shards.len())
+            .map(|s| self.fail_shard_pending(s, detail))
+            .sum()
+    }
+
     fn snapshot(&self) -> MetricsSnapshot {
         let mut snap = lock_recover(&self.metrics).clone();
-        snap.watchdog_restarts = self.restarts.load(Ordering::Relaxed);
-        snap.dispatcher_heartbeats = self.dispatch_iters.load(Ordering::Relaxed);
+        snap.watchdog_restarts = self
+            .shards
+            .iter()
+            .map(|s| s.restarts.load(Ordering::Relaxed))
+            .sum();
+        snap.dispatcher_heartbeats = self
+            .shards
+            .iter()
+            .map(|s| s.dispatch_iters.load(Ordering::Relaxed))
+            .sum();
+        // Per-shard rollups: model rows grouped by the (pure, stable)
+        // model → shard assignment, plus each shard's own atomics. One
+        // row per shard even when it currently serves no models.
+        snap.shards = (0..self.shards.len())
+            .map(|idx| ShardMetrics {
+                shard: idx,
+                restarts: self.shards[idx].restarts.load(Ordering::Relaxed),
+                heartbeats: self.shards[idx].dispatch_iters.load(Ordering::Relaxed),
+                ..ShardMetrics::default()
+            })
+            .collect();
+        for (id, m) in &snap.models {
+            let row = &mut snap.shards[self.shard_of(id).min(self.shards.len() - 1)];
+            row.models.push(id.clone());
+            row.requests += m.requests;
+            row.completed += m.completed;
+            row.shed += m.shed;
+            row.failed += m.failed + m.timeouts + m.aborted;
+            row.batches += m.batches;
+            row.batched_samples += m.batched_samples;
+        }
         snap
     }
 }
@@ -532,14 +632,15 @@ fn send_reply(p: &Pending, outcome: Result<Output, InferError>, latency_us: u64,
 /// budget knobs.
 pub struct InferenceService {
     inner: Arc<Inner>,
-    supervisor: Option<JoinHandle<()>>,
+    supervisors: Vec<JoinHandle<()>>,
 }
 
 impl InferenceService {
     /// A manual-mode service (no threads): flush decisions run only
     /// when [`pump`](Self::pump) / [`pump_at`](Self::pump_at) /
     /// [`drain`](Self::drain) are called. The deterministic harness
-    /// the scheduler and fault tests drive.
+    /// the scheduler and fault tests drive. Single-shard; see
+    /// [`new_sharded`](Self::new_sharded) for the sharded form.
     pub fn new(registry: Arc<ModelRegistry>, policy: &BatchPolicy) -> Self {
         Self::new_with_faults(registry, policy, None)
     }
@@ -550,26 +651,41 @@ impl InferenceService {
         policy: &BatchPolicy,
         faults: Option<FaultPlan>,
     ) -> Self {
+        Self::new_sharded(registry, policy, &ShardPolicy::single(), faults)
+    }
+
+    /// A manual-mode service with an explicit [`ShardPolicy`]: each
+    /// shard owns its own queue set and execution engine, and
+    /// [`pump_at`](Self::pump_at) / [`drain`](Self::drain) sweep every
+    /// shard — so virtual-clock tests can drive a sharded service with
+    /// zero threads.
+    pub fn new_sharded(
+        registry: Arc<ModelRegistry>,
+        policy: &BatchPolicy,
+        shard_policy: &ShardPolicy,
+        faults: Option<FaultPlan>,
+    ) -> Self {
+        let shard_policy = shard_policy.normalized();
+        let shards = (0..shard_policy.shards).map(|_| Shard::new()).collect();
         let inner = Arc::new(Inner {
             registry,
             policy: policy.normalized(),
+            shard_policy,
             faults,
-            state: Mutex::new(SchedState { queues: BTreeMap::new() }),
-            wake: Condvar::new(),
+            shards,
             metrics: Mutex::new(MetricsSnapshot::default()),
-            engine: Mutex::new(ExecEngine::new()),
             next_ticket: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
-            dispatch_iters: AtomicU64::new(0),
-            restarts: AtomicU64::new(0),
         });
-        Self { inner, supervisor: None }
+        Self { inner, supervisors: Vec::new() }
     }
 
-    /// A started service: spawns the watchdog supervisor, which runs
-    /// the dispatcher thread (sleeping until the nearest queue deadline
-    /// or a submit wakeup, flushing whatever is ready) and respawns it
-    /// — failing, never leaking, pending requests — if it dies.
+    /// A started service: spawns one watchdog supervisor per shard,
+    /// each running that shard's dispatcher thread (sleeping until the
+    /// nearest queue deadline or a submit wakeup, flushing whatever is
+    /// ready) and respawning it — failing, never leaking, that shard's
+    /// pending requests — if it dies. Single-shard; see
+    /// [`start_sharded`](Self::start_sharded).
     pub fn start(registry: Arc<ModelRegistry>, policy: &BatchPolicy) -> Self {
         Self::start_with_faults(registry, policy, None)
     }
@@ -580,17 +696,43 @@ impl InferenceService {
         policy: &BatchPolicy,
         faults: Option<FaultPlan>,
     ) -> Self {
-        let mut svc = Self::new_with_faults(registry, policy, faults);
-        let inner = Arc::clone(&svc.inner);
-        let handle = std::thread::Builder::new()
-            .name("svc-watchdog".to_string())
-            .spawn(move || supervisor_loop(&inner))
-            // Invariant: no request has been accepted yet (the service
-            // is still being constructed), so failing to start here
-            // leaks nothing — propagating the spawn error is correct.
-            .expect("spawn watchdog supervisor at service start");
-        svc.supervisor = Some(handle);
+        Self::start_sharded(registry, policy, &ShardPolicy::single(), faults)
+    }
+
+    /// Started mode with an explicit [`ShardPolicy`]: one
+    /// watchdog/dispatcher thread pair per shard, each supervising only
+    /// its own shard's queues.
+    pub fn start_sharded(
+        registry: Arc<ModelRegistry>,
+        policy: &BatchPolicy,
+        shard_policy: &ShardPolicy,
+        faults: Option<FaultPlan>,
+    ) -> Self {
+        let mut svc = Self::new_sharded(registry, policy, shard_policy, faults);
+        for idx in 0..svc.inner.shards.len() {
+            let inner = Arc::clone(&svc.inner);
+            let handle = std::thread::Builder::new()
+                .name(format!("svc-watchdog-{idx}"))
+                .spawn(move || supervisor_loop(&inner, idx))
+                // Invariant: no request has been accepted yet (the
+                // service is still being constructed), so failing to
+                // start here leaks nothing — propagating the spawn
+                // error is correct.
+                .expect("spawn watchdog supervisor at service start");
+            svc.supervisors.push(handle);
+        }
         svc
+    }
+
+    /// How many dispatcher shards this service runs.
+    pub fn shard_count(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    /// The shard serving `model` (pin-aware) — what
+    /// [`ShardMetrics`] rows and the load/chaos harnesses key on.
+    pub fn shard_of(&self, model: &str) -> usize {
+        self.inner.shard_of(model)
     }
 
     /// Submit one sample for `model` on behalf of `tenant` at the real
@@ -666,21 +808,30 @@ impl InferenceService {
             reply: reply.clone(),
             is_probe,
         };
+        let shard = &self.inner.shards[self.inner.shard_of(model)];
         let pushed = {
-            let mut st = lock_recover(&self.inner.state);
+            let mut st = lock_recover(&shard.state);
             let q = st
                 .queues
                 .entry(model.to_string())
                 .or_insert_with(|| MicroBatchQueue::new(&self.inner.policy));
-            q.push(pending, now).map_err(|_| q.capacity())
+            // Capture the queue's own push-time peak under the same
+            // lock as the push: the metrics gauge samples depth at
+            // transitions and can miss a spike that rises and drains
+            // between samples — this counter cannot.
+            q.push(pending, now)
+                .map(|depth| (depth, q.peak_depth()))
+                .map_err(|_| q.capacity())
         };
         match pushed {
-            Ok(depth) => {
-                self.inner.wake.notify_all();
+            Ok((depth, peak)) => {
+                shard.wake.notify_all();
+                self.inner.registry.touch(model, now);
                 let mut metrics = lock_recover(&self.inner.metrics);
                 let mm = metrics.models.entry(model.to_string()).or_default();
                 mm.requests += 1;
                 mm.note_depth(depth);
+                mm.note_peak(peak);
                 if is_probe {
                     mm.quarantine_probes += 1;
                 }
@@ -708,40 +859,82 @@ impl InferenceService {
     }
 
     /// Execute every batch whose size or deadline trigger has fired as
-    /// of `now`; returns how many batches ran. Passing a future instant
-    /// makes deadline flushes (and request-budget timeouts) happen
-    /// deterministically in tests — without sleeping. Safe to call
-    /// alongside a running dispatcher (both just take ready batches
-    /// under the lock).
+    /// of `now`, sweeping every shard; returns how many batches ran.
+    /// Passing a future instant makes deadline flushes (and
+    /// request-budget timeouts) happen deterministically in tests —
+    /// without sleeping. Safe to call alongside running dispatchers
+    /// (both just take ready batches under each shard's lock).
     pub fn pump_at(&self, now: Instant) -> usize {
         let mut ran = 0;
-        loop {
-            let taken = lock_recover(&self.inner.state).take_ready(now);
-            match taken {
-                Some((id, b, depth)) => {
-                    self.inner.execute_batch(&id, b, depth, now);
-                    ran += 1;
+        for idx in 0..self.inner.shards.len() {
+            loop {
+                let taken = lock_recover(&self.inner.shards[idx].state).take_ready(now);
+                match taken {
+                    Some((id, b, depth)) => {
+                        self.inner.execute_batch(idx, &id, b, depth, now);
+                        ran += 1;
+                    }
+                    None => break,
                 }
-                None => return ran,
             }
         }
+        ran
     }
 
     /// Flush *everything* still queued, ready or not (partial batches
-    /// execute with [`FlushReason::Drain`](super::FlushReason::Drain));
-    /// returns how many batches ran. Used at shutdown and by tests.
+    /// execute with [`FlushReason::Drain`](super::FlushReason::Drain)),
+    /// sweeping every shard; returns how many batches ran. Used at
+    /// shutdown and by tests.
     pub fn drain(&self) -> usize {
         let mut ran = 0;
-        loop {
-            let taken = lock_recover(&self.inner.state).take_any();
-            match taken {
-                Some((id, b, depth)) => {
-                    self.inner.execute_batch(&id, b, depth, Instant::now());
-                    ran += 1;
+        for idx in 0..self.inner.shards.len() {
+            loop {
+                let taken = lock_recover(&self.inner.shards[idx].state).take_any();
+                match taken {
+                    Some((id, b, depth)) => {
+                        self.inner.execute_batch(idx, &id, b, depth, Instant::now());
+                        ran += 1;
+                    }
+                    None => break,
                 }
-                None => return ran,
             }
         }
+        ran
+    }
+
+    /// TTL idle eviction: remove every registered model whose last
+    /// accepted submit (or registration) is at least `ttl` before
+    /// `now` *and* whose queue is empty — a model with requests still
+    /// waiting is never evicted, so the terminal-reply invariant is
+    /// untouched. Evicted models drop their plan, breaker state and
+    /// shard pin; their historical metrics rows remain. Returns the
+    /// evicted ids. Time-parametric like the rest of the scheduler, so
+    /// tests drive it on a virtual clock; callers run it as a periodic
+    /// maintenance sweep.
+    pub fn evict_idle(&self, ttl: Duration, now: Instant) -> Vec<String> {
+        let mut evicted = Vec::new();
+        for id in self.inner.registry.idle_candidates(ttl, now) {
+            let shard = &self.inner.shards[self.inner.shard_of(&id)];
+            let removed_queue = {
+                let mut st = lock_recover(&shard.state);
+                match st.queues.get(&id) {
+                    Some(q) if !q.is_empty() => continue, // live work — keep
+                    Some(_) => {
+                        st.queues.remove(&id);
+                        true
+                    }
+                    None => true,
+                }
+            };
+            if removed_queue && self.inner.registry.remove(&id) {
+                evicted.push(id);
+            }
+        }
+        if !evicted.is_empty() {
+            let mut metrics = lock_recover(&self.inner.metrics);
+            metrics.models_evicted += evicted.len() as u64;
+        }
+        evicted
     }
 
     /// Fail every still-queued request with [`InferError::Aborted`]
@@ -778,19 +971,20 @@ impl InferenceService {
 
     fn finish(&mut self) {
         self.inner.shutdown.store(true, Ordering::Release);
-        self.inner.wake.notify_all();
-        match self.supervisor.take() {
-            Some(h) => {
+        for shard in &self.inner.shards {
+            shard.wake.notify_all();
+        }
+        if self.supervisors.is_empty() {
+            self.drain();
+        } else {
+            for h in self.supervisors.drain(..) {
                 let _ = h.join();
-                // Belt and braces: if the dispatcher died during
-                // shutdown, the supervisor already failed the pending
-                // set; a clean exit leaves nothing queued. Either way
-                // this is a no-op unless something slipped in between.
-                self.inner.fail_all_pending("service shut down");
             }
-            None => {
-                self.drain();
-            }
+            // Belt and braces: if a dispatcher died during shutdown,
+            // its supervisor already failed that shard's pending set; a
+            // clean exit leaves nothing queued. Either way this is a
+            // no-op unless something slipped in between.
+            self.inner.fail_all_pending("service shut down");
         }
     }
 }
@@ -801,22 +995,24 @@ impl Drop for InferenceService {
     }
 }
 
-/// The watchdog: run the dispatcher, and when it dies (a panic that
-/// escaped batch isolation — e.g. an injected dispatcher kill), fail
-/// every pending request with its terminal `Aborted` reply and respawn.
-/// A clean dispatcher exit means shutdown completed.
-fn supervisor_loop(inner: &Arc<Inner>) {
+/// One shard's watchdog: run that shard's dispatcher, and when it dies
+/// (a panic that escaped batch isolation — e.g. an injected dispatcher
+/// kill), fail *that shard's* pending requests with their terminal
+/// `Aborted` replies and respawn it. Other shards never notice. A
+/// clean dispatcher exit means shutdown completed.
+fn supervisor_loop(inner: &Arc<Inner>, shard: usize) {
     loop {
         let worker = Arc::clone(inner);
         let handle = match std::thread::Builder::new()
-            .name("svc-dispatch".to_string())
-            .spawn(move || dispatcher_loop(&worker))
+            .name(format!("svc-dispatch-{shard}"))
+            .spawn(move || dispatcher_loop(&worker, shard))
         {
             Ok(h) => h,
             Err(_) => {
-                // OS refused a thread: nothing can execute anymore, so
-                // fail pending instead of leaking and stop supervising.
-                inner.fail_all_pending("dispatcher spawn failed");
+                // OS refused a thread: nothing can execute on this
+                // shard anymore, so fail its pending instead of leaking
+                // and stop supervising it.
+                inner.fail_shard_pending(shard, "dispatcher spawn failed");
                 return;
             }
         };
@@ -825,32 +1021,38 @@ fn supervisor_loop(inner: &Arc<Inner>) {
             // shutdown.
             return;
         }
-        inner.restarts.fetch_add(1, Ordering::Relaxed);
-        inner.fail_all_pending("dispatcher restarted after panic");
+        inner.shards[shard].restarts.fetch_add(1, Ordering::Relaxed);
+        inner.fail_shard_pending(shard, "dispatcher restarted after panic");
         if inner.shutdown.load(Ordering::Acquire) {
             return;
         }
     }
 }
 
-/// The dispatcher: wait for a trigger, take the oldest ready batch,
-/// execute it outside the lock, repeat. On shutdown, drain every queue
-/// (partial batches run with `FlushReason::Drain`) before exiting.
-/// Each loop iteration bumps the shared heartbeat/iteration counter —
-/// the watchdog's liveness signal and the [`FaultPlan`] kill key.
-fn dispatcher_loop(inner: &Inner) {
+/// One shard's dispatcher: wait for a trigger, take the oldest ready
+/// batch among *this shard's* queues, execute it outside the lock,
+/// repeat. On shutdown, drain this shard's queues (partial batches run
+/// with `FlushReason::Drain`) before exiting. Each loop iteration
+/// bumps the shard's heartbeat/iteration counter — the watchdog's
+/// liveness signal and, on the kill-target shard only (see
+/// [`Inner::kill_shard`]), the [`FaultPlan`] kill key.
+fn dispatcher_loop(inner: &Inner, shard: usize) {
+    let me = &inner.shards[shard];
+    let kill_here = inner.faults.is_some() && inner.kill_shard() == shard;
     loop {
-        let iter = inner.dispatch_iters.fetch_add(1, Ordering::Relaxed);
-        if let Some(f) = &inner.faults {
+        let iter = me.dispatch_iters.fetch_add(1, Ordering::Relaxed);
+        if kill_here {
+            // Invariant: `kill_here` implies `faults` is Some.
+            let f = inner.faults.as_ref().expect("kill target has a fault plan");
             if f.should_kill_dispatcher(iter) {
                 // Injected outside any batch scope: no request is held
-                // here, so the watchdog can fail pending and respawn
-                // without a single reply being lost.
-                panic!("injected dispatcher kill (iteration {iter})");
+                // here, so the watchdog can fail this shard's pending
+                // and respawn without a single reply being lost.
+                panic!("injected dispatcher kill (shard {shard}, iteration {iter})");
             }
         }
         let taken = {
-            let mut st = lock_recover(&inner.state);
+            let mut st = lock_recover(&me.state);
             loop {
                 let now = Instant::now();
                 if let Some(t) = st.take_ready(now) {
@@ -869,7 +1071,7 @@ fn dispatcher_loop(inner: &Inner) {
                         .max(Duration::from_micros(50)),
                     None => Duration::from_millis(20),
                 };
-                let (guard, _) = inner
+                let (guard, _) = me
                     .wake
                     .wait_timeout(st, wait)
                     .unwrap_or_else(PoisonError::into_inner);
@@ -877,7 +1079,7 @@ fn dispatcher_loop(inner: &Inner) {
             }
         };
         match taken {
-            Some(((id, b, depth), now)) => inner.execute_batch(&id, b, depth, now),
+            Some(((id, b, depth), now)) => inner.execute_batch(shard, &id, b, depth, now),
             None => return,
         }
     }
@@ -896,6 +1098,117 @@ mod tests {
         let reg = Arc::new(ModelRegistry::new());
         reg.register(id, &n).unwrap();
         reg
+    }
+
+    fn plan_for(sizes: &[usize], seed: u64) -> ExecPlan {
+        let mut rng = Rng::new(seed);
+        let mut n = Network::new(sizes, Activation::Tanh, Activation::Sigmoid).unwrap();
+        n.randomize(&mut rng, None);
+        ExecPlan::compile(&n)
+    }
+
+    #[test]
+    fn equal_head_instants_tie_break_on_model_id() {
+        // Two models whose queue heads were enqueued at the *same*
+        // instant: cross-model fairness must break the tie on model id
+        // ("a" before "z"), independent of submission order.
+        let reg = Arc::new(ModelRegistry::new());
+        reg.register_plan("a", plan_for(&[2, 3, 1], 1)).unwrap();
+        reg.register_plan("z", plan_for(&[2, 3, 1], 2)).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 1,
+            max_delay: Duration::from_secs(3600),
+            ..BatchPolicy::default()
+        };
+        let svc = InferenceService::new(reg, &policy);
+        let (tx, rx) = mpsc::channel();
+        let t0 = Instant::now();
+        // "z" is submitted first — and must still execute second.
+        let tz = svc.submit_at("z", 0, &[0.1, 0.2], &tx, t0).unwrap();
+        let ta = svc.submit_at("a", 0, &[0.3, 0.4], &tx, t0).unwrap();
+        assert_eq!(svc.pump_at(t0), 2);
+        let first = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let second = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(first.ticket, ta, "equal heads: smallest model id serves first");
+        assert_eq!(second.ticket, tz);
+    }
+
+    #[test]
+    fn sharded_manual_service_routes_pins_and_rolls_up_per_shard() {
+        let reg = Arc::new(ModelRegistry::new());
+        reg.register_plan("a", plan_for(&[2, 3, 1], 3)).unwrap();
+        reg.register_plan("b", plan_for(&[2, 3, 1], 4)).unwrap();
+        reg.pin_shard("a", 0);
+        reg.pin_shard("b", 1);
+        let policy = BatchPolicy {
+            max_batch: 1,
+            max_delay: Duration::from_secs(3600),
+            ..BatchPolicy::default()
+        };
+        let svc = InferenceService::new_sharded(reg, &policy, &ShardPolicy::new(2), None);
+        assert_eq!(svc.shard_count(), 2);
+        assert_eq!((svc.shard_of("a"), svc.shard_of("b")), (0, 1));
+        let (tx, rx) = mpsc::channel();
+        let t0 = Instant::now();
+        svc.submit_at("a", 1, &[0.1, 0.2], &tx, t0).unwrap();
+        svc.submit_at("b", 2, &[0.3, 0.4], &tx, t0).unwrap();
+        svc.submit_at("b", 2, &[0.5, 0.6], &tx, t0).unwrap();
+        assert_eq!(svc.pump_at(t0), 3, "pump sweeps every shard");
+        for _ in 0..3 {
+            assert!(rx.recv_timeout(Duration::from_secs(5)).unwrap().is_ok());
+        }
+        let m = svc.metrics();
+        assert_eq!(m.shards.len(), 2);
+        assert_eq!(m.shards[0].models, vec!["a".to_string()]);
+        assert_eq!(m.shards[1].models, vec!["b".to_string()]);
+        assert_eq!((m.shards[0].completed, m.shards[1].completed), (1, 2));
+        // Per-shard rows reconcile with the aggregate counters.
+        assert_eq!(
+            m.shards.iter().map(|s| s.requests).sum::<u64>(),
+            m.total_requests()
+        );
+        assert_eq!(
+            m.shards.iter().map(|s| s.completed).sum::<u64>(),
+            m.total_completed()
+        );
+    }
+
+    #[test]
+    fn idle_models_evict_on_ttl_but_never_with_queued_work() {
+        let reg = Arc::new(ModelRegistry::new());
+        let t0 = Instant::now();
+        reg.register_plan_at("idle", plan_for(&[2, 3, 1], 5), t0).unwrap();
+        reg.register_plan_at("busy", plan_for(&[2, 3, 1], 6), t0).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 100,
+            max_delay: Duration::from_secs(3600),
+            ..BatchPolicy::default()
+        };
+        let svc = InferenceService::new(reg, &policy);
+        let ttl = Duration::from_secs(3);
+        let (tx, rx) = mpsc::channel();
+        svc.submit_at("idle", 0, &[0.1, 0.2], &tx, t0).unwrap();
+        let t1 = t0 + Duration::from_secs(2);
+        svc.submit_at("busy", 0, &[0.3, 0.4], &tx, t1).unwrap();
+        // "idle" is past its TTL relative to a far-future now, but has
+        // a queued request — never evicted while work is waiting.
+        assert!(svc.evict_idle(ttl, t0 + Duration::from_secs(10)).is_empty());
+        svc.drain();
+        assert_eq!(rx.try_iter().count(), 2);
+        // t2: "idle" last active t0 (3.5s ago ≥ ttl) → evicted;
+        // "busy" last active t1 (1.5s ago < ttl) → kept.
+        let t2 = t0 + Duration::from_millis(3500);
+        assert_eq!(svc.evict_idle(ttl, t2), vec!["idle".to_string()]);
+        assert_eq!(
+            svc.submit_at("idle", 0, &[0.1, 0.2], &tx, t2),
+            Err(SubmitError::UnknownModel("idle".to_string())),
+            "an evicted model is gone"
+        );
+        assert!(svc.submit_at("busy", 0, &[0.3, 0.4], &tx, t2).is_ok());
+        let m = svc.metrics();
+        assert_eq!(m.models_evicted, 1);
+        assert!(m.models.contains_key("idle"), "historical metrics row remains");
+        svc.drain();
     }
 
     #[test]

@@ -36,9 +36,11 @@ use crate::quantize::quantize;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+use super::faults::FaultPlan;
 use super::host::{InferenceService, Output};
-use super::metrics::MetricsSnapshot;
+use super::metrics::{LatencyHistogram, MetricsSnapshot, ShardMetrics};
 use super::registry::ModelRegistry;
+use super::shard::ShardPolicy;
 use super::{BatchPolicy, SubmitError};
 
 /// Load-harness configuration. `Default` is the full CI run (125k
@@ -54,6 +56,10 @@ pub struct LoadOptions {
     pub seed: u64,
     /// Submitter threads the clients are sharded across.
     pub submitters: usize,
+    /// Dispatcher shards the service runs
+    /// ([`ShardPolicy::new`]`(shards)`); `1` is the single-dispatcher
+    /// service.
+    pub shards: usize,
     /// Scheduler policy for the run.
     pub policy: BatchPolicy,
 }
@@ -65,6 +71,7 @@ impl Default for LoadOptions {
             requests_per_client: 5,
             seed: 7,
             submitters: 4,
+            shards: 1,
             policy: BatchPolicy {
                 max_batch: 32,
                 max_delay: Duration::from_millis(1),
@@ -170,6 +177,40 @@ pub struct LoadReport {
     pub bit_exact: bool,
     /// Per-model rows.
     pub rows: Vec<ModelLoadRow>,
+    /// Per-shard rollups from the final metrics snapshot (one row per
+    /// dispatcher shard, in shard order).
+    pub shard_rows: Vec<ShardMetrics>,
+    /// The hot+cold head-of-line probe (see [`HeadOfLineReport`]).
+    pub head_of_line: HeadOfLineReport,
+}
+
+/// Result of the head-of-line decoupling probe: one *hot* model whose
+/// every batch is slowed by an injected latency spike floods the
+/// service while a *cold* model submits sparse, fast requests. On one
+/// shard the cold model's p99 inherits the hot model's backlog
+/// (oldest-head-first scheduling keeps picking the flooded queue); with
+/// the two models pinned to different shards the cold p99 decouples —
+/// the number CI asserts at `--shards 4`.
+#[derive(Debug, Clone)]
+pub struct HeadOfLineReport {
+    /// The flooded, spike-slowed model (`emg-q7`).
+    pub hot_model: String,
+    /// The sparse, fast model pinned away from it (`eeg-f32`).
+    pub cold_model: String,
+    /// Injected spike added to every hot batch (µs).
+    pub spike_us: u64,
+    /// Shard count of the sharded pass (the single pass is always 1).
+    pub shards: usize,
+    /// Hot-model p99 with everything on one shard (µs).
+    pub hot_p99_us_single: u64,
+    /// Cold-model p99 with everything on one shard (µs) — inflated by
+    /// the hot backlog.
+    pub cold_p99_us_single: u64,
+    /// Hot-model p99 with the models on separate shards (µs).
+    pub hot_p99_us_sharded: u64,
+    /// Cold-model p99 with the models on separate shards (µs) —
+    /// decoupled from the hot backlog when `shards > 1`.
+    pub cold_p99_us_sharded: u64,
 }
 
 /// One load-harness model: a compiled plan plus its deterministic input
@@ -346,13 +387,17 @@ fn run_serial_reference(models: &[LoadModel], opts: &LoadOptions) -> f64 {
 pub(super) const MAX_SHED_RETRIES: u32 = 50;
 
 /// Backoff before shed-retry `attempt`: capped exponential (100 µs
-/// doubling to 1.6 ms) plus a deterministic per-client jitter so
-/// submitter threads don't re-collide on the queue bound in lockstep.
+/// doubling to 1.6 ms) plus a deterministic jitter so submitter
+/// threads don't re-collide on the queue bound in lockstep. The jitter
+/// hash runs the splitmix64 finalizer ([`super::faults::mix`]) over
+/// *both* the client salt and the attempt number — the earlier
+/// single-multiply hash left adjacent clients' jitter correlated
+/// within an attempt, so a burst of sheds retried as the same
+/// thundering herd it backed off from.
 pub(super) fn shed_backoff(attempt: u32, salt: u64) -> Duration {
     let base = 100u64 << attempt.min(4);
-    let h = (salt ^ u64::from(attempt).wrapping_mul(0x9E37_79B9_7F4A_7C15))
-        .wrapping_mul(0x2545_F491_4F6C_DD1D);
-    Duration::from_micros(base + (h >> 48) % (base / 2 + 1))
+    let h = super::faults::mix(salt.rotate_left(32) ^ u64::from(attempt));
+    Duration::from_micros(base + h % (base / 2 + 1))
 }
 
 /// What one submitter thread observed.
@@ -476,11 +521,127 @@ fn rows_from_snapshot(
         .collect()
 }
 
+/// One pass of the head-of-line probe at `shards` shards: pin the hot
+/// model to shard 0 and the cold model to the last shard, flood the
+/// hot model under a 100%-probability injected spike, probe the cold
+/// model sparsely, and return `(hot_p99_us, cold_p99_us)` from the
+/// replies' own latency stamps.
+fn head_of_line_pass(
+    hot: &LoadModel,
+    cold: &LoadModel,
+    shards: usize,
+    spike: Duration,
+    seed: u64,
+) -> Result<(u64, u64)> {
+    const HOT_REQUESTS: usize = 240;
+    const COLD_REQUESTS: usize = 30;
+    const COLD_GAP: Duration = Duration::from_millis(2);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_plan(hot.id, hot.plan.clone())?;
+    registry.register_plan(cold.id, cold.plan.clone())?;
+    registry.pin_shard(hot.id, 0);
+    registry.pin_shard(cold.id, shards.saturating_sub(1));
+    let faults = FaultPlan {
+        seed,
+        spike_prob: 1.0,
+        spike,
+        spike_model: hot.id.to_string(),
+        ..FaultPlan::default()
+    };
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_delay: Duration::from_micros(200),
+        queue_capacity: 4096,
+        ..BatchPolicy::default()
+    };
+    let svc =
+        InferenceService::start_sharded(registry, &policy, &ShardPolicy::new(shards), Some(faults));
+
+    fn probe(
+        svc: &InferenceService,
+        model: &LoadModel,
+        tenant: u64,
+        requests: usize,
+        gap: Option<Duration>,
+    ) -> LatencyHistogram {
+        let (tx, rx) = mpsc::channel();
+        let mut accepted = 0usize;
+        for r in 0..requests {
+            let pi = pool_index(tenant as usize, r, model.pool_samples);
+            let input = &model.pool_f[pi * model.n_in..(pi + 1) * model.n_in];
+            loop {
+                match svc.submit(model.id, tenant, input, &tx) {
+                    Ok(_) => {
+                        accepted += 1;
+                        break;
+                    }
+                    Err(SubmitError::QueueFull { .. }) => {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    Err(e) => panic!("head-of-line submit failed: {e}"),
+                }
+            }
+            if let Some(g) = gap {
+                std::thread::sleep(g);
+            }
+        }
+        let mut hist = LatencyHistogram::new();
+        for _ in 0..accepted {
+            // Bounded wait — a missing reply surfaces as a short count,
+            // which the caller rejects.
+            let Ok(reply) = rx.recv_timeout(Duration::from_secs(120)) else {
+                break;
+            };
+            hist.record(reply.latency_us);
+        }
+        hist
+    }
+
+    let (hot_lat, cold_lat) = std::thread::scope(|s| {
+        let hot_h = s.spawn(|| probe(&svc, hot, 1, HOT_REQUESTS, None));
+        let cold_h = s.spawn(|| probe(&svc, cold, 2, COLD_REQUESTS, Some(COLD_GAP)));
+        (hot_h.join().expect("hot prober"), cold_h.join().expect("cold prober"))
+    });
+    svc.shutdown();
+    ensure!(
+        hot_lat.count() == HOT_REQUESTS as u64 && cold_lat.count() == COLD_REQUESTS as u64,
+        "head-of-line probe lost replies (hot {}/{HOT_REQUESTS}, cold {}/{COLD_REQUESTS})",
+        hot_lat.count(),
+        cold_lat.count()
+    );
+    Ok((hot_lat.p99(), cold_lat.p99()))
+}
+
+/// The full head-of-line probe: the same hot+cold workload once on a
+/// single shard and once on `shards` shards. Real-time (the spike is a
+/// wall-clock sleep), so the p99s are measurements, not simulations.
+fn run_head_of_line(models: &[LoadModel], shards: usize) -> Result<HeadOfLineReport> {
+    // Hot: the packed-Q7 EMG model (the largest). Cold: the small f32
+    // EEG model — disjoint plan families, so the decoupling shows up
+    // across representations too.
+    let hot = &models[0];
+    let cold = models.iter().find(|m| m.plan.is_float()).unwrap_or(&models[models.len() - 1]);
+    let spike = Duration::from_millis(5);
+    let (hot_single, cold_single) = head_of_line_pass(hot, cold, 1, spike, 0x401D)?;
+    let (hot_sharded, cold_sharded) = head_of_line_pass(hot, cold, shards, spike, 0x401D)?;
+    Ok(HeadOfLineReport {
+        hot_model: hot.id.to_string(),
+        cold_model: cold.id.to_string(),
+        spike_us: spike.as_micros() as u64,
+        shards: ShardPolicy::new(shards).normalized().shards,
+        hot_p99_us_single: hot_single,
+        cold_p99_us_single: cold_single,
+        hot_p99_us_sharded: hot_sharded,
+        cold_p99_us_sharded: cold_sharded,
+    })
+}
+
 /// Run the load harness: build the three models, time the serial
 /// per-request reference, replay the full request schedule through a
-/// started [`InferenceService`], verify every reply bit-exact, and
-/// assemble the [`LoadReport`]. Errors if any reply mismatches or any
-/// accepted request goes unanswered.
+/// started [`InferenceService`] (sharded per
+/// [`LoadOptions::shards`]), verify every reply bit-exact, run the
+/// head-of-line probe, and assemble the [`LoadReport`]. Errors if any
+/// reply mismatches or any accepted request goes unanswered.
 pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
     ensure!(opts.clients > 0 && opts.requests_per_client > 0, "empty load configuration");
     let total = opts.total_requests();
@@ -492,7 +653,12 @@ pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
     for m in &models {
         registry.register_plan(m.id, m.plan.clone())?;
     }
-    let svc = InferenceService::start(registry, &opts.policy);
+    let svc = InferenceService::start_sharded(
+        registry,
+        &opts.policy,
+        &ShardPolicy::new(opts.shards),
+        None,
+    );
 
     let submitters = opts.submitters.clamp(1, opts.clients);
     let t0 = Instant::now();
@@ -545,6 +711,15 @@ pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
         snap.total_completed()
     );
 
+    // Per-shard accounting must reconcile with the aggregate — the
+    // same invariant the chaos harness gates, checked here too.
+    ensure!(
+        snap.shards.iter().map(|s| s.completed).sum::<u64>() == snap.total_completed(),
+        "per-shard completed rows do not sum to the aggregate"
+    );
+
+    let head_of_line = run_head_of_line(&models, opts.shards)?;
+
     let latency = snap.merged_latency();
     Ok(LoadReport {
         options: opts.clone(),
@@ -563,7 +738,40 @@ pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
         tenants: snap.tenants.len(),
         bit_exact: true,
         rows: rows_from_snapshot(&models, &snap, &gave_up_by_model),
+        shard_rows: snap.shards,
+        head_of_line,
     })
+}
+
+/// Serialize per-shard rollup rows — shared by the load and chaos
+/// artifacts (`shards` arrays in both BENCH documents).
+pub(super) fn shard_rows_json(rows: &[ShardMetrics]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|s| {
+                Json::obj()
+                    .field("shard", s.shard)
+                    .field(
+                        "models",
+                        Json::Arr(
+                            s.models
+                                .iter()
+                                .map(|m| Json::Str(m.clone()))
+                                .collect::<Vec<_>>(),
+                        ),
+                    )
+                    .field("requests", Json::Int(s.requests as i64))
+                    .field("completed", Json::Int(s.completed as i64))
+                    .field("shed", Json::Int(s.shed as i64))
+                    .field("failed", Json::Int(s.failed as i64))
+                    .field("batches", Json::Int(s.batches as i64))
+                    .field("mean_batch", s.mean_batch())
+                    .field("restarts", Json::Int(s.restarts as i64))
+                    .field("heartbeats", Json::Int(s.heartbeats as i64))
+                    .build()
+            })
+            .collect::<Vec<_>>(),
+    )
 }
 
 impl LoadReport {
@@ -585,8 +793,10 @@ impl LoadReport {
                     .field("queue_capacity", policy.queue_capacity)
                     .field("exec_workers", policy.exec_workers)
                     .field("submitters", self.options.submitters)
+                    .field("adaptive_delay", policy.adaptive_delay)
                     .build(),
             )
+            .field("shards", self.options.shards.max(1))
             .field("wall_seconds", self.wall_seconds)
             .field("samples_per_sec", self.samples_per_sec)
             .field("serial_seconds", self.serial_seconds)
@@ -636,6 +846,32 @@ impl LoadReport {
                         .collect::<Vec<_>>(),
                 ),
             )
+            .field("shards_detail", shard_rows_json(&self.shard_rows))
+            .field(
+                "head_of_line",
+                Json::obj()
+                    .field("hot_model", self.head_of_line.hot_model.as_str())
+                    .field("cold_model", self.head_of_line.cold_model.as_str())
+                    .field("spike_us", Json::Int(self.head_of_line.spike_us as i64))
+                    .field("shards", self.head_of_line.shards)
+                    .field(
+                        "hot_p99_us_single",
+                        Json::Int(self.head_of_line.hot_p99_us_single as i64),
+                    )
+                    .field(
+                        "cold_p99_us_single",
+                        Json::Int(self.head_of_line.cold_p99_us_single as i64),
+                    )
+                    .field(
+                        "hot_p99_us_sharded",
+                        Json::Int(self.head_of_line.hot_p99_us_sharded as i64),
+                    )
+                    .field(
+                        "cold_p99_us_sharded",
+                        Json::Int(self.head_of_line.cold_p99_us_sharded as i64),
+                    )
+                    .build(),
+            )
             .build()
     }
 }
@@ -651,6 +887,7 @@ mod tests {
             requests_per_client: 2,
             seed: 3,
             submitters: 2,
+            shards: 2,
             policy: BatchPolicy {
                 max_batch: 4,
                 max_delay: Duration::from_micros(500),
@@ -666,6 +903,14 @@ mod tests {
         assert!(report.p99_us >= report.p50_us);
         assert_eq!(report.rows.len(), 3);
         assert_eq!(report.rows.iter().map(|r| r.completed).sum::<u64>(), 24);
+        // Per-shard rows: one per shard, reconciling with the total.
+        assert_eq!(report.shard_rows.len(), 2);
+        assert_eq!(report.shard_rows.iter().map(|s| s.completed).sum::<u64>(), 24);
+        // The head-of-line probe ran both passes and measured real
+        // latencies.
+        assert!(report.head_of_line.cold_p99_us_single > 0);
+        assert!(report.head_of_line.cold_p99_us_sharded > 0);
+        assert_eq!(report.head_of_line.shards, 2);
         let json = report.to_json().to_pretty();
         for field in [
             "\"schema\"",
@@ -676,6 +921,10 @@ mod tests {
             "\"speedup_service_vs_serial\"",
             "\"bit_exact\"",
             "\"gave_up_total\"",
+            "\"shards\"",
+            "\"shards_detail\"",
+            "\"head_of_line\"",
+            "\"cold_p99_us_sharded\"",
         ] {
             assert!(json.contains(field), "missing {field} in {json}");
         }
@@ -692,6 +941,28 @@ mod tests {
         }
         // ...and deterministic per (attempt, salt).
         assert_eq!(shed_backoff(3, 5), shed_backoff(3, 5));
+    }
+
+    #[test]
+    fn shed_backoff_jitter_spreads_clients_and_attempts() {
+        use std::collections::HashSet;
+        // Within one attempt, adjacent client ids must land on many
+        // distinct jitter values — a shed burst must not retry as the
+        // same thundering herd it backed off from.
+        let per_client: HashSet<u64> =
+            (0..64).map(|c| shed_backoff(2, c).as_micros() as u64).collect();
+        assert!(per_client.len() >= 16, "only {} distinct jitters", per_client.len());
+        // Across attempts at the capped base, one client's jitter keeps
+        // moving too (the attempt number is mixed in, not shifted out).
+        let per_attempt: HashSet<u64> =
+            (4..36).map(|a| shed_backoff(a, 7).as_micros() as u64).collect();
+        assert!(per_attempt.len() >= 8, "only {} distinct jitters", per_attempt.len());
+        // And two adjacent clients never walk identical jitter
+        // sequences.
+        let a: Vec<u64> = (4..24).map(|at| shed_backoff(at, 10).as_micros() as u64).collect();
+        let b: Vec<u64> = (4..24).map(|at| shed_backoff(at, 11).as_micros() as u64).collect();
+        let same = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+        assert!(same <= 4, "{same}/20 positions collide");
     }
 
     #[test]

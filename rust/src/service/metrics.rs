@@ -60,11 +60,23 @@ impl LatencyHistogram {
 
     /// The `p`-quantile (`0.0 < p ≤ 1.0`) as the upper bound of the
     /// bucket holding that order statistic; `0` when empty.
+    ///
+    /// Nearest-rank semantics: the target order statistic is
+    /// `ceil(p * total)`, clamped into `1..=total` — so `p99` of 100
+    /// samples is the 99th smallest, and `percentile(1.0)` is the
+    /// maximum.
     pub fn percentile(&self, p: f64) -> u64 {
         if self.total == 0 {
             return 0;
         }
-        let target = ((p * self.total as f64).ceil() as u64).clamp(1, self.total);
+        // `p * total` can land a hair *above* the exact integer rank
+        // (0.99 × 100 = 99.000000000000002 in f64), and a bare `ceil`
+        // then overshoots by a whole rank — p99 of 100 samples became
+        // the maximum. Shave one part in 10^12 before ceiling so
+        // near-integer products round to the intended rank while
+        // genuinely fractional ones still ceil up.
+        let raw = p * self.total as f64;
+        let target = ((raw * (1.0 - 1e-12)).ceil() as u64).clamp(1, self.total);
         let mut seen = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
             seen += c;
@@ -193,6 +205,15 @@ impl ModelMetrics {
         self.queue_depth = depth;
         self.peak_queue_depth = self.peak_queue_depth.max(depth);
     }
+
+    /// Fold in a push-time peak observed by the queue itself
+    /// ([`super::MicroBatchQueue::peak_depth`]). The gauge samples
+    /// depth at submit/execute transitions, which can miss a peak that
+    /// rises and drains between two samples — the queue's own counter
+    /// cannot.
+    pub(crate) fn note_peak(&mut self, peak: usize) {
+        self.peak_queue_depth = self.peak_queue_depth.max(peak);
+    }
 }
 
 /// Counters for one tenant (client) id, across all models.
@@ -209,6 +230,46 @@ pub struct TenantCounters {
     pub failed: u64,
 }
 
+/// Per-dispatcher-shard counters, derived at snapshot time: model
+/// counters rolled up by the model → shard assignment, plus the
+/// shard's own watchdog/heartbeat atomics. One row per shard, in shard
+/// order, even for shards currently serving no models.
+#[derive(Debug, Clone, Default)]
+pub struct ShardMetrics {
+    /// The shard index (`0..shards`).
+    pub shard: usize,
+    /// Model ids assigned to this shard (sorted — BTreeMap order).
+    pub models: Vec<String>,
+    /// Requests accepted across this shard's models.
+    pub requests: u64,
+    /// Requests completed across this shard's models.
+    pub completed: u64,
+    /// Requests shed across this shard's models.
+    pub shed: u64,
+    /// Terminal-error replies (exec failures + timeouts + aborts)
+    /// across this shard's models.
+    pub failed: u64,
+    /// Coalesced batches executed on this shard.
+    pub batches: u64,
+    /// Samples executed across those batches.
+    pub batched_samples: u64,
+    /// Times this shard's watchdog respawned its dead dispatcher.
+    pub restarts: u64,
+    /// This shard's dispatcher loop iterations.
+    pub heartbeats: u64,
+}
+
+impl ShardMetrics {
+    /// Mean coalesced batch size on this shard (`0.0` with no batches).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_samples as f64 / self.batches as f64
+        }
+    }
+}
+
 /// A consistent copy of every counter the service keeps, taken under
 /// the one metrics lock. Doubles as the service's internal store.
 #[derive(Debug, Clone, Default)]
@@ -217,11 +278,20 @@ pub struct MetricsSnapshot {
     pub models: BTreeMap<String, ModelMetrics>,
     /// Per-tenant counters, keyed by tenant id.
     pub tenants: BTreeMap<u64, TenantCounters>,
-    /// Times the watchdog respawned a dead dispatcher (started mode).
+    /// Per-shard rollups (one row per dispatcher shard, in shard
+    /// order), filled at snapshot time from the model rows and each
+    /// shard's own atomics. Empty only inside the internal store —
+    /// [`super::InferenceService::metrics`] always populates it.
+    pub shards: Vec<ShardMetrics>,
+    /// Models removed by TTL idle eviction
+    /// ([`super::InferenceService::evict_idle`]).
+    pub models_evicted: u64,
+    /// Times a watchdog respawned a dead dispatcher, summed across
+    /// shards (started mode).
     pub watchdog_restarts: u64,
-    /// Dispatcher loop iterations observed — the heartbeat the
-    /// watchdog layer surfaces (monotonically increasing while the
-    /// dispatcher is alive; manual-mode services never beat).
+    /// Dispatcher loop iterations observed, summed across shards — the
+    /// heartbeat the watchdog layer surfaces (monotonically increasing
+    /// while dispatchers are alive; manual-mode services never beat).
     pub dispatcher_heartbeats: u64,
 }
 
@@ -310,6 +380,61 @@ mod tests {
         assert_eq!(h.count(), 2);
         assert!(h.p99() >= 60_000_000);
         assert_eq!(h.p50(), 1); // the 0-µs sample lands in the first bucket
+    }
+
+    #[test]
+    fn percentile_uses_nearest_rank_for_tiny_totals() {
+        // total = 1: every quantile is that one sample's bucket.
+        let mut h = LatencyHistogram::new();
+        h.record(7);
+        for p in [0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(h.percentile(p), 7, "p={p}");
+        }
+
+        // total = 2: p50 is the *first* order statistic
+        // (ceil(0.5 × 2) = 1), p99 and p100 the second.
+        let mut h = LatencyHistogram::new();
+        h.record(1);
+        h.record(10_000_000);
+        assert_eq!(h.p50(), 1);
+        assert!(h.p99() >= 10_000_000);
+        assert!(h.percentile(1.0) >= 10_000_000);
+    }
+
+    #[test]
+    fn p99_of_100_samples_is_the_99th_not_the_100th() {
+        // 99 fast samples and one huge outlier. Nearest rank says p99
+        // is the 99th smallest — fast. The old code computed
+        // ceil(0.99 × 100) on a float product a hair above 99, landed
+        // on rank 100, and reported the outlier.
+        let mut h = LatencyHistogram::new();
+        for _ in 0..99 {
+            h.record(10);
+        }
+        h.record(10_000_000);
+        assert_eq!(h.count(), 100);
+        assert!(h.p99() <= 12, "p99 {} must be the fast bucket", h.p99());
+        assert!(h.percentile(1.0) >= 10_000_000, "max still sees the outlier");
+    }
+
+    #[test]
+    fn note_peak_raises_the_peak_without_touching_the_gauge() {
+        let mut m = ModelMetrics::default();
+        m.note_depth(3);
+        m.note_peak(9); // push-time peak the gauge sampling missed
+        assert_eq!(m.queue_depth, 3);
+        assert_eq!(m.peak_queue_depth, 9);
+        m.note_peak(4); // never lowers
+        assert_eq!(m.peak_queue_depth, 9);
+    }
+
+    #[test]
+    fn shard_rollup_mean_batch_handles_empty_shards() {
+        let mut s = ShardMetrics { shard: 2, ..ShardMetrics::default() };
+        assert_eq!(s.mean_batch(), 0.0);
+        s.batches = 4;
+        s.batched_samples = 10;
+        assert!((s.mean_batch() - 2.5).abs() < 1e-9);
     }
 
     #[test]

@@ -24,6 +24,14 @@
 //!   `rust/tests/batch_consistency.rs`), so coalescing never changes
 //!   any client's answer — `rust/tests/service.rs` re-pins this end to
 //!   end across f32/q32/packed plans.
+//! * [`ShardPolicy`] — the service's parallelism axis: models are
+//!   assigned (static FNV hash, or explicit
+//!   [`ModelRegistry::pin_shard`] pins) to N dispatcher *shards*, each
+//!   owning its own queue set, wake trigger, execution engine, and
+//!   watchdog, so a panicking or slow model only ever stalls its own
+//!   shard — the serving-layer analogue of the paper's per-core work
+//!   partitioning on the octa-core cluster. Every invariant below
+//!   holds per shard and in aggregate.
 //! * [`MetricsSnapshot`] — per-model and per-tenant counters (requests,
 //!   completed, shed, batches, flush causes, queue depth) plus a
 //!   log-bucketed latency histogram with p50/p99 accessors.
@@ -66,12 +74,16 @@ pub mod load;
 pub mod metrics;
 pub mod queue;
 pub mod registry;
+pub mod shard;
 
 pub use faults::FaultPlan;
 pub use host::{InferenceService, Output, Reply};
-pub use metrics::{LatencyHistogram, MetricsSnapshot, ModelMetrics, TenantCounters};
-pub use queue::{Batch, FlushReason, MicroBatchQueue};
+pub use metrics::{
+    LatencyHistogram, MetricsSnapshot, ModelMetrics, ShardMetrics, TenantCounters,
+};
+pub use queue::{AdmissionController, Batch, FlushReason, MicroBatchQueue};
 pub use registry::{Admission, BreakerEvent, BreakerPolicy, HealthState, ModelRegistry, ServiceModel};
+pub use shard::{ShardPolicy, MAX_SHARDS};
 
 use std::time::Duration;
 
@@ -103,6 +115,12 @@ pub struct BatchPolicy {
     /// skipping it sheds load exactly when the service is furthest
     /// behind. `None` (the default) never times requests out.
     pub request_budget: Option<Duration>,
+    /// Run an [`AdmissionController`] per queue: an EWMA over observed
+    /// inter-arrival gaps auto-tunes the deadline trigger down to
+    /// roughly the time a size flush needs at the current rate, clamped
+    /// to [`max_delay`](Self::max_delay) as the upper bound. Off by
+    /// default (the deadline window stays the static `max_delay`).
+    pub adaptive_delay: bool,
 }
 
 impl Default for BatchPolicy {
@@ -113,6 +131,7 @@ impl Default for BatchPolicy {
             queue_capacity: 1024,
             exec_workers: 1,
             request_budget: None,
+            adaptive_delay: false,
         }
     }
 }
@@ -129,6 +148,7 @@ impl BatchPolicy {
             queue_capacity: self.queue_capacity.max(max_batch),
             exec_workers: self.exec_workers,
             request_budget: self.request_budget,
+            adaptive_delay: self.adaptive_delay,
         }
     }
 }

@@ -8,6 +8,14 @@
 //! can drive deadline and backpressure behavior without sleeping. The
 //! host ([`crate::service::InferenceService`]) owns the real clock and
 //! the wakeups.
+//!
+//! With [`BatchPolicy::adaptive_delay`] enabled, each queue also runs an
+//! [`AdmissionController`]: an EWMA over observed inter-arrival gaps
+//! auto-tunes the deadline trigger down to roughly the time a size
+//! flush needs at the current arrival rate, clamped to the configured
+//! [`BatchPolicy::max_delay`] bound — so a queue whose traffic suddenly
+//! stops never strands its last partial batch for the full configured
+//! delay. The controller is as time-parametric as the rest of the core.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -74,6 +82,74 @@ impl<T> Batch<T> {
     }
 }
 
+/// Per-queue EWMA deadline auto-tuner. Observes inter-arrival gaps at
+/// [`MicroBatchQueue::push`] time and proposes an *effective* deadline
+/// of roughly `max_batch × smoothed_gap` — the time a size flush needs
+/// at the current rate — clamped into `[floor, configured max_delay]`.
+/// Hot queues therefore stop over-waiting when their traffic pauses,
+/// while cold queues keep the full configured coalescing window. Fully
+/// time-parametric: `now` is an argument, nothing reads a clock.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    /// Smoothed inter-arrival gap (µs); `None` until two arrivals.
+    ewma_gap_us: Option<f64>,
+    last_arrival: Option<Instant>,
+    max_batch: usize,
+    /// The configured [`BatchPolicy::max_delay`] — the upper clamp.
+    bound: Duration,
+    /// Lower clamp, so one dense burst can't tune the deadline to zero
+    /// and defeat coalescing entirely.
+    floor: Duration,
+}
+
+/// EWMA weight on the newest gap: heavy enough to track a rate change
+/// within a handful of arrivals, light enough that one outlier gap
+/// doesn't swing the deadline.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Default lower clamp on the auto-tuned deadline (µs); the configured
+/// bound wins when it is smaller.
+const DELAY_FLOOR_US: u64 = 50;
+
+impl AdmissionController {
+    /// A controller for one queue under `policy` (using its `max_batch`
+    /// as the fill target and its `max_delay` as the upper clamp).
+    pub fn new(policy: &BatchPolicy) -> Self {
+        let bound = policy.max_delay;
+        Self {
+            ewma_gap_us: None,
+            last_arrival: None,
+            max_batch: policy.max_batch.max(1),
+            bound,
+            floor: bound.min(Duration::from_micros(DELAY_FLOOR_US)),
+        }
+    }
+
+    /// Fold one arrival at `now` into the gap EWMA. Out-of-order
+    /// arrivals (possible under a virtual clock) count as a zero gap.
+    pub fn observe_arrival(&mut self, now: Instant) {
+        if let Some(last) = self.last_arrival {
+            let gap = now.saturating_duration_since(last).as_micros() as f64;
+            self.ewma_gap_us = Some(match self.ewma_gap_us {
+                None => gap,
+                Some(prev) => EWMA_ALPHA * gap + (1.0 - EWMA_ALPHA) * prev,
+            });
+        }
+        self.last_arrival = Some(now);
+    }
+
+    /// The auto-tuned deadline: `max_batch × smoothed gap`, clamped to
+    /// `[floor, bound]`. Until two arrivals have been observed there is
+    /// no rate estimate, so the configured bound applies unchanged.
+    pub fn current_delay(&self) -> Duration {
+        let Some(gap) = self.ewma_gap_us else {
+            return self.bound;
+        };
+        let predicted_us = (gap * self.max_batch as f64).round() as u64;
+        Duration::from_micros(predicted_us).clamp(self.floor, self.bound)
+    }
+}
+
 /// A bounded per-model FIFO with size-or-deadline flushing. Generic
 /// over the payload so the scheduling logic is testable with plain
 /// values; the host instantiates it with its pending-request type.
@@ -81,15 +157,24 @@ impl<T> Batch<T> {
 pub struct MicroBatchQueue<T> {
     items: VecDeque<(T, Instant)>,
     policy: BatchPolicy,
+    /// Deadline auto-tuner, present iff the policy enables it.
+    admission: Option<AdmissionController>,
+    /// High-water mark of the depth reached at push time — recorded
+    /// here, under the same lock as the push itself, so no peak between
+    /// a push and the next take can be missed by later metric reads.
+    peak_depth: usize,
 }
 
 impl<T> MicroBatchQueue<T> {
     /// An empty queue under `policy` (normalized on entry: `max_batch ≥
     /// 1`, `queue_capacity ≥ max_batch`).
     pub fn new(policy: &BatchPolicy) -> Self {
+        let policy = policy.normalized();
         Self {
             items: VecDeque::new(),
-            policy: policy.normalized(),
+            admission: policy.adaptive_delay.then(|| AdmissionController::new(&policy)),
+            policy,
+            peak_depth: 0,
         }
     }
 
@@ -110,24 +195,48 @@ impl<T> MicroBatchQueue<T> {
 
     /// Enqueue at time `now`. Returns the new depth, or gives the item
     /// back (`Err`) when the queue is at capacity — the deterministic
-    /// shed: nothing about the queue changes on rejection.
+    /// shed: nothing about the queue changes on rejection. The depth
+    /// reached is folded into [`peak_depth`](Self::peak_depth) here, at
+    /// push time, so transient peaks between a push and the next take
+    /// are never lost to metric sampling.
     pub fn push(&mut self, item: T, now: Instant) -> Result<usize, T> {
         if self.items.len() >= self.policy.queue_capacity {
             return Err(item);
         }
         self.items.push_back((item, now));
-        Ok(self.items.len())
+        let depth = self.items.len();
+        self.peak_depth = self.peak_depth.max(depth);
+        if let Some(ac) = &mut self.admission {
+            ac.observe_arrival(now);
+        }
+        Ok(depth)
+    }
+
+    /// High-water mark of the depth ever reached at push time.
+    pub fn peak_depth(&self) -> usize {
+        self.peak_depth
+    }
+
+    /// The deadline window currently in force: the admission
+    /// controller's auto-tuned value when [`BatchPolicy::adaptive_delay`]
+    /// is on, else the configured [`BatchPolicy::max_delay`].
+    pub fn effective_delay(&self) -> Duration {
+        match &self.admission {
+            Some(ac) => ac.current_delay(),
+            None => self.policy.max_delay,
+        }
     }
 
     /// The flush trigger that has fired at `now`, if any: `Size` once
     /// `max_batch` requests wait, else `Deadline` once the oldest
-    /// request has waited `max_delay`. `None` means keep coalescing.
+    /// request has waited the [effective delay](Self::effective_delay).
+    /// `None` means keep coalescing.
     pub fn ready(&self, now: Instant) -> Option<FlushReason> {
         if self.items.len() >= self.policy.max_batch {
             return Some(FlushReason::Size);
         }
         let &(_, oldest) = self.items.front()?;
-        if now.duration_since(oldest) >= self.policy.max_delay {
+        if now.duration_since(oldest) >= self.effective_delay() {
             return Some(FlushReason::Deadline);
         }
         None
@@ -143,7 +252,8 @@ impl<T> MicroBatchQueue<T> {
     /// by deadline alone — what the dispatcher sleeps until when no
     /// size trigger is pending. `None` when the queue is empty.
     pub fn next_deadline(&self) -> Option<Instant> {
-        self.items.front().map(|&(_, t)| t + self.policy.max_delay)
+        let delay = self.effective_delay();
+        self.items.front().map(|&(_, t)| t + delay)
     }
 
     /// Take up to `max_batch` requests if a trigger has fired at `now`
@@ -279,5 +389,109 @@ mod tests {
         assert!(q.drain_batch().is_none());
         assert_eq!(q.head_enqueued(), None);
         assert_eq!(q.next_deadline(), None);
+    }
+
+    #[test]
+    fn peak_depth_is_recorded_at_push_time_and_survives_takes() {
+        let mut q = MicroBatchQueue::new(&policy(8, 1000, 64));
+        let t0 = Instant::now();
+        for i in 0..5 {
+            q.push(i, t0).unwrap();
+        }
+        assert_eq!(q.peak_depth(), 5);
+        // Draining empties the queue but the push-time peak persists —
+        // a metrics read after the take still sees the true high-water.
+        q.drain_batch().unwrap();
+        assert!(q.is_empty());
+        assert_eq!(q.peak_depth(), 5);
+        q.push(99, t0).unwrap();
+        assert_eq!(q.peak_depth(), 5, "lower depths never lower the peak");
+        // Shed pushes change nothing, including the peak.
+        let mut q = MicroBatchQueue::new(&policy(8, 1000, 2));
+        q.push(1, t0).unwrap();
+        q.push(2, t0).unwrap();
+        assert_eq!(q.push(3, t0), Err(3));
+        assert_eq!(q.peak_depth(), 2);
+    }
+
+    #[test]
+    fn adaptive_delay_tracks_arrival_rate_within_clamps() {
+        let bound = Duration::from_millis(10);
+        let pol = BatchPolicy {
+            max_batch: 8,
+            max_delay: bound,
+            adaptive_delay: true,
+            ..BatchPolicy::default()
+        };
+        let mut q = MicroBatchQueue::new(&pol);
+        let t0 = Instant::now();
+        // No rate estimate yet: the configured bound applies.
+        assert_eq!(q.effective_delay(), bound);
+        q.push(0, t0).unwrap();
+        assert_eq!(q.effective_delay(), bound, "one arrival is not a rate");
+        // Steady 100 µs gaps → EWMA gap 100 µs → effective delay about
+        // max_batch × gap = 800 µs, well under the 10 ms bound.
+        for i in 1..20u64 {
+            q.push(i as i32, t0 + Duration::from_micros(100 * i)).unwrap();
+        }
+        let d = q.effective_delay();
+        assert!(d < bound, "auto-tuned {d:?} should undercut the bound");
+        assert!(d >= Duration::from_micros(DELAY_FLOOR_US), "floor holds: {d:?}");
+        assert!(
+            (Duration::from_micros(400)..Duration::from_micros(1600)).contains(&d),
+            "expected ≈800 µs, got {d:?}"
+        );
+        // The deadline trigger fires on the tuned window, not the bound.
+        let q2 = {
+            let mut q2 = MicroBatchQueue::new(&pol);
+            for i in 0..7u64 {
+                q2.push(i as i32, t0 + Duration::from_micros(100 * i)).unwrap();
+            }
+            q2
+        };
+        let head = t0;
+        assert_eq!(q2.ready(head + Duration::from_micros(200)), None);
+        assert_eq!(
+            q2.ready(head + Duration::from_millis(2)),
+            Some(FlushReason::Deadline),
+            "tuned window (≈{:?}) fires long before the 10 ms bound",
+            q2.effective_delay()
+        );
+        assert!(q2.next_deadline().unwrap() < head + bound);
+    }
+
+    #[test]
+    fn adaptive_delay_clamps_dense_bursts_to_the_floor_and_idle_to_the_bound() {
+        let pol = BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_millis(5),
+            adaptive_delay: true,
+            ..BatchPolicy::default()
+        };
+        let mut ac = AdmissionController::new(&pol);
+        let t0 = Instant::now();
+        // Same-instant burst: gap 0 → clamp at the floor, never zero.
+        for _ in 0..16 {
+            ac.observe_arrival(t0);
+        }
+        assert_eq!(ac.current_delay(), Duration::from_micros(DELAY_FLOOR_US));
+        // Huge gaps: the prediction exceeds the bound → clamp to it.
+        let mut ac = AdmissionController::new(&pol);
+        ac.observe_arrival(t0);
+        ac.observe_arrival(t0 + Duration::from_secs(1));
+        assert_eq!(ac.current_delay(), Duration::from_millis(5));
+        // A bound tighter than the floor wins (clamp stays ordered).
+        let tight = BatchPolicy {
+            max_delay: Duration::from_micros(10),
+            adaptive_delay: true,
+            ..BatchPolicy::default()
+        };
+        let mut ac = AdmissionController::new(&tight);
+        ac.observe_arrival(t0);
+        ac.observe_arrival(t0);
+        assert_eq!(ac.current_delay(), Duration::from_micros(10));
+        // Disabled policies keep the static window.
+        let q: MicroBatchQueue<u8> = MicroBatchQueue::new(&BatchPolicy::default());
+        assert_eq!(q.effective_delay(), BatchPolicy::default().max_delay);
     }
 }

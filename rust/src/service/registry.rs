@@ -17,6 +17,22 @@
 //! is time-parametric — `now` is an argument — so the whole state
 //! machine is unit-testable without sleeping, in the same style as the
 //! scheduler core.
+//!
+//! The registry also carries two pieces of serving-layer placement
+//! state:
+//!
+//! * **Shard pins** — [`pin_shard`](ModelRegistry::pin_shard) overrides
+//!   the [`super::ShardPolicy`] hash for chosen models, e.g. to isolate
+//!   a known-hot model on a dispatcher shard of its own.
+//! * **Idle-model TTL eviction** — each model's
+//!   [`last_used`](ModelRegistry::last_used) instant is seeded at
+//!   registration and refreshed by [`touch`](ModelRegistry::touch) on
+//!   every accepted submit; [`evict_idle`](ModelRegistry::evict_idle)
+//!   removes models idle past a TTL (dropping their plan, health, and
+//!   pin). In-flight `Arc<ServiceModel>` handles stay valid — eviction
+//!   only stops *new* lookups. Like the breaker, every decision takes
+//!   `now` as an argument, so virtual-clock tests cover the lifecycle
+//!   without sleeping.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, RwLock};
@@ -130,6 +146,11 @@ pub struct ModelRegistry {
     models: RwLock<BTreeMap<String, Arc<ServiceModel>>>,
     breaker: BreakerPolicy,
     health: Mutex<BTreeMap<String, Health>>,
+    /// Explicit model → shard pins overriding the shard-policy hash.
+    pins: Mutex<BTreeMap<String, usize>>,
+    /// Per-model last-activity instants (seeded at registration,
+    /// refreshed by [`touch`](Self::touch)) — the TTL-eviction input.
+    last_used: Mutex<BTreeMap<String, Instant>>,
 }
 
 impl ModelRegistry {
@@ -155,9 +176,17 @@ impl ModelRegistry {
         &self.breaker
     }
 
-    /// Register an already-compiled plan under `id`. Errors when the id
-    /// is taken.
+    /// Register an already-compiled plan under `id` (last-used seeded
+    /// at the real clock). Errors when the id is taken.
     pub fn register_plan(&self, id: &str, plan: ExecPlan) -> Result<()> {
+        self.register_plan_at(id, plan, Instant::now())
+    }
+
+    /// Register an already-compiled plan under `id`, seeding its
+    /// last-used instant at an explicit `now` — the time-parametric
+    /// form virtual-clock eviction tests drive. Errors when the id is
+    /// taken.
+    pub fn register_plan_at(&self, id: &str, plan: ExecPlan, now: Instant) -> Result<()> {
         // Registration mutates nothing but the map, so a poisoned lock
         // (a panic elsewhere while holding it) leaves a fully valid
         // map — recover instead of cascading the panic.
@@ -169,6 +198,8 @@ impl ModelRegistry {
             id.to_string(),
             Arc::new(ServiceModel { id: id.to_string(), plan }),
         );
+        drop(models);
+        self.touch(id, now);
         Ok(())
     }
 
@@ -176,6 +207,93 @@ impl ModelRegistry {
     /// network) and register it under `id`.
     pub fn register<S: PlanSource + ?Sized>(&self, id: &str, src: &S) -> Result<()> {
         self.register_plan(id, ExecPlan::compile(src))
+    }
+
+    /// Pin `id` to dispatcher shard `shard`, overriding the
+    /// [`super::ShardPolicy`] hash (the shard index is wrapped into the
+    /// service's shard count at lookup). Pinning an unregistered id is
+    /// allowed — the pin simply waits for the registration.
+    pub fn pin_shard(&self, id: &str, shard: usize) {
+        let mut pins = self.pins.lock().unwrap_or_else(|e| e.into_inner());
+        pins.insert(id.to_string(), shard);
+    }
+
+    /// The explicit shard pin for `id`, if one was set.
+    pub fn pinned_shard(&self, id: &str) -> Option<usize> {
+        let pins = self.pins.lock().unwrap_or_else(|e| e.into_inner());
+        pins.get(id).copied()
+    }
+
+    /// Record activity for `id` at `now` (monotone: an older `now`
+    /// never rewinds the instant). The host calls this on every
+    /// accepted submit; tests drive it with a virtual clock.
+    pub fn touch(&self, id: &str, now: Instant) {
+        let mut used = self.last_used.lock().unwrap_or_else(|e| e.into_inner());
+        let e = used.entry(id.to_string()).or_insert(now);
+        if now > *e {
+            *e = now;
+        }
+    }
+
+    /// When `id` was registered or last touched; `None` for unknown
+    /// ids.
+    pub fn last_used(&self, id: &str) -> Option<Instant> {
+        let used = self.last_used.lock().unwrap_or_else(|e| e.into_inner());
+        used.get(id).copied()
+    }
+
+    /// Registered models whose last activity is at least `ttl` before
+    /// `now` — the eviction candidates. Sorted by id (BTreeMap order).
+    pub fn idle_candidates(&self, ttl: Duration, now: Instant) -> Vec<String> {
+        let models = self.models.read().unwrap_or_else(|e| e.into_inner());
+        let used = self.last_used.lock().unwrap_or_else(|e| e.into_inner());
+        models
+            .keys()
+            .filter(|id| match used.get(*id) {
+                Some(&t) => now.saturating_duration_since(t) >= ttl,
+                // Defensive: registration always seeds last_used, so a
+                // missing entry means external state drift — treat as
+                // idle so it cannot pin memory forever.
+                None => true,
+            })
+            .cloned()
+            .collect()
+    }
+
+    /// Remove `id` entirely: its plan, health state, shard pin and
+    /// last-used record. Returns whether a model was actually removed.
+    /// In-flight `Arc<ServiceModel>` clones remain valid; only new
+    /// lookups miss.
+    pub fn remove(&self, id: &str) -> bool {
+        let removed = {
+            let mut models = self.models.write().unwrap_or_else(|e| e.into_inner());
+            models.remove(id).is_some()
+        };
+        let mut health = self.health.lock().unwrap_or_else(|e| e.into_inner());
+        health.remove(id);
+        drop(health);
+        let mut pins = self.pins.lock().unwrap_or_else(|e| e.into_inner());
+        pins.remove(id);
+        drop(pins);
+        let mut used = self.last_used.lock().unwrap_or_else(|e| e.into_inner());
+        used.remove(id);
+        removed
+    }
+
+    /// TTL eviction sweep: [`remove`](Self::remove) every
+    /// [`idle_candidate`](Self::idle_candidates) and return the evicted
+    /// ids. The registry-level sweep evicts unconditionally; the host's
+    /// [`super::InferenceService::evict_idle`] wrapper additionally
+    /// skips models with queued requests.
+    pub fn evict_idle(&self, ttl: Duration, now: Instant) -> Vec<String> {
+        let candidates = self.idle_candidates(ttl, now);
+        let mut evicted = Vec::with_capacity(candidates.len());
+        for id in candidates {
+            if self.remove(&id) {
+                evicted.push(id);
+            }
+        }
+        evicted
     }
 
     /// Look up a model by id.
@@ -396,5 +514,52 @@ mod tests {
         assert!(reg.register("m", &b).is_err());
         // The original registration is untouched.
         assert_eq!(reg.get("m").unwrap().plan().num_inputs(), 2);
+    }
+
+    #[test]
+    fn shard_pins_are_settable_and_cleared_by_remove() {
+        let reg = ModelRegistry::new();
+        assert_eq!(reg.pinned_shard("m"), None);
+        // Pinning before registration is allowed (the pin waits).
+        reg.pin_shard("m", 3);
+        assert_eq!(reg.pinned_shard("m"), Some(3));
+        reg.pin_shard("m", 1);
+        assert_eq!(reg.pinned_shard("m"), Some(1), "re-pin overwrites");
+        reg.register("m", &net(&[2, 3, 1], 5)).unwrap();
+        assert_eq!(reg.pinned_shard("m"), Some(1));
+        assert!(reg.remove("m"));
+        assert_eq!(reg.pinned_shard("m"), None, "remove clears the pin");
+        assert!(!reg.remove("m"), "second remove is a no-op");
+    }
+
+    #[test]
+    fn ttl_eviction_tracks_touches_on_a_virtual_clock() {
+        let reg = ModelRegistry::new();
+        let t0 = Instant::now();
+        let ttl = Duration::from_secs(30);
+        reg.register_plan_at("idle", ExecPlan::compile(&net(&[2, 3, 1], 6)), t0)
+            .unwrap();
+        reg.register_plan_at("busy", ExecPlan::compile(&net(&[2, 3, 1], 7)), t0)
+            .unwrap();
+        assert_eq!(reg.last_used("idle"), Some(t0));
+        assert_eq!(reg.last_used("ghost"), None);
+
+        // Inside the TTL nothing is a candidate.
+        let t1 = t0 + Duration::from_secs(29);
+        assert!(reg.idle_candidates(ttl, t1).is_empty());
+        // `busy` keeps getting traffic; `idle` does not.
+        reg.touch("busy", t1);
+        // A stale touch never rewinds the instant.
+        reg.touch("busy", t0);
+        assert_eq!(reg.last_used("busy"), Some(t1));
+
+        let t2 = t0 + Duration::from_secs(31);
+        assert_eq!(reg.idle_candidates(ttl, t2), vec!["idle".to_string()]);
+        assert_eq!(reg.evict_idle(ttl, t2), vec!["idle".to_string()]);
+        assert!(reg.get("idle").is_none(), "evicted model is gone");
+        assert!(reg.get("busy").is_some(), "recently-used model survives");
+        assert_eq!(reg.last_used("idle"), None, "eviction clears last_used");
+        // The sweep is idempotent.
+        assert!(reg.evict_idle(ttl, t2).is_empty());
     }
 }

@@ -1,0 +1,115 @@
+//! Model → dispatcher-shard assignment.
+//!
+//! A sharded [`InferenceService`](super::InferenceService) runs N
+//! independent dispatcher shards, each with its own queue set, wake
+//! condvar, execution engine and watchdog — the serving-layer analogue
+//! of the paper's per-core work partitioning on the octa-core cluster.
+//! [`ShardPolicy`] decides which shard serves which model:
+//!
+//! * **Static hash** (the default): FNV-1a over the model id, modulo
+//!   the shard count — deterministic, registration-order independent,
+//!   and stable across restarts.
+//! * **Explicit pinning**: [`super::ModelRegistry::pin_shard`] overrides
+//!   the hash for chosen models (e.g. to isolate a known-hot model on
+//!   its own shard, the head-of-line scenario's setup).
+//!
+//! A model always maps to exactly one shard, so its execution-attempt
+//! sequence (the [`super::FaultPlan`] key) and its queue FIFO order are
+//! exactly what they were in the single-dispatcher service.
+
+use super::faults::model_tag;
+
+/// Upper bound on dispatcher shards — far above any sensible
+/// configuration (each shard is two OS threads in started mode).
+pub const MAX_SHARDS: usize = 64;
+
+/// How models are distributed across dispatcher shards. See the
+/// [module docs](self).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPolicy {
+    /// Number of dispatcher shards. Normalized into `1..=`
+    /// [`MAX_SHARDS`] at service construction.
+    pub shards: usize,
+}
+
+impl Default for ShardPolicy {
+    fn default() -> Self {
+        Self::single()
+    }
+}
+
+impl ShardPolicy {
+    /// The unsharded policy (one dispatcher — the pre-sharding
+    /// service, byte for byte).
+    pub fn single() -> Self {
+        Self { shards: 1 }
+    }
+
+    /// A policy with `shards` dispatcher shards.
+    pub fn new(shards: usize) -> Self {
+        Self { shards }
+    }
+
+    /// The policy with its invariants enforced (`1 ≤ shards ≤`
+    /// [`MAX_SHARDS`]), applied once at service construction.
+    pub fn normalized(&self) -> Self {
+        Self { shards: self.shards.clamp(1, MAX_SHARDS) }
+    }
+
+    /// The shard serving `model`: the explicit pin when one is set
+    /// (wrapped into range), else the static FNV-1a hash of the id.
+    /// Pure — same inputs, same shard, on every host and every run.
+    pub fn shard_of(&self, model: &str, pinned: Option<usize>) -> usize {
+        let n = self.shards.max(1);
+        match pinned {
+            Some(p) => p % n,
+            None => (model_tag(model) % n as u64) as usize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_policy_maps_everything_to_shard_zero() {
+        let p = ShardPolicy::single();
+        for id in ["emg-q7", "ecg-q32", "eeg-f32", ""] {
+            assert_eq!(p.shard_of(id, None), 0);
+            assert_eq!(p.shard_of(id, Some(7)), 0);
+        }
+    }
+
+    #[test]
+    fn hash_assignment_is_deterministic_and_in_range() {
+        let p = ShardPolicy::new(4);
+        for id in ["emg-q7", "ecg-q32", "eeg-f32", "a", "b", "zz"] {
+            let s = p.shard_of(id, None);
+            assert!(s < 4);
+            assert_eq!(s, p.shard_of(id, None), "stable for {id}");
+        }
+        // FNV spreads: the three load models don't all collide.
+        let shards: Vec<usize> = ["emg-q7", "ecg-q32", "eeg-f32"]
+            .iter()
+            .map(|id| p.shard_of(id, None))
+            .collect();
+        assert!(shards.iter().any(|&s| s != shards[0]), "{shards:?}");
+    }
+
+    #[test]
+    fn pin_overrides_hash_and_wraps_into_range() {
+        let p = ShardPolicy::new(3);
+        assert_eq!(p.shard_of("m", Some(2)), 2);
+        assert_eq!(p.shard_of("m", Some(5)), 2);
+        assert_ne!(p.shard_of("m", Some(1)), p.shard_of("m", Some(2)));
+    }
+
+    #[test]
+    fn normalization_clamps_to_valid_shard_counts() {
+        assert_eq!(ShardPolicy::new(0).normalized().shards, 1);
+        assert_eq!(ShardPolicy::new(4).normalized().shards, 4);
+        assert_eq!(ShardPolicy::new(10_000).normalized().shards, MAX_SHARDS);
+        assert_eq!(ShardPolicy::default(), ShardPolicy::single());
+    }
+}

@@ -7,9 +7,12 @@
 //! `fail_pending`, end-of-run drain), every **accepted** request
 //! receives **exactly one** terminal reply — never zero (lost), never
 //! two (duplicate) — and the service's own counters reconcile with
-//! what the client-side channel saw. Everything runs in manual mode on
-//! a virtual clock, so the whole admit/flush/timeout/quarantine
-//! timeline is deterministic per seed and needs no sleeps.
+//! what the client-side channel saw. The shard count is itself
+//! randomized over {1, 2, 4}, so the invariant is exercised both with
+//! all models on one dispatcher shard and spread across several.
+//! Everything runs in manual mode on a virtual clock, so the whole
+//! admit/flush/timeout/quarantine timeline is deterministic per seed
+//! and needs no sleeps.
 
 use std::collections::HashMap;
 use std::sync::{mpsc, Arc};
@@ -18,7 +21,8 @@ use std::time::{Duration, Instant};
 use fann_on_mcu::fann::{Activation, FixedNetwork, Network};
 use fann_on_mcu::kernels::ExecPlan;
 use fann_on_mcu::service::{
-    BatchPolicy, BreakerPolicy, FaultPlan, InferenceService, ModelRegistry, SubmitError,
+    BatchPolicy, BreakerPolicy, FaultPlan, InferenceService, ModelRegistry, ShardPolicy,
+    SubmitError,
 };
 use fann_on_mcu::util::proptest::{check, ensure};
 use fann_on_mcu::util::rng::Rng;
@@ -75,7 +79,19 @@ fn every_accepted_request_gets_exactly_one_terminal_reply() {
         };
 
         let reg = registry(rng, breaker);
-        let svc = InferenceService::new_with_faults(Arc::clone(&reg), &policy, Some(plan));
+        // Randomized shard count: the exactly-one-reply contract may
+        // not depend on how models map onto dispatcher shards.
+        let shards = [1usize, 2, 4][rng.below(3)];
+        let svc = InferenceService::new_sharded(
+            Arc::clone(&reg),
+            &policy,
+            &ShardPolicy::new(shards),
+            Some(plan),
+        );
+        ensure(
+            svc.shard_count() == shards,
+            "service must honor the requested shard count",
+        )?;
         let (tx, rx) = mpsc::channel();
         let t0 = Instant::now();
         let mut offset_us: u64 = 0;
@@ -179,6 +195,24 @@ fn every_accepted_request_gets_exactly_one_terminal_reply() {
                 snap.total_completed(),
                 snap.total_failed(),
                 accepted.len()
+            ),
+        )?;
+        // Per-shard rows must partition the aggregate, whatever the
+        // shard count this iteration drew.
+        ensure(
+            snap.shards.len() == shards,
+            "snapshot must carry one row per shard",
+        )?;
+        let shard_completed: u64 = snap.shards.iter().map(|s| s.completed).sum();
+        let shard_failed: u64 = snap.shards.iter().map(|s| s.failed).sum();
+        ensure(
+            shard_completed == snap.total_completed() && shard_failed == snap.total_failed(),
+            format!(
+                "per-shard counters diverge: completed {} vs {}, failed {} vs {}",
+                shard_completed,
+                snap.total_completed(),
+                shard_failed,
+                snap.total_failed()
             ),
         )?;
         Ok(())

@@ -16,6 +16,9 @@
 //!   probe, and recovers — deterministically, on a virtual clock;
 //! * the watchdog respawns a killed dispatcher and requests still
 //!   complete (aborted in-flight requests get terminal replies);
+//! * dispatcher kills on a sharded service land only on the shard
+//!   hosting the faulted model — the other shard never restarts and
+//!   never aborts a request;
 //! * a tiny `service load` run reports the `BENCH_service.json` schema.
 
 use std::collections::HashMap;
@@ -28,7 +31,7 @@ use fann_on_mcu::quantize::quantize;
 use fann_on_mcu::service::load::{self, LoadOptions};
 use fann_on_mcu::service::{
     BatchPolicy, BreakerPolicy, FaultPlan, HealthState, InferError, InferenceService,
-    ModelRegistry, Output, SubmitError,
+    ModelRegistry, Output, ShardPolicy, SubmitError,
 };
 use fann_on_mcu::util::rng::Rng;
 
@@ -330,6 +333,66 @@ fn watchdog_respawns_dispatcher_after_injected_kills() {
 }
 
 #[test]
+fn sharded_started_service_isolates_kills_to_one_shard() {
+    let reg = Arc::new(ModelRegistry::new());
+    reg.register("bad", &rand_net(&[2, 3, 1], 31)).unwrap();
+    reg.register("good", &rand_net(&[2, 3, 1], 32)).unwrap();
+    reg.pin_shard("bad", 0);
+    reg.pin_shard("good", 1);
+    // Kills are injected at the first two loop iterations of the shard
+    // hosting the faulted model — shard 1 must never see one.
+    let faults = FaultPlan {
+        panic_model: "bad".to_string(),
+        kill_at_iters: vec![0, 1],
+        ..FaultPlan::default()
+    };
+    let svc = InferenceService::start_sharded(
+        Arc::clone(&reg),
+        &policy(4, Duration::from_millis(1), 64),
+        &ShardPolicy::new(2),
+        Some(faults),
+    );
+    assert_eq!(svc.shard_count(), 2);
+    assert_eq!(svc.shard_of("bad"), 0);
+    assert_eq!(svc.shard_of("good"), 1);
+    let (tx, rx) = mpsc::channel();
+    // Every request on the healthy shard completes — no Aborted replies
+    // leak across the shard boundary even while shard 0 is dying.
+    for s in 0..8u64 {
+        svc.submit("good", s, &[0.5, -0.5], &tx).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(r.is_ok(), "healthy-shard request aborted: {:?}", r.outcome);
+    }
+    // The killed shard recovers via its own watchdog, exactly like the
+    // single-shard test above.
+    let mut completed = false;
+    for _ in 0..100 {
+        svc.submit("bad", 1, &[0.5, -0.5], &tx).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        match r.outcome {
+            Ok(_) => {
+                completed = true;
+                break;
+            }
+            Err(InferError::Aborted { .. }) => continue,
+            Err(e) => panic!("unexpected terminal error: {e}"),
+        }
+    }
+    assert!(completed, "the killed shard never recovered");
+    let snap = svc.shutdown();
+    assert_eq!(snap.shards.len(), 2);
+    assert_eq!(snap.watchdog_restarts, 2);
+    assert_eq!(snap.shards[0].restarts, 2, "kills land on the faulted model's shard");
+    assert_eq!(snap.shards[1].restarts, 0, "the healthy shard never restarts");
+    assert_eq!(snap.shards[1].failed, 0, "no aborted replies on the healthy shard");
+    assert_eq!(
+        snap.shards[0].completed + snap.shards[1].completed,
+        snap.total_completed(),
+        "per-shard completed rows partition the aggregate"
+    );
+}
+
+#[test]
 fn per_tenant_and_per_model_counters_reconcile() {
     let reg = Arc::new(ModelRegistry::new());
     reg.register("m", &rand_net(&[2, 3, 2], 13)).unwrap();
@@ -359,6 +422,7 @@ fn load_harness_smoke_reports_the_bench_schema() {
         requests_per_client: 2,
         seed: 5,
         submitters: 3,
+        shards: 2,
         policy: policy(8, Duration::from_micros(500), 128),
     };
     let report = load::run(&opts).unwrap();
@@ -369,6 +433,8 @@ fn load_harness_smoke_reports_the_bench_schema() {
     assert_eq!(report.rows.len(), 3, "emg-q7 + ecg-q32 + eeg-f32");
     assert_eq!(report.rows.iter().map(|r| r.completed).sum::<u64>(), 60);
     assert_eq!(report.tenants, 30);
+    assert_eq!(report.shard_rows.len(), 2, "one counter row per dispatcher shard");
+    assert_eq!(report.shard_rows.iter().map(|s| s.completed).sum::<u64>(), 60);
     let json = report.to_json().to_pretty();
     for field in [
         "\"schema\": \"fann-on-mcu/bench-service/v1\"",
@@ -381,6 +447,10 @@ fn load_harness_smoke_reports_the_bench_schema() {
         "\"emg-q7\"",
         "\"ecg-q32\"",
         "\"eeg-f32\"",
+        "\"shards\"",
+        "\"shards_detail\"",
+        "\"head_of_line\"",
+        "\"cold_p99_us_sharded\"",
     ] {
         assert!(json.contains(field), "missing {field}");
     }
