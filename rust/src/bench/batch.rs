@@ -25,7 +25,9 @@ use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 use crate::fann::{from_float_packed, FixedNetwork, Network, PackedNetwork};
-use crate::kernels::{self, BlockedF32, DenseKernel, ExecPlan, PackedWidth, PlanScratch, ScalarF32};
+use crate::kernels::{
+    self, BlockedF32, DenseKernel, ExecPlan, PackedWidth, PlanScratch, ScalarF32, SimdF32,
+};
 
 /// Resolve a requested worker count: 0 means "all available cores".
 pub fn resolve_threads(requested: usize) -> usize {
@@ -764,6 +766,13 @@ pub struct SweepRow {
     pub mode: &'static str,
     /// Median wall time for the whole batch.
     pub seconds: f64,
+    /// Fastest measured rep (noise diagnosis; see
+    /// [`super::TimeStats`]).
+    pub seconds_min: f64,
+    /// Slowest measured rep.
+    pub seconds_max: f64,
+    /// Number of measured reps behind the median.
+    pub reps: usize,
     /// Throughput over the whole batch.
     pub samples_per_sec: f64,
     /// Parameter storage (weights + biases) in this kernel's
@@ -803,15 +812,18 @@ pub fn kernel_sweep(
     // the median wall time.
     let timed_row = |kernel: &'static str, mode: &'static str, bytes: usize, run: &dyn Fn() -> u64| {
         let mut ck = 0u64;
-        let t = super::time_median(warmup, reps, || {
+        let t = super::time_stats(warmup, reps, || {
             ck = run();
             std::hint::black_box(ck);
         });
         SweepRow {
             kernel,
             mode,
-            seconds: t,
-            samples_per_sec: n_samples as f64 / t,
+            seconds: t.median,
+            seconds_min: t.min,
+            seconds_max: t.max,
+            reps: t.reps,
+            samples_per_sec: n_samples as f64 / t.median,
             bytes_per_network: bytes,
             checksum: ck,
         }
@@ -819,8 +831,9 @@ pub fn kernel_sweep(
 
     let mut rows: Vec<SweepRow> = Vec::with_capacity(10);
 
-    // Float kernels.
-    for kernel in [&ScalarF32 as &dyn DenseKernel<f32>, &BlockedF32] {
+    // Float kernels (SimdF32 rides the same loop: its serial/parallel
+    // pair and checksum assert come for free).
+    for kernel in [&ScalarF32 as &dyn DenseKernel<f32>, &BlockedF32, &SimdF32] {
         let serial = net.run_batch_with_kernel(kernel, xs, n_samples);
         let parallel = run_batch_parallel_with_kernel(net, kernel, xs, n_samples, threads);
         assert_eq!(serial, parallel, "{}: parallel diverged", kernel.name());
@@ -1119,9 +1132,19 @@ mod tests {
         let xs: Vec<f32> = (0..n * 6).map(|_| rng.range_f32(-1.0, 1.0)).collect();
         let rows = kernel_sweep(&fnet, &xs, n, 2, 0, 1);
         let kernels: Vec<_> = rows.iter().map(|r| (r.kernel, r.mode)).collect();
-        for k in ["scalar_f32", "blocked_f32", "fixed_q", "packed_q7", "packed_q15"] {
+        for k in ["scalar_f32", "blocked_f32", "simd_f32", "fixed_q", "packed_q7", "packed_q15"] {
             assert!(kernels.contains(&(k, "serial")), "{k} serial missing");
             assert!(kernels.contains(&(k, "parallel")), "{k} parallel missing");
+        }
+        // Rep diagnostics bracket the median on every row.
+        for r in &rows {
+            assert!(r.reps >= 1, "{} {}: reps", r.kernel, r.mode);
+            assert!(
+                r.seconds_min <= r.seconds && r.seconds <= r.seconds_max,
+                "{} {}: min/median/max out of order",
+                r.kernel,
+                r.mode
+            );
         }
         for k in ["exec_plan_f32", "exec_plan_q32", "exec_plan_q7", "exec_plan_q15"] {
             assert!(kernels.contains(&(k, "serial")), "{k} serial missing");

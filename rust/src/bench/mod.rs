@@ -84,11 +84,28 @@ pub fn whole_network_cycles(shape: &NetShape, target: Target, dtype: DataType) -
     Some(cost::network_cycles(&plan, &acts, CostOptions::default()).total())
 }
 
-/// Wall-clock timing helper for the perf bench: median of `reps` runs
-/// after `warmup` runs; returns seconds per call. `reps` is clamped to
-/// a minimum of 1 — `reps == 0` used to index the median of an empty
+/// Summary statistics of one timed row: median (the headline number
+/// the gates compare), plus min/max/rep-count so a noisy-runner
+/// regression is diagnosable from the `BENCH_kernels.json` artifact
+/// alone (a wide min..max spread at an unchanged min means scheduler
+/// noise, not a code regression).
+#[derive(Debug, Clone, Copy)]
+pub struct TimeStats {
+    /// Median seconds per call across the measured reps.
+    pub median: f64,
+    /// Fastest measured rep.
+    pub min: f64,
+    /// Slowest measured rep.
+    pub max: f64,
+    /// Number of measured reps (after clamping to >= 1).
+    pub reps: usize,
+}
+
+/// Wall-clock timing helper for the perf bench: median/min/max of
+/// `reps` runs after `warmup` runs, seconds per call. `reps` is clamped
+/// to a minimum of 1 — `reps == 0` used to index the median of an empty
 /// sample vector and panic.
-pub fn time_median<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> f64 {
+pub fn time_stats<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> TimeStats {
     let reps = reps.max(1);
     for _ in 0..warmup {
         f();
@@ -101,7 +118,17 @@ pub fn time_median<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> f64 {
         })
         .collect();
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    samples[samples.len() / 2]
+    TimeStats {
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: samples[samples.len() - 1],
+        reps,
+    }
+}
+
+/// Median-only convenience wrapper over [`time_stats`].
+pub fn time_median<F: FnMut()>(warmup: usize, reps: usize, f: F) -> f64 {
+    time_stats(warmup, reps, f).median
 }
 
 /// Format a speedup cell, using the paper's 0.0 marker for no-fit.
@@ -183,5 +210,19 @@ mod tests {
         });
         assert!(t >= 0.0);
         assert_eq!(calls, 1, "clamped to one measured rep");
+    }
+
+    #[test]
+    fn time_stats_orders_min_median_max() {
+        let mut x = 0u64;
+        let s = time_stats(1, 7, || {
+            for _ in 0..1000 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            std::hint::black_box(x);
+        });
+        assert_eq!(s.reps, 7);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.min >= 0.0);
     }
 }

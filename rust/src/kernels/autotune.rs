@@ -1,0 +1,340 @@
+//! A small per-host autotune pass for the SIMD kernel knobs.
+//!
+//! The SIMD microkernels in [`super::simd`] leave two things to taste
+//! per host: how many chunks the integer panel loops process per
+//! iteration (the `unroll2` second accumulator set — a win on wide
+//! out-of-order cores, a wash on small ones) and how many output rows
+//! the [`super::SimdF32`] batched path tiles together (weight-row reuse
+//! vs register pressure). Every candidate is **bit-exact** with every
+//! other (integer adds commute; the f32 tile only reorders the row
+//! loop, never a reduction), so tuning is purely a speed decision —
+//! the pass asserts candidate agreement outright.
+//!
+//! [`autotune`] times each candidate on a fixed synthetic workload
+//! (64×64 layer, narrow inputs so the SSE2 `madd` tier can engage) and
+//! installs the winner in process-wide atomics that the dispatcher
+//! reads on every call ([`q_path`], [`f32_rows_per_tile`]). The bench
+//! CLI exposes it as `bench autotune`, and `bench json` runs a quick
+//! pass before measuring so `speedup_simd_*` rows reflect tuned
+//! kernels. The pass mutates the global knobs while it runs — call it
+//! before serving traffic, not during.
+
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::time::Instant;
+
+use super::layout::{pack_rows, PackedWidth};
+use super::packed::{PackedLayerRef, PackedQ15, PackedQ7};
+use super::simd::{self, SimdLevel};
+use super::{DenseKernel, DenseLayerRef, SimdF32};
+use crate::util::rng::Rng;
+
+/// How the packed q7/q15 product loops execute on this host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QPath {
+    /// Keep the portable scalar chunk loops.
+    Scalar,
+    /// Use the SIMD panel kernels for the selected level.
+    Simd {
+        /// Process two chunks per iteration with a second accumulator
+        /// set (exact: integer adds commute).
+        unroll2: bool,
+    },
+}
+
+impl QPath {
+    /// Stable label for bench metadata (`scalar` / `simd` /
+    /// `simd_unroll2`).
+    pub fn label(self) -> &'static str {
+        match self {
+            QPath::Scalar => "scalar",
+            QPath::Simd { unroll2: false } => "simd",
+            QPath::Simd { unroll2: true } => "simd_unroll2",
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            QPath::Scalar => 0,
+            QPath::Simd { unroll2: false } => 1,
+            QPath::Simd { unroll2: true } => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> QPath {
+        match v {
+            1 => QPath::Simd { unroll2: false },
+            2 => QPath::Simd { unroll2: true },
+            _ => QPath::Scalar,
+        }
+    }
+}
+
+/// The tunable knob set. [`Tuning::default`] is the conservative
+/// pre-tune state (SIMD on where available, no unroll, 4-row f32 tile).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tuning {
+    /// Output rows per tile of [`SimdF32`]'s batched path.
+    pub f32_rows_per_tile: usize,
+    /// q7 panel-loop path.
+    pub q7: QPath,
+    /// q15 panel-loop path.
+    pub q15: QPath,
+}
+
+impl Default for Tuning {
+    fn default() -> Self {
+        Self {
+            f32_rows_per_tile: 4,
+            q7: QPath::Simd { unroll2: false },
+            q15: QPath::Simd { unroll2: false },
+        }
+    }
+}
+
+static F32_TILE: AtomicUsize = AtomicUsize::new(4);
+static Q7_PATH: AtomicU8 = AtomicU8::new(1);
+static Q15_PATH: AtomicU8 = AtomicU8::new(1);
+
+/// The currently installed knob values.
+pub fn current() -> Tuning {
+    Tuning {
+        f32_rows_per_tile: F32_TILE.load(Ordering::Relaxed),
+        q7: QPath::from_u8(Q7_PATH.load(Ordering::Relaxed)),
+        q15: QPath::from_u8(Q15_PATH.load(Ordering::Relaxed)),
+    }
+}
+
+/// Install `t` as the process-wide knob values.
+pub fn apply(t: &Tuning) {
+    F32_TILE.store(t.f32_rows_per_tile.max(1), Ordering::Relaxed);
+    Q7_PATH.store(t.q7.to_u8(), Ordering::Relaxed);
+    Q15_PATH.store(t.q15.to_u8(), Ordering::Relaxed);
+}
+
+/// Row-tile knob read by [`SimdF32`]'s batched path.
+pub(crate) fn f32_rows_per_tile() -> usize {
+    F32_TILE.load(Ordering::Relaxed).max(1)
+}
+
+/// Panel-loop knob read by [`simd::q_dispatch`] per call.
+pub(crate) fn q_path(width: PackedWidth) -> QPath {
+    match width {
+        PackedWidth::Q7 => QPath::from_u8(Q7_PATH.load(Ordering::Relaxed)),
+        PackedWidth::Q15 => QPath::from_u8(Q15_PATH.load(Ordering::Relaxed)),
+    }
+}
+
+/// One timed candidate of the autotune pass, for bench reporting.
+#[derive(Debug, Clone)]
+pub struct CandidateTiming {
+    /// Which knob the candidate belongs to (`f32_rows_per_tile`,
+    /// `q7_path`, `q15_path`).
+    pub knob: &'static str,
+    /// Candidate value label.
+    pub candidate: String,
+    /// Best-of-reps wall time for the fixed workload.
+    pub seconds: f64,
+    /// Whether this candidate won its knob.
+    pub chosen: bool,
+}
+
+/// Best-of-`reps` wall time of `f` after one warmup call.
+fn time_min(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Time every candidate knob value on a fixed synthetic workload,
+/// assert all candidates agree bit-for-bit, install the winners and
+/// return them plus the per-candidate timings. `quick` shrinks the
+/// workload and rep count (used by `bench json`'s pre-measure pass);
+/// `bench autotune` runs the full grid.
+pub fn autotune(quick: bool) -> (Tuning, Vec<CandidateTiming>) {
+    let (n_in, n_out) = (64usize, 64usize);
+    let samples = if quick { 64 } else { 256 };
+    let iters = if quick { 2 } else { 8 };
+    let reps = if quick { 1 } else { 3 };
+    let mut rng = Rng::new(0x51D0_7E57);
+    let mut timings = Vec::new();
+    let mut tuning = current();
+
+    // --- f32 row tile -----------------------------------------------------
+    let wf: Vec<f32> = (0..n_in * n_out)
+        .map(|_| rng.below(2001) as f32 / 1000.0 - 1.0)
+        .collect();
+    let bf: Vec<f32> = (0..n_out).map(|_| rng.below(201) as f32 / 100.0 - 1.0).collect();
+    let layer_f = DenseLayerRef::new(n_in, n_out, &wf, &bf);
+    let xf: Vec<f32> = (0..n_in * samples)
+        .map(|_| rng.below(2001) as f32 / 1000.0 - 1.0)
+        .collect();
+    let mut out_f = vec![0.0f32; n_out * samples];
+    let mut reference: Option<Vec<f32>> = None;
+    let mut best = (f64::INFINITY, tuning.f32_rows_per_tile);
+    let mut f32_rows = Vec::new();
+    for tile in [1usize, 2, 4, 8] {
+        apply(&Tuning {
+            f32_rows_per_tile: tile,
+            ..tuning
+        });
+        let secs = time_min(reps, || {
+            for _ in 0..iters {
+                SimdF32.matmul(&layer_f, &xf, samples, &mut out_f);
+            }
+        });
+        match &reference {
+            // Every tile reorders only the row loop: outputs must be
+            // bit-identical.
+            Some(want) => assert_eq!(&out_f, want, "f32 tile {tile} changed results"),
+            None => reference = Some(out_f.clone()),
+        }
+        if secs < best.0 {
+            best = (secs, tile);
+        }
+        f32_rows.push((tile, secs));
+    }
+    tuning.f32_rows_per_tile = best.1;
+    for (tile, secs) in f32_rows {
+        timings.push(CandidateTiming {
+            knob: "f32_rows_per_tile",
+            candidate: tile.to_string(),
+            seconds: secs,
+            chosen: tile == tuning.f32_rows_per_tile,
+        });
+    }
+
+    // --- q7 / q15 panel paths --------------------------------------------
+    // Narrow inputs (|x| <= 1000) so every SIMD tier — including the
+    // SSE2 extra-narrow madd path — can engage.
+    if simd::selected_level() != SimdLevel::Scalar {
+        let dec = 6u32;
+        let xs: Vec<i32> = (0..n_in * samples)
+            .map(|_| rng.below(2001) as i32 - 1000)
+            .collect();
+        for width in [PackedWidth::Q7, PackedWidth::Q15] {
+            let (lo, hi) = width.range();
+            let span = (hi - lo + 1) as usize;
+            let wq: Vec<i32> = (0..n_in * n_out).map(|_| lo + rng.below(span) as i32).collect();
+            let bq: Vec<i32> = (0..n_out).map(|_| rng.below(4001) as i32 - 2000).collect();
+            let panels = pack_rows(width, n_in, n_out, &wq).expect("weights fit width");
+            let pref = PackedLayerRef::new(&panels, &bq);
+            let mut out_q = vec![0i32; n_out * samples];
+            let mut reference: Option<Vec<i32>> = None;
+            let mut best: (f64, QPath) = (f64::INFINITY, QPath::Simd { unroll2: false });
+            let mut rows = Vec::new();
+            for path in [
+                QPath::Scalar,
+                QPath::Simd { unroll2: false },
+                QPath::Simd { unroll2: true },
+            ] {
+                let mut t = tuning;
+                match width {
+                    PackedWidth::Q7 => t.q7 = path,
+                    PackedWidth::Q15 => t.q15 = path,
+                }
+                apply(&t);
+                let secs = time_min(reps, || {
+                    for _ in 0..iters {
+                        match width {
+                            PackedWidth::Q7 => {
+                                PackedQ7::new(dec).matmul(&pref, &xs, samples, &mut out_q)
+                            }
+                            PackedWidth::Q15 => {
+                                PackedQ15::new(dec).matmul(&pref, &xs, samples, &mut out_q)
+                            }
+                        }
+                    }
+                });
+                match &reference {
+                    // SIMD panels are bit-exact vs the scalar loops.
+                    Some(want) => {
+                        assert_eq!(&out_q, want, "{width:?} path {} changed results", path.label())
+                    }
+                    None => reference = Some(out_q.clone()),
+                }
+                if secs < best.0 {
+                    best = (secs, path);
+                }
+                rows.push((path, secs));
+            }
+            match width {
+                PackedWidth::Q7 => tuning.q7 = best.1,
+                PackedWidth::Q15 => tuning.q15 = best.1,
+            }
+            let knob = match width {
+                PackedWidth::Q7 => "q7_path",
+                PackedWidth::Q15 => "q15_path",
+            };
+            for (path, secs) in rows {
+                timings.push(CandidateTiming {
+                    knob,
+                    candidate: path.label().to_string(),
+                    seconds: secs,
+                    chosen: path == best.1,
+                });
+            }
+        }
+    }
+
+    apply(&tuning);
+    (tuning, timings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// Serializes tests that mutate the process-wide knobs.
+    static KNOB_GATE: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn apply_current_roundtrip() {
+        let _g = KNOB_GATE.lock().unwrap_or_else(|p| p.into_inner());
+        let before = current();
+        let t = Tuning {
+            f32_rows_per_tile: 2,
+            q7: QPath::Simd { unroll2: true },
+            q15: QPath::Scalar,
+        };
+        apply(&t);
+        assert_eq!(current(), t);
+        assert_eq!(f32_rows_per_tile(), 2);
+        assert_eq!(q_path(PackedWidth::Q7), QPath::Simd { unroll2: true });
+        assert_eq!(q_path(PackedWidth::Q15), QPath::Scalar);
+        apply(&before);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(QPath::Scalar.label(), "scalar");
+        assert_eq!(QPath::Simd { unroll2: false }.label(), "simd");
+        assert_eq!(QPath::Simd { unroll2: true }.label(), "simd_unroll2");
+    }
+
+    #[test]
+    fn quick_autotune_runs_and_installs_a_tuning() {
+        let _g = KNOB_GATE.lock().unwrap_or_else(|p| p.into_inner());
+        let (t, timings) = autotune(true);
+        assert_eq!(current(), t);
+        assert!(t.f32_rows_per_tile >= 1);
+        // The f32 knob always times its candidates; q knobs only when a
+        // SIMD level is live.
+        assert!(timings.iter().any(|c| c.knob == "f32_rows_per_tile"));
+        if simd::selected_level() != SimdLevel::Scalar {
+            assert!(timings.iter().any(|c| c.knob == "q7_path"));
+            assert!(timings.iter().any(|c| c.knob == "q15_path"));
+        }
+        for knob in ["f32_rows_per_tile", "q7_path", "q15_path"] {
+            let of_knob: Vec<_> = timings.iter().filter(|c| c.knob == knob).collect();
+            if !of_knob.is_empty() {
+                assert_eq!(of_knob.iter().filter(|c| c.chosen).count(), 1, "{knob}");
+            }
+        }
+    }
+}

@@ -162,6 +162,10 @@ pub struct ExecPlan {
     repr: Repr,
     layers: Vec<PlanLayer>,
     sizes: Vec<usize>,
+    /// SIMD level detected when the plan was compiled. Metadata for
+    /// reports: dispatch itself stays live per call (see
+    /// [`super::simd`]), so a forced level during execution wins.
+    simd: super::simd::SimdLevel,
 }
 
 /// The single flat scratch of a plan execution: one buffer per element
@@ -241,6 +245,12 @@ impl ExecPlan {
     /// `true` for plans compiled from a float network.
     pub fn is_float(&self) -> bool {
         matches!(self.repr, Repr::F32 { .. })
+    }
+
+    /// The SIMD level that was selected when this plan was compiled
+    /// (report metadata; per-call dispatch remains live).
+    pub fn simd_level(&self) -> super::simd::SimdLevel {
+        self.simd
     }
 
     /// The Q(dec) decimal point of fixed-point plans (`None` for f32).
@@ -594,6 +604,7 @@ impl PlanSource for Network {
             repr: Repr::F32 { arena },
             layers,
             sizes: self.layer_sizes(),
+            simd: super::simd::selected_level(),
         }
     }
 }
@@ -636,6 +647,7 @@ impl PlanSource for FixedNetwork {
             },
             layers,
             sizes: self.layer_sizes(),
+            simd: super::simd::selected_level(),
         }
     }
 }
@@ -675,6 +687,7 @@ impl PlanSource for PackedNetwork {
             },
             layers,
             sizes: self.layer_sizes(),
+            simd: super::simd::selected_level(),
         }
     }
 }

@@ -16,6 +16,12 @@
 //!   MAC loop), extended to 4×4 sample×neuron register tiles for the
 //!   batched entry point. Per-sample results are **bit-identical** to
 //!   its own `matvec`, so batching never changes numerics.
+//! * [`SimdF32`] — explicit `std::arch` FMA tiles (AVX2 on x86_64,
+//!   NEON on aarch64) over a fixed 16-lane structure with a
+//!   bit-identical portable mirror; selected at runtime by
+//!   [`simd::detected_level`]. Additive: [`BlockedF32`] stays the
+//!   crate default. The packed q7/q15 kernels gain their SIMD panel
+//!   loops internally via the same dispatcher (see [`simd`]).
 //! * [`FixedQ`] — i32/i64 Q-format with FANN `fann_mult` semantics,
 //!   bit-exact with [`crate::quantize`] (and therefore with the Pallas
 //!   fixed-point kernel pinned by the parity tests).
@@ -63,12 +69,14 @@
 //! sweep of the output per layer. Fused and unfused are numerically
 //! identical by construction (same value, same function, applied once).
 
+pub mod autotune;
 pub mod blocked;
 pub mod exec_plan;
 pub mod fixedq;
 pub mod layout;
 pub mod packed;
 pub mod scalar;
+pub mod simd;
 
 use std::cell::RefCell;
 
@@ -81,6 +89,10 @@ pub use fixedq::FixedQ;
 pub use layout::{PackedPanels, PackedWidth};
 pub use packed::{PackedLayerRef, PackedQ15, PackedQ7};
 pub use scalar::ScalarF32;
+pub use simd::{
+    cpu_features, detected_level, dot_simd, selected_level, with_forced_level, CpuFeatures,
+    SimdF32, SimdLevel,
+};
 
 use crate::fann::activation::Activation;
 use crate::quantize;
@@ -301,9 +313,11 @@ pub fn default_f32() -> &'static dyn DenseKernel<f32> {
     &BlockedF32
 }
 
-/// All float kernels, for parity tests and bench sweeps.
-pub fn f32_kernels() -> [&'static dyn DenseKernel<f32>; 2] {
-    [&ScalarF32, &BlockedF32]
+/// All float kernels, for parity tests and bench sweeps. [`SimdF32`]
+/// is always present: on hosts without a SIMD level it runs its
+/// bit-identical portable mirror.
+pub fn f32_kernels() -> [&'static dyn DenseKernel<f32>; 3] {
+    [&ScalarF32, &BlockedF32, &SimdF32]
 }
 
 #[cfg(test)]

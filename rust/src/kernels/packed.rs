@@ -31,6 +31,12 @@
 //! value bit for bit: a product that fits i32 shifts identically at
 //! either width.
 //!
+//! On top of the fast path, the host SIMD dispatcher ([`super::simd`])
+//! may execute the whole-word chunk loops with explicit `std::arch`
+//! panel kernels (AVX2/SSE2 on x86_64, NEON on aarch64) carrying
+//! identical per-product arithmetic — still bit-exact, still sharing
+//! the scalar ragged-tail and saturate/bias/epilogue write-back.
+//!
 //! # Unrolled word stream and panel ranges
 //!
 //! The single-sample core consumes **four panel words per iteration**
@@ -44,6 +50,7 @@
 use std::ops::Range;
 
 use super::layout::{PackedPanels, PackedWidth, ROWS_PER_PANEL};
+use super::simd::{self, QDispatch, SimdQ};
 use crate::fann::activation::Activation;
 use crate::quantize::{qmul, sat_i32};
 
@@ -125,6 +132,11 @@ trait Width: 'static {
     /// Sign-extended lanes of one word; only the first `ELEMS` entries
     /// are meaningful.
     fn lanes(word: u32) -> [i32; 4];
+    /// Run one panel's whole-word product loop (`chunks` words per row)
+    /// through the SIMD dispatch, adding into `sums[r]`. Must be
+    /// bit-exact vs the scalar fast-path chunk loops (see
+    /// [`super::simd`]); only called when `sq.disp` is a SIMD arm.
+    fn simd_panel(sq: SimdQ, words: &[u32], x: &[i32], chunks: usize, sums: &mut [i64; 4]);
 }
 
 struct W7;
@@ -142,6 +154,10 @@ impl Width for W7 {
             (word >> 24) as u8 as i8 as i32,
         ]
     }
+    #[inline(always)]
+    fn simd_panel(sq: SimdQ, words: &[u32], x: &[i32], chunks: usize, sums: &mut [i64; 4]) {
+        simd::panel_q7(sq, words, x, chunks, sums);
+    }
 }
 
 struct W15;
@@ -153,6 +169,10 @@ impl Width for W15 {
     #[inline(always)]
     fn lanes(word: u32) -> [i32; 4] {
         [word as u16 as i16 as i32, (word >> 16) as u16 as i16 as i32, 0, 0]
+    }
+    #[inline(always)]
+    fn simd_panel(sq: SimdQ, words: &[u32], x: &[i32], chunks: usize, sums: &mut [i64; 4]) {
+        simd::panel_q15(sq, words, x, chunks, sums);
     }
 }
 
@@ -172,12 +192,20 @@ fn all_fast<W: Width>(xs: &[i32]) -> bool {
 /// unrolled-MAC loop structure of PULP-NN / Table I, exposing ILP/SIMD
 /// to the compiler. Integer adds commute, so lane splitting and the
 /// end-of-panel reduction are bit-exact vs the one-accumulator loop.
+///
+/// When `sq` carries a SIMD dispatch arm (resolved by the caller via
+/// [`simd::q_dispatch`], only ever on the narrow fast path), the
+/// whole-word chunk loops are replaced by an explicit `std::arch` panel
+/// kernel with identical per-product arithmetic; the ragged tail and
+/// the saturate/bias/epilogue write-back below are shared by both
+/// routes, so the SIMD path is bit-exact by construction.
 #[inline(always)]
 fn matvec_core<W, P, F>(
     layer: &PackedLayerRef,
     x: &[i32],
     panels: Range<usize>,
     out: &mut [i32],
+    sq: SimdQ,
     prod: P,
     epi: F,
 ) where
@@ -196,31 +224,46 @@ fn matvec_core<W, P, F>(
     let wpr = layer.words_per_row;
     let full = layer.n_in / W::ELEMS;
     let full4 = full & !3;
+    let simd_on = sq.disp != QDispatch::Scalar && full > 0;
     for panel in panels {
         let o0 = panel * ROWS_PER_PANEL;
         let base = panel * wpr * ROWS_PER_PANEL;
         // acc[row][lane]: four independent unroll lanes per output row.
         let mut acc = [[0i64; 4]; ROWS_PER_PANEL];
-        let mut c = 0;
-        while c < full4 {
-            for (r, a) in acc.iter_mut().enumerate() {
-                for (u, au) in a.iter_mut().enumerate() {
-                    let lanes = W::lanes(layer.words[base + (c + u) * ROWS_PER_PANEL + r]);
-                    let i0 = (c + u) * W::ELEMS;
-                    for e in 0..W::ELEMS {
-                        *au += prod(lanes[e], x[i0 + e]);
+        if simd_on {
+            let mut sums = [0i64; ROWS_PER_PANEL];
+            W::simd_panel(
+                sq,
+                &layer.words[base..base + wpr * ROWS_PER_PANEL],
+                x,
+                full,
+                &mut sums,
+            );
+            for (a, s) in acc.iter_mut().zip(sums) {
+                a[0] = s;
+            }
+        } else {
+            let mut c = 0;
+            while c < full4 {
+                for (r, a) in acc.iter_mut().enumerate() {
+                    for (u, au) in a.iter_mut().enumerate() {
+                        let lanes = W::lanes(layer.words[base + (c + u) * ROWS_PER_PANEL + r]);
+                        let i0 = (c + u) * W::ELEMS;
+                        for e in 0..W::ELEMS {
+                            *au += prod(lanes[e], x[i0 + e]);
+                        }
                     }
                 }
+                c += 4;
             }
-            c += 4;
-        }
-        for c in full4..full {
-            let i0 = c * W::ELEMS;
-            let wbase = base + c * ROWS_PER_PANEL;
-            for (r, a) in acc.iter_mut().enumerate() {
-                let lanes = W::lanes(layer.words[wbase + r]);
-                for e in 0..W::ELEMS {
-                    a[0] += prod(lanes[e], x[i0 + e]);
+            for c in full4..full {
+                let i0 = c * W::ELEMS;
+                let wbase = base + c * ROWS_PER_PANEL;
+                for (r, a) in acc.iter_mut().enumerate() {
+                    let lanes = W::lanes(layer.words[wbase + r]);
+                    for e in 0..W::ELEMS {
+                        a[0] += prod(lanes[e], x[i0 + e]);
+                    }
                 }
             }
         }
@@ -250,13 +293,19 @@ fn matvec_core<W, P, F>(
 /// banks on). `out` is the range's rows only, sample-major with row
 /// stride equal to the range's row count — the full-range call is
 /// therefore exactly the historical whole-layer layout.
+///
+/// `sq` as in [`matvec_core`]: a SIMD dispatch arm replaces the
+/// whole-word chunk loop per (panel, sample) with the bit-exact
+/// `std::arch` panel kernel; tail and write-back are shared.
 #[inline(always)]
+#[allow(clippy::too_many_arguments)]
 fn matmul_core<W, P, F>(
     layer: &PackedLayerRef,
     xs: &[i32],
     n_samples: usize,
     panels: Range<usize>,
     out: &mut [i32],
+    sq: SimdQ,
     prod: P,
     epi: F,
 ) where
@@ -274,6 +323,7 @@ fn matmul_core<W, P, F>(
     debug_assert_eq!(out.len(), range_rows * n_samples);
     let wpr = layer.words_per_row;
     let full = n_in / W::ELEMS;
+    let simd_on = sq.disp != QDispatch::Scalar && full > 0;
     let mut s0 = 0;
     while s0 < n_samples {
         let sb = (n_samples - s0).min(4);
@@ -281,15 +331,23 @@ fn matmul_core<W, P, F>(
             let o0 = panel * ROWS_PER_PANEL;
             let base = panel * wpr * ROWS_PER_PANEL;
             let mut acc = [[0i64; ROWS_PER_PANEL]; 4];
-            for c in 0..full {
-                let i0 = c * W::ELEMS;
-                let wbase = base + c * ROWS_PER_PANEL;
-                for r in 0..ROWS_PER_PANEL {
-                    let lanes = W::lanes(layer.words[wbase + r]);
-                    for (si, a) in acc.iter_mut().enumerate().take(sb) {
-                        let xb = (s0 + si) * n_in + i0;
-                        for e in 0..W::ELEMS {
-                            a[r] += prod(lanes[e], xs[xb + e]);
+            if simd_on {
+                let pw = &layer.words[base..base + wpr * ROWS_PER_PANEL];
+                for (si, a) in acc.iter_mut().enumerate().take(sb) {
+                    let xb = (s0 + si) * n_in;
+                    W::simd_panel(sq, pw, &xs[xb..xb + n_in], full, a);
+                }
+            } else {
+                for c in 0..full {
+                    let i0 = c * W::ELEMS;
+                    let wbase = base + c * ROWS_PER_PANEL;
+                    for r in 0..ROWS_PER_PANEL {
+                        let lanes = W::lanes(layer.words[wbase + r]);
+                        for (si, a) in acc.iter_mut().enumerate().take(sb) {
+                            let xb = (s0 + si) * n_in + i0;
+                            for e in 0..W::ELEMS {
+                                a[r] += prod(lanes[e], xs[xb + e]);
+                            }
                         }
                     }
                 }
@@ -437,12 +495,16 @@ macro_rules! packed_kernel {
                 let (panels, fast) = job;
                 let dec = self.dec;
                 if fast {
+                    // The hint's narrow verdict cannot carry the SSE2
+                    // extra-narrow bound, so only the Wide SIMD tiers
+                    // apply here (no input re-scan).
                     matmul_core::<$w, _, _>(
                         layer,
                         xs,
                         n_samples,
                         panels,
                         out,
+                        simd::q_dispatch_hinted(<$w as Width>::WIDTH, dec),
                         |w, xv| ((w * xv) >> dec) as i64,
                         |v| super::epilogue_q(act, dec, v),
                     );
@@ -453,6 +515,7 @@ macro_rules! packed_kernel {
                         n_samples,
                         panels,
                         out,
+                        SimdQ::scalar(dec),
                         |w, xv| qmul(w, xv, dec),
                         |v| super::epilogue_q(act, dec, v),
                     );
@@ -470,9 +533,10 @@ macro_rules! packed_kernel {
             ) {
                 let dec = self.dec;
                 if all_fast::<$w>(x) {
-                    matvec_core::<$w, _, _>(layer, x, panels, out, |w, xv| ((w * xv) >> dec) as i64, epi);
+                    let sq = simd::q_dispatch(<$w as Width>::WIDTH, x, dec);
+                    matvec_core::<$w, _, _>(layer, x, panels, out, sq, |w, xv| ((w * xv) >> dec) as i64, epi);
                 } else {
-                    matvec_core::<$w, _, _>(layer, x, panels, out, |w, xv| qmul(w, xv, dec), epi);
+                    matvec_core::<$w, _, _>(layer, x, panels, out, SimdQ::scalar(dec), |w, xv| qmul(w, xv, dec), epi);
                 }
             }
 
@@ -488,17 +552,28 @@ macro_rules! packed_kernel {
             ) {
                 let dec = self.dec;
                 if all_fast::<$w>(xs) {
+                    let sq = simd::q_dispatch(<$w as Width>::WIDTH, xs, dec);
                     matmul_core::<$w, _, _>(
                         layer,
                         xs,
                         n_samples,
                         panels,
                         out,
+                        sq,
                         |w, xv| ((w * xv) >> dec) as i64,
                         epi,
                     );
                 } else {
-                    matmul_core::<$w, _, _>(layer, xs, n_samples, panels, out, |w, xv| qmul(w, xv, dec), epi);
+                    matmul_core::<$w, _, _>(
+                        layer,
+                        xs,
+                        n_samples,
+                        panels,
+                        out,
+                        SimdQ::scalar(dec),
+                        |w, xv| qmul(w, xv, dec),
+                        epi,
+                    );
                 }
             }
         }

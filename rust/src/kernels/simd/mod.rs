@@ -1,0 +1,700 @@
+//! Host SIMD microkernels behind runtime dispatch — the `std::arch`
+//! mirror of the dot-product lanes the codegen emits in C.
+//!
+//! The paper's speedups come from packed dot-product instructions:
+//! CMSIS-NN's `SXTB16` + `SMLAD` on Cortex-M and PULP-NN's `pv.sdotsp`
+//! on Mr. Wolf. Our codegen emits those lanes (see
+//! `rust/src/codegen/README.md`), but the host kernels serving bench
+//! drivers, [`super::ExecPlan`] execution and the `service/` layer ran
+//! scalar Rust. This module closes that gap:
+//!
+//! | emitted C lane                  | host mirror                         |
+//! |---------------------------------|-------------------------------------|
+//! | `SXTB16` + `SMLAD` (CMSIS-NN)   | SSE2 `_mm_madd_epi16`, zero-interleaved (`x86::sse2_panel_*`) |
+//! | `pv.sdotsp.b` / `.h` (PULP-NN)  | AVX2 widen+`mullo`+shift (`x86::avx2_panel_*`), NEON `vmulq_s32` (`neon::neon_panel_*`) |
+//! | CMSIS f32 inner loop            | AVX2/NEON 16-lane FMA tile ([`SimdF32`]) |
+//!
+//! # Bit-exactness contract
+//!
+//! The integer panels accumulate the *same* per-product value as the
+//! scalar fast path — `((w * x) >> dec) as i64` — into i64 sums, one per
+//! output row. Integer addition commutes, so any SIMD traversal order is
+//! bit-exact vs the scalar cores; saturation and bias stay in
+//! `packed.rs`, applied once per output. The SSE2 `madd` tier only
+//! engages under an extra-narrow input bound (`|x| <= i16::MAX`,
+//! [`madd_narrow`]'s scan) because its products are computed in the
+//! 16×16→32 domain.
+//!
+//! The f32 kernel keeps a *fixed 16-lane structure* shared bit-for-bit
+//! by the AVX2, NEON and portable paths (all are per-lane fused
+//! multiply-add chains with a shared reduction), so forced-scalar runs
+//! are bit-identical to hardware runs and `matvec == matmul` holds
+//! bitwise within [`SimdF32`] for every tile setting.
+//!
+//! # Runtime selection
+//!
+//! [`detected_level`] probes the CPU once (cached): x86_64 picks
+//! [`SimdLevel::Avx2`] when AVX2+FMA are present, else the baseline
+//! [`SimdLevel::Sse2`]; aarch64 always has NEON; other arches fall back
+//! to [`SimdLevel::Scalar`]. Tests and the bench `speedup_simd_*` rows
+//! pin a level with [`with_forced_level`] (serialized, panic-safe,
+//! clamped to available levels). The packed kernels resolve dispatch
+//! per *call* via [`q_dispatch`], so forcing is live everywhere without
+//! call-site changes; [`super::ExecPlan`] additionally snapshots the
+//! level at compile time as metadata.
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+use super::autotune;
+use super::layout::{PackedWidth, ROWS_PER_PANEL};
+use super::{DenseKernel, DenseLayerRef};
+use crate::fann::activation::Activation;
+
+/// The SIMD capability tiers the dispatcher can select, ordered by
+/// capability. `Scalar` is always available; the others are
+/// arch-specific.
+#[repr(u8)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// No SIMD: the portable scalar paths (always available).
+    Scalar = 0,
+    /// x86_64 baseline: `_mm_madd_epi16` integer panels (extra-narrow
+    /// inputs only), portable f32.
+    Sse2 = 1,
+    /// x86_64 with AVX2 + FMA: 8-wide integer panels and FMA f32 tiles.
+    Avx2 = 2,
+    /// aarch64 NEON (mandatory on aarch64): 4-wide integer panels and
+    /// FMA f32 tiles.
+    Neon = 3,
+}
+
+impl SimdLevel {
+    /// Stable lower-case label used in `BENCH_kernels.json` metadata.
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    fn from_u8(v: u8) -> SimdLevel {
+        match v {
+            1 => SimdLevel::Sse2,
+            2 => SimdLevel::Avx2,
+            3 => SimdLevel::Neon,
+            _ => SimdLevel::Scalar,
+        }
+    }
+}
+
+/// Sentinel for "not yet detected / not forced".
+const LEVEL_UNSET: u8 = 0xFF;
+
+static DETECTED: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+static FORCED: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+
+/// Serializes [`with_forced_level`] callers so concurrent tests cannot
+/// observe each other's forced level.
+static FORCE_GATE: Mutex<()> = Mutex::new(());
+
+fn detect() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return SimdLevel::Avx2;
+        }
+        // SSE2 is part of the x86_64 baseline.
+        SimdLevel::Sse2
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        SimdLevel::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        SimdLevel::Scalar
+    }
+}
+
+/// The host's detected SIMD level (probed once, then cached).
+pub fn detected_level() -> SimdLevel {
+    let v = DETECTED.load(Ordering::Relaxed);
+    if v != LEVEL_UNSET {
+        return SimdLevel::from_u8(v);
+    }
+    let l = detect();
+    DETECTED.store(l as u8, Ordering::Relaxed);
+    l
+}
+
+/// The level dispatch actually uses right now: the forced override if
+/// one is active (see [`with_forced_level`]), else [`detected_level`].
+pub fn selected_level() -> SimdLevel {
+    let f = FORCED.load(Ordering::Relaxed);
+    if f != LEVEL_UNSET {
+        SimdLevel::from_u8(f)
+    } else {
+        detected_level()
+    }
+}
+
+/// Whether `level` can actually execute on this host (a level is
+/// available when the detected tier implies it).
+pub fn available(level: SimdLevel) -> bool {
+    match level {
+        SimdLevel::Scalar => true,
+        SimdLevel::Sse2 => matches!(detected_level(), SimdLevel::Sse2 | SimdLevel::Avx2),
+        SimdLevel::Avx2 => detected_level() == SimdLevel::Avx2,
+        SimdLevel::Neon => detected_level() == SimdLevel::Neon,
+    }
+}
+
+/// Run `f` with the dispatcher pinned to `level` (clamped to
+/// [`SimdLevel::Scalar`] if the host cannot execute `level`, so forcing
+/// an unavailable ISA can never fault). Callers are serialized by a
+/// global gate and the override is reset even if `f` panics. Not
+/// reentrant: `f` must not itself call [`with_forced_level`].
+pub fn with_forced_level<R>(level: SimdLevel, f: impl FnOnce() -> R) -> R {
+    let _gate = FORCE_GATE.lock().unwrap_or_else(|p| p.into_inner());
+    struct Reset;
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            FORCED.store(LEVEL_UNSET, Ordering::Relaxed);
+        }
+    }
+    let _reset = Reset;
+    let eff = if available(level) {
+        level
+    } else {
+        SimdLevel::Scalar
+    };
+    FORCED.store(eff as u8, Ordering::Relaxed);
+    f()
+}
+
+/// Snapshot of the host's SIMD-relevant CPU features, for
+/// `BENCH_kernels.json` metadata (baseline comparability across
+/// runners) and selection tests.
+#[derive(Debug, Clone)]
+pub struct CpuFeatures {
+    /// Compile-time target architecture (`x86_64`, `aarch64`, ...).
+    pub arch: &'static str,
+    /// The cached detection result.
+    pub detected: SimdLevel,
+    /// The level dispatch uses right now (differs from `detected` only
+    /// inside [`with_forced_level`]).
+    pub selected: SimdLevel,
+    /// SSE2 present (always true on x86_64).
+    pub sse2: bool,
+    /// AVX2 present.
+    pub avx2: bool,
+    /// FMA present.
+    pub fma: bool,
+    /// NEON present (always true on aarch64).
+    pub neon: bool,
+}
+
+/// Probe the host's CPU features (see [`CpuFeatures`]).
+pub fn cpu_features() -> CpuFeatures {
+    #[cfg(target_arch = "x86_64")]
+    let (sse2, avx2, fma, neon) = (
+        true,
+        is_x86_feature_detected!("avx2"),
+        is_x86_feature_detected!("fma"),
+        false,
+    );
+    #[cfg(target_arch = "aarch64")]
+    let (sse2, avx2, fma, neon) = (false, false, false, true);
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let (sse2, avx2, fma, neon) = (false, false, false, false);
+    CpuFeatures {
+        arch: std::env::consts::ARCH,
+        detected: detected_level(),
+        selected: selected_level(),
+        sse2,
+        avx2,
+        fma,
+        neon,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Integer (packed q7/q15) panel dispatch
+// ---------------------------------------------------------------------------
+
+/// How one packed matvec/matmul call executes its panel product loops.
+/// Resolved once per kernel call by [`q_dispatch`], then threaded
+/// through `matvec_core`/`matmul_core` in `packed.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum QDispatch {
+    /// Portable scalar chunk loops (also the slow `qmul` path).
+    Scalar,
+    /// Widen-to-i32 multiply lanes: AVX2 on x86_64, NEON on aarch64.
+    /// Valid under the ordinary narrow fast bound.
+    Wide {
+        /// Process two chunks per iteration with a second accumulator
+        /// set (autotuned; exact — integer adds commute).
+        unroll2: bool,
+    },
+    /// SSE2 `_mm_madd_epi16` with zero-interleaved operands — requires
+    /// the extra-narrow bound `|x| <= i16::MAX` ([`madd_narrow`]).
+    Madd {
+        /// Two-chunk unroll (see [`QDispatch::Wide`]).
+        unroll2: bool,
+    },
+}
+
+/// Per-call SIMD decision for a packed kernel: the dispatch arm plus
+/// the layer's decimal point (the per-product shift count).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SimdQ {
+    pub(crate) disp: QDispatch,
+    pub(crate) dec: u32,
+}
+
+impl SimdQ {
+    /// Scalar dispatch (used by the exact `qmul` slow path, which the
+    /// SIMD panels never implement).
+    pub(crate) fn scalar(dec: u32) -> Self {
+        Self {
+            disp: QDispatch::Scalar,
+            dec,
+        }
+    }
+}
+
+/// True when every input satisfies the SSE2 `madd` bound
+/// `|x| <= i16::MAX` (products then fit the 16×16→32 madd domain).
+pub(crate) fn madd_narrow(xs: &[i32]) -> bool {
+    xs.iter().all(|v| v.unsigned_abs() <= i16::MAX as u32)
+}
+
+/// Resolve the SIMD dispatch for one packed call whose inputs `xs`
+/// already passed the narrow fast-path bound. `width` selects the
+/// autotuned path knob (q7 vs q15).
+pub(crate) fn q_dispatch(width: PackedWidth, xs: &[i32], dec: u32) -> SimdQ {
+    let unroll2 = match autotune::q_path(width) {
+        autotune::QPath::Scalar => return SimdQ::scalar(dec),
+        autotune::QPath::Simd { unroll2 } => unroll2,
+    };
+    let disp = match selected_level() {
+        SimdLevel::Avx2 | SimdLevel::Neon => QDispatch::Wide { unroll2 },
+        SimdLevel::Sse2 => {
+            if madd_narrow(xs) {
+                QDispatch::Madd { unroll2 }
+            } else {
+                QDispatch::Scalar
+            }
+        }
+        SimdLevel::Scalar => QDispatch::Scalar,
+    };
+    SimdQ { disp, dec }
+}
+
+/// Dispatch for the hinted (row-split) packed path, where the narrow
+/// verdict arrives as a precomputed bool and the inputs are not
+/// re-scanned: only the `Wide` tiers apply (the SSE2 `madd` tier needs
+/// the extra-narrow scan, which the hint cannot carry).
+pub(crate) fn q_dispatch_hinted(width: PackedWidth, dec: u32) -> SimdQ {
+    let unroll2 = match autotune::q_path(width) {
+        autotune::QPath::Scalar => return SimdQ::scalar(dec),
+        autotune::QPath::Simd { unroll2 } => unroll2,
+    };
+    match selected_level() {
+        SimdLevel::Avx2 | SimdLevel::Neon => SimdQ {
+            disp: QDispatch::Wide { unroll2 },
+            dec,
+        },
+        _ => SimdQ::scalar(dec),
+    }
+}
+
+/// Execute one q7 panel (`chunks` whole words per row) through the
+/// dispatch in `sq`, adding into `sums[r]` with the exact scalar
+/// fast-path semantics.
+pub(crate) fn panel_q7(
+    sq: SimdQ,
+    words: &[u32],
+    x: &[i32],
+    chunks: usize,
+    sums: &mut [i64; ROWS_PER_PANEL],
+) {
+    match sq.disp {
+        QDispatch::Scalar => unreachable!("scalar dispatch never reaches the SIMD panels"),
+        QDispatch::Wide { unroll2 } => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `Wide` is only produced when AVX2(+FMA) was detected.
+            unsafe {
+                x86::avx2_panel_q7(words, x, chunks, sq.dec, unroll2, sums)
+            };
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe {
+                neon::neon_panel_q7(words, x, chunks, sq.dec, unroll2, sums)
+            };
+            #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+            {
+                let _ = (words, x, chunks, unroll2, sums);
+                unreachable!("wide dispatch is never selected on this arch");
+            }
+        }
+        QDispatch::Madd { unroll2 } => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: SSE2 is the x86_64 baseline; the dispatcher's
+            // `madd_narrow` scan established `|x| <= i16::MAX`.
+            unsafe {
+                x86::sse2_panel_q7(words, x, chunks, sq.dec, unroll2, sums)
+            };
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                let _ = (words, x, chunks, unroll2, sums);
+                unreachable!("madd dispatch is never selected on this arch");
+            }
+        }
+    }
+}
+
+/// q15 counterpart of [`panel_q7`].
+pub(crate) fn panel_q15(
+    sq: SimdQ,
+    words: &[u32],
+    x: &[i32],
+    chunks: usize,
+    sums: &mut [i64; ROWS_PER_PANEL],
+) {
+    match sq.disp {
+        QDispatch::Scalar => unreachable!("scalar dispatch never reaches the SIMD panels"),
+        QDispatch::Wide { unroll2 } => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `Wide` is only produced when AVX2(+FMA) was detected.
+            unsafe {
+                x86::avx2_panel_q15(words, x, chunks, sq.dec, unroll2, sums)
+            };
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe {
+                neon::neon_panel_q15(words, x, chunks, sq.dec, unroll2, sums)
+            };
+            #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+            {
+                let _ = (words, x, chunks, unroll2, sums);
+                unreachable!("wide dispatch is never selected on this arch");
+            }
+        }
+        QDispatch::Madd { unroll2 } => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: SSE2 baseline; extra-narrow bound established.
+            unsafe {
+                x86::sse2_panel_q15(words, x, chunks, sq.dec, unroll2, sums)
+            };
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                let _ = (words, x, chunks, unroll2, sums);
+                unreachable!("madd dispatch is never selected on this arch");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 SIMD kernel
+// ---------------------------------------------------------------------------
+
+/// Fixed reduction over the shared 16-lane structure: pairwise within
+/// quads, then across quads. One copy, used by every dot regardless of
+/// which path filled the lanes, so the reduction order can never drift
+/// between hardware and portable runs.
+#[inline]
+fn reduce16(l: &[f32; 16]) -> f32 {
+    let q0 = (l[0] + l[1]) + (l[2] + l[3]);
+    let q1 = (l[4] + l[5]) + (l[6] + l[7]);
+    let q2 = (l[8] + l[9]) + (l[10] + l[11]);
+    let q3 = (l[12] + l[13]) + (l[14] + l[15]);
+    (q0 + q1) + (q2 + q3)
+}
+
+/// Portable mirror of the hardware 16-lane accumulation: the same
+/// per-lane fused multiply-add chains (`mul_add` is a single-rounding
+/// IEEE fma, exactly what `vfmaq_f32`/`_mm256_fmadd_ps` compute), so
+/// results are bit-identical to the hardware paths.
+fn portable_lanes16(w: &[f32], x: &[f32], main: usize, lanes: &mut [f32; 16]) {
+    let mut i = 0usize;
+    while i < main {
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            *lane = w[i + l].mul_add(x[i + l], *lane);
+        }
+        i += 16;
+    }
+}
+
+/// Fill the 16-lane accumulators over `main` elements using the best
+/// available path for the currently selected level.
+fn accumulate_lanes16(w: &[f32], x: &[f32], main: usize, lanes: &mut [f32; 16]) {
+    #[cfg(target_arch = "x86_64")]
+    if selected_level() == SimdLevel::Avx2 {
+        // SAFETY: Avx2 level implies AVX2 and FMA were detected.
+        unsafe { x86::avx2_f32_lanes16(w, x, main, lanes) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if selected_level() == SimdLevel::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe { neon::neon_f32_lanes16(w, x, main, lanes) };
+        return;
+    }
+    portable_lanes16(w, x, main, lanes);
+}
+
+/// SIMD dot product over the fixed 16-lane structure plus a scalar fma
+/// tail. Bit-identical across hardware and portable paths, and across
+/// every caller ([`SimdF32`]'s `matvec` and `matmul` both route every
+/// output through this one function).
+pub fn dot_simd(w: &[f32], x: &[f32]) -> f32 {
+    debug_assert_eq!(w.len(), x.len());
+    let n = w.len();
+    let main = n & !15;
+    let mut lanes = [0.0f32; 16];
+    if main > 0 {
+        accumulate_lanes16(w, x, main, &mut lanes);
+    }
+    let mut tail = 0.0f32;
+    for (wv, xv) in w[main..n].iter().zip(&x[main..n]) {
+        tail = wv.mul_add(*xv, tail);
+    }
+    reduce16(&lanes) + tail
+}
+
+/// The host-SIMD float kernel: 16-lane FMA dot products (AVX2+FMA on
+/// x86_64, NEON on aarch64, bit-identical portable mirror elsewhere)
+/// with an autotuned row tile for the batched entry point.
+///
+/// Numerics: `matvec == matmul` bitwise for every tile setting (every
+/// output goes through [`dot_simd`]); within the crate-wide 3e-5
+/// tolerance vs [`super::ScalarF32`] (FMA contraction + lane
+/// reassociation); forced-scalar runs are bit-identical to hardware
+/// runs. [`super::BlockedF32`] remains the crate default — this kernel
+/// is additive and selected explicitly (bench sweeps, parity suites,
+/// callers that opt in).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimdF32;
+
+impl SimdF32 {
+    #[inline]
+    fn row_tile() -> usize {
+        autotune::f32_rows_per_tile().max(1)
+    }
+}
+
+impl DenseKernel<f32> for SimdF32 {
+    fn name(&self) -> &'static str {
+        "simd_f32"
+    }
+
+    fn apply_epilogue(&self, act: Activation, steepness: f32, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = super::epilogue_f32(act, steepness, *v);
+        }
+    }
+
+    fn matvec(&self, layer: &DenseLayerRef<f32>, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), layer.n_in);
+        debug_assert_eq!(out.len(), layer.n_out);
+        for o in 0..layer.n_out {
+            let row = &layer.weights[o * layer.n_in..(o + 1) * layer.n_in];
+            out[o] = dot_simd(row, x) + layer.biases[o];
+        }
+    }
+
+    fn matmul(&self, layer: &DenseLayerRef<f32>, xs: &[f32], n_samples: usize, out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), layer.n_in * n_samples);
+        debug_assert_eq!(out.len(), layer.n_out * n_samples);
+        let tile = Self::row_tile();
+        // Row-tile outer, samples inner: the tile's weight rows stay hot
+        // across the whole batch. Per-(row, sample) arithmetic is exactly
+        // `matvec`'s, so batching never changes numerics.
+        let mut r0 = 0usize;
+        while r0 < layer.n_out {
+            let r1 = (r0 + tile).min(layer.n_out);
+            for s in 0..n_samples {
+                let x = &xs[s * layer.n_in..(s + 1) * layer.n_in];
+                for r in r0..r1 {
+                    let row = &layer.weights[r * layer.n_in..(r + 1) * layer.n_in];
+                    out[s * layer.n_out + r] = dot_simd(row, x) + layer.biases[r];
+                }
+            }
+            r0 = r1;
+        }
+    }
+
+    fn matvec_act(
+        &self,
+        layer: &DenseLayerRef<f32>,
+        x: &[f32],
+        out: &mut [f32],
+        act: Activation,
+        steepness: f32,
+    ) {
+        debug_assert_eq!(x.len(), layer.n_in);
+        debug_assert_eq!(out.len(), layer.n_out);
+        for o in 0..layer.n_out {
+            let row = &layer.weights[o * layer.n_in..(o + 1) * layer.n_in];
+            let v = dot_simd(row, x) + layer.biases[o];
+            out[o] = super::epilogue_f32(act, steepness, v);
+        }
+    }
+
+    fn matmul_act(
+        &self,
+        layer: &DenseLayerRef<f32>,
+        xs: &[f32],
+        n_samples: usize,
+        out: &mut [f32],
+        act: Activation,
+        steepness: f32,
+    ) {
+        debug_assert_eq!(xs.len(), layer.n_in * n_samples);
+        debug_assert_eq!(out.len(), layer.n_out * n_samples);
+        let tile = Self::row_tile();
+        let mut r0 = 0usize;
+        while r0 < layer.n_out {
+            let r1 = (r0 + tile).min(layer.n_out);
+            for s in 0..n_samples {
+                let x = &xs[s * layer.n_in..(s + 1) * layer.n_in];
+                for r in r0..r1 {
+                    let row = &layer.weights[r * layer.n_in..(r + 1) * layer.n_in];
+                    let v = dot_simd(row, x) + layer.biases[r];
+                    out[s * layer.n_out + r] = super::epilogue_f32(act, steepness, v);
+                }
+            }
+            r0 = r1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.731).sin() * scale).collect()
+    }
+
+    /// Assert no forced level is active. Holding the gate is what makes
+    /// this sound under parallel tests: while the gate is held no
+    /// [`with_forced_level`] body can be running, and every completed
+    /// one reset `FORCED` before releasing the gate.
+    fn assert_unforced() {
+        let _g = FORCE_GATE.lock().unwrap_or_else(|p| p.into_inner());
+        assert_eq!(FORCED.load(Ordering::Relaxed), LEVEL_UNSET);
+    }
+
+    #[test]
+    fn detection_is_cached_and_consistent() {
+        let a = detected_level();
+        let b = detected_level();
+        assert_eq!(a, b);
+        #[cfg(target_arch = "x86_64")]
+        assert!(matches!(a, SimdLevel::Sse2 | SimdLevel::Avx2));
+        #[cfg(target_arch = "aarch64")]
+        assert_eq!(a, SimdLevel::Neon);
+    }
+
+    #[test]
+    fn forced_level_applies_and_resets() {
+        with_forced_level(SimdLevel::Scalar, || {
+            assert_eq!(selected_level(), SimdLevel::Scalar);
+        });
+        assert_unforced();
+    }
+
+    #[test]
+    fn forcing_unavailable_level_clamps_to_scalar() {
+        // Neon can never be available on x86_64 and vice versa; pick a
+        // level that cannot match the current arch.
+        let foreign = if cfg!(target_arch = "aarch64") {
+            SimdLevel::Avx2
+        } else {
+            SimdLevel::Neon
+        };
+        with_forced_level(foreign, || {
+            assert_eq!(selected_level(), SimdLevel::Scalar);
+        });
+    }
+
+    #[test]
+    fn forced_level_resets_after_panic() {
+        let r = std::panic::catch_unwind(|| {
+            with_forced_level(SimdLevel::Scalar, || panic!("boom"));
+        });
+        assert!(r.is_err());
+        assert_unforced();
+    }
+
+    #[test]
+    fn madd_narrow_bound_is_exact() {
+        assert!(madd_narrow(&[0, 1, -1, i16::MAX as i32, -(i16::MAX as i32)]));
+        assert!(!madd_narrow(&[i16::MAX as i32 + 1]));
+        assert!(!madd_narrow(&[-(i16::MAX as i32) - 1]));
+    }
+
+    #[test]
+    fn q_dispatch_scalar_level_is_scalar() {
+        with_forced_level(SimdLevel::Scalar, || {
+            let sq = q_dispatch(PackedWidth::Q7, &[1, 2, 3], 13);
+            assert_eq!(sq.disp, QDispatch::Scalar);
+            let sq = q_dispatch_hinted(PackedWidth::Q15, 6);
+            assert_eq!(sq.disp, QDispatch::Scalar);
+        });
+    }
+
+    #[test]
+    fn dot_simd_matches_naive_within_tolerance() {
+        for n in [0usize, 1, 5, 15, 16, 17, 31, 32, 33, 100, 257] {
+            let w = seq(n, 0.9);
+            let x = seq(n, 1.1);
+            let naive: f64 = w
+                .iter()
+                .zip(&x)
+                .map(|(a, b)| *a as f64 * *b as f64)
+                .sum();
+            let got = dot_simd(&w, &x);
+            assert!(
+                (got as f64 - naive).abs() <= 3e-5 * (1.0 + naive.abs()),
+                "n={n}: got {got}, naive {naive}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_simd_forced_scalar_is_bit_identical() {
+        // The portable 16-lane mirror must reproduce the hardware path
+        // bit-for-bit: same per-lane fma chains, same fixed reduction.
+        for n in [16usize, 33, 64, 127, 256] {
+            let w = seq(n, 1.3);
+            let x = seq(n, 0.7);
+            let hw = dot_simd(&w, &x);
+            let sc = with_forced_level(SimdLevel::Scalar, || dot_simd(&w, &x));
+            assert_eq!(hw.to_bits(), sc.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn cpu_features_are_consistent_with_detection() {
+        let f = cpu_features();
+        assert_eq!(f.detected, detected_level());
+        match f.detected {
+            SimdLevel::Avx2 => assert!(f.avx2 && f.fma && f.sse2),
+            SimdLevel::Sse2 => assert!(f.sse2),
+            SimdLevel::Neon => assert!(f.neon),
+            SimdLevel::Scalar => {}
+        }
+    }
+}

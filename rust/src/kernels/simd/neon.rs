@@ -1,0 +1,188 @@
+//! aarch64 NEON panel kernels — the host mirror of the PULP-NN
+//! `pv.sdotsp.b`/`pv.sdotsp.h` lanes and the CMSIS f32 inner loop.
+//!
+//! NEON is mandatory on aarch64, so no runtime detection is needed; the
+//! dispatcher selects [`super::SimdLevel::Neon`] unconditionally there.
+//!
+//! The arithmetic-shift-right uses `vshlq_s32` with a *negative* count,
+//! which is a truncating arithmetic shift matching Rust's `>>` on i32.
+//! (`vrshlq_s32` rounds toward nearest and must NOT be used here.)
+//!
+//! # Safety
+//!
+//! Functions are `unsafe` for the `#[target_feature]` contract only; NEON
+//! is always present on aarch64. Slice bounds are asserted on entry.
+
+#![cfg(target_arch = "aarch64")]
+
+use core::arch::aarch64::*;
+
+use super::super::layout::ROWS_PER_PANEL;
+
+/// NEON q7 panel: `chunks` packed words per row, four rows per panel.
+/// Layout and accumulation semantics match `x86::avx2_panel_q7`.
+///
+/// # Safety
+/// NEON is baseline on aarch64; safe to call on any aarch64 host.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn neon_panel_q7(
+    words: &[u32],
+    x: &[i32],
+    chunks: usize,
+    dec: u32,
+    unroll2: bool,
+    sums: &mut [i64; ROWS_PER_PANEL],
+) {
+    debug_assert!(words.len() >= chunks * ROWS_PER_PANEL);
+    debug_assert!(x.len() >= chunks * 4);
+    let shift = vdupq_n_s32(-(dec as i32));
+    let mut acc = [vdupq_n_s64(0); ROWS_PER_PANEL];
+    let mut c = 0usize;
+    if unroll2 {
+        let mut acc2 = [vdupq_n_s64(0); ROWS_PER_PANEL];
+        while c + 2 <= chunks {
+            neon_q7_chunk(words, x, c, shift, &mut acc);
+            neon_q7_chunk(words, x, c + 1, shift, &mut acc2);
+            c += 2;
+        }
+        for (a, a2) in acc.iter_mut().zip(acc2.iter()) {
+            *a = vaddq_s64(*a, *a2);
+        }
+    }
+    while c < chunks {
+        neon_q7_chunk(words, x, c, shift, &mut acc);
+        c += 1;
+    }
+    for (r, a) in acc.iter().enumerate() {
+        sums[r] += vgetq_lane_s64::<0>(*a) + vgetq_lane_s64::<1>(*a);
+    }
+}
+
+/// One q7 chunk (4 inputs × 4 rows) of the NEON panel loop.
+///
+/// # Safety
+/// NEON baseline on aarch64.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn neon_q7_chunk(
+    words: &[u32],
+    x: &[i32],
+    c: usize,
+    shift: int32x4_t,
+    acc: &mut [int64x2_t; ROWS_PER_PANEL],
+) {
+    // 16 bytes = the four row-words of chunk c.
+    let w8 = vld1q_s8(words.as_ptr().add(c * ROWS_PER_PANEL) as *const i8);
+    let lo16 = vmovl_s8(vget_low_s8(w8)); // rows 0,1 as 8 × i16
+    let hi16 = vmovl_s8(vget_high_s8(w8)); // rows 2,3
+    let rows = [
+        vmovl_s16(vget_low_s16(lo16)),
+        vmovl_s16(vget_high_s16(lo16)),
+        vmovl_s16(vget_low_s16(hi16)),
+        vmovl_s16(vget_high_s16(hi16)),
+    ];
+    let xx = vld1q_s32(x.as_ptr().add(c * 4));
+    for (r, w) in rows.into_iter().enumerate() {
+        // Per-product (w * x) >> dec; negative vshlq = truncating asr.
+        let s = vshlq_s32(vmulq_s32(w, xx), shift);
+        acc[r] = vaddw_s32(acc[r], vget_low_s32(s));
+        acc[r] = vaddw_s32(acc[r], vget_high_s32(s));
+    }
+}
+
+/// NEON q15 panel: `chunks` packed words per row (2 inputs per word).
+///
+/// # Safety
+/// NEON is baseline on aarch64; safe to call on any aarch64 host.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn neon_panel_q15(
+    words: &[u32],
+    x: &[i32],
+    chunks: usize,
+    dec: u32,
+    unroll2: bool,
+    sums: &mut [i64; ROWS_PER_PANEL],
+) {
+    debug_assert!(words.len() >= chunks * ROWS_PER_PANEL);
+    debug_assert!(x.len() >= chunks * 2);
+    let shift = vdupq_n_s32(-(dec as i32));
+    let mut acc = [vdupq_n_s64(0); ROWS_PER_PANEL];
+    let mut c = 0usize;
+    if unroll2 {
+        let mut acc2 = [vdupq_n_s64(0); ROWS_PER_PANEL];
+        while c + 2 <= chunks {
+            neon_q15_chunk(words, x, c, shift, &mut acc);
+            neon_q15_chunk(words, x, c + 1, shift, &mut acc2);
+            c += 2;
+        }
+        for (a, a2) in acc.iter_mut().zip(acc2.iter()) {
+            *a = vaddq_s64(*a, *a2);
+        }
+    }
+    while c < chunks {
+        neon_q15_chunk(words, x, c, shift, &mut acc);
+        c += 1;
+    }
+    for (r, a) in acc.iter().enumerate() {
+        sums[r] += vgetq_lane_s64::<0>(*a) + vgetq_lane_s64::<1>(*a);
+    }
+}
+
+/// One q15 chunk (2 inputs × 4 rows) of the NEON panel loop.
+///
+/// # Safety
+/// NEON baseline on aarch64.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn neon_q15_chunk(
+    words: &[u32],
+    x: &[i32],
+    c: usize,
+    shift: int32x4_t,
+    acc: &mut [int64x2_t; ROWS_PER_PANEL],
+) {
+    // 8 halfwords: [r0lo, r0hi, r1lo, r1hi, r2lo, r2hi, r3lo, r3hi].
+    let w16 = vld1q_s16(words.as_ptr().add(c * ROWS_PER_PANEL) as *const i16);
+    let lo = vmovl_s16(vget_low_s16(w16)); // [r0lo, r0hi, r1lo, r1hi]
+    let hi = vmovl_s16(vget_high_s16(w16)); // [r2lo, r2hi, r3lo, r3hi]
+    // Inputs [x0, x1] duplicated: [x0, x1, x0, x1].
+    let xp = vld1_s32(x.as_ptr().add(c * 2));
+    let xx = vcombine_s32(xp, xp);
+    let s_lo = vshlq_s32(vmulq_s32(lo, xx), shift);
+    let s_hi = vshlq_s32(vmulq_s32(hi, xx), shift);
+    // s_lo = [p_r0_0, p_r0_1, p_r1_0, p_r1_1]: low pair -> row of half.
+    acc[0] = vaddw_s32(acc[0], vget_low_s32(s_lo));
+    acc[1] = vaddw_s32(acc[1], vget_high_s32(s_lo));
+    acc[2] = vaddw_s32(acc[2], vget_low_s32(s_hi));
+    acc[3] = vaddw_s32(acc[3], vget_high_s32(s_hi));
+}
+
+/// NEON 16-lane f32 accumulation (four 4-wide fused multiply-adds per
+/// 16-element step) into the shared lane structure. Bit-identical to
+/// `simd::portable_lanes16` — same per-lane fma chains.
+///
+/// # Safety
+/// NEON is baseline on aarch64; safe to call on any aarch64 host.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn neon_f32_lanes16(w: &[f32], x: &[f32], main: usize, lanes: &mut [f32; 16]) {
+    debug_assert!(main % 16 == 0);
+    debug_assert!(w.len() >= main && x.len() >= main);
+    let mut a = [
+        vld1q_f32(lanes.as_ptr()),
+        vld1q_f32(lanes.as_ptr().add(4)),
+        vld1q_f32(lanes.as_ptr().add(8)),
+        vld1q_f32(lanes.as_ptr().add(12)),
+    ];
+    let mut i = 0usize;
+    while i < main {
+        for (j, aj) in a.iter_mut().enumerate() {
+            let wv = vld1q_f32(w.as_ptr().add(i + j * 4));
+            let xv = vld1q_f32(x.as_ptr().add(i + j * 4));
+            *aj = vfmaq_f32(*aj, wv, xv);
+        }
+        i += 16;
+    }
+    for (j, aj) in a.into_iter().enumerate() {
+        vst1q_f32(lanes.as_mut_ptr().add(j * 4), aj);
+    }
+}

@@ -1,0 +1,362 @@
+//! x86_64 SIMD panel kernels for the packed q7/q15 cores and the 16-lane
+//! f32 FMA tile.
+//!
+//! Every function here mirrors one of the emitted C dot-product lanes
+//! (see `rust/src/codegen/README.md`):
+//!
+//! * `sse2_panel_q7` / `sse2_panel_q15` — the SXTB16 + SMLAD lane from
+//!   CMSIS-NN, expressed as `_mm_madd_epi16` over *zero-interleaved*
+//!   operands so each i32 madd lane holds exactly one product (pair-summing
+//!   before the per-product `>> dec` would not be bit-exact). Requires the
+//!   extra-narrow input bound `|x| <= i16::MAX`, checked by the dispatcher.
+//! * `avx2_panel_q7` / `avx2_panel_q15` — the `pv.sdotsp.b` / `pv.sdotsp.h`
+//!   lane from PULP-NN, expressed as widen-to-i32 + `_mm256_mullo_epi32`
+//!   + arithmetic shift, valid under the ordinary narrow fast bound.
+//! * `avx2_f32_lanes16` — the 8-wide FMA tile mirroring the emitted CMSIS
+//!   f32 inner loop; accumulates into a fixed 16-lane structure shared
+//!   bit-for-bit with the portable mirror in `simd::portable_lanes16`.
+//!
+//! All panel kernels accumulate per-product i64 sums exactly like the
+//! scalar fast path `((w * x) >> dec) as i64`, so any traversal order is
+//! bit-exact (integer addition commutes). Saturation and bias addition stay
+//! in the caller (`packed.rs`), once per output row.
+//!
+//! # Safety
+//!
+//! Functions are `unsafe` because they require their `#[target_feature]`
+//! ISA level; the dispatcher in `simd/mod.rs` only calls them after runtime
+//! feature detection. Slice bounds are asserted on entry.
+
+#![cfg(target_arch = "x86_64")]
+
+use core::arch::x86_64::*;
+
+use super::super::layout::ROWS_PER_PANEL;
+
+/// AVX2 q7 panel: `chunks` packed words per row, four rows per panel.
+///
+/// `words` holds the panel's word block laid out `words[c * 4 + r]`
+/// (chunk-major, the four row-words of one chunk are consecutive);
+/// `x` holds at least `chunks * 4` inputs. Adds into `sums[r]`.
+///
+/// # Safety
+/// Requires AVX2. Caller must have verified `is_x86_feature_detected!("avx2")`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn avx2_panel_q7(
+    words: &[u32],
+    x: &[i32],
+    chunks: usize,
+    dec: u32,
+    unroll2: bool,
+    sums: &mut [i64; ROWS_PER_PANEL],
+) {
+    debug_assert!(words.len() >= chunks * ROWS_PER_PANEL);
+    debug_assert!(x.len() >= chunks * 4);
+    let cnt = _mm_cvtsi32_si128(dec as i32);
+    let mut acc = [_mm256_setzero_si256(); ROWS_PER_PANEL];
+    let mut c = 0usize;
+    if unroll2 {
+        let mut acc2 = [_mm256_setzero_si256(); ROWS_PER_PANEL];
+        while c + 2 <= chunks {
+            avx2_q7_chunk(words, x, c, cnt, &mut acc);
+            avx2_q7_chunk(words, x, c + 1, cnt, &mut acc2);
+            c += 2;
+        }
+        for (a, a2) in acc.iter_mut().zip(acc2.iter()) {
+            *a = _mm256_add_epi64(*a, *a2);
+        }
+    }
+    while c < chunks {
+        avx2_q7_chunk(words, x, c, cnt, &mut acc);
+        c += 1;
+    }
+    for (r, a) in acc.iter().enumerate() {
+        let mut lanes = [0i64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, *a);
+        sums[r] += (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+    }
+}
+
+/// One q7 chunk (4 inputs × 4 rows) of the AVX2 panel loop.
+///
+/// # Safety
+/// Requires AVX2; `c < chunks` for the bounds asserted by the caller.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn avx2_q7_chunk(
+    words: &[u32],
+    x: &[i32],
+    c: usize,
+    cnt: __m128i,
+    acc: &mut [__m256i; ROWS_PER_PANEL],
+) {
+    // 16 bytes = the four row-words of chunk c: rows 0..3, 4 weights each.
+    let w128 = _mm_loadu_si128(words.as_ptr().add(c * ROWS_PER_PANEL) as *const __m128i);
+    // Sign-extend bytes to i32: lanes 0-3 = row 0, lanes 4-7 = row 1.
+    let rows01 = _mm256_cvtepi8_epi32(w128);
+    let rows23 = _mm256_cvtepi8_epi32(_mm_srli_si128::<8>(w128));
+    // Inputs 4c..4c+3, duplicated across both 128-bit halves.
+    let x128 = _mm_loadu_si128(x.as_ptr().add(c * 4) as *const __m128i);
+    let xx = _mm256_broadcastsi128_si256(x128);
+    // Per-product (w * x) >> dec, exactly the scalar fast path on i32.
+    let s01 = _mm256_sra_epi32(_mm256_mullo_epi32(rows01, xx), cnt);
+    let s23 = _mm256_sra_epi32(_mm256_mullo_epi32(rows23, xx), cnt);
+    // Widen to i64 and accumulate per row.
+    acc[0] = _mm256_add_epi64(acc[0], _mm256_cvtepi32_epi64(_mm256_castsi256_si128(s01)));
+    acc[1] = _mm256_add_epi64(acc[1], _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(s01)));
+    acc[2] = _mm256_add_epi64(acc[2], _mm256_cvtepi32_epi64(_mm256_castsi256_si128(s23)));
+    acc[3] = _mm256_add_epi64(acc[3], _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(s23)));
+}
+
+/// AVX2 q15 panel: `chunks` packed words per row (2 inputs per word).
+///
+/// # Safety
+/// Requires AVX2. Caller must have verified `is_x86_feature_detected!("avx2")`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn avx2_panel_q15(
+    words: &[u32],
+    x: &[i32],
+    chunks: usize,
+    dec: u32,
+    unroll2: bool,
+    sums: &mut [i64; ROWS_PER_PANEL],
+) {
+    debug_assert!(words.len() >= chunks * ROWS_PER_PANEL);
+    debug_assert!(x.len() >= chunks * 2);
+    let cnt = _mm_cvtsi32_si128(dec as i32);
+    // acc01 lanes: 0,1 = row 0; 2,3 = row 1. acc23 the same for rows 2,3.
+    let mut acc = [_mm256_setzero_si256(); 2];
+    let mut c = 0usize;
+    if unroll2 {
+        let mut acc2 = [_mm256_setzero_si256(); 2];
+        while c + 2 <= chunks {
+            avx2_q15_chunk(words, x, c, cnt, &mut acc);
+            avx2_q15_chunk(words, x, c + 1, cnt, &mut acc2);
+            c += 2;
+        }
+        for (a, a2) in acc.iter_mut().zip(acc2.iter()) {
+            *a = _mm256_add_epi64(*a, *a2);
+        }
+    }
+    while c < chunks {
+        avx2_q15_chunk(words, x, c, cnt, &mut acc);
+        c += 1;
+    }
+    for (h, a) in acc.iter().enumerate() {
+        let mut lanes = [0i64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, *a);
+        sums[h * 2] += lanes[0] + lanes[1];
+        sums[h * 2 + 1] += lanes[2] + lanes[3];
+    }
+}
+
+/// One q15 chunk (2 inputs × 4 rows) of the AVX2 panel loop.
+///
+/// # Safety
+/// Requires AVX2; `c < chunks` for the bounds asserted by the caller.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn avx2_q15_chunk(words: &[u32], x: &[i32], c: usize, cnt: __m128i, acc: &mut [__m256i; 2]) {
+    // 8 halfwords: [r0lo, r0hi, r1lo, r1hi, r2lo, r2hi, r3lo, r3hi].
+    let w128 = _mm_loadu_si128(words.as_ptr().add(c * ROWS_PER_PANEL) as *const __m128i);
+    let w32 = _mm256_cvtepi16_epi32(w128);
+    // Inputs [x_{2c}, x_{2c+1}] repeated four times: one pair per row.
+    let xq = _mm_loadl_epi64(x.as_ptr().add(c * 2) as *const __m128i);
+    let xx = _mm256_broadcastq_epi64(xq);
+    let s = _mm256_sra_epi32(_mm256_mullo_epi32(w32, xx), cnt);
+    acc[0] = _mm256_add_epi64(acc[0], _mm256_cvtepi32_epi64(_mm256_castsi256_si128(s)));
+    acc[1] = _mm256_add_epi64(acc[1], _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(s)));
+}
+
+/// SSE2 q7 panel using `_mm_madd_epi16` with zero-interleaved operands —
+/// the direct SMLAD analogue. Each madd lane multiplies one (weight, input)
+/// i16 pair against a zero, so every i32 lane holds exactly one product and
+/// the per-product `>> dec` stays bit-exact.
+///
+/// Only valid when all inputs satisfy `|x| <= i16::MAX` (the dispatcher's
+/// extra-narrow scan guarantees this).
+///
+/// # Safety
+/// Requires SSE2 (x86_64 baseline — always true).
+#[target_feature(enable = "sse2")]
+pub(crate) unsafe fn sse2_panel_q7(
+    words: &[u32],
+    x: &[i32],
+    chunks: usize,
+    dec: u32,
+    unroll2: bool,
+    sums: &mut [i64; ROWS_PER_PANEL],
+) {
+    debug_assert!(words.len() >= chunks * ROWS_PER_PANEL);
+    debug_assert!(x.len() >= chunks * 4);
+    let cnt = _mm_cvtsi32_si128(dec as i32);
+    let mut acc = [_mm_setzero_si128(); ROWS_PER_PANEL];
+    let mut c = 0usize;
+    if unroll2 {
+        let mut acc2 = [_mm_setzero_si128(); ROWS_PER_PANEL];
+        while c + 2 <= chunks {
+            sse2_q7_chunk(words, x, c, cnt, &mut acc);
+            sse2_q7_chunk(words, x, c + 1, cnt, &mut acc2);
+            c += 2;
+        }
+        for (a, a2) in acc.iter_mut().zip(acc2.iter()) {
+            *a = _mm_add_epi64(*a, *a2);
+        }
+    }
+    while c < chunks {
+        sse2_q7_chunk(words, x, c, cnt, &mut acc);
+        c += 1;
+    }
+    for (r, a) in acc.iter().enumerate() {
+        let mut lanes = [0i64; 2];
+        _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, *a);
+        sums[r] += lanes[0] + lanes[1];
+    }
+}
+
+/// One q7 chunk of the SSE2 madd panel loop.
+///
+/// # Safety
+/// Requires SSE2; inputs must satisfy `|x| <= i16::MAX`.
+#[target_feature(enable = "sse2")]
+#[inline]
+unsafe fn sse2_q7_chunk(
+    words: &[u32],
+    x: &[i32],
+    c: usize,
+    cnt: __m128i,
+    acc: &mut [__m128i; ROWS_PER_PANEL],
+) {
+    let zero = _mm_setzero_si128();
+    let w128 = _mm_loadu_si128(words.as_ptr().add(c * ROWS_PER_PANEL) as *const __m128i);
+    // Manual sign extension (SSE2 has no cvtepi8): bytes -> i16.
+    let sign = _mm_cmpgt_epi8(zero, w128);
+    let lo16 = _mm_unpacklo_epi8(w128, sign); // rows 0,1 as 8 × i16
+    let hi16 = _mm_unpackhi_epi8(w128, sign); // rows 2,3 as 8 × i16
+    // Zero-interleave each row's 4 weights: [w0,0,w1,0,w2,0,w3,0].
+    let we = [
+        _mm_unpacklo_epi16(lo16, zero),
+        _mm_unpackhi_epi16(lo16, zero),
+        _mm_unpacklo_epi16(hi16, zero),
+        _mm_unpackhi_epi16(hi16, zero),
+    ];
+    // Inputs as i16 pairs [x0,0,x1,0,x2,0,x3,0]: the low 16 bits of each
+    // i32 lane are the exact i16 value because |x| <= i16::MAX.
+    let xe = _mm_and_si128(
+        _mm_loadu_si128(x.as_ptr().add(c * 4) as *const __m128i),
+        _mm_set1_epi32(0xFFFF),
+    );
+    for (r, w) in we.iter().enumerate() {
+        // madd: (w_k * x_k + 0 * 0) per i32 lane — one exact product each.
+        let s = _mm_sra_epi32(_mm_madd_epi16(*w, xe), cnt);
+        // Widen i32 -> i64 with manual sign extension.
+        let sgn = _mm_srai_epi32::<31>(s);
+        let lo = _mm_unpacklo_epi32(s, sgn);
+        let hi = _mm_unpackhi_epi32(s, sgn);
+        acc[r] = _mm_add_epi64(acc[r], _mm_add_epi64(lo, hi));
+    }
+}
+
+/// SSE2 q15 panel via zero-interleaved `_mm_madd_epi16`; same extra-narrow
+/// input bound as [`sse2_panel_q7`].
+///
+/// # Safety
+/// Requires SSE2 (x86_64 baseline — always true).
+#[target_feature(enable = "sse2")]
+pub(crate) unsafe fn sse2_panel_q15(
+    words: &[u32],
+    x: &[i32],
+    chunks: usize,
+    dec: u32,
+    unroll2: bool,
+    sums: &mut [i64; ROWS_PER_PANEL],
+) {
+    debug_assert!(words.len() >= chunks * ROWS_PER_PANEL);
+    debug_assert!(x.len() >= chunks * 2);
+    let cnt = _mm_cvtsi32_si128(dec as i32);
+    let mut acc = [_mm_setzero_si128(); ROWS_PER_PANEL];
+    let mut c = 0usize;
+    if unroll2 {
+        let mut acc2 = [_mm_setzero_si128(); ROWS_PER_PANEL];
+        while c + 2 <= chunks {
+            sse2_q15_chunk(words, x, c, cnt, &mut acc);
+            sse2_q15_chunk(words, x, c + 1, cnt, &mut acc2);
+            c += 2;
+        }
+        for (a, a2) in acc.iter_mut().zip(acc2.iter()) {
+            *a = _mm_add_epi64(*a, *a2);
+        }
+    }
+    while c < chunks {
+        sse2_q15_chunk(words, x, c, cnt, &mut acc);
+        c += 1;
+    }
+    for (r, a) in acc.iter().enumerate() {
+        let mut lanes = [0i64; 2];
+        _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, *a);
+        sums[r] += lanes[0] + lanes[1];
+    }
+}
+
+/// One q15 chunk of the SSE2 madd panel loop.
+///
+/// # Safety
+/// Requires SSE2; inputs must satisfy `|x| <= i16::MAX`.
+#[target_feature(enable = "sse2")]
+#[inline]
+unsafe fn sse2_q15_chunk(
+    words: &[u32],
+    x: &[i32],
+    c: usize,
+    cnt: __m128i,
+    acc: &mut [__m128i; ROWS_PER_PANEL],
+) {
+    let zero = _mm_setzero_si128();
+    // 8 halfwords: [r0lo, r0hi, r1lo, r1hi, r2lo, r2hi, r3lo, r3hi].
+    let w128 = _mm_loadu_si128(words.as_ptr().add(c * ROWS_PER_PANEL) as *const __m128i);
+    // Zero-interleave: we_lo = [r0lo,0,r0hi,0,r1lo,0,r1hi,0] (rows 0,1).
+    let we_lo = _mm_unpacklo_epi16(w128, zero);
+    let we_hi = _mm_unpackhi_epi16(w128, zero);
+    // xe = [x0,0,x1,0,x0,0,x1,0]: shuffle 0x44 repeats the i32 pair, then
+    // mask each lane to its low 16 bits (exact for |x| <= i16::MAX).
+    let xq = _mm_loadl_epi64(x.as_ptr().add(c * 2) as *const __m128i);
+    let xe = _mm_and_si128(_mm_shuffle_epi32::<0x44>(xq), _mm_set1_epi32(0xFFFF));
+    // madd lanes: [r0lo*x0, r0hi*x1, r1lo*x0, r1hi*x1] (and rows 2,3).
+    let s_lo = _mm_sra_epi32(_mm_madd_epi16(we_lo, xe), cnt);
+    let s_hi = _mm_sra_epi32(_mm_madd_epi16(we_hi, xe), cnt);
+    for (half, s) in [s_lo, s_hi].into_iter().enumerate() {
+        let sgn = _mm_srai_epi32::<31>(s);
+        acc[half * 2] = _mm_add_epi64(acc[half * 2], _mm_unpacklo_epi32(s, sgn));
+        acc[half * 2 + 1] = _mm_add_epi64(acc[half * 2 + 1], _mm_unpackhi_epi32(s, sgn));
+    }
+}
+
+/// AVX2+FMA 16-lane f32 accumulation: processes `main = n & !15` elements
+/// of `w`/`x` into the shared 16-lane structure (two 8-wide FMA registers),
+/// leaving the tail to the caller's scalar loop.
+///
+/// Bit-identical to `simd::portable_lanes16`: both are per-lane fused
+/// multiply-add chains over the same fixed lane assignment.
+///
+/// # Safety
+/// Requires AVX2 and FMA. Caller must have verified both via
+/// `is_x86_feature_detected!`.
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn avx2_f32_lanes16(w: &[f32], x: &[f32], main: usize, lanes: &mut [f32; 16]) {
+    debug_assert!(main % 16 == 0);
+    debug_assert!(w.len() >= main && x.len() >= main);
+    let mut a0 = _mm256_loadu_ps(lanes.as_ptr());
+    let mut a1 = _mm256_loadu_ps(lanes.as_ptr().add(8));
+    let mut i = 0usize;
+    while i < main {
+        let w0 = _mm256_loadu_ps(w.as_ptr().add(i));
+        let x0 = _mm256_loadu_ps(x.as_ptr().add(i));
+        a0 = _mm256_fmadd_ps(w0, x0, a0);
+        let w1 = _mm256_loadu_ps(w.as_ptr().add(i + 8));
+        let x1 = _mm256_loadu_ps(x.as_ptr().add(i + 8));
+        a1 = _mm256_fmadd_ps(w1, x1, a1);
+        i += 16;
+    }
+    _mm256_storeu_ps(lanes.as_mut_ptr(), a0);
+    _mm256_storeu_ps(lanes.as_mut_ptr().add(8), a1);
+}

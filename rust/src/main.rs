@@ -30,6 +30,10 @@
 //!                      row-split path under 1/2/8 workers must
 //!                      checksum-match the serial run for every kernel
 //!                      family.
+//! * `bench autotune` — time the host-SIMD kernel knobs (f32 row tile,
+//!                      q7/q15 panel path — all candidates bit-exact
+//!                      with each other) on this machine and install
+//!                      the winners for the process.
 //! * `paper reproduce` — the paper-results reproduction suite: train the
 //!                      three wearable case studies (EMG / ECG / EEG),
 //!                      emit + emulate each across the modeled targets
@@ -518,17 +522,56 @@ fn cmd_throughput(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `bench <mode>` — the perf-tracking harness. The only mode so far is
-/// `json`: run the kernel × execution-mode throughput sweep
-/// (`bench::batch::kernel_sweep`, bit-parity asserted before timing)
-/// and write it as `BENCH_kernels.json`, giving subsequent PRs a
-/// machine-readable perf baseline.
+/// `bench <mode>` — the perf-tracking harness. `json` runs the kernel ×
+/// execution-mode throughput sweep (`bench::batch::kernel_sweep`,
+/// bit-parity asserted before timing) and writes `BENCH_kernels.json`,
+/// giving subsequent PRs a machine-readable perf baseline; `smoke` is
+/// the row-split correctness gate; `autotune` times the SIMD kernel
+/// knob candidates on this host and prints the winners.
 fn cmd_bench(mode: &str, args: &Args) -> Result<()> {
     match mode {
         "json" => cmd_bench_json(args),
         "smoke" => cmd_bench_smoke(args),
-        other => bail!("unknown bench mode {other:?} (known: json, smoke)"),
+        "autotune" => cmd_bench_autotune(args),
+        other => bail!("unknown bench mode {other:?} (known: json, smoke, autotune)"),
     }
+}
+
+/// `bench autotune` — run the full SIMD autotune grid
+/// (`kernels::autotune`): time every candidate panel-path / f32-tile
+/// knob value on this host (all candidates are bit-exact with each
+/// other; the pass asserts it), install and report the winners.
+fn cmd_bench_autotune(args: &Args) -> Result<()> {
+    use fann_on_mcu::kernels::{autotune, cpu_features};
+
+    args.expect_only(&["quick"])?;
+    let quick = args.get_flag("quick")?;
+    let feats = cpu_features();
+    println!(
+        "bench autotune: arch {}, detected SIMD level {} ({})",
+        feats.arch,
+        feats.detected.label(),
+        if quick { "quick grid" } else { "full grid" },
+    );
+
+    let (tuning, timings) = autotune::autotune(quick);
+    let mut t = Table::new(vec!["knob", "candidate", "best time", "chosen"]);
+    for c in &timings {
+        t.row(vec![
+            c.knob.to_string(),
+            c.candidate.clone(),
+            fmt_time(c.seconds),
+            if c.chosen { "*".to_string() } else { String::new() },
+        ]);
+    }
+    t.print();
+    println!(
+        "\ninstalled: f32_rows_per_tile={} q7={} q15={}",
+        tuning.f32_rows_per_tile,
+        tuning.q7.label(),
+        tuning.q15.label(),
+    );
+    Ok(())
 }
 
 /// `bench smoke` — the row-split correctness gate CI runs on every
@@ -703,6 +746,49 @@ fn bench_fig11_rowsplit(n: usize, seed: u64, reps: usize) -> Result<Fig11Rowspli
     })
 }
 
+/// Time one packed batch run with the SIMD dispatch pinned to scalar vs
+/// the ambient (runtime-detected) dispatch, returning
+/// `t_scalar / t_simd`. Bit parity is asserted before timing: the SIMD
+/// panel cores are bit-exact with the scalar fast/slow paths by
+/// construction, so the two runs must agree word-for-word. On hosts
+/// where detection lands on `Scalar` both timings measure the same code
+/// and the ratio is ~1.0 — the field is still emitted so the
+/// `bench_diff.py` missing-key check can never fire on a non-SIMD
+/// runner.
+fn bench_simd_q_speedup(
+    net: &Network,
+    xs: &[f32],
+    n: usize,
+    reps: usize,
+    width: fann_on_mcu::kernels::PackedWidth,
+) -> Result<f64> {
+    use fann_on_mcu::bench::time_median;
+    use fann_on_mcu::fann::from_float_packed;
+    use fann_on_mcu::kernels::{with_forced_level, SimdLevel};
+
+    let (_, packed) = from_float_packed(net, 1.0, width)?;
+    let xq = packed.quantize_input(xs);
+    let ambient = packed.run_batch_q(&xq, n);
+    let forced = with_forced_level(SimdLevel::Scalar, || packed.run_batch_q(&xq, n));
+    anyhow::ensure!(
+        ambient == forced,
+        "{} SIMD batch diverged from the forced-scalar batch",
+        width.label(),
+    );
+    let mut ck = 0u64;
+    let t_scalar = with_forced_level(SimdLevel::Scalar, || {
+        time_median(1, reps, || {
+            ck = batch::checksum_i32(&packed.run_batch_q(&xq, n));
+            std::hint::black_box(ck);
+        })
+    });
+    let t_simd = time_median(1, reps, || {
+        ck = batch::checksum_i32(&packed.run_batch_q(&xq, n));
+        std::hint::black_box(ck);
+    });
+    Ok(t_scalar / t_simd)
+}
+
 fn cmd_bench_json(args: &Args) -> Result<()> {
     use fann_on_mcu::util::json::Json;
 
@@ -725,6 +811,22 @@ fn cmd_bench_json(args: &Args) -> Result<()> {
         "bench json: topology {:?} ({} MACs/inference), batch {n}, {workers} worker(s), {reps} reps",
         sizes,
         net.macs()
+    );
+
+    // Install host-tuned SIMD knobs before any timed work (quick grid:
+    // every candidate is bit-exact with every other, so this can only
+    // change speed, never results). The chosen values ride along in the
+    // JSON so a regression traced to a bad tuning is diagnosable.
+    let feats = fann_on_mcu::kernels::cpu_features();
+    let (tuning, autotune_timings) = fann_on_mcu::kernels::autotune::autotune(true);
+    println!(
+        "cpu: {} detected {} / selected {}; autotuned f32_rows_per_tile={} q7={} q15={}",
+        feats.arch,
+        feats.detected.label(),
+        feats.selected.label(),
+        tuning.f32_rows_per_tile,
+        tuning.q7.label(),
+        tuning.q15.label(),
     );
 
     let rows = batch::kernel_sweep(&net, &xs, n, threads, 1, reps);
@@ -757,6 +859,21 @@ fn cmd_bench_json(args: &Args) -> Result<()> {
     println!(
         "\nheadline: packed_q7 {speedup_q7:.2}x / packed_q15 {speedup_q15:.2}x vs fixed_q; \
          exec_plan q32 {speedup_execplan:.2}x vs per-call dispatch (single-thread)"
+    );
+
+    // Host-SIMD headline: each packed width timed with dispatch pinned
+    // to scalar vs the ambient runtime-detected level (bit parity
+    // asserted inside), plus the f32 SIMD kernel against the blocked
+    // default from the sweep rows it already shares.
+    let speedup_simd_q7 =
+        bench_simd_q_speedup(&net, &xs, n, reps, fann_on_mcu::kernels::PackedWidth::Q7)?;
+    let speedup_simd_q15 =
+        bench_simd_q_speedup(&net, &xs, n, reps, fann_on_mcu::kernels::PackedWidth::Q15)?;
+    let speedup_simd_f32 = rate("simd_f32", "serial") / rate("blocked_f32", "serial");
+    println!(
+        "simd ({}): packed_q7 {speedup_simd_q7:.2}x / packed_q15 {speedup_simd_q15:.2}x vs \
+         forced-scalar dispatch; simd_f32 {speedup_simd_f32:.2}x vs blocked_f32 (serial)",
+        feats.selected.label(),
     );
 
     // Intra-network parallelism on the paper's Fig. 11 family
@@ -847,6 +964,9 @@ fn cmd_bench_json(args: &Args) -> Result<()> {
                             .field("kernel", r.kernel)
                             .field("mode", r.mode)
                             .field("seconds", r.seconds)
+                            .field("seconds_min", r.seconds_min)
+                            .field("seconds_max", r.seconds_max)
+                            .field("reps", r.reps)
                             .field("samples_per_sec", r.samples_per_sec)
                             .field("bytes_per_network", r.bytes_per_network)
                             // Hex string: u64 digests don't fit JSON's
@@ -861,6 +981,45 @@ fn cmd_bench_json(args: &Args) -> Result<()> {
         .field("speedup_packed_q15_vs_fixed_q_serial", speedup_q15)
         .field("speedup_execplan_vs_dispatch_serial", speedup_execplan)
         .field("speedup_rowsplit_8w_vs_serial", fig11.speedup)
+        .field("speedup_simd_q7_vs_scalar_serial", speedup_simd_q7)
+        .field("speedup_simd_q15_vs_scalar_serial", speedup_simd_q15)
+        .field("speedup_simd_f32_vs_blocked_serial", speedup_simd_f32)
+        .field(
+            "cpu_features",
+            Json::obj()
+                .field("arch", feats.arch)
+                .field("detected", feats.detected.label())
+                .field("selected", feats.selected.label())
+                .field("sse2", feats.sse2)
+                .field("avx2", feats.avx2)
+                .field("fma", feats.fma)
+                .field("neon", feats.neon)
+                .build(),
+        )
+        .field(
+            "autotune",
+            Json::obj()
+                .field("f32_rows_per_tile", tuning.f32_rows_per_tile)
+                .field("q7_path", tuning.q7.label())
+                .field("q15_path", tuning.q15.label())
+                .field(
+                    "candidates",
+                    Json::Arr(
+                        autotune_timings
+                            .iter()
+                            .map(|c| {
+                                Json::obj()
+                                    .field("knob", c.knob)
+                                    .field("candidate", c.candidate.clone())
+                                    .field("seconds", c.seconds)
+                                    .field("chosen", c.chosen)
+                                    .build()
+                            })
+                            .collect::<Vec<_>>(),
+                    ),
+                )
+                .build(),
+        )
         .field(
             "fig11_rowsplit",
             Json::obj()

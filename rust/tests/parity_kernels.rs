@@ -3,6 +3,10 @@
 //!
 //! * `ScalarF32` vs `BlockedF32`: within 3e-5 (the blocked kernel only
 //!   reassociates float adds),
+//! * `SimdF32` vs `ScalarF32`: within the same 3e-5 (16 fixed fma
+//!   lanes), plus bitwise invariants of its own — matvec == matmul at
+//!   every row-tile setting, forced-scalar == runtime-dispatched, and
+//!   (on x86_64) runtime detection actually leaving the scalar tier,
 //! * `FixedQ` vs a scalar Q-format oracle (written out longhand here,
 //!   against `quantize`'s primitive semantics): bit-exact,
 //!
@@ -10,7 +14,10 @@
 //! which exercises full 4-tiles, partial tiles and the `len % 4 != 0`
 //! input tail on every axis.
 
-use fann_on_mcu::kernels::{BlockedF32, DenseKernel, DenseLayerRef, FixedQ, ScalarF32};
+use fann_on_mcu::kernels::{
+    autotune, with_forced_level, BlockedF32, DenseKernel, DenseLayerRef, FixedQ, ScalarF32,
+    SimdF32, SimdLevel,
+};
 use fann_on_mcu::quantize::{qmul, quantize, sat_i32};
 use fann_on_mcu::util::max_abs_diff;
 use fann_on_mcu::util::proptest::{check, ensure};
@@ -139,6 +146,103 @@ fn fixedq_bit_exact_vs_scalar_oracle() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn simd_f32_within_tolerance_of_scalar() {
+    // SimdF32 reassociates the float sum into 16 fixed lanes (and the
+    // hardware paths mirror the portable lane mirror bit-for-bit), so
+    // it gets the same 3e-5 budget the blocked kernel does.
+    check("simd_f32 vs scalar", 200, |rng| {
+        let c = random_case(rng);
+        let layer = DenseLayerRef::new(c.n_in, c.n_out, &c.w, &c.b);
+        let mut scalar = vec![0.0f32; c.n_out * c.n_samples];
+        let mut simd = vec![0.0f32; c.n_out * c.n_samples];
+        ScalarF32.matmul(&layer, &c.xs, c.n_samples, &mut scalar);
+        SimdF32.matmul(&layer, &c.xs, c.n_samples, &mut simd);
+        let d = max_abs_diff(&scalar, &simd);
+        ensure(d <= TOL, format!("matmul n_in={} n_out={} diff={d}", c.n_in, c.n_out))?;
+        let x = &c.xs[..c.n_in];
+        let mut scalar1 = vec![0.0f32; c.n_out];
+        let mut simd1 = vec![0.0f32; c.n_out];
+        ScalarF32.matvec(&layer, x, &mut scalar1);
+        SimdF32.matvec(&layer, x, &mut simd1);
+        let d1 = max_abs_diff(&scalar1, &simd1);
+        ensure(d1 <= TOL, format!("matvec n_in={} n_out={} diff={d1}", c.n_in, c.n_out))
+    });
+}
+
+#[test]
+fn simd_f32_matvec_equals_matmul_bitwise_across_tiles() {
+    // The row tile is a pure traversal-order knob: every (row, sample)
+    // cell is one independent fixed-order dot product, so matmul must
+    // reproduce matvec bit-for-bit at every tile setting the autotuner
+    // can install.
+    let mut rng = Rng::new(0x7F32);
+    let saved = autotune::current();
+    for tile in [1usize, 2, 4] {
+        let mut t = saved;
+        t.f32_rows_per_tile = tile;
+        autotune::apply(&t);
+        for _ in 0..20 {
+            let c = random_case(&mut rng);
+            let layer = DenseLayerRef::new(c.n_in, c.n_out, &c.w, &c.b);
+            let mut mm = vec![0.0f32; c.n_out * c.n_samples];
+            SimdF32.matmul(&layer, &c.xs, c.n_samples, &mut mm);
+            for s in 0..c.n_samples {
+                let mut mv = vec![0.0f32; c.n_out];
+                SimdF32.matvec(&layer, &c.xs[s * c.n_in..(s + 1) * c.n_in], &mut mv);
+                let col = &mm[s * c.n_out..(s + 1) * c.n_out];
+                assert!(
+                    mv.iter().zip(col).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "tile={tile} sample={s} n_in={} n_out={}",
+                    c.n_in,
+                    c.n_out
+                );
+            }
+        }
+    }
+    autotune::apply(&saved);
+}
+
+#[test]
+fn simd_f32_forced_scalar_is_bit_identical() {
+    // The portable lane mirror runs the exact per-lane mul_add chains
+    // the AVX2/NEON paths run, so pinning dispatch to Scalar must not
+    // move a single bit.
+    let mut rng = Rng::new(0xB17);
+    for _ in 0..30 {
+        let c = random_case(&mut rng);
+        let layer = DenseLayerRef::new(c.n_in, c.n_out, &c.w, &c.b);
+        let mut ambient = vec![0.0f32; c.n_out * c.n_samples];
+        SimdF32.matmul(&layer, &c.xs, c.n_samples, &mut ambient);
+        let forced = with_forced_level(SimdLevel::Scalar, || {
+            let mut out = vec![0.0f32; c.n_out * c.n_samples];
+            SimdF32.matmul(&layer, &c.xs, c.n_samples, &mut out);
+            out
+        });
+        assert!(
+            ambient.iter().zip(&forced).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "forced-scalar SimdF32 diverged (n_in={} n_out={} n_samples={})",
+            c.n_in,
+            c.n_out,
+            c.n_samples
+        );
+    }
+}
+
+#[test]
+#[cfg(target_arch = "x86_64")]
+fn simd_level_is_detected_on_x86_64() {
+    // SSE2 is architecturally guaranteed on x86_64: runtime detection
+    // must never leave an x86_64 host (CI included) on the scalar tier.
+    let f = fann_on_mcu::kernels::cpu_features();
+    assert!(
+        f.detected == SimdLevel::Sse2 || f.detected == SimdLevel::Avx2,
+        "detected {:?}",
+        f.detected
+    );
+    assert!(f.sse2, "SSE2 flag must be set on x86_64");
 }
 
 #[test]

@@ -133,6 +133,77 @@ fn packed_slow_path_bit_exact_at_extreme_inputs() {
 }
 
 #[test]
+fn packed_bit_exact_under_every_forced_simd_level() {
+    // The SIMD panel cores are storage-order rewrites of the scalar
+    // fast path, never a change of arithmetic: pin every forcible
+    // dispatch level (unavailable ISAs clamp to Scalar, so the sweep is
+    // portable) bit-exact against FixedQ across ragged shapes and the
+    // three input bands that steer path selection — extra-narrow
+    // (|x| <= i16::MAX, engages the SSE2 madd core), mid-range
+    // (engages the widening SIMD core on q7 but exceeds the q15
+    // fast-path bound), and saturating extremes (exact i64 slow path).
+    use fann_on_mcu::kernels::{with_forced_level, SimdLevel};
+
+    let levels =
+        [SimdLevel::Scalar, SimdLevel::Sse2, SimdLevel::Avx2, SimdLevel::Neon];
+    let mut rng = Rng::new(0x51D0);
+    let n_samples = 3;
+    for width in [PackedWidth::Q7, PackedWidth::Q15] {
+        for n_in in [1usize, 3, 4, 5, 8, 9, 16, 31, 64, 67] {
+            for n_out in [1usize, 2, 3, 4, 5, 8, 9] {
+                for band in 0..3 {
+                    let dec = 6;
+                    let (w, b) = random_narrow_layer(&mut rng, width, n_in, n_out);
+                    let xs: Vec<i32> = (0..n_in * n_samples)
+                        .map(|i| match band {
+                            0 => rng.below(2 * 32767 + 1) as i32 - 32767,
+                            1 => rng.below(200001) as i32 - 100000,
+                            _ => match i % 3 {
+                                0 => i32::MAX - i as i32,
+                                1 => i32::MIN + i as i32,
+                                _ => rng.below(1000) as i32 - 500,
+                            },
+                        })
+                        .collect();
+                    let layer = DenseLayerRef::new(n_in, n_out, &w, &b);
+                    let mut want_mv = vec![0i32; n_out];
+                    FixedQ::new(dec).matvec(&layer, &xs[..n_in], &mut want_mv);
+                    let mut want_mm = vec![0i32; n_out * n_samples];
+                    FixedQ::new(dec).matmul(&layer, &xs, n_samples, &mut want_mm);
+
+                    let panels = pack_rows(width, n_in, n_out, &w).unwrap();
+                    let pref = PackedLayerRef::new(&panels, &b);
+                    for level in levels {
+                        let (got_mv, got_mm) = with_forced_level(level, || {
+                            let mut mv = vec![0i32; n_out];
+                            match width {
+                                PackedWidth::Q7 => {
+                                    PackedQ7::new(dec).matvec(&pref, &xs[..n_in], &mut mv)
+                                }
+                                PackedWidth::Q15 => {
+                                    PackedQ15::new(dec).matvec(&pref, &xs[..n_in], &mut mv)
+                                }
+                            }
+                            let mut mm = vec![0i32; n_out * n_samples];
+                            run_packed(width, dec, &pref, &xs, n_samples, &mut mm);
+                            (mv, mm)
+                        });
+                        assert_eq!(
+                            got_mv, want_mv,
+                            "{width:?} matvec {level:?} n_in={n_in} n_out={n_out} band={band}"
+                        );
+                        assert_eq!(
+                            got_mm, want_mm,
+                            "{width:?} matmul {level:?} n_in={n_in} n_out={n_out} band={band}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn packed_network_bit_exact_vs_fixed_reference_randomized() {
     check("packed network vs fixed", 40, |rng| {
         let n_layers = rng.range_usize(1, 3);

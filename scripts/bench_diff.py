@@ -21,6 +21,15 @@ Gated fields:
 * ``ratchet_*`` — scheduler-quality scalars (e.g. the service's mean
   coalesced batch size) that must not silently decay either.
 
+Per-key ratio: ``speedup_simd_*`` fields compare two single-threaded
+runs of the same binary on the same core (forced-scalar vs
+runtime-dispatched SIMD), so they carry far less runner noise than the
+cross-configuration ratios. They are gated at a fixed, tighter 0.9
+regardless of the CLI RATIO; every other gated key uses RATIO.
+
+When ``GITHUB_STEP_SUMMARY`` is set (GitHub Actions), a Markdown table
+of every gated/advisory comparison is appended to the job summary.
+
 New gated fields in the fresh run are allowed (the gate is
 forward-compatible); refresh a baseline by rerunning the producing
 command on a quiet machine and committing the result.
@@ -34,7 +43,11 @@ fresh run instead.
 """
 
 import json
+import os
 import sys
+
+# Tighter fixed ratio for the same-core forced-scalar-vs-SIMD ratios.
+SIMD_RATIO = 0.9
 
 
 def is_gated(key: str) -> bool:
@@ -45,6 +58,28 @@ def is_gated(key: str) -> bool:
 
 def is_advisory(key: str) -> bool:
     return key.startswith("speedup_rowsplit_")
+
+
+def ratio_for(key: str, cli_ratio: float) -> float:
+    return SIMD_RATIO if key.startswith("speedup_simd_") else cli_ratio
+
+
+def write_job_summary(summary_rows) -> None:
+    """Append a Markdown comparison table to the GitHub job summary."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = [
+        "### Bench regression check",
+        "",
+        "| field | fresh | baseline | floor | status |",
+        "|---|---|---|---|---|",
+    ]
+    for key, got, floor, gate, status in summary_rows:
+        fmt = lambda v: f"{v:.3f}" if isinstance(v, (int, float)) else "—"
+        lines.append(f"| `{key}` | {fmt(got)} | {fmt(floor)} | {fmt(gate)} | {status} |")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n\n")
 
 
 def main() -> int:
@@ -59,6 +94,7 @@ def main() -> int:
 
     failures = []
     checked = 0
+    summary_rows = []  # (key, fresh, baseline, floor, status)
     for key in sorted(base):
         if is_advisory(key):
             floor = base[key]
@@ -67,24 +103,30 @@ def main() -> int:
                 print(f"advisory {key}: {got:.3f} (baseline {floor:.3f}, not gated)")
             else:
                 print(f"advisory {key}: baseline {floor!r}, fresh {got!r} (not gated)")
+            summary_rows.append((key, got, floor, None, "advisory"))
             continue
         if not is_gated(key):
             continue
         floor = base[key]
         if not isinstance(floor, (int, float)) or floor <= 0:
             failures.append(f"{key}: baseline value {floor!r} is not a positive number")
+            summary_rows.append((key, None, floor, None, "BAD BASELINE"))
             continue
         got = fresh.get(key)
         if not isinstance(got, (int, float)):
             failures.append(f"{key}: missing from the fresh run")
+            summary_rows.append((key, None, floor, None, "MISSING"))
             continue
         checked += 1
-        if got < ratio * floor:
+        r = ratio_for(key, ratio)
+        if got < r * floor:
             failures.append(
-                f"{key}: {got:.3f} < {ratio} x baseline {floor:.3f} (floor {ratio * floor:.3f})"
+                f"{key}: {got:.3f} < {r} x baseline {floor:.3f} (floor {r * floor:.3f})"
             )
+            summary_rows.append((key, got, floor, r * floor, "**FAIL**"))
         else:
-            print(f"ok {key}: {got:.3f} (baseline {floor:.3f}, floor {ratio * floor:.3f})")
+            print(f"ok {key}: {got:.3f} (baseline {floor:.3f}, floor {r * floor:.3f})")
+            summary_rows.append((key, got, floor, r * floor, "ok"))
 
     hol = fresh.get("head_of_line")
     if isinstance(hol, dict):
@@ -102,6 +144,7 @@ def main() -> int:
 
     if checked == 0 and not failures:
         failures.append("baseline contains no gated speedup_*/ratchet_* fields — nothing was gated")
+    write_job_summary(summary_rows)
     if failures:
         print("bench regression check FAILED:", file=sys.stderr)
         for line in failures:
