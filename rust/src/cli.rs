@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 /// The flags that parse as valueless boolean switches. Every other
 /// flag keeps the `--flag value` grammar (and the "needs a value"
 /// error), so forgetting a value can never silently become `"true"`.
-pub const BOOLEAN_FLAGS: &[&str] = &["quick"];
+pub const BOOLEAN_FLAGS: &[&str] = &["quick", "wire"];
 
 /// Parsed command line: the subcommand and its `--key value` flags.
 #[derive(Debug, Clone)]

@@ -1108,13 +1108,122 @@ fn cmd_paper_reproduce(args: &Args) -> Result<()> {
 
 /// `service <mode>` — the multi-tenant inference host. `load` is the
 /// synthetic client-replay harness; `chaos` is the seeded
-/// fault-injection harness.
+/// fault-injection harness; `serve` stands the host up behind real
+/// sockets (the wire front-end) until killed.
 fn cmd_service(mode: &str, args: &Args) -> Result<()> {
     match mode {
         "load" => cmd_service_load(args),
         "chaos" => cmd_service_chaos(args),
-        other => bail!("unknown service mode {other:?} (known: load, chaos)"),
+        "serve" => cmd_service_serve(args),
+        other => bail!("unknown service mode {other:?} (known: load, chaos, serve)"),
     }
+}
+
+/// `service serve` — stand the inference host up behind the wire
+/// front-end on a Unix socket and/or a TCP listener, hosting the same
+/// three seeded wearable demo models the harnesses replay. Runs for
+/// `--duration-secs` (0, the default, means until killed); a bounded
+/// run shuts down gracefully — in-flight requests answered `Aborted` —
+/// and prints the wire counters.
+fn cmd_service_serve(args: &Args) -> Result<()> {
+    use fann_on_mcu::service::load::demo_registry;
+    use fann_on_mcu::service::{BatchPolicy, InferenceService, ShardPolicy, WireConfig, WireServer};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    args.expect_only(&[
+        "uds",
+        "tcp",
+        "seed",
+        "max-batch",
+        "max-delay-us",
+        "capacity",
+        "shards",
+        "workers",
+        "max-frame",
+        "max-in-flight",
+        "duration-secs",
+    ])?;
+    let uds = args.get("uds");
+    let tcp = args.get("tcp");
+    if uds.is_none() && tcp.is_none() {
+        bail!("service serve needs --uds PATH and/or --tcp ADDR");
+    }
+    let base = BatchPolicy::default();
+    let policy = BatchPolicy {
+        max_batch: args.get_usize("max-batch", base.max_batch)?,
+        max_delay: Duration::from_micros(
+            args.get_u64("max-delay-us", base.max_delay.as_micros() as u64)?,
+        ),
+        queue_capacity: args.get_usize("capacity", base.queue_capacity)?,
+        exec_workers: args.get_usize("workers", base.exec_workers)?,
+        ..base
+    };
+    let shards = args.get_usize("shards", 1)?.max(1);
+    let seed = args.get_u64("seed", 7)?;
+    let duration = args.get_u64("duration-secs", 0)?;
+    let base_cfg = WireConfig::default();
+    let cfg = WireConfig {
+        max_frame: args.get_usize("max-frame", base_cfg.max_frame)?,
+        max_in_flight: args.get_usize("max-in-flight", base_cfg.max_in_flight)?,
+        ..base_cfg
+    };
+
+    let (registry, rows) = demo_registry(seed)?;
+    let svc = Arc::new(InferenceService::start_sharded(
+        registry,
+        &policy,
+        &ShardPolicy::new(shards),
+        None,
+    ));
+    let mut server = WireServer::start(svc, &cfg);
+    if let Some(path) = uds {
+        server
+            .listen_uds(Path::new(path))
+            .with_context(|| format!("binding UDS {path}"))?;
+        println!("listening on uds {path}");
+    }
+    if let Some(addr) = tcp {
+        let bound = server
+            .listen_tcp(addr)
+            .with_context(|| format!("binding TCP {addr}"))?;
+        println!("listening on tcp {bound}");
+    }
+    for (id, n_in, n_out) in &rows {
+        println!("  model {id}: {n_in} inputs -> {n_out} outputs");
+    }
+    println!(
+        "policy: max_batch {}, max_delay {:?}, capacity {}, {} shard(s); \
+         wire: max_frame {} B, max_in_flight {}",
+        policy.max_batch,
+        policy.max_delay,
+        policy.queue_capacity,
+        shards,
+        cfg.max_frame,
+        cfg.max_in_flight,
+    );
+    if duration == 0 {
+        println!("serving until killed (pass --duration-secs N for a bounded run)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    println!("serving for {duration}s");
+    std::thread::sleep(Duration::from_secs(duration));
+    let snap = server.shutdown_all();
+    let w = snap.wire;
+    println!(
+        "wire: {} connections opened / {} closed, {} frames in / {} out, \
+         {} bad frames, {} B in / {} B out",
+        w.connections_opened,
+        w.connections_closed,
+        w.frames_rx,
+        w.frames_tx,
+        w.bad_frames,
+        w.bytes_rx,
+        w.bytes_tx,
+    );
+    Ok(())
 }
 
 /// `service load` — replay seeded simulated wearable clients through
@@ -1128,6 +1237,7 @@ fn cmd_service_load(args: &Args) -> Result<()> {
 
     args.expect_only(&[
         "quick",
+        "wire",
         "clients",
         "requests",
         "seed",
@@ -1145,6 +1255,7 @@ fn cmd_service_load(args: &Args) -> Result<()> {
     } else {
         LoadOptions::default()
     };
+    opts.wire = args.get_flag("wire")?;
     opts.clients = args.get_usize("clients", opts.clients)?.max(1);
     opts.requests_per_client = args.get_usize("requests", opts.requests_per_client)?.max(1);
     opts.seed = args.get_u64("seed", opts.seed)?;
@@ -1160,7 +1271,8 @@ fn cmd_service_load(args: &Args) -> Result<()> {
 
     println!(
         "service load: {} clients x {} requests = {} total, max_batch {}, max_delay {:?}, \
-         capacity {}, {} submitter(s), {} shard(s), {} exec worker(s), adaptive delay {}",
+         capacity {}, {} submitter(s), {} shard(s), {} exec worker(s), adaptive delay {}, \
+         transport {}",
         opts.clients,
         opts.requests_per_client,
         opts.total_requests(),
@@ -1171,6 +1283,7 @@ fn cmd_service_load(args: &Args) -> Result<()> {
         opts.shards,
         opts.policy.exec_workers,
         if opts.policy.adaptive_delay { "on" } else { "off" },
+        if opts.wire { "wire (UDS frames)" } else { "in-process" },
     );
 
     let report = load::run(&opts)?;
@@ -1223,6 +1336,20 @@ fn cmd_service_load(args: &Args) -> Result<()> {
             report.gave_up_total
         );
     }
+    if let Some(w) = &report.wire {
+        println!(
+            "wire: {} connections opened / {} closed, {} frames in / {} out, \
+             {} bad frames, {} B in / {} B out, {} reset(s)",
+            w.connections_opened,
+            w.connections_closed,
+            w.frames_rx,
+            w.frames_tx,
+            w.bad_frames,
+            w.bytes_rx,
+            w.bytes_tx,
+            report.wire_resets,
+        );
+    }
     std::fs::write(out_path, report.to_json().to_pretty())
         .with_context(|| format!("writing {out_path}"))?;
     println!("wrote {out_path}");
@@ -1237,12 +1364,15 @@ fn cmd_service_load(args: &Args) -> Result<()> {
 fn cmd_service_chaos(args: &Args) -> Result<()> {
     use fann_on_mcu::service::chaos::{self, ChaosOptions};
 
-    args.expect_only(&["quick", "clients", "requests", "seed", "submitters", "shards", "out"])?;
+    args.expect_only(&[
+        "quick", "wire", "clients", "requests", "seed", "submitters", "shards", "out",
+    ])?;
     let mut opts = if args.get_flag("quick")? {
         ChaosOptions::quick()
     } else {
         ChaosOptions::default()
     };
+    opts.wire = args.get_flag("wire")?;
     opts.clients = args.get_usize("clients", opts.clients)?.max(1);
     opts.requests_per_client = args.get_usize("requests", opts.requests_per_client)?.max(1);
     let seed = args.get_u64("seed", opts.seed)?;
@@ -1253,13 +1383,14 @@ fn cmd_service_chaos(args: &Args) -> Result<()> {
     let out_path = args.get_or("out", "BENCH_chaos.json");
 
     println!(
-        "service chaos: {} clients x {} requests = {} total on {} shard(s); \
+        "service chaos: {} clients x {} requests = {} total on {} shard(s), transport {}; \
          panic window [{}, {}) on {}, \
          nan_prob {}, dispatcher kills at {:?}; breaker threshold {}, cooldown {:?}",
         opts.clients,
         opts.requests_per_client,
         opts.total_requests(),
         opts.shards,
+        if opts.wire { "wire (UDS frames)" } else { "in-process" },
         opts.plan.panic_from,
         opts.plan.panic_until,
         opts.plan.panic_model,
@@ -1307,6 +1438,20 @@ fn cmd_service_chaos(args: &Args) -> Result<()> {
         report.shard_rows.len(),
         report.shard_accounting_ok,
     );
+    if let Some(w) = &report.wire {
+        println!(
+            "wire: {} connections opened / {} closed, {} frames in / {} out, \
+             {} bad frames, {} B in / {} B out, {} reset(s)",
+            w.connections_opened,
+            w.connections_closed,
+            w.frames_rx,
+            w.frames_tx,
+            w.bad_frames,
+            w.bytes_rx,
+            w.bytes_tx,
+            report.wire_resets,
+        );
+    }
     report.check()
 }
 
@@ -1358,7 +1503,7 @@ COMMANDS:
                  emulate each on cortex-m4f, wolf-fc and wolf-{1,2,4,8}core,
                  write PAPER_RESULTS.json + RESULTS.md (latency, memory
                  vs budget, energy, speedup_wolf8_vs_m4 headline)
-  service load   [--quick] [--clients N] [--requests N] [--seed N]
+  service load   [--quick] [--wire] [--clients N] [--requests N] [--seed N]
                  [--max-batch N] [--max-delay-us N] [--capacity N]
                  [--submitters N] [--shards N] [--adaptive] [--workers N]
                  [--out FILE]
@@ -1368,15 +1513,27 @@ COMMANDS:
                  reply asserted bit-exact vs serial per-request
                  execution; writes BENCH_service.json (samples/s,
                  p50/p99 latency, mean batch size, per-shard rows, and
-                 a hot/cold head-of-line decoupling probe)
-  service chaos  [--quick] [--clients N] [--requests N] [--seed N]
+                 a hot/cold head-of-line decoupling probe); --wire
+                 drives the run over real UDS clients of the frame
+                 protocol and folds wire counters into the report
+  service chaos  [--quick] [--wire] [--clients N] [--requests N] [--seed N]
                  [--submitters N] [--shards N] [--out FILE]
                  seeded fault injection against the same service (exec
                  panics, latency spikes, NaN-poisoned inputs, dispatcher
                  kills); audits exactly-one-terminal-reply, quarantine
                  trip/probe/recovery, watchdog restarts, and bit-exact
                  successful replies; writes BENCH_chaos.json and exits
-                 non-zero on any violated invariant
+                 non-zero on any violated invariant; --wire replays the
+                 same faults across the socket boundary
+  service serve  (--uds PATH and/or --tcp ADDR) [--seed N] [--max-batch N]
+                 [--max-delay-us N] [--capacity N] [--shards N]
+                 [--workers N] [--max-frame BYTES] [--max-in-flight N]
+                 [--duration-secs N]
+                 stand the inference host up behind the length-prefixed
+                 wire protocol (see README \"Wire protocol\"), hosting
+                 the three seeded wearable demo models; runs until
+                 killed unless --duration-secs bounds it (then shuts
+                 down gracefully and prints wire counters)
   info           show applications, targets, artifact status
   help           this text
 

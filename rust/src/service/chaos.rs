@@ -25,6 +25,13 @@
 //!   matches the precomputed serial per-sample reference bit for bit:
 //!   faults may fail requests, but they may never corrupt an answer.
 //!
+//! With `--wire` ([`ChaosOptions::wire`]) the same schedule rides the
+//! socket front-end instead of in-process channels: submitters become
+//! real Unix-domain-socket clients of a [`WireServer`], every injected
+//! fault must round-trip the frame protocol as a typed response frame,
+//! and NaN poisoning must come back as `BadFrame` rejections — proving
+//! the fault-tolerance contract holds across the wire boundary too.
+//!
 //! [`ChaosReport::to_json`] serializes the audit as
 //! `BENCH_chaos.json` (schema `fann-on-mcu/bench-chaos/v1`; field
 //! dictionary in the README "Fault tolerance" section), and
@@ -34,19 +41,25 @@
 
 use std::collections::HashMap;
 use std::ops::Range;
+use std::path::{Path, PathBuf};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::util::json::Json;
 
 use super::faults::FaultPlan;
+use super::frame::{RequestFrame, ResponseBody};
 use super::host::{InferenceService, Output};
-use super::load::{build_models, pool_index, shard_rows_json, shed_backoff, LoadModel, MAX_SHED_RETRIES};
-use super::metrics::{MetricsSnapshot, ShardMetrics};
+use super::load::{
+    build_models, connect_with_retry, pool_index, shard_rows_json, shed_backoff, wire_json,
+    LoadModel, MAX_SHED_RETRIES,
+};
+use super::metrics::{MetricsSnapshot, ShardMetrics, WireCounters};
 use super::registry::{BreakerPolicy, ModelRegistry};
 use super::shard::ShardPolicy;
+use super::wire::{temp_uds_path, WireClient, WireConfig, WireError, WireServer};
 use super::{BatchPolicy, InferError, SubmitError};
 
 /// How many times a client retries one quarantine-rejected request
@@ -80,6 +93,13 @@ pub struct ChaosOptions {
     /// Dispatcher shards the service runs; injected dispatcher kills
     /// target only the shard hosting the fault plan's panic model.
     pub shards: usize,
+    /// Drive the run over the wire front-end (`service chaos --wire`):
+    /// submitters become real Unix-domain-socket clients of a
+    /// [`WireServer`], so every injected fault must round-trip the
+    /// frame protocol — quarantine/abort/exec-failure as typed
+    /// response frames, NaN poisoning as `BadFrame` rejections — with
+    /// every invariant below intact across the socket boundary.
+    pub wire: bool,
     /// Scheduler policy for the run (includes the request budget that
     /// produces `Timeout` replies under pressure).
     pub policy: BatchPolicy,
@@ -98,6 +118,7 @@ impl Default for ChaosOptions {
             seed,
             submitters: 4,
             shards: 1,
+            wire: false,
             policy: BatchPolicy {
                 max_batch: 32,
                 max_delay: Duration::from_millis(1),
@@ -179,6 +200,7 @@ struct ChaosStats {
     lost_replies: u64,
     duplicate_replies: u64,
     mismatches: u64,
+    resets: u64,
 }
 
 impl ChaosStats {
@@ -196,6 +218,7 @@ impl ChaosStats {
         self.lost_replies += o.lost_replies;
         self.duplicate_replies += o.duplicate_replies;
         self.mismatches += o.mismatches;
+        self.resets += o.resets;
     }
 }
 
@@ -303,6 +326,210 @@ fn chaos_submitter(
     stats
 }
 
+/// The wire-mode chaos submitter: the same schedule, poison
+/// expectations, and retry budgets as [`chaos_submitter`], but every
+/// request travels the harness's Unix socket as a length-prefixed
+/// frame, lockstep (send one, wait for its terminal frame). The
+/// in-process expect-map becomes the lockstep id check: a frame for
+/// an id we are not waiting on is a protocol desync, counted as a
+/// mismatch and a reset. Poisoned submits must come back as
+/// `BadFrame` rejections — submit-time NaN validation now runs on the
+/// far side of the socket. Connection resets reconnect-and-retry
+/// within the shed budget, counted in `resets` so the report can
+/// refuse to trust service-side counters a reset may have inflated.
+fn wire_chaos_submitter(
+    path: &Path,
+    models: &[LoadModel],
+    plan: &FaultPlan,
+    clients: Range<usize>,
+    requests_per_client: usize,
+) -> ChaosStats {
+    let mut stats = ChaosStats::default();
+    let mut conn: Option<WireClient> = None;
+    let mut poisoned: Vec<f32> = Vec::new();
+    'clients: for c in clients {
+        let mi = c % models.len();
+        let m = &models[mi];
+        for r in 0..requests_per_client {
+            let pi = pool_index(c, r, m.pool_samples);
+            let input = &m.pool_f[pi * m.n_in..(pi + 1) * m.n_in];
+            let poison = m.plan.is_float() && plan.poison_input(c as u64, r as u64);
+            let payload: Vec<f32> = if poison {
+                poisoned.clear();
+                poisoned.extend_from_slice(input);
+                poisoned[pi % m.n_in] = f32::NAN;
+                poisoned.clone()
+            } else {
+                input.to_vec()
+            };
+            let req = RequestFrame {
+                // Unique per client: requests_per_client is far below
+                // 2^20, so client and request index cannot collide.
+                id: ((c as u64) << 20) | r as u64,
+                tenant: c as u64,
+                model: m.id.to_string(),
+                input: payload,
+            };
+            let mut shed_attempts = 0u32;
+            let mut quar_attempts = 0u32;
+            loop {
+                if conn.is_none() {
+                    match connect_with_retry(path) {
+                        Some(client) => conn = Some(client),
+                        None => {
+                            // Server unreachable: everything this client
+                            // still owes is a counted give-up, never a
+                            // silent drop.
+                            stats.shed_gave_up += (requests_per_client - r) as u64;
+                            continue 'clients;
+                        }
+                    }
+                }
+                let client = conn.as_mut().expect("connection just ensured");
+                match client.call(&req) {
+                    Ok(resp) if resp.id == req.id => {
+                        if poison {
+                            // Submit-time validation lives on the server
+                            // side of the socket now; the only correct
+                            // answer to a poisoned frame is `BadFrame`
+                            // (the frame decodes — NaN is representable
+                            // on the wire by design — but submit must
+                            // reject it).
+                            match resp.body {
+                                ResponseBody::BadFrame { .. } => stats.rejected_bad_input += 1,
+                                // Validation regressed: the mismatch
+                                // fails the bit_exact gate; a terminal
+                                // body is still classified so the
+                                // accounting ledger closes.
+                                other => {
+                                    stats.mismatches += 1;
+                                    match other {
+                                        ResponseBody::Ok { .. } => {
+                                            stats.accepted += 1;
+                                            stats.replies_ok += 1;
+                                        }
+                                        ResponseBody::Timeout { .. } => {
+                                            stats.accepted += 1;
+                                            stats.replies_timeout += 1;
+                                        }
+                                        ResponseBody::ExecFailed { .. } => {
+                                            stats.accepted += 1;
+                                            stats.replies_exec_failed += 1;
+                                        }
+                                        ResponseBody::Aborted { .. } => {
+                                            stats.accepted += 1;
+                                            stats.replies_aborted += 1;
+                                        }
+                                        _ => {}
+                                    }
+                                }
+                            }
+                            break;
+                        }
+                        match resp.body {
+                            ResponseBody::Ok { ref output, .. } => {
+                                stats.accepted += 1;
+                                stats.replies_ok += 1;
+                                let ok = match output {
+                                    Output::F32(v) => {
+                                        v[..] == m.expected_f[pi * m.n_out..(pi + 1) * m.n_out]
+                                    }
+                                    Output::Q(v) => {
+                                        v[..] == m.expected_q[pi * m.n_out..(pi + 1) * m.n_out]
+                                    }
+                                };
+                                if !ok {
+                                    stats.mismatches += 1;
+                                }
+                                break;
+                            }
+                            ResponseBody::Shed { .. } => {
+                                if shed_attempts >= MAX_SHED_RETRIES {
+                                    stats.shed_gave_up += 1;
+                                    break;
+                                }
+                                stats.shed_retries += 1;
+                                std::thread::sleep(shed_backoff(shed_attempts, c as u64));
+                                shed_attempts += 1;
+                            }
+                            ResponseBody::Quarantined { .. } => {
+                                stats.quarantined_rejects += 1;
+                                if quar_attempts >= MAX_QUARANTINE_RETRIES {
+                                    stats.quarantined_gave_up += 1;
+                                    break;
+                                }
+                                std::thread::sleep(quarantine_backoff(quar_attempts, c as u64));
+                                quar_attempts += 1;
+                            }
+                            ResponseBody::Timeout { .. } => {
+                                stats.accepted += 1;
+                                stats.replies_timeout += 1;
+                                break;
+                            }
+                            ResponseBody::ExecFailed { .. } => {
+                                stats.accepted += 1;
+                                stats.replies_exec_failed += 1;
+                                break;
+                            }
+                            ResponseBody::Aborted { .. } => {
+                                stats.accepted += 1;
+                                stats.replies_aborted += 1;
+                                break;
+                            }
+                            ResponseBody::BadFrame { detail } => {
+                                panic!("well-formed chaos request rejected as bad frame: {detail}")
+                            }
+                        }
+                    }
+                    Ok(_) => {
+                        // A frame for an id we are not waiting on breaks
+                        // the lockstep protocol — treat the stream as
+                        // desynced: count it and resync on a fresh
+                        // connection.
+                        stats.mismatches += 1;
+                        conn = None;
+                        stats.resets += 1;
+                        if shed_attempts >= MAX_SHED_RETRIES {
+                            stats.shed_gave_up += 1;
+                            break;
+                        }
+                        shed_attempts += 1;
+                    }
+                    Err(WireError::Io(e))
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) =>
+                    {
+                        // The terminal frame never arrived inside the
+                        // client budget — the lost-reply invariant this
+                        // harness exists to catch.
+                        stats.lost_replies += 1;
+                        break;
+                    }
+                    Err(_) => {
+                        // Reset mid-request: the service may or may not
+                        // have executed it (its reply died with the
+                        // socket). Reconnect and retry, counted, so the
+                        // report never double-trusts service counters a
+                        // reset may have inflated.
+                        conn = None;
+                        stats.resets += 1;
+                        if shed_attempts >= MAX_SHED_RETRIES {
+                            stats.shed_gave_up += 1;
+                            break;
+                        }
+                        stats.shed_retries += 1;
+                        std::thread::sleep(shed_backoff(shed_attempts, c as u64));
+                        shed_attempts += 1;
+                    }
+                }
+            }
+        }
+    }
+    stats
+}
+
 /// Everything a chaos run measured — the in-memory form of
 /// `BENCH_chaos.json`.
 #[derive(Debug, Clone)]
@@ -372,6 +599,15 @@ pub struct ChaosReport {
     /// failed, watchdog restarts, and dispatcher heartbeats all
     /// reconcile shard-by-shard.
     pub shard_accounting_ok: bool,
+    /// Wire counters from the harness's socket front-end (`Some` only
+    /// for `--wire` runs).
+    pub wire: Option<WireCounters>,
+    /// Connection resets wire submitters survived by reconnecting.
+    /// When nonzero, the service-side `completed + failed == accepted`
+    /// clause of `accounting_ok` is waived: a reset can double-execute
+    /// a request whose first reply died with its socket. The
+    /// lost/duplicate clauses always apply.
+    pub wire_resets: u64,
 }
 
 /// Run the chaos harness: build the load models, start a service with
@@ -386,12 +622,30 @@ pub fn run(opts: &ChaosOptions) -> Result<ChaosReport> {
     for m in &models {
         registry.register_plan(m.id, m.plan.clone())?;
     }
-    let svc = InferenceService::start_sharded(
+    let svc = Arc::new(InferenceService::start_sharded(
         registry,
         &opts.policy,
         &ShardPolicy::new(opts.shards),
         Some(opts.plan.clone()),
-    );
+    ));
+
+    let mut wire_path: Option<PathBuf> = None;
+    let wire_server = if opts.wire {
+        let cfg = WireConfig {
+            // Generous deadlines: harness clients are cooperative, and
+            // the reply-wait bound lives client-side.
+            read_timeout: Some(Duration::from_secs(150)),
+            write_timeout: Some(Duration::from_secs(30)),
+            ..WireConfig::default()
+        };
+        let mut server = WireServer::start(Arc::clone(&svc), &cfg);
+        let path = temp_uds_path("chaos");
+        server.listen_uds(&path).context("binding chaos-harness UDS")?;
+        wire_path = Some(path);
+        Some(server)
+    } else {
+        None
+    };
 
     let submitters = opts.submitters.clamp(1, opts.clients);
     let t0 = Instant::now();
@@ -404,11 +658,15 @@ pub fn run(opts: &ChaosOptions) -> Result<ChaosReport> {
             let len = base + usize::from(i < extra);
             let range = start..start + len;
             start += len;
-            let svc_ref = &svc;
+            let svc_ref: &InferenceService = &svc;
             let models_ref = &models;
             let plan_ref = &opts.plan;
             let rpc = opts.requests_per_client;
-            handles.push(s.spawn(move || chaos_submitter(svc_ref, models_ref, plan_ref, range, rpc)));
+            let path_ref = wire_path.as_deref();
+            handles.push(s.spawn(move || match path_ref {
+                Some(p) => wire_chaos_submitter(p, models_ref, plan_ref, range, rpc),
+                None => chaos_submitter(svc_ref, models_ref, plan_ref, range, rpc),
+            }));
         }
         handles
             .into_iter()
@@ -418,7 +676,21 @@ pub fn run(opts: &ChaosOptions) -> Result<ChaosReport> {
             .collect()
     });
     let wall_seconds = t0.elapsed().as_secs_f64();
-    let snap = svc.shutdown();
+    // Wire teardown first (it half-closes connections and aborts
+    // anything still in flight), then the service; shutdown() joins
+    // the dispatchers, so the snapshot accounts for every batch.
+    let wire_counters = wire_server.map(|server| {
+        let (svc_back, counters) = server.shutdown();
+        drop(svc_back);
+        counters
+    });
+    let Ok(svc) = Arc::try_unwrap(svc) else {
+        anyhow::bail!("service Arc still shared after wire shutdown")
+    };
+    let mut snap = svc.shutdown();
+    if let Some(c) = wire_counters {
+        snap.wire = c;
+    }
 
     let mut stats = ChaosStats::default();
     for s in &per_thread {
@@ -451,9 +723,13 @@ fn assemble_report(
     }
     let exec_failures: u64 = snap.models.values().map(|m| m.exec_failures).sum();
     let probes: u64 = snap.models.values().map(|m| m.quarantine_probes).sum();
+    // A wire reset can double-execute a request whose first reply died
+    // with its socket, so the service-counter clause only binds on
+    // reset-free runs; lost/duplicate always bind.
+    let counters_reconcile = snap.total_completed() + snap.total_failed() == stats.accepted;
     let accounting_ok = stats.lost_replies == 0
         && stats.duplicate_replies == 0
-        && snap.total_completed() + snap.total_failed() == stats.accepted;
+        && (counters_reconcile || stats.resets > 0);
     let shard_completed: u64 = snap.shards.iter().map(|s| s.completed).sum();
     let shard_failed: u64 = snap.shards.iter().map(|s| s.failed).sum();
     let shard_restarts: u64 = snap.shards.iter().map(|s| s.restarts).sum();
@@ -493,6 +769,8 @@ fn assemble_report(
         bit_exact_ok: stats.mismatches == 0,
         shard_rows: snap.shards.clone(),
         shard_accounting_ok,
+        wire: opts.wire.then_some(snap.wire),
+        wire_resets: stats.resets,
     }
 }
 
@@ -642,6 +920,7 @@ impl ChaosReport {
             .field("p99_us_faulted_model", Json::Int(self.p99_us_faulted_model as i64))
             .field("p99_us_healthy_models", Json::Int(self.p99_us_healthy_models as i64))
             .field("wall_seconds", self.wall_seconds)
+            .field("wire", wire_json(self.wire.as_ref(), self.wire_resets))
             .field("accounting_ok", self.accounting_ok)
             .field("shard_accounting_ok", self.shard_accounting_ok)
             .field("bit_exact_ok", self.bit_exact_ok)
@@ -665,6 +944,7 @@ mod tests {
             seed: 11,
             submitters: 2,
             shards: 2,
+            wire: false,
             policy: BatchPolicy {
                 max_batch: 4,
                 max_delay: Duration::from_micros(200),
@@ -729,6 +1009,80 @@ mod tests {
             "\"shards_detail\"",
             "\"shard_accounting_ok\"",
         ] {
+            assert!(json.contains(field), "missing {field} in {json}");
+        }
+    }
+
+    /// The same micro chaos families driven over the wire front-end:
+    /// submitters are real UDS clients, so NaN poisoning must come
+    /// back as `BadFrame` frames, quarantine/abort/exec-failure as
+    /// typed response frames — and every invariant (including the
+    /// deterministic poisoned-request count) must survive the socket
+    /// boundary, with the wire counters reconciling on top.
+    #[test]
+    fn micro_wire_chaos_run_holds_every_invariant() {
+        let opts = ChaosOptions {
+            clients: 90,
+            requests_per_client: 2,
+            seed: 11,
+            submitters: 2,
+            shards: 2,
+            wire: true,
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_micros(200),
+                queue_capacity: 128,
+                request_budget: Some(Duration::from_secs(5)),
+                ..BatchPolicy::default()
+            },
+            breaker: BreakerPolicy {
+                failure_threshold: 2,
+                cooldown: Duration::from_millis(1),
+            },
+            plan: FaultPlan {
+                seed: 11,
+                panic_model: "emg-q7".to_string(),
+                panic_from: 2,
+                panic_until: 4,
+                nan_prob: 0.2,
+                kill_at_iters: vec![0],
+                ..FaultPlan::default()
+            },
+        };
+        let report = run(&opts).unwrap();
+        report.check().unwrap();
+        // Cooperative clients over a local UDS: nothing should have
+        // reset, so the deterministic poison schedule must match
+        // exactly, just as it does in-process.
+        assert_eq!(report.wire_resets, 0, "cooperative wire run reset a connection");
+        let models = build_models(opts.seed, 40).unwrap();
+        let expected_poisoned: u64 = (0..opts.clients)
+            .filter(|c| models[c % models.len()].plan.is_float())
+            .map(|c| {
+                (0..opts.requests_per_client)
+                    .filter(|&r| opts.plan.poison_input(c as u64, r as u64))
+                    .count() as u64
+            })
+            .sum();
+        assert!(expected_poisoned > 0, "seed 11 poisons at least one request");
+        assert_eq!(report.rejected_bad_input, expected_poisoned);
+        assert_eq!(report.lost_replies, 0);
+        assert_eq!(report.duplicate_replies, 0);
+        assert_eq!(report.mismatches, 0);
+        assert!(report.quarantine_trips > 0);
+        assert!(report.quarantine_recoveries > 0);
+        assert!(report.watchdog_restarts >= 1);
+        let w = report.wire.expect("wire run reports counters");
+        assert_eq!(w.connections_opened, w.connections_closed, "connection leak");
+        assert!(w.connections_opened >= opts.submitters as u64);
+        // Poisoned frames decode fine (NaN is representable on the
+        // wire by design) and are rejected at submit — they are not
+        // protocol violations, so the bad_frames counter stays 0.
+        assert_eq!(w.bad_frames, 0);
+        assert!(w.frames_rx >= report.accepted + report.rejected_bad_input);
+        assert!(w.frames_tx > 0 && w.bytes_rx > 0 && w.bytes_tx > 0);
+        let json = report.to_json().to_pretty();
+        for field in ["\"wire\"", "\"frames_rx\"", "\"bad_frames\"", "\"resets\""] {
             assert!(json.contains(field), "missing {field} in {json}");
         }
     }

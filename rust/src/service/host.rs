@@ -87,7 +87,7 @@ use super::{BatchPolicy, InferError, SubmitError};
 /// panic — every writer either completes a whole update or leaves data
 /// that the next batch overwrites — so a poisoned lock must not
 /// cascade a dead batch into a dead service.
-fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 

@@ -24,6 +24,7 @@
 
 use std::collections::HashMap;
 use std::ops::Range;
+use std::path::{Path, PathBuf};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -37,10 +38,12 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::faults::FaultPlan;
+use super::frame::{RequestFrame, ResponseBody};
 use super::host::{InferenceService, Output};
-use super::metrics::{LatencyHistogram, MetricsSnapshot, ShardMetrics};
+use super::metrics::{LatencyHistogram, MetricsSnapshot, ShardMetrics, WireCounters};
 use super::registry::ModelRegistry;
 use super::shard::ShardPolicy;
+use super::wire::{temp_uds_path, WireClient, WireConfig, WireError, WireServer};
 use super::{BatchPolicy, SubmitError};
 
 /// Load-harness configuration. `Default` is the full CI run (125k
@@ -60,6 +63,11 @@ pub struct LoadOptions {
     /// ([`ShardPolicy::new`]`(shards)`); `1` is the single-dispatcher
     /// service.
     pub shards: usize,
+    /// Drive the run over a real Unix-domain socket: a
+    /// [`WireServer`] fronts the service and every client speaks the
+    /// length-prefixed frame protocol instead of calling `submit()`
+    /// in-process. Same request schedule, same bit-exact checks.
+    pub wire: bool,
     /// Scheduler policy for the run.
     pub policy: BatchPolicy,
 }
@@ -72,6 +80,7 @@ impl Default for LoadOptions {
             seed: 7,
             submitters: 4,
             shards: 1,
+            wire: false,
             policy: BatchPolicy {
                 max_batch: 32,
                 max_delay: Duration::from_millis(1),
@@ -182,6 +191,16 @@ pub struct LoadReport {
     pub shard_rows: Vec<ShardMetrics>,
     /// The hot+cold head-of-line probe (see [`HeadOfLineReport`]).
     pub head_of_line: HeadOfLineReport,
+    /// Wire counters from the [`WireServer`] when the run went over a
+    /// socket (`None` for in-process runs).
+    pub wire: Option<WireCounters>,
+    /// Connection resets the wire clients survived (reconnect +
+    /// retry). `0` for in-process runs and for any healthy wire run;
+    /// when non-zero, the service-side `completed == accepted` check
+    /// is skipped (a reset can duplicate an execution whose first
+    /// reply died with its socket) and the client-side ledger
+    /// (`answered + gave_up == issued`) is the accounting gate.
+    pub wire_resets: u64,
 }
 
 /// Result of the head-of-line decoupling probe: one *hot* model whose
@@ -334,6 +353,22 @@ fn finish_model(
     })
 }
 
+/// Build the three-model wearable registry the harnesses replay —
+/// `emg-q7` (packed Q7), `ecg-q32` (Q32), `eeg-f32` (f32) — for a
+/// standalone wire server (`service serve`): the same seeded compiled
+/// plans behind a default circuit breaker, plus
+/// `(id, input_width, output_width)` rows for the startup banner.
+pub fn demo_registry(seed: u64) -> Result<(Arc<ModelRegistry>, Vec<(String, usize, usize)>)> {
+    let models = build_models(seed, 4)?;
+    let registry = Arc::new(ModelRegistry::new());
+    let mut rows = Vec::with_capacity(models.len());
+    for m in &models {
+        registry.register_plan(m.id, m.plan.clone())?;
+        rows.push((m.id.to_string(), m.n_in, m.n_out));
+    }
+    Ok((registry, rows))
+}
+
 /// The deterministic request schedule: which pool sample client `c`'s
 /// `r`-th request submits (a Weyl-style mix so neighboring clients
 /// don't walk the pool in lockstep).
@@ -413,6 +448,15 @@ struct SubmitterStats {
     /// Accepted requests whose reply never arrived (the terminal-reply
     /// invariant is broken if this is ever non-zero).
     lost: u64,
+    /// Terminal replies received (successful or not). Together with
+    /// `gave_up` and `lost` this closes the client-side ledger:
+    /// `answered + gave_up + lost == issued` — a check that cannot be
+    /// satisfied by the service-side counters alone, so dropped wire
+    /// requests can never pass silently.
+    answered: u64,
+    /// Wire mode only: connection resets survived by reconnecting and
+    /// retrying the in-flight request.
+    resets: u64,
 }
 
 /// One submitter thread's work: submit every request of its client
@@ -488,6 +532,160 @@ fn submitter(
         }
     }
     stats.lost += (expected_replies - received) as u64;
+    stats.answered = received as u64;
+    stats
+}
+
+/// Connect to the harness's Unix socket, with a couple of short
+/// retries to ride out accept-queue races at run start. `None` means
+/// the server is genuinely unreachable. Shared with the chaos
+/// harness's wire mode.
+pub(super) fn connect_with_retry(path: &Path) -> Option<WireClient> {
+    for _ in 0..3 {
+        if let Ok(client) = WireClient::connect_uds(path) {
+            let _ = client
+                .set_timeouts(Some(Duration::from_secs(120)), Some(Duration::from_secs(30)));
+            return Some(client);
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    None
+}
+
+/// The wire-mode submitter: the same client range and request
+/// schedule as [`submitter`], but every request travels the socket as
+/// a length-prefixed frame and every reply comes back as a response
+/// frame. Lockstep per request (send one, wait for its reply), with
+/// the same capped jittered backoff on `Shed` — plus reconnect-and-
+/// retry on connection resets, counted in `resets` so the run can
+/// refuse to trust service-side counters that a reset may have
+/// inflated.
+fn wire_submitter(
+    path: &Path,
+    models: &[LoadModel],
+    clients: Range<usize>,
+    requests_per_client: usize,
+) -> SubmitterStats {
+    let mut stats = SubmitterStats {
+        gave_up: vec![0; models.len()],
+        ..SubmitterStats::default()
+    };
+    let mut conn: Option<WireClient> = None;
+    'clients: for c in clients {
+        let mi = c % models.len();
+        let m = &models[mi];
+        for r in 0..requests_per_client {
+            let pi = pool_index(c, r, m.pool_samples);
+            let req = RequestFrame {
+                // Unique per client: requests_per_client is far below
+                // 2^20, so client and request index cannot collide.
+                id: ((c as u64) << 20) | r as u64,
+                tenant: c as u64,
+                model: m.id.to_string(),
+                input: m.pool_f[pi * m.n_in..(pi + 1) * m.n_in].to_vec(),
+            };
+            let mut attempt = 0u32;
+            loop {
+                if conn.is_none() {
+                    match connect_with_retry(path) {
+                        Some(client) => conn = Some(client),
+                        None => {
+                            // Server unreachable: every request this
+                            // client still owes (including this one) is
+                            // a counted give-up, never a silent drop.
+                            stats.gave_up[mi] += (requests_per_client - r) as u64;
+                            continue 'clients;
+                        }
+                    }
+                }
+                let client = conn.as_mut().expect("connection just ensured");
+                match client.call(&req) {
+                    Ok(resp) if resp.id == req.id => match resp.body {
+                        ResponseBody::Ok { output, .. } => {
+                            stats.answered += 1;
+                            let ok = match &output {
+                                Output::F32(v) => {
+                                    v[..] == m.expected_f[pi * m.n_out..(pi + 1) * m.n_out]
+                                }
+                                Output::Q(v) => {
+                                    v[..] == m.expected_q[pi * m.n_out..(pi + 1) * m.n_out]
+                                }
+                            };
+                            if !ok {
+                                stats.mismatches += 1;
+                            }
+                            break;
+                        }
+                        ResponseBody::Shed { .. } | ResponseBody::Quarantined { .. } => {
+                            if attempt >= MAX_SHED_RETRIES {
+                                stats.gave_up[mi] += 1;
+                                break;
+                            }
+                            stats.retries += 1;
+                            std::thread::sleep(shed_backoff(attempt, c as u64));
+                            attempt += 1;
+                        }
+                        ResponseBody::Timeout { .. }
+                        | ResponseBody::ExecFailed { .. }
+                        | ResponseBody::Aborted { .. } => {
+                            // Terminal, but not the bit-exact answer a
+                            // fault-free run owes — counted as answered
+                            // (the ledger closes) and as a mismatch
+                            // (the run fails loudly).
+                            stats.answered += 1;
+                            stats.mismatches += 1;
+                            break;
+                        }
+                        ResponseBody::BadFrame { detail } => {
+                            panic!("load wire request rejected as bad frame: {detail}")
+                        }
+                    },
+                    Ok(_) => {
+                        // A reply for an id we are not waiting on would
+                        // break the lockstep protocol — treat the
+                        // stream as desynced: count it against
+                        // exactness and retry on a fresh connection.
+                        stats.mismatches += 1;
+                        conn = None;
+                        stats.resets += 1;
+                        if attempt >= MAX_SHED_RETRIES {
+                            stats.gave_up[mi] += 1;
+                            break;
+                        }
+                        attempt += 1;
+                    }
+                    Err(WireError::Io(e))
+                        if matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) =>
+                    {
+                        // The reply never arrived inside the client
+                        // budget: a lost request, the invariant the
+                        // run gates on.
+                        stats.lost += 1;
+                        break;
+                    }
+                    Err(_) => {
+                        // Connection reset mid-request: the service may
+                        // or may not have executed it (its reply died
+                        // with the socket). Reconnect and retry —
+                        // counted, so accounting never double-trusts
+                        // the service's completed counter.
+                        conn = None;
+                        stats.resets += 1;
+                        if attempt >= MAX_SHED_RETRIES {
+                            stats.gave_up[mi] += 1;
+                            break;
+                        }
+                        stats.retries += 1;
+                        std::thread::sleep(shed_backoff(attempt, c as u64));
+                        attempt += 1;
+                    }
+                }
+            }
+        }
+    }
     stats
 }
 
@@ -653,12 +851,30 @@ pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
     for m in &models {
         registry.register_plan(m.id, m.plan.clone())?;
     }
-    let svc = InferenceService::start_sharded(
+    let svc = Arc::new(InferenceService::start_sharded(
         registry,
         &opts.policy,
         &ShardPolicy::new(opts.shards),
         None,
-    );
+    ));
+
+    let mut wire_path: Option<PathBuf> = None;
+    let wire_server = if opts.wire {
+        let cfg = WireConfig {
+            // Generous deadlines: harness clients are cooperative, and
+            // the reply-wait bound lives client-side.
+            read_timeout: Some(Duration::from_secs(150)),
+            write_timeout: Some(Duration::from_secs(30)),
+            ..WireConfig::default()
+        };
+        let mut server = WireServer::start(Arc::clone(&svc), &cfg);
+        let path = temp_uds_path("load");
+        server.listen_uds(&path).context("binding load-harness UDS")?;
+        wire_path = Some(path);
+        Some(server)
+    } else {
+        None
+    };
 
     let submitters = opts.submitters.clamp(1, opts.clients);
     let t0 = Instant::now();
@@ -671,10 +887,14 @@ pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
             let len = base + usize::from(i < extra);
             let range = start..start + len;
             start += len;
-            let svc_ref = &svc;
+            let svc_ref: &InferenceService = &svc;
             let models_ref = &models;
             let rpc = opts.requests_per_client;
-            handles.push(s.spawn(move || submitter(svc_ref, models_ref, range, rpc)));
+            let path_ref = wire_path.as_deref();
+            handles.push(s.spawn(move || match path_ref {
+                Some(p) => wire_submitter(p, models_ref, range, rpc),
+                None => submitter(svc_ref, models_ref, range, rpc),
+            }));
         }
         handles
             .into_iter()
@@ -685,13 +905,27 @@ pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
             .collect()
     });
     let wall_seconds = t0.elapsed().as_secs_f64();
-    // shutdown() joins the dispatcher, so the returned snapshot is
-    // guaranteed to account for every executed batch.
-    let snap = svc.shutdown();
+    // Wire teardown first (it half-closes connections and aborts
+    // anything still in flight), then the service; shutdown() joins
+    // the dispatchers, so the snapshot accounts for every batch.
+    let wire_counters = wire_server.map(|server| {
+        let (svc_back, counters) = server.shutdown();
+        drop(svc_back);
+        counters
+    });
+    let Ok(svc) = Arc::try_unwrap(svc) else {
+        anyhow::bail!("service Arc still shared after wire shutdown")
+    };
+    let mut snap = svc.shutdown();
+    if let Some(c) = wire_counters {
+        snap.wire = c;
+    }
 
     let mismatches: u64 = per_thread.iter().map(|s| s.mismatches).sum();
     let retries_total: u64 = per_thread.iter().map(|s| s.retries).sum();
     let lost_total: u64 = per_thread.iter().map(|s| s.lost).sum();
+    let answered_total: u64 = per_thread.iter().map(|s| s.answered).sum();
+    let resets_total: u64 = per_thread.iter().map(|s| s.resets).sum();
     let mut gave_up_by_model = vec![0u64; models.len()];
     for s in &per_thread {
         for (dst, g) in gave_up_by_model.iter_mut().zip(&s.gave_up) {
@@ -705,11 +939,22 @@ pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
         "{mismatches} of {accepted} coalesced replies diverged from serial per-request execution"
     );
     ensure!(lost_total == 0, "{lost_total} accepted requests never received a reply");
+    // The client-side ledger must close on its own numbers: every
+    // issued request was answered or became a counted give-up. The
+    // service-side counters cannot vouch for this — a wire request
+    // dropped between socket and submit would leave them consistent —
+    // so the accounting gate lives on the client's side of the socket.
     ensure!(
-        snap.total_completed() == accepted,
-        "completed {} != accepted {accepted}",
-        snap.total_completed()
+        answered_total + gave_up_total == total as u64,
+        "client ledger does not close: answered {answered_total} + gave_up {gave_up_total} != issued {total}"
     );
+    if resets_total == 0 {
+        ensure!(
+            snap.total_completed() == accepted,
+            "completed {} != accepted {accepted}",
+            snap.total_completed()
+        );
+    }
 
     // Per-shard accounting must reconcile with the aggregate — the
     // same invariant the chaos harness gates, checked here too.
@@ -738,9 +983,30 @@ pub fn run(opts: &LoadOptions) -> Result<LoadReport> {
         tenants: snap.tenants.len(),
         bit_exact: true,
         rows: rows_from_snapshot(&models, &snap, &gave_up_by_model),
+        wire: opts.wire.then_some(snap.wire),
+        wire_resets: resets_total,
         shard_rows: snap.shards,
         head_of_line,
     })
+}
+
+/// Serialize the wire-counter block of a BENCH document — shared by
+/// the load and chaos artifacts (`wire` objects in both). Always
+/// present so asserts can key on `enabled` instead of probing for
+/// missing fields.
+pub(super) fn wire_json(wire: Option<&WireCounters>, resets: u64) -> Json {
+    let c = wire.copied().unwrap_or_default();
+    Json::obj()
+        .field("enabled", wire.is_some())
+        .field("connections_opened", Json::Int(c.connections_opened as i64))
+        .field("connections_closed", Json::Int(c.connections_closed as i64))
+        .field("frames_rx", Json::Int(c.frames_rx as i64))
+        .field("frames_tx", Json::Int(c.frames_tx as i64))
+        .field("bad_frames", Json::Int(c.bad_frames as i64))
+        .field("bytes_rx", Json::Int(c.bytes_rx as i64))
+        .field("bytes_tx", Json::Int(c.bytes_tx as i64))
+        .field("resets", Json::Int(resets as i64))
+        .build()
 }
 
 /// Serialize per-shard rollup rows — shared by the load and chaos
@@ -810,6 +1076,7 @@ impl LoadReport {
             .field("gave_up_total", Json::Int(self.gave_up_total as i64))
             .field("tenants", self.tenants)
             .field("bit_exact", self.bit_exact)
+            .field("wire", wire_json(self.wire.as_ref(), self.wire_resets))
             .field(
                 "models",
                 Json::Arr(
@@ -888,6 +1155,7 @@ mod tests {
             seed: 3,
             submitters: 2,
             shards: 2,
+            wire: false,
             policy: BatchPolicy {
                 max_batch: 4,
                 max_delay: Duration::from_micros(500),
@@ -928,6 +1196,99 @@ mod tests {
         ] {
             assert!(json.contains(field), "missing {field} in {json}");
         }
+    }
+
+    #[test]
+    fn tiny_wire_load_run_is_bit_exact_with_reconciled_counters() {
+        let opts = LoadOptions {
+            clients: 9,
+            requests_per_client: 2,
+            seed: 5,
+            submitters: 3,
+            shards: 2,
+            wire: true,
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_micros(500),
+                queue_capacity: 64,
+                ..BatchPolicy::default()
+            },
+        };
+        let report = run(&opts).unwrap();
+        assert!(report.bit_exact);
+        assert_eq!(report.gave_up_total, 0);
+        assert_eq!(report.wire_resets, 0);
+        let wire = report.wire.expect("wire counters present in a --wire run");
+        // Every connection fully torn down, every request's frame
+        // counted: rx ≥ issued (sheds retry), one terminal tx per
+        // request, zero codec-level rejects from cooperative clients.
+        assert_eq!(wire.connections_opened, wire.connections_closed);
+        assert!(wire.connections_opened >= 1);
+        assert!(wire.frames_rx >= 18, "frames_rx {}", wire.frames_rx);
+        assert!(wire.frames_tx >= 18, "frames_tx {}", wire.frames_tx);
+        assert_eq!(wire.bad_frames, 0);
+        assert!(wire.bytes_rx > 0 && wire.bytes_tx > 0);
+        let json = report.to_json().to_pretty();
+        for field in ["\"wire\"", "\"frames_rx\"", "\"bad_frames\"", "\"resets\""] {
+            assert!(json.contains(field), "missing {field} in {json}");
+        }
+    }
+
+    #[test]
+    fn wire_submitter_ledger_closes_across_resets_and_server_loss() {
+        // The satellite invariant: when wire retries hit connection
+        // resets (here: the server shuts down mid-run and its socket
+        // file disappears), answered + gave_up must still equal the
+        // requests issued — no silent drops.
+        let models = build_models(11, 6).unwrap();
+        let registry = Arc::new(ModelRegistry::new());
+        for m in &models {
+            registry.register_plan(m.id, m.plan.clone()).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_micros(300),
+            queue_capacity: 64,
+            ..BatchPolicy::default()
+        };
+        let svc = Arc::new(InferenceService::start_sharded(
+            registry,
+            &policy,
+            &ShardPolicy::new(1),
+            None,
+        ));
+        let mut server = WireServer::start(Arc::clone(&svc), &WireConfig::default());
+        let path = temp_uds_path("load-reset");
+        server.listen_uds(&path).unwrap();
+
+        let requests_per_client = 80;
+        let clients = 0..3usize;
+        let issued = (clients.len() * requests_per_client) as u64;
+        let stats = std::thread::scope(|s| {
+            let path_ref = path.as_path();
+            let models_ref = &models;
+            let worker =
+                s.spawn(move || wire_submitter(path_ref, models_ref, clients, requests_per_client));
+            // Kill the wire front-end mid-run: in-flight requests are
+            // answered `Aborted`, open sockets reset, and the socket
+            // file is unlinked so reconnects fail.
+            std::thread::sleep(Duration::from_millis(30));
+            let (svc_back, _) = server.shutdown();
+            drop(svc_back);
+            worker.join().expect("wire submitter thread")
+        });
+        let gave_up: u64 = stats.gave_up.iter().sum();
+        assert_eq!(
+            stats.answered + gave_up + stats.lost,
+            issued,
+            "ledger must close: answered {} + gave_up {gave_up} + lost {} != issued {issued}",
+            stats.answered,
+            stats.lost
+        );
+        assert_eq!(stats.lost, 0, "a reset must become a retry or give-up, never a lost reply");
+        assert!(gave_up > 0, "the mid-run shutdown must strand some requests as give-ups");
+        let svc = Arc::try_unwrap(svc).ok().unwrap();
+        svc.shutdown();
     }
 
     #[test]

@@ -270,6 +270,32 @@ impl ShardMetrics {
     }
 }
 
+/// Socket-level counters from the wire front-end
+/// ([`super::wire::WireServer`]). Kept as plain data here — the server
+/// owns the live atomics and folds a consistent copy into the
+/// snapshot it hands back ([`super::wire::WireServer::shutdown_all`]);
+/// services running without a wire front-end report all zeros.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireCounters {
+    /// Connections accepted (UDS + TCP).
+    pub connections_opened: u64,
+    /// Connections fully torn down (reader, forwarder, and writer all
+    /// exited). Equals `connections_opened` once the server is idle or
+    /// shut down.
+    pub connections_closed: u64,
+    /// Well-formed request frames decoded.
+    pub frames_rx: u64,
+    /// Response frames written to peers.
+    pub frames_tx: u64,
+    /// Frames rejected at the codec layer (bad magic/version/kind/
+    /// dtype/tag, payload mismatch, oversized length prefix).
+    pub bad_frames: u64,
+    /// Bytes read off sockets (length prefixes + bodies).
+    pub bytes_rx: u64,
+    /// Bytes written to sockets.
+    pub bytes_tx: u64,
+}
+
 /// A consistent copy of every counter the service keeps, taken under
 /// the one metrics lock. Doubles as the service's internal store.
 #[derive(Debug, Clone, Default)]
@@ -293,6 +319,10 @@ pub struct MetricsSnapshot {
     /// heartbeat the watchdog layer surfaces (monotonically increasing
     /// while dispatchers are alive; manual-mode services never beat).
     pub dispatcher_heartbeats: u64,
+    /// Socket-level counters when a [`super::wire::WireServer`] fronts
+    /// this service (all zeros otherwise — the in-process `submit`
+    /// path never touches a socket).
+    pub wire: WireCounters,
 }
 
 impl MetricsSnapshot {

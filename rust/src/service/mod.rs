@@ -65,25 +65,42 @@
 //!   drives the [`chaos`] harness behind the `service chaos` CLI,
 //!   which writes `BENCH_chaos.json` and is asserted in CI.
 //!
+//! Beyond in-process channels, the service also speaks real sockets:
+//!
+//! * **Wire front-end** — [`frame`] defines a length-prefixed binary
+//!   protocol (magic/version/request-id/model-tag/tenant/dtype/payload
+//!   with typed response frames), and [`wire::WireServer`] accepts
+//!   Unix-domain-socket and TCP connections, feeding every decoded
+//!   request through the same [`submit`] path so batching, sharding,
+//!   and breaker semantics are inherited unchanged. Per-connection
+//!   frame-size/in-flight limits and read/write deadlines bound what
+//!   an adversarial peer can cost; wire counters land in
+//!   [`MetricsSnapshot::wire`], and `service {serve,load,chaos}`
+//!   expose it on the CLI (`--wire` drives the harnesses over UDS).
+//!
 //! [`submit`]: InferenceService::submit
 
 pub mod chaos;
 pub mod faults;
+pub mod frame;
 pub mod host;
 pub mod load;
 pub mod metrics;
 pub mod queue;
 pub mod registry;
 pub mod shard;
+pub mod wire;
 
 pub use faults::FaultPlan;
+pub use frame::{FrameError, RequestFrame, ResponseBody, ResponseFrame, WireDtype};
 pub use host::{InferenceService, Output, Reply};
 pub use metrics::{
-    LatencyHistogram, MetricsSnapshot, ModelMetrics, ShardMetrics, TenantCounters,
+    LatencyHistogram, MetricsSnapshot, ModelMetrics, ShardMetrics, TenantCounters, WireCounters,
 };
 pub use queue::{AdmissionController, Batch, FlushReason, MicroBatchQueue};
 pub use registry::{Admission, BreakerEvent, BreakerPolicy, HealthState, ModelRegistry, ServiceModel};
 pub use shard::{ShardPolicy, MAX_SHARDS};
+pub use wire::{WireClient, WireConfig, WireError, WireServer};
 
 use std::time::Duration;
 

@@ -1,0 +1,749 @@
+//! Socket front-end for the inference service: a [`WireServer`] that
+//! accepts Unix-domain-socket and TCP connections speaking the
+//! length-prefixed frame protocol of [`super::frame`], and a blocking
+//! [`WireClient`] used by the load/chaos harnesses and the integration
+//! tests.
+//!
+//! The server adds *no* scheduling of its own — every decoded request
+//! is handed to [`InferenceService::submit`], so batching, sharding,
+//! quarantine, and watchdog semantics are inherited from the host
+//! layer, not reimplemented. Per connection there are three threads:
+//!
+//! * **reader** — owns the socket's read half; reads one
+//!   length-prefixed frame at a time (partial reads are fine — a
+//!   byte-at-a-time peer still parses), enforces the frame-size cap
+//!   from the 4-byte prefix *before* buffering a body, enforces the
+//!   per-connection in-flight window, and submits. Synchronous
+//!   rejections ([`SubmitError`]) become immediate `Shed` /
+//!   `Quarantined` / `BadFrame` response frames.
+//! * **forwarder** — drains the connection's reply channel from the
+//!   service, maps service tickets back to wire request ids, and
+//!   encodes terminal response frames.
+//! * **writer** — the only thread that writes the socket; serializes
+//!   all response frames through one bounded channel so a stalled peer
+//!   (write backpressure) blocks the pipeline into the socket's send
+//!   buffer instead of growing server memory, until the write deadline
+//!   closes the connection.
+//!
+//! Lock and lifecycle invariants (pinned by `rust/tests/wire.rs`):
+//!
+//! * The ticket→request-id map's mutex is held *across* submit+insert,
+//!   so the forwarder can never observe a ticket before its mapping —
+//!   the service never takes wire locks, so no cycle exists.
+//! * Every accepted request id gets **at most one** terminal frame:
+//!   the mapping is removed on first reply, and the host guarantees
+//!   exactly one terminal [`Reply`] per ticket.
+//! * A malformed frame gets a `BadFrame` response, then the connection
+//!   stops reading — but already-submitted requests still receive
+//!   their terminal frames before the socket closes.
+//! * [`WireServer::shutdown`] stops accepting, half-closes every
+//!   connection's read side, then fails all pending requests so every
+//!   in-flight request is answered `Aborted` before the sockets close.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::frame::{
+    self, FrameError, RequestFrame, ResponseBody, ResponseFrame, DEFAULT_MAX_FRAME, LEN_PREFIX,
+};
+use super::host::{lock_recover, InferenceService, Reply};
+use super::metrics::{MetricsSnapshot, WireCounters};
+use super::{InferError, SubmitError};
+
+/// Per-connection limits and deadlines for a [`WireServer`].
+#[derive(Debug, Clone)]
+pub struct WireConfig {
+    /// Maximum frame body size a peer may declare; a larger length
+    /// prefix (e.g. `u32::MAX`) is rejected from the prefix alone,
+    /// without allocating.
+    pub max_frame: usize,
+    /// Maximum requests a single connection may have in flight
+    /// (submitted, no terminal reply yet); further requests are
+    /// answered `Shed` without entering the service.
+    pub max_in_flight: usize,
+    /// Read deadline: a connection idle (mid-frame or between frames)
+    /// longer than this is closed. `None` waits forever.
+    pub read_timeout: Option<Duration>,
+    /// Write deadline: a peer that stops reading responses for this
+    /// long has its connection closed (bounding server memory).
+    pub write_timeout: Option<Duration>,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        Self {
+            max_frame: DEFAULT_MAX_FRAME,
+            max_in_flight: 256,
+            read_timeout: Some(Duration::from_secs(30)),
+            write_timeout: Some(Duration::from_secs(10)),
+        }
+    }
+}
+
+impl WireConfig {
+    /// The config with its invariants enforced (`max_in_flight ≥ 1`,
+    /// `max_frame` large enough for any header + tag).
+    pub fn normalized(&self) -> Self {
+        Self {
+            max_frame: self.max_frame.max(frame::REQUEST_HEADER + frame::MAX_TAG),
+            max_in_flight: self.max_in_flight.max(1),
+            read_timeout: self.read_timeout,
+            write_timeout: self.write_timeout,
+        }
+    }
+}
+
+/// A wire-layer failure: transport IO or frame decoding.
+#[derive(Debug)]
+pub enum WireError {
+    /// The underlying socket failed (includes deadline expiry).
+    Io(io::Error),
+    /// The peer sent bytes that do not decode as a frame.
+    Frame(FrameError),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire io error: {e}"),
+            WireError::Frame(e) => write!(f, "wire frame error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+impl From<FrameError> for WireError {
+    fn from(e: FrameError) -> Self {
+        WireError::Frame(e)
+    }
+}
+
+/// A process-unique Unix-socket path under the system temp directory —
+/// pid plus a monotonic counter, so parallel tests and harness runs
+/// never collide.
+pub fn temp_uds_path(tag: &str) -> PathBuf {
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("fann-wire-{}-{tag}-{n}.sock", std::process::id()))
+}
+
+/// One accepted transport, UDS or TCP, behind a uniform blocking
+/// `Read`/`Write` face.
+enum WireStream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl WireStream {
+    fn try_clone(&self) -> io::Result<WireStream> {
+        Ok(match self {
+            WireStream::Tcp(s) => WireStream::Tcp(s.try_clone()?),
+            WireStream::Uds(s) => WireStream::Uds(s.try_clone()?),
+        })
+    }
+
+    fn shutdown(&self, how: Shutdown) -> io::Result<()> {
+        match self {
+            WireStream::Tcp(s) => s.shutdown(how),
+            WireStream::Uds(s) => s.shutdown(how),
+        }
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            WireStream::Tcp(s) => s.set_read_timeout(t),
+            WireStream::Uds(s) => s.set_read_timeout(t),
+        }
+    }
+
+    fn set_write_timeout(&self, t: Option<Duration>) -> io::Result<()> {
+        match self {
+            WireStream::Tcp(s) => s.set_write_timeout(t),
+            WireStream::Uds(s) => s.set_write_timeout(t),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            WireStream::Tcp(s) => s.set_nonblocking(nb),
+            WireStream::Uds(s) => s.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Read for WireStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            WireStream::Tcp(s) => s.read(buf),
+            WireStream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for WireStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            WireStream::Tcp(s) => s.write(buf),
+            WireStream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            WireStream::Tcp(s) => s.flush(),
+            WireStream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+enum WireListener {
+    Tcp(TcpListener),
+    Uds(UnixListener),
+}
+
+impl WireListener {
+    fn accept(&self) -> io::Result<WireStream> {
+        Ok(match self {
+            WireListener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                WireStream::Tcp(s)
+            }
+            WireListener::Uds(l) => {
+                let (s, _) = l.accept()?;
+                WireStream::Uds(s)
+            }
+        })
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            WireListener::Tcp(l) => l.set_nonblocking(nb),
+            WireListener::Uds(l) => l.set_nonblocking(nb),
+        }
+    }
+}
+
+/// Atomic wire counters, snapshotted into
+/// [`WireCounters`] for `MetricsSnapshot::wire`.
+#[derive(Default)]
+struct WireStats {
+    connections_opened: AtomicU64,
+    connections_closed: AtomicU64,
+    frames_rx: AtomicU64,
+    frames_tx: AtomicU64,
+    bad_frames: AtomicU64,
+    bytes_rx: AtomicU64,
+    bytes_tx: AtomicU64,
+}
+
+impl WireStats {
+    fn snapshot(&self) -> WireCounters {
+        WireCounters {
+            connections_opened: self.connections_opened.load(Ordering::Relaxed),
+            connections_closed: self.connections_closed.load(Ordering::Relaxed),
+            frames_rx: self.frames_rx.load(Ordering::Relaxed),
+            frames_tx: self.frames_tx.load(Ordering::Relaxed),
+            bad_frames: self.bad_frames.load(Ordering::Relaxed),
+            bytes_rx: self.bytes_rx.load(Ordering::Relaxed),
+            bytes_tx: self.bytes_tx.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Ticket → wire request id for one connection's in-flight requests.
+type Pending = Arc<Mutex<HashMap<u64, u64>>>;
+
+struct ConnTable {
+    next_id: u64,
+    /// A shutdown handle (socket clone) per live connection.
+    live: HashMap<u64, WireStream>,
+    /// Join handles for every connection thread ever spawned.
+    joins: Vec<JoinHandle<()>>,
+}
+
+struct Shared {
+    cfg: WireConfig,
+    stop: AtomicBool,
+    stats: WireStats,
+    conns: Mutex<ConnTable>,
+}
+
+/// The socket front-end: accept loops for any number of UDS/TCP
+/// listeners, three threads per connection, and the wire counters.
+///
+/// Unix-domain sockets are first-class (the load and chaos harnesses
+/// run over UDS); TCP shares every code path above the transport.
+pub struct WireServer {
+    shared: Arc<Shared>,
+    svc: Arc<InferenceService>,
+    accept_handles: Vec<JoinHandle<()>>,
+    uds_paths: Vec<PathBuf>,
+}
+
+impl WireServer {
+    /// A server front-ending `svc` with no listeners yet — add them
+    /// with [`listen_uds`](Self::listen_uds) /
+    /// [`listen_tcp`](Self::listen_tcp).
+    pub fn start(svc: Arc<InferenceService>, cfg: &WireConfig) -> Self {
+        Self {
+            shared: Arc::new(Shared {
+                cfg: cfg.normalized(),
+                stop: AtomicBool::new(false),
+                stats: WireStats::default(),
+                conns: Mutex::new(ConnTable {
+                    next_id: 0,
+                    live: HashMap::new(),
+                    joins: Vec::new(),
+                }),
+            }),
+            svc,
+            accept_handles: Vec::new(),
+            uds_paths: Vec::new(),
+        }
+    }
+
+    /// Bind and serve a Unix-domain socket at `path` (an existing
+    /// socket file there is unlinked first; the file is unlinked again
+    /// at shutdown).
+    pub fn listen_uds(&mut self, path: &Path) -> io::Result<()> {
+        let _ = std::fs::remove_file(path);
+        let listener = UnixListener::bind(path)?;
+        self.uds_paths.push(path.to_path_buf());
+        self.spawn_accept(WireListener::Uds(listener));
+        Ok(())
+    }
+
+    /// Bind and serve a TCP listener; returns the bound address (so
+    /// `127.0.0.1:0` callers learn their ephemeral port).
+    pub fn listen_tcp<A: ToSocketAddrs>(&mut self, addr: A) -> io::Result<SocketAddr> {
+        let listener = TcpListener::bind(addr)?;
+        let bound = listener.local_addr()?;
+        self.spawn_accept(WireListener::Tcp(listener));
+        Ok(bound)
+    }
+
+    fn spawn_accept(&mut self, listener: WireListener) {
+        // Non-blocking accept so the loop can observe the stop flag.
+        let _ = listener.set_nonblocking(true);
+        let shared = Arc::clone(&self.shared);
+        let svc = Arc::clone(&self.svc);
+        let idx = self.accept_handles.len();
+        let handle = std::thread::Builder::new()
+            .name(format!("wire-accept-{idx}"))
+            .spawn(move || accept_loop(&shared, &svc, &listener))
+            .expect("spawn wire accept thread");
+        self.accept_handles.push(handle);
+    }
+
+    /// The service this server fronts.
+    pub fn service(&self) -> &Arc<InferenceService> {
+        &self.svc
+    }
+
+    /// A consistent copy of the wire counters.
+    pub fn counters(&self) -> WireCounters {
+        self.shared.stats.snapshot()
+    }
+
+    /// Live (accepted, not yet fully closed) connections right now.
+    pub fn live_connections(&self) -> usize {
+        lock_recover(&self.shared.conns).live.len()
+    }
+
+    /// Stop accepting, half-close every connection's read side, answer
+    /// every in-flight request `Aborted`, and join all wire threads.
+    /// Returns the service handle (still running) and the final wire
+    /// counters.
+    pub fn shutdown(mut self) -> (Arc<InferenceService>, WireCounters) {
+        self.stop_wire();
+        let counters = self.shared.stats.snapshot();
+        (Arc::clone(&self.svc), counters)
+    }
+
+    /// [`shutdown`](Self::shutdown), then shut the service itself down
+    /// and return its final snapshot with the wire counters folded in.
+    ///
+    /// # Panics
+    /// If other `Arc` clones of the service are still held — the
+    /// service teardown needs sole ownership.
+    pub fn shutdown_all(mut self) -> MetricsSnapshot {
+        self.stop_wire();
+        let counters = self.shared.stats.snapshot();
+        let WireServer { svc, .. } = self;
+        let svc = match Arc::try_unwrap(svc) {
+            Ok(svc) => svc,
+            Err(_) => panic!("wire shutdown_all needs sole ownership of the service Arc"),
+        };
+        let mut snap = svc.shutdown();
+        snap.wire = counters;
+        snap
+    }
+
+    fn stop_wire(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for h in self.accept_handles.drain(..) {
+            let _ = h.join();
+        }
+        {
+            let table = lock_recover(&self.shared.conns);
+            for stream in table.live.values() {
+                // Readers unblock with EOF; writers keep draining so
+                // in-flight requests still get their terminal frames.
+                let _ = stream.shutdown(Shutdown::Read);
+            }
+        }
+        // Everything still queued is answered `Aborted` now; the
+        // forwarders turn those replies into frames before the writers
+        // wind down.
+        self.svc.fail_pending("wire server shutdown");
+        loop {
+            let joins = {
+                let mut table = lock_recover(&self.shared.conns);
+                std::mem::take(&mut table.joins)
+            };
+            if joins.is_empty() {
+                break;
+            }
+            for j in joins {
+                let _ = j.join();
+            }
+        }
+        for p in &self.uds_paths {
+            let _ = std::fs::remove_file(p);
+        }
+        self.uds_paths.clear();
+    }
+}
+
+fn accept_loop(shared: &Arc<Shared>, svc: &Arc<InferenceService>, listener: &WireListener) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok(stream) => spawn_connection(shared, svc, stream),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+fn spawn_connection(shared: &Arc<Shared>, svc: &Arc<InferenceService>, stream: WireStream) {
+    // Accepted sockets must be blocking regardless of what they
+    // inherited from the non-blocking listener.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(shared.cfg.read_timeout);
+    let _ = stream.set_write_timeout(shared.cfg.write_timeout);
+    let (read_half, shutdown_handle) = match (stream.try_clone(), stream.try_clone()) {
+        (Ok(r), Ok(s)) => (r, s),
+        _ => return, // clone failed: drop the connection before it counts
+    };
+    let write_half = stream;
+    shared.stats.connections_opened.fetch_add(1, Ordering::Relaxed);
+
+    let conn_id = {
+        let mut table = lock_recover(&shared.conns);
+        let id = table.next_id;
+        table.next_id += 1;
+        table.live.insert(id, shutdown_handle);
+        id
+    };
+
+    let pending: Pending = Arc::new(Mutex::new(HashMap::new()));
+    // Bounded: a peer that stops reading can only queue this many
+    // frames server-side before the pipeline stalls into the socket
+    // buffer and, past the write deadline, the connection dies.
+    let (event_tx, event_rx) = mpsc::sync_channel::<ResponseFrame>(shared.cfg.max_in_flight + 32);
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+
+    let mut joins = Vec::with_capacity(3);
+    {
+        let shared = Arc::clone(shared);
+        let svc = Arc::clone(svc);
+        let pending = Arc::clone(&pending);
+        let event_tx = event_tx.clone();
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("wire-read-{conn_id}"))
+                .spawn(move || reader_loop(&shared, &svc, read_half, &event_tx, &reply_tx, &pending))
+                .expect("spawn wire reader"),
+        );
+    }
+    {
+        let pending = Arc::clone(&pending);
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("wire-fwd-{conn_id}"))
+                .spawn(move || forwarder_loop(&reply_rx, &event_tx, &pending))
+                .expect("spawn wire forwarder"),
+        );
+    }
+    {
+        let shared = Arc::clone(shared);
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("wire-write-{conn_id}"))
+                .spawn(move || writer_loop(&shared, conn_id, write_half, &event_rx))
+                .expect("spawn wire writer"),
+        );
+    }
+    lock_recover(&shared.conns).joins.extend(joins);
+}
+
+/// Best-effort request-id recovery from a body that failed to decode:
+/// the id field sits at a fixed offset, so echo it when enough bytes
+/// exist; otherwise answer on id 0.
+fn salvage_id(body: &[u8]) -> u64 {
+    if body.len() >= 16 {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&body[8..16]);
+        u64::from_le_bytes(b)
+    } else {
+        0
+    }
+}
+
+fn reject_body(err: &SubmitError) -> ResponseBody {
+    match err {
+        SubmitError::QueueFull { .. } => ResponseBody::Shed { detail: err.to_string() },
+        SubmitError::Quarantined { .. } => ResponseBody::Quarantined { detail: err.to_string() },
+        // Unknown model / wrong width / non-finite input: the frame
+        // parsed, but the request itself is unusable.
+        _ => ResponseBody::BadFrame { detail: err.to_string() },
+    }
+}
+
+fn reply_frame(wire_id: u64, reply: Reply) -> ResponseFrame {
+    let body = match reply.outcome {
+        Ok(output) => ResponseBody::Ok {
+            output,
+            latency_us: reply.latency_us,
+            batch: reply.batch_size as u64,
+        },
+        Err(InferError::Timeout { waited_us, budget_us }) => {
+            ResponseBody::Timeout { waited_us, budget_us }
+        }
+        Err(InferError::ExecFailed { detail }) => ResponseBody::ExecFailed { detail },
+        Err(InferError::Aborted { detail }) => ResponseBody::Aborted { detail },
+    };
+    ResponseFrame { id: wire_id, body }
+}
+
+fn reader_loop(
+    shared: &Arc<Shared>,
+    svc: &Arc<InferenceService>,
+    mut read: WireStream,
+    events: &SyncSender<ResponseFrame>,
+    reply_tx: &Sender<Reply>,
+    pending: &Pending,
+) {
+    let stats = &shared.stats;
+    let mut prefix = [0u8; LEN_PREFIX];
+    let mut body: Vec<u8> = Vec::new();
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // EOF, peer reset, or the read deadline: the connection is
+        // done reading. Already-submitted requests still complete.
+        if read.read_exact(&mut prefix).is_err() {
+            return;
+        }
+        stats.bytes_rx.fetch_add(LEN_PREFIX as u64, Ordering::Relaxed);
+        let declared = u32::from_le_bytes(prefix) as u64;
+        if declared as usize > shared.cfg.max_frame {
+            // Rejected from the prefix alone — a `u32::MAX` declarer
+            // costs four bytes of reading and zero allocation.
+            stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+            let err = FrameError::Oversized { declared, limit: shared.cfg.max_frame };
+            let _ = events.send(ResponseFrame {
+                id: 0,
+                body: ResponseBody::BadFrame { detail: err.to_string() },
+            });
+            return;
+        }
+        body.resize(declared as usize, 0);
+        if read.read_exact(&mut body).is_err() {
+            return;
+        }
+        stats.bytes_rx.fetch_add(declared, Ordering::Relaxed);
+        let req = match frame::decode_request(&body) {
+            Ok(req) => req,
+            Err(e) => {
+                // Malformed body: answer BadFrame, then stop reading —
+                // stream framing integrity is gone.
+                stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+                let _ = events.send(ResponseFrame {
+                    id: salvage_id(&body),
+                    body: ResponseBody::BadFrame { detail: e.to_string() },
+                });
+                return;
+            }
+        };
+        stats.frames_rx.fetch_add(1, Ordering::Relaxed);
+        let reject = {
+            // Held across submit+insert so a reply can never race
+            // ahead of its ticket mapping.
+            let mut map = lock_recover(pending);
+            if map.len() >= shared.cfg.max_in_flight {
+                Some(ResponseBody::Shed {
+                    detail: format!(
+                        "connection in-flight limit ({}) reached",
+                        shared.cfg.max_in_flight
+                    ),
+                })
+            } else {
+                match svc.submit(&req.model, req.tenant, &req.input, reply_tx) {
+                    Ok(ticket) => {
+                        map.insert(ticket, req.id);
+                        None
+                    }
+                    Err(e) => Some(reject_body(&e)),
+                }
+            }
+        };
+        if let Some(body) = reject {
+            if events.send(ResponseFrame { id: req.id, body }).is_err() {
+                return; // writer is gone
+            }
+        }
+    }
+}
+
+fn forwarder_loop(reply_rx: &Receiver<Reply>, events: &SyncSender<ResponseFrame>, pending: &Pending) {
+    // Ends when every sender is gone: the reader dropped its handle
+    // and the service delivered (and so dropped) every per-request
+    // sender — i.e. all in-flight requests reached a terminal reply.
+    for reply in reply_rx.iter() {
+        let wire_id = lock_recover(pending).remove(&reply.ticket);
+        // A ticket without a mapping would be a second terminal reply
+        // for the same request; dropping it preserves the at-most-one
+        // frame per request id guarantee.
+        let Some(wire_id) = wire_id else { continue };
+        if events.send(reply_frame(wire_id, reply)).is_err() {
+            return; // writer is gone; the host tolerates dropped receivers
+        }
+    }
+}
+
+fn writer_loop(
+    shared: &Arc<Shared>,
+    conn_id: u64,
+    mut write: WireStream,
+    events: &Receiver<ResponseFrame>,
+) {
+    let stats = &shared.stats;
+    let mut buf: Vec<u8> = Vec::new();
+    // Ends when reader + forwarder have both dropped their senders —
+    // every terminal frame for this connection has been offered.
+    for frame_out in events.iter() {
+        buf.clear();
+        frame::encode_response(&frame_out, &mut buf);
+        if write.write_all(&buf).is_err() {
+            // Peer gone or write deadline expired: unblock the reader
+            // too and stop. Undelivered frames are dropped with the
+            // channel.
+            let _ = write.shutdown(Shutdown::Both);
+            break;
+        }
+        stats.frames_tx.fetch_add(1, Ordering::Relaxed);
+        stats.bytes_tx.fetch_add(buf.len() as u64, Ordering::Relaxed);
+    }
+    stats.connections_closed.fetch_add(1, Ordering::Relaxed);
+    lock_recover(&shared.conns).live.remove(&conn_id);
+}
+
+/// A blocking client for the wire protocol — one connection, explicit
+/// [`send`](Self::send)/[`recv`](Self::recv) so callers control
+/// pipelining. Used by the harnesses' `--wire` modes and the tests.
+pub struct WireClient {
+    stream: WireStream,
+    max_frame: usize,
+    buf: Vec<u8>,
+}
+
+impl WireClient {
+    /// Connect to a server's Unix-domain socket.
+    pub fn connect_uds(path: &Path) -> io::Result<Self> {
+        Ok(Self::wrap(WireStream::Uds(UnixStream::connect(path)?)))
+    }
+
+    /// Connect to a server's TCP address.
+    pub fn connect_tcp<A: ToSocketAddrs>(addr: A) -> io::Result<Self> {
+        let s = TcpStream::connect(addr)?;
+        let _ = s.set_nodelay(true);
+        Ok(Self::wrap(WireStream::Tcp(s)))
+    }
+
+    fn wrap(stream: WireStream) -> Self {
+        Self { stream, max_frame: DEFAULT_MAX_FRAME, buf: Vec::new() }
+    }
+
+    /// Set this client's read/write deadlines.
+    pub fn set_timeouts(
+        &self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> io::Result<()> {
+        self.stream.set_read_timeout(read)?;
+        self.stream.set_write_timeout(write)
+    }
+
+    /// Largest response body this client will accept (defaults to
+    /// [`DEFAULT_MAX_FRAME`]).
+    pub fn set_max_frame(&mut self, max: usize) {
+        self.max_frame = max;
+    }
+
+    /// Encode and send one request frame.
+    pub fn send(&mut self, req: &RequestFrame) -> Result<(), WireError> {
+        self.buf.clear();
+        frame::encode_request(req, &mut self.buf);
+        self.stream.write_all(&self.buf)?;
+        Ok(())
+    }
+
+    /// Read one response frame (blocking, honoring the read deadline).
+    pub fn recv(&mut self) -> Result<ResponseFrame, WireError> {
+        let mut prefix = [0u8; LEN_PREFIX];
+        self.stream.read_exact(&mut prefix)?;
+        let declared = u32::from_le_bytes(prefix) as u64;
+        if declared as usize > self.max_frame {
+            return Err(WireError::Frame(FrameError::Oversized {
+                declared,
+                limit: self.max_frame,
+            }));
+        }
+        self.buf.resize(declared as usize, 0);
+        self.stream.read_exact(&mut self.buf)?;
+        Ok(frame::decode_response(&self.buf)?)
+    }
+
+    /// Lockstep convenience: send one request and wait for one
+    /// response.
+    pub fn call(&mut self, req: &RequestFrame) -> Result<ResponseFrame, WireError> {
+        self.send(req)?;
+        self.recv()
+    }
+
+    /// Half-close the write side (the server reader sees EOF; pending
+    /// responses can still be received).
+    pub fn finish_sending(&self) -> io::Result<()> {
+        self.stream.shutdown(Shutdown::Write)
+    }
+}

@@ -13,6 +13,12 @@
 //! Everything runs in manual mode on a virtual clock, so the whole
 //! admit/flush/timeout/quarantine timeline is deterministic per seed
 //! and needs no sleeps.
+//!
+//! A second property drives the same exactly-one-terminal-reply
+//! contract **across the wire front-end**: randomized request mixes
+//! (valid, NaN-poisoned, wrong-width, unknown-model) over a UDS
+//! socket against a started service, asserting one typed response
+//! frame per request id and reconciled wire/service counters.
 
 use std::collections::HashMap;
 use std::sync::{mpsc, Arc};
@@ -20,9 +26,11 @@ use std::time::{Duration, Instant};
 
 use fann_on_mcu::fann::{Activation, FixedNetwork, Network};
 use fann_on_mcu::kernels::ExecPlan;
+use fann_on_mcu::service::frame::ResponseBody;
+use fann_on_mcu::service::wire::temp_uds_path;
 use fann_on_mcu::service::{
-    BatchPolicy, BreakerPolicy, FaultPlan, InferenceService, ModelRegistry, ShardPolicy,
-    SubmitError,
+    BatchPolicy, BreakerPolicy, FaultPlan, InferenceService, ModelRegistry, RequestFrame,
+    ShardPolicy, SubmitError, WireClient, WireConfig, WireServer,
 };
 use fann_on_mcu::util::proptest::{check, ensure};
 use fann_on_mcu::util::rng::Rng;
@@ -214,6 +222,133 @@ fn every_accepted_request_gets_exactly_one_terminal_reply() {
                 shard_failed,
                 snap.total_failed()
             ),
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn wire_requests_get_exactly_one_typed_terminal_response() {
+    // Fewer cases than the manual-clock property: each iteration spins
+    // up a real started service plus a UDS listener. The request mix is
+    // what's randomized — ids, tenants, payload values, and a sprinkle
+    // of semantically invalid frames that must be answered (BadFrame)
+    // without poisoning the connection for later requests.
+    check("wire-exactly-one-terminal-response", 12, |rng| {
+        let policy = BatchPolicy {
+            max_batch: rng.range_usize(1, 4),
+            max_delay: Duration::from_micros(rng.range_usize(50, 1000) as u64),
+            queue_capacity: rng.range_usize(4, 16),
+            ..BatchPolicy::default()
+        };
+        let breaker = BreakerPolicy {
+            failure_threshold: 3,
+            cooldown: Duration::from_millis(1),
+        };
+        let reg = registry(rng, breaker);
+        let shards = [1usize, 2][rng.below(2)];
+        let svc = Arc::new(InferenceService::start_sharded(
+            reg,
+            &policy,
+            &ShardPolicy::new(shards),
+            None,
+        ));
+        let mut server = WireServer::start(svc, &WireConfig::default());
+        let path = temp_uds_path("prop");
+        server.listen_uds(&path).map_err(|e| format!("bind UDS: {e}"))?;
+
+        let mut client = WireClient::connect_uds(&path).map_err(|e| format!("connect: {e}"))?;
+        client
+            .set_timeouts(Some(Duration::from_secs(30)), Some(Duration::from_secs(10)))
+            .map_err(|e| format!("timeouts: {e}"))?;
+
+        let requests = rng.range_usize(10, 30);
+        let mut submitted = 0u64; // well-formed requests the service accepted
+        let mut rejected = 0u64; // semantic rejects answered BadFrame
+        for id in 0..requests as u64 {
+            // Draw the request shape: mostly valid, sometimes broken in
+            // one of the ways the server must reject per-request
+            // (answer BadFrame, keep the connection open).
+            let mut model = MODELS[rng.below(2)].to_string();
+            let mut input: Vec<f32> = (0..3).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let expect_reject = match rng.below(10) {
+                0 => {
+                    // NaN into the f32 plan: rejected at submit. The Q
+                    // plan quantizes (saturates), so only "pf" rejects.
+                    let poison = model == "pf";
+                    input[rng.below(3)] = f32::NAN;
+                    poison
+                }
+                1 => {
+                    // Wrong input width.
+                    input.push(0.0);
+                    true
+                }
+                2 => {
+                    // Unknown model tag.
+                    model = "no-such-model".to_string();
+                    true
+                }
+                _ => false,
+            };
+            let req = RequestFrame { id, tenant: rng.below(4) as u64, model, input };
+            // Exactly one terminal response per id, whatever the shape.
+            // Sheds are terminal for *that frame* — a retry is a fresh
+            // frame reusing the id, which the server permits.
+            let mut resp = client.call(&req).map_err(|e| format!("call: {e}"))?;
+            let mut attempts = 0;
+            while matches!(
+                resp.body,
+                ResponseBody::Shed { .. } | ResponseBody::Quarantined { .. }
+            ) {
+                attempts += 1;
+                ensure(attempts < 1000, "request shed indefinitely")?;
+                std::thread::sleep(Duration::from_micros(200));
+                resp = client.call(&req).map_err(|e| format!("call: {e}"))?;
+            }
+            ensure(resp.id == id, "response id must echo the request id")?;
+            match resp.body {
+                ResponseBody::BadFrame { .. } => {
+                    ensure(expect_reject, "well-formed request answered BadFrame")?;
+                    rejected += 1;
+                }
+                ResponseBody::Ok { .. }
+                | ResponseBody::Timeout { .. }
+                | ResponseBody::ExecFailed { .. }
+                | ResponseBody::Aborted { .. } => {
+                    ensure(!expect_reject, "invalid request got a non-reject terminal")?;
+                    submitted += 1;
+                }
+                ResponseBody::Shed { .. } | ResponseBody::Quarantined { .. } => unreachable!(),
+            }
+        }
+        drop(client);
+
+        let (svc, counters) = server.shutdown();
+        let Ok(svc) = Arc::try_unwrap(svc) else {
+            return Err("service Arc still shared after wire shutdown".to_string());
+        };
+        let snap = svc.shutdown();
+        // Lockstep single client: one response frame per request frame,
+        // and the semantic rejects are not wire-level bad frames.
+        ensure(counters.frames_rx == counters.frames_tx, "one response per request frame")?;
+        ensure(counters.bad_frames == 0, "semantic rejects must not count as bad frames")?;
+        ensure(
+            counters.connections_opened == 1 && counters.connections_closed == 1,
+            "the single connection must open and close exactly once",
+        )?;
+        ensure(
+            snap.total_completed() + snap.total_failed() == submitted,
+            format!(
+                "service books diverge: completed {} + failed {} != accepted {}",
+                snap.total_completed(),
+                snap.total_failed(),
+                submitted
+            ),
+        )?;
+        ensure(
+            submitted + rejected == requests as u64,
+            "every request must land in exactly one ledger bucket",
         )?;
         Ok(())
     });

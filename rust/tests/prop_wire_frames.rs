@@ -1,0 +1,379 @@
+//! Round-trip + corruption properties for the wire-protocol codec
+//! (`service::frame`): encoding any request/response and decoding it
+//! back is bitwise identity — ids, tags, dtypes, and payloads of every
+//! size including empty and exactly-at-the-cap — while corrupted bytes
+//! (truncation at every offset, flipped magic/version/kind/dtype
+//! bytes, oversized length prefixes, dtype/payload-length mismatches,
+//! non-UTF-8 text) produce typed [`FrameError`]s, never a panic and
+//! never a read past the buffer.
+
+use fann_on_mcu::service::frame::{
+    self, FrameError, RequestFrame, ResponseBody, ResponseFrame, WireDtype, DEFAULT_MAX_FRAME,
+    LEN_PREFIX, MAX_TAG, REQUEST_HEADER, RESPONSE_HEADER, VERSION,
+};
+use fann_on_mcu::service::Output;
+use fann_on_mcu::util::proptest::{check, ensure};
+use fann_on_mcu::util::rng::Rng;
+
+const TAG_ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789-_";
+
+fn random_tag(rng: &mut Rng) -> String {
+    let len = rng.range_usize(1, MAX_TAG);
+    (0..len).map(|_| TAG_ALPHABET[rng.below(TAG_ALPHABET.len())] as char).collect()
+}
+
+fn random_text(rng: &mut Rng) -> String {
+    let len = rng.below(41);
+    (0..len).map(|_| TAG_ALPHABET[rng.below(TAG_ALPHABET.len())] as char).collect()
+}
+
+/// A request with arbitrary f32 *bit patterns* — NaNs, infinities and
+/// denormals included — plus payload sizes from empty upward.
+fn random_request(rng: &mut Rng) -> RequestFrame {
+    let n = match rng.below(4) {
+        0 => 0,
+        1 => rng.range_usize(1, 4),
+        _ => rng.range_usize(1, 256),
+    };
+    RequestFrame {
+        id: rng.next_u64(),
+        tenant: rng.next_u64(),
+        model: random_tag(rng),
+        input: (0..n).map(|_| f32::from_bits(rng.next_u64() as u32)).collect(),
+    }
+}
+
+fn random_response(rng: &mut Rng) -> ResponseFrame {
+    let id = rng.next_u64();
+    let n = rng.below(9);
+    let body = match rng.below(7) {
+        0 => ResponseBody::Ok {
+            output: if rng.below(2) == 0 {
+                Output::F32((0..n).map(|_| rng.range_f32(-8.0, 8.0)).collect())
+            } else {
+                Output::Q((0..n).map(|_| rng.next_u64() as i32).collect())
+            },
+            latency_us: rng.next_u64() >> 20,
+            batch: rng.range_usize(1, 64) as u64,
+        },
+        1 => ResponseBody::Shed { detail: random_text(rng) },
+        2 => ResponseBody::Quarantined { detail: random_text(rng) },
+        3 => ResponseBody::Timeout {
+            waited_us: rng.next_u64() >> 30,
+            budget_us: rng.next_u64() >> 30,
+        },
+        4 => ResponseBody::ExecFailed { detail: random_text(rng) },
+        5 => ResponseBody::Aborted { detail: random_text(rng) },
+        _ => ResponseBody::BadFrame { detail: random_text(rng) },
+    };
+    ResponseFrame { id, body }
+}
+
+fn encode_req(req: &RequestFrame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    frame::encode_request(req, &mut buf);
+    buf
+}
+
+fn encode_resp(resp: &ResponseFrame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    frame::encode_response(resp, &mut buf);
+    buf
+}
+
+#[test]
+fn request_roundtrip_is_bitwise_identity() {
+    check("request round-trip", 200, |rng| {
+        let req = random_request(rng);
+        let buf = encode_req(&req);
+        let (body, consumed) =
+            frame::split_frame(&buf, DEFAULT_MAX_FRAME).map_err(|e| e.to_string())?;
+        ensure(consumed == buf.len(), "split did not consume the whole frame")?;
+        let back = frame::decode_request(body).map_err(|e| e.to_string())?;
+        ensure(back.id == req.id, "id changed")?;
+        ensure(back.tenant == req.tenant, "tenant changed")?;
+        ensure(back.model == req.model, "model tag changed")?;
+        // Bit-level payload equality: NaN payloads are representable
+        // on the wire by design (rejection is the service's job), so
+        // `==` on f32 would be wrong here.
+        let bits: Vec<u32> = req.input.iter().map(|v| v.to_bits()).collect();
+        let back_bits: Vec<u32> = back.input.iter().map(|v| v.to_bits()).collect();
+        ensure(bits == back_bits, "payload bits changed")
+    });
+}
+
+#[test]
+fn response_roundtrip_preserves_every_kind() {
+    check("response round-trip", 200, |rng| {
+        let resp = random_response(rng);
+        let buf = encode_resp(&resp);
+        let (body, consumed) =
+            frame::split_frame(&buf, DEFAULT_MAX_FRAME).map_err(|e| e.to_string())?;
+        ensure(consumed == buf.len(), "split did not consume the whole frame")?;
+        let back = frame::decode_response(body).map_err(|e| e.to_string())?;
+        ensure(
+            back == resp,
+            format!("response changed: {resp:?} -> {back:?}"),
+        )
+    });
+}
+
+#[test]
+fn frames_stream_back_to_back() {
+    check("frame streaming", 60, |rng| {
+        let a = random_request(rng);
+        let b = random_request(rng);
+        let mut buf = encode_req(&a);
+        frame::encode_request(&b, &mut buf);
+        let (body_a, used_a) =
+            frame::split_frame(&buf, DEFAULT_MAX_FRAME).map_err(|e| e.to_string())?;
+        let back_a = frame::decode_request(body_a).map_err(|e| e.to_string())?;
+        ensure(back_a.id == a.id && back_a.model == a.model, "first frame mangled")?;
+        let (body_b, used_b) =
+            frame::split_frame(&buf[used_a..], DEFAULT_MAX_FRAME).map_err(|e| e.to_string())?;
+        ensure(used_a + used_b == buf.len(), "streamed split lost bytes")?;
+        let back_b = frame::decode_request(body_b).map_err(|e| e.to_string())?;
+        ensure(back_b.id == b.id && back_b.model == b.model, "second frame mangled")
+    });
+}
+
+#[test]
+fn truncation_at_every_byte_offset_never_panics() {
+    check("truncation fuzz", 80, |rng| {
+        let buf = if rng.below(2) == 0 {
+            encode_req(&random_request(rng))
+        } else {
+            encode_resp(&random_response(rng))
+        };
+        // The stream view: every proper prefix of the full frame must
+        // report Truncated (the length prefix declares the full body).
+        for cut in 0..buf.len() {
+            match frame::split_frame(&buf[..cut], DEFAULT_MAX_FRAME) {
+                Err(FrameError::Truncated { needed, got }) => {
+                    ensure(got == cut && needed > cut, "wrong Truncated accounting")?;
+                }
+                other => return Err(format!("cut {cut}: expected Truncated, got {other:?}")),
+            }
+        }
+        // The body view: a decoder handed any prefix of the body must
+        // return — a typed error or a shorter-but-well-formed parse
+        // (the length prefix, not the decoder, is the framing
+        // authority) — and never panic or over-read.
+        let body = &buf[LEN_PREFIX..];
+        for cut in 0..body.len() {
+            let _ = frame::decode_request(&body[..cut]);
+            let _ = frame::decode_response(&body[..cut]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupt_request_headers_yield_typed_errors() {
+    check("request header corruption", 120, |rng| {
+        let req = random_request(rng);
+        let buf = encode_req(&req);
+        let body = buf[LEN_PREFIX..].to_vec();
+
+        // Flipped magic byte.
+        let mut bad = body.clone();
+        let i = rng.below(4);
+        bad[i] ^= 1 + rng.below(255) as u8;
+        ensure(
+            matches!(frame::decode_request(&bad), Err(FrameError::BadMagic { .. })),
+            "flipped magic not rejected",
+        )?;
+
+        // Wrong version.
+        let mut bad = body.clone();
+        bad[4] = VERSION.wrapping_add(1 + rng.below(254) as u8);
+        ensure(
+            matches!(frame::decode_request(&bad), Err(FrameError::BadVersion { .. })),
+            "flipped version not rejected",
+        )?;
+
+        // A response kind byte (or garbage) in a request.
+        let mut bad = body.clone();
+        bad[5] = 1 + rng.below(255) as u8;
+        ensure(
+            matches!(frame::decode_request(&bad), Err(FrameError::BadKind { .. })),
+            "bad kind not rejected",
+        )?;
+
+        // Unknown dtype code.
+        let mut bad = body.clone();
+        bad[6] = 2 + rng.below(254) as u8;
+        ensure(
+            matches!(frame::decode_request(&bad), Err(FrameError::BadDtype { .. })),
+            "bad dtype not rejected",
+        )?;
+
+        // Tag length 0 and > MAX_TAG are both out of band.
+        let mut bad = body.clone();
+        bad[7] = 0;
+        ensure(
+            matches!(frame::decode_request(&bad), Err(FrameError::BadTag { len: 0 })),
+            "zero tag not rejected",
+        )?;
+        let mut bad = body.clone();
+        bad[7] = (MAX_TAG + 1 + rng.below(255 - MAX_TAG)) as u8;
+        ensure(
+            matches!(frame::decode_request(&bad), Err(FrameError::BadTag { .. })),
+            "oversized tag not rejected",
+        )?;
+
+        // 0xFF is not valid anywhere in UTF-8: poison one tag byte.
+        let mut bad = body.clone();
+        bad[REQUEST_HEADER + rng.below(req.model.len())] = 0xFF;
+        ensure(
+            matches!(frame::decode_request(&bad), Err(FrameError::BadText)),
+            "non-UTF-8 tag not rejected",
+        )
+    });
+}
+
+#[test]
+fn dtype_payload_length_mismatch_is_typed() {
+    check("payload mismatch", 120, |rng| {
+        let mut req = random_request(rng);
+        if req.input.is_empty() {
+            req.input.push(1.0);
+        }
+        let buf = encode_req(&req);
+        let body = &buf[LEN_PREFIX..];
+        // Lop 1–3 bytes off the payload: no longer whole f32 elements.
+        let chop = rng.range_usize(1, 3);
+        match frame::decode_request(&body[..body.len() - chop]) {
+            Err(FrameError::PayloadMismatch { dtype: WireDtype::F32, bytes }) => {
+                ensure(bytes % 4 != 0, "mismatch reported for whole elements")?;
+            }
+            other => return Err(format!("expected PayloadMismatch, got {other:?}")),
+        }
+        // Same property on the response side, against an Ok frame.
+        let resp = ResponseFrame {
+            id: rng.next_u64(),
+            body: ResponseBody::Ok {
+                output: Output::F32(vec![0.5; rng.range_usize(1, 8)]),
+                latency_us: 1,
+                batch: 1,
+            },
+        };
+        let rbuf = encode_resp(&resp);
+        let rbody = &rbuf[LEN_PREFIX..];
+        match frame::decode_response(&rbody[..rbody.len() - chop]) {
+            Err(FrameError::PayloadMismatch { .. }) => Ok(()),
+            other => Err(format!("response: expected PayloadMismatch, got {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn corrupt_response_headers_yield_typed_errors() {
+    check("response header corruption", 120, |rng| {
+        let resp = random_response(rng);
+        let buf = encode_resp(&resp);
+        let body = buf[LEN_PREFIX..].to_vec();
+
+        // Kind 0 (a request kind) and kinds 8.. are unknown responses.
+        let mut bad = body.clone();
+        bad[5] = if rng.below(2) == 0 { 0 } else { 8 + rng.below(248) as u8 };
+        ensure(
+            matches!(frame::decode_response(&bad), Err(FrameError::BadKind { .. })),
+            "bad response kind not rejected",
+        )?;
+
+        // A Timeout frame must carry no payload.
+        let timeout = ResponseFrame {
+            id: 9,
+            body: ResponseBody::Timeout { waited_us: 5, budget_us: 3 },
+        };
+        let mut tbuf = Vec::new();
+        frame::encode_response(&timeout, &mut tbuf);
+        tbuf.extend_from_slice(&[0, 0, 0, 0]);
+        // Patch the length prefix to claim the padded bytes.
+        let padded = (tbuf.len() - LEN_PREFIX) as u32;
+        tbuf[..LEN_PREFIX].copy_from_slice(&padded.to_le_bytes());
+        let (tbody, _) = frame::split_frame(&tbuf, DEFAULT_MAX_FRAME).map_err(|e| e.to_string())?;
+        ensure(
+            matches!(
+                frame::decode_response(tbody),
+                Err(FrameError::PayloadMismatch { .. })
+            ),
+            "padded Timeout frame not rejected",
+        )?;
+
+        // Non-UTF-8 detail text in an error kind.
+        let shed = ResponseFrame { id: 3, body: ResponseBody::Shed { detail: "full".into() } };
+        let mut sbuf = Vec::new();
+        frame::encode_response(&shed, &mut sbuf);
+        let at = LEN_PREFIX + RESPONSE_HEADER;
+        sbuf[at] = 0xFF;
+        let (sbody, _) = frame::split_frame(&sbuf, DEFAULT_MAX_FRAME).map_err(|e| e.to_string())?;
+        ensure(
+            matches!(frame::decode_response(sbody), Err(FrameError::BadText)),
+            "non-UTF-8 detail not rejected",
+        )
+    });
+}
+
+#[test]
+fn oversized_length_prefixes_are_rejected_from_four_bytes() {
+    check("oversized prefix", 100, |rng| {
+        // Any declared length above the cap — up to u32::MAX — must be
+        // rejected from the prefix alone, even when no body follows.
+        let limit = rng.range_usize(16, 4096);
+        let declared = (limit as u64 + 1 + rng.below(1 << 20) as u64).min(u32::MAX as u64);
+        let mut buf = (declared as u32).to_le_bytes().to_vec();
+        // Sometimes append garbage "body" bytes; they must stay unread.
+        if rng.below(2) == 0 {
+            buf.extend_from_slice(&[0xAB; 8]);
+        }
+        match frame::split_frame(&buf, limit) {
+            Err(FrameError::Oversized { declared: d, limit: l }) => {
+                ensure(d == declared && l == limit, "wrong Oversized accounting")
+            }
+            other => Err(format!("expected Oversized, got {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn payload_at_exactly_the_cap_fits_and_one_element_more_does_not() {
+    let req = RequestFrame {
+        id: 0x1DEA,
+        tenant: 42,
+        model: "emg-q7".into(),
+        input: vec![0.5; 64],
+    };
+    let buf = encode_req(&req);
+    // A cap of exactly the encoded body size admits the frame...
+    let cap = buf.len() - LEN_PREFIX;
+    let (body, consumed) = frame::split_frame(&buf, cap).unwrap();
+    assert_eq!(consumed, buf.len());
+    assert_eq!(frame::decode_request(body).unwrap(), req);
+    // ...and one more payload element overflows it from the prefix.
+    let bigger = RequestFrame { input: vec![0.5; 65], ..req };
+    let buf2 = encode_req(&bigger);
+    assert!(matches!(frame::split_frame(&buf2, cap), Err(FrameError::Oversized { .. })));
+}
+
+#[test]
+fn empty_payloads_and_empty_details_round_trip() {
+    let req = RequestFrame { id: 0, tenant: 0, model: "m".into(), input: Vec::new() };
+    let buf = encode_req(&req);
+    assert_eq!(buf.len(), LEN_PREFIX + REQUEST_HEADER + 1);
+    let (body, _) = frame::split_frame(&buf, DEFAULT_MAX_FRAME).unwrap();
+    assert_eq!(frame::decode_request(body).unwrap(), req);
+
+    for resp in [
+        ResponseFrame {
+            id: 1,
+            body: ResponseBody::Ok { output: Output::F32(Vec::new()), latency_us: 0, batch: 1 },
+        },
+        ResponseFrame { id: 2, body: ResponseBody::Aborted { detail: String::new() } },
+    ] {
+        let rbuf = encode_resp(&resp);
+        let (rbody, _) = frame::split_frame(&rbuf, DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(frame::decode_response(rbody).unwrap(), resp);
+    }
+}

@@ -423,6 +423,7 @@ fn load_harness_smoke_reports_the_bench_schema() {
         seed: 5,
         submitters: 3,
         shards: 2,
+        wire: false,
         policy: policy(8, Duration::from_micros(500), 128),
     };
     let report = load::run(&opts).unwrap();

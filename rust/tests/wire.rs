@@ -1,0 +1,547 @@
+//! Wire front-end gate: the socket boundary must not weaken any
+//! service-layer promise.
+//!
+//! End-to-end (satellite 2):
+//!
+//! * N concurrent UDS clients, interleaving models and tenants, get
+//!   replies **bit-exact** vs in-process `submit()` on the very same
+//!   service, with exactly one terminal reply per request id;
+//! * a client that disconnects mid-stream (replies still in flight)
+//!   leaks no connection task — `live_connections()` drains to zero
+//!   and `connections_opened == connections_closed`;
+//! * wire counters reconcile with the service snapshot at teardown;
+//! * the TCP listener serves the identical protocol, and
+//!   `shutdown_all` folds wire counters into the metrics snapshot;
+//! * a request parked inside the service at shutdown is answered
+//!   `Aborted` before its socket closes.
+//!
+//! Adversarial peers (satellite 3) — every scenario also proves a
+//! concurrent well-behaved client stays served:
+//!
+//! * a byte-at-a-time sender (maximal partial reads) still gets its
+//!   reply;
+//! * a `len = u32::MAX` length prefix is answered `BadFrame` from the
+//!   four prefix bytes alone (no allocation) and the connection is
+//!   closed;
+//! * a peer that connects and sends nothing is reaped at the read
+//!   deadline;
+//! * a peer that floods requests and never reads responses is bounded
+//!   by the writer's deadline + bounded event channel (backpressure
+//!   propagates to the reader) and torn down without deadlock.
+
+use std::io::{Read, Write};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use fann_on_mcu::service::frame::{self, ResponseBody, ResponseFrame};
+use fann_on_mcu::service::load::demo_registry;
+use fann_on_mcu::service::wire::temp_uds_path;
+use fann_on_mcu::service::{
+    BatchPolicy, InferenceService, MetricsSnapshot, Output, RequestFrame, ShardPolicy, WireClient,
+    WireConfig, WireCounters, WireServer,
+};
+use fann_on_mcu::util::rng::Rng;
+
+/// A started sharded service behind a UDS wire server, plus the
+/// `(id, n_in, n_out)` rows of its demo models.
+struct Fixture {
+    server: WireServer,
+    path: PathBuf,
+    models: Vec<(String, usize, usize)>,
+}
+
+fn start_fixture(tag: &str, cfg: &WireConfig, shards: usize, seed: u64) -> Fixture {
+    let (registry, models) = demo_registry(seed).expect("demo registry builds");
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_delay: Duration::from_micros(200),
+        queue_capacity: 512,
+        ..BatchPolicy::default()
+    };
+    let svc = Arc::new(InferenceService::start_sharded(
+        registry,
+        &policy,
+        &ShardPolicy::new(shards),
+        None,
+    ));
+    let mut server = WireServer::start(svc, cfg);
+    let path = temp_uds_path(tag);
+    server.listen_uds(&path).expect("bind UDS listener");
+    Fixture { server, path, models }
+}
+
+/// Tear a fixture's server and service down, returning the final
+/// service snapshot and the wire counters.
+fn teardown(server: WireServer) -> (MetricsSnapshot, WireCounters) {
+    let (svc, counters) = server.shutdown();
+    let Ok(svc) = Arc::try_unwrap(svc) else {
+        panic!("service Arc still shared after wire shutdown");
+    };
+    (svc.shutdown(), counters)
+}
+
+/// Spin (5 ms granularity) until `cond` holds, panicking past `timeout`.
+fn wait_until(timeout: Duration, what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + timeout;
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Read one response frame off a raw socket (for adversarial peers
+/// that bypass [`WireClient`]).
+fn read_response(stream: &mut UnixStream) -> ResponseFrame {
+    let mut prefix = [0u8; 4];
+    stream.read_exact(&mut prefix).expect("read length prefix");
+    let mut body = vec![0u8; u32::from_le_bytes(prefix) as usize];
+    stream.read_exact(&mut body).expect("read response body");
+    frame::decode_response(&body).expect("decode response")
+}
+
+/// Lockstep call that retries transient `Shed`/`Quarantined` replies —
+/// the well-behaved client used alongside adversarial peers.
+fn call_retrying_shed(client: &mut WireClient, req: &RequestFrame) -> ResponseFrame {
+    for _ in 0..500 {
+        let resp = client.call(req).expect("wire call");
+        assert_eq!(resp.id, req.id, "terminal reply echoes the request id");
+        match resp.body {
+            ResponseBody::Shed { .. } | ResponseBody::Quarantined { .. } => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            _ => return resp,
+        }
+    }
+    panic!("request {} still shed after 500 attempts", req.id);
+}
+
+#[test]
+fn concurrent_uds_clients_match_in_process_submit_bit_for_bit() {
+    const CLIENTS: usize = 6;
+    const REQUESTS: usize = 40;
+    const SAMPLES: usize = 8;
+    let fx = start_fixture("bitexact", &WireConfig::default(), 2, 21);
+
+    // Deterministic inputs per (model, sample) slot.
+    let mut rng = Rng::new(0xF00D);
+    let inputs: Vec<Vec<Vec<f32>>> = fx
+        .models
+        .iter()
+        .map(|(_, n_in, _)| {
+            (0..SAMPLES)
+                .map(|_| (0..*n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+                .collect()
+        })
+        .collect();
+
+    // Reference outputs via in-process submit() on the same service the
+    // wire clients will hit — batching may differ, answers may not.
+    let (tx, rx) = mpsc::channel();
+    let mut expected: Vec<Vec<Output>> = Vec::new();
+    for (mi, (id, _, _)) in fx.models.iter().enumerate() {
+        let mut per = Vec::with_capacity(SAMPLES);
+        for sample in inputs[mi].iter().take(SAMPLES) {
+            let ticket = fx
+                .server
+                .service()
+                .submit(id, 999, sample, &tx)
+                .expect("reference submit accepted");
+            let reply = rx.recv_timeout(Duration::from_secs(10)).expect("reference reply");
+            assert_eq!(reply.ticket, ticket);
+            per.push(reply.outcome.expect("reference inference succeeds"));
+        }
+        expected.push(per);
+    }
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..CLIENTS {
+            let (fx, inputs, expected) = (&fx, &inputs, &expected);
+            handles.push(scope.spawn(move || {
+                let mut client = WireClient::connect_uds(&fx.path).expect("connect");
+                client
+                    .set_timeouts(Some(Duration::from_secs(30)), Some(Duration::from_secs(10)))
+                    .expect("set client timeouts");
+                for r in 0..REQUESTS {
+                    // Interleave models and samples differently per
+                    // client so neighbors never walk in lockstep.
+                    let mi = (c + r) % fx.models.len();
+                    let s = (c * 7 + r * 3) % SAMPLES;
+                    let id = ((c as u64) << 32) | r as u64;
+                    let req = RequestFrame {
+                        id,
+                        tenant: c as u64,
+                        model: fx.models[mi].0.clone(),
+                        input: inputs[mi][s].clone(),
+                    };
+                    let resp = client.call(&req).expect("wire call");
+                    assert_eq!(resp.id, id, "terminal reply echoes the request id");
+                    match resp.body {
+                        ResponseBody::Ok { output, .. } => {
+                            assert_eq!(
+                                output, expected[mi][s],
+                                "wire reply bit-exact vs in-process submit"
+                            );
+                        }
+                        other => panic!("unexpected terminal reply {other:?}"),
+                    }
+                }
+                // Half-close, then prove the server queued no stray
+                // frame for this connection: with every id already
+                // answered exactly once, the next read must be EOF.
+                client.finish_sending().expect("half-close write side");
+                assert!(client.recv().is_err(), "no extra frame after the last reply");
+            }));
+        }
+        for h in handles {
+            h.join().expect("client thread");
+        }
+    });
+
+    let wire_requests = (CLIENTS * REQUESTS) as u64;
+    let reference = (fx.models.len() * SAMPLES) as u64;
+    let (snap, w) = teardown(fx.server);
+    assert_eq!(w.connections_opened, CLIENTS as u64);
+    assert_eq!(w.connections_closed, CLIENTS as u64, "every connection wound down");
+    assert_eq!(w.frames_rx, wire_requests, "one frame per request");
+    assert_eq!(w.frames_tx, wire_requests, "exactly one terminal frame per id");
+    assert_eq!(w.bad_frames, 0);
+    assert!(w.bytes_rx > 0 && w.bytes_tx > 0);
+    assert_eq!(
+        snap.total_completed(),
+        wire_requests + reference,
+        "service counters reconcile with what clients saw"
+    );
+    assert_eq!(snap.total_failed(), 0);
+    assert_eq!(snap.total_shed(), 0);
+}
+
+#[test]
+fn mid_stream_disconnect_leaks_no_connection_task() {
+    let cfg = WireConfig {
+        read_timeout: Some(Duration::from_millis(500)),
+        ..WireConfig::default()
+    };
+    let fx = start_fixture("disconnect", &cfg, 1, 33);
+    let (model, n_in, _) = fx.models[0].clone();
+
+    // Fire eight requests and vanish without reading a single reply —
+    // the socket closes with replies still in flight.
+    {
+        let mut client = WireClient::connect_uds(&fx.path).expect("connect");
+        for r in 0..8u64 {
+            client
+                .send(&RequestFrame {
+                    id: r,
+                    tenant: 1,
+                    model: model.clone(),
+                    input: vec![0.25; n_in],
+                })
+                .expect("send");
+        }
+    }
+
+    // The reader/forwarder/writer trio must wind down on its own.
+    wait_until(Duration::from_secs(5), "disconnected peer's tasks to drain", || {
+        fx.server.live_connections() == 0
+    });
+
+    // The server keeps serving fresh connections afterwards.
+    let mut well = WireClient::connect_uds(&fx.path).expect("connect");
+    well.set_timeouts(Some(Duration::from_secs(10)), Some(Duration::from_secs(10)))
+        .expect("set client timeouts");
+    let resp = call_retrying_shed(
+        &mut well,
+        &RequestFrame { id: 77, tenant: 2, model, input: vec![0.5; n_in] },
+    );
+    assert!(matches!(resp.body, ResponseBody::Ok { .. }), "got {:?}", resp.body);
+    drop(well);
+
+    let (snap, w) = teardown(fx.server);
+    assert_eq!(w.connections_opened, 2);
+    assert_eq!(w.connections_closed, 2, "dead peer's connection was reaped");
+    // All nine requests were answered service-side even though eight
+    // replies had nowhere to go.
+    assert_eq!(snap.total_completed() + snap.total_failed(), 9);
+}
+
+#[test]
+fn byte_at_a_time_sender_is_still_served() {
+    let fx = start_fixture("trickle", &WireConfig::default(), 1, 5);
+    let (model, n_in, _) = fx.models[0].clone();
+    let mut raw = UnixStream::connect(&fx.path).expect("connect raw");
+
+    let req = RequestFrame { id: 424_242, tenant: 9, model, input: vec![0.125; n_in] };
+    let mut buf = Vec::new();
+    frame::encode_request(&req, &mut buf);
+    // One byte per syscall, with periodic pauses so the server's reader
+    // sees genuinely partial frames at arbitrary offsets.
+    for (i, b) in buf.iter().enumerate() {
+        raw.write_all(std::slice::from_ref(b)).expect("write one byte");
+        if i % 32 == 0 {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+    let resp = read_response(&mut raw);
+    assert_eq!(resp.id, req.id);
+    assert!(matches!(resp.body, ResponseBody::Ok { .. }), "got {:?}", resp.body);
+    drop(raw);
+
+    let (_, w) = teardown(fx.server);
+    assert_eq!(w.bad_frames, 0, "a slow sender is not a protocol violation");
+}
+
+#[test]
+fn oversized_length_prefix_is_answered_bad_frame_then_closed() {
+    let fx = start_fixture("oversized", &WireConfig::default(), 1, 5);
+    let (model, n_in, _) = fx.models[0].clone();
+
+    let mut raw = UnixStream::connect(&fx.path).expect("connect raw");
+    raw.write_all(&u32::MAX.to_le_bytes()).expect("write bogus prefix");
+    // The reject is raised from the four prefix bytes alone — the body
+    // is never awaited, so the reply arrives although we sent nothing
+    // else.
+    let resp = read_response(&mut raw);
+    assert!(
+        matches!(resp.body, ResponseBody::BadFrame { .. }),
+        "oversized prefix answered BadFrame, got {:?}",
+        resp.body
+    );
+    // After the protocol violation the server stops reading this peer.
+    let mut one = [0u8; 1];
+    assert!(
+        matches!(raw.read(&mut one), Ok(0) | Err(_)),
+        "connection closed after BadFrame"
+    );
+    drop(raw);
+
+    // A well-behaved client on a fresh connection is unaffected.
+    let mut well = WireClient::connect_uds(&fx.path).expect("connect");
+    well.set_timeouts(Some(Duration::from_secs(10)), Some(Duration::from_secs(10)))
+        .expect("set client timeouts");
+    let resp = call_retrying_shed(
+        &mut well,
+        &RequestFrame { id: 1, tenant: 0, model, input: vec![0.1; n_in] },
+    );
+    assert!(matches!(resp.body, ResponseBody::Ok { .. }), "got {:?}", resp.body);
+    drop(well);
+
+    let (_, w) = teardown(fx.server);
+    assert!(w.bad_frames >= 1, "the violation was counted");
+    assert_eq!(w.connections_opened, w.connections_closed);
+}
+
+#[test]
+fn silent_peer_is_reaped_at_the_read_deadline() {
+    let cfg = WireConfig {
+        read_timeout: Some(Duration::from_millis(150)),
+        ..WireConfig::default()
+    };
+    let fx = start_fixture("silent", &cfg, 1, 5);
+
+    let raw = UnixStream::connect(&fx.path).expect("connect raw");
+    wait_until(Duration::from_secs(2), "silent peer to be accepted", || {
+        fx.server.live_connections() >= 1
+    });
+    // Send nothing: the read deadline alone must reap the connection.
+    wait_until(Duration::from_secs(5), "silent peer to hit the read deadline", || {
+        fx.server.live_connections() == 0
+    });
+    drop(raw);
+
+    // Still serviceable afterwards.
+    let (model, n_in, _) = fx.models[0].clone();
+    let mut well = WireClient::connect_uds(&fx.path).expect("connect");
+    well.set_timeouts(Some(Duration::from_secs(10)), Some(Duration::from_secs(10)))
+        .expect("set client timeouts");
+    let resp = call_retrying_shed(
+        &mut well,
+        &RequestFrame { id: 3, tenant: 0, model, input: vec![0.4; n_in] },
+    );
+    assert!(matches!(resp.body, ResponseBody::Ok { .. }), "got {:?}", resp.body);
+    drop(well);
+
+    let (_, w) = teardown(fx.server);
+    assert_eq!(w.connections_opened, 2);
+    assert_eq!(w.connections_closed, 2);
+}
+
+#[test]
+fn peer_that_stops_reading_responses_is_bounded_and_torn_down() {
+    let cfg = WireConfig {
+        max_in_flight: 4,
+        read_timeout: Some(Duration::from_secs(2)),
+        write_timeout: Some(Duration::from_millis(300)),
+        ..WireConfig::default()
+    };
+    let fx = start_fixture("backpressure", &cfg, 1, 5);
+    let (flood_model, flood_n_in, _) = fx.models[0].clone();
+    let (well_model, well_n_in, _) = fx.models[1].clone();
+
+    std::thread::scope(|scope| {
+        let path = fx.path.clone();
+        let flooder = scope.spawn(move || {
+            let mut client = WireClient::connect_uds(&path).expect("connect");
+            // The client's own write deadline is its exit: once server
+            // backpressure (full writer channel → blocked reader →
+            // full kernel buffers) reaches us, send() errors out
+            // instead of deadlocking the test.
+            client
+                .set_timeouts(Some(Duration::from_millis(250)), Some(Duration::from_millis(250)))
+                .expect("set client timeouts");
+            let mut sent = 0u64;
+            for i in 0..200_000u64 {
+                let req = RequestFrame {
+                    id: i,
+                    tenant: 3,
+                    model: flood_model.clone(),
+                    input: vec![0.5; flood_n_in],
+                };
+                if client.send(&req).is_err() {
+                    break;
+                }
+                sent += 1;
+            }
+            // Never read a single response; drop the flooded socket.
+            sent
+        });
+
+        // While the flood runs, a well-behaved client on its own
+        // connection keeps being served.
+        let mut well = WireClient::connect_uds(&fx.path).expect("connect");
+        well.set_timeouts(Some(Duration::from_secs(10)), Some(Duration::from_secs(10)))
+            .expect("set client timeouts");
+        for i in 0..20u64 {
+            let resp = call_retrying_shed(
+                &mut well,
+                &RequestFrame {
+                    id: i,
+                    tenant: 8,
+                    model: well_model.clone(),
+                    input: vec![0.25; well_n_in],
+                },
+            );
+            assert!(matches!(resp.body, ResponseBody::Ok { .. }), "got {:?}", resp.body);
+        }
+        drop(well);
+
+        let sent = flooder.join().expect("flooder thread");
+        assert!(sent > 0, "flooder got at least one frame out");
+    });
+
+    // The stalled connection is torn down by the write deadline (or the
+    // read deadline once the flood stops) — its thread trio never
+    // leaks, and server memory stayed bounded by the in-flight cap plus
+    // the bounded writer channel throughout.
+    wait_until(Duration::from_secs(10), "flooded connection to be torn down", || {
+        fx.server.live_connections() == 0
+    });
+    let (_, w) = teardown(fx.server);
+    assert_eq!(w.connections_opened, w.connections_closed);
+}
+
+#[test]
+fn tcp_endpoint_serves_the_same_protocol_and_shutdown_all_folds_counters() {
+    let (registry, models) = demo_registry(9).expect("demo registry builds");
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_micros(200),
+        ..BatchPolicy::default()
+    };
+    let svc = Arc::new(InferenceService::start_sharded(
+        registry,
+        &policy,
+        &ShardPolicy::new(1),
+        None,
+    ));
+    let mut server = WireServer::start(svc, &WireConfig::default());
+    let addr = server.listen_tcp("127.0.0.1:0").expect("bind TCP listener");
+
+    let (model, n_in, _) = models[0].clone();
+    let mut rng = Rng::new(0xAB);
+    let input: Vec<f32> = (0..n_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+
+    // In-process reference on the same service.
+    let (tx, rx) = mpsc::channel();
+    let ticket = server.service().submit(&model, 4, &input, &tx).expect("submit");
+    let reply = rx.recv_timeout(Duration::from_secs(10)).expect("reference reply");
+    assert_eq!(reply.ticket, ticket);
+    let expected = reply.outcome.expect("reference inference succeeds");
+
+    let mut client = WireClient::connect_tcp(addr).expect("connect tcp");
+    client
+        .set_timeouts(Some(Duration::from_secs(10)), Some(Duration::from_secs(10)))
+        .expect("set client timeouts");
+    let resp = client.call(&RequestFrame { id: 5, tenant: 4, model, input }).expect("tcp call");
+    assert_eq!(resp.id, 5);
+    match resp.body {
+        ResponseBody::Ok { output, .. } => {
+            assert_eq!(output, expected, "TCP reply bit-exact vs in-process submit");
+        }
+        other => panic!("unexpected terminal reply {other:?}"),
+    }
+    drop(client);
+
+    // shutdown_all (the `service serve` teardown path) folds the wire
+    // counters into the final snapshot.
+    let snap = server.shutdown_all();
+    assert_eq!(snap.wire.frames_rx, 1);
+    assert_eq!(snap.wire.frames_tx, 1);
+    assert_eq!(snap.wire.connections_opened, 1);
+    assert_eq!(snap.wire.connections_closed, 1);
+    assert_eq!(snap.total_completed(), 2);
+}
+
+#[test]
+fn shutdown_answers_parked_requests_with_aborted() {
+    let (registry, models) = demo_registry(13).expect("demo registry builds");
+    // An un-flushable queue: huge batch trigger, hour-long deadline —
+    // the request is accepted and then parks inside the service.
+    let policy = BatchPolicy {
+        max_batch: 64,
+        max_delay: Duration::from_secs(3600),
+        ..BatchPolicy::default()
+    };
+    let svc = Arc::new(InferenceService::start_sharded(
+        registry,
+        &policy,
+        &ShardPolicy::new(1),
+        None,
+    ));
+    let mut server = WireServer::start(svc, &WireConfig::default());
+    let path = temp_uds_path("abort");
+    server.listen_uds(&path).expect("bind UDS listener");
+
+    let (model, n_in, _) = models[0].clone();
+    let mut client = WireClient::connect_uds(&path).expect("connect");
+    client
+        .set_timeouts(Some(Duration::from_secs(10)), Some(Duration::from_secs(10)))
+        .expect("set client timeouts");
+    client
+        .send(&RequestFrame { id: 31, tenant: 1, model, input: vec![0.3; n_in] })
+        .expect("send");
+    wait_until(Duration::from_secs(5), "request to park inside the service", || {
+        server.service().metrics().total_requests() >= 1
+    });
+
+    // Shut down underneath the parked request: the contract is a
+    // terminal `Aborted` frame before the socket closes.
+    let reader = std::thread::spawn(move || client.recv().expect("terminal reply during shutdown"));
+    let (svc, counters) = server.shutdown();
+    let resp = reader.join().expect("reader thread");
+    assert_eq!(resp.id, 31);
+    assert!(
+        matches!(resp.body, ResponseBody::Aborted { .. }),
+        "parked request answered Aborted at shutdown, got {:?}",
+        resp.body
+    );
+    assert_eq!(counters.frames_tx, 1);
+
+    let Ok(svc) = Arc::try_unwrap(svc) else {
+        panic!("service Arc still shared after wire shutdown");
+    };
+    let snap = svc.shutdown();
+    assert_eq!(snap.total_failed(), 1, "the abort is a service-side failure");
+}
